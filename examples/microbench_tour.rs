@@ -1,0 +1,80 @@
+//! A tour of every §III/§IV kernel variant: the condensed, one-binary
+//! version of Figures 3, 6, 7, 8 and 9, with the paper's expectations
+//! printed next to each measurement.
+//!
+//! ```sh
+//! cargo run --release --offline --example microbench_tour
+//! ```
+
+use upmem_unleashed::bench_support::table::{f1, f2, Table};
+use upmem_unleashed::kernels::arith::{run_microbench, DType, MulImpl, Spec, Unroll};
+use upmem_unleashed::kernels::bsdp::{run_dot_microbench, DotVariant};
+
+const KB: u32 = 176; // divides across 1..16 tasklets evenly
+
+fn main() -> upmem_unleashed::Result<()> {
+    // --- tasklet ramp (Fig. 3) ------------------------------------
+    let mut ramp = Table::new(
+        "Tasklet ramp — INT8 ADD (Fig. 3 shape: linear to 11, then flat)",
+        &["tasklets", "MOPS"],
+    );
+    for t in [1usize, 2, 4, 8, 11, 16] {
+        let m = run_microbench(Spec::add(DType::I8), t, KB * 1024, 1)?.mops;
+        ramp.row(&[t.to_string(), f1(m)]);
+    }
+    ramp.print();
+
+    // --- multiplication variants (Figs. 6 & 7) ---------------------
+    let mut mul = Table::new(
+        "Multiplication variants at 16 tasklets (Figs. 6-7)",
+        &["kernel", "MOPS", "paper says"],
+    );
+    let m = |s: Spec| run_microbench(s, 16, KB * 1024, 1).map(|o| o.mops);
+    let rows: Vec<(&str, Spec, &str)> = vec![
+        ("INT8 MUL baseline", Spec::mul(DType::I8, MulImpl::Mulsi3), "2.7x below ADD"),
+        ("INT8 MUL NI", Spec::mul(DType::I8, MulImpl::Native), "== INT8 ADD (80)"),
+        ("INT8 MUL NIx4", Spec::mul(DType::I8, MulImpl::NativeX4), "between NI and NIx8"),
+        ("INT8 MUL NIx8", Spec::mul(DType::I8, MulImpl::NativeX8), "+80% over NI, ~5x base"),
+        ("INT32 MUL baseline", Spec::mul(DType::I32, MulImpl::Mulsi3), "6x below INT32 ADD"),
+        ("INT32 MUL DIM", Spec::mul(DType::I32, MulImpl::Dim), "+16% over baseline"),
+    ];
+    for (name, spec, paper) in rows {
+        mul.row(&[name.to_string(), f1(m(spec)?), paper.to_string()]);
+    }
+    mul.print();
+
+    // --- unrolling (Fig. 8), including the IRAM-overfill case ------
+    let mut un = Table::new(
+        "Unrolling (Fig. 8) — 'IRAM!' reproduces the paper's linker error",
+        &["kernel", "none", "x64", "auto"],
+    );
+    for (name, spec) in [
+        ("INT8 ADD", Spec::add(DType::I8)),
+        ("INT32 ADD", Spec::add(DType::I32)),
+        ("INT32 MUL DIM", Spec::mul(DType::I32, MulImpl::Dim)),
+    ] {
+        let cell = |u| -> upmem_unleashed::Result<String> {
+            match run_microbench(spec.with_unroll(u), 16, KB * 1024, 1) {
+                Ok(o) => Ok(f1(o.mops)),
+                Err(upmem_unleashed::Error::IramOverflow { .. }) => Ok("IRAM!".into()),
+                Err(e) => Err(e),
+            }
+        };
+        un.row(&[name.to_string(), cell(Unroll::No)?, cell(Unroll::X64)?, cell(Unroll::Auto)?]);
+    }
+    un.print();
+
+    // --- bit-serial dot product (Fig. 9) ----------------------------
+    let mut dot = Table::new(
+        "INT4 dot product (Fig. 9, normalized to native baseline)",
+        &["kernel", "M MAC/s", "normalized"],
+    );
+    let base = run_dot_microbench(DotVariant::NativeBaseline, 16, 64 * 1024, 1)?.mmacs;
+    for v in [DotVariant::NativeBaseline, DotVariant::NativeOptimized, DotVariant::Bsdp] {
+        let r = run_dot_microbench(v, 16, 64 * 1024, 1)?.mmacs;
+        dot.row(&[v.name().to_string(), f1(r), f2(r / base)]);
+    }
+    dot.print();
+    println!("paper: BSDP > 2.7x baseline, > 1.2x the optimized native kernel.");
+    Ok(())
+}

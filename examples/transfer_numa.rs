@@ -1,0 +1,96 @@
+//! The §V data-transfer story, end to end: allocate DPU ranks with the
+//! SDK baseline vs the paper's NUMA/channel-aware extension (Fig. 10
+//! API shape), transfer 32 MB blocks in parallel mode both ways, and
+//! watch the throughput and the run-to-run variability.
+//!
+//! ```sh
+//! cargo run --release --offline --example transfer_numa
+//! ```
+
+use upmem_unleashed::alloc::numa::equal_channel_distribution;
+use upmem_unleashed::bench_support::table::{f2, Table};
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::transfer::topology::SystemTopology;
+
+use upmem_unleashed::util::stats::Summary;
+
+fn main() -> upmem_unleashed::Result<()> {
+    let ranks = 4; // the paper's peak-throughput allocation size
+    let bytes = 32u64 << 20; // 32 MB per rank, "for optimal performance"
+    let total = bytes * ranks as u64;
+
+    // The paper's Fig. 10 extension: balance each socket's share across
+    // its memory channels.
+    println!(
+        "equal_channel_distribution({}, node 0) = {:?}  (ranks per channel)",
+        ranks / 2,
+        equal_channel_distribution(ranks / 2, 0)
+    );
+
+    let mut table = Table::new(
+        "4-rank parallel transfers, 20 simulated boots (GB/s)",
+        &["path", "mean", "min", "max", "spread"],
+    );
+    for (label, policy_of_boot) in [
+        (
+            "NUMA-aware  h2p",
+            Box::new(|_b: u64| AllocPolicy::NumaAware) as Box<dyn Fn(u64) -> AllocPolicy>,
+        ),
+        ("baseline SDK h2p", Box::new(|b: u64| AllocPolicy::BaselineSdk { boot_seed: b })),
+    ] {
+        let mut samples = Vec::new();
+        for boot in 0..20 {
+            let mut sys =
+                PimSystem::new(SystemTopology::paper_server(), policy_of_boot(boot));
+            let set = sys.alloc_ranks(ranks)?;
+            let report = sys.push_parallel_modeled(&set, total);
+            samples.push(report.gbps());
+        }
+        let s = Summary::of(&samples);
+        table.row(&[label.to_string(), f2(s.mean), f2(s.min), f2(s.max), f2(s.spread())]);
+    }
+    // PIM→host direction (sync-read transpose — the slow one).
+    for (label, policy_of_boot) in [
+        (
+            "NUMA-aware  p2h",
+            Box::new(|_b: u64| AllocPolicy::NumaAware) as Box<dyn Fn(u64) -> AllocPolicy>,
+        ),
+        ("baseline SDK p2h", Box::new(|b: u64| AllocPolicy::BaselineSdk { boot_seed: b })),
+    ] {
+        let mut samples = Vec::new();
+        for boot in 0..20 {
+            let mut sys =
+                PimSystem::new(SystemTopology::paper_server(), policy_of_boot(boot));
+            let set = sys.alloc_ranks(ranks)?;
+            samples.push(sys.pull_parallel_modeled(&set, total).gbps());
+        }
+        let s = Summary::of(&samples);
+        table.row(&[label.to_string(), f2(s.mean), f2(s.min), f2(s.max), f2(s.spread())]);
+    }
+    table.print();
+
+    // Show where the ranks actually landed in one boot of each policy.
+    let mut numa = PimSystem::new(SystemTopology::paper_server(), AllocPolicy::NumaAware);
+    let sn = numa.alloc_ranks(ranks)?;
+    let mut base = PimSystem::new(
+        SystemTopology::paper_server(),
+        AllocPolicy::BaselineSdk { boot_seed: 7 },
+    );
+    let sb = base.alloc_ranks(ranks)?;
+    let describe = |name: &str, set: &upmem_unleashed::host::DpuSet, topo: &SystemTopology| {
+        println!(
+            "{name}: ranks {:?} span {} channels / {} sockets / {} DIMMs",
+            set.ranks.ranks,
+            set.ranks.channels_spanned(topo),
+            set.ranks.sockets_spanned(topo),
+            set.ranks.dimms_spanned(topo),
+        );
+    };
+    describe("NUMA-aware ", &sn, numa.topology());
+    describe("baseline   ", &sb, base.topology());
+    println!(
+        "\npaper §V-C: ours peaks at 4 ranks with ~0.3 GB/s run-to-run spread; the\n\
+         baseline lands on 1-3 DIMMs of one socket and fluctuates by 2-4 GB/s."
+    );
+    Ok(())
+}

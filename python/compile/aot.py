@@ -1,0 +1,97 @@
+"""AOT-lower the L2 graphs to HLO text for the rust PJRT runtime.
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids, so text round-trips cleanly. Recipe from
+/opt/xla-example/gen_hlo.py.
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Shapes are fixed at lowering time (AOT) and must match
+``rust/src/runtime/mod.rs``:
+
+* gemv_int8:      m i8[256,1024],  x i8[1024]          -> (i32[256],)
+* gemv_int4_bsdp: m u32[256,256],  x u32[256]          -> (i32[256],)
+  (256 plane words = 2048 INT4 columns)
+* mlp_int8:       w1 i8[1024,1024], w2 i8[64,1024], x i8[1024] -> (i32[64],)
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+ORACLE_ROWS = 256
+ORACLE_COLS = 1024
+BSDP_COLS = 2048
+BSDP_WORDS = BSDP_COLS // 32 * 4
+MLP_HIDDEN = 1024
+MLP_OUT = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifacts():
+    """(name, function, example args) for every artifact."""
+    return [
+        (
+            "gemv_int8",
+            model.gemv_int8,
+            (
+                spec((ORACLE_ROWS, ORACLE_COLS), jnp.int8),
+                spec((ORACLE_COLS,), jnp.int8),
+            ),
+        ),
+        (
+            "gemv_int4_bsdp",
+            model.gemv_int4_bsdp,
+            (
+                spec((ORACLE_ROWS, BSDP_WORDS), jnp.uint32),
+                spec((BSDP_WORDS,), jnp.uint32),
+            ),
+        ),
+        (
+            "mlp_int8",
+            model.mlp_int8,
+            (
+                spec((MLP_HIDDEN, ORACLE_COLS), jnp.int8),
+                spec((MLP_OUT, MLP_HIDDEN), jnp.int8),
+                spec((ORACLE_COLS,), jnp.int8),
+            ),
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, fn, example in artifacts():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

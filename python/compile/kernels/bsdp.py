@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: bit-serial INT4 GEMV over bit-plane words.
+
+The UPMEM kernel (paper §IV, Algorithm 2) evaluates 16 plane pairs per
+32-element block with ``AND`` + ``cao`` (popcount) + ``lsl_add``. TPUs
+have no popcount instruction, so the kernel uses the classic SWAR
+popcount on the VPU — the *insight* (replace multiplies with bitwise
+ops on transposed planes) carries over; the *instruction mapping*
+changes, exactly the adaptation DESIGN.md §Hardware-Adaptation calls
+for. ``interpret=True`` (see gemv.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PLANES = 4
+BLOCK_ROWS = 64
+
+
+def _popcount_u32(v):
+    """SWAR population count of a uint32 array."""
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (v * jnp.uint32(0x01010101)) >> 24
+
+
+def _bsdp_gemv_kernel(mp_ref, xp_ref, o_ref):
+    # mp: (block_rows, nblocks*4) u32; xp: (nblocks*4,) u32.
+    mp = mp_ref[...]
+    xp = xp_ref[...]
+    rows, words = mp.shape
+    m_planes = mp.reshape(rows, words // PLANES, PLANES)
+    x_planes = xp.reshape(words // PLANES, PLANES)
+    acc = jnp.zeros((rows,), dtype=jnp.int32)
+    for j in range(PLANES):
+        for k in range(PLANES):
+            anded = m_planes[:, :, j] & x_planes[None, :, k]
+            popc = _popcount_u32(anded).astype(jnp.int32)
+            term = jnp.sum(popc, axis=1) << (j + k)
+            if (j == 3) != (k == 3):
+                acc = acc - term  # mixed plane-3 terms carry −2³
+            else:
+                acc = acc + term
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def gemv_i4_bsdp(m_planes, x_planes, block_rows: int = BLOCK_ROWS):
+    """Bit-serial signed INT4 GEMV.
+
+    ``m_planes``: (rows, cols/32*4) uint32 — each row bit-plane encoded
+    per ``ref.bitplane_encode_i4``; ``x_planes``: (cols/32*4,) uint32.
+    Returns i32 (rows,).
+    """
+    rows, words = m_planes.shape
+    assert rows % block_rows == 0
+    assert x_planes.shape == (words,)
+    assert words % PLANES == 0
+    return pl.pallas_call(
+        _bsdp_gemv_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, words), lambda i: (i, 0)),
+            pl.BlockSpec((words,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.int32),
+        interpret=True,
+    )(m_planes, x_planes)
+
+
+def vmem_bytes(block_rows: int, cols: int) -> int:
+    """Static VMEM footprint of one grid step: plane words are 4 B per
+    8 elements — half the INT8 tile size, the same 2× density the DPU
+    kernel enjoys in MRAM."""
+    words = cols // 32 * PLANES
+    return block_rows * words * 4 + words * 4 + block_rows * 4

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: quantized INT8 GEMV.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the UPMEM kernel
+streams 1 KB row chunks MRAM→WRAM per tasklet; on TPU the same schedule
+is expressed with a ``BlockSpec`` grid — each grid step stages a
+``(BLOCK_ROWS, cols)`` tile of the matrix plus the full vector into
+VMEM and reduces it. ``interpret=True`` everywhere: the CPU PJRT client
+cannot execute Mosaic custom-calls, and correctness (vs ``ref.py``) is
+what the artifacts carry; TPU-side efficiency is *estimated* in
+DESIGN.md §Perf from the VMEM footprint and MXU-utilization analysis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 64 rows × 1024 cols of int8 = 64 KB of matrix
+# tile + 1 KB vector + 256 B accumulator per step — comfortably inside
+# a TPU core's ~16 MB VMEM and aligned to the 8×128 VPU lane layout.
+BLOCK_ROWS = 64
+
+
+def _gemv_i8_kernel(m_ref, x_ref, o_ref):
+    m = m_ref[...].astype(jnp.int32)
+    x = x_ref[...].astype(jnp.int32)
+    o_ref[...] = jnp.sum(m * x[None, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def gemv_i8(m, x, block_rows: int = BLOCK_ROWS):
+    """y[i8 m @ i8 x] with i32 accumulation via a row-tiled Pallas grid."""
+    rows, cols = m.shape
+    assert rows % block_rows == 0, f"rows {rows} must tile by {block_rows}"
+    assert x.shape == (cols,)
+    return pl.pallas_call(
+        _gemv_i8_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.int32),
+        interpret=True,
+    )(m, x)
+
+
+def vmem_bytes(block_rows: int, cols: int) -> int:
+    """Static VMEM footprint of one grid step (DESIGN.md §Perf)."""
+    return block_rows * cols + cols + block_rows * 4

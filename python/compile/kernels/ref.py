@@ -1,0 +1,92 @@
+"""Pure-jnp / numpy reference oracles for the L1 Pallas kernels.
+
+These are the correctness anchors of the Python layer: every Pallas
+kernel in this package is asserted against them at build time (pytest),
+and the encodings here mirror ``rust/src/kernels/encode.rs`` bit for bit
+so the rust simulator, the Pallas kernels and the AOT artifacts all
+agree on the INT4 bit-plane layout.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 32  # elements per bit-plane block (one bit per u32 lane)
+PLANES = 4  # bit-planes per INT4 value
+
+
+def gemv_i8_ref(m, x):
+    """INT8 GEMV with i32 accumulation: y = m @ x."""
+    return jnp.dot(m.astype(jnp.int32), x.astype(jnp.int32))
+
+
+def dot_i4_ref(a, b):
+    """Signed INT4 dot product (operands stored as i8 arrays)."""
+    return jnp.sum(a.astype(jnp.int32) * b.astype(jnp.int32))
+
+
+def bitplane_encode_i4(vals):
+    """Bit-plane transpose signed INT4 values (numpy, host-side).
+
+    Layout identical to rust ``encode::bitplane_encode_i4``: every block
+    of 32 elements becomes four consecutive u32 words; word ``j`` holds
+    bit ``j`` of each element, element ``lane`` at bit position ``lane``.
+    """
+    vals = np.asarray(vals, dtype=np.int8)
+    assert vals.ndim == 1 and vals.size % BLOCK == 0
+    assert vals.min(initial=0) >= -8 and vals.max(initial=0) <= 7
+    nib = (vals.astype(np.uint8) & 0xF).reshape(-1, BLOCK)  # (nblocks, 32)
+    lanes = np.arange(BLOCK, dtype=np.uint32)
+    out = np.zeros((nib.shape[0], PLANES), dtype=np.uint32)
+    for p in range(PLANES):
+        bits = ((nib >> p) & 1).astype(np.uint32)
+        out[:, p] = (bits << lanes).sum(axis=1, dtype=np.uint32)
+    return out.reshape(-1)
+
+
+def bitplane_decode_i4(planes):
+    """Inverse of :func:`bitplane_encode_i4` (test helper)."""
+    planes = np.asarray(planes, dtype=np.uint32).reshape(-1, PLANES)
+    lanes = np.arange(BLOCK, dtype=np.uint32)
+    vals = np.zeros((planes.shape[0], BLOCK), dtype=np.uint8)
+    for p in range(PLANES):
+        bits = ((planes[:, p : p + 1] >> lanes) & 1).astype(np.uint8)
+        vals |= (bits << p).astype(np.uint8)
+    vals = vals.reshape(-1).astype(np.int16)
+    vals = np.where(vals >= 8, vals - 16, vals)
+    return vals.astype(np.int8)
+
+
+def bsdp_ref_planes(a_planes, b_planes):
+    """Bit-serial dot product evaluated directly on plane words (numpy
+    oracle for Algorithm 2, independent of the Pallas kernel)."""
+    a = np.asarray(a_planes, dtype=np.uint32).reshape(-1, PLANES)
+    b = np.asarray(b_planes, dtype=np.uint32).reshape(-1, PLANES)
+    assert a.shape == b.shape
+    acc = np.int64(0)
+    for j in range(PLANES):
+        for k in range(PLANES):
+            popc = int(np.bitwise_count(a[:, j] & b[:, k]).astype(np.int64).sum())
+            term = popc << (j + k)
+            acc = acc - term if (j == 3) != (k == 3) else acc + term
+    return int(acc)
+
+
+def gemv_i4_ref(m_vals, x_vals):
+    """Signed INT4 GEMV reference from raw (unencoded) values."""
+    m = np.asarray(m_vals, dtype=np.int32)
+    x = np.asarray(x_vals, dtype=np.int32)
+    return (m @ x).astype(np.int32)
+
+
+def requantize_i32_to_i8(h):
+    """The L2 model's inter-layer requantization: arithmetic shift by 8,
+    clip to int8. Must match the rust-side pipeline bit for bit."""
+    return jnp.clip(h >> 8, -128, 127).astype(jnp.int8)
+
+
+def mlp_i8_ref(w1, w2, x):
+    """Reference for the 2-layer quantized MLP (L2 graph)."""
+    h = gemv_i8_ref(w1, x)
+    h = jnp.maximum(h, 0)
+    h8 = requantize_i32_to_i8(h)
+    return gemv_i8_ref(w2, h8)

@@ -1,0 +1,44 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the rust runtime.
+
+Three exported functions, all calling the L1 Pallas kernels so the
+kernels lower into the same HLO artifact:
+
+* :func:`gemv_int8` — the INT8 GEMV used as numerical oracle and CPU
+  comparator (Fig. 13's "server" path);
+* :func:`gemv_int4_bsdp` — the bit-serial INT4 GEMV over plane words;
+* :func:`mlp_int8` — a 2-layer quantized-MLP inference graph (the
+  workload the serving example runs end to end: UPMEM simulator on the
+  request path, this artifact as the cross-check oracle).
+
+Python never runs at serving time: ``aot.py`` lowers these once to HLO
+text and the rust runtime compiles/executes them via PJRT.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.bsdp import gemv_i4_bsdp
+from .kernels.gemv import gemv_i8
+from .kernels.ref import requantize_i32_to_i8
+
+
+def gemv_int8(m, x):
+    """y = m @ x (i8 → i32) via the Pallas GEMV kernel."""
+    return (gemv_i8(m, x),)
+
+
+def gemv_int4_bsdp(m_planes, x_planes):
+    """Bit-serial INT4 GEMV over encoded planes (u32 → i32)."""
+    return (gemv_i4_bsdp(m_planes, x_planes),)
+
+
+def mlp_int8(w1, w2, x):
+    """Two-layer quantized MLP: logits = w2 @ q(relu(w1 @ x)).
+
+    The hidden layer is requantized to int8 with an arithmetic shift —
+    the same fixed-point pipeline the rust serving example executes on
+    the DPU simulator, so outputs must match exactly.
+    """
+    h = gemv_i8(w1, x)
+    h = jnp.maximum(h, 0)
+    h8 = requantize_i32_to_i8(h)
+    return (gemv_i8(w2, h8),)

@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels vs pure-jnp/numpy oracles.
+
+Hypothesis sweeps shapes and values; every property pits the
+interpret-mode Pallas kernel against ``ref.py``. This is the build-time
+gate the AOT artifacts depend on.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bsdp import gemv_i4_bsdp
+from compile.kernels.gemv import gemv_i8
+
+SETTLE = dict(max_examples=25, deadline=None)
+
+
+def rand_i8(rng, shape):
+    return rng.integers(-128, 128, size=shape, dtype=np.int64).astype(np.int8)
+
+
+def rand_i4(rng, shape):
+    return rng.integers(-8, 8, size=shape, dtype=np.int64).astype(np.int8)
+
+
+# ---------------------------------------------------------------- GEMV i8
+
+
+@settings(**SETTLE)
+@given(
+    rows_t=st.integers(1, 4),
+    cols=st.sampled_from([128, 256, 1024]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_gemv_i8_matches_ref(rows_t, cols, seed):
+    rng = np.random.default_rng(seed)
+    rows = 64 * rows_t
+    m = rand_i8(rng, (rows, cols))
+    x = rand_i8(rng, cols)
+    got = np.asarray(gemv_i8(m, x))
+    want = np.asarray(ref.gemv_i8_ref(m, x))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_gemv_i8_extremes():
+    m = np.full((64, 128), -128, dtype=np.int8)
+    x = np.full(128, -128, dtype=np.int8)
+    got = np.asarray(gemv_i8(m, x))
+    assert (got == 128 * 128 * 128).all()
+
+
+def test_gemv_i8_rejects_untiled_rows():
+    m = np.zeros((65, 128), dtype=np.int8)
+    x = np.zeros(128, dtype=np.int8)
+    with pytest.raises(AssertionError):
+        gemv_i8(m, x)
+
+
+# ------------------------------------------------------------- encodings
+
+
+@settings(**SETTLE)
+@given(nblocks=st.integers(1, 8), seed=st.integers(0, 2**32 - 1))
+def test_bitplane_roundtrip(nblocks, seed):
+    rng = np.random.default_rng(seed)
+    vals = rand_i4(rng, 32 * nblocks)
+    planes = ref.bitplane_encode_i4(vals)
+    assert planes.dtype == np.uint32
+    assert planes.size == nblocks * 4
+    np.testing.assert_array_equal(ref.bitplane_decode_i4(planes), vals)
+
+
+def test_bitplane_layout_matches_rust():
+    # 32 copies of 0b0101 -> planes 0 and 2 all-ones (mirrors the rust
+    # unit test `plane_words_have_expected_structure`).
+    vals = np.full(32, 0b0101, dtype=np.int8)
+    planes = ref.bitplane_encode_i4(vals)
+    assert list(planes) == [0xFFFFFFFF, 0, 0xFFFFFFFF, 0]
+
+
+@settings(**SETTLE)
+@given(nblocks=st.integers(1, 6), seed=st.integers(0, 2**32 - 1))
+def test_bsdp_plane_oracle_matches_direct_dot(nblocks, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_i4(rng, 32 * nblocks)
+    b = rand_i4(rng, 32 * nblocks)
+    got = ref.bsdp_ref_planes(ref.bitplane_encode_i4(a), ref.bitplane_encode_i4(b))
+    assert got == int(np.asarray(ref.dot_i4_ref(a, b)))
+
+
+# ------------------------------------------------------------ BSDP GEMV
+
+
+@settings(**SETTLE)
+@given(
+    rows_t=st.integers(1, 2),
+    cols=st.sampled_from([256, 512, 2048]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_bsdp_gemv_matches_ref(rows_t, cols, seed):
+    rng = np.random.default_rng(seed)
+    rows = 64 * rows_t
+    m = rand_i4(rng, (rows, cols))
+    x = rand_i4(rng, cols)
+    mp = np.stack([ref.bitplane_encode_i4(r) for r in m])
+    xp = ref.bitplane_encode_i4(x)
+    got = np.asarray(gemv_i4_bsdp(mp, xp))
+    want = ref.gemv_i4_ref(m, x)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bsdp_gemv_extremes():
+    rows, cols = 64, 256
+    m = np.full((rows, cols), -8, dtype=np.int8)
+    x = np.full(cols, -8, dtype=np.int8)
+    mp = np.stack([ref.bitplane_encode_i4(r) for r in m])
+    xp = ref.bitplane_encode_i4(x)
+    got = np.asarray(gemv_i4_bsdp(mp, xp))
+    assert (got == 64 * cols).all()
+
+
+# ---------------------------------------------------------------- model
+
+
+@settings(**SETTLE)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_mlp_graph_matches_ref(seed):
+    from compile import model
+
+    rng = np.random.default_rng(seed)
+    w1 = rand_i8(rng, (1024, 1024))
+    w2 = rand_i8(rng, (64, 1024))
+    x = rand_i8(rng, 1024)
+    (got,) = model.mlp_int8(w1, w2, x)
+    want = ref.mlp_i8_ref(w1, w2, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_requantize_semantics():
+    import jax.numpy as jnp
+
+    h = jnp.array([-100000, -256, -1, 0, 255, 256, 100000], dtype=jnp.int32)
+    q = np.asarray(ref.requantize_i32_to_i8(h))
+    # arithmetic shift: -1 >> 8 == -1, -256 >> 8 == -1
+    assert list(q) == [-128, -1, -1, 0, 0, 1, 127]

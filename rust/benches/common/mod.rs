@@ -1,0 +1,34 @@
+#![allow(dead_code)]
+//! Shared helpers for the figure benches (criterion is unavailable in
+//! the offline crate cache; benches are `harness = false` binaries that
+//! time their workloads and print the same rows/series the paper's
+//! figures plot, with the paper's expected values alongside).
+
+use std::time::Instant;
+
+/// Benchmark buffer size: 176 KB divides evenly across 1/2/4/8/11/16
+/// tasklets, keeping per-tasklet load uniform.
+pub const FIG_KB: u32 = 176;
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Print the standard bench footer.
+pub fn footer(name: &str, wall: f64) {
+    println!("[{name}] done in {wall:.2}s host wall time\n");
+}
+
+/// Check a measured value against the paper's expectation and print a
+/// PASS/DRIFT marker (shape reproduction, not absolute equality).
+pub fn check(label: &str, measured: f64, lo: f64, hi: f64) -> bool {
+    let ok = (lo..=hi).contains(&measured);
+    println!(
+        "  {} {label}: measured {measured:.2} (expected {lo:.2}..{hi:.2})",
+        if ok { "PASS " } else { "DRIFT" }
+    );
+    ok
+}

@@ -1,0 +1,67 @@
+//! Fig. 12 — GEMV compute time vs data transfer time on 2551 DPUs,
+//! GEMV-MV (matrix + vector moved) vs GEMV-V (matrix preloaded), for
+//! INT8 (a) and INT4 BSDP (b), matrix 256 MB – 64 GB.
+//!
+//! Paper targets: in GEMV-MV the transfer dominates ~10:1 regardless of
+//! size; in GEMV-V compute dominates strongly (57× at the top end) and
+//! the 2–7 ms vector transfer becomes a fixed launch overhead.
+
+mod common;
+
+use common::{check, footer, timed};
+use upmem_unleashed::bench_support::table::{f2, human_bytes, Table};
+use upmem_unleashed::bench_support::{fleet::paper_matrix_sizes, FleetGemvModel, Scenario};
+use upmem_unleashed::kernels::gemv::GemvVariant;
+
+fn main() {
+    let (_, wall) = timed(|| {
+        let mut model = FleetGemvModel::paper_fleet();
+        let mut t = Table::new(
+            "Fig. 12 — GEMV compute vs transfer on 2551 DPUs (seconds)",
+            &["matrix", "variant", "scenario", "compute_s", "transfer_s", "xfer/comp"],
+        );
+        let mut mv_ratios_i8 = Vec::new();
+        let mut v_ratio_top_i8 = 0.0;
+        let mut v_vector_ms_top = 0.0;
+        for &n in &paper_matrix_sizes() {
+            for variant in [GemvVariant::I8Opt, GemvVariant::I4Bsdp] {
+                for scenario in [Scenario::MatrixAndVector, Scenario::VectorOnly] {
+                    let p = model.evaluate(n, variant, scenario).unwrap();
+                    t.row(&[
+                        human_bytes(p.matrix_bytes()),
+                        variant.name().to_string(),
+                        match scenario {
+                            Scenario::MatrixAndVector => "GEMV-MV".into(),
+                            Scenario::VectorOnly => "GEMV-V".to_string(),
+                        },
+                        format!("{:.4}", p.compute_s),
+                        format!("{:.4}", p.transfer_s()),
+                        f2(p.transfer_s() / p.compute_s),
+                    ]);
+                    if variant == GemvVariant::I8Opt {
+                        match scenario {
+                            Scenario::MatrixAndVector => {
+                                mv_ratios_i8.push(p.transfer_s() / p.compute_s)
+                            }
+                            Scenario::VectorOnly if n == 262_144 => {
+                                v_ratio_top_i8 = p.compute_s / p.transfer_s();
+                                v_vector_ms_top = (p.vector_s + p.gather_s) * 1e3;
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            }
+        }
+        t.print();
+        println!("paper targets:");
+        let mv_min = mv_ratios_i8.iter().cloned().fold(f64::MAX, f64::min);
+        let mv_max = mv_ratios_i8.iter().cloned().fold(0.0f64, f64::max);
+        check("GEMV-MV transfer/compute min (paper ~10)", mv_min, 5.0, 20.0);
+        check("GEMV-MV transfer/compute max (paper ~10)", mv_max, 5.0, 25.0);
+        check("GEMV-V compute/transfer at top size (paper 57x@128GB)", v_ratio_top_i8, 20.0,
+            90.0);
+        check("GEMV-V vector+gather ms (paper 2-7ms)", v_vector_ms_top, 1.5, 8.0);
+    });
+    footer("fig12", wall);
+}

@@ -1,0 +1,86 @@
+//! Fig. 13 — GEMV throughput (GOPS) on UPMEM (2551 DPUs) vs a
+//! dual-socket server, INT8 (a) and INT4 (b).
+//!
+//! Paper targets: server ≈200 GOPS INT8 (≤220) and ≈100 GOPS INT4;
+//! UPMEM optimized GEMV-V ≈650 GOPS INT8 (>3× server) and ≈1000 GOPS
+//! INT4 (~10× server, 1.53× INT8 GEMV-V); GEMV-MV ≈50/100 GOPS where
+//! the server wins ~4×; optimized INT8 kernel ≈3.5× the baseline
+//! kernel. The "server" line uses the paper's published Kunpeng
+//! envelope; this machine's own CPU GEMV is reported alongside.
+
+mod common;
+
+use common::{check, footer, timed};
+use upmem_unleashed::bench_support::table::{f1, Table};
+use upmem_unleashed::bench_support::{fleet::paper_matrix_sizes, FleetGemvModel, Scenario};
+use upmem_unleashed::cpu_ref::{measure_gemv_i4, measure_gemv_i8, KUNPENG_INT4_GOPS,
+    KUNPENG_INT8_GOPS};
+use upmem_unleashed::kernels::gemv::GemvVariant;
+
+fn main() {
+    let (_, wall) = timed(|| {
+        let mut model = FleetGemvModel::paper_fleet();
+        let mut t = Table::new(
+            "Fig. 13 — GEMV GOPS: UPMEM (2551 DPUs) vs dual-socket server",
+            &["n", "variant", "GEMV-V", "GEMV-MV", "baseline-V", "server(paper)"],
+        );
+        let mut top = (0.0, 0.0, 0.0, 0.0); // i8 V, i8 MV, i4 V, i8 baseline V
+        for &n in &paper_matrix_sizes() {
+            for (variant, server) in [
+                (GemvVariant::I8Opt, KUNPENG_INT8_GOPS),
+                (GemvVariant::I4Bsdp, KUNPENG_INT4_GOPS),
+            ] {
+                let v = model.evaluate(n, variant, Scenario::VectorOnly).unwrap().gops();
+                let mv = model.evaluate(n, variant, Scenario::MatrixAndVector).unwrap().gops();
+                let base_v = if variant == GemvVariant::I8Opt {
+                    model
+                        .evaluate(n, GemvVariant::I8Baseline, Scenario::VectorOnly)
+                        .unwrap()
+                        .gops()
+                } else {
+                    f64::NAN
+                };
+                if n == 262_144 {
+                    if variant == GemvVariant::I8Opt {
+                        top.0 = v;
+                        top.1 = mv;
+                        top.3 = base_v;
+                    } else {
+                        top.2 = v;
+                    }
+                }
+                t.row(&[
+                    n.to_string(),
+                    variant.name().to_string(),
+                    f1(v),
+                    f1(mv),
+                    if base_v.is_nan() { "-".into() } else { f1(base_v) },
+                    f1(server),
+                ]);
+            }
+        }
+        t.print();
+        println!("paper targets (top size, 2551 DPUs):");
+        check("INT8 GEMV-V GOPS (paper ~650)", top.0, 500.0, 900.0);
+        check("INT4 GEMV-V GOPS (paper ~1000)", top.2, 800.0, 1300.0);
+        check("INT4/INT8 GEMV-V (paper 1.53x)", top.2 / top.0, 1.3, 1.8);
+        check("INT8 GEMV-V vs server (paper >3x)", top.0 / KUNPENG_INT8_GOPS, 3.0, 4.5);
+        check("INT4 GEMV-V vs server (paper ~10x)", top.2 / KUNPENG_INT4_GOPS, 8.0, 13.0);
+        check("server vs INT8 GEMV-MV (paper ~4x)", KUNPENG_INT8_GOPS / top.1, 2.5, 6.0);
+        check("opt vs baseline kernel (paper 3.5x; NI-naive baseline)", top.0 / top.3, 1.8,
+            4.5);
+
+        // This machine's own CPU GEMV (context, not a paper target).
+        let i8 = measure_gemv_i8(512, 4096, 3, 9);
+        let i4 = measure_gemv_i4(512, 4096, 3, 9);
+        println!(
+            "local CPU comparator ({} threads): INT8 {:.2} GOPS, INT4 {:.2} GOPS \
+             (INT4/INT8 = {:.2}, paper's server: ~0.5)",
+            1,
+            i8.gops,
+            i4.gops,
+            i4.gops / i8.gops
+        );
+    });
+    footer("fig13", wall);
+}

@@ -1,0 +1,43 @@
+//! Fig. 3 — baseline arithmetic performance of a single DPU vs tasklet
+//! count (INT8/INT32 ADD/MUL, MOPS). Paper expectations: linear ramp to
+//! a plateau at 11 tasklets; INT8 ADD ≈ 80, INT32 ADD ≈ 67 MOPS;
+//! INT8 MUL ≈ 2.7× below ADD; INT32 MUL ≈ 6× below ADD.
+
+mod common;
+
+use common::{check, footer, timed, FIG_KB};
+use upmem_unleashed::bench_support::table::{f1, Table};
+use upmem_unleashed::kernels::arith::{run_microbench, DType, MulImpl, Spec};
+
+fn main() {
+    let (_, wall) = timed(|| {
+        let mut t = Table::new(
+            "Fig. 3 — baseline single-DPU arithmetic (MOPS)",
+            &["tasklets", "INT8 ADD", "INT8 MUL", "INT32 ADD", "INT32 MUL"],
+        );
+        let mut at16 = [0.0f64; 4];
+        for tk in [1usize, 2, 4, 8, 11, 12, 14, 16] {
+            let m = |spec| run_microbench(spec, tk, FIG_KB * 1024, 42).unwrap().mops;
+            let row = [
+                m(Spec::add(DType::I8)),
+                m(Spec::mul(DType::I8, MulImpl::Mulsi3)),
+                m(Spec::add(DType::I32)),
+                m(Spec::mul(DType::I32, MulImpl::Mulsi3)),
+            ];
+            if tk == 16 {
+                at16 = row;
+            }
+            t.row(&[tk.to_string(), f1(row[0]), f1(row[1]), f1(row[2]), f1(row[3])]);
+        }
+        t.print();
+        println!("paper targets at the plateau:");
+        check("INT8 ADD MOPS", at16[0], 75.0, 85.0);
+        check("INT32 ADD MOPS", at16[2], 62.0, 72.0);
+        check("INT8 ADD/MUL gap", at16[0] / at16[1], 2.4, 3.1);
+        check("INT32 ADD/MUL gap", at16[2] / at16[3], 5.2, 7.0);
+        // Plateau check: 11 vs 16 tasklets within 2%.
+        let m11 = run_microbench(Spec::add(DType::I8), 11, FIG_KB * 1024, 42).unwrap().mops;
+        check("plateau m16/m11", at16[0] / m11, 0.98, 1.02);
+    });
+    footer("fig3", wall);
+}

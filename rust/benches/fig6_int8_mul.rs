@@ -1,0 +1,40 @@
+//! Fig. 6 — INT8 multiplication: baseline (`__mulsi3`) vs native
+//! instruction (NI) vs 32-/64-bit block loads (NI×4 / NI×8), with INT8
+//! ADD for reference. Paper: NI ≈ ADD; NI×8 ≈ +80% over NI ≈ 5× baseline.
+
+mod common;
+
+use common::{check, footer, timed, FIG_KB};
+use upmem_unleashed::bench_support::table::{f1, f2, Table};
+use upmem_unleashed::kernels::arith::{run_microbench, DType, MulImpl, Spec};
+
+fn main() {
+    let (_, wall) = timed(|| {
+        let run = |s: Spec| run_microbench(s, 16, FIG_KB * 1024, 42).unwrap().mops;
+        let base = run(Spec::mul(DType::I8, MulImpl::Mulsi3));
+        let ni = run(Spec::mul(DType::I8, MulImpl::Native));
+        let nix4 = run(Spec::mul(DType::I8, MulImpl::NativeX4));
+        let nix8 = run(Spec::mul(DType::I8, MulImpl::NativeX8));
+        let add = run(Spec::add(DType::I8));
+        let mut t = Table::new(
+            "Fig. 6 — INT8 multiplication on a single DPU (16 tasklets)",
+            &["variant", "MOPS", "vs baseline"],
+        );
+        for (n, v) in [
+            ("baseline (__mulsi3)", base),
+            ("NI", ni),
+            ("NIx4", nix4),
+            ("NIx8", nix8),
+            ("INT8 ADD (ref)", add),
+        ] {
+            t.row(&[n.to_string(), f1(v), f2(v / base)]);
+        }
+        t.print();
+        println!("paper targets:");
+        check("NI == ADD (ratio)", ni / add, 0.97, 1.03);
+        check("NIx8 / NI (paper +80%)", nix8 / ni, 1.6, 2.1);
+        check("NIx8 / baseline (paper ~5x)", nix8 / base, 4.0, 6.0);
+        check("NIx4 between NI and NIx8", nix4, ni, nix8);
+    });
+    footer("fig6", wall);
+}

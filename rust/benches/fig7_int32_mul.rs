@@ -1,0 +1,34 @@
+//! Fig. 7 — INT32 multiplication: `__mulsi3` baseline vs decomposed
+//! INT32 multiplication (DIM). Paper: DIM ≈ +16%, ≤ 26 cycles/multiply.
+
+mod common;
+
+use common::{check, footer, timed, FIG_KB};
+use upmem_unleashed::bench_support::table::{f1, f2, Table};
+use upmem_unleashed::kernels::arith::{run_microbench, DType, MulImpl, Spec};
+
+fn main() {
+    let (_, wall) = timed(|| {
+        let run = |s: Spec, tk: usize| run_microbench(s, tk, FIG_KB * 1024, 42).unwrap();
+        let mut t = Table::new(
+            "Fig. 7 — INT32 multiplication on a single DPU (MOPS)",
+            &["tasklets", "baseline", "DIM", "DIM gain"],
+        );
+        let mut gain16 = 0.0;
+        for tk in [1usize, 4, 8, 11, 16] {
+            let b = run(Spec::mul(DType::I32, MulImpl::Mulsi3), tk).mops;
+            let d = run(Spec::mul(DType::I32, MulImpl::Dim), tk).mops;
+            if tk == 16 {
+                gain16 = d / b;
+            }
+            t.row(&[tk.to_string(), f1(b), f1(d), f2(d / b)]);
+        }
+        t.print();
+        println!("paper targets:");
+        check("DIM gain (paper +16%)", gain16, 1.10, 1.40);
+        // Cycles per multiply for DIM: 400 MHz / MOPS.
+        let d16 = run(Spec::mul(DType::I32, MulImpl::Dim), 16).mops;
+        check("DIM cycles/mul (paper <=26 +loop)", 400.0 / d16, 24.0, 32.0);
+    });
+    footer("fig7", wall);
+}

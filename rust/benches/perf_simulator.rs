@@ -1,0 +1,82 @@
+//! §Perf — simulator hot-path throughput (simulated instructions per
+//! host second). The interpreter stands in for silicon, so its speed
+//! bounds every other bench; EXPERIMENTS.md §Perf tracks this number
+//! across optimization iterations.
+
+mod common;
+
+use common::{footer, timed};
+use upmem_unleashed::bench_support::table::{f1, Table};
+use upmem_unleashed::kernels::arith::{run_microbench, DType, MulImpl, Spec, Unroll};
+use upmem_unleashed::kernels::bsdp::{run_dot_microbench, DotVariant};
+
+fn main() {
+    let (_, wall) = timed(|| {
+        let mut t = Table::new(
+            "§Perf — simulator throughput (million simulated instrs / host second)",
+            &["workload", "sim instrs", "host s", "Minstr/s"],
+        );
+        let mut total_i = 0u64;
+        let mut total_s = 0.0;
+        let cases: Vec<(&str, Box<dyn Fn() -> u64>)> = vec![
+            (
+                "INT8 ADD x64, 16 tasklets, 1 MB",
+                Box::new(|| {
+                    run_microbench(
+                        Spec::add(DType::I8).with_unroll(Unroll::X64),
+                        16,
+                        1024 * 1024,
+                        42,
+                    )
+                    .unwrap()
+                    .launch
+                    .instrs
+                }),
+            ),
+            (
+                "INT8 MUL __mulsi3 (call-heavy), 16 tasklets, 512 KB",
+                Box::new(|| {
+                    run_microbench(Spec::mul(DType::I8, MulImpl::Mulsi3), 16, 512 * 1024, 42)
+                        .unwrap()
+                        .launch
+                        .instrs
+                }),
+            ),
+            (
+                "BSDP dot (ALU-dense), 16 tasklets, 256K elems",
+                Box::new(|| {
+                    run_dot_microbench(DotVariant::Bsdp, 16, 256 * 1024, 42)
+                        .unwrap()
+                        .launch
+                        .instrs
+                }),
+            ),
+            (
+                "single tasklet (scheduler idle-skip path), 1 MB",
+                Box::new(|| {
+                    run_microbench(Spec::add(DType::I8), 1, 1024 * 1024, 42)
+                        .unwrap()
+                        .launch
+                        .instrs
+                }),
+            ),
+        ];
+        for (name, f) in cases {
+            let (instrs, s) = timed(&f);
+            total_i += instrs;
+            total_s += s;
+            t.row(&[
+                name.to_string(),
+                instrs.to_string(),
+                format!("{s:.3}"),
+                f1(instrs as f64 / s / 1e6),
+            ]);
+        }
+        t.print();
+        println!(
+            "aggregate: {:.1} M simulated instructions / host second",
+            total_i as f64 / total_s / 1e6
+        );
+    });
+    footer("perf_simulator", wall);
+}

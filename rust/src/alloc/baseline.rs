@@ -1,0 +1,156 @@
+//! The SDK's baseline DPU allocator (§V-A).
+//!
+//! UPMEM SDK 2025.1.0 retrieves the DPU list via libudev and allocates
+//! requested ranks by iterating that list in order. The enumeration
+//! order is stable across *restarts of the same boot* but is otherwise
+//! arbitrary with respect to the physical topology, and the SDK applies
+//! no NUMA or channel awareness. Observed behaviour (paper):
+//! allocations of a few ranks land on 1–3 DIMMs attached to a single
+//! NUMA node — often sharing one memory channel — and *which* DIMMs
+//! varies from boot to boot, which is what makes baseline transfer
+//! throughput both low and highly variable.
+//!
+//! The model: a boot-seeded permutation of the ranks that preserves
+//! DIMM-level grouping (udev enumerates a DIMM's ranks together) and
+//! keeps each socket's DIMMs together with high probability, then
+//! first-fit allocation in that order.
+
+use super::{AllocState, RankSet};
+use crate::transfer::topology::{SystemTopology, RANKS_PER_DIMM, TOTAL_RANKS};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// The baseline allocator.
+#[derive(Debug, Clone)]
+pub struct BaselineAllocator {
+    state: AllocState,
+    /// udev enumeration order for this "boot".
+    order: Vec<usize>,
+}
+
+impl BaselineAllocator {
+    /// Create an allocator for a boot identified by `boot_seed`.
+    pub fn new(topo: &SystemTopology, boot_seed: u64) -> BaselineAllocator {
+        let _ = topo; // order is topology-independent, that is the bug
+        let mut rng = Rng::new(boot_seed);
+        // Shuffle DIMMs (groups of RANKS_PER_DIMM consecutive ranks),
+        // keeping the two ranks of a DIMM adjacent — matching how udev
+        // enumerates PIM devices per DIMM.
+        let n_dimms = TOTAL_RANKS / RANKS_PER_DIMM;
+        let mut dimms: Vec<usize> = (0..n_dimms).collect();
+        // udev tends to enumerate one socket's devices first; swap the
+        // socket order per boot, then shuffle within sockets.
+        let (mut s0, mut s1): (Vec<usize>, Vec<usize>) =
+            dimms.drain(..).partition(|d| d / (n_dimms / 2) == 0);
+        rng.shuffle(&mut s0);
+        rng.shuffle(&mut s1);
+        let order_dimms: Vec<usize> =
+            if rng.f64() < 0.5 { [s0, s1].concat() } else { [s1, s0].concat() };
+        let order = order_dimms
+            .into_iter()
+            .flat_map(|d| (0..RANKS_PER_DIMM).map(move |i| d * RANKS_PER_DIMM + i))
+            .collect();
+        BaselineAllocator { state: AllocState::new(), order }
+    }
+
+    /// `dpu_alloc_ranks(n)` — first `n` free ranks in udev order.
+    pub fn alloc_ranks(&mut self, n: usize) -> Result<RankSet> {
+        let picks: Vec<usize> =
+            self.order.iter().copied().filter(|&r| self.state.is_free(r)).take(n).collect();
+        if picks.len() < n {
+            return Err(crate::Error::Alloc(format!(
+                "requested {n} ranks, only {} free",
+                picks.len()
+            )));
+        }
+        self.state.claim(&picks)
+    }
+
+    pub fn free(&mut self, set: RankSet) {
+        self.state.release(set);
+    }
+
+    pub fn free_ranks(&self) -> usize {
+        self.state.free_ranks()
+    }
+}
+
+/// Check for DIMM adjacency used by tests and docs: how many DIMMs does
+/// a fresh `n`-rank baseline allocation span?
+pub fn baseline_dimm_span(topo: &SystemTopology, boot_seed: u64, n: usize) -> usize {
+    let mut a = BaselineAllocator::new(topo, boot_seed);
+    let set = a.alloc_ranks(n).expect("fresh allocator");
+    set.dimms_spanned(topo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocates_requested_count_without_duplicates() {
+        let topo = SystemTopology::pristine();
+        let mut a = BaselineAllocator::new(&topo, 1);
+        let s = a.alloc_ranks(10).unwrap();
+        assert_eq!(s.len(), 10);
+        let mut sorted = s.ranks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 10);
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let topo = SystemTopology::pristine();
+        let mut a = BaselineAllocator::new(&topo, 2);
+        a.alloc_ranks(40).unwrap();
+        assert!(a.alloc_ranks(1).is_err());
+    }
+
+    #[test]
+    fn small_allocations_pack_onto_few_dimms_one_socket() {
+        // The paper: "all allocated ranks reside on only 1-3 UPMEM DIMMs
+        // attached to the same NUMA node".
+        let topo = SystemTopology::pristine();
+        for boot in 0..50 {
+            let mut a = BaselineAllocator::new(&topo, boot);
+            let s = a.alloc_ranks(4).unwrap();
+            assert!(s.dimms_spanned(&topo) <= 3, "boot {boot}: {:?}", s.ranks);
+            assert_eq!(s.sockets_spanned(&topo), 1, "boot {boot}: {:?}", s.ranks);
+        }
+    }
+
+    #[test]
+    fn placement_varies_across_boots() {
+        let topo = SystemTopology::pristine();
+        let sets: Vec<Vec<usize>> = (0..10)
+            .map(|boot| {
+                BaselineAllocator::new(&topo, boot).alloc_ranks(4).unwrap().ranks
+            })
+            .collect();
+        let distinct: std::collections::HashSet<_> = sets.iter().collect();
+        assert!(distinct.len() >= 5, "baseline placement should vary per boot");
+    }
+
+    #[test]
+    fn same_boot_is_deterministic() {
+        let topo = SystemTopology::pristine();
+        let a = BaselineAllocator::new(&topo, 7).alloc_ranks(6).unwrap();
+        let b = BaselineAllocator::new(&topo, 7).alloc_ranks(6).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn successive_allocations_disjoint() {
+        let topo = SystemTopology::pristine();
+        let mut a = BaselineAllocator::new(&topo, 3);
+        let s1 = a.alloc_ranks(8).unwrap();
+        let s2 = a.alloc_ranks(8).unwrap();
+        for r in &s2.ranks {
+            assert!(!s1.ranks.contains(r));
+        }
+        a.free(s1);
+        let s3 = a.alloc_ranks(30).unwrap();
+        assert_eq!(s3.len(), 30);
+    }
+}

@@ -1,0 +1,137 @@
+//! DPU allocation: the SDK baseline and the paper's NUMA/channel-aware
+//! extension (§V-B, Fig. 10).
+
+pub mod baseline;
+pub mod numa;
+
+use crate::transfer::topology::{RankId, SystemTopology, TOTAL_RANKS};
+use crate::Result;
+use std::collections::BTreeSet;
+
+pub use baseline::BaselineAllocator;
+pub use numa::{equal_channel_distribution, NumaAwareAllocator};
+
+/// A set of allocated ranks (the SDK's `dpu_set_t` at rank granularity).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankSet {
+    pub ranks: Vec<RankId>,
+}
+
+impl RankSet {
+    pub fn len(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranks.is_empty()
+    }
+
+    /// Number of distinct (socket, channel) pairs the set spans.
+    pub fn channels_spanned(&self, topo: &SystemTopology) -> usize {
+        self.ranks
+            .iter()
+            .map(|&r| topo.rank_loc(r).global_channel())
+            .collect::<BTreeSet<_>>()
+            .len()
+    }
+
+    /// Number of distinct NUMA nodes the set spans.
+    pub fn sockets_spanned(&self, topo: &SystemTopology) -> usize {
+        self.ranks.iter().map(|&r| topo.rank_loc(r).socket).collect::<BTreeSet<_>>().len()
+    }
+
+    /// Number of distinct DIMMs the set spans.
+    pub fn dimms_spanned(&self, topo: &SystemTopology) -> usize {
+        self.ranks
+            .iter()
+            .map(|&r| {
+                let l = topo.rank_loc(r);
+                (l.socket, l.channel, l.dimm)
+            })
+            .collect::<BTreeSet<_>>()
+            .len()
+    }
+}
+
+/// Book-keeping shared by both allocators.
+#[derive(Debug, Clone)]
+pub struct AllocState {
+    free: BTreeSet<RankId>,
+}
+
+impl Default for AllocState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AllocState {
+    pub fn new() -> AllocState {
+        AllocState { free: (0..TOTAL_RANKS).collect() }
+    }
+
+    pub fn free_ranks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn is_free(&self, r: RankId) -> bool {
+        self.free.contains(&r)
+    }
+
+    /// Claim specific ranks (error if any is taken).
+    pub fn claim(&mut self, ranks: &[RankId]) -> Result<RankSet> {
+        for &r in ranks {
+            if !self.free.contains(&r) {
+                return Err(crate::Error::Alloc(format!("rank {r} is not free")));
+            }
+        }
+        for &r in ranks {
+            self.free.remove(&r);
+        }
+        Ok(RankSet { ranks: ranks.to_vec() })
+    }
+
+    /// Return ranks to the pool.
+    pub fn release(&mut self, set: RankSet) {
+        for r in set.ranks {
+            let inserted = self.free.insert(r);
+            debug_assert!(inserted, "double free of rank {r}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claim_and_release_roundtrip() {
+        let mut st = AllocState::new();
+        assert_eq!(st.free_ranks(), 40);
+        let s = st.claim(&[0, 5, 9]).unwrap();
+        assert_eq!(st.free_ranks(), 37);
+        assert!(!st.is_free(5));
+        st.release(s);
+        assert_eq!(st.free_ranks(), 40);
+    }
+
+    #[test]
+    fn double_claim_fails() {
+        let mut st = AllocState::new();
+        st.claim(&[3]).unwrap();
+        assert!(st.claim(&[3]).is_err());
+        // Failed claim must not leak partial state.
+        assert!(st.claim(&[2, 3]).is_err());
+        assert!(st.is_free(2));
+    }
+
+    #[test]
+    fn span_metrics() {
+        let topo = SystemTopology::pristine();
+        // ranks 0..4 = socket 0, channel 0 (2 DIMMs × 2 ranks).
+        let s = RankSet { ranks: vec![0, 1, 2, 3] };
+        assert_eq!(s.channels_spanned(&topo), 1);
+        assert_eq!(s.sockets_spanned(&topo), 1);
+        assert_eq!(s.dimms_spanned(&topo), 2);
+    }
+}

@@ -1,0 +1,260 @@
+//! The paper's NUMA- and rank-location-aware allocation extension
+//! (§V-B, Fig. 10) — "confined exclusively to the userspace UPMEM
+//! library and required only 15 additional lines of code".
+//!
+//! Two additions over the SDK:
+//!
+//! * `alloc_buffer_on_cpu(node)` — pin the DRAM staging buffer to a NUMA
+//!   node (modeled by [`crate::transfer::model::BufferPlacement`]);
+//! * `dpu_alloc_ranks(n, …, node, channels)` — restrict allocation to
+//!   ranks reached through the given memory channels of the given
+//!   socket, with [`equal_channel_distribution`] balancing the request
+//!   across all of a socket's channels.
+
+use super::{AllocState, RankSet};
+use crate::transfer::topology::{SystemTopology, PIM_CHANNELS_PER_SOCKET, SOCKETS};
+use crate::Result;
+
+/// Compute a balanced per-channel rank distribution for `n_ranks` on
+/// `socket` (the paper's `equal_channel_distribution(ranks/2, node)`):
+/// returns `counts[channel] = ranks to take from that channel`, spread
+/// as evenly as possible, low channels first for the remainder.
+pub fn equal_channel_distribution(n_ranks: usize, socket: usize) -> Vec<usize> {
+    assert!(socket < SOCKETS);
+    let per = n_ranks / PIM_CHANNELS_PER_SOCKET;
+    let extra = n_ranks % PIM_CHANNELS_PER_SOCKET;
+    (0..PIM_CHANNELS_PER_SOCKET).map(|c| per + usize::from(c < extra)).collect()
+}
+
+/// The extended allocator.
+#[derive(Debug, Clone)]
+pub struct NumaAwareAllocator {
+    state: AllocState,
+    topo: SystemTopology,
+}
+
+impl NumaAwareAllocator {
+    pub fn new(topo: SystemTopology) -> NumaAwareAllocator {
+        NumaAwareAllocator { state: AllocState::new(), topo }
+    }
+
+    pub fn topology(&self) -> &SystemTopology {
+        &self.topo
+    }
+
+    /// `dpu_alloc_ranks(n, NULL, set, node, channels)`: allocate
+    /// `counts[c]` ranks from channel `c` of `socket`. Within a channel,
+    /// DIMMs are interleaved (first rank of each DIMM before second
+    /// ranks) so a 1-rank-per-channel request never doubles up a DIMM.
+    pub fn alloc_ranks_on(&mut self, socket: usize, counts: &[usize]) -> Result<RankSet> {
+        if socket >= SOCKETS {
+            return Err(crate::Error::Alloc(format!("no such NUMA node {socket}")));
+        }
+        if counts.len() != PIM_CHANNELS_PER_SOCKET {
+            return Err(crate::Error::Alloc(format!(
+                "channel distribution must have {PIM_CHANNELS_PER_SOCKET} entries, got {}",
+                counts.len()
+            )));
+        }
+        let mut picks = Vec::new();
+        for (c, &want) in counts.iter().enumerate() {
+            if want == 0 {
+                continue;
+            }
+            let chan_ranks = self.topo.ranks_of_channel(socket, c);
+            // Interleave: rank 0 of DIMM0, rank 0 of DIMM1, rank 1 of
+            // DIMM0, rank 1 of DIMM1.
+            let mut ordered = Vec::with_capacity(chan_ranks.len());
+            for rank_in_dimm in 0..2 {
+                for &r in &chan_ranks {
+                    if self.topo.rank_loc(r).rank_in_dimm == rank_in_dimm {
+                        ordered.push(r);
+                    }
+                }
+            }
+            let free: Vec<usize> =
+                ordered.into_iter().filter(|&r| self.state.is_free(r)).take(want).collect();
+            if free.len() < want {
+                return Err(crate::Error::Alloc(format!(
+                    "socket {socket} channel {c}: requested {want} ranks, {} free",
+                    free.len()
+                )));
+            }
+            picks.extend(free);
+        }
+        self.state.claim(&picks)
+    }
+
+    /// Convenience matching the paper's Fig. 10 usage: split `n` ranks
+    /// evenly between both sockets, each balanced across its channels.
+    /// Returns one `RankSet` per NUMA node.
+    pub fn alloc_balanced(&mut self, n: usize) -> Result<[RankSet; 2]> {
+        if n % 2 != 0 {
+            return Err(crate::Error::Alloc(format!(
+                "balanced allocation needs an even rank count, got {n}"
+            )));
+        }
+        let per_socket = n / 2;
+        let ch0 = equal_channel_distribution(per_socket, 0);
+        let ch1 = equal_channel_distribution(per_socket, 1);
+        let s0 = self.alloc_ranks_on(0, &ch0)?;
+        match self.alloc_ranks_on(1, &ch1) {
+            Ok(s1) => Ok([s0, s1]),
+            Err(e) => {
+                self.state.release(s0); // roll back
+                Err(e)
+            }
+        }
+    }
+
+    pub fn free(&mut self, set: RankSet) {
+        self.state.release(set);
+    }
+
+    pub fn free_ranks(&self) -> usize {
+        self.state.free_ranks()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, Config};
+
+    #[test]
+    fn equal_distribution_sums_and_balance() {
+        assert_eq!(equal_channel_distribution(5, 0), vec![1, 1, 1, 1, 1]);
+        assert_eq!(equal_channel_distribution(2, 0), vec![1, 1, 0, 0, 0]);
+        assert_eq!(equal_channel_distribution(7, 1), vec![2, 2, 1, 1, 1]);
+        assert_eq!(equal_channel_distribution(20, 0), vec![4, 4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn distribution_property_even_spread() {
+        forall(
+            Config::cases(200),
+            |rng| rng.range_u64(0, 20) as usize,
+            |&n| {
+                let d = equal_channel_distribution(n, 0);
+                let sum: usize = d.iter().sum();
+                let max = *d.iter().max().unwrap();
+                let min = *d.iter().min().unwrap();
+                sum == n && max - min <= 1
+            },
+            "equal_channel_distribution is a balanced partition",
+        );
+    }
+
+    #[test]
+    fn balanced_allocation_spans_max_channels() {
+        let topo = SystemTopology::pristine();
+        let mut a = NumaAwareAllocator::new(topo);
+        let [s0, s1] = a.alloc_balanced(4).unwrap();
+        let topo = a.topology().clone();
+        // 2 ranks per socket on 2 distinct channels each: 4 channels,
+        // 4 DIMMs, 2 sockets — the paper's peak-throughput placement.
+        assert_eq!(s0.channels_spanned(&topo), 2);
+        assert_eq!(s1.channels_spanned(&topo), 2);
+        assert_eq!(s0.sockets_spanned(&topo), 1);
+        for r in &s0.ranks {
+            assert_eq!(topo.rank_loc(*r).socket, 0);
+        }
+        for r in &s1.ranks {
+            assert_eq!(topo.rank_loc(*r).socket, 1);
+        }
+        // No DIMM doubling at one rank per channel.
+        assert_eq!(s0.dimms_spanned(&topo), 2);
+    }
+
+    #[test]
+    fn full_machine_allocation() {
+        let topo = SystemTopology::pristine();
+        let mut a = NumaAwareAllocator::new(topo);
+        let [s0, s1] = a.alloc_balanced(40).unwrap();
+        assert_eq!(s0.len() + s1.len(), 40);
+        assert_eq!(a.free_ranks(), 0);
+        assert!(a.alloc_balanced(2).is_err());
+        a.free(s0);
+        a.free(s1);
+        assert_eq!(a.free_ranks(), 40);
+    }
+
+    #[test]
+    fn failed_second_socket_rolls_back_first() {
+        let topo = SystemTopology::pristine();
+        let mut a = NumaAwareAllocator::new(topo);
+        // Exhaust socket 1 only.
+        let all1 = a.alloc_ranks_on(1, &equal_channel_distribution(20, 1)).unwrap();
+        assert_eq!(a.free_ranks(), 20);
+        // Balanced alloc must fail and leave socket 0 untouched.
+        assert!(a.alloc_balanced(4).is_err());
+        assert_eq!(a.free_ranks(), 20);
+        a.free(all1);
+    }
+
+    #[test]
+    fn channel_constraint_respected() {
+        let topo = SystemTopology::pristine();
+        let mut a = NumaAwareAllocator::new(topo);
+        let s = a.alloc_ranks_on(1, &[0, 0, 3, 0, 0]).unwrap();
+        let topo = a.topology().clone();
+        for &r in &s.ranks {
+            let l = topo.rank_loc(r);
+            assert_eq!(l.socket, 1);
+            assert_eq!(l.channel, 2);
+        }
+    }
+
+    #[test]
+    fn over_subscription_of_channel_fails() {
+        let topo = SystemTopology::pristine();
+        let mut a = NumaAwareAllocator::new(topo);
+        // A channel has 4 ranks (2 DIMMs × 2).
+        assert!(a.alloc_ranks_on(0, &[5, 0, 0, 0, 0]).is_err());
+        assert!(a.alloc_ranks_on(0, &[4, 0, 0, 0, 0]).is_ok());
+    }
+
+    #[test]
+    fn alloc_property_no_leak_no_overlap() {
+        // Random interleavings of balanced allocs and frees never leak
+        // ranks or hand out a rank twice.
+        forall(
+            Config::cases(50),
+            |rng| (0..8).map(|_| rng.range_u64(1, 6) as usize * 2).collect::<Vec<_>>(),
+            |sizes| {
+                let mut a = NumaAwareAllocator::new(SystemTopology::pristine());
+                let mut live: Vec<RankSet> = Vec::new();
+                let mut count = 0usize;
+                for &n in sizes {
+                    match a.alloc_balanced(n) {
+                        Ok([x, y]) => {
+                            count += x.len() + y.len();
+                            live.push(x);
+                            live.push(y);
+                        }
+                        Err(_) => {
+                            if let Some(s) = live.pop() {
+                                count -= s.len();
+                                a.free(s);
+                            }
+                        }
+                    }
+                    // Invariant: live + free == 40, and live sets disjoint.
+                    let mut seen = std::collections::HashSet::new();
+                    for s in &live {
+                        for &r in &s.ranks {
+                            if !seen.insert(r) {
+                                return false;
+                            }
+                        }
+                    }
+                    if a.free_ranks() + count != 40 {
+                        return false;
+                    }
+                }
+                true
+            },
+            "allocator conserves ranks",
+        );
+    }
+}

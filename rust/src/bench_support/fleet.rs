@@ -1,0 +1,256 @@
+//! Fleet-level analytic GEMV model for Figs. 12–13.
+//!
+//! The paper runs GEMV on all 2551 DPUs with matrices from 256 MB to
+//! 128 GB. Simulating every DPU instruction-by-instruction at 128 GB is
+//! out of budget, so the fleet model composes:
+//!
+//! * a **per-DPU kernel cycle model** fitted from exact simulation
+//!   ([`crate::kernels::gemv::GemvCycleModel`] — exact for these
+//!   streaming kernels, validated by `extrapolation_is_exact`);
+//! * the **transfer model** for matrix push / vector broadcast / result
+//!   gather over 40 NUMA-balanced ranks ([`crate::transfer`]);
+//! * a fixed **kernel-launch overhead** (the paper's "2–7 ms ...
+//!   fixed overhead associated with launching a kernel on UPMEM").
+//!
+//! The matrix is row-partitioned evenly, so fleet compute time is the
+//! per-DPU time of the largest row block.
+
+use crate::kernels::gemv::{GemvCycleModel, GemvVariant};
+use crate::transfer::model::BufferPlacement;
+use crate::transfer::topology::SystemTopology;
+use crate::transfer::{Direction, TransferEngine};
+use crate::Result;
+use std::collections::HashMap;
+
+/// §VI-A scenarios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// GEMV-MV: matrix + vector transferred every call.
+    MatrixAndVector,
+    /// GEMV-V: matrix preloaded; only vector + result move.
+    VectorOnly,
+}
+
+/// One evaluated configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetGemvPoint {
+    pub n: u64,
+    pub scenario: Scenario,
+    pub variant: GemvVariant,
+    /// Matrix transfer seconds (0 for GEMV-V).
+    pub matrix_s: f64,
+    /// Vector broadcast + launch overhead seconds.
+    pub vector_s: f64,
+    /// Kernel compute seconds (slowest DPU).
+    pub compute_s: f64,
+    /// Result gather seconds.
+    pub gather_s: f64,
+}
+
+impl FleetGemvPoint {
+    pub fn total_s(&self) -> f64 {
+        self.matrix_s + self.vector_s + self.compute_s + self.gather_s
+    }
+
+    pub fn transfer_s(&self) -> f64 {
+        self.matrix_s + self.vector_s + self.gather_s
+    }
+
+    /// GOPS with the BLAS 2-ops-per-MAC convention over an n×n matrix.
+    pub fn gops(&self) -> f64 {
+        2.0 * (self.n as f64) * (self.n as f64) / self.total_s() / 1e9
+    }
+
+    pub fn matrix_bytes(&self) -> u64 {
+        self.n * self.n * self.variant.row_bytes(2048) as u64 / 2048
+    }
+}
+
+/// The analytic fleet model (paper configuration: 2551 usable DPUs on
+/// 40 NUMA-balanced ranks, 16 tasklets).
+pub struct FleetGemvModel {
+    pub nr_dpus: u64,
+    pub nr_tasklets: usize,
+    pub launch_overhead_s: f64,
+    engine: TransferEngine,
+    all_ranks: Vec<usize>,
+    /// Cache of fitted per-DPU cycle models keyed by (variant, cols).
+    cache: HashMap<(GemvVariant, u32), GemvCycleModel>,
+    /// Columns used for per-row cycle fitting (cost scales linearly in
+    /// cols for these streaming kernels, so fit once at a moderate
+    /// width and scale — keeps the bench fast at n = 256 K).
+    fit_cols: u32,
+}
+
+impl FleetGemvModel {
+    pub fn paper_fleet() -> FleetGemvModel {
+        let topo = SystemTopology::paper_server();
+        // NUMA-balanced: all 40 ranks, channels evenly loaded.
+        let all_ranks: Vec<usize> = (0..crate::transfer::topology::TOTAL_RANKS).collect();
+        FleetGemvModel {
+            nr_dpus: topo.usable_dpus() as u64,
+            nr_tasklets: 16,
+            launch_overhead_s: 2e-3,
+            engine: TransferEngine::new(topo, crate::transfer::TransferModel::default()),
+            all_ranks,
+            cache: HashMap::new(),
+            fit_cols: 4096,
+        }
+    }
+
+    fn cycle_model(&mut self, variant: GemvVariant) -> Result<GemvCycleModel> {
+        let key = (variant, self.fit_cols);
+        if let Some(m) = self.cache.get(&key) {
+            return Ok(*m);
+        }
+        let m = GemvCycleModel::fit(variant, self.fit_cols, self.nr_tasklets, 1234)?;
+        self.cache.insert(key, m);
+        Ok(m)
+    }
+
+    /// Evaluate an `n × n` GEMV under `scenario`.
+    pub fn evaluate(
+        &mut self,
+        n: u64,
+        variant: GemvVariant,
+        scenario: Scenario,
+    ) -> Result<FleetGemvPoint> {
+        let cm = self.cycle_model(variant)?;
+        let fit_cols = self.fit_cols as f64;
+        // Rows per DPU (largest block) and per-row cycles scaled to n
+        // columns (per-row cost is linear in cols; the constant term is
+        // per-launch, not per-row).
+        let rows_per_dpu = n.div_ceil(self.nr_dpus);
+        let per_row_cycles = cm.per_row * n as f64 / fit_cols;
+        let compute_cycles = cm.fixed + per_row_cycles * rows_per_dpu as f64;
+        let compute_s = compute_cycles / crate::dpu::CLOCK_HZ as f64;
+
+        // Transfers over all 40 ranks, NUMA-balanced placement.
+        let row_bytes = n * variant.row_bytes(2048) as u64 / 2048;
+        let matrix_bytes = n * row_bytes;
+        let matrix_s = match scenario {
+            Scenario::MatrixAndVector => {
+                self.engine
+                    .parallel(
+                        &self.all_ranks,
+                        matrix_bytes,
+                        Direction::HostToPim,
+                        BufferPlacement::PerSocket,
+                    )
+                    .seconds
+            }
+            Scenario::VectorOnly => 0.0,
+        };
+        let vector_s = self
+            .engine
+            .broadcast(&self.all_ranks, row_bytes, BufferPlacement::PerSocket)
+            .seconds
+            + self.launch_overhead_s;
+        let gather_s = self
+            .engine
+            .parallel(&self.all_ranks, n * 4, Direction::PimToHost, BufferPlacement::PerSocket)
+            .seconds;
+        Ok(FleetGemvPoint {
+            n,
+            scenario,
+            variant,
+            matrix_s,
+            vector_s,
+            compute_s,
+            gather_s,
+        })
+    }
+}
+
+/// Square matrix sizes for the Fig. 12/13 sweep. The paper spans 256 MB
+/// to 128 GB; the kernel requires power-of-two row strides, so the
+/// sweep covers 256 MB – 64 GB (the shapes and ratios are flat well
+/// before the top end).
+pub fn paper_matrix_sizes() -> Vec<u64> {
+    vec![16_384, 32_768, 65_536, 131_072, 262_144]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> FleetGemvModel {
+        FleetGemvModel::paper_fleet()
+    }
+
+    #[test]
+    fn gemv_v_hits_paper_int8_throughput() {
+        let mut m = model();
+        let p = m.evaluate(262_144, GemvVariant::I8Opt, Scenario::VectorOnly).unwrap();
+        // Paper: optimized INT8 GEMV-V scales to ~650 GOPS.
+        assert!((500.0..900.0).contains(&p.gops()), "GOPS = {}", p.gops());
+    }
+
+    #[test]
+    fn gemv_v_hits_paper_int4_throughput() {
+        let mut m = model();
+        let p = m.evaluate(262_144, GemvVariant::I4Bsdp, Scenario::VectorOnly).unwrap();
+        // Paper: INT4 BSDP GEMV-V peaks at ~1000 GOPS, 1.53× INT8.
+        assert!((800.0..1300.0).contains(&p.gops()), "GOPS = {}", p.gops());
+        let p8 = m.evaluate(262_144, GemvVariant::I8Opt, Scenario::VectorOnly).unwrap();
+        let ratio = p.gops() / p8.gops();
+        assert!((1.3..1.8).contains(&ratio), "INT4/INT8 = {ratio}");
+    }
+
+    #[test]
+    fn gemv_mv_transfer_dominates() {
+        let mut m = model();
+        let p = m
+            .evaluate(262_144, GemvVariant::I8Opt, Scenario::MatrixAndVector)
+            .unwrap();
+        // Paper Fig. 12a: transfer ≈ 10× compute in GEMV-MV.
+        let ratio = p.transfer_s() / p.compute_s;
+        assert!((6.0..20.0).contains(&ratio), "transfer/compute = {ratio}");
+    }
+
+    #[test]
+    fn gemv_v_compute_dominates_at_large_n() {
+        let mut m = model();
+        let p = m.evaluate(262_144, GemvVariant::I8Opt, Scenario::VectorOnly).unwrap();
+        // Paper: at 128 GB compute ≈ 0.4 s, 57× the transfer time; at
+        // our 64 GB top end the same strong dominance must hold.
+        let ratio = p.compute_s / p.transfer_s();
+        assert!(ratio > 20.0, "compute/transfer = {ratio}");
+        assert!((0.05..1.0).contains(&p.compute_s), "compute_s = {}", p.compute_s);
+    }
+
+    #[test]
+    fn opt_beats_baseline_by_paper_factor() {
+        let mut m = model();
+        let opt = m.evaluate(65_536, GemvVariant::I8Opt, Scenario::VectorOnly).unwrap();
+        let base = m.evaluate(65_536, GemvVariant::I8Baseline, Scenario::VectorOnly).unwrap();
+        let speedup = opt.gops() / base.gops();
+        // Paper: 3.5×. Naive-NI baseline gives ~2.3–2.6× on compute;
+        // with the shared fixed overheads the end-to-end factor lands
+        // in the 2–3 range (the __mulsi3 baseline exceeds it; see
+        // EXPERIMENTS.md E8).
+        assert!((1.8..4.5).contains(&speedup), "opt/base = {speedup}");
+        let mulsi3 = m.evaluate(65_536, GemvVariant::I8Mulsi3, Scenario::VectorOnly).unwrap();
+        assert!(opt.gops() / mulsi3.gops() > 4.0);
+    }
+
+    #[test]
+    fn uppermost_sizes_beat_kunpeng_server() {
+        let mut m = model();
+        let p8 = m.evaluate(262_144, GemvVariant::I8Opt, Scenario::VectorOnly).unwrap();
+        // Paper: >3× the ~200 GOPS server for INT8…
+        assert!(p8.gops() / crate::cpu_ref::KUNPENG_INT8_GOPS > 3.0);
+        // …and ~10× for INT4.
+        let p4 = m.evaluate(262_144, GemvVariant::I4Bsdp, Scenario::VectorOnly).unwrap();
+        assert!(p4.gops() / crate::cpu_ref::KUNPENG_INT4_GOPS > 8.0);
+    }
+
+    #[test]
+    fn matrix_bytes_accounting() {
+        let mut m = model();
+        let p = m.evaluate(16_384, GemvVariant::I8Opt, Scenario::MatrixAndVector).unwrap();
+        assert_eq!(p.matrix_bytes(), 16_384 * 16_384); // 256 MB INT8
+        let p4 = m.evaluate(16_384, GemvVariant::I4Bsdp, Scenario::MatrixAndVector).unwrap();
+        assert_eq!(p4.matrix_bytes(), 16_384 * 16_384 / 2); // nibbles
+    }
+}

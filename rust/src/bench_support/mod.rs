@@ -1,0 +1,9 @@
+//! Benchmark harness shared by `rust/benches/*` and the `figures` CLI
+//! sub-command: table printing, the figure workload definitions and the
+//! fleet-level analytic GEMV model for Figs. 12–13.
+
+pub mod fleet;
+pub mod table;
+
+pub use fleet::{FleetGemvModel, FleetGemvPoint, Scenario};
+pub use table::Table;

@@ -1,0 +1,14 @@
+//! Configuration substrate: a small TOML-subset parser plus the typed
+//! configuration the launcher consumes.
+//!
+//! The offline crate cache has no `serde`/`toml`, so this module
+//! implements the slice needed: `[section]` headers, `key = value`
+//! pairs with integer / float / boolean / string / integer-array
+//! values, `#` comments. See `configs/*.toml` in the repository root
+//! for examples.
+
+pub mod parser;
+pub mod types;
+
+pub use parser::{ConfigDoc, Value};
+pub use types::{GemvJob, RunConfig, ServeConfig};

@@ -1,0 +1,236 @@
+//! Minimal TOML-subset parser.
+
+use crate::util::error::Error;
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    IntArray(Vec<i64>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int_array(&self) -> Option<&[i64]> {
+        match self {
+            Value::IntArray(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: section → key → value. Keys outside any section
+/// live in the "" section.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigDoc {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl ConfigDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<ConfigDoc> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(i) => &raw[..i],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(Error::Config {
+                    line: lineno + 1,
+                    msg: format!("expected 'key = value', got '{line}'"),
+                });
+            };
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(line[eq + 1..].trim(), lineno + 1)?;
+            if key.is_empty() {
+                return Err(Error::Config { line: lineno + 1, msg: "empty key".into() });
+            }
+            let prev = doc.sections.entry(section.clone()).or_default().insert(key.clone(), val);
+            if prev.is_some() {
+                return Err(Error::Config {
+                    line: lineno + 1,
+                    msg: format!("duplicate key '{key}' in section '[{section}]'"),
+                });
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Read a file and parse it.
+    pub fn from_file(path: &str) -> Result<ConfigDoc> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    /// Typed getters with defaults.
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value> {
+    if s.is_empty() {
+        return Err(Error::Config { line, msg: "empty value".into() });
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let Some(inner) = q.strip_suffix('"') else {
+            return Err(Error::Config { line, msg: format!("unterminated string {s}") });
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(arr) = s.strip_prefix('[').and_then(|a| a.strip_suffix(']')) {
+        let mut out = Vec::new();
+        for item in arr.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            out.push(parse_int(item, line)?);
+        }
+        return Ok(Value::IntArray(out));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    Ok(Value::Int(parse_int(s, line)?))
+}
+
+fn parse_int(s: &str, line: usize) -> Result<i64> {
+    let clean = s.replace('_', "");
+    let v = if let Some(hex) = clean.strip_prefix("0x") {
+        i64::from_str_radix(hex, 16)
+    } else {
+        clean.parse::<i64>()
+    };
+    v.map_err(|_| Error::Config { line, msg: format!("bad integer '{s}'") })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = ConfigDoc::parse(
+            "top = 1\n\
+             [system]\n\
+             ranks = 4            # comment\n\
+             tasklets = 16\n\
+             policy = \"numa\"\n\
+             jitter = 0.012\n\
+             verify = true\n\
+             sizes = [1, 2, 4]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_int(), Some(1));
+        assert_eq!(doc.int_or("system", "ranks", 0), 4);
+        assert_eq!(doc.str_or("system", "policy", "x"), "numa");
+        assert!((doc.float_or("system", "jitter", 0.0) - 0.012).abs() < 1e-12);
+        assert!(doc.bool_or("system", "verify", false));
+        assert_eq!(doc.get("system", "sizes").unwrap().as_int_array(), Some(&[1, 2, 4][..]));
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = ConfigDoc::parse("[a]\nx = 1\n").unwrap();
+        assert_eq!(doc.int_or("a", "y", 42), 42);
+        assert_eq!(doc.int_or("b", "x", 7), 7);
+    }
+
+    #[test]
+    fn underscore_and_hex_integers() {
+        let doc = ConfigDoc::parse("a = 1_000_000\nb = 0xFF\n").unwrap();
+        assert_eq!(doc.int_or("", "a", 0), 1_000_000);
+        assert_eq!(doc.int_or("", "b", 0), 255);
+    }
+
+    #[test]
+    fn errors_with_line_numbers() {
+        let e = ConfigDoc::parse("[s]\ngood = 1\nbad line\n").unwrap_err();
+        match e {
+            Error::Config { line, .. } => assert_eq!(line, 3),
+            other => panic!("{other}"),
+        }
+        assert!(ConfigDoc::parse("x = \"unterminated\n").is_err());
+        assert!(ConfigDoc::parse("x = 12abc\n").is_err());
+        assert!(ConfigDoc::parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = ConfigDoc::parse("x = 3\n").unwrap();
+        assert_eq!(doc.float_or("", "x", 0.0), 3.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Typed configuration consumed by the launcher and the serving layer.
+
+use super::parser::ConfigDoc;
+use crate::host::AllocPolicy;
+use crate::kernels::gemv::GemvVariant;
+use crate::Result;
+
+/// System-level configuration (`[system]`).
+#[derive(Debug, Clone, Copy)]
+pub struct RunConfig {
+    /// Ranks to allocate.
+    pub ranks: usize,
+    /// Tasklets per DPU.
+    pub tasklets: usize,
+    /// Allocation policy.
+    pub policy: AllocPolicy,
+    /// Use the paper's faulty-DPU topology (2551 usable) or pristine.
+    pub paper_faults: bool,
+    /// RNG seed for workloads.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            ranks: 2,
+            tasklets: 16,
+            policy: AllocPolicy::NumaAware,
+            paper_faults: false,
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_doc(doc: &ConfigDoc) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        let policy = match doc.str_or("system", "policy", "numa") {
+            "numa" => AllocPolicy::NumaAware,
+            "baseline" => AllocPolicy::BaselineSdk {
+                boot_seed: doc.int_or("system", "boot_seed", 1) as u64,
+            },
+            other => {
+                return Err(crate::Error::Config {
+                    line: 0,
+                    msg: format!("unknown policy '{other}' (expected numa|baseline)"),
+                })
+            }
+        };
+        let cfg = RunConfig {
+            ranks: doc.int_or("system", "ranks", d.ranks as i64) as usize,
+            tasklets: doc.int_or("system", "tasklets", d.tasklets as i64) as usize,
+            policy,
+            paper_faults: doc.bool_or("system", "paper_faults", d.paper_faults),
+            seed: doc.int_or("system", "seed", d.seed as i64) as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.ranks == 0 || self.ranks > crate::transfer::topology::TOTAL_RANKS {
+            return Err(crate::Error::Config {
+                line: 0,
+                msg: format!("ranks must be 1..=40, got {}", self.ranks),
+            });
+        }
+        if !(1..=16).contains(&self.tasklets) {
+            return Err(crate::Error::Config {
+                line: 0,
+                msg: format!("tasklets must be 1..=16, got {}", self.tasklets),
+            });
+        }
+        Ok(())
+    }
+
+    /// Build the `PimSystem` this config describes.
+    pub fn build_system(&self) -> crate::host::PimSystem {
+        let topo = if self.paper_faults {
+            crate::transfer::topology::SystemTopology::paper_server()
+        } else {
+            crate::transfer::topology::SystemTopology::pristine()
+        };
+        crate::host::PimSystem::new(topo, self.policy)
+    }
+}
+
+/// One GEMV workload (`[gemv]`).
+#[derive(Debug, Clone, Copy)]
+pub struct GemvJob {
+    pub rows: u32,
+    pub cols: u32,
+    pub variant: GemvVariant,
+    /// GEMV-V (matrix preloaded) vs GEMV-MV (matrix transferred per
+    /// call) — §VI-A.
+    pub preloaded: bool,
+}
+
+impl GemvJob {
+    pub fn from_doc(doc: &ConfigDoc) -> Result<GemvJob> {
+        let variant = match doc.str_or("gemv", "variant", "i8-opt") {
+            "i8-baseline" => GemvVariant::I8Baseline,
+            "i8-mulsi3" => GemvVariant::I8Mulsi3,
+            "i8-opt" => GemvVariant::I8Opt,
+            "i4-bsdp" => GemvVariant::I4Bsdp,
+            other => {
+                return Err(crate::Error::Config {
+                    line: 0,
+                    msg: format!(
+                        "unknown variant '{other}' \
+                         (expected i8-baseline|i8-mulsi3|i8-opt|i4-bsdp)"
+                    ),
+                })
+            }
+        };
+        Ok(GemvJob {
+            rows: doc.int_or("gemv", "rows", 256) as u32,
+            cols: doc.int_or("gemv", "cols", 2048) as u32,
+            variant,
+            preloaded: doc.bool_or("gemv", "preloaded", true),
+        })
+    }
+}
+
+/// Serving-layer configuration (`[serve]`).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// Batching window in microseconds.
+    pub batch_window_us: u64,
+    /// Number of requests the demo client submits.
+    pub requests: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 8, batch_window_us: 500, requests: 64 }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_doc(doc: &ConfigDoc) -> ServeConfig {
+        let d = ServeConfig::default();
+        ServeConfig {
+            max_batch: doc.int_or("serve", "max_batch", d.max_batch as i64) as usize,
+            batch_window_us: doc.int_or("serve", "batch_window_us", d.batch_window_us as i64)
+                as u64,
+            requests: doc.int_or("serve", "requests", d.requests as i64) as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_roundtrip() {
+        let doc = ConfigDoc::parse(
+            "[system]\n\
+             ranks = 4\n\
+             tasklets = 12\n\
+             policy = \"baseline\"\n\
+             boot_seed = 9\n\
+             paper_faults = true\n\
+             [gemv]\n\
+             rows = 512\n\
+             cols = 4096\n\
+             variant = \"i4-bsdp\"\n\
+             preloaded = false\n\
+             [serve]\n\
+             max_batch = 16\n",
+        )
+        .unwrap();
+        let rc = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(rc.ranks, 4);
+        assert_eq!(rc.tasklets, 12);
+        assert!(matches!(rc.policy, AllocPolicy::BaselineSdk { boot_seed: 9 }));
+        assert!(rc.paper_faults);
+        let gj = GemvJob::from_doc(&doc).unwrap();
+        assert_eq!(gj.rows, 512);
+        assert_eq!(gj.variant, GemvVariant::I4Bsdp);
+        assert!(!gj.preloaded);
+        let sc = ServeConfig::from_doc(&doc);
+        assert_eq!(sc.max_batch, 16);
+        assert_eq!(sc.batch_window_us, 500); // default
+    }
+
+    #[test]
+    fn defaults_when_sections_missing() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let rc = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(rc.ranks, 2);
+        assert!(matches!(rc.policy, AllocPolicy::NumaAware));
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let doc = ConfigDoc::parse("[system]\nranks = 99\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[system]\ntasklets = 0\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[system]\npolicy = \"bogus\"\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[gemv]\nvariant = \"fp64\"\n").unwrap();
+        assert!(GemvJob::from_doc(&doc).is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! Request batching: collect up to `max_batch` requests within a time
+//! window. UPMEM kernel launches have a multi-millisecond fixed cost
+//! (§VI-B: vector transfer ≈ 2–7 ms "fixed overhead associated with
+//! launching a kernel"), so amortizing it over a batch is the core
+//! serving-layer lever — the same reasoning as vLLM-style batchers.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct Batcher {
+    pub max_batch: usize,
+    pub window: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, window: Duration) -> Batcher {
+        assert!(max_batch >= 1);
+        Batcher { max_batch, window }
+    }
+
+    /// Block for the first item, then keep collecting until the batch
+    /// is full or the window since the first item elapsed. Returns
+    /// `None` when the channel is closed and drained.
+    pub fn collect<T>(&self, rx: &Receiver<T>) -> Option<Vec<T>> {
+        let first = rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.window;
+        while batch.len() < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(4, Duration::from_millis(50));
+        assert_eq!(b.collect(&rx).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.collect(&rx).unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.collect(&rx).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn window_bounds_waiting() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let b = Batcher::new(8, Duration::from_millis(20));
+        let t0 = Instant::now();
+        let batch = b.collect(&rx).unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn closed_channel_returns_none_after_drain() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        let b = Batcher::new(4, Duration::from_millis(5));
+        assert_eq!(b.collect(&rx).unwrap(), vec![7]);
+        assert!(b.collect(&rx).is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_within_window() {
+        let (tx, rx) = channel();
+        let b = Batcher::new(4, Duration::from_millis(120));
+        let sender = std::thread::spawn(move || {
+            tx.send(1).unwrap();
+            std::thread::sleep(Duration::from_millis(15));
+            tx.send(2).unwrap();
+            std::thread::sleep(Duration::from_millis(15));
+            tx.send(3).unwrap();
+        });
+        let batch = b.collect(&rx).unwrap();
+        sender.join().unwrap();
+        assert!(batch.len() >= 2, "late arrivals should join: {batch:?}");
+    }
+}

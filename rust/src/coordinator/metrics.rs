@@ -1,0 +1,119 @@
+//! Serving metrics: counters and a latency recorder.
+
+use crate::util::stats::Summary;
+use std::time::Duration;
+
+/// Records request latencies and aggregates.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_seconds(&mut self, s: f64) {
+        self.samples_us.push(s * 1e6);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    /// Summary in microseconds.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.samples_us.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.samples_us))
+        }
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    /// End-to-end (queue + execute) latency.
+    pub e2e: LatencyRecorder,
+    /// Execution-only latency.
+    pub exec: LatencyRecorder,
+    /// Modeled device seconds (broadcast+compute+gather) accumulated.
+    pub device_seconds: f64,
+}
+
+impl ServerMetrics {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// One-line report for logs.
+    pub fn report(&self) -> String {
+        let e2e = self.e2e.summary();
+        match e2e {
+            Some(s) => format!(
+                "requests={} batches={} mean_batch={:.2} errors={} \
+                 e2e p50={:.0}us p95={:.0}us max={:.0}us device_s={:.4}",
+                self.requests,
+                self.batches,
+                self.mean_batch_size(),
+                self.errors,
+                s.p50,
+                s.p95,
+                s.max,
+                self.device_seconds,
+            ),
+            None => format!("requests={} (no completed samples)", self.requests),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary() {
+        let mut r = LatencyRecorder::new();
+        assert!(r.summary().is_none());
+        for ms in [1u64, 2, 3] {
+            r.record(Duration::from_millis(ms));
+        }
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = LatencyRecorder::new();
+        a.record_seconds(0.001);
+        let mut b = LatencyRecorder::new();
+        b.record_seconds(0.002);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn batch_size_math() {
+        let m = ServerMetrics { requests: 10, batches: 4, ..Default::default() };
+        assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
+        assert!(m.report().contains("requests=10"));
+    }
+}

@@ -1,0 +1,145 @@
+//! Replica routing: distribute requests across multiple GEMV replicas
+//! (each backed by its own DPU set / rank group).
+//!
+//! On a 40-rank machine one model rarely needs every rank; serving
+//! multiple replicas of a (smaller) model and routing between them is
+//! how the fleet is kept busy. Two policies: round-robin and
+//! least-outstanding.
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastOutstanding,
+}
+
+/// Router over `n` replicas. Thread-safe use is external (the server
+/// owns it behind a lock or a single dispatcher thread).
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: Policy,
+    outstanding: Vec<usize>,
+    next_rr: usize,
+    dispatched: Vec<u64>,
+}
+
+impl Router {
+    pub fn new(n: usize, policy: Policy) -> Router {
+        assert!(n >= 1);
+        Router { policy, outstanding: vec![0; n], next_rr: 0, dispatched: vec![0; n] }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Pick a replica for the next request and mark it outstanding.
+    pub fn dispatch(&mut self) -> usize {
+        let n = self.outstanding.len();
+        let pick = match self.policy {
+            Policy::RoundRobin => {
+                let p = self.next_rr;
+                self.next_rr = (self.next_rr + 1) % n;
+                p
+            }
+            Policy::LeastOutstanding => {
+                let min = *self.outstanding.iter().min().unwrap();
+                // Break ties round-robin so load spreads.
+                let mut pick = 0;
+                for i in 0..n {
+                    let cand = (self.next_rr + i) % n;
+                    if self.outstanding[cand] == min {
+                        pick = cand;
+                        break;
+                    }
+                }
+                self.next_rr = (pick + 1) % n;
+                pick
+            }
+        };
+        self.outstanding[pick] += 1;
+        self.dispatched[pick] += 1;
+        pick
+    }
+
+    /// Mark a request complete on `replica`.
+    pub fn complete(&mut self, replica: usize) {
+        assert!(self.outstanding[replica] > 0, "complete without dispatch");
+        self.outstanding[replica] -= 1;
+    }
+
+    pub fn outstanding(&self, replica: usize) -> usize {
+        self.outstanding[replica]
+    }
+
+    pub fn dispatched(&self, replica: usize) -> u64 {
+        self.dispatched[replica]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, Config};
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(3, Policy::RoundRobin);
+        assert_eq!(
+            (0..6).map(|_| r.dispatch()).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn least_outstanding_avoids_busy_replica() {
+        let mut r = Router::new(2, Policy::LeastOutstanding);
+        let a = r.dispatch(); // 0
+        let _b = r.dispatch(); // 1
+        r.complete(a);
+        // Replica a is now idle; next dispatch must pick it.
+        assert_eq!(r.dispatch(), a);
+    }
+
+    #[test]
+    #[should_panic(expected = "complete without dispatch")]
+    fn complete_underflow_panics() {
+        let mut r = Router::new(1, Policy::RoundRobin);
+        r.complete(0);
+    }
+
+    #[test]
+    fn balance_property() {
+        // After N dispatches with interleaved completions, round-robin
+        // dispatch counts differ by at most 1, and least-outstanding
+        // never lets outstanding counts diverge by more than 1 when
+        // completions keep pace.
+        forall(
+            Config::cases(50),
+            |rng| {
+                let n = rng.range_u64(1, 6) as usize;
+                let ops = rng.range_u64(1, 100) as usize;
+                (n, ops)
+            },
+            |&(n, ops)| {
+                let mut rr = Router::new(n, Policy::RoundRobin);
+                for _ in 0..ops {
+                    rr.dispatch();
+                }
+                let counts: Vec<u64> = (0..n).map(|i| rr.dispatched(i)).collect();
+                let max = *counts.iter().max().unwrap();
+                let min = *counts.iter().min().unwrap();
+                if max - min > 1 {
+                    return false;
+                }
+                let mut lo = Router::new(n, Policy::LeastOutstanding);
+                for _ in 0..ops {
+                    let r = lo.dispatch();
+                    lo.complete(r); // completion keeps pace
+                }
+                (0..n).all(|i| lo.outstanding(i) == 0)
+            },
+            "routers stay balanced",
+        );
+    }
+}

@@ -1,0 +1,204 @@
+//! The serving loop: a worker thread owns the [`GemvCoordinator`]
+//! (matrix resident — the GEMV-V scenario), pulls batches of requests
+//! from a channel, executes them and responds, recording metrics.
+//!
+//! Architecture (single-replica; [`super::router`] composes replicas):
+//!
+//! ```text
+//! clients ──tx──► request queue ──► batcher ──► worker thread
+//!                                                │ GemvCoordinator
+//!   response channels ◄──── per-request tx ──────┘
+//! ```
+
+use super::batcher::Batcher;
+use super::metrics::ServerMetrics;
+use super::GemvCoordinator;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A GEMV request: the input vector and a response channel.
+pub struct Request {
+    pub x: Vec<i8>,
+    pub submitted: Instant,
+    pub respond: Sender<Response>,
+}
+
+/// A GEMV response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub y: Result<Vec<i32>, String>,
+    /// Modeled device time for the batch this request rode in.
+    pub device_seconds: f64,
+    /// Host wall time from submit to completion.
+    pub e2e: Duration,
+}
+
+/// Queue message: a request or the shutdown sentinel. The sentinel is
+/// needed because live `GemvClient` clones keep the channel open —
+/// closing the server's own `Sender` alone would never unblock the
+/// worker's `recv()`.
+enum Msg {
+    Req(Request),
+    Stop,
+}
+
+/// Client handle (cheaply cloneable).
+#[derive(Clone)]
+pub struct GemvClient {
+    tx: Sender<Msg>,
+}
+
+impl GemvClient {
+    /// Submit a vector; returns the receiver for the response.
+    pub fn submit(&self, x: Vec<i8>) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        let req = Request { x, submitted: Instant::now(), respond: tx };
+        // A send failure means the server stopped; the caller sees the
+        // closed response channel.
+        let _ = self.tx.send(Msg::Req(req));
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, x: Vec<i8>) -> Option<Response> {
+        self.submit(x).recv().ok()
+    }
+}
+
+/// A running server (one worker thread, one replica).
+pub struct GemvServer {
+    handle: Option<JoinHandle<(GemvCoordinator, ServerMetrics)>>,
+    tx: Option<Sender<Msg>>,
+}
+
+impl GemvServer {
+    /// Start serving on `coordinator` (matrix must be preloaded).
+    pub fn start(coordinator: GemvCoordinator, batcher: Batcher) -> (GemvServer, GemvClient) {
+        let (tx, rx) = channel::<Msg>();
+        let client = GemvClient { tx: tx.clone() };
+        let handle = std::thread::spawn(move || worker(coordinator, batcher, rx));
+        (GemvServer { handle: Some(handle), tx: Some(tx) }, client)
+    }
+
+    /// Stop accepting requests, drain everything already queued, and
+    /// return the coordinator and final metrics. Requests submitted
+    /// after `shutdown` see a closed response channel.
+    pub fn shutdown(mut self) -> (GemvCoordinator, ServerMetrics) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Msg::Stop); // FIFO: drains earlier requests first
+        }
+        self.handle.take().expect("not yet joined").join().expect("worker panicked")
+    }
+}
+
+fn worker(
+    mut coordinator: GemvCoordinator,
+    batcher: Batcher,
+    rx: Receiver<Msg>,
+) -> (GemvCoordinator, ServerMetrics) {
+    let mut metrics = ServerMetrics::default();
+    'serve: while let Some(batch) = batcher.collect(&rx) {
+        let mut counted = false;
+        for msg in batch {
+            let req = match msg {
+                Msg::Req(r) => r,
+                Msg::Stop => break 'serve,
+            };
+            if !counted {
+                metrics.batches += 1;
+                counted = true;
+            }
+            metrics.requests += 1;
+            let t0 = Instant::now();
+            let result = coordinator.gemv(&req.x);
+            let exec = t0.elapsed();
+            let (y, device_seconds) = match result {
+                Ok((y, t)) => {
+                    metrics.device_seconds += t.total();
+                    (Ok(y), t.total())
+                }
+                Err(e) => {
+                    metrics.errors += 1;
+                    (Err(e.to_string()), 0.0)
+                }
+            };
+            let e2e = req.submitted.elapsed();
+            metrics.e2e.record(e2e);
+            metrics.exec.record(exec);
+            let _ = req.respond.send(Response { y, device_seconds, e2e });
+        }
+    }
+    (coordinator, metrics)
+}
+
+/// Convenience: a default batcher matched to the modeled 2–7 ms kernel
+/// launch overhead.
+pub fn default_batcher(max_batch: usize) -> Batcher {
+    Batcher::new(max_batch, Duration::from_micros(500))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::host::{AllocPolicy, PimSystem};
+    use crate::kernels::gemv::{gemv_ref, GemvShape, GemvVariant};
+    use crate::transfer::topology::SystemTopology;
+    use crate::util::rng::Rng;
+
+    fn serving_coordinator(rows: u32, cols: u32, seed: u64) -> (GemvCoordinator, Vec<i8>) {
+        let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+        let set = sys.alloc_ranks(2).unwrap();
+        let mut c = GemvCoordinator::new(sys, set, GemvVariant::I8Opt, 8);
+        let mut rng = Rng::new(seed);
+        let m = rng.i8_vec((rows * cols) as usize);
+        c.preload_matrix(rows, cols, &m).unwrap();
+        (c, m)
+    }
+
+    #[test]
+    fn serves_correct_results() {
+        let (c, m) = serving_coordinator(128, 1024, 51);
+        let (server, client) = GemvServer::start(c, default_batcher(4));
+        let mut rng = Rng::new(52);
+        let xs: Vec<Vec<i8>> = (0..6).map(|_| rng.i8_vec(1024)).collect();
+        let rxs: Vec<_> = xs.iter().map(|x| client.submit(x.clone())).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let resp = rx.recv().unwrap();
+            let y = resp.y.expect("server-side success");
+            assert_eq!(y, gemv_ref(GemvShape { rows: 128, cols: 1024 }, &m, x));
+            assert!(resp.device_seconds > 0.0);
+        }
+        let (c, metrics) = server.shutdown();
+        assert_eq!(metrics.requests, 6);
+        assert_eq!(metrics.errors, 0);
+        assert!(metrics.batches <= 6);
+        assert_eq!(c.state().gemv_count(), 6);
+    }
+
+    #[test]
+    fn bad_request_is_an_error_response_not_a_crash() {
+        let (c, _) = serving_coordinator(128, 1024, 53);
+        let (server, client) = GemvServer::start(c, default_batcher(4));
+        let resp = client.call(vec![0i8; 77]).unwrap(); // wrong length
+        assert!(resp.y.is_err());
+        // Server still serves afterwards.
+        let ok = client.call(vec![1i8; 1024]).unwrap();
+        assert!(ok.y.is_ok());
+        let (_, metrics) = server.shutdown();
+        assert_eq!(metrics.errors, 1);
+        assert_eq!(metrics.requests, 2);
+    }
+
+    #[test]
+    fn shutdown_drains_pending_requests() {
+        let (c, _) = serving_coordinator(128, 1024, 54);
+        let (server, client) = GemvServer::start(c, default_batcher(8));
+        let rxs: Vec<_> = (0..5).map(|_| client.submit(vec![2i8; 1024])).collect();
+        let (_, metrics) = server.shutdown();
+        assert_eq!(metrics.requests, 5);
+        for rx in rxs {
+            assert!(rx.recv().unwrap().y.is_ok());
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Matrix residency tracking — the distinction behind the paper's
+//! GEMV-V ("matrix already resident in UPMEM memory, common in AI model
+//! inference") vs GEMV-MV scenarios.
+
+use crate::kernels::gemv::GemvVariant;
+
+/// What is currently loaded in the fleet's MRAM.
+#[derive(Debug, Clone)]
+pub struct MatrixState {
+    loaded: Option<LoadedMatrix>,
+    gemv_count: u64,
+    reload_count: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LoadedMatrix {
+    pub rows: u32,
+    pub cols: u32,
+    pub variant: GemvVariant,
+}
+
+impl Default for MatrixState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MatrixState {
+    pub fn new() -> MatrixState {
+        MatrixState { loaded: None, gemv_count: 0, reload_count: 0 }
+    }
+
+    pub fn mark_loaded(&mut self, rows: u32, cols: u32, variant: GemvVariant) {
+        if self.loaded.is_some() {
+            self.reload_count += 1;
+        }
+        self.loaded = Some(LoadedMatrix { rows, cols, variant });
+    }
+
+    pub fn record_gemv(&mut self) {
+        self.gemv_count += 1;
+    }
+
+    pub fn loaded(&self) -> Option<LoadedMatrix> {
+        self.loaded
+    }
+
+    pub fn is_resident(&self, rows: u32, cols: u32, variant: GemvVariant) -> bool {
+        self.loaded == Some(LoadedMatrix { rows, cols, variant })
+    }
+
+    pub fn gemv_count(&self) -> u64 {
+        self.gemv_count
+    }
+
+    pub fn reload_count(&self) -> u64 {
+        self.reload_count
+    }
+
+    /// Amortization ratio: GEMVs served per matrix load (the paper's
+    /// argument for excluding encode/transfer cost in GEMV-V).
+    pub fn amortization(&self) -> f64 {
+        let loads = 1 + self.reload_count;
+        self.gemv_count as f64 / loads as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residency_lifecycle() {
+        let mut s = MatrixState::new();
+        assert!(s.loaded().is_none());
+        s.mark_loaded(128, 1024, GemvVariant::I8Opt);
+        assert!(s.is_resident(128, 1024, GemvVariant::I8Opt));
+        assert!(!s.is_resident(128, 1024, GemvVariant::I4Bsdp));
+        s.record_gemv();
+        s.record_gemv();
+        assert_eq!(s.gemv_count(), 2);
+        assert_eq!(s.reload_count(), 0);
+        s.mark_loaded(256, 1024, GemvVariant::I8Opt);
+        assert_eq!(s.reload_count(), 1);
+        assert!((s.amortization() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,549 @@
+//! Two-pass textual assembler for the simulated UPMEM ISA.
+//!
+//! The syntax mirrors the paper's decompiled listings (Fig. 4): one
+//! instruction per line, `label:` definitions, `@label` references,
+//! optional fused `cond, @target` suffix on ALU-class instructions, and
+//! `;`/`#`/`//` comments. The assembler is used by tests, by the
+//! round-trip checks on [`super::builder`]-generated kernels, and by the
+//! `asm` sub-command of the CLI.
+//!
+//! ```text
+//! __mulsi3:
+//!   jgtu r1, r0, @swap       ; ensure multiplier = min(a, b)
+//!   ...
+//!   mul_step d0, r2, d0, 0, z, @exit
+//! ```
+
+use super::isa::*;
+use crate::util::error::Error;
+use crate::Result;
+use std::collections::HashMap;
+
+/// Assemble a program from text.
+pub fn assemble(src: &str) -> Result<Program> {
+    // Pass 1: collect labels (instruction indices).
+    let mut labels: HashMap<String, u32> = HashMap::new();
+    let mut ordered_labels: Vec<(String, u32)> = Vec::new();
+    let mut pc = 0u32;
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_suffix(':') {
+            let name = name.trim();
+            if name.is_empty() || !is_ident(name) {
+                return Err(err(lineno, format!("bad label '{name}'")));
+            }
+            if labels.insert(name.to_string(), pc).is_some() {
+                return Err(err(lineno, format!("duplicate label '{name}'")));
+            }
+            ordered_labels.push((name.to_string(), pc));
+        } else {
+            pc += 1;
+        }
+    }
+
+    // Pass 2: emit instructions.
+    let mut instrs = Vec::with_capacity(pc as usize);
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() || line.ends_with(':') {
+            continue;
+        }
+        instrs.push(parse_instr(line, lineno, &labels)?);
+    }
+    Ok(Program { instrs, labels: ordered_labels })
+}
+
+fn err(lineno: usize, msg: String) -> Error {
+    Error::Asm { line: lineno + 1, msg }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut end = line.len();
+    for pat in [";", "#", "//"] {
+        if let Some(i) = line.find(pat) {
+            end = end.min(i);
+        }
+    }
+    &line[..end]
+}
+
+fn is_ident(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        && !s.chars().next().unwrap().is_ascii_digit()
+}
+
+/// Operand tokens after the mnemonic.
+fn operands(rest: &str) -> Vec<String> {
+    rest.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+}
+
+fn parse_reg(tok: &str, lineno: usize) -> Result<Reg> {
+    if let Some(n) = tok.strip_prefix('r') {
+        if let Ok(i) = n.parse::<u8>() {
+            if i < Reg::NUM {
+                return Ok(Reg(i));
+            }
+        }
+    }
+    Err(err(lineno, format!("expected register r0..r23, got '{tok}'")))
+}
+
+fn parse_dreg(tok: &str, lineno: usize) -> Result<DReg> {
+    if let Some(n) = tok.strip_prefix('d') {
+        if let Ok(i) = n.parse::<u8>() {
+            if i < DReg::NUM {
+                return Ok(DReg(i));
+            }
+        }
+    }
+    Err(err(lineno, format!("expected d-register d0..d11, got '{tok}'")))
+}
+
+fn parse_imm(tok: &str, lineno: usize) -> Result<i32> {
+    let (neg, body) = match tok.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, tok),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x").or_else(|| body.strip_prefix("0X")) {
+        u32::from_str_radix(hex, 16).map(|v| v as i64)
+    } else {
+        body.parse::<u32>().map(|v| v as i64)
+    }
+    .map_err(|_| err(lineno, format!("bad immediate '{tok}'")))?;
+    let v = if neg { -v } else { v };
+    if v < i32::MIN as i64 || v > u32::MAX as i64 {
+        return Err(err(lineno, format!("immediate '{tok}' out of 32-bit range")));
+    }
+    Ok(v as i32)
+}
+
+fn parse_src(tok: &str, lineno: usize) -> Result<Src> {
+    match tok {
+        "zero" => return Ok(Src::Zero),
+        "one" => return Ok(Src::One),
+        "lneg" => return Ok(Src::Lneg),
+        "id" => return Ok(Src::Id),
+        "id2" => return Ok(Src::Id2),
+        "id4" => return Ok(Src::Id4),
+        "id8" => return Ok(Src::Id8),
+        _ => {}
+    }
+    if tok.starts_with('r') && parse_reg(tok, lineno).is_ok() {
+        return Ok(Src::Reg(parse_reg(tok, lineno)?));
+    }
+    Ok(Src::Imm(parse_imm(tok, lineno)?))
+}
+
+fn parse_label(tok: &str, lineno: usize, labels: &HashMap<String, u32>) -> Result<u32> {
+    let name = tok
+        .strip_prefix('@')
+        .ok_or_else(|| err(lineno, format!("expected @label, got '{tok}'")))?;
+    // `@<number>` is an absolute instruction index — emitted by the
+    // disassembler, accepted for round-tripping.
+    if let Ok(pc) = name.parse::<u32>() {
+        return Ok(pc);
+    }
+    labels
+        .get(name)
+        .copied()
+        .ok_or_else(|| err(lineno, format!("unknown label '{name}'")))
+}
+
+fn parse_cond(tok: &str, lineno: usize) -> Result<Cond> {
+    match tok {
+        "true" => Ok(Cond::True),
+        "z" => Ok(Cond::Z),
+        "nz" => Ok(Cond::Nz),
+        "neg" => Ok(Cond::Neg),
+        "pos" => Ok(Cond::Pos),
+        _ => Err(err(lineno, format!("unknown condition '{tok}'"))),
+    }
+}
+
+/// Parse a trailing `cond, @target` pair if present at `ops[i..]`.
+fn parse_cj(
+    ops: &[String],
+    i: usize,
+    lineno: usize,
+    labels: &HashMap<String, u32>,
+) -> Result<CondJump> {
+    match ops.len() - i {
+        0 => Ok(None),
+        2 => {
+            let c = parse_cond(&ops[i], lineno)?;
+            let t = parse_label(&ops[i + 1], lineno, labels)?;
+            Ok(Some((c, t)))
+        }
+        n => Err(err(lineno, format!("expected 'cond, @label' suffix, got {n} extra operands"))),
+    }
+}
+
+fn parse_instr(line: &str, lineno: usize, labels: &HashMap<String, u32>) -> Result<Instr> {
+    let (mn, rest) = match line.find(char::is_whitespace) {
+        Some(i) => (&line[..i], &line[i..]),
+        None => (line, ""),
+    };
+    let ops = operands(rest);
+    let need = |n: usize| -> Result<()> {
+        if ops.len() < n {
+            Err(err(lineno, format!("'{mn}' needs at least {n} operands, got {}", ops.len())))
+        } else {
+            Ok(())
+        }
+    };
+
+    let alu = |op: AluOp| -> Result<Instr> {
+        need(3)?;
+        Ok(Instr::Alu {
+            op,
+            rd: parse_reg(&ops[0], lineno)?,
+            ra: parse_reg(&ops[1], lineno)?,
+            b: parse_src(&ops[2], lineno)?,
+            cj: parse_cj(&ops, 3, lineno, labels)?,
+        })
+    };
+    let mul = |variant: MulVariant| -> Result<Instr> {
+        need(3)?;
+        Ok(Instr::Mul {
+            variant,
+            rd: parse_reg(&ops[0], lineno)?,
+            ra: parse_reg(&ops[1], lineno)?,
+            b: parse_src(&ops[2], lineno)?,
+            cj: parse_cj(&ops, 3, lineno, labels)?,
+        })
+    };
+    let load = |w: LoadWidth| -> Result<Instr> {
+        need(3)?;
+        Ok(Instr::Load {
+            w,
+            rd: parse_reg(&ops[0], lineno)?,
+            ra: parse_reg(&ops[1], lineno)?,
+            off: parse_imm(&ops[2], lineno)?,
+        })
+    };
+    let store = |w: StoreWidth| -> Result<Instr> {
+        need(3)?;
+        Ok(Instr::Store {
+            w,
+            ra: parse_reg(&ops[0], lineno)?,
+            off: parse_imm(&ops[1], lineno)?,
+            rs: parse_reg(&ops[2], lineno)?,
+        })
+    };
+    let jcmp = |cond: CmpCond| -> Result<Instr> {
+        need(3)?;
+        Ok(Instr::JCmp {
+            cond,
+            ra: parse_reg(&ops[0], lineno)?,
+            b: parse_src(&ops[1], lineno)?,
+            target: parse_label(&ops[2], lineno, labels)?,
+        })
+    };
+
+    match mn {
+        "move" => {
+            need(2)?;
+            Ok(Instr::Move {
+                rd: parse_reg(&ops[0], lineno)?,
+                src: parse_src(&ops[1], lineno)?,
+                cj: parse_cj(&ops, 2, lineno, labels)?,
+            })
+        }
+        "add" => alu(AluOp::Add),
+        "sub" => alu(AluOp::Sub),
+        "and" => alu(AluOp::And),
+        "or" => alu(AluOp::Or),
+        "xor" => alu(AluOp::Xor),
+        "lsl" => alu(AluOp::Lsl),
+        "lsr" => alu(AluOp::Lsr),
+        "asr" => alu(AluOp::Asr),
+        "mul_sl_sl" => mul(MulVariant::SlSl),
+        "mul_sl_sh" => mul(MulVariant::SlSh),
+        "mul_sh_sl" => mul(MulVariant::ShSl),
+        "mul_sh_sh" => mul(MulVariant::ShSh),
+        "mul_ul_ul" => mul(MulVariant::UlUl),
+        "mul_ul_uh" => mul(MulVariant::UlUh),
+        "mul_uh_ul" => mul(MulVariant::UhUl),
+        "mul_uh_uh" => mul(MulVariant::UhUh),
+        "mul_step" => {
+            // mul_step dd, ra, dd, shift [, cond, @label]
+            need(4)?;
+            let dd = parse_dreg(&ops[0], lineno)?;
+            let ra = parse_reg(&ops[1], lineno)?;
+            let dd2 = parse_dreg(&ops[2], lineno)?;
+            if dd != dd2 {
+                return Err(err(lineno, "mul_step source and dest d-reg must match".into()));
+            }
+            let shift = parse_imm(&ops[3], lineno)?;
+            if !(0..=31).contains(&shift) {
+                return Err(err(lineno, format!("mul_step shift {shift} out of 0..=31")));
+            }
+            Ok(Instr::MulStep {
+                dd,
+                ra,
+                shift: shift as u8,
+                cj: parse_cj(&ops, 4, lineno, labels)?,
+            })
+        }
+        "lsl_add" => {
+            // lsl_add rd, ra, rb, shift [, cond, @label]
+            need(4)?;
+            let shift = parse_imm(&ops[3], lineno)?;
+            if !(0..=31).contains(&shift) {
+                return Err(err(lineno, format!("lsl_add shift {shift} out of 0..=31")));
+            }
+            Ok(Instr::LslAdd {
+                rd: parse_reg(&ops[0], lineno)?,
+                ra: parse_reg(&ops[1], lineno)?,
+                rb: parse_reg(&ops[2], lineno)?,
+                shift: shift as u8,
+                cj: parse_cj(&ops, 4, lineno, labels)?,
+            })
+        }
+        "cao" => {
+            need(2)?;
+            Ok(Instr::Cao {
+                rd: parse_reg(&ops[0], lineno)?,
+                ra: parse_reg(&ops[1], lineno)?,
+                cj: parse_cj(&ops, 2, lineno, labels)?,
+            })
+        }
+        "lbs" => load(LoadWidth::B8s),
+        "lbu" => load(LoadWidth::B8u),
+        "lhs" => load(LoadWidth::B16s),
+        "lhu" => load(LoadWidth::B16u),
+        "lw" => load(LoadWidth::B32),
+        "ld" => {
+            need(3)?;
+            Ok(Instr::Ld {
+                dd: parse_dreg(&ops[0], lineno)?,
+                ra: parse_reg(&ops[1], lineno)?,
+                off: parse_imm(&ops[2], lineno)?,
+            })
+        }
+        "sb" => store(StoreWidth::B8),
+        "sh" => store(StoreWidth::B16),
+        "sw" => store(StoreWidth::B32),
+        "sd" => {
+            need(3)?;
+            Ok(Instr::Sd {
+                ra: parse_reg(&ops[0], lineno)?,
+                off: parse_imm(&ops[1], lineno)?,
+                ds: parse_dreg(&ops[2], lineno)?,
+            })
+        }
+        "jump" => {
+            need(1)?;
+            let target = if ops[0].starts_with('@') {
+                JumpTarget::Pc(parse_label(&ops[0], lineno, labels)?)
+            } else {
+                JumpTarget::Reg(parse_reg(&ops[0], lineno)?)
+            };
+            Ok(Instr::Jump { target })
+        }
+        "jeq" => jcmp(CmpCond::Eq),
+        "jneq" => jcmp(CmpCond::Neq),
+        "jltu" => jcmp(CmpCond::Ltu),
+        "jleu" => jcmp(CmpCond::Leu),
+        "jgtu" => jcmp(CmpCond::Gtu),
+        "jgeu" => jcmp(CmpCond::Geu),
+        "jlts" => jcmp(CmpCond::Lts),
+        "jles" => jcmp(CmpCond::Les),
+        "jgts" => jcmp(CmpCond::Gts),
+        "jges" => jcmp(CmpCond::Ges),
+        "jz" => {
+            need(2)?;
+            Ok(Instr::JCmp {
+                cond: CmpCond::Eq,
+                ra: parse_reg(&ops[0], lineno)?,
+                b: Src::Zero,
+                target: parse_label(&ops[1], lineno, labels)?,
+            })
+        }
+        "jnz" => {
+            need(2)?;
+            Ok(Instr::JCmp {
+                cond: CmpCond::Neq,
+                ra: parse_reg(&ops[0], lineno)?,
+                b: Src::Zero,
+                target: parse_label(&ops[1], lineno, labels)?,
+            })
+        }
+        "call" => {
+            need(2)?;
+            Ok(Instr::Call {
+                link: parse_reg(&ops[0], lineno)?,
+                target: parse_label(&ops[1], lineno, labels)?,
+            })
+        }
+        "ldma" | "sdma" => {
+            need(3)?;
+            let wram = parse_reg(&ops[0], lineno)?;
+            let mram = parse_reg(&ops[1], lineno)?;
+            let bytes = parse_imm(&ops[2], lineno)?;
+            if bytes <= 0 {
+                return Err(err(lineno, format!("{mn} size must be positive")));
+            }
+            let bytes = bytes as u32;
+            Ok(if mn == "ldma" {
+                Instr::Ldma { wram, mram, bytes }
+            } else {
+                Instr::Sdma { wram, mram, bytes }
+            })
+        }
+        "barrier" => Ok(Instr::Barrier),
+        "time" => {
+            need(1)?;
+            Ok(Instr::Time { rd: parse_reg(&ops[0], lineno)? })
+        }
+        "stop" => Ok(Instr::Stop),
+        "fault" => Ok(Instr::Fault),
+        "nop" => Ok(Instr::Nop),
+        _ => Err(err(lineno, format!("unknown mnemonic '{mn}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_resolve_forward_and_backward() {
+        let p = assemble(
+            "start:\n\
+             jump @end\n\
+             mid:\n\
+             nop\n\
+             jump @start\n\
+             end:\n\
+             stop\n",
+        )
+        .unwrap();
+        assert_eq!(p.label("start"), Some(0));
+        assert_eq!(p.label("mid"), Some(1));
+        assert_eq!(p.label("end"), Some(3));
+        assert_eq!(p.instrs[0], Instr::Jump { target: JumpTarget::Pc(3) });
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let p = assemble(
+            "; full-line comment\n\
+             \n\
+             move r0, 1   // trailing\n\
+             add r0, r0, 2 # other style\n\
+             stop\n",
+        )
+        .unwrap();
+        assert_eq!(p.instrs.len(), 3);
+    }
+
+    #[test]
+    fn constant_register_sources() {
+        let p = assemble("move r0, zero\nmove r1, lneg\nadd r2, r2, id8\nstop\n").unwrap();
+        assert_eq!(p.instrs[0], Instr::Move { rd: Reg(0), src: Src::Zero, cj: None });
+        assert_eq!(p.instrs[1], Instr::Move { rd: Reg(1), src: Src::Lneg, cj: None });
+        assert_eq!(
+            p.instrs[2],
+            Instr::Alu { op: AluOp::Add, rd: Reg(2), ra: Reg(2), b: Src::Id8, cj: None }
+        );
+    }
+
+    #[test]
+    fn hex_and_negative_immediates() {
+        let p = assemble("move r0, 0x10\nmove r1, -3\nmove r2, 0xFFFFFFFF\nstop\n").unwrap();
+        assert_eq!(p.instrs[0], Instr::Move { rd: Reg(0), src: Src::Imm(16), cj: None });
+        assert_eq!(p.instrs[1], Instr::Move { rd: Reg(1), src: Src::Imm(-3), cj: None });
+        assert_eq!(p.instrs[2], Instr::Move { rd: Reg(2), src: Src::Imm(-1), cj: None });
+    }
+
+    #[test]
+    fn fused_condition_suffix() {
+        let p = assemble("t:\nsub r0, r0, 1, nz, @t\nstop\n").unwrap();
+        assert_eq!(
+            p.instrs[0],
+            Instr::Alu {
+                op: AluOp::Sub,
+                rd: Reg(0),
+                ra: Reg(0),
+                b: Src::Imm(1),
+                cj: Some((Cond::Nz, 0)),
+            }
+        );
+    }
+
+    #[test]
+    fn mulsi3_style_listing_parses() {
+        // The exact shape of the paper's Fig. 4.
+        let src = "\
+            jgtu r1, r0, @__mulsi3_swap\n\
+            move r2, r0\n\
+            jump @__mulsi3_start\n\
+            __mulsi3_swap:\n\
+            move r2, r1\n\
+            move r0, r0\n\
+            __mulsi3_start:\n\
+            move r1, zero\n\
+            mul_step d0, r2, d0, 0, z, @__mulsi3_exit\n\
+            mul_step d0, r2, d0, 1, z, @__mulsi3_exit\n\
+            __mulsi3_exit:\n\
+            move r0, r1\n\
+            stop\n";
+        let p = assemble(src).unwrap();
+        assert_eq!(p.instrs.len(), 10);
+        assert_eq!(p.label("__mulsi3_exit"), Some(8));
+        assert!(matches!(p.instrs[6], Instr::MulStep { shift: 0, cj: Some((Cond::Z, 8)), .. }));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = assemble("move r0, 1\nbogus r1\n").unwrap_err();
+        match e {
+            Error::Asm { line, msg } => {
+                assert_eq!(line, 2);
+                assert!(msg.contains("bogus"));
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn unknown_label_rejected() {
+        let e = assemble("jump @nowhere\n").unwrap_err();
+        assert!(matches!(e, Error::Asm { .. }));
+    }
+
+    #[test]
+    fn duplicate_label_rejected() {
+        let e = assemble("a:\nnop\na:\nstop\n").unwrap_err();
+        assert!(matches!(e, Error::Asm { .. }));
+    }
+
+    #[test]
+    fn mul_step_shift_range_checked() {
+        assert!(assemble("mul_step d0, r2, d0, 32\n").is_err());
+        assert!(assemble("mul_step d0, r2, d1, 0\n").is_err()); // mismatched d
+        assert!(assemble("mul_step d0, r2, d0, 31\nstop\n").is_ok());
+    }
+
+    #[test]
+    fn disasm_reassembles_equivalently() {
+        let src = "\
+            begin:\n\
+            move r0, 5\n\
+            lsl_add r1, r0, r0, 3\n\
+            cao r2, r1\n\
+            mul_sl_sl r3, r2, r0\n\
+            jltu r3, 100, @begin\n\
+            ld d2, r0, 8\n\
+            sd r0, 16, d2\n\
+            stop\n";
+        let p1 = assemble(src).unwrap();
+        let p2 = assemble(&p1.disasm()).unwrap();
+        assert_eq!(p1.instrs, p2.instrs);
+    }
+}

@@ -1,0 +1,355 @@
+//! Programmatic codegen for DPU programs.
+//!
+//! [`ProgramBuilder`] is the API `crate::kernels` uses to emit both the
+//! "what the UPMEM compiler produces" baselines and the paper's
+//! hand-optimized versions. Labels are created first ([`Self::new_label`])
+//! and bound later ([`Self::bind`]); unresolved references are patched at
+//! [`Self::build`] time, which fails loudly on unbound labels.
+
+use super::isa::*;
+use crate::util::error::Error;
+use crate::Result;
+
+/// A forward-declarable label handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Label(usize);
+
+#[derive(Debug, Default)]
+pub struct ProgramBuilder {
+    instrs: Vec<Instr>,
+    /// label id → bound pc (u32::MAX = unbound).
+    label_pcs: Vec<u32>,
+    label_names: Vec<String>,
+    /// (instr index, label id) pairs to patch.
+    patches: Vec<(usize, usize)>,
+}
+
+const UNBOUND: u32 = u32::MAX;
+
+impl ProgramBuilder {
+    pub fn new() -> ProgramBuilder {
+        ProgramBuilder::default()
+    }
+
+    /// Create a fresh label (unbound).
+    pub fn new_label(&mut self, name: &str) -> Label {
+        self.label_pcs.push(UNBOUND);
+        self.label_names.push(name.to_string());
+        Label(self.label_pcs.len() - 1)
+    }
+
+    /// Bind a label to the current position.
+    pub fn bind(&mut self, l: Label) {
+        assert_eq!(self.label_pcs[l.0], UNBOUND, "label '{}' bound twice", self.label_names[l.0]);
+        self.label_pcs[l.0] = self.instrs.len() as u32;
+    }
+
+    /// Convenience: create + bind at the current position.
+    pub fn here(&mut self, name: &str) -> Label {
+        let l = self.new_label(name);
+        self.bind(l);
+        l
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    fn push(&mut self, i: Instr) {
+        self.instrs.push(i);
+    }
+
+    /// Push an instruction whose `CondJump` references `label`; the pc is
+    /// patched at build time.
+    fn push_cj(&mut self, mut i: Instr, label: Label) {
+        // Store the label id in the pc slot; remember to patch.
+        let idx = self.instrs.len();
+        match &mut i {
+            Instr::Move { cj, .. }
+            | Instr::Alu { cj, .. }
+            | Instr::Mul { cj, .. }
+            | Instr::MulStep { cj, .. }
+            | Instr::LslAdd { cj, .. }
+            | Instr::Cao { cj, .. } => {
+                let (c, _) = cj.expect("push_cj on unconditional instr");
+                *cj = Some((c, label.0 as u32));
+            }
+            Instr::Jump { target } => *target = JumpTarget::Pc(label.0 as u32),
+            Instr::JCmp { target, .. } | Instr::Call { target, .. } => *target = label.0 as u32,
+            other => panic!("push_cj on non-jumping instruction {other:?}"),
+        }
+        self.patches.push((idx, label.0));
+        self.instrs.push(i);
+    }
+
+    // ---- emit helpers ----------------------------------------------------
+
+    pub fn move_(&mut self, rd: Reg, src: impl Into<Src>) {
+        self.push(Instr::Move { rd, src: src.into(), cj: None });
+    }
+
+    pub fn move_cj(&mut self, rd: Reg, src: impl Into<Src>, c: Cond, l: Label) {
+        self.push_cj(Instr::Move { rd, src: src.into(), cj: Some((c, 0)) }, l);
+    }
+
+    pub fn alu(&mut self, op: AluOp, rd: Reg, ra: Reg, b: impl Into<Src>) {
+        self.push(Instr::Alu { op, rd, ra, b: b.into(), cj: None });
+    }
+
+    pub fn alu_cj(&mut self, op: AluOp, rd: Reg, ra: Reg, b: impl Into<Src>, c: Cond, l: Label) {
+        self.push_cj(Instr::Alu { op, rd, ra, b: b.into(), cj: Some((c, 0)) }, l);
+    }
+
+    pub fn add(&mut self, rd: Reg, ra: Reg, b: impl Into<Src>) {
+        self.alu(AluOp::Add, rd, ra, b);
+    }
+
+    pub fn sub(&mut self, rd: Reg, ra: Reg, b: impl Into<Src>) {
+        self.alu(AluOp::Sub, rd, ra, b);
+    }
+
+    pub fn and(&mut self, rd: Reg, ra: Reg, b: impl Into<Src>) {
+        self.alu(AluOp::And, rd, ra, b);
+    }
+
+    pub fn or(&mut self, rd: Reg, ra: Reg, b: impl Into<Src>) {
+        self.alu(AluOp::Or, rd, ra, b);
+    }
+
+    pub fn xor(&mut self, rd: Reg, ra: Reg, b: impl Into<Src>) {
+        self.alu(AluOp::Xor, rd, ra, b);
+    }
+
+    pub fn lsl(&mut self, rd: Reg, ra: Reg, b: impl Into<Src>) {
+        self.alu(AluOp::Lsl, rd, ra, b);
+    }
+
+    pub fn lsr(&mut self, rd: Reg, ra: Reg, b: impl Into<Src>) {
+        self.alu(AluOp::Lsr, rd, ra, b);
+    }
+
+    pub fn asr(&mut self, rd: Reg, ra: Reg, b: impl Into<Src>) {
+        self.alu(AluOp::Asr, rd, ra, b);
+    }
+
+    pub fn mul(&mut self, v: MulVariant, rd: Reg, ra: Reg, b: impl Into<Src>) {
+        self.push(Instr::Mul { variant: v, rd, ra, b: b.into(), cj: None });
+    }
+
+    pub fn mul_step(&mut self, dd: DReg, ra: Reg, shift: u8) {
+        self.push(Instr::MulStep { dd, ra, shift, cj: None });
+    }
+
+    pub fn mul_step_z(&mut self, dd: DReg, ra: Reg, shift: u8, exit: Label) {
+        self.push_cj(Instr::MulStep { dd, ra, shift, cj: Some((Cond::Z, 0)) }, exit);
+    }
+
+    pub fn lsl_add(&mut self, rd: Reg, ra: Reg, rb: Reg, shift: u8) {
+        self.push(Instr::LslAdd { rd, ra, rb, shift, cj: None });
+    }
+
+    pub fn cao(&mut self, rd: Reg, ra: Reg) {
+        self.push(Instr::Cao { rd, ra, cj: None });
+    }
+
+    pub fn load(&mut self, w: LoadWidth, rd: Reg, ra: Reg, off: i32) {
+        self.push(Instr::Load { w, rd, ra, off });
+    }
+
+    pub fn lbs(&mut self, rd: Reg, ra: Reg, off: i32) {
+        self.load(LoadWidth::B8s, rd, ra, off);
+    }
+
+    pub fn lbu(&mut self, rd: Reg, ra: Reg, off: i32) {
+        self.load(LoadWidth::B8u, rd, ra, off);
+    }
+
+    pub fn lw(&mut self, rd: Reg, ra: Reg, off: i32) {
+        self.load(LoadWidth::B32, rd, ra, off);
+    }
+
+    pub fn ld(&mut self, dd: DReg, ra: Reg, off: i32) {
+        self.push(Instr::Ld { dd, ra, off });
+    }
+
+    pub fn store(&mut self, w: StoreWidth, ra: Reg, off: i32, rs: Reg) {
+        self.push(Instr::Store { w, ra, off, rs });
+    }
+
+    pub fn sb(&mut self, ra: Reg, off: i32, rs: Reg) {
+        self.store(StoreWidth::B8, ra, off, rs);
+    }
+
+    pub fn sw(&mut self, ra: Reg, off: i32, rs: Reg) {
+        self.store(StoreWidth::B32, ra, off, rs);
+    }
+
+    pub fn sd(&mut self, ra: Reg, off: i32, ds: DReg) {
+        self.push(Instr::Sd { ra, off, ds });
+    }
+
+    pub fn jump(&mut self, l: Label) {
+        self.push_cj(Instr::Jump { target: JumpTarget::Pc(0) }, l);
+    }
+
+    pub fn jump_reg(&mut self, r: Reg) {
+        self.push(Instr::Jump { target: JumpTarget::Reg(r) });
+    }
+
+    pub fn jcmp(&mut self, cond: CmpCond, ra: Reg, b: impl Into<Src>, l: Label) {
+        self.push_cj(Instr::JCmp { cond, ra, b: b.into(), target: 0 }, l);
+    }
+
+    pub fn call(&mut self, link: Reg, l: Label) {
+        self.push_cj(Instr::Call { link, target: 0 }, l);
+    }
+
+    pub fn ldma(&mut self, wram: Reg, mram: Reg, bytes: u32) {
+        self.push(Instr::Ldma { wram, mram, bytes });
+    }
+
+    pub fn sdma(&mut self, wram: Reg, mram: Reg, bytes: u32) {
+        self.push(Instr::Sdma { wram, mram, bytes });
+    }
+
+    pub fn barrier(&mut self) {
+        self.push(Instr::Barrier);
+    }
+
+    pub fn time(&mut self, rd: Reg) {
+        self.push(Instr::Time { rd });
+    }
+
+    pub fn stop(&mut self) {
+        self.push(Instr::Stop);
+    }
+
+    pub fn nop(&mut self) {
+        self.push(Instr::Nop);
+    }
+
+    pub fn fault(&mut self) {
+        self.push(Instr::Fault);
+    }
+
+    /// Resolve all label references and produce the program.
+    pub fn build(self) -> Result<Program> {
+        let mut instrs = self.instrs;
+        for (idx, label_id) in &self.patches {
+            let pc = self.label_pcs[*label_id];
+            if pc == UNBOUND {
+                return Err(Error::Asm {
+                    line: 0,
+                    msg: format!("unbound label '{}'", self.label_names[*label_id]),
+                });
+            }
+            match &mut instrs[*idx] {
+                Instr::Move { cj: Some((_, t)), .. }
+                | Instr::Alu { cj: Some((_, t)), .. }
+                | Instr::Mul { cj: Some((_, t)), .. }
+                | Instr::MulStep { cj: Some((_, t)), .. }
+                | Instr::LslAdd { cj: Some((_, t)), .. }
+                | Instr::Cao { cj: Some((_, t)), .. }
+                | Instr::JCmp { target: t, .. }
+                | Instr::Call { target: t, .. } => *t = pc,
+                Instr::Jump { target } => *target = JumpTarget::Pc(pc),
+                other => panic!("patch target not a jumping instruction: {other:?}"),
+            }
+        }
+        let labels = self
+            .label_names
+            .into_iter()
+            .zip(self.label_pcs)
+            .filter(|(_, pc)| *pc != UNBOUND)
+            .collect();
+        Ok(Program { instrs, labels })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::Dpu;
+
+    #[test]
+    fn forward_label_patching() {
+        let mut b = ProgramBuilder::new();
+        let end = b.new_label("end");
+        b.move_(Reg(0), 1);
+        b.jump(end);
+        b.fault();
+        b.bind(end);
+        b.stop();
+        let p = b.build().unwrap();
+        assert_eq!(p.instrs[1], Instr::Jump { target: JumpTarget::Pc(3) });
+        // Runs without hitting the fault.
+        let mut dpu = Dpu::new();
+        dpu.load_program(&p).unwrap();
+        dpu.launch(1).unwrap();
+    }
+
+    #[test]
+    fn unbound_label_fails_build() {
+        let mut b = ProgramBuilder::new();
+        let l = b.new_label("dangling");
+        b.jump(l);
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn backward_loop_via_here() {
+        // r0 = 10; do { r0 -= 1 } while (r0 != 0); store r0
+        let mut b = ProgramBuilder::new();
+        b.move_(Reg(0), 10);
+        let top = b.here("top");
+        b.sub(Reg(0), Reg(0), 1);
+        b.jcmp(CmpCond::Neq, Reg(0), Src::Zero, top);
+        b.move_(Reg(1), 0);
+        b.sw(Reg(1), 0, Reg(0));
+        b.stop();
+        let p = b.build().unwrap();
+        let mut dpu = Dpu::new();
+        dpu.load_program(&p).unwrap();
+        let r = dpu.launch(1).unwrap();
+        assert_eq!(dpu.wram.load32(0).unwrap(), 0);
+        // 1 move + 10×(sub+jcmp) + move + sw + stop
+        assert_eq!(r.instrs, 1 + 20 + 3);
+    }
+
+    #[test]
+    fn builder_output_matches_assembler() {
+        let mut b = ProgramBuilder::new();
+        let exit = b.new_label("exit");
+        b.move_(Reg(1), Src::Zero);
+        b.mul_step_z(DReg(0), Reg(2), 0, exit);
+        b.mul_step_z(DReg(0), Reg(2), 1, exit);
+        b.bind(exit);
+        b.move_(Reg(0), Reg(1));
+        b.stop();
+        let built = b.build().unwrap();
+        let asm = crate::dpu::assemble(
+            "move r1, zero\n\
+             mul_step d0, r2, d0, 0, z, @exit\n\
+             mul_step d0, r2, d0, 1, z, @exit\n\
+             exit:\n\
+             move r0, r1\n\
+             stop\n",
+        )
+        .unwrap();
+        assert_eq!(built.instrs, asm.instrs);
+    }
+
+    #[test]
+    #[should_panic(expected = "bound twice")]
+    fn double_bind_panics() {
+        let mut b = ProgramBuilder::new();
+        let l = b.new_label("x");
+        b.bind(l);
+        b.nop();
+        b.bind(l);
+    }
+}

@@ -1,0 +1,69 @@
+//! MRAM↔WRAM DMA latency model.
+//!
+//! Each DPU owns a private bus to its MRAM bank. A DMA transfer blocks
+//! the issuing tasklet (not the whole pipeline). The cost model follows
+//! the measurements published for UPMEM-v1B (Gómez-Luna et al., IEEE
+//! Access 2022): a fixed setup cost plus a per-8-byte beat, giving
+//! ≈ 2.7 GB/s streaming bandwidth for 2 KB transfers at 400 MHz and the
+//! documented inefficiency of small transfers.
+
+use super::DMA_MAX_BYTES;
+use crate::util::error::FaultKind;
+
+/// Fixed DMA setup latency in cycles (command issue + row activation).
+pub const DMA_SETUP_CYCLES: u64 = 24;
+
+/// Cycles per 8-byte beat on the private DPU↔MRAM bus.
+pub const DMA_CYCLES_PER_8B: u64 = 1;
+
+/// Validate a DMA request and return its duration in cycles.
+///
+/// UPMEM requires MRAM addresses and lengths to be 8-byte aligned and
+/// transfers capped at 2 KB; violations fault the DPU.
+pub fn dma_cycles(wram_addr: u32, mram_addr: u32, bytes: u32) -> Result<u64, FaultKind> {
+    if bytes == 0 || bytes % 8 != 0 || bytes > DMA_MAX_BYTES {
+        return Err(FaultKind::DmaAlignment);
+    }
+    if wram_addr % 8 != 0 || mram_addr % 8 != 0 {
+        return Err(FaultKind::DmaAlignment);
+    }
+    Ok(DMA_SETUP_CYCLES + DMA_CYCLES_PER_8B * (bytes as u64 / 8))
+}
+
+/// Effective bandwidth of a transfer of `bytes` (bytes/second), for
+/// reporting and for the analytic GEMV model.
+pub fn effective_bandwidth(bytes: u32) -> f64 {
+    let cycles = dma_cycles(0, 0, bytes).expect("aligned") as f64;
+    bytes as f64 / (cycles / super::CLOCK_HZ as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_rules() {
+        assert_eq!(dma_cycles(0, 0, 0).unwrap_err(), FaultKind::DmaAlignment);
+        assert_eq!(dma_cycles(0, 0, 12).unwrap_err(), FaultKind::DmaAlignment);
+        assert_eq!(dma_cycles(4, 0, 8).unwrap_err(), FaultKind::DmaAlignment);
+        assert_eq!(dma_cycles(0, 4, 8).unwrap_err(), FaultKind::DmaAlignment);
+        assert_eq!(dma_cycles(0, 0, 4096).unwrap_err(), FaultKind::DmaAlignment);
+        assert!(dma_cycles(8, 16, 2048).is_ok());
+    }
+
+    #[test]
+    fn cost_is_setup_plus_beats() {
+        assert_eq!(dma_cycles(0, 0, 8).unwrap(), DMA_SETUP_CYCLES + 1);
+        assert_eq!(dma_cycles(0, 0, 1024).unwrap(), DMA_SETUP_CYCLES + 128);
+    }
+
+    #[test]
+    fn large_transfers_amortize_setup() {
+        // 2 KB streaming ≈ 2.9 GB/s; 8 B transfers are dominated by setup.
+        let big = effective_bandwidth(2048);
+        let small = effective_bandwidth(8);
+        assert!(big > 2.5e9 && big < 3.5e9, "big={big}");
+        assert!(small < 0.2e9, "small={small}");
+        assert!(big / small > 15.0);
+    }
+}

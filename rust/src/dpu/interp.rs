@@ -1,0 +1,559 @@
+//! The DPU executor: functional semantics + cycle accounting.
+//!
+//! [`Dpu::launch`] runs a loaded [`Program`] with a given number of
+//! tasklets to completion (all tasklets `stop`ped), returning wall
+//! cycles, dynamic instruction counts and DMA traffic. Faults surface as
+//! [`Error::Fault`] with the offending tasklet and PC.
+
+use super::dma::dma_cycles;
+use super::isa::{CondJump, Instr, JumpTarget, LoadWidth, Program, StoreWidth};
+use super::memory::{Mram, Wram};
+use super::pipeline::Scheduler;
+use super::tasklet::Tasklet;
+use super::{IRAM_BYTES, NR_TASKLETS_MAX};
+use crate::util::error::{Error, FaultKind};
+use crate::Result;
+
+/// Default runaway-loop guard (cycles).
+pub const DEFAULT_CYCLE_LIMIT: u64 = 50_000_000_000;
+
+/// Execution statistics for one kernel launch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaunchResult {
+    /// Wall-clock cycles from launch to last tasklet stop.
+    pub cycles: u64,
+    /// Dynamic instructions issued (all tasklets).
+    pub instrs: u64,
+    /// Bytes moved MRAM→WRAM by `ldma`.
+    pub dma_read_bytes: u64,
+    /// Bytes moved WRAM→MRAM by `sdma`.
+    pub dma_write_bytes: u64,
+}
+
+impl LaunchResult {
+    /// Wall time in seconds at the 400 MHz DPU clock.
+    pub fn seconds(&self) -> f64 {
+        self.cycles as f64 / super::CLOCK_HZ as f64
+    }
+}
+
+/// One simulated DPU.
+#[derive(Debug, Clone)]
+pub struct Dpu {
+    pub wram: Wram,
+    pub mram: Mram,
+    program: Program,
+    /// Identifier used in fault reports (set by the host layer to the
+    /// global DPU index).
+    pub id: usize,
+    /// Runaway guard.
+    pub cycle_limit: u64,
+}
+
+impl Default for Dpu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dpu {
+    pub fn new() -> Dpu {
+        Dpu {
+            wram: Wram::new(),
+            mram: Mram::new(),
+            program: Program::default(),
+            id: 0,
+            cycle_limit: DEFAULT_CYCLE_LIMIT,
+        }
+    }
+
+    /// Load a program into IRAM. Fails if it does not fit (the paper's
+    /// `#pragma unroll` IRAM-overfill linker error).
+    pub fn load_program(&mut self, program: &Program) -> Result<()> {
+        if !program.fits_iram() {
+            return Err(Error::IramOverflow {
+                program_bytes: program.iram_bytes(),
+                iram_bytes: IRAM_BYTES,
+            });
+        }
+        self.program = program.clone();
+        Ok(())
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    /// Run the loaded program on `nr_tasklets` tasklets until all stop.
+    pub fn launch(&mut self, nr_tasklets: usize) -> Result<LaunchResult> {
+        assert!(
+            (1..=NR_TASKLETS_MAX).contains(&nr_tasklets),
+            "nr_tasklets must be in 1..=16"
+        );
+        let instrs: &[Instr] = &self.program.instrs;
+        if instrs.is_empty() {
+            return Err(Error::Coordinator("launch with empty program".into()));
+        }
+        let mut sched = Scheduler::new(nr_tasklets);
+        let mut ts: Vec<Tasklet> = (0..nr_tasklets).map(|i| Tasklet::new(i as u32)).collect();
+        let mut res = LaunchResult::default();
+        let mut stopped = 0usize;
+        let mut at_barrier = 0usize;
+        // §Perf iteration 2: reusable DMA staging buffer (no allocation
+        // per ldma/sdma on the hot path).
+        let mut dma_buf: Vec<u8> = Vec::with_capacity(super::DMA_MAX_BYTES as usize);
+
+        let fault = |kind: FaultKind, t: usize, pc: u32, id: usize| -> Error {
+            Error::Fault { dpu: id, tasklet: t, pc, kind }
+        };
+
+        while stopped < nr_tasklets {
+            let t = match sched.next_issue() {
+                Some(t) => t,
+                None => {
+                    // Everyone blocked but not all stopped: a barrier
+                    // deadlock would have been resolved below, so this
+                    // indicates a kernel bug.
+                    return Err(Error::Coordinator(format!(
+                        "DPU {}: deadlock — all tasklets blocked, {stopped}/{nr_tasklets} stopped",
+                        self.id
+                    )));
+                }
+            };
+            if sched.now > self.cycle_limit {
+                return Err(fault(FaultKind::CycleLimit, t, ts[t].pc, self.id));
+            }
+            let pc = ts[t].pc;
+            let Some(&instr) = instrs.get(pc as usize) else {
+                return Err(fault(FaultKind::PcOutOfBounds, t, pc, self.id));
+            };
+            res.instrs += 1;
+            let tk = &mut ts[t];
+            let mut next_pc = pc + 1;
+
+            #[inline]
+            fn cond_jump(cj: CondJump, result: u32, next_pc: &mut u32) {
+                if let Some((c, target)) = cj {
+                    if c.eval(result) {
+                        *next_pc = target;
+                    }
+                }
+            }
+
+            match instr {
+                Instr::Move { rd, src, cj } => {
+                    let v = tk.src(src);
+                    tk.set(rd, v);
+                    cond_jump(cj, v, &mut next_pc);
+                }
+                Instr::Alu { op, rd, ra, b, cj } => {
+                    let v = op.eval(tk.get(ra), tk.src(b));
+                    tk.set(rd, v);
+                    cond_jump(cj, v, &mut next_pc);
+                }
+                Instr::Mul { variant, rd, ra, b, cj } => {
+                    let v = variant.eval(tk.get(ra), tk.src(b));
+                    tk.set(rd, v);
+                    cond_jump(cj, v, &mut next_pc);
+                }
+                Instr::MulStep { dd, ra, shift, cj } => {
+                    let (mut lo, mut hi) = tk.get_d(dd);
+                    if lo & 1 != 0 {
+                        hi = hi.wrapping_add(tk.get(ra) << shift);
+                    }
+                    lo >>= 1;
+                    tk.set_d(dd, lo, hi);
+                    cond_jump(cj, lo, &mut next_pc);
+                }
+                Instr::LslAdd { rd, ra, rb, shift, cj } => {
+                    let v = tk.get(ra).wrapping_add(tk.get(rb) << shift);
+                    tk.set(rd, v);
+                    cond_jump(cj, v, &mut next_pc);
+                }
+                Instr::Cao { rd, ra, cj } => {
+                    let v = tk.get(ra).count_ones();
+                    tk.set(rd, v);
+                    cond_jump(cj, v, &mut next_pc);
+                }
+                Instr::Load { w, rd, ra, off } => {
+                    let addr = tk.get(ra).wrapping_add(off as u32);
+                    let v = match w {
+                        LoadWidth::B8s => self.wram.load8(addr).map(|b| b as i8 as i32 as u32),
+                        LoadWidth::B8u => self.wram.load8(addr).map(|b| b as u32),
+                        LoadWidth::B16s => self.wram.load16(addr).map(|h| h as i16 as i32 as u32),
+                        LoadWidth::B16u => self.wram.load16(addr).map(|h| h as u32),
+                        LoadWidth::B32 => self.wram.load32(addr),
+                    }
+                    .map_err(|k| fault(k, t, pc, self.id))?;
+                    tk.set(rd, v);
+                }
+                Instr::Ld { dd, ra, off } => {
+                    let addr = tk.get(ra).wrapping_add(off as u32);
+                    let v = self.wram.load64(addr).map_err(|k| fault(k, t, pc, self.id))?;
+                    tk.set_d(dd, v as u32, (v >> 32) as u32);
+                }
+                Instr::Store { w, ra, off, rs } => {
+                    let addr = tk.get(ra).wrapping_add(off as u32);
+                    let v = tk.get(rs);
+                    match w {
+                        StoreWidth::B8 => self.wram.store8(addr, v as u8),
+                        StoreWidth::B16 => self.wram.store16(addr, v as u16),
+                        StoreWidth::B32 => self.wram.store32(addr, v),
+                    }
+                    .map_err(|k| fault(k, t, pc, self.id))?;
+                }
+                Instr::Sd { ra, off, ds } => {
+                    let addr = tk.get(ra).wrapping_add(off as u32);
+                    let (lo, hi) = tk.get_d(ds);
+                    let v = (hi as u64) << 32 | lo as u64;
+                    self.wram.store64(addr, v).map_err(|k| fault(k, t, pc, self.id))?;
+                }
+                Instr::Jump { target } => {
+                    next_pc = match target {
+                        JumpTarget::Pc(p) => p,
+                        JumpTarget::Reg(r) => tk.get(r),
+                    };
+                }
+                Instr::JCmp { cond, ra, b, target } => {
+                    if cond.eval(tk.get(ra), tk.src(b)) {
+                        next_pc = target;
+                    }
+                }
+                Instr::Call { link, target } => {
+                    tk.set(link, pc + 1);
+                    next_pc = target;
+                }
+                Instr::Ldma { wram, mram, bytes } => {
+                    let waddr = tk.get(wram);
+                    let maddr = tk.get(mram);
+                    let cycles =
+                        dma_cycles(waddr, maddr, bytes).map_err(|k| fault(k, t, pc, self.id))?;
+                    dma_buf.clear();
+                    dma_buf.resize(bytes as usize, 0);
+                    self.mram.read(maddr, &mut dma_buf).map_err(|k| fault(k, t, pc, self.id))?;
+                    self.wram
+                        .write_bytes(waddr, &dma_buf)
+                        .map_err(|k| fault(k, t, pc, self.id))?;
+                    res.dma_read_bytes += bytes as u64;
+                    sched.stall(t, cycles);
+                }
+                Instr::Sdma { wram, mram, bytes } => {
+                    let waddr = tk.get(wram);
+                    let maddr = tk.get(mram);
+                    let cycles =
+                        dma_cycles(waddr, maddr, bytes).map_err(|k| fault(k, t, pc, self.id))?;
+                    dma_buf.clear();
+                    dma_buf.resize(bytes as usize, 0);
+                    self.wram
+                        .read_bytes(waddr, &mut dma_buf)
+                        .map_err(|k| fault(k, t, pc, self.id))?;
+                    self.mram.write(maddr, &dma_buf).map_err(|k| fault(k, t, pc, self.id))?;
+                    res.dma_write_bytes += bytes as u64;
+                    sched.stall(t, cycles);
+                }
+                Instr::Barrier => {
+                    tk.at_barrier = true;
+                    at_barrier += 1;
+                    sched.block(t);
+                    // Release once every still-running tasklet arrived.
+                    if at_barrier == nr_tasklets - stopped {
+                        let now = sched.now;
+                        for (i, other) in ts.iter_mut().enumerate() {
+                            if other.at_barrier {
+                                other.at_barrier = false;
+                                other.pc += 1; // fall through the barrier
+                                sched.wake(i, now);
+                            }
+                        }
+                        at_barrier = 0;
+                        continue; // pc already advanced for all waiters
+                    } else {
+                        // Parked: pc advanced on release above.
+                        continue;
+                    }
+                }
+                Instr::Time { rd } => {
+                    tk.set(rd, sched.now as u32);
+                }
+                Instr::Stop => {
+                    tk.stopped = true;
+                    stopped += 1;
+                    sched.block(t);
+                    // A stop may release a barrier the rest is waiting on.
+                    if at_barrier > 0 && at_barrier == nr_tasklets - stopped {
+                        let now = sched.now;
+                        for (i, other) in ts.iter_mut().enumerate() {
+                            if other.at_barrier {
+                                other.at_barrier = false;
+                                other.pc += 1;
+                                sched.wake(i, now);
+                            }
+                        }
+                        at_barrier = 0;
+                    }
+                    continue;
+                }
+                Instr::Fault => {
+                    return Err(fault(FaultKind::Explicit, t, pc, self.id));
+                }
+                Instr::Nop => {}
+            }
+            ts[t].pc = next_pc;
+        }
+        res.cycles = sched.now;
+        Ok(res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::asm::assemble;
+
+    fn run(src: &str, tasklets: usize) -> (Dpu, LaunchResult) {
+        let prog = assemble(src).expect("assembles");
+        let mut dpu = Dpu::new();
+        dpu.load_program(&prog).unwrap();
+        let r = dpu.launch(tasklets).expect("runs");
+        (dpu, r)
+    }
+
+    #[test]
+    fn move_add_store() {
+        let (dpu, r) = run(
+            "move r0, 5\n\
+             add r0, r0, 7\n\
+             move r1, 16\n\
+             sw r1, 0, r0\n\
+             stop\n",
+            1,
+        );
+        assert_eq!(dpu.wram.load32(16).unwrap(), 12);
+        assert_eq!(r.instrs, 5);
+    }
+
+    #[test]
+    fn conditional_alu_jump() {
+        // sub result zero triggers the fused z-jump, skipping the fault.
+        let (dpu, _) = run(
+            "move r0, 3\n\
+             sub r0, r0, 3, z, @ok\n\
+             fault\n\
+             ok:\n\
+             move r1, 1\n\
+             move r2, 32\n\
+             sw r2, 0, r1\n\
+             stop\n",
+            1,
+        );
+        assert_eq!(dpu.wram.load32(32).unwrap(), 1);
+    }
+
+    #[test]
+    fn loop_with_jcmp() {
+        // sum 1..=10 with a compare-jump loop
+        let (dpu, _) = run(
+            "move r0, 0\n\
+             move r1, 1\n\
+             loop:\n\
+             add r0, r0, r1\n\
+             add r1, r1, 1\n\
+             jleu r1, 10, @loop\n\
+             move r2, 64\n\
+             sw r2, 0, r0\n\
+             stop\n",
+            1,
+        );
+        assert_eq!(dpu.wram.load32(64).unwrap(), 55);
+    }
+
+    #[test]
+    fn mul_step_sequence_multiplies() {
+        // 13 * 11 via 4 mul_steps (11 = 0b1011 fits in 4 bits)
+        let (dpu, _) = run(
+            "move r0, 11\n\
+             move r1, 0\n\
+             move r2, 13\n\
+             mul_step d0, r2, d0, 0\n\
+             mul_step d0, r2, d0, 1\n\
+             mul_step d0, r2, d0, 2\n\
+             mul_step d0, r2, d0, 3\n\
+             move r3, 0\n\
+             sw r3, 0, r1\n\
+             stop\n",
+            1,
+        );
+        assert_eq!(dpu.wram.load32(0).unwrap(), 143);
+    }
+
+    #[test]
+    fn mul_step_early_exit_on_zero_multiplier() {
+        // multiplier 1: first step adds, shifts to 0, z-jump exits.
+        let (dpu, r) = run(
+            "move r0, 1\n\
+             move r1, 0\n\
+             move r2, 99\n\
+             mul_step d0, r2, d0, 0, z, @done\n\
+             fault\n\
+             done:\n\
+             move r3, 0\n\
+             sw r3, 0, r1\n\
+             stop\n",
+            1,
+        );
+        assert_eq!(dpu.wram.load32(0).unwrap(), 99);
+        assert_eq!(r.instrs, 7);
+    }
+
+    #[test]
+    fn call_and_return() {
+        let (dpu, _) = run(
+            "move r0, 7\n\
+             call r23, @double\n\
+             move r2, 0\n\
+             sw r2, 0, r0\n\
+             stop\n\
+             double:\n\
+             add r0, r0, r0\n\
+             jump r23\n",
+            1,
+        );
+        assert_eq!(dpu.wram.load32(0).unwrap(), 14);
+    }
+
+    #[test]
+    fn dma_roundtrip_and_accounting() {
+        let src = "move r0, 0\n\
+                   move r1, 1024\n\
+                   ldma r0, r1, 64\n\
+                   lw r2, r0, 0\n\
+                   add r2, r2, 1\n\
+                   sw r0, 0, r2\n\
+                   sdma r0, r1, 64\n\
+                   stop\n";
+        let prog = assemble(src).unwrap();
+        let mut dpu = Dpu::new();
+        dpu.mram.write_u32_slice(1024, &[41, 7]).unwrap();
+        dpu.load_program(&prog).unwrap();
+        let r = dpu.launch(1).unwrap();
+        assert_eq!(dpu.mram.read_u32_slice(1024, 2).unwrap(), vec![42, 7]);
+        assert_eq!(r.dma_read_bytes, 64);
+        assert_eq!(r.dma_write_bytes, 64);
+    }
+
+    #[test]
+    fn tasklet_ids_partition_work() {
+        // each tasklet writes its id to wram[id*4]
+        let (dpu, _) = run(
+            "move r0, id4\n\
+             move r1, id\n\
+             sw r0, 0, r1\n\
+             stop\n",
+            8,
+        );
+        for i in 0..8 {
+            assert_eq!(dpu.wram.load32(i * 4).unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        // tasklet 0 busy-loops 100 instrs then writes flag; others wait at
+        // the barrier; all then read the flag — barrier must order it.
+        let src = "move r2, 128\n\
+                   jneq r2, 128, @skip\n\
+                   move r3, id\n\
+                   jneq r3, 0, @wait\n\
+                   move r4, 0\n\
+                   spin:\n\
+                   add r4, r4, 1\n\
+                   jltu r4, 100, @spin\n\
+                   move r5, 1\n\
+                   sw r2, 0, r5\n\
+                   wait:\n\
+                   barrier\n\
+                   lw r6, r2, 0\n\
+                   jeq r6, 1, @good\n\
+                   fault\n\
+                   good:\n\
+                   skip:\n\
+                   stop\n";
+        let prog = assemble(src).unwrap();
+        let mut dpu = Dpu::new();
+        dpu.load_program(&prog).unwrap();
+        dpu.launch(8).expect("no fault: barrier ordered the flag write");
+    }
+
+    #[test]
+    fn stop_releases_barrier_waiters() {
+        // tasklet 1 stops immediately; tasklet 0 waits at a barrier that
+        // must release when the only other tasklet stops.
+        let src = "move r0, id\n\
+                   jeq r0, 0, @wait\n\
+                   stop\n\
+                   wait:\n\
+                   barrier\n\
+                   stop\n";
+        let prog = assemble(src).unwrap();
+        let mut dpu = Dpu::new();
+        dpu.load_program(&prog).unwrap();
+        dpu.launch(2).expect("barrier must release when peers stop");
+    }
+
+    #[test]
+    fn fault_reports_tasklet_and_pc() {
+        let prog = assemble("move r0, id\njeq r0, 3, @bad\nstop\nbad:\nfault\n").unwrap();
+        let mut dpu = Dpu::new();
+        dpu.id = 17;
+        dpu.load_program(&prog).unwrap();
+        let err = dpu.launch(8).unwrap_err();
+        match err {
+            Error::Fault { dpu: 17, tasklet: 3, pc: 3, kind: FaultKind::Explicit } => {}
+            other => panic!("unexpected error: {other}"),
+        }
+    }
+
+    #[test]
+    fn wram_oob_faults() {
+        let prog = assemble("move r0, 65536\nlw r1, r0, 0\nstop\n").unwrap();
+        let mut dpu = Dpu::new();
+        dpu.load_program(&prog).unwrap();
+        let err = dpu.launch(1).unwrap_err();
+        assert!(matches!(err, Error::Fault { kind: FaultKind::WramOutOfBounds, .. }));
+    }
+
+    #[test]
+    fn runaway_loop_hits_cycle_limit() {
+        let prog = assemble("loop:\njump @loop\n").unwrap();
+        let mut dpu = Dpu::new();
+        dpu.cycle_limit = 10_000;
+        dpu.load_program(&prog).unwrap();
+        let err = dpu.launch(1).unwrap_err();
+        assert!(matches!(err, Error::Fault { kind: FaultKind::CycleLimit, .. }));
+    }
+
+    #[test]
+    fn time_reads_monotonic_cycles() {
+        let (dpu, _) = run(
+            "time r0\n\
+             add r1, r1, 1\n\
+             add r1, r1, 1\n\
+             add r1, r1, 1\n\
+             time r2\n\
+             sub r3, r2, r0\n\
+             move r4, 0\n\
+             sw r4, 0, r3\n\
+             stop\n",
+            1,
+        );
+        // 4 issues between the two time reads at 11 cycles each.
+        assert_eq!(dpu.wram.load32(0).unwrap(), 44);
+    }
+
+    #[test]
+    fn iram_overflow_rejected_at_load() {
+        let prog = Program { instrs: vec![Instr::Nop; 5000], labels: vec![] };
+        let mut dpu = Dpu::new();
+        assert!(matches!(dpu.load_program(&prog), Err(Error::IramOverflow { .. })));
+    }
+}

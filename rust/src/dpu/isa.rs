@@ -1,0 +1,649 @@
+//! The simulated UPMEM ISA subset.
+//!
+//! Register model: 24 general-purpose 32-bit registers `r0..r23` per
+//! tasklet. Even/odd pairs form 64-bit `d` registers: `dN.low = r(2N)`,
+//! `dN.high = r(2N+1)` (this matches the paper's decompiled `__mulsi3`,
+//! where the multiplier lives in `d0.low` = `r0` and the accumulator in
+//! `d0.high` = `r1`). Read-only constant sources mirror UPMEM's constant
+//! register file: `zero`, `one`, `lneg` (-1), and the tasklet-id family
+//! `id`, `id2`, `id4`, `id8` (id pre-scaled by 2/4/8 for addressing).
+//!
+//! Most ALU instructions can carry an optional *(condition, target)*
+//! suffix evaluated on the instruction's result — UPMEM encodes
+//! conditions and a jump PC directly inside ALU instructions, which is
+//! why e.g. `mul_step d0, r2, d0, 3, z, @exit` both computes and
+//! branches in a single cycle.
+
+use std::fmt;
+
+/// A general-purpose register `r0..r23`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Reg(pub u8);
+
+impl Reg {
+    pub const NUM: u8 = 24;
+
+    pub fn new(i: u8) -> Reg {
+        assert!(i < Self::NUM, "register index {i} out of range");
+        Reg(i)
+    }
+}
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+/// A 64-bit register pair `d0..d11`; `dN` = (`r2N` low, `r2N+1` high).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DReg(pub u8);
+
+impl DReg {
+    pub const NUM: u8 = 12;
+
+    pub fn new(i: u8) -> DReg {
+        assert!(i < Self::NUM, "d-register index {i} out of range");
+        DReg(i)
+    }
+
+    /// The low 32-bit half.
+    pub fn lo(self) -> Reg {
+        Reg(self.0 * 2)
+    }
+
+    /// The high 32-bit half.
+    pub fn hi(self) -> Reg {
+        Reg(self.0 * 2 + 1)
+    }
+}
+
+impl fmt::Display for DReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "d{}", self.0)
+    }
+}
+
+/// A readable operand: general register, constant register, or immediate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Src {
+    Reg(Reg),
+    /// Constant 0 (`zero` register).
+    Zero,
+    /// Constant 1 (`one` register).
+    One,
+    /// Constant -1 (`lneg` register).
+    Lneg,
+    /// Tasklet id (0..NR_TASKLETS).
+    Id,
+    /// Tasklet id × 2.
+    Id2,
+    /// Tasklet id × 4.
+    Id4,
+    /// Tasklet id × 8.
+    Id8,
+    /// Signed 32-bit immediate.
+    Imm(i32),
+}
+
+impl From<Reg> for Src {
+    fn from(r: Reg) -> Src {
+        Src::Reg(r)
+    }
+}
+
+impl From<i32> for Src {
+    fn from(v: i32) -> Src {
+        Src::Imm(v)
+    }
+}
+
+impl fmt::Display for Src {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Src::Reg(r) => write!(f, "{r}"),
+            Src::Zero => write!(f, "zero"),
+            Src::One => write!(f, "one"),
+            Src::Lneg => write!(f, "lneg"),
+            Src::Id => write!(f, "id"),
+            Src::Id2 => write!(f, "id2"),
+            Src::Id4 => write!(f, "id4"),
+            Src::Id8 => write!(f, "id8"),
+            Src::Imm(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// Conditions evaluated on an ALU instruction's 32-bit result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cond {
+    /// Always.
+    True,
+    /// Result == 0.
+    Z,
+    /// Result != 0.
+    Nz,
+    /// Result, as i32, < 0.
+    Neg,
+    /// Result, as i32, >= 0.
+    Pos,
+}
+
+impl fmt::Display for Cond {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Cond::True => "true",
+            Cond::Z => "z",
+            Cond::Nz => "nz",
+            Cond::Neg => "neg",
+            Cond::Pos => "pos",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Compare conditions for fused compare-and-jump instructions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpCond {
+    Eq,
+    Neq,
+    /// Unsigned <, <=, >, >=.
+    Ltu,
+    Leu,
+    Gtu,
+    Geu,
+    /// Signed <, <=, >, >=.
+    Lts,
+    Les,
+    Gts,
+    Ges,
+}
+
+impl CmpCond {
+    pub fn eval(self, a: u32, b: u32) -> bool {
+        let (sa, sb) = (a as i32, b as i32);
+        match self {
+            CmpCond::Eq => a == b,
+            CmpCond::Neq => a != b,
+            CmpCond::Ltu => a < b,
+            CmpCond::Leu => a <= b,
+            CmpCond::Gtu => a > b,
+            CmpCond::Geu => a >= b,
+            CmpCond::Lts => sa < sb,
+            CmpCond::Les => sa <= sb,
+            CmpCond::Gts => sa > sb,
+            CmpCond::Ges => sa >= sb,
+        }
+    }
+}
+
+impl fmt::Display for CmpCond {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            CmpCond::Eq => "eq",
+            CmpCond::Neq => "neq",
+            CmpCond::Ltu => "ltu",
+            CmpCond::Leu => "leu",
+            CmpCond::Gtu => "gtu",
+            CmpCond::Geu => "geu",
+            CmpCond::Lts => "lts",
+            CmpCond::Les => "les",
+            CmpCond::Gts => "gts",
+            CmpCond::Ges => "ges",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Two-operand ALU operations (`rd = ra op b`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    And,
+    Or,
+    Xor,
+    /// Logical shift left (amount = b & 31).
+    Lsl,
+    /// Logical shift right.
+    Lsr,
+    /// Arithmetic shift right.
+    Asr,
+}
+
+impl AluOp {
+    pub fn eval(self, a: u32, b: u32) -> u32 {
+        match self {
+            AluOp::Add => a.wrapping_add(b),
+            AluOp::Sub => a.wrapping_sub(b),
+            AluOp::And => a & b,
+            AluOp::Or => a | b,
+            AluOp::Xor => a ^ b,
+            AluOp::Lsl => a << (b & 31),
+            AluOp::Lsr => a >> (b & 31),
+            AluOp::Asr => ((a as i32) >> (b & 31)) as u32,
+        }
+    }
+}
+
+impl fmt::Display for AluOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            AluOp::Add => "add",
+            AluOp::Sub => "sub",
+            AluOp::And => "and",
+            AluOp::Or => "or",
+            AluOp::Xor => "xor",
+            AluOp::Lsl => "lsl",
+            AluOp::Lsr => "lsr",
+            AluOp::Asr => "asr",
+        };
+        f.write_str(s)
+    }
+}
+
+/// The UPMEM one-cycle 8×8→16 multiply family. `Sl`/`Sh` select the
+/// signed low byte (bits 7:0) or signed high byte (bits 15:8) of an
+/// operand; `Ul`/`Uh` the unsigned counterparts. The 16-bit product is
+/// sign- (or zero-) extended into the 32-bit destination. This is the
+/// instruction the paper's §III-B shows the compiler *fails* to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MulVariant {
+    SlSl,
+    SlSh,
+    ShSl,
+    ShSh,
+    UlUl,
+    UlUh,
+    UhUl,
+    UhUh,
+}
+
+impl MulVariant {
+    /// Compute the product given the raw 32-bit operand values.
+    pub fn eval(self, a: u32, b: u32) -> u32 {
+        #[inline]
+        fn sl(x: u32) -> i32 {
+            x as u8 as i8 as i32
+        }
+        #[inline]
+        fn sh(x: u32) -> i32 {
+            (x >> 8) as u8 as i8 as i32
+        }
+        #[inline]
+        fn ul(x: u32) -> i32 {
+            (x & 0xFF) as i32
+        }
+        #[inline]
+        fn uh(x: u32) -> i32 {
+            ((x >> 8) & 0xFF) as i32
+        }
+        let p = match self {
+            MulVariant::SlSl => sl(a) * sl(b),
+            MulVariant::SlSh => sl(a) * sh(b),
+            MulVariant::ShSl => sh(a) * sl(b),
+            MulVariant::ShSh => sh(a) * sh(b),
+            MulVariant::UlUl => ul(a) * ul(b),
+            MulVariant::UlUh => ul(a) * uh(b),
+            MulVariant::UhUl => uh(a) * ul(b),
+            MulVariant::UhUh => uh(a) * uh(b),
+        };
+        p as u32
+    }
+}
+
+impl fmt::Display for MulVariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            MulVariant::SlSl => "mul_sl_sl",
+            MulVariant::SlSh => "mul_sl_sh",
+            MulVariant::ShSl => "mul_sh_sl",
+            MulVariant::ShSh => "mul_sh_sh",
+            MulVariant::UlUl => "mul_ul_ul",
+            MulVariant::UlUh => "mul_ul_uh",
+            MulVariant::UhUl => "mul_uh_ul",
+            MulVariant::UhUh => "mul_uh_uh",
+        };
+        f.write_str(s)
+    }
+}
+
+/// WRAM load widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadWidth {
+    /// `lbs` — byte, sign-extended.
+    B8s,
+    /// `lbu` — byte, zero-extended.
+    B8u,
+    /// `lhs` — halfword, sign-extended.
+    B16s,
+    /// `lhu` — halfword, zero-extended.
+    B16u,
+    /// `lw` — word.
+    B32,
+}
+
+impl LoadWidth {
+    pub fn bytes(self) -> u32 {
+        match self {
+            LoadWidth::B8s | LoadWidth::B8u => 1,
+            LoadWidth::B16s | LoadWidth::B16u => 2,
+            LoadWidth::B32 => 4,
+        }
+    }
+}
+
+/// WRAM store widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreWidth {
+    B8,
+    B16,
+    B32,
+}
+
+impl StoreWidth {
+    pub fn bytes(self) -> u32 {
+        match self {
+            StoreWidth::B8 => 1,
+            StoreWidth::B16 => 2,
+            StoreWidth::B32 => 4,
+        }
+    }
+}
+
+/// Jump target: a resolved instruction index or a register holding one
+/// (register targets implement `return` from `call`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JumpTarget {
+    Pc(u32),
+    Reg(Reg),
+}
+
+impl fmt::Display for JumpTarget {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JumpTarget::Pc(pc) => write!(f, "@{pc}"),
+            JumpTarget::Reg(r) => write!(f, "{r}"),
+        }
+    }
+}
+
+/// An optional fused (condition, jump-pc) suffix on ALU instructions.
+pub type CondJump = Option<(Cond, u32)>;
+
+/// One simulated instruction. Every variant executes in a single issue
+/// slot (1 dispatch cycle) except `Ldma`/`Sdma`, whose DMA duration is
+/// modelled by [`crate::dpu::dma`], and `Barrier`, which blocks until all
+/// participating tasklets arrive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    /// `move rd, src` (with optional condition on the moved value).
+    Move { rd: Reg, src: Src, cj: CondJump },
+    /// `op rd, ra, b` for two-operand ALU ops.
+    Alu { op: AluOp, rd: Reg, ra: Reg, b: Src, cj: CondJump },
+    /// `mul_xx_yy rd, ra, b` — one-cycle byte multiply.
+    Mul { variant: MulVariant, rd: Reg, ra: Reg, b: Src, cj: CondJump },
+    /// `mul_step dd, ra, shift`: one shift-and-add step of `__mulsi3`.
+    /// If `dd.lo & 1`, `dd.hi += ra << shift`; then `dd.lo >>= 1`. The
+    /// condition is evaluated on the *new* `dd.lo` (so `z` exits as soon
+    /// as the remaining multiplier is zero).
+    MulStep { dd: DReg, ra: Reg, shift: u8, cj: CondJump },
+    /// `lsl_add rd, ra, rb, shift`: `rd = ra + (rb << shift)` — the
+    /// single-instruction shift-accumulate the paper's §IV-B uses.
+    LslAdd { rd: Reg, ra: Reg, rb: Reg, shift: u8, cj: CondJump },
+    /// `cao rd, ra`: population count ("count all ones").
+    Cao { rd: Reg, ra: Reg, cj: CondJump },
+    /// WRAM load: `rd = wram[ra + off]`.
+    Load { w: LoadWidth, rd: Reg, ra: Reg, off: i32 },
+    /// 64-bit WRAM load into a d-pair: `dd = wram[ra + off]` (8-aligned).
+    Ld { dd: DReg, ra: Reg, off: i32 },
+    /// WRAM store: `wram[ra + off] = rs`.
+    Store { w: StoreWidth, ra: Reg, off: i32, rs: Reg },
+    /// 64-bit WRAM store from a d-pair.
+    Sd { ra: Reg, off: i32, ds: DReg },
+    /// Unconditional jump.
+    Jump { target: JumpTarget },
+    /// Fused compare-and-jump: `jcc ra, b, @target`.
+    JCmp { cond: CmpCond, ra: Reg, b: Src, target: u32 },
+    /// `call rlink, @target`: `rlink = pc + 1; jump target`.
+    Call { link: Reg, target: u32 },
+    /// MRAM→WRAM DMA (`mram_read`): `bytes` must be 8-aligned, ≤ 2048.
+    Ldma { wram: Reg, mram: Reg, bytes: u32 },
+    /// WRAM→MRAM DMA (`mram_write`).
+    Sdma { wram: Reg, mram: Reg, bytes: u32 },
+    /// Barrier across all running tasklets of the DPU.
+    Barrier,
+    /// Read the DPU cycle counter (low 32 bits) — the `perfcounter`
+    /// mechanism behind `timer_start`/`timer_stop` in the paper's Fig. 2.
+    Time { rd: Reg },
+    /// Tasklet termination.
+    Stop,
+    /// Explicit fault (kernel assertion failure).
+    Fault,
+    /// No-op (used by codegen for padding in IRAM-pressure experiments).
+    Nop,
+}
+
+impl Instr {
+    /// Disassembly string (labels already resolved to `@pc`).
+    pub fn disasm(&self) -> String {
+        fn cj_str(cj: &CondJump) -> String {
+            match cj {
+                None => String::new(),
+                Some((c, pc)) => format!(", {c}, @{pc}"),
+            }
+        }
+        match self {
+            Instr::Move { rd, src, cj } => format!("move {rd}, {src}{}", cj_str(cj)),
+            Instr::Alu { op, rd, ra, b, cj } => format!("{op} {rd}, {ra}, {b}{}", cj_str(cj)),
+            Instr::Mul { variant, rd, ra, b, cj } => {
+                format!("{variant} {rd}, {ra}, {b}{}", cj_str(cj))
+            }
+            Instr::MulStep { dd, ra, shift, cj } => {
+                format!("mul_step {dd}, {ra}, {dd}, {shift}{}", cj_str(cj))
+            }
+            Instr::LslAdd { rd, ra, rb, shift, cj } => {
+                format!("lsl_add {rd}, {ra}, {rb}, {shift}{}", cj_str(cj))
+            }
+            Instr::Cao { rd, ra, cj } => format!("cao {rd}, {ra}{}", cj_str(cj)),
+            Instr::Load { w, rd, ra, off } => {
+                let m = match w {
+                    LoadWidth::B8s => "lbs",
+                    LoadWidth::B8u => "lbu",
+                    LoadWidth::B16s => "lhs",
+                    LoadWidth::B16u => "lhu",
+                    LoadWidth::B32 => "lw",
+                };
+                format!("{m} {rd}, {ra}, {off}")
+            }
+            Instr::Ld { dd, ra, off } => format!("ld {dd}, {ra}, {off}"),
+            Instr::Store { w, ra, off, rs } => {
+                let m = match w {
+                    StoreWidth::B8 => "sb",
+                    StoreWidth::B16 => "sh",
+                    StoreWidth::B32 => "sw",
+                };
+                format!("{m} {ra}, {off}, {rs}")
+            }
+            Instr::Sd { ra, off, ds } => format!("sd {ra}, {off}, {ds}"),
+            Instr::Jump { target } => format!("jump {target}"),
+            Instr::JCmp { cond, ra, b, target } => format!("j{cond} {ra}, {b}, @{target}"),
+            Instr::Call { link, target } => format!("call {link}, @{target}"),
+            Instr::Ldma { wram, mram, bytes } => format!("ldma {wram}, {mram}, {bytes}"),
+            Instr::Sdma { wram, mram, bytes } => format!("sdma {wram}, {mram}, {bytes}"),
+            Instr::Barrier => "barrier".to_string(),
+            Instr::Time { rd } => format!("time {rd}"),
+            Instr::Stop => "stop".to_string(),
+            Instr::Fault => "fault".to_string(),
+            Instr::Nop => "nop".to_string(),
+        }
+    }
+}
+
+impl Cond {
+    /// Evaluate on an ALU result.
+    pub fn eval(self, result: u32) -> bool {
+        match self {
+            Cond::True => true,
+            Cond::Z => result == 0,
+            Cond::Nz => result != 0,
+            Cond::Neg => (result as i32) < 0,
+            Cond::Pos => (result as i32) >= 0,
+        }
+    }
+}
+
+/// A fully-resolved DPU program (labels → instruction indices), plus the
+/// label table kept for disassembly and assembler round-trips.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+    /// label name → instruction index.
+    pub labels: Vec<(String, u32)>,
+}
+
+impl Program {
+    /// Size of the encoded program in IRAM bytes.
+    pub fn iram_bytes(&self) -> usize {
+        self.instrs.len() * super::INSTR_BYTES
+    }
+
+    /// Does the program fit the 24 KB IRAM? The paper notes aggressive
+    /// `#pragma unroll` "can lead to IRAM overfill, which results in a
+    /// linker error" — [`crate::kernels`] surfaces this as
+    /// [`crate::Error::IramOverflow`].
+    pub fn fits_iram(&self) -> bool {
+        self.iram_bytes() <= super::IRAM_BYTES
+    }
+
+    /// Find a label's pc.
+    pub fn label(&self, name: &str) -> Option<u32> {
+        self.labels.iter().find(|(n, _)| n == name).map(|&(_, pc)| pc)
+    }
+
+    /// Full disassembly with label annotations.
+    pub fn disasm(&self) -> String {
+        let mut out = String::new();
+        for (pc, instr) in self.instrs.iter().enumerate() {
+            for (name, lpc) in &self.labels {
+                if *lpc == pc as u32 {
+                    out.push_str(name);
+                    out.push_str(":\n");
+                }
+            }
+            let _ = pc;
+            out.push_str("  ");
+            out.push_str(&instr.disasm());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dreg_pairs_map_to_even_odd() {
+        let d0 = DReg::new(0);
+        assert_eq!(d0.lo(), Reg(0));
+        assert_eq!(d0.hi(), Reg(1));
+        let d5 = DReg::new(5);
+        assert_eq!(d5.lo(), Reg(10));
+        assert_eq!(d5.hi(), Reg(11));
+    }
+
+    #[test]
+    #[should_panic]
+    fn reg_out_of_range_panics() {
+        let _ = Reg::new(24);
+    }
+
+    #[test]
+    fn alu_semantics() {
+        assert_eq!(AluOp::Add.eval(u32::MAX, 1), 0); // wrapping
+        assert_eq!(AluOp::Sub.eval(0, 1), u32::MAX);
+        assert_eq!(AluOp::Lsl.eval(1, 33), 2); // shift amount masked to 5 bits
+        assert_eq!(AluOp::Lsr.eval(0x8000_0000, 31), 1);
+        assert_eq!(AluOp::Asr.eval(0x8000_0000, 31), u32::MAX);
+        assert_eq!(AluOp::Xor.eval(0xFF00, 0x0FF0), 0xF0F0);
+    }
+
+    #[test]
+    fn mul_variants_select_correct_bytes() {
+        // a = 0x__ __ 03 FE (high byte 0x03, low byte 0xFE = -2 signed)
+        let a = 0x0000_03FE;
+        let b = 0x0000_0105; // high 0x01, low 0x05
+        assert_eq!(MulVariant::SlSl.eval(a, b) as i32, -2 * 5);
+        assert_eq!(MulVariant::ShSl.eval(a, b) as i32, 3 * 5);
+        assert_eq!(MulVariant::SlSh.eval(a, b) as i32, -2 * 1);
+        assert_eq!(MulVariant::ShSh.eval(a, b) as i32, 3 * 1);
+        assert_eq!(MulVariant::UlUl.eval(a, b), 0xFE * 5);
+        assert_eq!(MulVariant::UhUl.eval(a, b), 3 * 5);
+    }
+
+    #[test]
+    fn mul_signed_exhaustive_vs_native() {
+        // The one-cycle instruction must agree with native i8 × i8 for
+        // every operand pair — this is the correctness basis for the
+        // paper's NI optimization.
+        for a in i8::MIN..=i8::MAX {
+            for b in i8::MIN..=i8::MAX {
+                let r = MulVariant::SlSl.eval(a as u8 as u32, b as u8 as u32);
+                assert_eq!(r as i32, a as i32 * b as i32, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_unsigned_exhaustive_vs_native() {
+        for a in 0..=u8::MAX {
+            for b in 0..=u8::MAX {
+                let r = MulVariant::UlUl.eval(a as u32, b as u32);
+                assert_eq!(r, a as u32 * b as u32, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn cmp_cond_signed_vs_unsigned() {
+        let neg1 = -1i32 as u32;
+        assert!(CmpCond::Gtu.eval(neg1, 1)); // 0xFFFFFFFF > 1 unsigned
+        assert!(CmpCond::Lts.eval(neg1, 1)); // -1 < 1 signed
+        assert!(CmpCond::Eq.eval(7, 7));
+        assert!(CmpCond::Ges.eval(0, neg1));
+    }
+
+    #[test]
+    fn cond_eval() {
+        assert!(Cond::Z.eval(0));
+        assert!(!Cond::Z.eval(1));
+        assert!(Cond::Nz.eval(5));
+        assert!(Cond::Neg.eval(0x8000_0000));
+        assert!(Cond::Pos.eval(0));
+        assert!(Cond::True.eval(12345));
+    }
+
+    #[test]
+    fn program_iram_accounting() {
+        let p = Program { instrs: vec![Instr::Nop; 4096], labels: vec![] };
+        assert!(p.fits_iram());
+        let p = Program { instrs: vec![Instr::Nop; 4097], labels: vec![] };
+        assert!(!p.fits_iram());
+    }
+
+    #[test]
+    fn disasm_is_readable() {
+        let i = Instr::Mul {
+            variant: MulVariant::SlSl,
+            rd: Reg(2),
+            ra: Reg(3),
+            b: Src::Imm(5),
+            cj: Some((Cond::Z, 7)),
+        };
+        assert_eq!(i.disasm(), "mul_sl_sl r2, r3, 5, z, @7");
+        let i = Instr::MulStep { dd: DReg(0), ra: Reg(2), shift: 3, cj: None };
+        assert_eq!(i.disasm(), "mul_step d0, r2, d0, 3");
+    }
+}

@@ -1,0 +1,246 @@
+//! DPU memories: 64 KB WRAM scratchpad, 64 MB MRAM bank, IRAM accounting.
+//!
+//! WRAM is the only memory tasklets can load/store directly; MRAM is
+//! reachable exclusively through the DMA engine (`ldma`/`sdma`), exactly
+//! as on the real device. MRAM is allocated lazily (a fleet of simulated
+//! DPUs would otherwise reserve 64 MB × thousands of DPUs up front).
+
+use super::{MRAM_BYTES, WRAM_BYTES};
+use crate::util::error::FaultKind;
+
+/// 64 KB working RAM (SRAM scratchpad), 1-cycle access.
+#[derive(Debug, Clone)]
+pub struct Wram {
+    data: Vec<u8>,
+}
+
+impl Default for Wram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Wram {
+    pub fn new() -> Wram {
+        Wram { data: vec![0; WRAM_BYTES] }
+    }
+
+    #[inline]
+    fn check(&self, addr: u32, bytes: u32, align: u32) -> Result<usize, FaultKind> {
+        if addr % align != 0 {
+            return Err(FaultKind::MemAlignment);
+        }
+        let end = addr as usize + bytes as usize;
+        if end > self.data.len() {
+            return Err(FaultKind::WramOutOfBounds);
+        }
+        Ok(addr as usize)
+    }
+
+    #[inline]
+    pub fn load8(&self, addr: u32) -> Result<u8, FaultKind> {
+        let i = self.check(addr, 1, 1)?;
+        Ok(self.data[i])
+    }
+
+    #[inline]
+    pub fn load16(&self, addr: u32) -> Result<u16, FaultKind> {
+        let i = self.check(addr, 2, 2)?;
+        Ok(u16::from_le_bytes([self.data[i], self.data[i + 1]]))
+    }
+
+    #[inline]
+    pub fn load32(&self, addr: u32) -> Result<u32, FaultKind> {
+        let i = self.check(addr, 4, 4)?;
+        Ok(u32::from_le_bytes(self.data[i..i + 4].try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn load64(&self, addr: u32) -> Result<u64, FaultKind> {
+        let i = self.check(addr, 8, 8)?;
+        Ok(u64::from_le_bytes(self.data[i..i + 8].try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn store8(&mut self, addr: u32, v: u8) -> Result<(), FaultKind> {
+        let i = self.check(addr, 1, 1)?;
+        self.data[i] = v;
+        Ok(())
+    }
+
+    #[inline]
+    pub fn store16(&mut self, addr: u32, v: u16) -> Result<(), FaultKind> {
+        let i = self.check(addr, 2, 2)?;
+        self.data[i..i + 2].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    #[inline]
+    pub fn store32(&mut self, addr: u32, v: u32) -> Result<(), FaultKind> {
+        let i = self.check(addr, 4, 4)?;
+        self.data[i..i + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    #[inline]
+    pub fn store64(&mut self, addr: u32, v: u64) -> Result<(), FaultKind> {
+        let i = self.check(addr, 8, 8)?;
+        self.data[i..i + 8].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    /// Bulk host/DMA access (bounds-checked, no alignment requirement —
+    /// alignment of DMA is enforced by the DMA engine itself).
+    pub fn read_bytes(&self, addr: u32, out: &mut [u8]) -> Result<(), FaultKind> {
+        let i = self.check(addr, out.len() as u32, 1)?;
+        out.copy_from_slice(&self.data[i..i + out.len()]);
+        Ok(())
+    }
+
+    pub fn write_bytes(&mut self, addr: u32, src: &[u8]) -> Result<(), FaultKind> {
+        let i = self.check(addr, src.len() as u32, 1)?;
+        self.data[i..i + src.len()].copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Raw view for the interpreter's hot path.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+/// 64 MB MRAM bank, grown lazily in 1 MB steps as it is touched.
+#[derive(Debug, Clone, Default)]
+pub struct Mram {
+    data: Vec<u8>,
+}
+
+const MRAM_GROW_STEP: usize = 1 << 20;
+
+impl Mram {
+    pub fn new() -> Mram {
+        Mram { data: Vec::new() }
+    }
+
+    fn ensure(&mut self, end: usize) -> Result<(), FaultKind> {
+        if end > MRAM_BYTES {
+            return Err(FaultKind::MramOutOfBounds);
+        }
+        if end > self.data.len() {
+            let new_len = end.div_ceil(MRAM_GROW_STEP) * MRAM_GROW_STEP;
+            self.data.resize(new_len.min(MRAM_BYTES), 0);
+        }
+        Ok(())
+    }
+
+    /// Bytes currently materialized (for memory-footprint reporting).
+    pub fn resident_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn read(&mut self, addr: u32, out: &mut [u8]) -> Result<(), FaultKind> {
+        let end = addr as usize + out.len();
+        self.ensure(end)?;
+        out.copy_from_slice(&self.data[addr as usize..end]);
+        Ok(())
+    }
+
+    pub fn write(&mut self, addr: u32, src: &[u8]) -> Result<(), FaultKind> {
+        let end = addr as usize + src.len();
+        self.ensure(end)?;
+        self.data[addr as usize..end].copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Typed helpers for host-side data staging.
+    pub fn write_u32_slice(&mut self, addr: u32, vals: &[u32]) -> Result<(), FaultKind> {
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write(addr, &bytes)
+    }
+
+    pub fn read_u32_slice(&mut self, addr: u32, n: usize) -> Result<Vec<u32>, FaultKind> {
+        let mut bytes = vec![0u8; n * 4];
+        self.read(addr, &mut bytes)?;
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn write_i32_slice(&mut self, addr: u32, vals: &[i32]) -> Result<(), FaultKind> {
+        let as_u: Vec<u32> = vals.iter().map(|&v| v as u32).collect();
+        self.write_u32_slice(addr, &as_u)
+    }
+
+    pub fn read_i32_slice(&mut self, addr: u32, n: usize) -> Result<Vec<i32>, FaultKind> {
+        Ok(self.read_u32_slice(addr, n)?.into_iter().map(|v| v as i32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wram_roundtrip_all_widths() {
+        let mut w = Wram::new();
+        w.store8(3, 0xAB).unwrap();
+        assert_eq!(w.load8(3).unwrap(), 0xAB);
+        w.store16(10, 0xBEEF).unwrap();
+        assert_eq!(w.load16(10).unwrap(), 0xBEEF);
+        w.store32(16, 0xDEAD_BEEF).unwrap();
+        assert_eq!(w.load32(16).unwrap(), 0xDEAD_BEEF);
+        w.store64(24, 0x0123_4567_89AB_CDEF).unwrap();
+        assert_eq!(w.load64(24).unwrap(), 0x0123_4567_89AB_CDEF);
+        // little-endian byte order
+        assert_eq!(w.load8(24).unwrap(), 0xEF);
+    }
+
+    #[test]
+    fn wram_alignment_faults() {
+        let mut w = Wram::new();
+        assert_eq!(w.load16(1).unwrap_err(), FaultKind::MemAlignment);
+        assert_eq!(w.load32(2).unwrap_err(), FaultKind::MemAlignment);
+        assert_eq!(w.load64(4).unwrap_err(), FaultKind::MemAlignment);
+        assert_eq!(w.store32(6, 0).unwrap_err(), FaultKind::MemAlignment);
+    }
+
+    #[test]
+    fn wram_bounds_faults() {
+        let mut w = Wram::new();
+        assert_eq!(w.load8(WRAM_BYTES as u32).unwrap_err(), FaultKind::WramOutOfBounds);
+        assert!(w.load32((WRAM_BYTES - 4) as u32).is_ok());
+        assert_eq!(w.store64(WRAM_BYTES as u32, 0).unwrap_err(), FaultKind::WramOutOfBounds);
+    }
+
+    #[test]
+    fn mram_lazy_growth() {
+        let mut m = Mram::new();
+        assert_eq!(m.resident_bytes(), 0);
+        m.write(0, &[1, 2, 3]).unwrap();
+        assert_eq!(m.resident_bytes(), MRAM_GROW_STEP);
+        let mut buf = [0u8; 3];
+        m.read(0, &mut buf).unwrap();
+        assert_eq!(buf, [1, 2, 3]);
+        // touching a high address only materializes up to that point
+        m.write((40 << 20) as u32, &[9]).unwrap();
+        assert!(m.resident_bytes() <= 41 << 20);
+    }
+
+    #[test]
+    fn mram_bounds() {
+        let mut m = Mram::new();
+        assert_eq!(
+            m.write((MRAM_BYTES - 1) as u32, &[0, 0]).unwrap_err(),
+            FaultKind::MramOutOfBounds
+        );
+        assert!(m.write((MRAM_BYTES - 2) as u32, &[0, 0]).is_ok());
+    }
+
+    #[test]
+    fn mram_typed_roundtrip() {
+        let mut m = Mram::new();
+        m.write_i32_slice(8, &[-1, 2, -3]).unwrap();
+        assert_eq!(m.read_i32_slice(8, 3).unwrap(), vec![-1, 2, -3]);
+    }
+}

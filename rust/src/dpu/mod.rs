@@ -1,0 +1,76 @@
+//! Cycle-level simulator of an UPMEM-v1B DRAM Processing Unit (DPU).
+//!
+//! The paper's entire evaluation is expressed in DPU cycles (converted to
+//! MOPS at the 400 MHz clock) plus a host↔PIM transfer model, so a
+//! faithful *software* model of the documented microarchitecture
+//! reproduces every computational figure:
+//!
+//! * in-order 32-bit RISC core, 400 MHz, 14-stage pipeline of which **11
+//!   stages issue concurrently** — a tasklet may dispatch a new
+//!   instruction at most every 11 cycles, and the DPU dispatches at most
+//!   one instruction per cycle overall. Peak throughput (1 instr/cycle)
+//!   therefore requires ≥ 11 active tasklets, exactly the plateau the
+//!   paper shows in Fig. 3;
+//! * 16 hardware threads (tasklets), round-robin dispatch;
+//! * 64 KB WRAM scratchpad (1-cycle access), 24 KB IRAM
+//!   (4096 × 48-bit instructions), 64 MB MRAM bank behind a DMA engine;
+//! * the ISA subset the paper's kernels exercise, including the
+//!   `mul_*` one-cycle byte-multiply family, `mul_step` (the building
+//!   block of `__mulsi3`), `lsl_add` and `cao` (population count).
+//!
+//! Sub-modules:
+//! * [`isa`] — instruction definitions + disassembly
+//! * [`asm`] — two-pass textual assembler
+//! * [`builder`] — programmatic codegen API used by `crate::kernels`
+//! * [`memory`] — WRAM/MRAM/IRAM with bounds & alignment checking
+//! * [`pipeline`] — the dispatch/cycle model
+//! * [`interp`] — the functional + cycle-counting executor
+//! * [`dma`] — MRAM↔WRAM DMA latency model
+
+pub mod asm;
+pub mod builder;
+pub mod dma;
+pub mod interp;
+pub mod isa;
+pub mod memory;
+pub mod pipeline;
+pub mod tasklet;
+
+pub use asm::assemble;
+pub use builder::ProgramBuilder;
+pub use interp::{Dpu, LaunchResult};
+pub use isa::{Cond, Instr, Program, Reg, Src};
+
+/// DPU clock frequency (Hz). UPMEM-v1B runs at 400 MHz.
+pub const CLOCK_HZ: u64 = 400_000_000;
+
+/// Number of hardware threads (tasklets) per DPU.
+pub const NR_TASKLETS_MAX: usize = 16;
+
+/// Pipeline depth (stages). Documented as 14 for UPMEM-v1B.
+pub const PIPELINE_DEPTH: usize = 14;
+
+/// Number of pipeline stages that can hold concurrently-issuing
+/// instructions; a tasklet re-issues at most every `ISSUE_INTERVAL`
+/// cycles. The paper: "the performance levels off for 11 tasklets,
+/// because only 11 out of the 14 pipeline stages can operate
+/// concurrently."
+pub const ISSUE_INTERVAL: u64 = 11;
+
+/// WRAM size in bytes (64 KB scratchpad).
+pub const WRAM_BYTES: usize = 64 * 1024;
+
+/// MRAM size in bytes (64 MB DRAM bank per DPU).
+pub const MRAM_BYTES: usize = 64 * 1024 * 1024;
+
+/// IRAM size in bytes (24 KB).
+pub const IRAM_BYTES: usize = 24 * 1024;
+
+/// Encoded instruction size. UPMEM instructions are 48-bit.
+pub const INSTR_BYTES: usize = 6;
+
+/// IRAM capacity in instructions (24 KB / 48-bit = 4096).
+pub const IRAM_INSTRS: usize = IRAM_BYTES / INSTR_BYTES;
+
+/// Maximum DMA transfer size per `ldma`/`sdma` (2 KB on UPMEM).
+pub const DMA_MAX_BYTES: u32 = 2048;

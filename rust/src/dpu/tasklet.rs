@@ -1,0 +1,93 @@
+//! Per-tasklet architectural state: 24-register file, PC, run state.
+
+use super::isa::{DReg, Reg, Src};
+
+/// One hardware thread's architectural state.
+#[derive(Debug, Clone)]
+pub struct Tasklet {
+    /// 24 general-purpose 32-bit registers.
+    pub regs: [u32; Reg::NUM as usize],
+    /// Program counter (instruction index into IRAM).
+    pub pc: u32,
+    /// Tasklet has executed `stop`.
+    pub stopped: bool,
+    /// Tasklet is parked at a barrier.
+    pub at_barrier: bool,
+    /// This tasklet's hardware id (feeds the `id`/`id2`/`id4`/`id8`
+    /// constant registers).
+    pub id: u32,
+}
+
+impl Tasklet {
+    pub fn new(id: u32) -> Tasklet {
+        Tasklet { regs: [0; Reg::NUM as usize], pc: 0, stopped: false, at_barrier: false, id }
+    }
+
+    #[inline]
+    pub fn get(&self, r: Reg) -> u32 {
+        self.regs[r.0 as usize]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: Reg, v: u32) {
+        self.regs[r.0 as usize] = v;
+    }
+
+    #[inline]
+    pub fn get_d(&self, d: DReg) -> (u32, u32) {
+        (self.get(d.lo()), self.get(d.hi()))
+    }
+
+    #[inline]
+    pub fn set_d(&mut self, d: DReg, lo: u32, hi: u32) {
+        self.set(d.lo(), lo);
+        self.set(d.hi(), hi);
+    }
+
+    /// Evaluate a source operand, including the constant-register file.
+    #[inline]
+    pub fn src(&self, s: Src) -> u32 {
+        match s {
+            Src::Reg(r) => self.get(r),
+            Src::Zero => 0,
+            Src::One => 1,
+            Src::Lneg => u32::MAX,
+            Src::Id => self.id,
+            Src::Id2 => self.id * 2,
+            Src::Id4 => self.id * 4,
+            Src::Id8 => self.id * 8,
+            Src::Imm(v) => v as u32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_file_roundtrip() {
+        let mut t = Tasklet::new(3);
+        t.set(Reg(5), 0xDEAD);
+        assert_eq!(t.get(Reg(5)), 0xDEAD);
+        t.set_d(DReg(2), 1, 2);
+        assert_eq!(t.get(Reg(4)), 1);
+        assert_eq!(t.get(Reg(5)), 2);
+        assert_eq!(t.get_d(DReg(2)), (1, 2));
+    }
+
+    #[test]
+    fn constant_registers() {
+        let mut t = Tasklet::new(7);
+        t.set(Reg(0), 42);
+        assert_eq!(t.src(Src::Reg(Reg(0))), 42);
+        assert_eq!(t.src(Src::Zero), 0);
+        assert_eq!(t.src(Src::One), 1);
+        assert_eq!(t.src(Src::Lneg), u32::MAX);
+        assert_eq!(t.src(Src::Id), 7);
+        assert_eq!(t.src(Src::Id2), 14);
+        assert_eq!(t.src(Src::Id4), 28);
+        assert_eq!(t.src(Src::Id8), 56);
+        assert_eq!(t.src(Src::Imm(-1)), u32::MAX);
+    }
+}

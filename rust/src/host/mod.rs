@@ -1,0 +1,383 @@
+//! The SDK-like host runtime: allocate DPU sets, load kernels, move
+//! data, launch, gather — the layer `main.rs`, the coordinator and the
+//! examples program against (the analogue of `dpu.h` plus the paper's
+//! extensions).
+//!
+//! [`PimSystem`] owns the simulated fleet. DPUs are materialized lazily
+//! (a 40-rank system has 2560 of them); faulty DPUs (§II footnote: nine
+//! disabled on the paper's machine) are skipped exactly like
+//! `dpu_alloc` skips them on real hardware.
+//!
+//! Every data-movement call returns the modeled wall time from
+//! [`crate::transfer`], so callers can account transfer and compute
+//! phases separately (the GEMV-MV vs GEMV-V split of §VI).
+
+use crate::alloc::{BaselineAllocator, NumaAwareAllocator, RankSet};
+use crate::dpu::isa::Program;
+use crate::dpu::{Dpu, LaunchResult};
+use crate::transfer::model::BufferPlacement;
+use crate::transfer::topology::{DpuId, SystemTopology, TOTAL_DPUS};
+use crate::transfer::{Direction, TransferEngine, TransferReport};
+use crate::Result;
+
+/// Allocation policy: the SDK baseline or the paper's extension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// udev-order first-fit; placement varies with `boot_seed` and the
+    /// host buffer lands on one NUMA node.
+    BaselineSdk { boot_seed: u64 },
+    /// NUMA- and channel-balanced allocation with per-socket buffers.
+    NumaAware,
+}
+
+enum AllocatorImpl {
+    Baseline(BaselineAllocator),
+    Numa(NumaAwareAllocator),
+}
+
+/// An allocated set of DPUs (rank granularity, like `dpu_set_t`).
+#[derive(Debug, Clone)]
+pub struct DpuSet {
+    pub ranks: RankSet,
+    /// Host staging-buffer placement used for this set's transfers.
+    pub placement: BufferPlacement,
+    /// Usable DPU ids, in rank order with faulty units skipped.
+    pub dpus: Vec<DpuId>,
+}
+
+impl DpuSet {
+    pub fn nr_dpus(&self) -> usize {
+        self.dpus.len()
+    }
+}
+
+/// Result of a fleet launch.
+#[derive(Debug, Clone)]
+pub struct FleetLaunch {
+    /// Per-DPU execution stats (indexed like `DpuSet::dpus`).
+    pub per_dpu: Vec<LaunchResult>,
+    /// Wall time: slowest DPU (they run concurrently on real hardware).
+    pub seconds: f64,
+    /// Slowest DPU's cycle count.
+    pub max_cycles: u64,
+}
+
+/// The host-side system object.
+pub struct PimSystem {
+    pub engine: TransferEngine,
+    allocator: AllocatorImpl,
+    dpus: Vec<Option<Box<Dpu>>>,
+}
+
+impl PimSystem {
+    /// Build a system over `topo` with the given allocation policy.
+    pub fn new(topo: SystemTopology, policy: AllocPolicy) -> PimSystem {
+        let engine = TransferEngine::new(topo.clone(), crate::transfer::TransferModel::default());
+        let allocator = match policy {
+            AllocPolicy::BaselineSdk { boot_seed } => {
+                AllocatorImpl::Baseline(BaselineAllocator::new(&topo, boot_seed))
+            }
+            AllocPolicy::NumaAware => AllocatorImpl::Numa(NumaAwareAllocator::new(topo)),
+        };
+        let mut dpus = Vec::with_capacity(TOTAL_DPUS);
+        dpus.resize_with(TOTAL_DPUS, || None);
+        PimSystem { engine, allocator, dpus }
+    }
+
+    /// The paper's server with the paper's policy choice.
+    pub fn paper_server(policy: AllocPolicy) -> PimSystem {
+        PimSystem::new(SystemTopology::paper_server(), policy)
+    }
+
+    pub fn topology(&self) -> &SystemTopology {
+        &self.engine.topo
+    }
+
+    /// Allocate `n` ranks under the configured policy.
+    pub fn alloc_ranks(&mut self, n: usize) -> Result<DpuSet> {
+        let (ranks, placement) = match &mut self.allocator {
+            AllocatorImpl::Baseline(a) => {
+                // The SDK leaves the staging buffer wherever the calling
+                // thread ran; model it as node 0.
+                (a.alloc_ranks(n)?, BufferPlacement::Node(0))
+            }
+            AllocatorImpl::Numa(a) => {
+                let [s0, s1] = a.alloc_balanced(n)?;
+                let mut ranks = s0;
+                ranks.ranks.extend(s1.ranks);
+                (ranks, BufferPlacement::PerSocket)
+            }
+        };
+        let topo = &self.engine.topo;
+        let dpus: Vec<DpuId> = ranks
+            .ranks
+            .iter()
+            .flat_map(|&r| topo.dpus_of_rank(r))
+            .filter(|&d| !topo.is_faulty(d))
+            .collect();
+        Ok(DpuSet { ranks, placement, dpus })
+    }
+
+    /// Release a set (its DPUs keep their MRAM contents, like hardware,
+    /// but the ranks become allocatable again).
+    pub fn free(&mut self, set: DpuSet) {
+        match &mut self.allocator {
+            AllocatorImpl::Baseline(a) => a.free(set.ranks),
+            AllocatorImpl::Numa(a) => a.free(set.ranks),
+        }
+    }
+
+    fn dpu_mut(&mut self, id: DpuId) -> &mut Dpu {
+        let slot = &mut self.dpus[id];
+        if slot.is_none() {
+            let mut d = Box::new(Dpu::new());
+            d.id = id;
+            *slot = Some(d);
+        }
+        slot.as_mut().unwrap().as_mut()
+    }
+
+    /// Load a kernel onto every DPU of the set (the SDK's
+    /// `dpu_load`). Fails on IRAM overflow.
+    pub fn load_program(&mut self, set: &DpuSet, program: &Program) -> Result<()> {
+        for &id in &set.dpus {
+            self.dpu_mut(id).load_program(program)?;
+        }
+        Ok(())
+    }
+
+    /// Parallel host→PIM transfer: `data(i)` yields the bytes for the
+    /// i-th usable DPU, written at `mram_addr`. Returns modeled timing
+    /// for the total traffic.
+    pub fn push_parallel<F>(
+        &mut self,
+        set: &DpuSet,
+        mram_addr: u32,
+        mut data: F,
+    ) -> Result<TransferReport>
+    where
+        F: FnMut(usize) -> Vec<u8>,
+    {
+        let mut total = 0u64;
+        for (i, &id) in set.dpus.iter().enumerate() {
+            let bytes = data(i);
+            total += bytes.len() as u64;
+            let dpu = self.dpu_mut(id);
+            dpu.mram
+                .write(mram_addr, &bytes)
+                .map_err(|k| crate::Error::Fault { dpu: id, tasklet: 0, pc: 0, kind: k })?;
+        }
+        Ok(self.engine.parallel(&set.ranks.ranks, total, Direction::HostToPim, set.placement))
+    }
+
+    /// Timing-only parallel push (large fleet benchmarks move no bytes).
+    pub fn push_parallel_modeled(&self, set: &DpuSet, total_bytes: u64) -> TransferReport {
+        self.engine.parallel(&set.ranks.ranks, total_bytes, Direction::HostToPim, set.placement)
+    }
+
+    /// Broadcast the same bytes to every DPU (the SDK broadcast mode).
+    pub fn broadcast(
+        &mut self,
+        set: &DpuSet,
+        mram_addr: u32,
+        bytes: &[u8],
+    ) -> Result<TransferReport> {
+        for &id in &set.dpus {
+            let dpu = self.dpu_mut(id);
+            dpu.mram
+                .write(mram_addr, bytes)
+                .map_err(|k| crate::Error::Fault { dpu: id, tasklet: 0, pc: 0, kind: k })?;
+        }
+        Ok(self.engine.broadcast(&set.ranks.ranks, bytes.len() as u64, set.placement))
+    }
+
+    /// Parallel PIM→host transfer of `[mram_addr, mram_addr+len)` from
+    /// every DPU.
+    pub fn pull_parallel(
+        &mut self,
+        set: &DpuSet,
+        mram_addr: u32,
+        len: usize,
+    ) -> Result<(Vec<Vec<u8>>, TransferReport)> {
+        let mut out = Vec::with_capacity(set.dpus.len());
+        for &id in &set.dpus {
+            let dpu = self.dpu_mut(id);
+            let mut buf = vec![0u8; len];
+            dpu.mram
+                .read(mram_addr, &mut buf)
+                .map_err(|k| crate::Error::Fault { dpu: id, tasklet: 0, pc: 0, kind: k })?;
+            out.push(buf);
+        }
+        let report = self.engine.parallel(
+            &set.ranks.ranks,
+            (len * set.dpus.len()) as u64,
+            Direction::PimToHost,
+            set.placement,
+        );
+        Ok((out, report))
+    }
+
+    /// Timing-only parallel pull.
+    pub fn pull_parallel_modeled(&self, set: &DpuSet, total_bytes: u64) -> TransferReport {
+        self.engine.parallel(&set.ranks.ranks, total_bytes, Direction::PimToHost, set.placement)
+    }
+
+    /// Write per-DPU WRAM arguments before a launch (`dpu_copy_to` of a
+    /// WRAM symbol).
+    pub fn set_args<F>(&mut self, set: &DpuSet, mut args: F) -> Result<()>
+    where
+        F: FnMut(usize) -> Vec<(u32, u32)>,
+    {
+        for (i, &id) in set.dpus.iter().enumerate() {
+            let dpu = self.dpu_mut(id);
+            for (addr, val) in args(i) {
+                dpu.wram
+                    .store32(addr, val)
+                    .map_err(|k| crate::Error::Fault { dpu: id, tasklet: 0, pc: 0, kind: k })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Synchronous launch across the whole set (`dpu_launch`,
+    /// `DPU_SYNCHRONOUS`): every DPU runs its program to completion; the
+    /// fleet wall time is the slowest DPU (they execute concurrently on
+    /// hardware; the simulator runs them one after another).
+    pub fn launch(&mut self, set: &DpuSet, nr_tasklets: usize) -> Result<FleetLaunch> {
+        let mut per_dpu = Vec::with_capacity(set.dpus.len());
+        let mut max_cycles = 0u64;
+        for &id in &set.dpus {
+            let r = self.dpu_mut(id).launch(nr_tasklets)?;
+            max_cycles = max_cycles.max(r.cycles);
+            per_dpu.push(r);
+        }
+        Ok(FleetLaunch {
+            seconds: max_cycles as f64 / crate::dpu::CLOCK_HZ as f64,
+            max_cycles,
+            per_dpu,
+        })
+    }
+
+    /// Direct access to one DPU of a set (tests, debugging, the serving
+    /// layer's representative-DPU fast path).
+    pub fn dpu_of(&mut self, set: &DpuSet, i: usize) -> &mut Dpu {
+        let id = set.dpus[i];
+        self.dpu_mut(id)
+    }
+
+    /// Number of DPUs currently materialized (memory-footprint metric).
+    pub fn resident_dpus(&self) -> usize {
+        self.dpus.iter().filter(|d| d.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::assemble;
+
+    fn numa_system() -> PimSystem {
+        PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware)
+    }
+
+    #[test]
+    fn alloc_skips_faulty_dpus() {
+        let mut sys = PimSystem::paper_server(AllocPolicy::NumaAware);
+        let set = sys.alloc_ranks(40).unwrap();
+        assert_eq!(set.nr_dpus(), 2551, "paper: 2551 usable DPUs");
+    }
+
+    #[test]
+    fn load_and_launch_fleet() {
+        let mut sys = numa_system();
+        let set = sys.alloc_ranks(2).unwrap();
+        assert_eq!(set.nr_dpus(), 128);
+        let prog = assemble(
+            "move r0, id4\n\
+             add r1, r0, 100\n\
+             sw r0, 0, r1\n\
+             stop\n",
+        )
+        .unwrap();
+        sys.load_program(&set, &prog).unwrap();
+        let fleet = sys.launch(&set, 4).unwrap();
+        assert_eq!(fleet.per_dpu.len(), 128);
+        assert!(fleet.seconds > 0.0);
+        // Every DPU ran the same program: identical cycle counts.
+        assert!(fleet.per_dpu.iter().all(|r| r.cycles == fleet.max_cycles));
+        // Check a DPU actually executed.
+        assert_eq!(sys.dpu_of(&set, 77).wram.load32(0).unwrap(), 100);
+    }
+
+    #[test]
+    fn push_pull_roundtrip_with_timing() {
+        let mut sys = numa_system();
+        let set = sys.alloc_ranks(2).unwrap();
+        let push = sys
+            .push_parallel(&set, 4096, |i| vec![i as u8; 256])
+            .unwrap();
+        assert_eq!(push.bytes, 128 * 256);
+        assert!(push.seconds > 0.0);
+        let (data, pull) = sys.pull_parallel(&set, 4096, 256).unwrap();
+        assert_eq!(data.len(), 128);
+        for (i, d) in data.iter().enumerate() {
+            assert!(d.iter().all(|&b| b == i as u8));
+        }
+        // PIM→host is slower than host→PIM for the same traffic.
+        assert!(pull.seconds > push.seconds);
+    }
+
+    #[test]
+    fn broadcast_reaches_all_dpus() {
+        let mut sys = numa_system();
+        let set = sys.alloc_ranks(2).unwrap();
+        sys.broadcast(&set, 8192, &[7u8; 64]).unwrap();
+        for i in [0, 63, 127] {
+            let mut buf = [0u8; 64];
+            sys.dpu_of(&set, i).mram.read(8192, &mut buf).unwrap();
+            assert!(buf.iter().all(|&b| b == 7));
+        }
+    }
+
+    #[test]
+    fn lazy_materialization() {
+        let mut sys = numa_system();
+        let set = sys.alloc_ranks(4).unwrap();
+        assert_eq!(sys.resident_dpus(), 0, "allocation alone materializes nothing");
+        let _ = sys.push_parallel_modeled(&set, 1 << 30);
+        assert_eq!(sys.resident_dpus(), 0, "modeled transfers move no bytes");
+        sys.broadcast(&set, 0, &[1]).unwrap();
+        assert_eq!(sys.resident_dpus(), 256);
+    }
+
+    #[test]
+    fn numa_policy_beats_baseline_on_transfers() {
+        let mut numa = numa_system();
+        let mut base =
+            PimSystem::new(SystemTopology::pristine(), AllocPolicy::BaselineSdk { boot_seed: 3 });
+        let bytes = 1u64 << 28;
+        let sn = numa.alloc_ranks(4).unwrap();
+        let sb = base.alloc_ranks(4).unwrap();
+        let tn = numa.push_parallel_modeled(&sn, bytes).seconds;
+        let tb = base.push_parallel_modeled(&sb, bytes).seconds;
+        assert!(tb / tn > 1.5, "numa={tn}s baseline={tb}s");
+    }
+
+    #[test]
+    fn args_are_per_dpu() {
+        let mut sys = numa_system();
+        let set = sys.alloc_ranks(2).unwrap();
+        sys.set_args(&set, |i| vec![(0, i as u32 * 10)]).unwrap();
+        assert_eq!(sys.dpu_of(&set, 3).wram.load32(0).unwrap(), 30);
+        assert_eq!(sys.dpu_of(&set, 100).wram.load32(0).unwrap(), 1000);
+    }
+
+    #[test]
+    fn freeing_returns_capacity() {
+        let mut sys = numa_system();
+        let s1 = sys.alloc_ranks(40).unwrap();
+        assert!(sys.alloc_ranks(2).is_err());
+        sys.free(s1);
+        assert!(sys.alloc_ranks(2).is_ok());
+    }
+}

@@ -1,0 +1,685 @@
+//! The PrIM-style arithmetic microbenchmark (paper Fig. 2) in every
+//! codegen variant the paper evaluates.
+//!
+//! Each tasklet streams 1 KB blocks of a large MRAM buffer into WRAM,
+//! applies `buf[i] op= scalar` to every element (the only timed region),
+//! and writes the block back. Variants:
+//!
+//! * **baseline** — what the UPMEM compiler emits: byte/word loads,
+//!   pointer/counter loop latches and, crucially, a call to `__mulsi3`
+//!   for *every* multiplication (§III-A);
+//! * **NI** — native one-cycle `mul_sl_sl` instead of `__mulsi3` (§III-B);
+//! * **NI×4 / NI×8** — NI plus 32-/64-bit block loads (paper Fig. 5);
+//! * **DIM** — decomposed INT32 multiplication from byte products
+//!   (§III-C);
+//! * **unrolling** — `#pragma unroll`-style body replication (§III-D);
+//!   `Unroll::Auto` replicates the full 1 KB block, which for large
+//!   bodies overflows IRAM exactly like the linker error the paper
+//!   describes.
+//!
+//! Modelling notes (documented deviations):
+//! * the baseline INT8 loop uses a pointer-compare latch (5 instrs per
+//!   element) while the baseline INT32 loop uses a separate
+//!   counter-decrement latch (6 instrs per element); this mirrors the
+//!   40 MOPS gap between the paper's INT8 (80) and INT32 (67) ADD
+//!   baselines;
+//! * the benchmark scalar is 3 for INT8 and 0x00FF_FFFF for INT32, so
+//!   that the expected number of `mul_step` iterations inside
+//!   `__mulsi3` (2 and 24) reproduces the paper's measured 2.7× (INT8)
+//!   and 6× (INT32) mul-vs-add baseline gaps.
+
+use super::mulsi3::emit_mulsi3;
+use super::{BLOCK_BYTES, BUF_BASE, CYCLES_BASE, MRAM_A};
+use crate::dpu::builder::{Label, ProgramBuilder};
+use crate::dpu::isa::{CmpCond, MulVariant, Program, Reg, Src};
+use crate::dpu::{Dpu, LaunchResult};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Element type under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn bytes(self) -> u32 {
+        match self {
+            DType::I8 => 1,
+            DType::I32 => 4,
+        }
+    }
+
+    /// Elements per 1 KB WRAM block.
+    pub fn block_elems(self) -> u32 {
+        BLOCK_BYTES / self.bytes()
+    }
+}
+
+/// Operation under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Add,
+    Mul,
+}
+
+/// Multiplication implementation (ignored for `Op::Add`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MulImpl {
+    /// Compiler baseline: call `__mulsi3`.
+    Mulsi3,
+    /// Native instruction (`mul_sl_sl`).
+    Native,
+    /// Native + 32-bit block loads (4 INT8 values per `lw`).
+    NativeX4,
+    /// Native + 64-bit block loads (8 INT8 values per `ld`, Fig. 5).
+    NativeX8,
+    /// Decomposed INT32 multiplication (§III-C).
+    Dim,
+}
+
+/// Loop unrolling (`#pragma unroll` analogue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unroll {
+    /// No unrolling (baseline loop).
+    No,
+    /// `#pragma unroll` — fully unroll the 1 KB block body.
+    Auto,
+    /// `#pragma unroll 64`.
+    X64,
+    /// `#pragma unroll 128`.
+    X128,
+}
+
+impl Unroll {
+    /// Number of body repetitions per loop iteration, given how many
+    /// body repetitions cover one block.
+    fn reps(self, full: u32) -> u32 {
+        match self {
+            Unroll::No => 1,
+            Unroll::Auto => full,
+            Unroll::X64 => 64.min(full),
+            Unroll::X128 => 128.min(full),
+        }
+    }
+}
+
+/// A complete microbenchmark variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Spec {
+    pub dtype: DType,
+    pub op: Op,
+    pub mimpl: MulImpl,
+    pub unroll: Unroll,
+}
+
+impl Spec {
+    pub fn add(dtype: DType) -> Spec {
+        Spec { dtype, op: Op::Add, mimpl: MulImpl::Native, unroll: Unroll::No }
+    }
+
+    pub fn mul(dtype: DType, mimpl: MulImpl) -> Spec {
+        Spec { dtype, op: Op::Mul, mimpl, unroll: Unroll::No }
+    }
+
+    pub fn with_unroll(mut self, u: Unroll) -> Spec {
+        self.unroll = u;
+        self
+    }
+
+    /// Benchmark scalar for this data type (see module docs).
+    pub fn scalar(&self) -> i32 {
+        match self.dtype {
+            DType::I8 => 3,
+            DType::I32 => 0x00FF_FFFF,
+        }
+    }
+
+    /// Short name for reports, e.g. `INT8 MUL NIx8 (x64)`.
+    pub fn name(&self) -> String {
+        let t = match self.dtype {
+            DType::I8 => "INT8",
+            DType::I32 => "INT32",
+        };
+        let o = match (self.op, self.mimpl) {
+            (Op::Add, _) => "ADD".to_string(),
+            (Op::Mul, MulImpl::Mulsi3) => "MUL baseline".to_string(),
+            (Op::Mul, MulImpl::Native) => "MUL NI".to_string(),
+            (Op::Mul, MulImpl::NativeX4) => "MUL NIx4".to_string(),
+            (Op::Mul, MulImpl::NativeX8) => "MUL NIx8".to_string(),
+            (Op::Mul, MulImpl::Dim) => "MUL DIM".to_string(),
+        };
+        let u = match self.unroll {
+            Unroll::No => "",
+            Unroll::Auto => " (auto)",
+            Unroll::X64 => " (x64)",
+            Unroll::X128 => " (x128)",
+        };
+        format!("{t} {o}{u}")
+    }
+}
+
+// Skeleton register map (update bodies may use r0..r11 freely):
+const R_TMP_ARGS: Reg = Reg(3);
+const R_CYC_ADDR: Reg = Reg(14);
+const R_T0: Reg = Reg(15); // timer start
+const R_T1: Reg = Reg(16); // timer end / delta
+const R_CYC: Reg = Reg(17); // accumulated timed cycles
+const R_SCALAR: Reg = Reg(18);
+const R_END: Reg = Reg(19); // MRAM end
+const R_BUF: Reg = Reg(20); // per-tasklet WRAM block
+const R_MPTR: Reg = Reg(21); // MRAM cursor
+const R_STRIDE: Reg = Reg(22); // T * BLOCK_BYTES
+
+// Body-local registers:
+const R_PTR: Reg = Reg(10);
+const R_PEND: Reg = Reg(11);
+
+/// Emit the full microbenchmark program for `spec`.
+pub fn emit_microbench(spec: Spec) -> Result<Program> {
+    let mut pb = ProgramBuilder::new();
+    let main = pb.new_label("main");
+    pb.jump(main);
+    let needs_mulsi3 = spec.op == Op::Mul && spec.mimpl == MulImpl::Mulsi3;
+    let mulsi3 = if needs_mulsi3 { Some(emit_mulsi3(&mut pb)) } else { None };
+    pb.bind(main);
+
+    // Per-tasklet WRAM block: BUF_BASE + 1024 * id  (= id8 << 7).
+    pb.move_(R_BUF, Src::Id8);
+    pb.lsl(R_BUF, R_BUF, 7);
+    pb.add(R_BUF, R_BUF, BUF_BASE as i32);
+    // Per-tasklet MRAM start: MRAM_A + 1024 * id.
+    pb.move_(R_MPTR, Src::Id8);
+    pb.lsl(R_MPTR, R_MPTR, 7);
+    pb.add(R_MPTR, R_MPTR, MRAM_A as i32);
+    // Args: [0]=total bytes, [4]=scalar, [8]=stride.
+    pb.move_(R_TMP_ARGS, 0);
+    pb.lw(R_END, R_TMP_ARGS, 0);
+    pb.add(R_END, R_END, MRAM_A as i32);
+    pb.lw(R_SCALAR, R_TMP_ARGS, 4);
+    pb.lw(R_STRIDE, R_TMP_ARGS, 8);
+    pb.move_(R_CYC, 0);
+
+    let done = pb.new_label("done");
+    pb.jcmp(CmpCond::Geu, R_MPTR, Src::Reg(R_END), done);
+    let blocks = pb.here("blocks");
+    pb.ldma(R_BUF, R_MPTR, BLOCK_BYTES);
+    pb.barrier();
+    pb.time(R_T0);
+    emit_update_body(&mut pb, spec, mulsi3);
+    pb.time(R_T1);
+    pb.sub(R_T1, R_T1, R_T0);
+    pb.add(R_CYC, R_CYC, R_T1);
+    pb.barrier();
+    pb.sdma(R_BUF, R_MPTR, BLOCK_BYTES);
+    pb.add(R_MPTR, R_MPTR, Src::Reg(R_STRIDE));
+    pb.jcmp(CmpCond::Ltu, R_MPTR, Src::Reg(R_END), blocks);
+    pb.bind(done);
+    // cycles result slot: CYCLES_BASE + 4 * id.
+    pb.move_(R_CYC_ADDR, Src::Id4);
+    pb.add(R_CYC_ADDR, R_CYC_ADDR, CYCLES_BASE as i32);
+    pb.sw(R_CYC_ADDR, 0, R_CYC);
+    pb.stop();
+    pb.build()
+}
+
+/// Emit the timed `update()` over the 1 KB block at `R_BUF`.
+fn emit_update_body(pb: &mut ProgramBuilder, spec: Spec, mulsi3: Option<Label>) {
+    match (spec.op, spec.dtype, spec.mimpl) {
+        (Op::Add, dt, _) => emit_add(pb, dt, spec.unroll),
+        (Op::Mul, dt, MulImpl::Mulsi3) => emit_mul_mulsi3(pb, dt, spec.unroll, mulsi3.unwrap()),
+        (Op::Mul, DType::I8, MulImpl::Native) => emit_mul_i8_ni(pb, spec.unroll),
+        (Op::Mul, DType::I8, MulImpl::NativeX4) => emit_mul_i8_nix4(pb, spec.unroll),
+        (Op::Mul, DType::I8, MulImpl::NativeX8) => emit_mul_i8_nix8(pb, spec.unroll),
+        (Op::Mul, DType::I32, MulImpl::Dim) => emit_mul_i32_dim(pb, spec.unroll),
+        (Op::Mul, DType::I32, MulImpl::Native | MulImpl::NativeX4 | MulImpl::NativeX8) => {
+            // The mul_* family multiplies bytes; a *single* native
+            // instruction cannot implement INT32×INT32. DIM is the
+            // paper's optimized INT32 path.
+            panic!("INT32 MUL supports Mulsi3 or Dim only (got {:?})", spec.mimpl)
+        }
+        (Op::Mul, DType::I8, MulImpl::Dim) => panic!("DIM applies to INT32 only"),
+    }
+}
+
+/// Shared loop prologue: `R_PTR` = block start, `R_PEND` = block end.
+fn loop_bounds(pb: &mut ProgramBuilder) {
+    pb.move_(R_PTR, R_BUF);
+    pb.add(R_PEND, R_BUF, BLOCK_BYTES as i32);
+}
+
+/// `buf[i] += scalar` for both dtypes.
+fn emit_add(pb: &mut ProgramBuilder, dt: DType, unroll: Unroll) {
+    if dt == DType::I32 && unroll == Unroll::No {
+        // Compiler-like counter latch: 6 instrs/element (67 MOPS plateau).
+        pb.move_(R_PTR, R_BUF);
+        pb.move_(Reg(2), dt.block_elems() as i32);
+        let l = pb.here("add32_loop");
+        pb.lw(Reg(1), R_PTR, 0);
+        pb.add(Reg(1), Reg(1), Src::Reg(R_SCALAR));
+        pb.sw(R_PTR, 0, Reg(1));
+        pb.add(R_PTR, R_PTR, 4);
+        pb.sub(Reg(2), Reg(2), 1);
+        pb.jcmp(CmpCond::Neq, Reg(2), Src::Zero, l);
+        return;
+    }
+    // Pointer-compare latch with `reps` unrolled elements per iteration.
+    let reps = unroll.reps(dt.block_elems());
+    let step = dt.bytes() as i32;
+    loop_bounds(pb);
+    let l = pb.here("add_loop");
+    for k in 0..reps {
+        let off = k as i32 * step;
+        match dt {
+            DType::I8 => {
+                pb.lbs(Reg(1), R_PTR, off);
+                pb.add(Reg(1), Reg(1), Src::Reg(R_SCALAR));
+                pb.sb(R_PTR, off, Reg(1));
+            }
+            DType::I32 => {
+                pb.lw(Reg(1), R_PTR, off);
+                pb.add(Reg(1), Reg(1), Src::Reg(R_SCALAR));
+                pb.sw(R_PTR, off, Reg(1));
+            }
+        }
+    }
+    pb.add(R_PTR, R_PTR, reps as i32 * step);
+    pb.jcmp(CmpCond::Ltu, R_PTR, Src::Reg(R_PEND), l);
+}
+
+/// Compiler baseline multiplication: `__mulsi3` call per element.
+fn emit_mul_mulsi3(pb: &mut ProgramBuilder, dt: DType, unroll: Unroll, mulsi3: Label) {
+    let reps = unroll.reps(dt.block_elems());
+    let step = dt.bytes() as i32;
+    loop_bounds(pb);
+    let l = pb.here("mul_base_loop");
+    for k in 0..reps {
+        let off = k as i32 * step;
+        match dt {
+            DType::I8 => pb.lbs(super::mulsi3::ARG_A, R_PTR, off),
+            DType::I32 => pb.lw(super::mulsi3::ARG_A, R_PTR, off),
+        }
+        pb.move_(super::mulsi3::ARG_B, R_SCALAR);
+        pb.call(super::mulsi3::LINK, mulsi3);
+        match dt {
+            DType::I8 => pb.sb(R_PTR, off, super::mulsi3::RESULT),
+            DType::I32 => pb.sw(R_PTR, off, super::mulsi3::RESULT),
+        }
+    }
+    pb.add(R_PTR, R_PTR, reps as i32 * step);
+    pb.jcmp(CmpCond::Ltu, R_PTR, Src::Reg(R_PEND), l);
+}
+
+/// NI: one `mul_sl_sl` per INT8 element (paper §III-B).
+fn emit_mul_i8_ni(pb: &mut ProgramBuilder, unroll: Unroll) {
+    let reps = unroll.reps(DType::I8.block_elems());
+    loop_bounds(pb);
+    let l = pb.here("mul_ni_loop");
+    for k in 0..reps {
+        pb.lbs(Reg(1), R_PTR, k as i32);
+        pb.mul(MulVariant::SlSl, Reg(1), Reg(1), Src::Reg(R_SCALAR));
+        pb.sb(R_PTR, k as i32, Reg(1));
+    }
+    pb.add(R_PTR, R_PTR, reps as i32);
+    pb.jcmp(CmpCond::Ltu, R_PTR, Src::Reg(R_PEND), l);
+}
+
+/// NI×4: load four INT8 values with one `lw`, multiply with the
+/// `mul_{sl,sh}_sl` pair (paper Fig. 5, 32-bit version).
+fn emit_mul_i8_nix4(pb: &mut ProgramBuilder, unroll: Unroll) {
+    let reps = unroll.reps(DType::I8.block_elems() / 4);
+    loop_bounds(pb);
+    let l = pb.here("mul_nix4_loop");
+    for g in 0..reps {
+        let base = g as i32 * 4;
+        pb.lw(Reg(1), R_PTR, base);
+        pb.mul(MulVariant::SlSl, Reg(2), Reg(1), Src::Reg(R_SCALAR));
+        pb.sb(R_PTR, base, Reg(2));
+        pb.mul(MulVariant::ShSl, Reg(2), Reg(1), Src::Reg(R_SCALAR));
+        pb.sb(R_PTR, base + 1, Reg(2));
+        pb.lsr(Reg(1), Reg(1), 16);
+        pb.mul(MulVariant::SlSl, Reg(2), Reg(1), Src::Reg(R_SCALAR));
+        pb.sb(R_PTR, base + 2, Reg(2));
+        pb.mul(MulVariant::ShSl, Reg(2), Reg(1), Src::Reg(R_SCALAR));
+        pb.sb(R_PTR, base + 3, Reg(2));
+    }
+    pb.add(R_PTR, R_PTR, reps as i32 * 4);
+    pb.jcmp(CmpCond::Ltu, R_PTR, Src::Reg(R_PEND), l);
+}
+
+/// NI×8: load eight INT8 values with one `ld` (paper Fig. 5).
+fn emit_mul_i8_nix8(pb: &mut ProgramBuilder, unroll: Unroll) {
+    let reps = unroll.reps(DType::I8.block_elems() / 8);
+    let d = crate::dpu::isa::DReg(2); // (r4 = low word, r5 = high word)
+    loop_bounds(pb);
+    let l = pb.here("mul_nix8_loop");
+    for g in 0..reps {
+        let base = g as i32 * 8;
+        pb.ld(d, R_PTR, base);
+        for (word, woff) in [(Reg(4), 0i32), (Reg(5), 4)] {
+            pb.mul(MulVariant::SlSl, Reg(2), word, Src::Reg(R_SCALAR));
+            pb.sb(R_PTR, base + woff, Reg(2));
+            pb.mul(MulVariant::ShSl, Reg(2), word, Src::Reg(R_SCALAR));
+            pb.sb(R_PTR, base + woff + 1, Reg(2));
+            pb.lsr(word, word, 16);
+            pb.mul(MulVariant::SlSl, Reg(2), word, Src::Reg(R_SCALAR));
+            pb.sb(R_PTR, base + woff + 2, Reg(2));
+            pb.mul(MulVariant::ShSl, Reg(2), word, Src::Reg(R_SCALAR));
+            pb.sb(R_PTR, base + woff + 3, Reg(2));
+        }
+    }
+    pb.add(R_PTR, R_PTR, reps as i32 * 8);
+    pb.jcmp(CmpCond::Ltu, R_PTR, Src::Reg(R_PEND), l);
+}
+
+/// DIM: decomposed INT32 multiplication (§III-C). Byte-level partial
+/// products with the unsigned `mul_u*_u*` family, recombined with
+/// `lsl_add`, sign fixed up via XOR of the operands' sign bits.
+fn emit_mul_i32_dim(pb: &mut ProgramBuilder, unroll: Unroll) {
+    let reps = unroll.reps(DType::I32.block_elems());
+    // Loop-invariant scalar prep: r13 = sy, r12 = |y|, r14 = |y| >> 16.
+    pb.asr(Reg(13), R_SCALAR, 31);
+    pb.xor(Reg(12), R_SCALAR, Src::Reg(Reg(13)));
+    pb.sub(Reg(12), Reg(12), Src::Reg(Reg(13)));
+    pb.lsr(Reg(14), Reg(12), 16);
+    loop_bounds(pb);
+    let l = pb.here("mul_dim_loop");
+    for k in 0..reps {
+        let off = k as i32 * 4;
+        let (x, ax, xh, sx) = (Reg(0), Reg(1), Reg(2), Reg(3));
+        let (acc, p, q) = (Reg(4), Reg(5), Reg(6));
+        let (ylo, yhi) = (Reg(12), Reg(14));
+        pb.lw(x, R_PTR, off);
+        pb.asr(sx, x, 31);
+        pb.xor(ax, x, Src::Reg(sx));
+        pb.sub(ax, ax, Src::Reg(sx)); // |x|
+        pb.lsr(xh, ax, 16); // x3:x2
+        // 2^0 term.
+        pb.mul(MulVariant::UlUl, acc, ax, Src::Reg(ylo)); // x0*y0
+        // 2^8 term: x0*y1 + x1*y0.
+        pb.mul(MulVariant::UlUh, p, ax, Src::Reg(ylo));
+        pb.mul(MulVariant::UhUl, q, ax, Src::Reg(ylo));
+        pb.add(p, p, Src::Reg(q));
+        pb.lsl_add(acc, acc, p, 8);
+        // 2^16 term: x1*y1 + x2*y0 + x0*y2.
+        pb.mul(MulVariant::UhUh, p, ax, Src::Reg(ylo));
+        pb.mul(MulVariant::UlUl, q, xh, Src::Reg(ylo));
+        pb.add(p, p, Src::Reg(q));
+        pb.mul(MulVariant::UlUl, q, ax, Src::Reg(yhi));
+        pb.add(p, p, Src::Reg(q));
+        pb.lsl_add(acc, acc, p, 16);
+        // 2^24 term: x0*y3 + x1*y2 + x2*y1 + x3*y0.
+        pb.mul(MulVariant::UlUh, p, ax, Src::Reg(yhi));
+        pb.mul(MulVariant::UhUl, q, ax, Src::Reg(yhi));
+        pb.add(p, p, Src::Reg(q));
+        pb.mul(MulVariant::UlUh, q, xh, Src::Reg(ylo));
+        pb.add(p, p, Src::Reg(q));
+        pb.mul(MulVariant::UhUl, q, xh, Src::Reg(ylo));
+        pb.add(p, p, Src::Reg(q));
+        pb.lsl_add(acc, acc, p, 24);
+        // Sign: res = (acc ^ s) - s with s = sx ^ sy.
+        pb.xor(p, sx, Src::Reg(Reg(13)));
+        pb.xor(acc, acc, Src::Reg(p));
+        pb.sub(acc, acc, Src::Reg(p));
+        pb.sw(R_PTR, off, acc);
+    }
+    pb.add(R_PTR, R_PTR, reps as i32 * 4);
+    pb.jcmp(CmpCond::Ltu, R_PTR, Src::Reg(R_PEND), l);
+}
+
+/// Outcome of one microbenchmark execution on the simulator.
+#[derive(Debug, Clone)]
+pub struct MicrobenchOutcome {
+    pub spec: Spec,
+    pub nr_tasklets: usize,
+    pub total_elems: u64,
+    /// Per-tasklet cycles spent inside the timed region.
+    pub tasklet_cycles: Vec<u32>,
+    pub launch: LaunchResult,
+    /// Millions of operations per second, aggregated the paper's way.
+    pub mops: f64,
+}
+
+/// Build, load, execute and *verify* one microbenchmark configuration.
+///
+/// `total_bytes` must be a multiple of the 1 KB block size; tasklets
+/// share blocks round-robin, so any tasklet count works.
+pub fn run_microbench(
+    spec: Spec,
+    nr_tasklets: usize,
+    total_bytes: u32,
+    seed: u64,
+) -> Result<MicrobenchOutcome> {
+    assert_eq!(total_bytes % BLOCK_BYTES, 0, "buffer must be whole blocks");
+    let program = emit_microbench(spec)?;
+    let mut dpu = Dpu::new();
+    dpu.load_program(&program)?;
+
+    // Stage random input in MRAM and compute the expected result.
+    let mut rng = Rng::new(seed);
+    let scalar = spec.scalar();
+    let n_elems = (total_bytes / spec.dtype.bytes()) as usize;
+    let expected: Vec<u8> = match spec.dtype {
+        DType::I8 => {
+            let input = rng.i8_vec(n_elems);
+            dpu.mram
+                .write(MRAM_A, &input.iter().map(|&v| v as u8).collect::<Vec<_>>())
+                .map_err(|k| crate::Error::Fault { dpu: 0, tasklet: 0, pc: 0, kind: k })?;
+            input
+                .iter()
+                .map(|&v| match spec.op {
+                    Op::Add => (v as i32).wrapping_add(scalar) as u8,
+                    Op::Mul => (v as i32).wrapping_mul(scalar) as u8,
+                })
+                .collect()
+        }
+        DType::I32 => {
+            let input = rng.i32_vec(n_elems);
+            dpu.mram
+                .write_i32_slice(MRAM_A, &input)
+                .map_err(|k| crate::Error::Fault { dpu: 0, tasklet: 0, pc: 0, kind: k })?;
+            input
+                .iter()
+                .flat_map(|&v| {
+                    let r = match spec.op {
+                        Op::Add => v.wrapping_add(scalar),
+                        Op::Mul => v.wrapping_mul(scalar),
+                    };
+                    r.to_le_bytes()
+                })
+                .collect()
+        }
+    };
+
+    // Host args.
+    let mut wr = |a: u32, v: u32| dpu.wram.store32(a, v).expect("args");
+    wr(0, total_bytes);
+    wr(4, scalar as u32);
+    wr(8, nr_tasklets as u32 * BLOCK_BYTES);
+
+    let launch = dpu.launch(nr_tasklets)?;
+
+    // Verify every element.
+    let mut got = vec![0u8; total_bytes as usize];
+    dpu.mram
+        .read(MRAM_A, &mut got)
+        .map_err(|k| crate::Error::Fault { dpu: 0, tasklet: 0, pc: 0, kind: k })?;
+    if got != expected {
+        let first = got.iter().zip(&expected).position(|(a, b)| a != b).unwrap();
+        return Err(crate::Error::Coordinator(format!(
+            "{}: output mismatch at byte {first}: got {} want {}",
+            spec.name(),
+            got[first],
+            expected[first]
+        )));
+    }
+
+    let tasklet_cycles = super::read_tasklet_cycles(&dpu, nr_tasklets);
+    let mops = super::mops(n_elems as u64, &tasklet_cycles);
+    Ok(MicrobenchOutcome {
+        spec,
+        nr_tasklets,
+        total_elems: n_elems as u64,
+        tasklet_cycles,
+        launch,
+        mops,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TEST_BYTES: u32 = 16 * 1024; // 16 blocks — fast but multi-block
+
+    fn mops_of(spec: Spec, t: usize) -> f64 {
+        run_microbench(spec, t, TEST_BYTES, 42).expect("runs + verifies").mops
+    }
+
+    #[test]
+    fn all_variants_compute_correctly() {
+        // `run_microbench` verifies outputs element-by-element; failure
+        // of any variant returns Err.
+        let specs = [
+            Spec::add(DType::I8),
+            Spec::add(DType::I32),
+            Spec::mul(DType::I8, MulImpl::Mulsi3),
+            Spec::mul(DType::I8, MulImpl::Native),
+            Spec::mul(DType::I8, MulImpl::NativeX4),
+            Spec::mul(DType::I8, MulImpl::NativeX8),
+            Spec::mul(DType::I32, MulImpl::Mulsi3),
+            Spec::mul(DType::I32, MulImpl::Dim),
+        ];
+        for s in specs {
+            for u in [Unroll::No, Unroll::X64] {
+                run_microbench(s.with_unroll(u), 4, TEST_BYTES, 7)
+                    .unwrap_or_else(|e| panic!("{}: {e}", s.with_unroll(u).name()));
+            }
+        }
+    }
+
+    #[test]
+    fn int8_add_baseline_hits_80_mops() {
+        let m = mops_of(Spec::add(DType::I8), 16);
+        assert!((m - 80.0).abs() < 1.0, "INT8 ADD baseline = {m} MOPS, paper: 80");
+    }
+
+    #[test]
+    fn int32_add_baseline_hits_67_mops() {
+        let m = mops_of(Spec::add(DType::I32), 16);
+        assert!((m - 66.7).abs() < 1.0, "INT32 ADD baseline = {m} MOPS, paper: 67");
+    }
+
+    #[test]
+    fn int8_mul_baseline_is_2_7x_slower_than_add() {
+        let add = mops_of(Spec::add(DType::I8), 16);
+        let mul = mops_of(Spec::mul(DType::I8, MulImpl::Mulsi3), 16);
+        let gap = add / mul;
+        assert!((2.4..=3.1).contains(&gap), "gap={gap}, paper: 2.7x");
+    }
+
+    #[test]
+    fn int32_mul_baseline_is_6x_slower_than_add() {
+        let add = mops_of(Spec::add(DType::I32), 16);
+        let mul = mops_of(Spec::mul(DType::I32, MulImpl::Mulsi3), 16);
+        let gap = add / mul;
+        assert!((5.2..=7.0).contains(&gap), "gap={gap}, paper: 6x");
+    }
+
+    #[test]
+    fn ni_matches_add_performance() {
+        let add = mops_of(Spec::add(DType::I8), 16);
+        let ni = mops_of(Spec::mul(DType::I8, MulImpl::Native), 16);
+        assert!((ni / add - 1.0).abs() < 0.02, "NI={ni} ADD={add}, paper: equal");
+    }
+
+    #[test]
+    fn nix8_gains_about_80_percent_over_ni() {
+        let ni = mops_of(Spec::mul(DType::I8, MulImpl::Native), 16);
+        let nix8 = mops_of(Spec::mul(DType::I8, MulImpl::NativeX8), 16);
+        let gain = nix8 / ni;
+        assert!((1.6..=2.1).contains(&gain), "gain={gain}, paper: +80%");
+    }
+
+    #[test]
+    fn dim_beats_mulsi3_for_int32() {
+        let base = mops_of(Spec::mul(DType::I32, MulImpl::Mulsi3), 16);
+        let dim = mops_of(Spec::mul(DType::I32, MulImpl::Dim), 16);
+        let gain = dim / base;
+        assert!((1.1..=1.4).contains(&gain), "gain={gain}, paper: +16%");
+    }
+
+    #[test]
+    fn unrolling_doubles_int32_add() {
+        let base = mops_of(Spec::add(DType::I32), 16);
+        let unrolled = mops_of(Spec::add(DType::I32).with_unroll(Unroll::X64), 16);
+        let gain = unrolled / base;
+        assert!((1.9..=2.1).contains(&gain), "gain={gain}, paper: 2x");
+    }
+
+    #[test]
+    fn unrolled_adds_reach_133_mops() {
+        let i8u = mops_of(Spec::add(DType::I8).with_unroll(Unroll::X64), 16);
+        let i32u = mops_of(Spec::add(DType::I32).with_unroll(Unroll::X64), 16);
+        assert!((i8u - 133.0).abs() < 3.0, "INT8 ADD x64 = {i8u}, paper: 133");
+        assert!((i32u - 133.0).abs() < 3.0, "INT32 ADD x64 = {i32u}, paper: 133");
+    }
+
+    #[test]
+    fn tasklet_scaling_plateaus_at_11() {
+        // 176 blocks divide evenly across 1/4/8/11/16 tasklets, so the
+        // ramp is not confounded by uneven block assignment.
+        let bytes = 176 * 1024;
+        let spec = Spec::add(DType::I8);
+        let m = |t| run_microbench(spec, t, bytes, 42).unwrap().mops;
+        let (m1, m4, m8, m11, m16) = (m(1), m(4), m(8), m(11), m(16));
+        // Linear ramp then plateau (Fig. 3).
+        assert!((m4 / m1 - 4.0).abs() < 0.1, "m4/m1 = {}", m4 / m1);
+        assert!((m8 / m1 - 8.0).abs() < 0.2, "m8/m1 = {}", m8 / m1);
+        assert!((m11 / m1 - 11.0).abs() < 0.3, "m11/m1 = {}", m11 / m1);
+        assert!((m16 / m11 - 1.0).abs() < 0.02, "plateau: m16={m16} m11={m11}");
+    }
+
+    #[test]
+    fn dim_auto_unroll_overflows_iram() {
+        // Full unroll of 256 DIM bodies ≈ 7k instructions > 4096 —
+        // the paper's "linker error" case.
+        let e = emit_microbench(Spec::mul(DType::I32, MulImpl::Dim).with_unroll(Unroll::Auto));
+        match e {
+            Ok(p) => {
+                // emission succeeded; loading must fail.
+                let mut dpu = Dpu::new();
+                assert!(matches!(
+                    dpu.load_program(&p),
+                    Err(crate::Error::IramOverflow { .. })
+                ));
+            }
+            Err(crate::Error::IramOverflow { .. }) => {}
+            Err(other) => panic!("unexpected: {other}"),
+        }
+    }
+
+    #[test]
+    fn negative_scalar_dim_correct() {
+        // Exercise DIM's sign path directly with a negative scalar.
+        use crate::dpu::Dpu;
+        let spec = Spec::mul(DType::I32, MulImpl::Dim);
+        let program = emit_microbench(spec).unwrap();
+        let mut dpu = Dpu::new();
+        dpu.load_program(&program).unwrap();
+        let input: Vec<i32> = vec![5, -7, i32::MIN, i32::MAX, 0, -1, 123456789, -987654321];
+        let mut padded = input.clone();
+        padded.resize(256, 3);
+        dpu.mram.write_i32_slice(MRAM_A, &padded).unwrap();
+        let scalar: i32 = -3_000_001;
+        dpu.wram.store32(0, 1024).unwrap();
+        dpu.wram.store32(4, scalar as u32).unwrap();
+        dpu.wram.store32(8, BLOCK_BYTES).unwrap();
+        dpu.launch(1).unwrap();
+        let got = dpu.mram.read_i32_slice(MRAM_A, padded.len()).unwrap();
+        for (i, (&x, &g)) in padded.iter().zip(&got).enumerate() {
+            assert_eq!(g, x.wrapping_mul(scalar), "elem {i}: {x} * {scalar}");
+        }
+    }
+}

@@ -1,0 +1,403 @@
+//! Bit-serial dot product (paper §IV, Algorithm 2) and its native
+//! baselines, as DPU kernels.
+//!
+//! Three INT4 dot-product implementations are compared in Fig. 9:
+//!
+//! * **native baseline** — each INT4 stored as one INT8 byte, classic
+//!   `acc += a[i] * b[i]` loop with the native `mul_sl_sl` instruction;
+//! * **native optimized** — same arithmetic with the §III-B/§III-D
+//!   optimizations: 64-bit `ld` block loads and 8× unrolling;
+//! * **BSDP** — operands bit-plane transposed on the host
+//!   ([`super::encode`]); the kernel evaluates the 16 plane pairs per
+//!   32-element block with `AND` + `cao` + `lsl_add` (one instruction
+//!   each), subtracting the mixed plane-3 terms for signed semantics.
+//!
+//! The dot-product *bodies* are exposed ([`emit_dot_chunk`]) so the
+//! GEMV kernels of [`super::gemv`] reuse exactly the same inner loops.
+
+use super::mulsi3::emit_mulsi3;
+use super::{AUX_BASE, BUF_BASE, CYCLES_BASE, MRAM_A, MRAM_B};
+use crate::dpu::builder::{Label, ProgramBuilder};
+use crate::dpu::isa::{CmpCond, MulVariant, Program, Reg, Src};
+use crate::dpu::{Dpu, LaunchResult};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// INT4 dot-product implementation under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DotVariant {
+    /// INT4-as-INT8 with a naive native-instruction loop.
+    NativeBaseline,
+    /// INT4-as-INT8 with the compiler's `__mulsi3` (what building the
+    /// baseline without §III's fixes actually produces — reported as an
+    /// extra data point, not part of Fig. 9).
+    NativeMulsi3,
+    /// INT4-as-INT8 with 64-bit loads + 8× unroll (§III-B + §III-D).
+    NativeOptimized,
+    /// Bit-serial dot product, Algorithm 2 (8× unrolled blocks).
+    Bsdp,
+}
+
+impl DotVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            DotVariant::NativeBaseline => "native baseline",
+            DotVariant::NativeMulsi3 => "native (__mulsi3)",
+            DotVariant::NativeOptimized => "native optimized",
+            DotVariant::Bsdp => "BSDP",
+        }
+    }
+
+    /// Bytes of MRAM/WRAM traffic per *element* on each operand buffer:
+    /// one byte per INT4-as-INT8 value, half a byte in bit-plane form.
+    pub fn bytes_per_elem_x2(self) -> u32 {
+        match self {
+            DotVariant::Bsdp => 1,
+            _ => 2,
+        }
+    }
+}
+
+// Dot-body register convention (used by both the microbenchmark and the
+// GEMV kernels): caller provides A/B pointers, the body consumes them.
+pub const R_ACC: Reg = Reg(9);
+pub const R_APTR: Reg = Reg(10);
+pub const R_BPTR: Reg = Reg(11);
+pub const R_AEND: Reg = Reg(12);
+
+/// Emit the inner dot-product loop over `elems` INT4 elements starting
+/// at `R_APTR`/`R_BPTR` (WRAM), accumulating into `R_ACC` (not cleared
+/// here). Clobbers r0..r8 and the pointer registers. `mulsi3` is
+/// required for [`DotVariant::NativeMulsi3`] only.
+pub fn emit_dot_chunk(
+    pb: &mut ProgramBuilder,
+    variant: DotVariant,
+    elems: u32,
+    mulsi3: Option<Label>,
+) {
+    match variant {
+        DotVariant::NativeBaseline => {
+            assert_eq!(elems % 1 as u32, 0);
+            pb.add(R_AEND, R_APTR, elems as i32);
+            let l = pb.here("dot_nb_loop");
+            pb.lbs(Reg(0), R_APTR, 0);
+            pb.lbs(Reg(1), R_BPTR, 0);
+            pb.mul(MulVariant::SlSl, Reg(0), Reg(0), Src::Reg(Reg(1)));
+            pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
+            pb.add(R_APTR, R_APTR, 1);
+            pb.add(R_BPTR, R_BPTR, 1);
+            pb.jcmp(CmpCond::Ltu, R_APTR, Src::Reg(R_AEND), l);
+        }
+        DotVariant::NativeMulsi3 => {
+            let mulsi3 = mulsi3.expect("NativeMulsi3 needs the __mulsi3 label");
+            pb.add(R_AEND, R_APTR, elems as i32);
+            let l = pb.here("dot_nm_loop");
+            pb.lbs(super::mulsi3::ARG_A, R_APTR, 0);
+            pb.lbs(super::mulsi3::ARG_B, R_BPTR, 0);
+            pb.call(super::mulsi3::LINK, mulsi3);
+            pb.add(R_ACC, R_ACC, Src::Reg(super::mulsi3::RESULT));
+            pb.add(R_APTR, R_APTR, 1);
+            pb.add(R_BPTR, R_BPTR, 1);
+            pb.jcmp(CmpCond::Ltu, R_APTR, Src::Reg(R_AEND), l);
+        }
+        DotVariant::NativeOptimized => {
+            // 8 elements per iteration via two 64-bit loads, byte pairs
+            // multiplied with matching-lane mul variants; 8× unrolled.
+            const UNROLL: u32 = 8;
+            assert_eq!(elems % (8 * UNROLL), 0, "optimized dot needs 64-element multiples");
+            pb.add(R_AEND, R_APTR, elems as i32);
+            let da = crate::dpu::isa::DReg(1); // r2 (low), r3 (high)
+            let db = crate::dpu::isa::DReg(2); // r4 (low), r5 (high)
+            let l = pb.here("dot_no_loop");
+            for g in 0..UNROLL {
+                let base = g as i32 * 8;
+                pb.ld(da, R_APTR, base);
+                pb.ld(db, R_BPTR, base);
+                for (wa, wb) in [(Reg(2), Reg(4)), (Reg(3), Reg(5))] {
+                    pb.mul(MulVariant::SlSl, Reg(0), wa, Src::Reg(wb));
+                    pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
+                    pb.mul(MulVariant::ShSh, Reg(0), wa, Src::Reg(wb));
+                    pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
+                    pb.lsr(wa, wa, 16);
+                    pb.lsr(wb, wb, 16);
+                    pb.mul(MulVariant::SlSl, Reg(0), wa, Src::Reg(wb));
+                    pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
+                    pb.mul(MulVariant::ShSh, Reg(0), wa, Src::Reg(wb));
+                    pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
+                }
+            }
+            pb.add(R_APTR, R_APTR, (8 * UNROLL) as i32);
+            pb.add(R_BPTR, R_BPTR, (8 * UNROLL) as i32);
+            pb.jcmp(CmpCond::Ltu, R_APTR, Src::Reg(R_AEND), l);
+        }
+        DotVariant::Bsdp => {
+            // One 32-element block = 4 plane words per operand (16 B).
+            // 8 blocks per iteration (Algorithm 2's "Unrolled 8×").
+            const UNROLL: u32 = 8;
+            assert_eq!(elems % (32 * UNROLL), 0, "BSDP needs 256-element multiples");
+            let bytes = elems / 2; // nibble planes: 16 B per 32 elements
+            pb.add(R_AEND, R_APTR, bytes as i32);
+            let l = pb.here("dot_bs_loop");
+            for blk in 0..UNROLL {
+                let base = blk as i32 * 16;
+                // x planes → r0..r3, y planes → r4..r7.
+                for (i, r) in [Reg(0), Reg(1), Reg(2), Reg(3)].into_iter().enumerate() {
+                    pb.lw(r, R_APTR, base + 4 * i as i32);
+                }
+                for (i, r) in [Reg(4), Reg(5), Reg(6), Reg(7)].into_iter().enumerate() {
+                    pb.lw(r, R_BPTR, base + 4 * i as i32);
+                }
+                for j in 0..4u8 {
+                    for k in 0..4u8 {
+                        pb.and(Reg(8), Reg(j), Src::Reg(Reg(4 + k)));
+                        pb.cao(Reg(8), Reg(8));
+                        if (j == 3) ^ (k == 3) {
+                            // Mixed plane-3 term: subtract (signed INT4).
+                            pb.lsl(Reg(8), Reg(8), (j + k) as i32);
+                            pb.sub(R_ACC, R_ACC, Src::Reg(Reg(8)));
+                        } else {
+                            pb.lsl_add(R_ACC, R_ACC, Reg(8), j + k);
+                        }
+                    }
+                }
+            }
+            pb.add(R_APTR, R_APTR, (16 * UNROLL) as i32);
+            pb.add(R_BPTR, R_BPTR, (16 * UNROLL) as i32);
+            pb.jcmp(CmpCond::Ltu, R_APTR, Src::Reg(R_AEND), l);
+        }
+    }
+}
+
+// Microbenchmark skeleton registers (distinct from the dot body's).
+const R_T0: Reg = Reg(15);
+const R_T1: Reg = Reg(16);
+const R_CYC: Reg = Reg(17);
+const R_END: Reg = Reg(19);
+const R_BUFA: Reg = Reg(20);
+const R_MPTR: Reg = Reg(21);
+const R_STRIDE: Reg = Reg(22);
+const R_BUFB: Reg = Reg(13);
+const R_MOFF_B: Reg = Reg(14);
+
+/// WRAM bytes staged per operand per iteration.
+const CHUNK: u32 = 1024;
+
+/// Emit the Fig. 9 microbenchmark for one dot-product variant: stream
+/// paired 1 KB chunks of A and B from MRAM, accumulate the (timed) dot
+/// product, report per-tasklet cycles and partial sums.
+pub fn emit_dot_microbench(variant: DotVariant) -> Result<Program> {
+    let mut pb = ProgramBuilder::new();
+    let main = pb.new_label("main");
+    pb.jump(main);
+    let mulsi3 = if variant == DotVariant::NativeMulsi3 {
+        Some(emit_mulsi3(&mut pb))
+    } else {
+        None
+    };
+    pb.bind(main);
+
+    // Per-tasklet WRAM: A chunk at BUF_BASE + id*2048, B right after.
+    pb.move_(R_BUFA, Src::Id8);
+    pb.lsl(R_BUFA, R_BUFA, 8);
+    pb.add(R_BUFA, R_BUFA, BUF_BASE as i32);
+    pb.add(R_BUFB, R_BUFA, CHUNK as i32);
+    // MRAM cursor into A; B mirrors A at MRAM_B + same offset.
+    pb.move_(R_MPTR, Src::Id8);
+    pb.lsl(R_MPTR, R_MPTR, 7);
+    pb.add(R_MPTR, R_MPTR, MRAM_A as i32);
+    pb.move_(R_MOFF_B, (MRAM_B - MRAM_A) as i32);
+    // Args: [0] = total A-buffer bytes, [8] = stride bytes.
+    pb.move_(Reg(3), 0);
+    pb.lw(R_END, Reg(3), 0);
+    pb.add(R_END, R_END, MRAM_A as i32);
+    pb.lw(R_STRIDE, Reg(3), 8);
+    pb.move_(R_CYC, 0);
+    pb.move_(R_ACC, Src::Zero);
+
+    let done = pb.new_label("done");
+    pb.jcmp(CmpCond::Geu, R_MPTR, Src::Reg(R_END), done);
+    let blocks = pb.here("blocks");
+    pb.ldma(R_BUFA, R_MPTR, CHUNK);
+    pb.add(Reg(3), R_MPTR, Src::Reg(R_MOFF_B));
+    pb.ldma(R_BUFB, Reg(3), CHUNK);
+    pb.barrier();
+    pb.time(R_T0);
+    pb.move_(R_APTR, R_BUFA);
+    pb.move_(R_BPTR, R_BUFB);
+    let elems = match variant {
+        DotVariant::Bsdp => CHUNK * 2, // planes: 1 KB covers 2048 elements
+        _ => CHUNK,
+    };
+    emit_dot_chunk(&mut pb, variant, elems, mulsi3);
+    pb.time(R_T1);
+    pb.sub(R_T1, R_T1, R_T0);
+    pb.add(R_CYC, R_CYC, R_T1);
+    pb.barrier();
+    pb.add(R_MPTR, R_MPTR, Src::Reg(R_STRIDE));
+    pb.jcmp(CmpCond::Ltu, R_MPTR, Src::Reg(R_END), blocks);
+    pb.bind(done);
+    // cycles → CYCLES_BASE + 4*id, partial dot → AUX_BASE + 4*id.
+    pb.move_(Reg(3), Src::Id4);
+    pb.add(Reg(3), Reg(3), CYCLES_BASE as i32);
+    pb.sw(Reg(3), 0, R_CYC);
+    pb.move_(Reg(3), Src::Id4);
+    pb.add(Reg(3), Reg(3), AUX_BASE as i32);
+    pb.sw(Reg(3), 0, R_ACC);
+    pb.stop();
+    pb.build()
+}
+
+/// Outcome of one dot-product microbenchmark run.
+#[derive(Debug, Clone)]
+pub struct DotOutcome {
+    pub variant: DotVariant,
+    pub nr_tasklets: usize,
+    pub elems: u64,
+    pub dot: i32,
+    pub tasklet_cycles: Vec<u32>,
+    pub launch: LaunchResult,
+    /// Million multiply-accumulate operations per second (timed region).
+    pub mmacs: f64,
+}
+
+/// Run the Fig. 9 microbenchmark for `variant` over `elems` signed INT4
+/// elements; verifies the dot product against the host reference.
+pub fn run_dot_microbench(
+    variant: DotVariant,
+    nr_tasklets: usize,
+    elems: usize,
+    seed: u64,
+) -> Result<DotOutcome> {
+    assert_eq!(elems % 2048, 0, "elems must be a multiple of 2048 (1 KB A-chunks)");
+    let program = emit_dot_microbench(variant)?;
+    let mut dpu = Dpu::new();
+    dpu.load_program(&program)?;
+
+    let mut rng = Rng::new(seed);
+    let a = rng.i4_vec(elems);
+    let b = rng.i4_vec(elems);
+    let expected = super::encode::dot_i4_ref(&a, &b);
+
+    let mram_err = |k| crate::Error::Fault { dpu: 0, tasklet: 0, pc: 0, kind: k };
+    let a_bytes = match variant {
+        DotVariant::Bsdp => {
+            let planes = super::encode::bitplane_encode_i4(&a);
+            dpu.mram.write_u32_slice(MRAM_A, &planes).map_err(mram_err)?;
+            let planes_b = super::encode::bitplane_encode_i4(&b);
+            dpu.mram.write_u32_slice(MRAM_B, &planes_b).map_err(mram_err)?;
+            (elems / 2) as u32
+        }
+        _ => {
+            let raw_a: Vec<u8> = a.iter().map(|&v| v as u8).collect();
+            let raw_b: Vec<u8> = b.iter().map(|&v| v as u8).collect();
+            dpu.mram.write(MRAM_A, &raw_a).map_err(mram_err)?;
+            dpu.mram.write(MRAM_B, &raw_b).map_err(mram_err)?;
+            elems as u32
+        }
+    };
+
+    dpu.wram.store32(0, a_bytes).unwrap();
+    dpu.wram.store32(8, nr_tasklets as u32 * CHUNK).unwrap();
+    let launch = dpu.launch(nr_tasklets)?;
+
+    // Sum per-tasklet partials (wrapping, like the DPU accumulators).
+    let mut dot = 0i32;
+    for t in 0..nr_tasklets {
+        dot = dot.wrapping_add(dpu.wram.load32(AUX_BASE + 4 * t as u32).unwrap() as i32);
+    }
+    if dot != expected {
+        return Err(crate::Error::Coordinator(format!(
+            "{}: dot mismatch: got {dot}, want {expected}",
+            variant.name()
+        )));
+    }
+    let tasklet_cycles = super::read_tasklet_cycles(&dpu, nr_tasklets);
+    let mmacs = super::mops(elems as u64, &tasklet_cycles);
+    Ok(DotOutcome {
+        variant,
+        nr_tasklets,
+        elems: elems as u64,
+        dot,
+        tasklet_cycles,
+        launch,
+        mmacs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ELEMS: usize = 64 * 1024;
+
+    fn run(v: DotVariant, t: usize) -> DotOutcome {
+        run_dot_microbench(v, t, ELEMS, 99).expect("runs + verifies")
+    }
+
+    #[test]
+    fn all_variants_agree_with_reference() {
+        // run_dot_microbench fails on mismatch; exercise all variants
+        // and several seeds.
+        for v in [
+            DotVariant::NativeBaseline,
+            DotVariant::NativeMulsi3,
+            DotVariant::NativeOptimized,
+            DotVariant::Bsdp,
+        ] {
+            for seed in [1, 2, 3] {
+                run_dot_microbench(v, 8, 8192, seed)
+                    .unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn bsdp_beats_native_baseline_by_over_2_7x() {
+        let base = run(DotVariant::NativeBaseline, 16).mmacs;
+        let bsdp = run(DotVariant::Bsdp, 16).mmacs;
+        let speedup = bsdp / base;
+        assert!(speedup > 2.7, "BSDP speedup = {speedup:.2}x, paper: >2.7x");
+        assert!(speedup < 4.5, "speedup implausibly high: {speedup:.2}x");
+    }
+
+    #[test]
+    fn bsdp_beats_native_optimized() {
+        let opt = run(DotVariant::NativeOptimized, 16).mmacs;
+        let bsdp = run(DotVariant::Bsdp, 16).mmacs;
+        let adv = bsdp / opt;
+        assert!(adv > 1.1, "BSDP vs optimized = {adv:.2}x, paper: 1.22x");
+        assert!(adv < 2.0, "advantage implausibly high: {adv:.2}x");
+    }
+
+    #[test]
+    fn optimized_beats_baseline() {
+        let base = run(DotVariant::NativeBaseline, 16).mmacs;
+        let opt = run(DotVariant::NativeOptimized, 16).mmacs;
+        assert!(opt / base > 1.5, "opt/base = {}", opt / base);
+    }
+
+    #[test]
+    fn mulsi3_variant_is_slowest() {
+        let m = run(DotVariant::NativeMulsi3, 16).mmacs;
+        let base = run(DotVariant::NativeBaseline, 16).mmacs;
+        assert!(m < base, "__mulsi3 dot ({m}) should trail native baseline ({base})");
+    }
+
+    #[test]
+    fn extreme_values_correct() {
+        // All-(-8) vectors stress the signed plane-3 path.
+        let program = emit_dot_microbench(DotVariant::Bsdp).unwrap();
+        let mut dpu = Dpu::new();
+        dpu.load_program(&program).unwrap();
+        let n = 2048usize;
+        let a = vec![-8i8; n];
+        let planes = super::super::encode::bitplane_encode_i4(&a);
+        dpu.mram.write_u32_slice(MRAM_A, &planes).unwrap();
+        dpu.mram.write_u32_slice(MRAM_B, &planes).unwrap();
+        dpu.wram.store32(0, (n / 2) as u32).unwrap();
+        dpu.wram.store32(8, CHUNK).unwrap();
+        dpu.launch(1).unwrap();
+        let dot = dpu.wram.load32(AUX_BASE).unwrap() as i32;
+        assert_eq!(dot, 64 * n as i32);
+    }
+}

@@ -1,0 +1,199 @@
+//! Host-side data-layout transformations for low-precision kernels.
+//!
+//! The paper performs these on the host with AVX512 and amortizes the
+//! cost across many GEMV invocations (§IV-B): INT4 values are
+//! *bit-plane transposed* — every block of 32 elements becomes four
+//! consecutive `u32` words, word `j` holding bit `j` of each of the 32
+//! elements — so the DPU can evaluate bit-level products with
+//! `AND` + `cao` (popcount) + `lsl_add`.
+
+/// Number of elements per bit-plane block (one bit per `u32` lane).
+pub const BLOCK: usize = 32;
+/// Bit-planes per INT4/UINT4 element.
+pub const PLANES: usize = 4;
+
+/// Bit-plane encode unsigned 4-bit values (each in `0..=15`, one per
+/// byte). `vals.len()` must be a multiple of 32. Output: `vals.len()/32`
+/// blocks × 4 plane words.
+pub fn bitplane_encode_u4(vals: &[u8]) -> Vec<u32> {
+    assert_eq!(vals.len() % BLOCK, 0, "length must be a multiple of 32");
+    assert!(vals.iter().all(|&v| v < 16), "values must be 4-bit");
+    encode_nibbles(vals)
+}
+
+/// Bit-plane encode signed 4-bit values (each in `-8..=7`, one per
+/// byte) as their two's-complement nibbles. The BSDP kernel applies the
+/// signed weighting (−2³ for bit-plane 3) during accumulation.
+pub fn bitplane_encode_i4(vals: &[i8]) -> Vec<u32> {
+    assert_eq!(vals.len() % BLOCK, 0, "length must be a multiple of 32");
+    assert!(vals.iter().all(|&v| (-8..=7).contains(&v)), "values must be 4-bit signed");
+    let nibbles: Vec<u8> = vals.iter().map(|&v| (v as u8) & 0xF).collect();
+    encode_nibbles(&nibbles)
+}
+
+fn encode_nibbles(nibbles: &[u8]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(nibbles.len() / BLOCK * PLANES);
+    for block in nibbles.chunks_exact(BLOCK) {
+        for plane in 0..PLANES {
+            let mut word = 0u32;
+            for (lane, &v) in block.iter().enumerate() {
+                word |= (((v >> plane) & 1) as u32) << lane;
+            }
+            out.push(word);
+        }
+    }
+    out
+}
+
+/// Decode back to unsigned nibbles (test helper / round-trip checks).
+pub fn bitplane_decode_u4(planes: &[u32]) -> Vec<u8> {
+    assert_eq!(planes.len() % PLANES, 0);
+    let mut out = Vec::with_capacity(planes.len() / PLANES * BLOCK);
+    for block in planes.chunks_exact(PLANES) {
+        for lane in 0..BLOCK {
+            let mut v = 0u8;
+            for (plane, &w) in block.iter().enumerate() {
+                v |= (((w >> lane) & 1) as u8) << plane;
+            }
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Decode back to signed nibbles.
+pub fn bitplane_decode_i4(planes: &[u32]) -> Vec<i8> {
+    bitplane_decode_u4(planes)
+        .into_iter()
+        .map(|v| if v & 0x8 != 0 { (v | 0xF0) as i8 } else { v as i8 })
+        .collect()
+}
+
+/// Pack signed nibbles two-per-byte (the storage format llama.cpp-style
+/// CPU kernels use; the paper's footnote 5 notes the unpacking cost).
+pub fn pack_i4_pairs(vals: &[i8]) -> Vec<u8> {
+    assert_eq!(vals.len() % 2, 0);
+    vals.chunks_exact(2).map(|p| ((p[0] as u8) & 0xF) | (((p[1] as u8) & 0xF) << 4)).collect()
+}
+
+/// Unpack two-per-byte signed nibbles.
+pub fn unpack_i4_pairs(packed: &[u8]) -> Vec<i8> {
+    let mut out = Vec::with_capacity(packed.len() * 2);
+    for &b in packed {
+        for v in [b & 0xF, b >> 4] {
+            out.push(if v & 0x8 != 0 { (v | 0xF0) as i8 } else { v as i8 });
+        }
+    }
+    out
+}
+
+/// Reference signed INT4 dot product (i32, wrapping — matches the DPU
+/// accumulator width).
+pub fn dot_i4_ref(a: &[i8], b: &[i8]) -> i32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).fold(0i32, |acc, (&x, &y)| acc.wrapping_add(x as i32 * y as i32))
+}
+
+/// Reference unsigned UINT4 dot product.
+pub fn dot_u4_ref(a: &[u8], b: &[u8]) -> i32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).fold(0i32, |acc, (&x, &y)| acc.wrapping_add(x as i32 * y as i32))
+}
+
+/// Reference INT8 dot product (i32, wrapping).
+pub fn dot_i8_ref(a: &[i8], b: &[i8]) -> i32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).fold(0i32, |acc, (&x, &y)| acc.wrapping_add(x as i32 * y as i32))
+}
+
+/// Host-side software BSDP evaluation over encoded planes — the oracle
+/// for Algorithm 2 itself (independent of the DPU kernel).
+pub fn bsdp_eval_i4(a_planes: &[u32], b_planes: &[u32]) -> i32 {
+    assert_eq!(a_planes.len(), b_planes.len());
+    assert_eq!(a_planes.len() % PLANES, 0);
+    let mut acc = 0i32;
+    for (ab, bb) in a_planes.chunks_exact(PLANES).zip(b_planes.chunks_exact(PLANES)) {
+        for (j, &aw) in ab.iter().enumerate() {
+            for (k, &bw) in bb.iter().enumerate() {
+                let popc = (aw & bw).count_ones() as i32;
+                let term = popc.wrapping_shl((j + k) as u32);
+                // Signed weighting: bit 3 carries −2³, so terms with
+                // exactly one plane-3 factor are subtracted.
+                if (j == 3) ^ (k == 3) {
+                    acc = acc.wrapping_sub(term);
+                } else {
+                    acc = acc.wrapping_add(term);
+                }
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn u4_roundtrip() {
+        let mut rng = Rng::new(1);
+        let vals = rng.u4_vec(256);
+        let planes = bitplane_encode_u4(&vals);
+        assert_eq!(planes.len(), 256 / 32 * 4);
+        assert_eq!(bitplane_decode_u4(&planes), vals);
+    }
+
+    #[test]
+    fn i4_roundtrip() {
+        let mut rng = Rng::new(2);
+        let vals = rng.i4_vec(320);
+        assert_eq!(bitplane_decode_i4(&bitplane_encode_i4(&vals)), vals);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(3);
+        let vals = rng.i4_vec(128);
+        assert_eq!(unpack_i4_pairs(&pack_i4_pairs(&vals)), vals);
+        // packed form is half the size
+        assert_eq!(pack_i4_pairs(&vals).len(), 64);
+    }
+
+    #[test]
+    fn plane_words_have_expected_structure() {
+        // 32 copies of value 0b0101 → planes 0 and 2 all-ones.
+        let vals = vec![0b0101u8; 32];
+        let p = bitplane_encode_u4(&vals);
+        assert_eq!(p, vec![u32::MAX, 0, u32::MAX, 0]);
+    }
+
+    #[test]
+    fn bsdp_eval_matches_direct_dot_signed() {
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let a = rng.i4_vec(96);
+            let b = rng.i4_vec(96);
+            let got = bsdp_eval_i4(&bitplane_encode_i4(&a), &bitplane_encode_i4(&b));
+            assert_eq!(got, dot_i4_ref(&a, &b));
+        }
+    }
+
+    #[test]
+    fn bsdp_extremes() {
+        // all -8 × all -8 = 64 per element (plane-3 × plane-3 positive).
+        let a = vec![-8i8; 32];
+        let got = bsdp_eval_i4(&bitplane_encode_i4(&a), &bitplane_encode_i4(&a));
+        assert_eq!(got, 64 * 32);
+        // all -8 × all 7
+        let b = vec![7i8; 32];
+        let got = bsdp_eval_i4(&bitplane_encode_i4(&a), &bitplane_encode_i4(&b));
+        assert_eq!(got, -56 * 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "4-bit")]
+    fn encode_rejects_out_of_range() {
+        let _ = bitplane_encode_u4(&[16; 32]);
+    }
+}

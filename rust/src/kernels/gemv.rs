@@ -1,0 +1,468 @@
+//! INT8 and INT4 GEMV DPU kernels (paper §VI).
+//!
+//! The coordinator partitions the matrix row-wise across DPUs and
+//! broadcasts the vector; each DPU computes `y[r] = Σ_c M[r,c] · x[c]`
+//! for its block of rows. Within a DPU, rows are interleaved across
+//! tasklets (`row % T == tasklet id`) and each row is streamed through
+//! WRAM in paired 1 KB chunks of matrix and vector data. The dot-product
+//! inner loops are exactly the ones benchmarked in Fig. 9
+//! ([`crate::kernels::bsdp::emit_dot_chunk`]):
+//!
+//! * [`GemvVariant::I8Baseline`] — naive native-instruction loop;
+//! * [`GemvVariant::I8Mulsi3`] — the §III-A compiler output (`__mulsi3`
+//!   call per multiply), reported as an extra data point;
+//! * [`GemvVariant::I8Opt`] — the paper's optimized INT8 kernel (64-bit
+//!   loads, matched-lane byte multiplies, 8× unroll);
+//! * [`GemvVariant::I4Bsdp`] — the INT4 bit-serial kernel over
+//!   host-encoded bit-planes ([`crate::kernels::encode`]).
+//!
+//! # Per-DPU MRAM layout
+//!
+//! ```text
+//! 0x00_2000  y output (i32, tasklet-major, 512 B per tasklet)
+//! 0x08_0000  x vector (INT8 bytes, or bit-planes for BSDP)
+//! 0x10_0000  matrix block, row-major, power-of-two row stride
+//! ```
+
+use super::bsdp::{emit_dot_chunk, DotVariant, R_ACC, R_APTR, R_BPTR};
+use super::mulsi3::emit_mulsi3;
+use super::BUF_BASE;
+use crate::dpu::builder::ProgramBuilder;
+use crate::dpu::isa::{AluOp, CmpCond, Program, Reg, Src};
+use crate::dpu::{Dpu, LaunchResult};
+use crate::Result;
+
+/// MRAM offset of the y output region (tasklet-major, see module docs).
+pub const GEMV_Y: u32 = 0x2000;
+/// MRAM offset of the x vector.
+pub const GEMV_X: u32 = 0x8_0000;
+/// MRAM offset of the matrix block.
+pub const GEMV_M: u32 = 0x10_0000;
+/// WRAM offset of the per-tasklet y staging buffers.
+pub const YBUF_BASE: u32 = 0x8200;
+/// Bytes per tasklet in the y staging buffer (≤128 rows per tasklet).
+pub const YBUF_STRIDE: u32 = 512;
+/// WRAM chunk size per operand.
+pub const CHUNK: u32 = 1024;
+
+/// GEMV kernel variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GemvVariant {
+    I8Baseline,
+    I8Mulsi3,
+    I8Opt,
+    I4Bsdp,
+}
+
+impl GemvVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            GemvVariant::I8Baseline => "INT8 GEMV baseline",
+            GemvVariant::I8Mulsi3 => "INT8 GEMV (__mulsi3)",
+            GemvVariant::I8Opt => "INT8 GEMV optimized",
+            GemvVariant::I4Bsdp => "INT4 GEMV (BSDP)",
+        }
+    }
+
+    fn dot(self) -> DotVariant {
+        match self {
+            GemvVariant::I8Baseline => DotVariant::NativeBaseline,
+            GemvVariant::I8Mulsi3 => DotVariant::NativeMulsi3,
+            GemvVariant::I8Opt => DotVariant::NativeOptimized,
+            GemvVariant::I4Bsdp => DotVariant::Bsdp,
+        }
+    }
+
+    /// Row stride in MRAM bytes for `cols` columns.
+    pub fn row_bytes(self, cols: u32) -> u32 {
+        match self {
+            GemvVariant::I4Bsdp => cols / 2, // 4 bits per element
+            _ => cols,
+        }
+    }
+
+    /// Elements covered by one 1 KB chunk.
+    pub fn chunk_elems(self) -> u32 {
+        match self {
+            GemvVariant::I4Bsdp => 2 * CHUNK,
+            _ => CHUNK,
+        }
+    }
+
+    /// Column-count constraint (chunking + power-of-two row stride).
+    pub fn cols_ok(self, cols: u32) -> bool {
+        let rb = self.row_bytes(cols);
+        rb >= CHUNK && rb % CHUNK == 0 && rb.is_power_of_two()
+    }
+}
+
+// Register map (dot bodies use r0..r12; see bsdp.rs).
+const R_XBUF: Reg = Reg(13);
+const R_YPTR: Reg = Reg(14);
+const R_XCUR: Reg = Reg(15);
+const R_NCHUNK: Reg = Reg(16);
+const R_CSHIFT: Reg = Reg(17);
+const R_ROWS: Reg = Reg(18);
+const R_ROW: Reg = Reg(19);
+const R_MBUF: Reg = Reg(20);
+const R_MCUR: Reg = Reg(21);
+const R_CCNT: Reg = Reg(22);
+
+/// Emit the GEMV kernel for `variant`.
+///
+/// Runtime arguments (WRAM words): `[0]` = rows, `[4]` = log2(row
+/// stride bytes), `[8]` = chunks per row, `[12]` = tasklet count.
+pub fn emit_gemv(variant: GemvVariant) -> Result<Program> {
+    let mut pb = ProgramBuilder::new();
+    let main = pb.new_label("main");
+    pb.jump(main);
+    let mulsi3 =
+        if variant == GemvVariant::I8Mulsi3 { Some(emit_mulsi3(&mut pb)) } else { None };
+    pb.bind(main);
+
+    // Buffers: M chunk at BUF_BASE + 2048*id, x chunk right after,
+    // y staging at YBUF_BASE + 512*id.
+    pb.move_(R_MBUF, Src::Id8);
+    pb.lsl(R_MBUF, R_MBUF, 8);
+    pb.add(R_MBUF, R_MBUF, BUF_BASE as i32);
+    pb.add(R_XBUF, R_MBUF, CHUNK as i32);
+    pb.move_(R_YPTR, Src::Id8);
+    pb.lsl(R_YPTR, R_YPTR, 6);
+    pb.add(R_YPTR, R_YPTR, YBUF_BASE as i32);
+    // Args.
+    pb.move_(Reg(3), 0);
+    pb.lw(R_ROWS, Reg(3), 0);
+    pb.lw(R_CSHIFT, Reg(3), 4);
+    pb.lw(R_NCHUNK, Reg(3), 8);
+    // First row of this tasklet.
+    pb.move_(R_ROW, Src::Id);
+
+    let rows_done = pb.new_label("rows_done");
+    let row_loop = pb.here("row_loop");
+    pb.jcmp(CmpCond::Geu, R_ROW, Src::Reg(R_ROWS), rows_done);
+    pb.move_(R_ACC, Src::Zero);
+    // Row base: GEMV_M + (row << cshift).
+    pb.alu(AluOp::Lsl, R_MCUR, R_ROW, Src::Reg(R_CSHIFT));
+    pb.add(R_MCUR, R_MCUR, GEMV_M as i32);
+    pb.move_(R_XCUR, GEMV_X as i32);
+    pb.move_(R_CCNT, R_NCHUNK);
+    let chunk_loop = pb.here("chunk_loop");
+    pb.ldma(R_MBUF, R_MCUR, CHUNK);
+    pb.ldma(R_XBUF, R_XCUR, CHUNK);
+    pb.move_(R_APTR, R_MBUF);
+    pb.move_(R_BPTR, R_XBUF);
+    emit_dot_chunk(&mut pb, variant.dot(), variant.chunk_elems(), mulsi3);
+    pb.add(R_MCUR, R_MCUR, CHUNK as i32);
+    pb.add(R_XCUR, R_XCUR, CHUNK as i32);
+    pb.sub(R_CCNT, R_CCNT, 1);
+    pb.jcmp(CmpCond::Neq, R_CCNT, Src::Zero, chunk_loop);
+    // Store y and advance to this tasklet's next row. r3 was clobbered
+    // by the dot body, so re-derive the args base before reloading T.
+    pb.sw(R_YPTR, 0, R_ACC);
+    pb.add(R_YPTR, R_YPTR, 4);
+    pb.move_(Reg(3), 0);
+    pb.lw(Reg(3), Reg(3), 12); // tasklet count
+    pb.add(R_ROW, R_ROW, Src::Reg(Reg(3)));
+    pb.jump(row_loop);
+    pb.bind(rows_done);
+    pb.barrier();
+    // Write back this tasklet's y region (fixed 512 B, 8-aligned).
+    pb.move_(Reg(4), Src::Id8);
+    pb.lsl(Reg(4), Reg(4), 6);
+    pb.add(Reg(5), Reg(4), YBUF_BASE as i32);
+    pb.add(Reg(6), Reg(4), GEMV_Y as i32);
+    pb.sdma(Reg(5), Reg(6), YBUF_STRIDE);
+    pb.stop();
+    pb.build()
+}
+
+/// Host-visible description of one DPU's GEMV work.
+#[derive(Debug, Clone, Copy)]
+pub struct GemvShape {
+    pub rows: u32,
+    pub cols: u32,
+}
+
+impl GemvShape {
+    pub fn validate(&self, variant: GemvVariant, nr_tasklets: usize) -> Result<()> {
+        if !variant.cols_ok(self.cols) {
+            return Err(crate::Error::Coordinator(format!(
+                "{}: cols={} must give a power-of-two row stride ≥ {CHUNK}",
+                variant.name(),
+                self.cols
+            )));
+        }
+        let max_rows = (YBUF_STRIDE / 4) * nr_tasklets as u32;
+        if self.rows > max_rows {
+            return Err(crate::Error::Coordinator(format!(
+                "rows={} exceeds per-DPU capacity {max_rows} ({} tasklets)",
+                self.rows, nr_tasklets
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Stage inputs, run the kernel on one simulated DPU, collect y.
+///
+/// `m` is row-major `rows × cols` INT8 (for BSDP it is interpreted as
+/// INT4 values in `-8..=7`); `x` has `cols` entries.
+pub fn run_gemv_dpu(
+    variant: GemvVariant,
+    shape: GemvShape,
+    nr_tasklets: usize,
+    m: &[i8],
+    x: &[i8],
+) -> Result<(Vec<i32>, LaunchResult)> {
+    shape.validate(variant, nr_tasklets)?;
+    assert_eq!(m.len(), shape.rows as usize * shape.cols as usize);
+    assert_eq!(x.len(), shape.cols as usize);
+    let program = emit_gemv(variant)?;
+    let mut dpu = Dpu::new();
+    dpu.load_program(&program)?;
+    stage_gemv_inputs(&mut dpu, variant, shape, m, x)?;
+    set_gemv_args(&mut dpu, variant, shape, nr_tasklets);
+    let launch = dpu.launch(nr_tasklets)?;
+    let y = collect_gemv_output(&mut dpu, shape.rows, nr_tasklets)?;
+    Ok((y, launch))
+}
+
+/// Write matrix + vector into a DPU's MRAM in the variant's layout.
+pub fn stage_gemv_inputs(
+    dpu: &mut Dpu,
+    variant: GemvVariant,
+    shape: GemvShape,
+    m: &[i8],
+    x: &[i8],
+) -> Result<()> {
+    let mram_err = |k| crate::Error::Fault { dpu: 0, tasklet: 0, pc: 0, kind: k };
+    match variant {
+        GemvVariant::I4Bsdp => {
+            for (r, row) in m.chunks_exact(shape.cols as usize).enumerate() {
+                let planes = super::encode::bitplane_encode_i4(row);
+                let addr = GEMV_M + r as u32 * variant.row_bytes(shape.cols);
+                dpu.mram.write_u32_slice(addr, &planes).map_err(mram_err)?;
+            }
+            let xp = super::encode::bitplane_encode_i4(x);
+            dpu.mram.write_u32_slice(GEMV_X, &xp).map_err(mram_err)?;
+        }
+        _ => {
+            let bytes: Vec<u8> = m.iter().map(|&v| v as u8).collect();
+            dpu.mram.write(GEMV_M, &bytes).map_err(mram_err)?;
+            let xb: Vec<u8> = x.iter().map(|&v| v as u8).collect();
+            dpu.mram.write(GEMV_X, &xb).map_err(mram_err)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write the kernel's runtime arguments.
+pub fn set_gemv_args(dpu: &mut Dpu, variant: GemvVariant, shape: GemvShape, nr_tasklets: usize) {
+    let row_bytes = variant.row_bytes(shape.cols);
+    let cshift = row_bytes.trailing_zeros();
+    debug_assert!(row_bytes.is_power_of_two());
+    let mut w = |a: u32, v: u32| dpu.wram.store32(a, v).expect("args");
+    w(0, shape.rows);
+    w(4, cshift);
+    w(8, row_bytes / CHUNK);
+    w(12, nr_tasklets as u32);
+}
+
+/// Read back y (de-interleaving the tasklet-major staging layout).
+pub fn collect_gemv_output(
+    dpu: &mut Dpu,
+    rows: u32,
+    nr_tasklets: usize,
+) -> Result<Vec<i32>> {
+    let mram_err = |k| crate::Error::Fault { dpu: 0, tasklet: 0, pc: 0, kind: k };
+    let mut y = vec![0i32; rows as usize];
+    for t in 0..nr_tasklets as u32 {
+        let n_rows_t = if rows % nr_tasklets as u32 > t {
+            rows / nr_tasklets as u32 + 1
+        } else {
+            rows / nr_tasklets as u32
+        };
+        if n_rows_t == 0 {
+            continue;
+        }
+        let vals = dpu
+            .mram
+            .read_i32_slice(GEMV_Y + t * YBUF_STRIDE, n_rows_t as usize)
+            .map_err(mram_err)?;
+        for (j, v) in vals.into_iter().enumerate() {
+            y[t as usize + j * nr_tasklets] = v;
+        }
+    }
+    Ok(y)
+}
+
+/// Reference GEMV (i32 wrapping accumulate — the DPU accumulator width).
+pub fn gemv_ref(shape: GemvShape, m: &[i8], x: &[i8]) -> Vec<i32> {
+    let (rows, cols) = (shape.rows as usize, shape.cols as usize);
+    (0..rows)
+        .map(|r| {
+            m[r * cols..(r + 1) * cols]
+                .iter()
+                .zip(x)
+                .fold(0i32, |acc, (&a, &b)| acc.wrapping_add(a as i32 * b as i32))
+        })
+        .collect()
+}
+
+/// Linear per-row cycle model measured from the simulator, used by the
+/// fleet-level benchmarks to extrapolate to matrix sizes that would be
+/// too slow to simulate instruction-by-instruction for every DPU.
+///
+/// The GEMV kernels are data-independent streaming loops (except the
+/// `__mulsi3` variant, whose step count varies with data), so per-DPU
+/// cycles are `fixed + rows × per_row` exactly; the model is fitted from
+/// two sampled row counts and validated by `tests::extrapolation_is_exact`.
+#[derive(Debug, Clone, Copy)]
+pub struct GemvCycleModel {
+    pub variant: GemvVariant,
+    pub cols: u32,
+    pub nr_tasklets: usize,
+    /// Launch overhead in cycles (prologue + y write-back).
+    pub fixed: f64,
+    /// Cycles per row of `cols` columns.
+    pub per_row: f64,
+}
+
+impl GemvCycleModel {
+    /// Fit the model by simulating two row counts (multiples of the
+    /// tasklet count, so every tasklet sees the same load).
+    pub fn fit(variant: GemvVariant, cols: u32, nr_tasklets: usize, seed: u64) -> Result<Self> {
+        let t = nr_tasklets as u32;
+        let (r1, r2) = (2 * t, 4 * t);
+        let c1 = Self::measure(variant, r1, cols, nr_tasklets, seed)?;
+        let c2 = Self::measure(variant, r2, cols, nr_tasklets, seed ^ 0xABCD)?;
+        let per_row = (c2 - c1) / (r2 - r1) as f64;
+        let fixed = c1 - per_row * r1 as f64;
+        Ok(GemvCycleModel { variant, cols, nr_tasklets, fixed, per_row })
+    }
+
+    fn measure(
+        variant: GemvVariant,
+        rows: u32,
+        cols: u32,
+        nr_tasklets: usize,
+        seed: u64,
+    ) -> Result<f64> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let shape = GemvShape { rows, cols };
+        let (m, x) = match variant {
+            GemvVariant::I4Bsdp => {
+                (rng.i4_vec((rows * cols) as usize), rng.i4_vec(cols as usize))
+            }
+            _ => (rng.i8_vec((rows * cols) as usize), rng.i8_vec(cols as usize)),
+        };
+        let (_, launch) = run_gemv_dpu(variant, shape, nr_tasklets, &m, &x)?;
+        Ok(launch.cycles as f64)
+    }
+
+    /// Predicted per-DPU kernel cycles for `rows` rows.
+    pub fn cycles(&self, rows: u32) -> f64 {
+        self.fixed + self.per_row * rows as f64
+    }
+
+    /// Predicted kernel seconds.
+    pub fn seconds(&self, rows: u32) -> f64 {
+        self.cycles(rows) / crate::dpu::CLOCK_HZ as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check(variant: GemvVariant, rows: u32, cols: u32, t: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let shape = GemvShape { rows, cols };
+        let (m, x) = match variant {
+            GemvVariant::I4Bsdp => {
+                (rng.i4_vec((rows * cols) as usize), rng.i4_vec(cols as usize))
+            }
+            _ => (rng.i8_vec((rows * cols) as usize), rng.i8_vec(cols as usize)),
+        };
+        let (y, _) = run_gemv_dpu(variant, shape, t, &m, &x)
+            .unwrap_or_else(|e| panic!("{}: {e}", variant.name()));
+        assert_eq!(y, gemv_ref(shape, &m, &x), "{} {rows}x{cols} T={t}", variant.name());
+    }
+
+    #[test]
+    fn int8_variants_match_reference() {
+        for v in [GemvVariant::I8Baseline, GemvVariant::I8Mulsi3, GemvVariant::I8Opt] {
+            check(v, 8, 1024, 4, 11);
+            check(v, 13, 2048, 8, 12); // rows not a multiple of tasklets
+        }
+    }
+
+    #[test]
+    fn int4_bsdp_matches_reference() {
+        check(GemvVariant::I4Bsdp, 8, 2048, 4, 13);
+        check(GemvVariant::I4Bsdp, 5, 4096, 16, 14); // idle tasklets
+    }
+
+    #[test]
+    fn single_tasklet_works() {
+        check(GemvVariant::I8Opt, 3, 1024, 1, 15);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let v = GemvVariant::I8Opt;
+        assert!(GemvShape { rows: 4, cols: 1000 }.validate(v, 4).is_err()); // not pow2
+        assert!(GemvShape { rows: 4, cols: 512 }.validate(v, 4).is_err()); // < chunk
+        assert!(GemvShape { rows: 4, cols: 1024 }.validate(v, 4).is_ok());
+        assert!(GemvShape { rows: 2000, cols: 1024 }.validate(v, 4).is_err()); // ybuf cap
+        // BSDP halves the row stride: 2048 cols = 1024 B ✓, 1024 cols ✗.
+        let b = GemvVariant::I4Bsdp;
+        assert!(GemvShape { rows: 4, cols: 2048 }.validate(b, 4).is_ok());
+        assert!(GemvShape { rows: 4, cols: 1024 }.validate(b, 4).is_err());
+    }
+
+    #[test]
+    fn opt_outperforms_baseline_outperforms_mulsi3() {
+        let cols = 2048;
+        let t = 16;
+        let cycles = |v| {
+            GemvCycleModel::fit(v, cols, t, 3).unwrap().cycles(64)
+        };
+        let mulsi3 = cycles(GemvVariant::I8Mulsi3);
+        let base = cycles(GemvVariant::I8Baseline);
+        let opt = cycles(GemvVariant::I8Opt);
+        assert!(opt < base && base < mulsi3, "opt={opt} base={base} mulsi3={mulsi3}");
+        // The paper's headline: optimized kernel ≈ 3.5× the baseline.
+        // Against the naive-NI baseline we measure ~2.5×; against the
+        // §III-A compiler output (__mulsi3) ~7×; 3.5× sits in between.
+        let vs_base = base / opt;
+        let vs_mulsi3 = mulsi3 / opt;
+        assert!(vs_base > 2.0, "opt/base = {vs_base:.2}");
+        assert!(vs_mulsi3 > 4.0, "opt/mulsi3 = {vs_mulsi3:.2}");
+    }
+
+    #[test]
+    fn bsdp_gemv_fastest_per_element() {
+        let t = 16;
+        let opt = GemvCycleModel::fit(GemvVariant::I8Opt, 2048, t, 5).unwrap();
+        let bsdp = GemvCycleModel::fit(GemvVariant::I4Bsdp, 2048, t, 5).unwrap();
+        // Same logical row length (2048 elements): BSDP must be faster.
+        assert!(bsdp.per_row < opt.per_row, "bsdp={} opt={}", bsdp.per_row, opt.per_row);
+    }
+
+    #[test]
+    fn extrapolation_is_exact() {
+        // The cycle model fitted on {2T, 4T} rows must predict 8T rows
+        // exactly (data-independent streaming kernel).
+        let t = 8;
+        let cols = 1024;
+        for v in [GemvVariant::I8Baseline, GemvVariant::I8Opt] {
+            let model = GemvCycleModel::fit(v, cols, t, 21).unwrap();
+            let measured = GemvCycleModel::measure(v, 8 * t as u32, cols, t, 77).unwrap();
+            let predicted = model.cycles(8 * t as u32);
+            let rel = (measured - predicted).abs() / measured;
+            assert!(rel < 0.01, "{}: measured={measured} predicted={predicted}", v.name());
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! The paper's DPU kernels, emitted as simulator assembly.
+//!
+//! Each kernel exists in the variants the paper evaluates:
+//!
+//! * [`arith`] — the PrIM-style arithmetic microbenchmark of Fig. 2:
+//!   INT8/INT32 scalar add/mul over a 1M-element MRAM buffer, in
+//!   baseline (compiler-like) and optimized (NI, NI×4, NI×8, DIM,
+//!   unrolled) codegen — Figures 3, 6, 7, 8;
+//! * [`mulsi3`] — the reconstructed `__mulsi3` shift-and-add routine the
+//!   UPMEM compiler emits for every integer multiply (paper Fig. 4);
+//! * [`bsdp`] — the bit-serial dot product of §IV (Algorithm 2) plus the
+//!   native INT4-as-INT8 baselines — Figure 9;
+//! * [`gemv`] — the INT8 and INT4 GEMV kernels of §VI — Figures 12, 13;
+//! * [`encode`] — host-side data-layout transformations: bit-plane
+//!   transposition for BSDP and INT4 packing (the AVX512 work the paper
+//!   runs on the host).
+//!
+//! # WRAM layout convention
+//!
+//! All kernels share a calling convention with the host:
+//!
+//! ```text
+//! 0x0000..0x0040  argument words (kernel-specific, see each module)
+//! 0x0040..0x0080  per-tasklet result slots: cycles spent in the timed
+//!                 region, one u32 per tasklet (offset 0x40 + 4*id)
+//! 0x0080..0x00C0  per-tasklet auxiliary results (e.g. dot-product acc)
+//! 0x0100..        data buffers (per-tasklet blocks)
+//! ```
+
+pub mod arith;
+pub mod bsdp;
+pub mod encode;
+pub mod gemv;
+pub mod mulsi3;
+
+/// WRAM offset of the argument area.
+pub const ARG_BASE: u32 = 0x0;
+/// WRAM offset of the per-tasklet cycle-result slots.
+pub const CYCLES_BASE: u32 = 0x40;
+/// WRAM offset of the per-tasklet auxiliary result slots.
+pub const AUX_BASE: u32 = 0x80;
+/// WRAM offset of the first data buffer.
+pub const BUF_BASE: u32 = 0x100;
+
+/// Default MRAM offset of the A buffer (leaves room for a header page).
+pub const MRAM_A: u32 = 0x10_0000;
+/// Default MRAM offset of the B buffer (16 MB after A).
+pub const MRAM_B: u32 = 0x100_0000;
+
+/// The microbenchmark block size (bytes copied MRAM→WRAM per iteration);
+/// the paper sets `BLOCK_SIZE` to 1024.
+pub const BLOCK_BYTES: u32 = 1024;
+
+/// Read per-tasklet timed-region cycles written by a kernel.
+pub fn read_tasklet_cycles(dpu: &crate::dpu::Dpu, nr_tasklets: usize) -> Vec<u32> {
+    (0..nr_tasklets)
+        .map(|t| dpu.wram.load32(CYCLES_BASE + 4 * t as u32).expect("cycles slot"))
+        .collect()
+}
+
+/// Aggregate MOPS the way the paper's microbenchmark does: every element
+/// is updated exactly once; the compute phases are barrier-aligned, so
+/// the wall time of the timed region is the maximum per-tasklet timed
+/// cycle count.
+pub fn mops(total_elems: u64, per_tasklet_cycles: &[u32]) -> f64 {
+    let wall = *per_tasklet_cycles.iter().max().expect("at least one tasklet") as f64;
+    let secs = wall / crate::dpu::CLOCK_HZ as f64;
+    total_elems as f64 / secs / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mops_uses_max_tasklet_time() {
+        // 1M elements in 5M cycles at 400 MHz = 80 MOPS.
+        let m = mops(1_000_000, &[4_000_000, 5_000_000]);
+        assert!((m - 80.0).abs() < 0.01, "m={m}");
+    }
+}

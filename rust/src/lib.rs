@@ -1,0 +1,46 @@
+//! # UPMEM Unleashed — reproduction library
+//!
+//! This crate reproduces the system described in *"UPMEM Unleashed:
+//! Software Secrets for Speed"* (CS.AR 2025). The paper optimizes kernels
+//! and host↔PIM data transfers on the UPMEM processing-in-memory platform.
+//! Real UPMEM hardware is not available here, so the repository builds the
+//! full stack on top of a **cycle-level UPMEM DPU simulator** (see
+//! [`dpu`]) that models the documented microarchitecture: an in-order
+//! 32-bit RISC core at 400 MHz with a 14-stage pipeline, 16 hardware
+//! tasklets (11 concurrently in flight), 64 MB MRAM, 64 KB WRAM and
+//! 24 KB IRAM.
+//!
+//! Layer map (three-layer rust + JAX + Pallas architecture):
+//!
+//! * **Layer 3 (rust, this crate)** — the host coordinator: DPU
+//!   allocation (baseline vs. the paper's NUMA/channel-aware extension,
+//!   [`alloc`]), host↔PIM transfer engine with the DDR transposition cost
+//!   model ([`transfer`]), the SDK-like host API ([`host`]), and a GEMV
+//!   serving runtime ([`coordinator`]).
+//! * **Layer 2 (JAX, `python/compile/model.py`)** — the quantized GEMV /
+//!   MLP inference graph, AOT-lowered to HLO text and executed from rust
+//!   via PJRT ([`runtime`]); this is the "dual-socket CPU server"
+//!   comparator of the paper's §VI as well as the numerical oracle.
+//! * **Layer 1 (Pallas, `python/compile/kernels/`)** — the bit-serial
+//!   dot-product and quantized GEMV kernels, validated against a pure-jnp
+//!   reference and lowered into the same HLO artifacts.
+//!
+//! The paper's *DPU-side* kernels (INT8/INT32 add/mul variants, the
+//! `__mulsi3` shift-and-add routine, decomposed INT32 multiplication,
+//! bit-serial dot product, and the INT8/INT4 GEMV kernels) are emitted as
+//! DPU assembly by [`kernels`] and executed on the simulator, which is how
+//! the repository regenerates every figure of the paper's evaluation.
+
+pub mod alloc;
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod cpu_ref;
+pub mod dpu;
+pub mod host;
+pub mod kernels;
+pub mod runtime;
+pub mod transfer;
+pub mod util;
+
+pub use util::error::{Error, Result};

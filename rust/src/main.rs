@@ -1,0 +1,622 @@
+//! `upmem-unleashed` — the launcher.
+//!
+//! Sub-commands (no external arg-parser in the offline crate cache; the
+//! tiny parser below covers `--flag value` pairs):
+//!
+//! ```text
+//! upmem-unleashed microbench --dtype i8 --op mul --impl nix8 --unroll x64 --tasklets 16
+//! upmem-unleashed dot        --variant bsdp --tasklets 16 --elems 65536
+//! upmem-unleashed transfer   --ranks 8 --policy numa --dir h2p
+//! upmem-unleashed gemv       --rows 256 --cols 2048 --variant i8-opt [--config f.toml]
+//! upmem-unleashed serve      --config configs/serve.toml
+//! upmem-unleashed figures    [--fig 3|6|7|8|9|11|12|13]
+//! upmem-unleashed asm        <file.dpu>      # assemble + disassemble
+//! upmem-unleashed info
+//! ```
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+use std::time::Duration;
+
+use upmem_unleashed::bench_support::table::{f1, f2, Table};
+use upmem_unleashed::bench_support::{FleetGemvModel, Scenario};
+use upmem_unleashed::config::{ConfigDoc, GemvJob, RunConfig, ServeConfig};
+use upmem_unleashed::coordinator::{Batcher, GemvCoordinator, GemvServer};
+use upmem_unleashed::host::AllocPolicy;
+use upmem_unleashed::kernels::arith::{DType, MulImpl, Op, Spec, Unroll};
+use upmem_unleashed::kernels::bsdp::DotVariant;
+use upmem_unleashed::kernels::gemv::GemvVariant;
+use upmem_unleashed::kernels::{arith, bsdp};
+use upmem_unleashed::transfer::Direction;
+use upmem_unleashed::util::rng::Rng;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let flags = parse_flags(&args[1..]);
+    let r = match cmd.as_str() {
+        "microbench" => cmd_microbench(&flags),
+        "dot" => cmd_dot(&flags),
+        "transfer" => cmd_transfer(&flags),
+        "gemv" => cmd_gemv(&flags),
+        "serve" => cmd_serve(&flags),
+        "figures" => cmd_figures(&flags),
+        "asm" => cmd_asm(&args[1..]),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(upmem_unleashed::Error::Coordinator(format!("unknown command '{other}'"))),
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "usage: upmem-unleashed <command> [flags]
+commands:
+  microbench  arithmetic microbenchmark (Figs. 3/6/7/8 points)
+              --dtype i8|i32  --op add|mul  --impl mulsi3|ni|nix4|nix8|dim
+              --unroll no|auto|x64|x128  --tasklets N  --kb N
+  dot         INT4 dot-product microbenchmark (Fig. 9 points)
+              --variant baseline|mulsi3|opt|bsdp  --tasklets N  --elems N
+  transfer    host<->PIM transfer throughput (Fig. 11 points)
+              --ranks N  --policy numa|baseline  --dir h2p|p2h  --mb N
+  gemv        fleet GEMV on the simulator  --rows R --cols C
+              --variant i8-baseline|i8-mulsi3|i8-opt|i4-bsdp  [--config F]
+  serve       GEMV-V serving demo  [--config F]
+  figures     regenerate figure data  [--fig N]
+  asm FILE    assemble + disassemble a .dpu file
+  info        system/topology summary";
+
+type Flags = HashMap<String, String>;
+
+fn parse_flags(rest: &[String]) -> Flags {
+    let mut out = Flags::new();
+    let mut i = 0;
+    while i < rest.len() {
+        if let Some(key) = rest[i].strip_prefix("--") {
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                out.insert(key.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn flag<'a>(f: &'a Flags, k: &str, default: &'a str) -> &'a str {
+    f.get(k).map(String::as_str).unwrap_or(default)
+}
+
+fn flag_usize(f: &Flags, k: &str, default: usize) -> usize {
+    f.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn cmd_microbench(f: &Flags) -> upmem_unleashed::Result<()> {
+    let dtype = match flag(f, "dtype", "i8") {
+        "i8" => DType::I8,
+        "i32" => DType::I32,
+        o => return err(format!("bad --dtype {o}")),
+    };
+    let op = match flag(f, "op", "add") {
+        "add" => Op::Add,
+        "mul" => Op::Mul,
+        o => return err(format!("bad --op {o}")),
+    };
+    let mimpl = match flag(f, "impl", "mulsi3") {
+        "mulsi3" => MulImpl::Mulsi3,
+        "ni" => MulImpl::Native,
+        "nix4" => MulImpl::NativeX4,
+        "nix8" => MulImpl::NativeX8,
+        "dim" => MulImpl::Dim,
+        o => return err(format!("bad --impl {o}")),
+    };
+    let unroll = match flag(f, "unroll", "no") {
+        "no" => Unroll::No,
+        "auto" => Unroll::Auto,
+        "x64" => Unroll::X64,
+        "x128" => Unroll::X128,
+        o => return err(format!("bad --unroll {o}")),
+    };
+    let tasklets = flag_usize(f, "tasklets", 16);
+    let kb = flag_usize(f, "kb", 1024) as u32;
+    let spec = Spec { dtype, op, mimpl, unroll };
+    let out = arith::run_microbench(spec, tasklets, kb * 1024, 42)?;
+    println!(
+        "{}: {:.1} MOPS  ({} tasklets, {} elements, {} instrs, verified OK)",
+        spec.name(),
+        out.mops,
+        tasklets,
+        out.total_elems,
+        out.launch.instrs
+    );
+    Ok(())
+}
+
+fn cmd_dot(f: &Flags) -> upmem_unleashed::Result<()> {
+    let variant = match flag(f, "variant", "bsdp") {
+        "baseline" => DotVariant::NativeBaseline,
+        "mulsi3" => DotVariant::NativeMulsi3,
+        "opt" => DotVariant::NativeOptimized,
+        "bsdp" => DotVariant::Bsdp,
+        o => return err(format!("bad --variant {o}")),
+    };
+    let tasklets = flag_usize(f, "tasklets", 16);
+    let elems = flag_usize(f, "elems", 64 * 1024);
+    let out = bsdp::run_dot_microbench(variant, tasklets, elems, 42)?;
+    println!(
+        "{}: {:.1} M MAC/s  (dot = {}, verified OK)",
+        variant.name(),
+        out.mmacs,
+        out.dot
+    );
+    Ok(())
+}
+
+fn cmd_transfer(f: &Flags) -> upmem_unleashed::Result<()> {
+    let ranks = flag_usize(f, "ranks", 4);
+    let dir = match flag(f, "dir", "h2p") {
+        "h2p" => Direction::HostToPim,
+        "p2h" => Direction::PimToHost,
+        o => return err(format!("bad --dir {o}")),
+    };
+    let mb = flag_usize(f, "mb", 32) as u64;
+    let policy = match flag(f, "policy", "numa") {
+        "numa" => AllocPolicy::NumaAware,
+        "baseline" => AllocPolicy::BaselineSdk { boot_seed: flag_usize(f, "boot", 1) as u64 },
+        o => return err(format!("bad --policy {o}")),
+    };
+    let mut sys = upmem_unleashed::host::PimSystem::paper_server(policy);
+    let set = sys.alloc_ranks(ranks)?;
+    let bytes = mb * (1 << 20) * ranks as u64;
+    let report = match dir {
+        Direction::HostToPim => sys.push_parallel_modeled(&set, bytes),
+        Direction::PimToHost => sys.pull_parallel_modeled(&set, bytes),
+    };
+    println!(
+        "{ranks} ranks ({} DPUs), {:?} {:?}: {:.2} GB/s ({:.3} ms for {} MB)",
+        set.nr_dpus(),
+        report.mode,
+        dir,
+        report.gbps(),
+        report.seconds * 1e3,
+        bytes >> 20,
+    );
+    Ok(())
+}
+
+fn load_doc(f: &Flags) -> upmem_unleashed::Result<ConfigDoc> {
+    match f.get("config") {
+        Some(path) => ConfigDoc::from_file(path),
+        None => ConfigDoc::parse(""),
+    }
+}
+
+fn cmd_gemv(f: &Flags) -> upmem_unleashed::Result<()> {
+    let doc = load_doc(f)?;
+    let mut run = RunConfig::from_doc(&doc)?;
+    let mut job = GemvJob::from_doc(&doc)?;
+    // Flags override config.
+    if let Some(v) = f.get("rows") {
+        job.rows = v.parse().unwrap_or(job.rows);
+    }
+    if let Some(v) = f.get("cols") {
+        job.cols = v.parse().unwrap_or(job.cols);
+    }
+    if let Some(v) = f.get("ranks") {
+        run.ranks = v.parse().unwrap_or(run.ranks);
+    }
+    if let Some(v) = f.get("variant") {
+        job.variant = match v.as_str() {
+            "i8-baseline" => GemvVariant::I8Baseline,
+            "i8-mulsi3" => GemvVariant::I8Mulsi3,
+            "i8-opt" => GemvVariant::I8Opt,
+            "i4-bsdp" => GemvVariant::I4Bsdp,
+            o => return err(format!("bad --variant {o}")),
+        };
+    }
+    let mut sys = run.build_system();
+    let set = sys.alloc_ranks(run.ranks)?;
+    println!(
+        "GEMV {}x{} [{}] on {} ranks / {} DPUs, {} tasklets",
+        job.rows,
+        job.cols,
+        job.variant.name(),
+        run.ranks,
+        set.nr_dpus(),
+        run.tasklets
+    );
+    let mut c = GemvCoordinator::new(sys, set, job.variant, run.tasklets);
+    let mut rng = Rng::new(run.seed);
+    let (m, x) = match job.variant {
+        GemvVariant::I4Bsdp => (
+            rng.i4_vec((job.rows * job.cols) as usize),
+            rng.i4_vec(job.cols as usize),
+        ),
+        _ => (
+            rng.i8_vec((job.rows * job.cols) as usize),
+            rng.i8_vec(job.cols as usize),
+        ),
+    };
+    let (y, t) = if job.preloaded {
+        let load_s = c.preload_matrix(job.rows, job.cols, &m)?;
+        println!("matrix preloaded in {:.3} ms (amortized in GEMV-V)", load_s * 1e3);
+        c.gemv(&x)?
+    } else {
+        c.gemv_with_matrix(job.rows, job.cols, &m, &x)?
+    };
+    let reference = upmem_unleashed::kernels::gemv::gemv_ref(
+        upmem_unleashed::kernels::gemv::GemvShape { rows: job.rows, cols: job.cols },
+        &m,
+        &x,
+    );
+    let ok = y == reference;
+    println!(
+        "timing: matrix={:.3}ms broadcast={:.3}ms compute={:.3}ms gather={:.3}ms total={:.3}ms",
+        t.matrix_s * 1e3,
+        t.broadcast_s * 1e3,
+        t.compute_s * 1e3,
+        t.gather_s * 1e3,
+        t.total() * 1e3
+    );
+    println!(
+        "throughput: {:.2} GOPS   correctness vs host reference: {}",
+        t.gops(job.rows as u64, job.cols as u64),
+        if ok { "OK" } else { "MISMATCH" }
+    );
+    if !ok {
+        return err("GEMV output mismatch".into());
+    }
+    Ok(())
+}
+
+fn cmd_serve(f: &Flags) -> upmem_unleashed::Result<()> {
+    let doc = load_doc(f)?;
+    let run = RunConfig::from_doc(&doc)?;
+    let job = GemvJob::from_doc(&doc)?;
+    let serve = ServeConfig::from_doc(&doc);
+    let mut sys = run.build_system();
+    let set = sys.alloc_ranks(run.ranks)?;
+    let mut c = GemvCoordinator::new(sys, set, job.variant, run.tasklets);
+    let mut rng = Rng::new(run.seed);
+    let m = match job.variant {
+        GemvVariant::I4Bsdp => rng.i4_vec((job.rows * job.cols) as usize),
+        _ => rng.i8_vec((job.rows * job.cols) as usize),
+    };
+    let load_s = c.preload_matrix(job.rows, job.cols, &m)?;
+    println!(
+        "serving {}x{} [{}], matrix resident ({:.3} ms load, GEMV-V mode)",
+        job.rows,
+        job.cols,
+        job.variant.name(),
+        load_s * 1e3
+    );
+    let batcher = Batcher::new(serve.max_batch, Duration::from_micros(serve.batch_window_us));
+    let (server, client) = GemvServer::start(c, batcher);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..serve.requests)
+        .map(|_| {
+            let x = match job.variant {
+                GemvVariant::I4Bsdp => rng.i4_vec(job.cols as usize),
+                _ => rng.i8_vec(job.cols as usize),
+            };
+            client.submit(x)
+        })
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv().map(|r| r.y.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (_, metrics) = server.shutdown();
+    println!("completed {ok}/{} requests in {wall:.3}s host wall time", serve.requests);
+    println!("metrics: {}", metrics.report());
+    println!(
+        "modeled device throughput: {:.1} req/s",
+        metrics.requests as f64 / metrics.device_seconds.max(1e-12)
+    );
+    Ok(())
+}
+
+fn cmd_figures(f: &Flags) -> upmem_unleashed::Result<()> {
+    let which = flag(f, "fig", "all");
+    let all = which == "all";
+    if all || which == "3" {
+        fig3()?;
+    }
+    if all || which == "6" {
+        fig6()?;
+    }
+    if all || which == "7" {
+        fig7()?;
+    }
+    if all || which == "8" {
+        fig8()?;
+    }
+    if all || which == "9" {
+        fig9()?;
+    }
+    if all || which == "11" {
+        fig11()?;
+    }
+    if all || which == "12" || which == "13" {
+        fig12_13()?;
+    }
+    Ok(())
+}
+
+const FIG_KB: u32 = 176; // divides evenly across 1/2/4/8/11/16 tasklets
+
+fn fig3() -> upmem_unleashed::Result<()> {
+    let mut t = Table::new(
+        "Fig. 3 — baseline arithmetic performance of a single DPU (MOPS)",
+        &["tasklets", "INT8 ADD", "INT8 MUL", "INT32 ADD", "INT32 MUL"],
+    );
+    for tk in [1, 2, 4, 8, 11, 16] {
+        let m = |spec| arith::run_microbench(spec, tk, FIG_KB * 1024, 42).map(|o| o.mops);
+        t.row(&[
+            tk.to_string(),
+            f1(m(Spec::add(DType::I8))?),
+            f1(m(Spec::mul(DType::I8, MulImpl::Mulsi3))?),
+            f1(m(Spec::add(DType::I32))?),
+            f1(m(Spec::mul(DType::I32, MulImpl::Mulsi3))?),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn fig6() -> upmem_unleashed::Result<()> {
+    let mut t = Table::new(
+        "Fig. 6 — INT8 multiplication on a single DPU (MOPS, 16 tasklets)",
+        &["variant", "MOPS", "vs baseline"],
+    );
+    let run = |s: Spec| arith::run_microbench(s, 16, FIG_KB * 1024, 42).map(|o| o.mops);
+    let base = run(Spec::mul(DType::I8, MulImpl::Mulsi3))?;
+    for (name, spec) in [
+        ("baseline (__mulsi3)", Spec::mul(DType::I8, MulImpl::Mulsi3)),
+        ("NI", Spec::mul(DType::I8, MulImpl::Native)),
+        ("NIx4", Spec::mul(DType::I8, MulImpl::NativeX4)),
+        ("NIx8", Spec::mul(DType::I8, MulImpl::NativeX8)),
+        ("INT8 ADD (ref)", Spec::add(DType::I8)),
+    ] {
+        let m = run(spec)?;
+        t.row(&[name.to_string(), f1(m), f2(m / base)]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn fig7() -> upmem_unleashed::Result<()> {
+    let mut t = Table::new(
+        "Fig. 7 — INT32 multiplication on a single DPU (MOPS, 16 tasklets)",
+        &["variant", "MOPS", "vs baseline"],
+    );
+    let run = |s: Spec| arith::run_microbench(s, 16, FIG_KB * 1024, 42).map(|o| o.mops);
+    let base = run(Spec::mul(DType::I32, MulImpl::Mulsi3))?;
+    for (name, spec) in [
+        ("baseline (__mulsi3)", Spec::mul(DType::I32, MulImpl::Mulsi3)),
+        ("DIM", Spec::mul(DType::I32, MulImpl::Dim)),
+    ] {
+        let m = run(spec)?;
+        t.row(&[name.to_string(), f1(m), f2(m / base)]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn fig8() -> upmem_unleashed::Result<()> {
+    let mut t = Table::new(
+        "Fig. 8 — peak arithmetic performance with unrolling (MOPS, 16 tasklets)",
+        &["variant", "no unroll", "auto", "x64", "x128"],
+    );
+    let specs: Vec<(&str, Spec)> = vec![
+        ("INT8 ADD", Spec::add(DType::I8)),
+        ("INT8 MUL NI", Spec::mul(DType::I8, MulImpl::Native)),
+        ("INT8 MUL NIx4", Spec::mul(DType::I8, MulImpl::NativeX4)),
+        ("INT8 MUL NIx8", Spec::mul(DType::I8, MulImpl::NativeX8)),
+        ("INT32 ADD", Spec::add(DType::I32)),
+        ("INT32 MUL DIM", Spec::mul(DType::I32, MulImpl::Dim)),
+    ];
+    for (name, spec) in specs {
+        let cell = |u: Unroll| -> String {
+            match arith::run_microbench(spec.with_unroll(u), 16, FIG_KB * 1024, 42) {
+                Ok(o) => f1(o.mops),
+                Err(upmem_unleashed::Error::IramOverflow { .. }) => "IRAM!".to_string(),
+                Err(e) => format!("err: {e}"),
+            }
+        };
+        t.row(&[
+            name.to_string(),
+            cell(Unroll::No),
+            cell(Unroll::Auto),
+            cell(Unroll::X64),
+            cell(Unroll::X128),
+        ]);
+    }
+    t.print();
+    println!("(IRAM! = program exceeds 24 KB IRAM — the paper's unroll 'linker error')");
+    Ok(())
+}
+
+fn fig9() -> upmem_unleashed::Result<()> {
+    let mut t = Table::new(
+        "Fig. 9 — INT4 dot product on a single DPU (normalized to native baseline)",
+        &["variant", "M MAC/s", "normalized"],
+    );
+    let elems = 64 * 1024;
+    let base = bsdp::run_dot_microbench(DotVariant::NativeBaseline, 16, elems, 42)?.mmacs;
+    for v in [
+        DotVariant::NativeBaseline,
+        DotVariant::NativeOptimized,
+        DotVariant::Bsdp,
+        DotVariant::NativeMulsi3,
+    ] {
+        let m = bsdp::run_dot_microbench(v, 16, elems, 42)?.mmacs;
+        t.row(&[v.name().to_string(), f1(m), f2(m / base)]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn fig11() -> upmem_unleashed::Result<()> {
+    use upmem_unleashed::transfer::topology::SystemTopology;
+    use upmem_unleashed::transfer::TransferModel;
+    let mut t = Table::new(
+        "Fig. 11 — parallel transfer throughput vs allocated ranks (GB/s)",
+        &["ranks", "h2p ours", "h2p base", "p2h ours", "p2h base", "h2p gain"],
+    );
+    let topo = SystemTopology::paper_server();
+    let model = TransferModel::default();
+    let bytes_per_rank: u64 = 32 << 20;
+    for n in [2usize, 4, 6, 8, 10, 16, 24, 32, 40] {
+        let mut ours_h = 0.0;
+        let mut ours_p = 0.0;
+        let mut base_h = 0.0;
+        let mut base_p = 0.0;
+        const BOOTS: u64 = 10;
+        for boot in 0..BOOTS {
+            let mut numa =
+                upmem_unleashed::host::PimSystem::new(topo.clone(), AllocPolicy::NumaAware);
+            let sn = numa.alloc_ranks(n)?;
+            let mut base = upmem_unleashed::host::PimSystem::new(
+                topo.clone(),
+                AllocPolicy::BaselineSdk { boot_seed: boot },
+            );
+            let sb = base.alloc_ranks(n)?;
+            let total = bytes_per_rank * n as u64;
+            let gbps = |ranks: &[usize], dir, placement| {
+                total as f64 / model.parallel_seconds(&topo, ranks, total, dir, placement) / 1e9
+            };
+            ours_h += gbps(&sn.ranks.ranks, Direction::HostToPim, sn.placement);
+            ours_p += gbps(&sn.ranks.ranks, Direction::PimToHost, sn.placement);
+            base_h += gbps(&sb.ranks.ranks, Direction::HostToPim, sb.placement);
+            base_p += gbps(&sb.ranks.ranks, Direction::PimToHost, sb.placement);
+        }
+        let b = BOOTS as f64;
+        t.row(&[
+            n.to_string(),
+            f2(ours_h / b),
+            f2(base_h / b),
+            f2(ours_p / b),
+            f2(base_p / b),
+            f2(ours_h / base_h),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn fig12_13() -> upmem_unleashed::Result<()> {
+    let mut model = FleetGemvModel::paper_fleet();
+    let mut t12 = Table::new(
+        "Fig. 12 — GEMV compute vs transfer time on 2551 DPUs (seconds)",
+        &["n", "size", "variant", "scenario", "compute", "transfer", "xfer/comp"],
+    );
+    let mut t13 = Table::new(
+        "Fig. 13 — GEMV throughput (GOPS): UPMEM vs dual-socket server",
+        &["n", "variant", "GEMV-V", "GEMV-MV", "server"],
+    );
+    for n in upmem_unleashed::bench_support::fleet::paper_matrix_sizes() {
+        for (variant, server) in [
+            (GemvVariant::I8Opt, upmem_unleashed::cpu_ref::KUNPENG_INT8_GOPS),
+            (GemvVariant::I4Bsdp, upmem_unleashed::cpu_ref::KUNPENG_INT4_GOPS),
+        ] {
+            let v = model.evaluate(n, variant, Scenario::VectorOnly)?;
+            let mv = model.evaluate(n, variant, Scenario::MatrixAndVector)?;
+            for p in [&mv, &v] {
+                t12.row(&[
+                    n.to_string(),
+                    upmem_unleashed::bench_support::table::human_bytes(p.matrix_bytes()),
+                    variant.name().to_string(),
+                    format!("{:?}", p.scenario),
+                    format!("{:.4}", p.compute_s),
+                    format!("{:.4}", p.transfer_s()),
+                    f2(p.transfer_s() / p.compute_s),
+                ]);
+            }
+            t13.row(&[
+                n.to_string(),
+                variant.name().to_string(),
+                f1(v.gops()),
+                f1(mv.gops()),
+                f1(server),
+            ]);
+        }
+    }
+    t12.print();
+    t13.print();
+    Ok(())
+}
+
+fn cmd_asm(rest: &[String]) -> upmem_unleashed::Result<()> {
+    let Some(path) = rest.first() else {
+        return err("asm needs a file".into());
+    };
+    let src = std::fs::read_to_string(path)?;
+    let prog = upmem_unleashed::dpu::assemble(&src)?;
+    println!(
+        "{} instructions, {} bytes of IRAM ({}), {} labels",
+        prog.instrs.len(),
+        prog.iram_bytes(),
+        if prog.fits_iram() { "fits" } else { "OVERFLOW" },
+        prog.labels.len()
+    );
+    print!("{}", prog.disasm());
+    Ok(())
+}
+
+fn cmd_info() -> upmem_unleashed::Result<()> {
+    use upmem_unleashed::transfer::topology as topo;
+    let t = topo::SystemTopology::paper_server();
+    println!("UPMEM Unleashed reproduction — simulated paper server");
+    println!(
+        "  {} sockets x {} PIM channels x {} DIMMs x {} ranks x {} DPUs = {} DPUs",
+        topo::SOCKETS,
+        topo::PIM_CHANNELS_PER_SOCKET,
+        topo::DIMMS_PER_CHANNEL,
+        topo::RANKS_PER_DIMM,
+        topo::DPUS_PER_RANK,
+        topo::TOTAL_DPUS
+    );
+    println!("  usable DPUs: {} (paper: 2551, nine faulty)", t.usable_dpus());
+    println!(
+        "  DPU: 400 MHz, 14-stage pipeline ({} concurrent issue slots), {} tasklets, \
+         64KB WRAM, 64MB MRAM",
+        upmem_unleashed::dpu::ISSUE_INTERVAL,
+        upmem_unleashed::dpu::NR_TASKLETS_MAX
+    );
+    match upmem_unleashed::runtime::XlaRuntime::cpu() {
+        Ok(rt) => println!("  PJRT: {} client ready", rt.platform()),
+        Err(e) => println!("  PJRT: unavailable ({e})"),
+    }
+    println!(
+        "  artifacts: {}",
+        if upmem_unleashed::runtime::artifacts_available() {
+            "built"
+        } else {
+            "missing (run `make artifacts`)"
+        }
+    );
+    Ok(())
+}
+
+fn err(msg: String) -> upmem_unleashed::Result<()> {
+    Err(upmem_unleashed::Error::Coordinator(msg))
+}

@@ -1,0 +1,161 @@
+//! Transfer engine: the SDK's three transfer modes with modeled timing.
+//!
+//! The engine pairs the [`super::model::TransferModel`] with the
+//! [`super::topology::SystemTopology`] and produces [`TransferReport`]s.
+//! Actual byte movement into simulated DPU MRAM is performed by the host
+//! layer ([`crate::host`]); the engine owns *when/how fast*, the host
+//! owns *what/where* — mirroring the real SDK's split between the
+//! transposition engine and `dpu_copy_to/from`.
+
+use super::model::{BufferPlacement, Direction, TransferModel};
+use super::topology::{RankId, SystemTopology};
+use crate::util::rng::Rng;
+
+/// SDK transfer mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// One DPU/rank at a time.
+    Sequential,
+    /// All ranks concurrently (maximum memory-bus utilization).
+    Parallel,
+    /// Same payload replicated to all ranks.
+    Broadcast,
+}
+
+/// Outcome of one modeled transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferReport {
+    pub mode: Mode,
+    pub direction: Direction,
+    /// Total unique bytes moved (for broadcast: payload × ranks).
+    pub bytes: u64,
+    /// Modeled wall time (seconds).
+    pub seconds: f64,
+}
+
+impl TransferReport {
+    pub fn gbps(&self) -> f64 {
+        self.bytes as f64 / self.seconds / 1e9
+    }
+}
+
+/// The engine.
+#[derive(Debug, Clone)]
+pub struct TransferEngine {
+    pub topo: SystemTopology,
+    pub model: TransferModel,
+}
+
+impl Default for TransferEngine {
+    fn default() -> Self {
+        TransferEngine { topo: SystemTopology::paper_server(), model: TransferModel::default() }
+    }
+}
+
+impl TransferEngine {
+    pub fn new(topo: SystemTopology, model: TransferModel) -> Self {
+        TransferEngine { topo, model }
+    }
+
+    /// Parallel-mode transfer of `total_bytes` spread over `ranks`.
+    pub fn parallel(
+        &self,
+        ranks: &[RankId],
+        total_bytes: u64,
+        direction: Direction,
+        placement: BufferPlacement,
+    ) -> TransferReport {
+        let seconds =
+            self.model.parallel_seconds(&self.topo, ranks, total_bytes, direction, placement);
+        TransferReport { mode: Mode::Parallel, direction, bytes: total_bytes, seconds }
+    }
+
+    /// Sequential-mode transfer (`bytes_per_rank` to each rank in turn).
+    pub fn sequential(
+        &self,
+        ranks: &[RankId],
+        bytes_per_rank: u64,
+        direction: Direction,
+        placement: BufferPlacement,
+    ) -> TransferReport {
+        let seconds = self.model.sequential_seconds(
+            &self.topo,
+            ranks,
+            bytes_per_rank,
+            direction,
+            placement,
+        );
+        TransferReport {
+            mode: Mode::Sequential,
+            direction,
+            bytes: bytes_per_rank * ranks.len() as u64,
+            seconds,
+        }
+    }
+
+    /// Broadcast `bytes` to every rank (host→PIM only, like the SDK).
+    pub fn broadcast(
+        &self,
+        ranks: &[RankId],
+        bytes: u64,
+        placement: BufferPlacement,
+    ) -> TransferReport {
+        let seconds = self.model.broadcast_seconds(&self.topo, ranks, bytes, placement);
+        TransferReport {
+            mode: Mode::Broadcast,
+            direction: Direction::HostToPim,
+            bytes: bytes * ranks.len() as u64,
+            seconds,
+        }
+    }
+
+    /// A jittered throughput sample for benchmark realism.
+    pub fn parallel_gbps_sampled(
+        &self,
+        ranks: &[RankId],
+        total_bytes: u64,
+        direction: Direction,
+        placement: BufferPlacement,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.model.parallel_gbps_sampled(
+            &self.topo,
+            ranks,
+            total_bytes,
+            direction,
+            placement,
+            rng,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_gbps_consistent() {
+        let e = TransferEngine::default();
+        let ranks: Vec<_> = (0..4).collect();
+        let r = e.parallel(&ranks, 1 << 30, Direction::HostToPim, BufferPlacement::PerSocket);
+        assert!((r.gbps() - (1u64 << 30) as f64 / r.seconds / 1e9).abs() < 1e-9);
+        assert_eq!(r.bytes, 1 << 30);
+    }
+
+    #[test]
+    fn broadcast_counts_replicated_bytes() {
+        let e = TransferEngine::default();
+        let ranks: Vec<_> = (0..8).collect();
+        let r = e.broadcast(&ranks, 1 << 20, BufferPlacement::PerSocket);
+        assert_eq!(r.bytes, 8 << 20);
+    }
+
+    #[test]
+    fn sequential_report_totals() {
+        let e = TransferEngine::default();
+        let ranks: Vec<_> = (0..3).collect();
+        let r = e.sequential(&ranks, 1 << 20, Direction::PimToHost, BufferPlacement::Node(0));
+        assert_eq!(r.bytes, 3 << 20);
+        assert!(r.seconds > 0.0);
+    }
+}

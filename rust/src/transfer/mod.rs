@@ -1,0 +1,11 @@
+//! Host↔PIM data-transfer substrate: the paper's server topology, the
+//! throughput model for DDR-transposed transfers, and the transfer
+//! engine implementing the SDK's sequential/parallel/broadcast modes.
+
+pub mod engine;
+pub mod model;
+pub mod topology;
+
+pub use engine::{Mode, TransferEngine, TransferReport};
+pub use model::{BufferPlacement, Direction, TransferModel, TransferParams};
+pub use topology::{DpuId, RankId, RankLoc, SystemTopology};

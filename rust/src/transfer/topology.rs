@@ -1,0 +1,214 @@
+//! The paper's UPMEM server topology (§II + §V-A).
+//!
+//! Dual-socket Intel Xeon Silver 4216. Each socket drives six memory
+//! channels: five connect two UPMEM DIMMs each (PIM channels), one
+//! connects two standard DDR4-3200 DRAM DIMMs. Every UPMEM DIMM is
+//! dual-rank with 64 DPUs per rank:
+//!
+//! ```text
+//! 2 sockets × 5 PIM channels × 2 DIMMs × 2 ranks × 64 DPUs = 2560 DPUs
+//! ```
+//!
+//! Nine DPUs on the paper's machine were faulty and disabled, leaving
+//! 2551 — the topology reproduces that, with the faulty set configurable.
+
+use std::collections::BTreeSet;
+
+/// Number of CPU sockets (NUMA nodes).
+pub const SOCKETS: usize = 2;
+/// PIM memory channels per socket.
+pub const PIM_CHANNELS_PER_SOCKET: usize = 5;
+/// UPMEM DIMMs per PIM channel.
+pub const DIMMS_PER_CHANNEL: usize = 2;
+/// Ranks per UPMEM DIMM.
+pub const RANKS_PER_DIMM: usize = 2;
+/// DPUs per rank.
+pub const DPUS_PER_RANK: usize = 64;
+/// Total ranks in the system.
+pub const TOTAL_RANKS: usize =
+    SOCKETS * PIM_CHANNELS_PER_SOCKET * DIMMS_PER_CHANNEL * RANKS_PER_DIMM;
+/// Total DPUs (before disabling faulty ones).
+pub const TOTAL_DPUS: usize = TOTAL_RANKS * DPUS_PER_RANK;
+/// Faulty DPUs on the paper's machine.
+pub const PAPER_FAULTY_DPUS: usize = 9;
+
+/// Global rank index, `0..TOTAL_RANKS`.
+pub type RankId = usize;
+/// Global DPU index, `0..TOTAL_DPUS`.
+pub type DpuId = usize;
+
+/// Physical location of a rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RankLoc {
+    /// NUMA node / socket (0 or 1).
+    pub socket: usize,
+    /// PIM channel within the socket (0..5).
+    pub channel: usize,
+    /// DIMM on the channel (0 or 1).
+    pub dimm: usize,
+    /// Rank within the DIMM (0 or 1).
+    pub rank_in_dimm: usize,
+}
+
+impl RankLoc {
+    /// Globally-unique channel index (socket-major), 0..10.
+    pub fn global_channel(&self) -> usize {
+        self.socket * PIM_CHANNELS_PER_SOCKET + self.channel
+    }
+}
+
+/// The full system topology plus fault state.
+#[derive(Debug, Clone)]
+pub struct SystemTopology {
+    faulty: BTreeSet<DpuId>,
+}
+
+impl Default for SystemTopology {
+    fn default() -> Self {
+        Self::paper_server()
+    }
+}
+
+impl SystemTopology {
+    /// Fault-free system.
+    pub fn pristine() -> SystemTopology {
+        SystemTopology { faulty: BTreeSet::new() }
+    }
+
+    /// The paper's machine: 9 faulty DPUs (deterministically placed —
+    /// the specific positions are not published, so they are spread over
+    /// distinct ranks).
+    pub fn paper_server() -> SystemTopology {
+        let mut t = SystemTopology::pristine();
+        for i in 0..PAPER_FAULTY_DPUS {
+            // Spread across ranks: rank 4i+1, DPU 7+3i within the rank.
+            let dpu = (4 * i + 1) * DPUS_PER_RANK + 7 + 3 * i;
+            t.mark_faulty(dpu);
+        }
+        debug_assert_eq!(t.usable_dpus(), 2551);
+        t
+    }
+
+    /// Disable a DPU (fault injection).
+    pub fn mark_faulty(&mut self, dpu: DpuId) {
+        assert!(dpu < TOTAL_DPUS);
+        self.faulty.insert(dpu);
+    }
+
+    pub fn is_faulty(&self, dpu: DpuId) -> bool {
+        self.faulty.contains(&dpu)
+    }
+
+    /// Usable DPU count.
+    pub fn usable_dpus(&self) -> usize {
+        TOTAL_DPUS - self.faulty.len()
+    }
+
+    /// Usable DPUs within a rank.
+    pub fn usable_dpus_in_rank(&self, rank: RankId) -> usize {
+        self.dpus_of_rank(rank).filter(|d| !self.is_faulty(*d)).count()
+    }
+
+    /// Physical location of a rank. Ranks enumerate socket-major,
+    /// channel-major, DIMM-major: rank id =
+    /// `(((socket*5)+channel)*2+dimm)*2 + rank_in_dimm`.
+    pub fn rank_loc(&self, rank: RankId) -> RankLoc {
+        assert!(rank < TOTAL_RANKS);
+        let rank_in_dimm = rank % RANKS_PER_DIMM;
+        let dimm_g = rank / RANKS_PER_DIMM;
+        let dimm = dimm_g % DIMMS_PER_CHANNEL;
+        let ch_g = dimm_g / DIMMS_PER_CHANNEL;
+        let channel = ch_g % PIM_CHANNELS_PER_SOCKET;
+        let socket = ch_g / PIM_CHANNELS_PER_SOCKET;
+        RankLoc { socket, channel, dimm, rank_in_dimm }
+    }
+
+    /// Ranks attached to a socket.
+    pub fn ranks_of_socket(&self, socket: usize) -> Vec<RankId> {
+        (0..TOTAL_RANKS).filter(|&r| self.rank_loc(r).socket == socket).collect()
+    }
+
+    /// Ranks on a (socket, channel) pair.
+    pub fn ranks_of_channel(&self, socket: usize, channel: usize) -> Vec<RankId> {
+        (0..TOTAL_RANKS)
+            .filter(|&r| {
+                let l = self.rank_loc(r);
+                l.socket == socket && l.channel == channel
+            })
+            .collect()
+    }
+
+    /// DPU ids of a rank.
+    pub fn dpus_of_rank(&self, rank: RankId) -> impl Iterator<Item = DpuId> {
+        (rank * DPUS_PER_RANK)..((rank + 1) * DPUS_PER_RANK)
+    }
+
+    /// The rank a DPU belongs to.
+    pub fn rank_of_dpu(&self, dpu: DpuId) -> RankId {
+        dpu / DPUS_PER_RANK
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_match_the_paper() {
+        assert_eq!(TOTAL_RANKS, 40);
+        assert_eq!(TOTAL_DPUS, 2560);
+        assert_eq!(SystemTopology::paper_server().usable_dpus(), 2551);
+        assert_eq!(SystemTopology::pristine().usable_dpus(), 2560);
+    }
+
+    #[test]
+    fn rank_loc_roundtrip() {
+        let t = SystemTopology::pristine();
+        let mut seen = std::collections::HashSet::new();
+        for r in 0..TOTAL_RANKS {
+            let l = t.rank_loc(r);
+            assert!(l.socket < SOCKETS);
+            assert!(l.channel < PIM_CHANNELS_PER_SOCKET);
+            assert!(l.dimm < DIMMS_PER_CHANNEL);
+            assert!(l.rank_in_dimm < RANKS_PER_DIMM);
+            assert!(seen.insert(l), "duplicate location for rank {r}");
+            // Reconstruct the id from the location.
+            let id = (((l.socket * PIM_CHANNELS_PER_SOCKET) + l.channel) * DIMMS_PER_CHANNEL
+                + l.dimm)
+                * RANKS_PER_DIMM
+                + l.rank_in_dimm;
+            assert_eq!(id, r);
+        }
+    }
+
+    #[test]
+    fn socket_split_is_even() {
+        let t = SystemTopology::pristine();
+        assert_eq!(t.ranks_of_socket(0).len(), 20);
+        assert_eq!(t.ranks_of_socket(1).len(), 20);
+        for s in 0..SOCKETS {
+            for c in 0..PIM_CHANNELS_PER_SOCKET {
+                assert_eq!(t.ranks_of_channel(s, c).len(), 4); // 2 DIMMs × 2 ranks
+            }
+        }
+    }
+
+    #[test]
+    fn faulty_dpus_reduce_rank_population() {
+        let mut t = SystemTopology::pristine();
+        t.mark_faulty(70); // rank 1
+        assert_eq!(t.usable_dpus_in_rank(1), 63);
+        assert_eq!(t.usable_dpus_in_rank(0), 64);
+        assert!(t.is_faulty(70));
+        assert_eq!(t.rank_of_dpu(70), 1);
+    }
+
+    #[test]
+    fn global_channel_indexing() {
+        let t = SystemTopology::pristine();
+        let l0 = t.rank_loc(0);
+        assert_eq!(l0.global_channel(), 0);
+        let l_last = t.rank_loc(TOTAL_RANKS - 1);
+        assert_eq!(l_last.global_channel(), 9);
+    }
+}

@@ -1,0 +1,126 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Error kinds produced by the simulator, the host runtime and the
+/// coordinator. A single enum keeps the public API small; variants carry a
+/// human-readable message plus enough structure for tests to assert on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// Assembler error: bad mnemonic, unknown label, malformed operand.
+    Asm { line: usize, msg: String },
+    /// DPU fault raised during simulation (alignment, OOB, bad opcode…).
+    Fault { dpu: usize, tasklet: usize, pc: u32, kind: FaultKind },
+    /// IRAM overflow: the program does not fit in 24 KB (the paper's
+    /// "#pragma unroll can lead to IRAM overfill, which results in a
+    /// linker error").
+    IramOverflow { program_bytes: usize, iram_bytes: usize },
+    /// Host-side allocation failure (not enough free ranks/DPUs, or the
+    /// NUMA/channel constraint cannot be satisfied).
+    Alloc(String),
+    /// Transfer engine misuse (size mismatch, unaligned MRAM offset…).
+    Transfer(String),
+    /// Coordinator / serving-layer error.
+    Coordinator(String),
+    /// Configuration parse error.
+    Config { line: usize, msg: String },
+    /// PJRT / XLA runtime error (wrapped as text: `xla::Error` is not
+    /// `Clone`).
+    Runtime(String),
+    /// Catch-all for I/O.
+    Io(String),
+}
+
+/// Faults a simulated DPU can raise. Mirrors the failure modes the UPMEM
+/// SDK surfaces (DMA alignment, memory bounds, invalid instructions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// WRAM access out of the 64 KB window.
+    WramOutOfBounds,
+    /// MRAM access out of the 64 MB bank.
+    MramOutOfBounds,
+    /// DMA transfer not 8-byte aligned / multiple of 8 bytes.
+    DmaAlignment,
+    /// Load/store address not aligned to access width.
+    MemAlignment,
+    /// PC ran off the end of IRAM.
+    PcOutOfBounds,
+    /// Executed an instruction the interpreter does not implement.
+    IllegalInstruction,
+    /// `fault` instruction executed (kernel assertion).
+    Explicit,
+    /// Cycle budget exhausted (runaway-loop guard).
+    CycleLimit,
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FaultKind::WramOutOfBounds => "WRAM access out of bounds",
+            FaultKind::MramOutOfBounds => "MRAM access out of bounds",
+            FaultKind::DmaAlignment => "DMA alignment violation",
+            FaultKind::MemAlignment => "load/store alignment violation",
+            FaultKind::PcOutOfBounds => "PC out of IRAM bounds",
+            FaultKind::IllegalInstruction => "illegal instruction",
+            FaultKind::Explicit => "explicit fault",
+            FaultKind::CycleLimit => "cycle limit exceeded",
+        };
+        f.write_str(s)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Asm { line, msg } => write!(f, "asm error at line {line}: {msg}"),
+            Error::Fault { dpu, tasklet, pc, kind } => {
+                write!(f, "DPU {dpu} tasklet {tasklet} faulted at pc={pc:#x}: {kind}")
+            }
+            Error::IramOverflow { program_bytes, iram_bytes } => write!(
+                f,
+                "IRAM overflow: program is {program_bytes} B but IRAM holds {iram_bytes} B \
+                 (linker error on real UPMEM)"
+            ),
+            Error::Alloc(m) => write!(f, "allocation error: {m}"),
+            Error::Transfer(m) => write!(f, "transfer error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Config { line, msg } => write!(f, "config error at line {line}: {msg}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_are_stable() {
+        let e = Error::Asm { line: 3, msg: "bad mnemonic".into() };
+        assert_eq!(e.to_string(), "asm error at line 3: bad mnemonic");
+        let e = Error::IramOverflow { program_bytes: 30000, iram_bytes: 24576 };
+        assert!(e.to_string().contains("30000"));
+        let e = Error::Fault { dpu: 1, tasklet: 2, pc: 0x40, kind: FaultKind::DmaAlignment };
+        assert!(e.to_string().contains("tasklet 2"));
+        assert!(e.to_string().contains("DMA alignment"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

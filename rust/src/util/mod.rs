@@ -1,0 +1,12 @@
+//! Small self-contained substrates: error type, deterministic PRNG,
+//! statistics helpers and a mini property-testing harness.
+//!
+//! The build environment is offline with a restricted crate cache (no
+//! `rand`, `proptest`, `criterion`, `serde`), so these utilities are
+//! implemented in-repo. They are deliberately small, deterministic and
+//! well-tested — reproducibility of the paper's figures depends on them.
+
+pub mod error;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,182 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline crate cache does not ship `proptest`, so this module
+//! provides the slice of it the test suite needs: run a property over many
+//! random inputs derived from a deterministic seed, and on failure shrink
+//! the input with a caller-provided shrinker before reporting.
+//!
+//! Usage:
+//! ```text
+//! use upmem_unleashed::util::proptest::{forall, Config};
+//! forall(Config::cases(64), |rng| rng.range_u64(0, 100), |&x| x <= 100, "x in range");
+//! ```
+//! (illustrative block, not a doctest: doctest binaries cannot link
+//! against the xla_extension rpath in this offline image)
+
+use super::rng::Rng;
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i` so failures name a single seed.
+    pub seed: u64,
+    /// Maximum shrink iterations.
+    pub max_shrink: usize,
+}
+
+impl Config {
+    pub fn cases(cases: usize) -> Self {
+        Config { cases, seed: 0xC0FFEE, max_shrink: 200 }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Run `prop` over `cfg.cases` inputs produced by `gen`. Panics with the
+/// seed and debug-printed input on the first failure. No shrinking.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+    name: &str,
+) {
+    for i in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!("property '{name}' failed on case {i} (seed {seed}): input = {input:?}");
+        }
+    }
+}
+
+/// Like [`forall`], but on failure repeatedly applies `shrink` (which
+/// yields candidate smaller inputs) to find a minimal counterexample.
+pub fn forall_shrink<T: std::fmt::Debug + Clone>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+    mut shrink: impl FnMut(&T) -> Vec<T>,
+    name: &str,
+) {
+    for i in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            // Greedy shrink: take the first failing candidate each round.
+            let mut current = input.clone();
+            let mut rounds = 0;
+            'outer: while rounds < cfg.max_shrink {
+                rounds += 1;
+                for cand in shrink(&current) {
+                    if !prop(&cand) {
+                        current = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed}):\n  original: {input:?}\n  \
+                 shrunk ({rounds} rounds): {current:?}"
+            );
+        }
+    }
+}
+
+/// Standard shrinker for vectors: halves, then drop-one-element variants.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    if v.len() <= 16 {
+        for i in 0..v.len() {
+            let mut w = v.to_vec();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    out
+}
+
+/// Standard shrinker for unsigned integers: 0, halves, decrements.
+pub fn shrink_u64(x: &u64) -> Vec<u64> {
+    let x = *x;
+    let mut out = Vec::new();
+    if x == 0 {
+        return out;
+    }
+    out.push(0);
+    out.push(x / 2);
+    out.push(x - 1);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            Config::cases(50),
+            |rng| rng.range_u64(0, 10),
+            |&x| {
+                count += 1;
+                x <= 10
+            },
+            "range bound",
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "always false")]
+    fn failing_property_panics_with_name() {
+        forall(Config::cases(5), |rng| rng.next_u64(), |_| false, "always false");
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property: all vectors have length < 4. Counterexamples shrink
+        // toward length exactly 4.
+        let caught = std::panic::catch_unwind(|| {
+            forall_shrink(
+                Config::cases(20),
+                |rng| {
+                    let n = rng.range_u64(0, 32) as usize;
+                    rng.u8_vec(n)
+                },
+                |v| v.len() < 4,
+                |v| shrink_vec(v),
+                "short vectors",
+            );
+        });
+        let msg = match caught {
+            Ok(()) => panic!("property should have failed"),
+            Err(e) => *e.downcast::<String>().expect("panic payload is String"),
+        };
+        // Greedy shrinking with the halve/drop-one shrinker must land on a
+        // minimal counterexample: exactly 4 elements.
+        assert!(msg.contains("shrunk"), "message: {msg}");
+        let shrunk_part = msg.split("shrunk").nth(1).unwrap();
+        let commas = shrunk_part.matches(',').count();
+        assert_eq!(commas, 3, "expected minimal 4-element vec, message: {msg}");
+    }
+
+    #[test]
+    fn shrink_u64_candidates() {
+        assert!(shrink_u64(&0).is_empty());
+        assert_eq!(shrink_u64(&10), vec![0, 5, 9]);
+    }
+}

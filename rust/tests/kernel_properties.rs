@@ -1,0 +1,264 @@
+//! Property-based tests over the kernel and substrate invariants
+//! (mini-harness in `util::proptest`; the offline cache has no
+//! proptest crate).
+
+use upmem_unleashed::dpu::{assemble, Dpu};
+use upmem_unleashed::kernels::arith::{
+    emit_microbench, run_microbench, DType, MulImpl, Spec, Unroll,
+};
+use upmem_unleashed::kernels::encode;
+use upmem_unleashed::transfer::model::BufferPlacement;
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::transfer::{Direction, TransferModel};
+use upmem_unleashed::util::proptest::{forall, Config};
+use upmem_unleashed::util::rng::Rng;
+
+/// Every microbenchmark variant produces identical MRAM contents no
+/// matter the unroll factor or tasklet count — unrolling is a pure
+/// performance transformation.
+#[test]
+fn unrolling_never_changes_results() {
+    forall(
+        Config::cases(12),
+        |rng| {
+            let dtype = if rng.f64() < 0.5 { DType::I8 } else { DType::I32 };
+            let mimpl = *rng.choose(&[MulImpl::Mulsi3, MulImpl::Native, MulImpl::Dim]);
+            let unroll = *rng.choose(&[Unroll::X64, Unroll::X128]);
+            let tasklets = rng.range_u64(1, 16) as usize;
+            let seed = rng.next_u64();
+            (dtype, mimpl, unroll, tasklets, seed)
+        },
+        |&(dtype, mimpl, unroll, tasklets, seed)| {
+            // Skip invalid combos (native/dim constraints per dtype).
+            let spec = match (dtype, mimpl) {
+                (DType::I8, MulImpl::Dim) => return true,
+                (DType::I32, MulImpl::Native) => return true,
+                _ => Spec { dtype, op: upmem_unleashed::kernels::arith::Op::Mul, mimpl, unroll },
+            };
+            // run_microbench verifies outputs internally (Err on
+            // mismatch), and the unrolled variant must agree too.
+            run_microbench(spec.with_unroll(Unroll::No), tasklets, 8 * 1024, seed).is_ok()
+                && run_microbench(spec, tasklets, 8 * 1024, seed).is_ok()
+        },
+        "unroll factor never changes kernel results",
+    );
+}
+
+/// Cycle counts are deterministic: same spec + seed ⇒ identical cycles.
+#[test]
+fn simulation_is_deterministic() {
+    let spec = Spec::mul(DType::I8, MulImpl::NativeX8);
+    let a = run_microbench(spec, 16, 16 * 1024, 9).unwrap();
+    let b = run_microbench(spec, 16, 16 * 1024, 9).unwrap();
+    assert_eq!(a.launch.cycles, b.launch.cycles);
+    assert_eq!(a.launch.instrs, b.launch.instrs);
+    assert_eq!(a.tasklet_cycles, b.tasklet_cycles);
+}
+
+/// MOPS never decreases when tasklets are added (monotone ramp).
+#[test]
+fn tasklet_scaling_is_monotone() {
+    let spec = Spec::add(DType::I8);
+    let bytes = 176 * 1024;
+    let mut last = 0.0;
+    for t in 1..=16 {
+        let m = run_microbench(spec, t, bytes, 4).unwrap().mops;
+        // Allow a ≤2.5 % dip from uneven block assignment when the
+        // tasklet count does not divide the block count (the paper's
+        // 1M-element buffer smooths this the same way).
+        assert!(m >= 0.975 * last, "t={t}: {m} < {last}");
+        last = last.max(m);
+    }
+}
+
+/// Disassembly round-trips through the assembler for every emitted
+/// microbenchmark program.
+#[test]
+fn disasm_roundtrip_for_all_kernels() {
+    for spec in [
+        Spec::add(DType::I8),
+        Spec::add(DType::I32).with_unroll(Unroll::X64),
+        Spec::mul(DType::I8, MulImpl::Mulsi3),
+        Spec::mul(DType::I8, MulImpl::NativeX8),
+        Spec::mul(DType::I32, MulImpl::Dim),
+    ] {
+        let p1 = emit_microbench(spec).unwrap();
+        let p2 = assemble(&p1.disasm()).unwrap_or_else(|e| panic!("{}: {e}", spec.name()));
+        assert_eq!(p1.instrs, p2.instrs, "{}", spec.name());
+    }
+}
+
+/// Bit-plane encode/decode is a bijection on valid INT4 vectors, and
+/// the encoded form is exactly half the INT8 storage.
+#[test]
+fn bitplane_encoding_properties() {
+    forall(
+        Config::cases(100),
+        |rng| {
+            let n = rng.range_u64(1, 64) as usize * 32;
+            rng.i4_vec(n)
+        },
+        |vals| {
+            let planes = encode::bitplane_encode_i4(vals);
+            planes.len() * 4 == vals.len() / 2 && encode::bitplane_decode_i4(&planes) == *vals
+        },
+        "bitplane encode/decode bijection + 2x density",
+    );
+}
+
+/// BSDP evaluated on planes equals the direct signed dot product for
+/// random vectors (host-side Algorithm 2 oracle).
+#[test]
+fn bsdp_plane_evaluation_matches_dot() {
+    forall(
+        Config::cases(60),
+        |rng| {
+            let n = rng.range_u64(1, 16) as usize * 32;
+            (rng.i4_vec(n), rng.i4_vec(n))
+        },
+        |(a, b)| {
+            let got = encode::bsdp_eval_i4(
+                &encode::bitplane_encode_i4(a),
+                &encode::bitplane_encode_i4(b),
+            );
+            got == encode::dot_i4_ref(a, b)
+        },
+        "bit-serial == direct dot product",
+    );
+}
+
+/// Transfer model: adding ranks to a balanced allocation never reduces
+/// throughput, and PerSocket placement is never slower than pinning to
+/// one node.
+#[test]
+fn transfer_model_monotonicity() {
+    let topo = SystemTopology::pristine();
+    let model = TransferModel::default();
+    let balanced = |n: usize| -> Vec<usize> {
+        // one rank per channel, alternating sockets
+        let mut out = Vec::new();
+        'outer: for round in 0..4 {
+            for c in 0..5 {
+                for s in 0..2 {
+                    if out.len() >= n {
+                        break 'outer;
+                    }
+                    out.push(topo.ranks_of_channel(s, c)[round]);
+                }
+            }
+        }
+        out
+    };
+    let bytes = 1u64 << 30;
+    let mut last_gbps = 0.0;
+    for n in [1usize, 2, 4, 8, 16, 32, 40] {
+        let ranks = balanced(n);
+        for dir in [Direction::HostToPim, Direction::PimToHost] {
+            let t_per =
+                model.parallel_seconds(&topo, &ranks, bytes, dir, BufferPlacement::PerSocket);
+            let t_pin = model.parallel_seconds(&topo, &ranks, bytes, dir,
+                BufferPlacement::Node(0));
+            assert!(t_per <= t_pin + 1e-12, "n={n} {dir:?}");
+        }
+        let gbps = bytes as f64
+            / model.parallel_seconds(
+                &topo,
+                &ranks,
+                bytes,
+                Direction::HostToPim,
+                BufferPlacement::PerSocket,
+            );
+        assert!(gbps >= last_gbps * (1.0 - 1e-9), "n={n}: {gbps} < {last_gbps}");
+        last_gbps = gbps;
+    }
+}
+
+/// Fault injection: a DPU program that faults on one DPU surfaces the
+/// *global* DPU id through the host layer.
+#[test]
+fn fleet_fault_reports_global_dpu_id() {
+    use upmem_unleashed::host::{AllocPolicy, PimSystem};
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    let set = sys.alloc_ranks(2).unwrap();
+    // Fault only where WRAM[0] == magic, planted on one DPU.
+    let prog = assemble(
+        "move r1, 0\n\
+         lw r0, r1, 0\n\
+         jneq r0, 77, @ok\n\
+         fault\n\
+         ok:\n\
+         stop\n",
+    )
+    .unwrap();
+    sys.load_program(&set, &prog).unwrap();
+    sys.set_args(&set, |i| if i == 100 { vec![(0, 77)] } else { vec![] }).unwrap();
+    let err = sys.launch(&set, 4).unwrap_err();
+    match err {
+        upmem_unleashed::Error::Fault { dpu, .. } => {
+            assert_eq!(dpu, set.dpus[100], "fault must carry the global DPU id");
+        }
+        other => panic!("unexpected error: {other}"),
+    }
+}
+
+/// The `__mulsi3` reconstruction agrees with wrapping multiplication on
+/// a large randomized sweep run through the *microbenchmark* (end to
+/// end through MRAM staging, not just the routine harness).
+#[test]
+fn mulsi3_sweep_through_microbench() {
+    forall(
+        Config::cases(6),
+        |rng| rng.next_u64(),
+        |&seed| {
+            run_microbench(Spec::mul(DType::I32, MulImpl::Mulsi3), 8, 8 * 1024, seed).is_ok()
+        },
+        "__mulsi3 microbenchmark verifies on random data",
+    );
+}
+
+/// Random-program smoke fuzz: assembling the disassembly of random
+/// (valid) straight-line ALU programs round-trips and executes without
+/// faulting.
+#[test]
+fn straightline_program_fuzz() {
+    forall(
+        Config::cases(40),
+        |rng| {
+            let n = rng.range_u64(1, 60);
+            let mut src = String::new();
+            for _ in 0..n {
+                let rd = rng.range_u64(0, 7);
+                let ra = rng.range_u64(0, 7);
+                let op = *rng.choose(&["add", "sub", "and", "or", "xor", "lsl", "lsr", "asr"]);
+                let imm = rng.range_i64(-128, 127);
+                src.push_str(&format!("{op} r{rd}, r{ra}, {imm}\n"));
+            }
+            src.push_str("stop\n");
+            src
+        },
+        |src| {
+            let Ok(p1) = assemble(src) else { return false };
+            let Ok(p2) = assemble(&p1.disasm()) else { return false };
+            if p1.instrs != p2.instrs {
+                return false;
+            }
+            let mut dpu = Dpu::new();
+            dpu.load_program(&p1).unwrap();
+            dpu.launch(4).is_ok()
+        },
+        "random straight-line programs round-trip and run",
+    );
+}
+
+/// Seeds differ ⇒ data differs but cycle counts of data-independent
+/// kernels do not (NI path), while the data-dependent `__mulsi3` path
+/// may differ.
+#[test]
+fn data_independence_of_ni_kernels() {
+    let mut rng = Rng::new(1);
+    let spec = Spec::mul(DType::I8, MulImpl::NativeX8);
+    let c: Vec<u64> = (0..3)
+        .map(|_| run_microbench(spec, 8, 16 * 1024, rng.next_u64()).unwrap().launch.cycles)
+        .collect();
+    assert!(c.windows(2).all(|w| w[0] == w[1]), "NI kernels are data-independent: {c:?}");
+}

@@ -1,0 +1,122 @@
+//! Cross-layer integration: the rust DPU simulator, the AOT-compiled
+//! JAX/Pallas artifacts (via PJRT) and the native CPU reference must
+//! all agree numerically.
+//!
+//! These tests skip (with a notice) when `make artifacts` has not run,
+//! so `cargo test` stays green on a fresh checkout; CI runs
+//! `make artifacts` first.
+
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::kernels::encode;
+use upmem_unleashed::kernels::gemv::{gemv_ref, GemvShape, GemvVariant};
+use upmem_unleashed::coordinator::GemvCoordinator;
+use upmem_unleashed::runtime::{
+    artifacts_available, BsdpOracle, GemvOracle, MlpOracle, XlaRuntime, ORACLE_COLS, ORACLE_ROWS,
+};
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::rng::Rng;
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+#[test]
+fn xla_gemv_oracle_matches_host_reference() {
+    require_artifacts!();
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    let oracle = GemvOracle::load(&rt).expect("artifact loads");
+    let mut rng = Rng::new(71);
+    let m = rng.i8_vec(ORACLE_ROWS * ORACLE_COLS);
+    let x = rng.i8_vec(ORACLE_COLS);
+    let y = oracle.gemv(&m, &x).expect("executes");
+    let want = gemv_ref(
+        GemvShape { rows: ORACLE_ROWS as u32, cols: ORACLE_COLS as u32 },
+        &m,
+        &x,
+    );
+    assert_eq!(y, want);
+}
+
+#[test]
+fn simulator_fleet_agrees_with_xla_oracle() {
+    require_artifacts!();
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    let oracle = GemvOracle::load(&rt).expect("artifact loads");
+    let mut rng = Rng::new(72);
+    let m = rng.i8_vec(ORACLE_ROWS * ORACLE_COLS);
+    let x = rng.i8_vec(ORACLE_COLS);
+
+    // Same matrix through the simulated DPU fleet.
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    let set = sys.alloc_ranks(2).unwrap();
+    let mut c = GemvCoordinator::new(sys, set, GemvVariant::I8Opt, 8);
+    c.preload_matrix(ORACLE_ROWS as u32, ORACLE_COLS as u32, &m).unwrap();
+    let (y_sim, _) = c.gemv(&x).unwrap();
+
+    let y_xla = oracle.gemv(&m, &x).expect("executes");
+    assert_eq!(y_sim, y_xla, "DPU simulator vs AOT XLA artifact");
+}
+
+#[test]
+fn bsdp_artifact_matches_simulator_and_reference() {
+    require_artifacts!();
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    let oracle = BsdpOracle::load(&rt).expect("artifact loads");
+    let (rows, cols) = (256usize, 2048usize);
+    let mut rng = Rng::new(73);
+    let m = rng.i4_vec(rows * cols);
+    let x = rng.i4_vec(cols);
+    // Encode with the rust encoder (layout shared with python ref.py).
+    let mut m_planes = Vec::new();
+    for r in m.chunks_exact(cols) {
+        m_planes.extend(encode::bitplane_encode_i4(r));
+    }
+    let x_planes = encode::bitplane_encode_i4(&x);
+    let y_xla = oracle.gemv(&m_planes, &x_planes, rows).expect("executes");
+    let want = gemv_ref(GemvShape { rows: rows as u32, cols: cols as u32 }, &m, &x);
+    assert_eq!(y_xla, want, "Pallas BSDP artifact vs host reference");
+
+    // And the simulated DPU fleet on the same data.
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    let set = sys.alloc_ranks(2).unwrap();
+    let mut c = GemvCoordinator::new(sys, set, GemvVariant::I4Bsdp, 8);
+    c.preload_matrix(rows as u32, cols as u32, &m).unwrap();
+    let (y_sim, _) = c.gemv(&x).unwrap();
+    assert_eq!(y_sim, y_xla, "DPU simulator vs Pallas BSDP artifact");
+}
+
+#[test]
+fn mlp_artifact_matches_rust_fixed_point_pipeline() {
+    require_artifacts!();
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    let oracle = MlpOracle::load(&rt).expect("artifact loads");
+    let mut rng = Rng::new(74);
+    let w1 = rng.i8_vec(1024 * 1024);
+    let w2 = rng.i8_vec(64 * 1024);
+    let x = rng.i8_vec(1024);
+    let got = oracle.forward(&w1, &w2, &x).expect("executes");
+
+    // Rust-side fixed-point pipeline (the serving example's math).
+    let h = gemv_ref(GemvShape { rows: 1024, cols: 1024 }, &w1, &x);
+    let h8: Vec<i8> = h
+        .iter()
+        .map(|&v| (v.max(0) >> 8).clamp(-128, 127) as i8)
+        .collect();
+    let want = gemv_ref(GemvShape { rows: 64, cols: 1024 }, &w2, &h8);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn xla_cpu_comparator_reports_throughput() {
+    require_artifacts!();
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    let oracle = GemvOracle::load(&rt).expect("artifact loads");
+    let gops = oracle.measure_gops(3, 99).expect("measures");
+    assert!(gops > 0.01, "gops = {gops}");
+    eprintln!("XLA CPU INT8 GEMV comparator: {gops:.2} GOPS");
+}

@@ -1,0 +1,171 @@
+//! System-level integration over the pure-rust stack (no artifacts
+//! needed): allocation policies × transfer engine × DPU fleet ×
+//! coordinator × serving layer, plus fault injection.
+
+use std::time::Duration;
+
+use upmem_unleashed::config::{ConfigDoc, GemvJob, RunConfig};
+use upmem_unleashed::coordinator::{Batcher, GemvCoordinator, GemvServer};
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::kernels::gemv::{gemv_ref, GemvShape, GemvVariant};
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::proptest::{forall, Config};
+use upmem_unleashed::util::rng::Rng;
+
+#[test]
+fn gemv_correct_under_both_allocation_policies() {
+    for policy in [AllocPolicy::NumaAware, AllocPolicy::BaselineSdk { boot_seed: 5 }] {
+        let mut sys = PimSystem::new(SystemTopology::pristine(), policy);
+        let set = sys.alloc_ranks(2).unwrap();
+        let mut c = GemvCoordinator::new(sys, set, GemvVariant::I8Opt, 8);
+        let mut rng = Rng::new(81);
+        let (rows, cols) = (256u32, 1024u32);
+        let m = rng.i8_vec((rows * cols) as usize);
+        let x = rng.i8_vec(cols as usize);
+        c.preload_matrix(rows, cols, &m).unwrap();
+        let (y, t) = c.gemv(&x).unwrap();
+        assert_eq!(y, gemv_ref(GemvShape { rows, cols }, &m, &x));
+        // The policy changes timing, never results.
+        assert!(t.total() > 0.0);
+    }
+}
+
+#[test]
+fn numa_policy_is_faster_end_to_end() {
+    let run = |policy| {
+        let mut sys = PimSystem::new(SystemTopology::pristine(), policy);
+        let set = sys.alloc_ranks(4).unwrap();
+        let mut c = GemvCoordinator::new(sys, set, GemvVariant::I8Opt, 8);
+        let mut rng = Rng::new(82);
+        let (rows, cols) = (512u32, 1024u32);
+        let m = rng.i8_vec((rows * cols) as usize);
+        let x = rng.i8_vec(cols as usize);
+        let (_, t) = c.gemv_with_matrix(rows, cols, &m, &x).unwrap();
+        t
+    };
+    let numa = run(AllocPolicy::NumaAware);
+    let base = run(AllocPolicy::BaselineSdk { boot_seed: 1 });
+    // Same compute, slower transfers under the baseline allocator.
+    assert!((numa.compute_s - base.compute_s).abs() < 1e-9);
+    assert!(base.matrix_s > numa.matrix_s, "numa={} base={}", numa.matrix_s, base.matrix_s);
+}
+
+#[test]
+fn faulty_dpus_are_transparent_to_results() {
+    // The paper's machine has 9 disabled DPUs; work must still be
+    // partitioned only over usable units with identical results.
+    let mut healthy = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    let mut faulty = PimSystem::new(SystemTopology::paper_server(), AllocPolicy::NumaAware);
+    let sh = healthy.alloc_ranks(40).unwrap();
+    let sf = faulty.alloc_ranks(40).unwrap();
+    assert_eq!(sh.nr_dpus(), 2560);
+    assert_eq!(sf.nr_dpus(), 2551);
+
+    // Run a small GEMV over a 2-rank subset of the faulty machine that
+    // actually contains a disabled DPU.
+    let topo = SystemTopology::paper_server();
+    let has_fault = (64..192).any(|d| topo.is_faulty(d));
+    assert!(has_fault, "ranks 1-2 should contain an injected fault");
+    let mut sys = PimSystem::new(topo, AllocPolicy::NumaAware);
+    let set = sys.alloc_ranks(2).unwrap();
+    let mut c = GemvCoordinator::new(sys, set, GemvVariant::I8Opt, 8);
+    let mut rng = Rng::new(83);
+    let (rows, cols) = (300u32, 1024u32);
+    let m = rng.i8_vec((rows * cols) as usize);
+    let x = rng.i8_vec(cols as usize);
+    c.preload_matrix(rows, cols, &m).unwrap();
+    let (y, _) = c.gemv(&x).unwrap();
+    assert_eq!(y, gemv_ref(GemvShape { rows, cols }, &m, &x));
+}
+
+#[test]
+fn serving_stack_under_concurrent_clients() {
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    let set = sys.alloc_ranks(2).unwrap();
+    let mut c = GemvCoordinator::new(sys, set, GemvVariant::I8Opt, 8);
+    let mut rng = Rng::new(84);
+    let (rows, cols) = (128u32, 1024u32);
+    let m = rng.i8_vec((rows * cols) as usize);
+    c.preload_matrix(rows, cols, &m).unwrap();
+    let (server, client) = GemvServer::start(c, Batcher::new(4, Duration::from_micros(300)));
+
+    // Three client threads, each submitting its own vectors.
+    let handles: Vec<_> = (0..3)
+        .map(|t| {
+            let cl = client.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                let mut ok = 0;
+                for _ in 0..4 {
+                    let x = rng.i8_vec(1024);
+                    if cl.call(x).map(|r| r.y.is_ok()).unwrap_or(false) {
+                        ok += 1;
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let (_, metrics) = server.shutdown();
+    assert_eq!(total, 12);
+    assert_eq!(metrics.requests, 12);
+    assert_eq!(metrics.errors, 0);
+    assert!(metrics.batches <= 12);
+}
+
+#[test]
+fn config_driven_pipeline() {
+    let doc = ConfigDoc::parse(
+        "[system]\nranks = 2\ntasklets = 8\npolicy = \"numa\"\nseed = 9\n\
+         [gemv]\nrows = 128\ncols = 2048\nvariant = \"i4-bsdp\"\n",
+    )
+    .unwrap();
+    let run = RunConfig::from_doc(&doc).unwrap();
+    let job = GemvJob::from_doc(&doc).unwrap();
+    let mut sys = run.build_system();
+    let set = sys.alloc_ranks(run.ranks).unwrap();
+    let mut c = GemvCoordinator::new(sys, set, job.variant, run.tasklets);
+    let mut rng = Rng::new(run.seed);
+    let m = rng.i4_vec((job.rows * job.cols) as usize);
+    let x = rng.i4_vec(job.cols as usize);
+    c.preload_matrix(job.rows, job.cols, &m).unwrap();
+    let (y, _) = c.gemv(&x).unwrap();
+    assert_eq!(y, gemv_ref(GemvShape { rows: job.rows, cols: job.cols }, &m, &x));
+}
+
+#[test]
+fn fleet_gemv_property_random_shapes() {
+    // Property: for random (rows, cols, tasklets, variant), the fleet
+    // result equals the host reference.
+    forall(
+        Config::cases(8),
+        |rng| {
+            let rows = rng.range_u64(1, 300) as u32;
+            let cols = *rng.choose(&[1024u32, 2048]);
+            let tasklets = rng.range_u64(1, 16) as usize;
+            let bsdp = rng.f64() < 0.5;
+            let seed = rng.next_u64();
+            (rows, cols, tasklets, bsdp, seed)
+        },
+        |&(rows, cols, tasklets, bsdp, seed)| {
+            let variant = if bsdp { GemvVariant::I4Bsdp } else { GemvVariant::I8Opt };
+            if bsdp && cols == 1024 {
+                return true; // BSDP needs ≥2048 columns (1 KB chunks)
+            }
+            let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+            let set = sys.alloc_ranks(2).unwrap();
+            let mut c = GemvCoordinator::new(sys, set, variant, tasklets);
+            let mut rng = Rng::new(seed);
+            let (m, x) = if bsdp {
+                (rng.i4_vec((rows * cols) as usize), rng.i4_vec(cols as usize))
+            } else {
+                (rng.i8_vec((rows * cols) as usize), rng.i8_vec(cols as usize))
+            };
+            c.preload_matrix(rows, cols, &m).unwrap();
+            let (y, _) = c.gemv(&x).unwrap();
+            y == gemv_ref(GemvShape { rows, cols }, &m, &x)
+        },
+        "fleet GEMV == host reference for random shapes",
+    );
+}
