@@ -10,32 +10,25 @@ mod common;
 
 use common::{check, footer, timed};
 use upmem_unleashed::bench_support::table::{f2, Table};
-use upmem_unleashed::host::{AllocPolicy, PimSystem};
-use upmem_unleashed::transfer::model::BufferPlacement;
+use upmem_unleashed::host::{AllocPolicy, DpuSet, PimSystem};
 use upmem_unleashed::transfer::topology::SystemTopology;
-use upmem_unleashed::transfer::{Direction, TransferModel};
+use upmem_unleashed::transfer::Direction;
 use upmem_unleashed::util::rng::Rng;
 use upmem_unleashed::util::stats::{geomean, Summary};
 
 const BOOTS: u64 = 20;
 const BYTES_PER_RANK: u64 = 32 << 20; // the paper's 32 MB blocks
 
-fn sample(
-    topo: &SystemTopology,
-    model: &TransferModel,
-    ranks: &[usize],
-    placement: BufferPlacement,
-    dir: Direction,
-    rng: &mut Rng,
-) -> f64 {
-    let total = BYTES_PER_RANK * ranks.len() as u64;
-    model.parallel_gbps_sampled(topo, ranks, total, dir, placement, rng)
+/// Sample through the system's transfer engine (the SDK-v2 surface the
+/// coordinator itself uses), not a bare model instance.
+fn sample(sys: &PimSystem, set: &DpuSet, dir: Direction, rng: &mut Rng) -> f64 {
+    let total = BYTES_PER_RANK * set.ranks.ranks.len() as u64;
+    sys.engine.parallel_gbps_sampled(&set.ranks.ranks, total, dir, set.placement, rng)
 }
 
 fn main() {
     let (_, wall) = timed(|| {
         let topo = SystemTopology::paper_server();
-        let model = TransferModel::default();
         let mut rng = Rng::new(2026);
         let mut t = Table::new(
             "Fig. 11 — parallel transfer GB/s vs ranks (mean over 20 boots)",
@@ -56,19 +49,15 @@ fn main() {
             for boot in 0..BOOTS {
                 let mut ours = PimSystem::new(topo.clone(), AllocPolicy::NumaAware);
                 let so = ours.alloc_ranks(n).unwrap();
-                oh.push(sample(&topo, &model, &so.ranks.ranks, so.placement,
-                    Direction::HostToPim, &mut rng));
-                op.push(sample(&topo, &model, &so.ranks.ranks, so.placement,
-                    Direction::PimToHost, &mut rng));
+                oh.push(sample(&ours, &so, Direction::HostToPim, &mut rng));
+                op.push(sample(&ours, &so, Direction::PimToHost, &mut rng));
                 let mut base = PimSystem::new(
                     topo.clone(),
                     AllocPolicy::BaselineSdk { boot_seed: boot },
                 );
                 let sb = base.alloc_ranks(n).unwrap();
-                bh.push(sample(&topo, &model, &sb.ranks.ranks, sb.placement,
-                    Direction::HostToPim, &mut rng));
-                bp.push(sample(&topo, &model, &sb.ranks.ranks, sb.placement,
-                    Direction::PimToHost, &mut rng));
+                bh.push(sample(&base, &sb, Direction::HostToPim, &mut rng));
+                bp.push(sample(&base, &sb, Direction::PimToHost, &mut rng));
             }
             let (soh, sop, sbh, sbp) =
                 (Summary::of(&oh), Summary::of(&op), Summary::of(&bh), Summary::of(&bp));

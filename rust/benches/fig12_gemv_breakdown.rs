@@ -62,6 +62,19 @@ fn main() {
         check("GEMV-V compute/transfer at top size (paper 57x@128GB)", v_ratio_top_i8, 20.0,
             90.0);
         check("GEMV-V vector+gather ms (paper 2-7ms)", v_vector_ms_top, 1.5, 8.0);
+        // SDK-v2 async pipelining: how much of the GEMV-V transfer a
+        // batch of 8 hides under compute (not a paper figure — the v2
+        // host API's contribution on top of it).
+        let pipe = model.evaluate_pipelined(262_144, GemvVariant::I8Opt, 8).unwrap();
+        let serial = pipe.total_s() + pipe.overlap_s;
+        println!(
+            "  SDK-v2 pipelined GEMV-V (batch 8): {:.4}s wall vs {:.4}s serial \
+             ({:.1}% of transfer hidden under compute)",
+            pipe.total_s(),
+            serial,
+            100.0 * pipe.overlap_s
+                / (pipe.vector_s + pipe.gather_s).max(f64::MIN_POSITIVE)
+        );
     });
     footer("fig12", wall);
 }

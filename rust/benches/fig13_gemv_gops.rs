@@ -21,16 +21,19 @@ fn main() {
     let (_, wall) = timed(|| {
         let mut model = FleetGemvModel::paper_fleet();
         let mut t = Table::new(
-            "Fig. 13 — GEMV GOPS: UPMEM (2551 DPUs) vs dual-socket server",
-            &["n", "variant", "GEMV-V", "GEMV-MV", "baseline-V", "server(paper)"],
+            "Fig. 13 — GEMV GOPS: UPMEM (2551 DPUs) vs dual-socket server \
+             (V-pipe8: SDK-v2 async batch of 8)",
+            &["n", "variant", "GEMV-V", "V-pipe8", "GEMV-MV", "baseline-V", "server(paper)"],
         );
         let mut top = (0.0, 0.0, 0.0, 0.0); // i8 V, i8 MV, i4 V, i8 baseline V
+        let mut top_pipe_i8 = 0.0;
         for &n in &paper_matrix_sizes() {
             for (variant, server) in [
                 (GemvVariant::I8Opt, KUNPENG_INT8_GOPS),
                 (GemvVariant::I4Bsdp, KUNPENG_INT4_GOPS),
             ] {
                 let v = model.evaluate(n, variant, Scenario::VectorOnly).unwrap().gops();
+                let vp = model.evaluate_pipelined(n, variant, 8).unwrap().gops();
                 let mv = model.evaluate(n, variant, Scenario::MatrixAndVector).unwrap().gops();
                 let base_v = if variant == GemvVariant::I8Opt {
                     model
@@ -45,6 +48,7 @@ fn main() {
                         top.0 = v;
                         top.1 = mv;
                         top.3 = base_v;
+                        top_pipe_i8 = vp;
                     } else {
                         top.2 = v;
                     }
@@ -53,6 +57,7 @@ fn main() {
                     n.to_string(),
                     variant.name().to_string(),
                     f1(v),
+                    f1(vp),
                     f1(mv),
                     if base_v.is_nan() { "-".into() } else { f1(base_v) },
                     f1(server),
@@ -69,6 +74,8 @@ fn main() {
         check("server vs INT8 GEMV-MV (paper ~4x)", KUNPENG_INT8_GOPS / top.1, 2.5, 6.0);
         check("opt vs baseline kernel (paper 3.5x; NI-naive baseline)", top.0 / top.3, 1.8,
             4.5);
+        // SDK-v2 pipelining must never lose to the synchronous path.
+        check("pipelined vs sync GEMV-V (v2 async, >=1x)", top_pipe_i8 / top.0, 1.0, 2.0);
 
         // This machine's own CPU GEMV (context, not a paper target).
         let i8 = measure_gemv_i8(512, 4096, 3, 9);

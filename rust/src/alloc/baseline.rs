@@ -66,8 +66,8 @@ impl BaselineAllocator {
         self.state.claim(&picks)
     }
 
-    pub fn free(&mut self, set: RankSet) {
-        self.state.release(set);
+    pub fn free(&mut self, set: RankSet) -> crate::Result<()> {
+        self.state.release(set)
     }
 
     pub fn free_ranks(&self) -> usize {
@@ -149,7 +149,7 @@ mod tests {
         for r in &s2.ranks {
             assert!(!s1.ranks.contains(r));
         }
-        a.free(s1);
+        a.free(s1).unwrap();
         let s3 = a.alloc_ranks(30).unwrap();
         assert_eq!(s3.len(), 30);
     }

@@ -91,12 +91,21 @@ impl AllocState {
         Ok(RankSet { ranks: ranks.to_vec() })
     }
 
-    /// Return ranks to the pool.
-    pub fn release(&mut self, set: RankSet) {
-        for r in set.ranks {
-            let inserted = self.free.insert(r);
-            debug_assert!(inserted, "double free of rank {r}");
+    /// Return ranks to the pool. Fails — without mutating anything — if
+    /// any rank is already free (double free, or a set that was never
+    /// claimed from this allocator).
+    pub fn release(&mut self, set: RankSet) -> Result<()> {
+        for &r in &set.ranks {
+            if self.free.contains(&r) {
+                return Err(crate::Error::Alloc(format!(
+                    "rank {r} freed twice (or never allocated)"
+                )));
+            }
         }
+        for r in set.ranks {
+            self.free.insert(r);
+        }
+        Ok(())
     }
 }
 
@@ -111,8 +120,22 @@ mod tests {
         let s = st.claim(&[0, 5, 9]).unwrap();
         assert_eq!(st.free_ranks(), 37);
         assert!(!st.is_free(5));
-        st.release(s);
+        st.release(s).unwrap();
         assert_eq!(st.free_ranks(), 40);
+    }
+
+    #[test]
+    fn double_release_fails_without_mutation() {
+        let mut st = AllocState::new();
+        let s = st.claim(&[1, 2]).unwrap();
+        st.release(s.clone()).unwrap();
+        assert!(st.release(s).is_err(), "double free must be rejected");
+        // Releasing a never-claimed set fails too, atomically: rank 4
+        // is genuinely allocated, but the bad set must not free it.
+        let owned = st.claim(&[4]).unwrap();
+        assert!(st.release(RankSet { ranks: vec![4, 39] }).is_err());
+        assert!(!st.is_free(4), "failed release must not leak partial state");
+        st.release(owned).unwrap();
     }
 
     #[test]

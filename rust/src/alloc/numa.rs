@@ -101,14 +101,14 @@ impl NumaAwareAllocator {
         match self.alloc_ranks_on(1, &ch1) {
             Ok(s1) => Ok([s0, s1]),
             Err(e) => {
-                self.state.release(s0); // roll back
+                self.state.release(s0).expect("rollback of a just-claimed set"); // roll back
                 Err(e)
             }
         }
     }
 
-    pub fn free(&mut self, set: RankSet) {
-        self.state.release(set);
+    pub fn free(&mut self, set: RankSet) -> crate::Result<()> {
+        self.state.release(set)
     }
 
     pub fn free_ranks(&self) -> usize {
@@ -174,8 +174,8 @@ mod tests {
         assert_eq!(s0.len() + s1.len(), 40);
         assert_eq!(a.free_ranks(), 0);
         assert!(a.alloc_balanced(2).is_err());
-        a.free(s0);
-        a.free(s1);
+        a.free(s0).unwrap();
+        a.free(s1).unwrap();
         assert_eq!(a.free_ranks(), 40);
     }
 
@@ -189,7 +189,7 @@ mod tests {
         // Balanced alloc must fail and leave socket 0 untouched.
         assert!(a.alloc_balanced(4).is_err());
         assert_eq!(a.free_ranks(), 20);
-        a.free(all1);
+        a.free(all1).unwrap();
     }
 
     #[test]
@@ -235,7 +235,7 @@ mod tests {
                         Err(_) => {
                             if let Some(s) = live.pop() {
                                 count -= s.len();
-                                a.free(s);
+                                a.free(s).unwrap();
                             }
                         }
                     }

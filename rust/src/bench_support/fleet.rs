@@ -31,12 +31,15 @@ pub enum Scenario {
     VectorOnly,
 }
 
-/// One evaluated configuration.
+/// One evaluated configuration (`requests` GEMVs against the same
+/// matrix; 1 for the classic Fig. 12/13 points).
 #[derive(Debug, Clone, Copy)]
 pub struct FleetGemvPoint {
     pub n: u64,
     pub scenario: Scenario,
     pub variant: GemvVariant,
+    /// Number of GEMVs this point covers (pipelined batches > 1).
+    pub requests: u64,
     /// Matrix transfer seconds (0 for GEMV-V).
     pub matrix_s: f64,
     /// Vector broadcast + launch overhead seconds.
@@ -45,20 +48,24 @@ pub struct FleetGemvPoint {
     pub compute_s: f64,
     /// Result gather seconds.
     pub gather_s: f64,
+    /// Transfer seconds hidden under compute by SDK-v2 async
+    /// pipelining (0 for synchronous evaluation).
+    pub overlap_s: f64,
 }
 
 impl FleetGemvPoint {
     pub fn total_s(&self) -> f64 {
-        self.matrix_s + self.vector_s + self.compute_s + self.gather_s
+        self.matrix_s + self.vector_s + self.compute_s + self.gather_s - self.overlap_s
     }
 
     pub fn transfer_s(&self) -> f64 {
         self.matrix_s + self.vector_s + self.gather_s
     }
 
-    /// GOPS with the BLAS 2-ops-per-MAC convention over an n×n matrix.
+    /// GOPS with the BLAS 2-ops-per-MAC convention over an n×n matrix
+    /// (times `requests` for batched points).
     pub fn gops(&self) -> f64 {
-        2.0 * (self.n as f64) * (self.n as f64) / self.total_s() / 1e9
+        2.0 * (self.n as f64) * (self.n as f64) * self.requests as f64 / self.total_s() / 1e9
     }
 
     pub fn matrix_bytes(&self) -> u64 {
@@ -154,10 +161,39 @@ impl FleetGemvModel {
             n,
             scenario,
             variant,
+            requests: 1,
             matrix_s,
             vector_s,
             compute_s,
             gather_s,
+            overlap_s: 0.0,
+        })
+    }
+
+    /// Evaluate a `depth`-deep GEMV-V batch under the SDK-v2 pipelined
+    /// path: each request's vector broadcast and result gather overlap
+    /// with a neighbor's compute on the per-rank queues, so all but the
+    /// first request hide `min(transfer, compute)` of their wall time.
+    /// The per-launch fixed overhead stays serial (launch submission
+    /// cannot be pipelined on UPMEM).
+    pub fn evaluate_pipelined(
+        &mut self,
+        n: u64,
+        variant: GemvVariant,
+        depth: u64,
+    ) -> Result<FleetGemvPoint> {
+        assert!(depth >= 1);
+        let p = self.evaluate(n, variant, Scenario::VectorOnly)?;
+        let xfer_per_req = (p.vector_s - self.launch_overhead_s) + p.gather_s;
+        let hidden = (depth - 1) as f64 * xfer_per_req.min(p.compute_s);
+        Ok(FleetGemvPoint {
+            requests: depth,
+            matrix_s: 0.0,
+            vector_s: p.vector_s * depth as f64,
+            compute_s: p.compute_s * depth as f64,
+            gather_s: p.gather_s * depth as f64,
+            overlap_s: hidden,
+            ..p
         })
     }
 }
@@ -195,6 +231,19 @@ mod tests {
         let p8 = m.evaluate(262_144, GemvVariant::I8Opt, Scenario::VectorOnly).unwrap();
         let ratio = p.gops() / p8.gops();
         assert!((1.3..1.8).contains(&ratio), "INT4/INT8 = {ratio}");
+    }
+
+    #[test]
+    fn pipelined_batches_beat_serial_gemv_v() {
+        let mut m = model();
+        let one = m.evaluate(65_536, GemvVariant::I8Opt, Scenario::VectorOnly).unwrap();
+        let batch = m.evaluate_pipelined(65_536, GemvVariant::I8Opt, 8).unwrap();
+        assert!(batch.overlap_s > 0.0, "pipelining must hide some transfer");
+        assert!(batch.total_s() < 8.0 * one.total_s(), "batch wall must beat serial");
+        assert!(batch.gops() > one.gops());
+        // Depth 1 degenerates to the synchronous point.
+        let single = m.evaluate_pipelined(65_536, GemvVariant::I8Opt, 1).unwrap();
+        assert!((single.total_s() - one.total_s()).abs() < 1e-12);
     }
 
     #[test]

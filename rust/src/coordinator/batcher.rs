@@ -3,6 +3,11 @@
 //! (§VI-B: vector transfer ≈ 2–7 ms "fixed overhead associated with
 //! launching a kernel"), so amortizing it over a batch is the core
 //! serving-layer lever — the same reasoning as vLLM-style batchers.
+//! Since SDK v2 the batch is also the unit of *device pipelining*: the
+//! server runs each collected batch through
+//! [`super::GemvCoordinator::gemv_pipelined`], which overlaps request
+//! *k+1*'s vector broadcast with request *k*'s compute, so a bigger
+//! batch hides more transfer time (not just host-side queueing).
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};

@@ -18,12 +18,12 @@ pub mod router;
 pub mod server;
 pub mod state;
 
-use crate::host::{DpuSet, PimSystem};
+use crate::dpu::symbol::{Symbol, SymbolTable};
+use crate::host::{as_bytes_i8, DpuSet, PimSystem, PullPlan, XferPlan};
 use crate::kernels::gemv::{
-    collect_gemv_output, emit_gemv, set_gemv_args, stage_gemv_inputs, GemvShape, GemvVariant,
-    GEMV_X,
+    decode_gemv_output, emit_gemv, encode_matrix_block, encode_vector, GemvShape, GemvVariant,
+    CHUNK, GEMV_M, GEMV_X, GEMV_X_ALT, GEMV_Y, YBUF_STRIDE,
 };
-use crate::kernels::encode;
 use crate::Result;
 
 pub use batcher::Batcher;
@@ -42,11 +42,17 @@ pub struct GemvTiming {
     pub compute_s: f64,
     /// Result gather.
     pub gather_s: f64,
+    /// Transfer time hidden under compute by async pipelining
+    /// ([`GemvCoordinator::gemv_pipelined`]); 0 for synchronous calls.
+    /// Already subtracted by [`GemvTiming::total`].
+    pub overlap_s: f64,
 }
 
 impl GemvTiming {
+    /// Modeled wall time: the sum of the phases minus whatever the
+    /// async rank queues overlapped.
     pub fn total(&self) -> f64 {
-        self.matrix_s + self.broadcast_s + self.compute_s + self.gather_s
+        self.matrix_s + self.broadcast_s + self.compute_s + self.gather_s - self.overlap_s
     }
 
     /// GOPS for an `rows × cols` GEMV (2 ops per MAC), over the total.
@@ -75,6 +81,12 @@ impl RowPartition {
         let d = dpu as u32;
         q * d + d.min(r)
     }
+
+    /// Live result bytes across the whole partition (one i32 per row) —
+    /// the traffic a gather moves, independent of staging padding.
+    pub fn live_y_bytes(&self) -> u64 {
+        self.total_rows as u64 * 4
+    }
 }
 
 /// Fleet-level GEMV orchestration over a `DpuSet`.
@@ -86,6 +98,8 @@ pub struct GemvCoordinator {
     state: MatrixState,
     partition: Option<RowPartition>,
     cols: u32,
+    /// Symbol table of the loaded kernel (set by `preload_matrix`).
+    symbols: Option<SymbolTable>,
 }
 
 impl GemvCoordinator {
@@ -103,13 +117,23 @@ impl GemvCoordinator {
             state: MatrixState::new(),
             partition: None,
             cols: 0,
+            symbols: None,
         }
     }
 
+    /// Resolve a 32-bit argument symbol of the loaded kernel.
+    fn arg(&self, name: &str) -> Result<Symbol<u32>> {
+        self.symbols
+            .as_ref()
+            .ok_or_else(|| crate::Error::Coordinator("gemv before preload_matrix".into()))?
+            .symbol::<u32>(name)
+    }
+
     /// Preload a `rows × cols` matrix (GEMV-V setup): partition rows
-    /// contiguously across DPUs, encode per the variant, push in
-    /// parallel mode, load the kernel, set per-DPU args. Returns the
-    /// modeled transfer seconds (amortized in the GEMV-V scenario).
+    /// contiguously across DPUs, encode per the variant, push the whole
+    /// fleet's blocks through one zero-copy [`XferPlan`], load the
+    /// kernel, and write its arguments through typed symbols. Returns
+    /// the modeled transfer seconds (amortized in the GEMV-V scenario).
     pub fn preload_matrix(&mut self, rows: u32, cols: u32, m: &[i8]) -> Result<f64> {
         assert_eq!(m.len(), rows as usize * cols as usize);
         let nr_dpus = self.set.nr_dpus();
@@ -119,26 +143,112 @@ impl GemvCoordinator {
 
         let program = emit_gemv(self.variant)?;
         self.sys.load_program(&self.set, &program)?;
+        self.symbols = Some(program.symbols.clone());
 
-        // Stage each DPU's row block + args (data path), then account
-        // the parallel transfer (timing path).
-        let mut total_bytes = 0u64;
+        // One borrowed view per DPU into the (encoded) matrix — no
+        // per-DPU staging allocations on this path.
+        let encoded; // BSDP bit-planes need one contiguous re-encode
+        let mbytes: &[u8] = match self.variant {
+            GemvVariant::I4Bsdp => {
+                encoded = encode_matrix_block(self.variant, cols, m);
+                &encoded
+            }
+            _ => as_bytes_i8(m),
+        };
+        let rb = self.variant.row_bytes(cols) as usize;
+        let mut plan = XferPlan::to_pim(&self.set, GEMV_M);
         for i in 0..nr_dpus {
             let r0 = part.start_of(i) as usize;
-            let nr = part.rows_of(i);
-            let shape = GemvShape { rows: nr, cols };
-            let block = &m[r0 * cols as usize..(r0 + nr as usize) * cols as usize];
-            total_bytes += (nr * self.variant.row_bytes(cols)) as u64;
-            let dpu = self.sys.dpu_of(&self.set, i);
-            // x is staged at broadcast time; stage matrix only.
-            stage_gemv_inputs(dpu, self.variant, shape, block, &vec![0i8; cols as usize])?;
-            set_gemv_args(dpu, self.variant, shape, self.nr_tasklets);
+            let nr = part.rows_of(i) as usize;
+            plan.prepare(i, &mbytes[r0 * rb..(r0 + nr) * rb])?;
         }
-        let report = self.sys.push_parallel_modeled(&self.set, total_bytes);
+        let report = self.sys.push_xfer(&self.set, &plan)?;
+
+        // Kernel arguments, through the program's symbol table.
+        let cshift = (rb as u32).trailing_zeros();
+        let rows_sym = program.symbols.symbol::<u32>("rows")?;
+        self.sys.write_symbol(&self.set, &rows_sym, |i| part.rows_of(i))?;
+        self.sys.broadcast_symbol(&self.set, &program.symbols.symbol("row_shift")?, cshift)?;
+        self.sys.broadcast_symbol(
+            &self.set,
+            &program.symbols.symbol("chunks_per_row")?,
+            rb as u32 / CHUNK,
+        )?;
+        self.sys.broadcast_symbol(
+            &self.set,
+            &program.symbols.symbol("nr_tasklets")?,
+            self.nr_tasklets as u32,
+        )?;
+        self.sys.broadcast_symbol(&self.set, &program.symbols.symbol("x_addr")?, GEMV_X)?;
+
         self.partition = Some(part);
         self.cols = cols;
         self.state.mark_loaded(rows, cols, self.variant);
         Ok(report.seconds)
+    }
+
+    fn check_vector(&self, x: &[i8]) -> Result<()> {
+        if x.len() != self.cols as usize {
+            return Err(crate::Error::Coordinator(format!(
+                "vector length {} != cols {}",
+                x.len(),
+                self.cols
+            )));
+        }
+        Ok(())
+    }
+
+    /// Pull every DPU's y staging region through one zero-copy
+    /// [`PullPlan`] and decode to row order. The *data* path reads the
+    /// padded tasklet-major staging region; the *modeled* traffic is
+    /// the live payload (`total_rows * 4` bytes), matching the v1
+    /// accounting and the paper's result-gather sizing. Returns
+    /// `(y, seconds)`.
+    fn gather_y(&mut self, part: &RowPartition) -> Result<(Vec<i32>, f64)> {
+        let stride = self.nr_tasklets * YBUF_STRIDE as usize;
+        let mut raw = vec![0u8; part.nr_dpus * stride];
+        let mut plan = PullPlan::from_pim(&self.set, GEMV_Y);
+        plan.prepare_chunks(&mut raw, stride)?;
+        self.sys.pull_xfer_untimed(&self.set, &mut plan)?;
+        let h = self.sys.pull_modeled_async(&self.set, part.live_y_bytes(), 0.0);
+        let report = self.sys.wait_xfer(h);
+        let mut y = Vec::with_capacity(part.total_rows as usize);
+        for (i, chunk) in raw.chunks_exact(stride).enumerate() {
+            y.extend(decode_gemv_output(chunk, part.rows_of(i), self.nr_tasklets));
+        }
+        Ok((y, report.seconds))
+    }
+
+    /// Finish batch `prev` of a pipelined run: read its y eagerly
+    /// (before the next launch overwrites the staging region), account
+    /// its gather on the bus queue after its compute, and fold its
+    /// phases into `timing`. Returns the gather's modeled end — the
+    /// next launch must not start before it (the y staging region is
+    /// single-buffered).
+    fn drain_prev(
+        &mut self,
+        part: &RowPartition,
+        prev: crate::host::LaunchHandle,
+        timing: &mut GemvTiming,
+        ys: &mut Vec<Vec<i32>>,
+    ) -> Result<f64> {
+        ys.push(self.read_y_eager(part)?);
+        let g = self.sys.pull_modeled_async(&self.set, part.live_y_bytes(), prev.end_s);
+        timing.gather_s += g.report.seconds;
+        timing.compute_s += prev.peek().seconds;
+        Ok(g.end_s)
+    }
+
+    /// Eagerly read y without touching the modeled timeline (the
+    /// pipelined path accounts its gathers on the async queues instead).
+    fn read_y_eager(&mut self, part: &RowPartition) -> Result<Vec<i32>> {
+        let t = self.nr_tasklets;
+        let mut y = Vec::with_capacity(part.total_rows as usize);
+        for i in 0..part.nr_dpus {
+            let dpu = self.sys.dpu_of(&self.set, i);
+            y.extend(crate::kernels::gemv::collect_gemv_output(dpu, part.rows_of(i), t)?);
+        }
+        Ok(y)
     }
 
     /// Execute one GEMV against the preloaded matrix. Returns `y` and
@@ -148,42 +258,86 @@ impl GemvCoordinator {
             .partition
             .clone()
             .ok_or_else(|| crate::Error::Coordinator("gemv before preload_matrix".into()))?;
-        if x.len() != self.cols as usize {
-            return Err(crate::Error::Coordinator(format!(
-                "vector length {} != cols {}",
-                x.len(),
-                self.cols
-            )));
-        }
-        // Encode + broadcast the vector.
-        let xbytes: Vec<u8> = match self.variant {
-            GemvVariant::I4Bsdp => encode::bitplane_encode_i4(x)
-                .into_iter()
-                .flat_map(|w| w.to_le_bytes())
-                .collect(),
-            _ => x.iter().map(|&v| v as u8).collect(),
-        };
+        self.check_vector(x)?;
+        // Encode + broadcast the vector into the primary x buffer (a
+        // pipelined batch may have left `x_addr` on the alternate one).
+        let xbytes = encode_vector(self.variant, x);
+        let x_addr = self.arg("x_addr")?;
+        self.sys.broadcast_symbol(&self.set, &x_addr, GEMV_X)?;
         let bc = self.sys.broadcast(&self.set, GEMV_X, &xbytes)?;
         // Launch.
         let fleet = self.sys.launch(&self.set, self.nr_tasklets)?;
         // Gather y.
-        let gather = self
-            .sys
-            .pull_parallel_modeled(&self.set, part.total_rows as u64 * 4);
-        let mut y = Vec::with_capacity(part.total_rows as usize);
-        for i in 0..part.nr_dpus {
-            let nr = part.rows_of(i);
-            let dpu = self.sys.dpu_of(&self.set, i);
-            y.extend(collect_gemv_output(dpu, nr, self.nr_tasklets)?);
-        }
+        let (y, gather_s) = self.gather_y(&part)?;
         self.state.record_gemv();
         let timing = GemvTiming {
             matrix_s: 0.0,
             broadcast_s: bc.seconds,
             compute_s: fleet.seconds,
-            gather_s: gather.seconds,
+            gather_s,
+            overlap_s: 0.0,
         };
         Ok((y, timing))
+    }
+
+    /// Execute a batch of GEMVs with transfer/compute overlap: the
+    /// vector broadcast of batch *k+1* rides the rank bus queues while
+    /// batch *k* computes, double-buffering the x vector between
+    /// [`GEMV_X`] and [`GEMV_X_ALT`] (the kernel reads its `x_addr`
+    /// argument). The aggregate [`GemvTiming`] reports the hidden
+    /// transfer time in `overlap_s`, so `total()` is the pipelined wall
+    /// time — strictly less than the sum of synchronous calls whenever
+    /// the batch has ≥ 2 vectors.
+    pub fn gemv_pipelined(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, GemvTiming)> {
+        let part = self
+            .partition
+            .clone()
+            .ok_or_else(|| crate::Error::Coordinator("gemv before preload_matrix".into()))?;
+        for x in xs {
+            self.check_vector(x)?;
+        }
+        let x_addr = self.arg("x_addr")?;
+
+        let t0 = self.sys.sync_all();
+        let mut timing = GemvTiming::default();
+        let mut ys: Vec<Vec<i32>> = Vec::with_capacity(xs.len());
+        let mut prev_launch: Option<crate::host::LaunchHandle> = None;
+        // Modeled time at which the (single-buffered) y staging region
+        // is free again — the previous batch's gather end.
+        let mut y_free_s = 0.0f64;
+        for (k, x) in xs.iter().enumerate() {
+            let buf = if k % 2 == 0 { GEMV_X } else { GEMV_X_ALT };
+            // Retarget x for this batch. WRAM argument writes apply at
+            // the *next* launch on the modeled timeline (the host
+            // cannot touch WRAM while a kernel runs on real UPMEM, and
+            // the compute queue serializes launches, so the write lands
+            // in the gap between launch k-1's end and launch k's
+            // start); the eager simulator matches because launch k-1
+            // already executed when this write is issued.
+            self.sys.broadcast_symbol(&self.set, &x_addr, buf)?;
+            let xbytes = encode_vector(self.variant, x);
+            let bc = self.sys.broadcast_async(&self.set, buf, &xbytes, 0.0)?;
+            // Collect batch k-1's y before launch k overwrites the
+            // staging region (eager simulation), and account its gather
+            // after its compute on the bus queue.
+            if let Some(prev) = prev_launch.take() {
+                y_free_s = self.drain_prev(&part, prev, &mut timing, &mut ys)?;
+            }
+            // Launch k needs its broadcast done *and* the y region
+            // drained (y is not double-buffered, unlike x).
+            let launch =
+                self.sys.launch_async(&self.set, self.nr_tasklets, bc.end_s.max(y_free_s))?;
+            timing.broadcast_s += bc.report.seconds;
+            prev_launch = Some(launch);
+            self.state.record_gemv();
+        }
+        if let Some(prev) = prev_launch.take() {
+            self.drain_prev(&part, prev, &mut timing, &mut ys)?;
+        }
+        let wall = self.sys.sync_all() - t0;
+        timing.overlap_s =
+            (timing.broadcast_s + timing.compute_s + timing.gather_s - wall).max(0.0);
+        Ok((ys, timing))
     }
 
     /// GEMV-MV convenience: push the matrix, then run one GEMV — the
@@ -285,6 +439,76 @@ mod tests {
         // 10:1 paper ratio emerges at GB sizes — fleet::tests).
         assert!(t.matrix_s > 1.3 * t.broadcast_s, "matrix={} broadcast={}", t.matrix_s,
             t.broadcast_s);
+    }
+
+    #[test]
+    fn pipelined_batches_overlap_transfer_and_compute() {
+        let mut c = coordinator(GemvVariant::I8Opt);
+        let mut rng = Rng::new(36);
+        let (rows, cols) = (256u32, 1024u32);
+        let m = rng.i8_vec((rows * cols) as usize);
+        c.preload_matrix(rows, cols, &m).unwrap();
+        let x1 = rng.i8_vec(cols as usize);
+        let x2 = rng.i8_vec(cols as usize);
+        // Two synchronous batches: the serial reference.
+        let (y1s, ta) = c.gemv(&x1).unwrap();
+        let (y2s, tb) = c.gemv(&x2).unwrap();
+        let serial = ta.total() + tb.total();
+        // Same two batches pipelined.
+        let (ys, tp) = c.gemv_pipelined(&[&x1, &x2]).unwrap();
+        assert_eq!(ys.len(), 2);
+        assert_eq!(ys[0], y1s, "pipelining must not change results");
+        assert_eq!(ys[1], y2s);
+        assert_eq!(ys[0], gemv_ref(GemvShape { rows, cols }, &m, &x1));
+        // The overlap is reported and already folded into total().
+        assert!(tp.overlap_s > 0.0, "no overlap reported: {tp:?}");
+        assert!(
+            tp.total() < serial,
+            "pipelined wall {} must beat serial {serial}",
+            tp.total()
+        );
+        let recon = tp.broadcast_s + tp.compute_s + tp.gather_s - tp.overlap_s;
+        assert!((tp.total() - recon).abs() < 1e-12);
+        // Per-phase totals match the serial run (same work, rescheduled).
+        assert!((tp.compute_s - (ta.compute_s + tb.compute_s)).abs() < 1e-9);
+        assert!((tp.broadcast_s - (ta.broadcast_s + tb.broadcast_s)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipelined_single_batch_degenerates_to_sync_timing() {
+        let mut c = coordinator(GemvVariant::I8Opt);
+        let mut rng = Rng::new(37);
+        let (rows, cols) = (128u32, 1024u32);
+        let m = rng.i8_vec((rows * cols) as usize);
+        c.preload_matrix(rows, cols, &m).unwrap();
+        let x = rng.i8_vec(cols as usize);
+        let (y_sync, ts) = c.gemv(&x).unwrap();
+        let (ys, tp) = c.gemv_pipelined(&[&x]).unwrap();
+        assert_eq!(ys[0], y_sync);
+        assert!(tp.overlap_s.abs() < 1e-12, "one batch has nothing to overlap");
+        assert!((tp.total() - ts.total()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipelined_alternates_x_buffers_correctly() {
+        // Three batches exercise both x buffers plus a wrap-around back
+        // to the first; every result must still match the reference.
+        let mut c = coordinator(GemvVariant::I4Bsdp);
+        let mut rng = Rng::new(38);
+        let (rows, cols) = (64u32, 2048u32);
+        let m = rng.i4_vec((rows * cols) as usize);
+        c.preload_matrix(rows, cols, &m).unwrap();
+        let xs: Vec<Vec<i8>> = (0..3).map(|_| rng.i4_vec(cols as usize)).collect();
+        let views: Vec<&[i8]> = xs.iter().map(|v| v.as_slice()).collect();
+        let (ys, _) = c.gemv_pipelined(&views).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(y, &gemv_ref(GemvShape { rows, cols }, &m, x));
+        }
+        // A synchronous call afterwards must reset x_addr and still work.
+        let x = rng.i4_vec(cols as usize);
+        let (y, _) = c.gemv(&x).unwrap();
+        assert_eq!(y, gemv_ref(GemvShape { rows, cols }, &m, &x));
+        assert_eq!(c.state().gemv_count(), 4);
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! The serving loop: a worker thread owns the [`GemvCoordinator`]
 //! (matrix resident — the GEMV-V scenario), pulls batches of requests
-//! from a channel, executes them and responds, recording metrics.
+//! from a channel, executes each batch through the *pipelined* device
+//! path ([`GemvCoordinator::gemv_pipelined`] — broadcast of request
+//! *k+1* overlapped with compute of request *k* on the async rank
+//! queues), and responds, recording metrics.
 //!
 //! Architecture (single-replica; [`super::router`] composes replicas):
 //!
@@ -98,35 +101,90 @@ fn worker(
     rx: Receiver<Msg>,
 ) -> (GemvCoordinator, ServerMetrics) {
     let mut metrics = ServerMetrics::default();
-    'serve: while let Some(batch) = batcher.collect(&rx) {
-        let mut counted = false;
+    let mut stopping = false;
+    while !stopping {
+        let Some(batch) = batcher.collect(&rx) else { break };
+        let mut reqs = Vec::with_capacity(batch.len());
         for msg in batch {
-            let req = match msg {
-                Msg::Req(r) => r,
-                Msg::Stop => break 'serve,
-            };
-            if !counted {
-                metrics.batches += 1;
-                counted = true;
+            match msg {
+                Msg::Req(r) => reqs.push(r),
+                Msg::Stop => {
+                    // Serve what was queued before the sentinel, then exit.
+                    stopping = true;
+                    break;
+                }
             }
-            metrics.requests += 1;
-            let t0 = Instant::now();
-            let result = coordinator.gemv(&req.x);
-            let exec = t0.elapsed();
-            let (y, device_seconds) = match result {
-                Ok((y, t)) => {
-                    metrics.device_seconds += t.total();
-                    (Ok(y), t.total())
-                }
-                Err(e) => {
-                    metrics.errors += 1;
-                    (Err(e.to_string()), 0.0)
-                }
-            };
+        }
+        if reqs.is_empty() {
+            continue;
+        }
+        metrics.batches += 1;
+        metrics.requests += reqs.len() as u64;
+        // No matrix resident: surface the coordinator's precondition
+        // error rather than a misleading "length != 0" mismatch.
+        let expected = coordinator.cols() as usize;
+        if expected == 0 {
+            for req in reqs {
+                metrics.errors += 1;
+                let e2e = req.submitted.elapsed();
+                metrics.e2e.record(e2e);
+                let _ = req.respond.send(Response {
+                    y: Err("gemv before preload_matrix".to_string()),
+                    device_seconds: 0.0,
+                    e2e,
+                });
+            }
+            continue;
+        }
+        // Separate malformed vectors so one bad request cannot sink a
+        // pipelined batch.
+        let (good, bad): (Vec<Request>, Vec<Request>) =
+            reqs.into_iter().partition(|r| r.x.len() == expected);
+        for req in bad {
+            metrics.errors += 1;
             let e2e = req.submitted.elapsed();
             metrics.e2e.record(e2e);
-            metrics.exec.record(exec);
-            let _ = req.respond.send(Response { y, device_seconds, e2e });
+            let _ = req.respond.send(Response {
+                y: Err(format!("vector length {} != cols {expected}", req.x.len())),
+                device_seconds: 0.0,
+                e2e,
+            });
+        }
+        if good.is_empty() {
+            continue;
+        }
+        // One pipelined device pass for the whole batch: broadcast k+1
+        // overlaps compute k on the async rank queues.
+        let t0 = Instant::now();
+        let views: Vec<&[i8]> = good.iter().map(|r| r.x.as_slice()).collect();
+        let result = coordinator.gemv_pipelined(&views);
+        // One execution sample per device pass (a per-request sample
+        // would repeat the whole-batch duration `len` times).
+        metrics.exec.record(t0.elapsed());
+        match result {
+            Ok((ys, t)) => {
+                metrics.device_seconds += t.total();
+                let device_seconds = t.total();
+                for (req, y) in good.into_iter().zip(ys) {
+                    let e2e = req.submitted.elapsed();
+                    metrics.e2e.record(e2e);
+                    let _ = req.respond.send(Response { y: Ok(y), device_seconds, e2e });
+                }
+            }
+            Err(e) => {
+                // Batch-level failure: every request sees the error.
+                let msg = e.to_string();
+                for req in good {
+                    metrics.errors += 1;
+                    let e2e = req.submitted.elapsed();
+                    metrics.e2e.record(e2e);
+                    let _ = req.respond.send(Response {
+                        y: Err(msg.clone()),
+                        device_seconds: 0.0,
+                        e2e,
+                    });
+                }
+            }
         }
     }
     (coordinator, metrics)

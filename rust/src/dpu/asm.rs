@@ -53,7 +53,7 @@ pub fn assemble(src: &str) -> Result<Program> {
         }
         instrs.push(parse_instr(line, lineno, &labels)?);
     }
-    Ok(Program { instrs, labels: ordered_labels })
+    Ok(Program { instrs, labels: ordered_labels, symbols: Default::default() })
 }
 
 fn err(lineno: usize, msg: String) -> Error {

@@ -7,6 +7,7 @@
 //! [`Self::build`] time, which fails loudly on unbound labels.
 
 use super::isa::*;
+use super::symbol::{MemSpace, SymbolTable};
 use crate::util::error::Error;
 use crate::Result;
 
@@ -22,6 +23,8 @@ pub struct ProgramBuilder {
     label_names: Vec<String>,
     /// (instr index, label id) pairs to patch.
     patches: Vec<(usize, usize)>,
+    /// Host-visible symbols declared by the emitter.
+    symbols: SymbolTable,
 }
 
 const UNBOUND: u32 = u32::MAX;
@@ -57,6 +60,23 @@ impl ProgramBuilder {
 
     pub fn is_empty(&self) -> bool {
         self.instrs.is_empty()
+    }
+
+    // ---- symbols ---------------------------------------------------------
+
+    /// Declare a host-visible symbol carried by the built [`Program`].
+    /// Panics on duplicates (emitter bug), like [`Self::bind`].
+    pub fn def_symbol(&mut self, name: &str, space: MemSpace, addr: u32, bytes: u32) {
+        self.symbols.define(name, space, addr, bytes);
+    }
+
+    /// Convenience: a single 32-bit WRAM argument word.
+    pub fn def_arg32(&mut self, name: &str, addr: u32) {
+        self.def_symbol(name, MemSpace::Wram, addr, 4);
+    }
+
+    pub fn symbols(&self) -> &SymbolTable {
+        &self.symbols
     }
 
     fn push(&mut self, i: Instr) {
@@ -266,7 +286,7 @@ impl ProgramBuilder {
             .zip(self.label_pcs)
             .filter(|(_, pc)| *pc != UNBOUND)
             .collect();
-        Ok(Program { instrs, labels })
+        Ok(Program { instrs, labels, symbols: self.symbols })
     }
 }
 

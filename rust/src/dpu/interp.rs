@@ -552,7 +552,7 @@ mod tests {
 
     #[test]
     fn iram_overflow_rejected_at_load() {
-        let prog = Program { instrs: vec![Instr::Nop; 5000], labels: vec![] };
+        let prog = Program { instrs: vec![Instr::Nop; 5000], ..Program::default() };
         let mut dpu = Dpu::new();
         assert!(matches!(dpu.load_program(&prog), Err(Error::IramOverflow { .. })));
     }

@@ -494,12 +494,16 @@ impl Cond {
 }
 
 /// A fully-resolved DPU program (labels → instruction indices), plus the
-/// label table kept for disassembly and assembler round-trips.
+/// label table kept for disassembly and assembler round-trips, plus the
+/// typed-symbol table the host uses to address kernel arguments and
+/// buffers ([`crate::dpu::symbol`]).
 #[derive(Debug, Clone, Default)]
 pub struct Program {
     pub instrs: Vec<Instr>,
     /// label name → instruction index.
     pub labels: Vec<(String, u32)>,
+    /// Host-visible WRAM/MRAM symbols declared by the emitter.
+    pub symbols: super::symbol::SymbolTable,
 }
 
 impl Program {
@@ -627,9 +631,9 @@ mod tests {
 
     #[test]
     fn program_iram_accounting() {
-        let p = Program { instrs: vec![Instr::Nop; 4096], labels: vec![] };
+        let p = Program { instrs: vec![Instr::Nop; 4096], ..Program::default() };
         assert!(p.fits_iram());
-        let p = Program { instrs: vec![Instr::Nop; 4097], labels: vec![] };
+        let p = Program { instrs: vec![Instr::Nop; 4097], ..Program::default() };
         assert!(!p.fits_iram());
     }
 

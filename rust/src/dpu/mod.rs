@@ -22,6 +22,7 @@
 //! * [`isa`] — instruction definitions + disassembly
 //! * [`asm`] — two-pass textual assembler
 //! * [`builder`] — programmatic codegen API used by `crate::kernels`
+//! * [`symbol`] — typed host-visible kernel symbols (SDK v2)
 //! * [`memory`] — WRAM/MRAM/IRAM with bounds & alignment checking
 //! * [`pipeline`] — the dispatch/cycle model
 //! * [`interp`] — the functional + cycle-counting executor
@@ -34,12 +35,14 @@ pub mod interp;
 pub mod isa;
 pub mod memory;
 pub mod pipeline;
+pub mod symbol;
 pub mod tasklet;
 
 pub use asm::assemble;
 pub use builder::ProgramBuilder;
 pub use interp::{Dpu, LaunchResult};
 pub use isa::{Cond, Instr, Program, Reg, Src};
+pub use symbol::{MemSpace, Symbol, SymbolTable, SymbolValue};
 
 /// DPU clock frequency (Hz). UPMEM-v1B runs at 400 MHz.
 pub const CLOCK_HZ: u64 = 400_000_000;

@@ -1,0 +1,253 @@
+//! Typed kernel symbols: the SDK-v2 replacement for raw WRAM/MRAM
+//! offsets.
+//!
+//! A kernel emitter ([`crate::dpu::builder::ProgramBuilder`]) declares
+//! the addresses it reads ([`SymbolTable::define`]); the built
+//! [`crate::dpu::Program`] carries the table, and the host resolves a
+//! [`Symbol<T>`] — a name + address + element type — instead of passing
+//! `u32` offsets around. `Symbol<T>` checks element width and alignment
+//! once at resolution time, so every later read/write is statically
+//! typed (the analogue of `dpu_get_symbol` + `DPU_SYMBOL(name)` in the
+//! UPMEM SDK, with the type carried in Rust's type system instead of a
+//! `void*`).
+
+use crate::util::error::Error;
+use crate::Result;
+use std::marker::PhantomData;
+
+/// Which memory a symbol lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemSpace {
+    /// 64 KB working RAM (kernel arguments, per-tasklet result slots).
+    Wram,
+    /// 64 MB MRAM bank (bulk data buffers).
+    Mram,
+}
+
+/// A raw symbol definition as emitted by a kernel builder.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SymbolDef {
+    pub name: String,
+    pub space: MemSpace,
+    pub addr: u32,
+    /// Extent of the symbol's region in bytes.
+    pub bytes: u32,
+}
+
+/// The symbol table a [`crate::dpu::Program`] carries.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SymbolTable {
+    defs: Vec<SymbolDef>,
+}
+
+impl SymbolTable {
+    pub fn new() -> SymbolTable {
+        SymbolTable::default()
+    }
+
+    /// Declare a symbol. Panics on a duplicate name — symbol tables are
+    /// authored by kernel emitters, so a duplicate is a codegen bug
+    /// (same policy as [`crate::dpu::builder::ProgramBuilder::bind`]).
+    pub fn define(&mut self, name: &str, space: MemSpace, addr: u32, bytes: u32) {
+        assert!(
+            self.get(name).is_none(),
+            "symbol '{name}' defined twice"
+        );
+        self.defs.push(SymbolDef { name: name.to_string(), space, addr, bytes });
+    }
+
+    pub fn get(&self, name: &str) -> Option<&SymbolDef> {
+        self.defs.iter().find(|d| d.name == name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.defs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.defs.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &SymbolDef> {
+        self.defs.iter()
+    }
+
+    /// Resolve a typed view of a symbol, checking that the region is a
+    /// whole number of `T` elements and that the address is aligned to
+    /// the element width.
+    pub fn symbol<T: SymbolValue>(&self, name: &str) -> Result<Symbol<T>> {
+        let d = self.get(name).ok_or_else(|| Error::Symbol {
+            name: name.to_string(),
+            msg: "not defined by this program".into(),
+        })?;
+        let w = T::BYTES as u32;
+        if d.bytes % w != 0 {
+            return Err(Error::Symbol {
+                name: name.to_string(),
+                msg: format!("{} bytes is not a multiple of the {w}-byte element", d.bytes),
+            });
+        }
+        if d.addr % w != 0 {
+            return Err(Error::Symbol {
+                name: name.to_string(),
+                msg: format!("addr {:#x} is not {w}-byte aligned", d.addr),
+            });
+        }
+        Ok(Symbol {
+            name: d.name.clone(),
+            space: d.space,
+            addr: d.addr,
+            len: (d.bytes / w) as usize,
+            _t: PhantomData,
+        })
+    }
+}
+
+/// A typed handle to a kernel symbol: `len` elements of `T` at `addr`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Symbol<T> {
+    name: String,
+    space: MemSpace,
+    addr: u32,
+    len: usize,
+    _t: PhantomData<T>,
+}
+
+impl<T: SymbolValue> Symbol<T> {
+    /// Ad-hoc WRAM symbol (tests and hand-assembled kernels whose
+    /// source carries no symbol table).
+    pub fn wram(name: &str, addr: u32, len: usize) -> Symbol<T> {
+        assert_eq!(addr as usize % T::BYTES, 0, "symbol '{name}' misaligned");
+        Symbol { name: name.to_string(), space: MemSpace::Wram, addr, len, _t: PhantomData }
+    }
+
+    /// Ad-hoc MRAM symbol.
+    pub fn mram(name: &str, addr: u32, len: usize) -> Symbol<T> {
+        assert_eq!(addr as usize % T::BYTES, 0, "symbol '{name}' misaligned");
+        Symbol { name: name.to_string(), space: MemSpace::Mram, addr, len, _t: PhantomData }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn space(&self) -> MemSpace {
+        self.space
+    }
+
+    pub fn addr(&self) -> u32 {
+        self.addr
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Extent in bytes.
+    pub fn bytes(&self) -> u32 {
+        (self.len * T::BYTES) as u32
+    }
+
+    /// A single-element view of element `i` (for per-tasklet slots).
+    pub fn index(&self, i: usize) -> Result<Symbol<T>> {
+        if i >= self.len {
+            return Err(Error::Symbol {
+                name: self.name.clone(),
+                msg: format!("index {i} out of range (len {})", self.len),
+            });
+        }
+        Ok(Symbol {
+            name: format!("{}[{i}]", self.name),
+            space: self.space,
+            addr: self.addr + (i * T::BYTES) as u32,
+            len: 1,
+            _t: PhantomData,
+        })
+    }
+}
+
+/// Element types a [`Symbol`] can carry: fixed width, little-endian on
+/// the DPU, exactly the integer widths the ISA loads and stores.
+pub trait SymbolValue: Copy + 'static {
+    const BYTES: usize;
+    fn to_le(self, out: &mut [u8]);
+    fn from_le(b: &[u8]) -> Self;
+}
+
+macro_rules! impl_symbol_value {
+    ($($t:ty),*) => {$(
+        impl SymbolValue for $t {
+            const BYTES: usize = std::mem::size_of::<$t>();
+            fn to_le(self, out: &mut [u8]) {
+                out.copy_from_slice(&self.to_le_bytes());
+            }
+            fn from_le(b: &[u8]) -> Self {
+                <$t>::from_le_bytes(b.try_into().expect("width checked by caller"))
+            }
+        }
+    )*};
+}
+
+impl_symbol_value!(u8, i8, u16, i16, u32, i32, u64, i64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SymbolTable {
+        let mut t = SymbolTable::new();
+        t.define("rows", MemSpace::Wram, 0x0, 4);
+        t.define("cycles", MemSpace::Wram, 0x40, 64);
+        t.define("matrix", MemSpace::Mram, 0x10_0000, 1 << 20);
+        t
+    }
+
+    #[test]
+    fn typed_resolution_checks_width_and_alignment() {
+        let t = table();
+        let rows = t.symbol::<u32>("rows").unwrap();
+        assert_eq!((rows.addr(), rows.len()), (0, 1));
+        let cycles = t.symbol::<u32>("cycles").unwrap();
+        assert_eq!(cycles.len(), 16);
+        // 64 bytes is not a whole number of... it is for u64 too.
+        assert_eq!(t.symbol::<u64>("cycles").unwrap().len(), 8);
+        // But a 4-byte scalar is not a whole number of u64s.
+        assert!(matches!(t.symbol::<u64>("rows"), Err(Error::Symbol { .. })));
+        assert!(matches!(t.symbol::<u32>("nope"), Err(Error::Symbol { .. })));
+    }
+
+    #[test]
+    fn index_views_per_element() {
+        let t = table();
+        let cycles = t.symbol::<u32>("cycles").unwrap();
+        let third = cycles.index(3).unwrap();
+        assert_eq!(third.addr(), 0x40 + 12);
+        assert_eq!(third.len(), 1);
+        assert!(cycles.index(16).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "defined twice")]
+    fn duplicate_definition_panics() {
+        let mut t = table();
+        t.define("rows", MemSpace::Wram, 8, 4);
+    }
+
+    #[test]
+    fn value_roundtrip_all_widths() {
+        let mut b4 = [0u8; 4];
+        (-7i32).to_le(&mut b4);
+        assert_eq!(i32::from_le(&b4), -7);
+        let mut b8 = [0u8; 8];
+        0xDEAD_BEEF_0123u64.to_le(&mut b8);
+        assert_eq!(u64::from_le(&b8), 0xDEAD_BEEF_0123);
+        let mut b1 = [0u8; 1];
+        (-3i8).to_le(&mut b1);
+        assert_eq!(i8::from_le(&b1), -3);
+    }
+}

@@ -1,0 +1,185 @@
+//! Zero-copy transfer plans: the SDK-v2 replacement for the
+//! `FnMut(usize) -> Vec<u8>` closures of the v1 host API.
+//!
+//! Mirroring the UPMEM SDK's `dpu_prepare_xfer` / `dpu_push_xfer`
+//! split, a plan collects one *borrowed* byte view per DPU and a single
+//! [`crate::host::PimSystem::push_xfer`] /
+//! [`crate::host::PimSystem::pull_xfer`] call moves everything and
+//! returns the modeled [`crate::transfer::TransferReport`]. Because the
+//! views borrow from the caller's buffers, the hot path performs zero
+//! per-DPU heap allocations — the v1 closures allocated one `Vec<u8>`
+//! per DPU per transfer, which dominated host-side cost at fleet scale
+//! (the same per-call overhead the paper's §V attributes to the SDK's
+//! transfer orchestration).
+
+use crate::host::DpuSet;
+use crate::util::error::Error;
+use crate::Result;
+
+/// Borrowed view of an `i8` buffer as raw little-endian bytes (safe:
+/// `i8` and `u8` have identical layout). The idiomatic way to hand a
+/// quantized matrix to an [`XferPlan`] without copying.
+pub fn as_bytes_i8(v: &[i8]) -> &[u8] {
+    // SAFETY: i8 and u8 have the same size, alignment and validity.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len()) }
+}
+
+/// A host→PIM transfer plan: per-DPU borrowed source slices, all
+/// written at the same MRAM address.
+#[derive(Debug)]
+pub struct XferPlan<'a> {
+    mram_addr: u32,
+    views: Vec<Option<&'a [u8]>>,
+}
+
+impl<'a> XferPlan<'a> {
+    /// An empty plan sized for `set` targeting `mram_addr`.
+    pub fn to_pim(set: &DpuSet, mram_addr: u32) -> XferPlan<'a> {
+        XferPlan { mram_addr, views: vec![None; set.nr_dpus()] }
+    }
+
+    pub fn mram_addr(&self) -> u32 {
+        self.mram_addr
+    }
+
+    pub fn nr_dpus(&self) -> usize {
+        self.views.len()
+    }
+
+    /// Attach DPU `i`'s source bytes (`dpu_prepare_xfer`). Re-preparing
+    /// an index replaces the earlier view.
+    pub fn prepare(&mut self, i: usize, bytes: &'a [u8]) -> Result<()> {
+        let n = self.views.len();
+        let slot = self
+            .views
+            .get_mut(i)
+            .ok_or_else(|| Error::Transfer(format!("xfer prepare: DPU index {i} >= {n}")))?;
+        *slot = Some(bytes);
+        Ok(())
+    }
+
+    /// Attach contiguous equal-size chunks of `data`: DPU `i` gets
+    /// `data[i*chunk .. (i+1)*chunk]`. The common row-partition case.
+    pub fn prepare_chunks(&mut self, data: &'a [u8], chunk: usize) -> Result<()> {
+        if data.len() != chunk * self.views.len() {
+            return Err(Error::Transfer(format!(
+                "xfer prepare_chunks: {} bytes is not {} DPUs x {chunk} B",
+                data.len(),
+                self.views.len()
+            )));
+        }
+        for (slot, c) in self.views.iter_mut().zip(data.chunks_exact(chunk)) {
+            *slot = Some(c);
+        }
+        Ok(())
+    }
+
+    /// Total bytes currently prepared.
+    pub fn total_bytes(&self) -> u64 {
+        self.views.iter().flatten().map(|v| v.len() as u64).sum()
+    }
+
+    /// Iterate `(dpu_index, bytes)` over prepared views.
+    pub(crate) fn iter_prepared(&self) -> impl Iterator<Item = (usize, &'a [u8])> + '_ {
+        self.views.iter().enumerate().filter_map(|(i, v)| v.map(|b| (i, b)))
+    }
+}
+
+/// A PIM→host transfer plan: per-DPU borrowed *destination* slices,
+/// all read from the same MRAM address.
+#[derive(Debug)]
+pub struct PullPlan<'a> {
+    mram_addr: u32,
+    views: Vec<Option<&'a mut [u8]>>,
+}
+
+impl<'a> PullPlan<'a> {
+    /// An empty plan sized for `set` reading from `mram_addr`.
+    pub fn from_pim(set: &DpuSet, mram_addr: u32) -> PullPlan<'a> {
+        let mut views = Vec::with_capacity(set.nr_dpus());
+        views.resize_with(set.nr_dpus(), || None);
+        PullPlan { mram_addr, views }
+    }
+
+    pub fn mram_addr(&self) -> u32 {
+        self.mram_addr
+    }
+
+    pub fn nr_dpus(&self) -> usize {
+        self.views.len()
+    }
+
+    /// Attach DPU `i`'s destination buffer.
+    pub fn prepare(&mut self, i: usize, buf: &'a mut [u8]) -> Result<()> {
+        let n = self.views.len();
+        let slot = self
+            .views
+            .get_mut(i)
+            .ok_or_else(|| Error::Transfer(format!("pull prepare: DPU index {i} >= {n}")))?;
+        *slot = Some(buf);
+        Ok(())
+    }
+
+    /// Split `data` into equal chunks, one destination per DPU.
+    pub fn prepare_chunks(&mut self, data: &'a mut [u8], chunk: usize) -> Result<()> {
+        if data.len() != chunk * self.views.len() {
+            return Err(Error::Transfer(format!(
+                "pull prepare_chunks: {} bytes is not {} DPUs x {chunk} B",
+                data.len(),
+                self.views.len()
+            )));
+        }
+        for (slot, c) in self.views.iter_mut().zip(data.chunks_exact_mut(chunk)) {
+            *slot = Some(c);
+        }
+        Ok(())
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.views.iter().flatten().map(|v| v.len() as u64).sum()
+    }
+
+    pub(crate) fn iter_prepared_mut(
+        &mut self,
+    ) -> impl Iterator<Item = (usize, &mut [u8])> + '_ {
+        self.views.iter_mut().enumerate().filter_map(|(i, v)| v.as_deref_mut().map(|b| (i, b)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::host::{AllocPolicy, PimSystem};
+    use crate::transfer::topology::SystemTopology;
+
+    fn small_set() -> DpuSet {
+        let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+        sys.alloc_ranks(2).unwrap()
+    }
+
+    #[test]
+    fn prepare_chunks_partitions_exactly() {
+        let set = small_set();
+        let data = vec![7u8; set.nr_dpus() * 16];
+        let mut plan = XferPlan::to_pim(&set, 4096);
+        plan.prepare_chunks(&data, 16).unwrap();
+        assert_eq!(plan.total_bytes(), data.len() as u64);
+        assert!(plan.prepare_chunks(&data[1..], 16).is_err(), "ragged split rejected");
+    }
+
+    #[test]
+    fn out_of_range_prepare_is_an_error() {
+        let set = small_set();
+        let buf = [0u8; 8];
+        let mut plan = XferPlan::to_pim(&set, 0);
+        assert!(plan.prepare(set.nr_dpus(), &buf).is_err());
+        assert!(plan.prepare(0, &buf).is_ok());
+        assert_eq!(plan.total_bytes(), 8);
+    }
+
+    #[test]
+    fn i8_view_is_bitwise() {
+        let v: Vec<i8> = vec![-1, 0, 1, -128, 127];
+        assert_eq!(as_bytes_i8(&v), &[0xFF, 0, 1, 0x80, 0x7F]);
+    }
+}

@@ -179,6 +179,7 @@ const R_PEND: Reg = Reg(11);
 /// Emit the full microbenchmark program for `spec`.
 pub fn emit_microbench(spec: Spec) -> Result<Program> {
     let mut pb = ProgramBuilder::new();
+    super::def_convention_symbols(&mut pb);
     let main = pb.new_label("main");
     pb.jump(main);
     let needs_mulsi3 = spec.op == Op::Mul && spec.mimpl == MulImpl::Mulsi3;
@@ -465,7 +466,7 @@ pub fn run_microbench(
             let input = rng.i8_vec(n_elems);
             dpu.mram
                 .write(MRAM_A, &input.iter().map(|&v| v as u8).collect::<Vec<_>>())
-                .map_err(|k| crate::Error::Fault { dpu: 0, tasklet: 0, pc: 0, kind: k })?;
+                .map_err(|k| crate::Error::HostAccess { dpu: dpu.id, addr: MRAM_A, kind: k })?;
             input
                 .iter()
                 .map(|&v| match spec.op {
@@ -478,7 +479,7 @@ pub fn run_microbench(
             let input = rng.i32_vec(n_elems);
             dpu.mram
                 .write_i32_slice(MRAM_A, &input)
-                .map_err(|k| crate::Error::Fault { dpu: 0, tasklet: 0, pc: 0, kind: k })?;
+                .map_err(|k| crate::Error::HostAccess { dpu: dpu.id, addr: MRAM_A, kind: k })?;
             input
                 .iter()
                 .flat_map(|&v| {
@@ -504,7 +505,7 @@ pub fn run_microbench(
     let mut got = vec![0u8; total_bytes as usize];
     dpu.mram
         .read(MRAM_A, &mut got)
-        .map_err(|k| crate::Error::Fault { dpu: 0, tasklet: 0, pc: 0, kind: k })?;
+        .map_err(|k| crate::Error::HostAccess { dpu: dpu.id, addr: MRAM_A, kind: k })?;
     if got != expected {
         let first = got.iter().zip(&expected).position(|(a, b)| a != b).unwrap();
         return Err(crate::Error::Coordinator(format!(

@@ -187,6 +187,7 @@ const CHUNK: u32 = 1024;
 /// product, report per-tasklet cycles and partial sums.
 pub fn emit_dot_microbench(variant: DotVariant) -> Result<Program> {
     let mut pb = ProgramBuilder::new();
+    super::def_convention_symbols(&mut pb);
     let main = pb.new_label("main");
     pb.jump(main);
     let mulsi3 = if variant == DotVariant::NativeMulsi3 {
@@ -278,20 +279,21 @@ pub fn run_dot_microbench(
     let b = rng.i4_vec(elems);
     let expected = super::encode::dot_i4_ref(&a, &b);
 
-    let mram_err = |k| crate::Error::Fault { dpu: 0, tasklet: 0, pc: 0, kind: k };
+    let id = dpu.id;
+    let mram_err = |addr: u32| move |k| crate::Error::HostAccess { dpu: id, addr, kind: k };
     let a_bytes = match variant {
         DotVariant::Bsdp => {
             let planes = super::encode::bitplane_encode_i4(&a);
-            dpu.mram.write_u32_slice(MRAM_A, &planes).map_err(mram_err)?;
+            dpu.mram.write_u32_slice(MRAM_A, &planes).map_err(mram_err(MRAM_A))?;
             let planes_b = super::encode::bitplane_encode_i4(&b);
-            dpu.mram.write_u32_slice(MRAM_B, &planes_b).map_err(mram_err)?;
+            dpu.mram.write_u32_slice(MRAM_B, &planes_b).map_err(mram_err(MRAM_B))?;
             (elems / 2) as u32
         }
         _ => {
             let raw_a: Vec<u8> = a.iter().map(|&v| v as u8).collect();
             let raw_b: Vec<u8> = b.iter().map(|&v| v as u8).collect();
-            dpu.mram.write(MRAM_A, &raw_a).map_err(mram_err)?;
-            dpu.mram.write(MRAM_B, &raw_b).map_err(mram_err)?;
+            dpu.mram.write(MRAM_A, &raw_a).map_err(mram_err(MRAM_A))?;
+            dpu.mram.write(MRAM_B, &raw_b).map_err(mram_err(MRAM_B))?;
             elems as u32
         }
     };

@@ -20,22 +20,36 @@
 //!
 //! ```text
 //! 0x00_2000  y output (i32, tasklet-major, 512 B per tasklet)
-//! 0x08_0000  x vector (INT8 bytes, or bit-planes for BSDP)
+//! 0x08_0000  x vector, buffer 0 (INT8 bytes, or bit-planes for BSDP)
+//! 0x0C_0000  x vector, buffer 1 (double-buffered async pipelining)
 //! 0x10_0000  matrix block, row-major, power-of-two row stride
 //! ```
+//!
+//! The kernel reads the x-vector *base address* from its `x_addr`
+//! argument word, so the coordinator can broadcast batch *k+1* into the
+//! idle buffer while batch *k* computes from the other (the async
+//! rank-queue pipelining of [`crate::host`]). All addresses above are
+//! published as typed symbols on the emitted [`Program`]
+//! ([`gemv_symbols`]) — hosts resolve `Symbol<T>`s instead of hardcoding
+//! offsets.
 
 use super::bsdp::{emit_dot_chunk, DotVariant, R_ACC, R_APTR, R_BPTR};
 use super::mulsi3::emit_mulsi3;
 use super::BUF_BASE;
 use crate::dpu::builder::ProgramBuilder;
 use crate::dpu::isa::{AluOp, CmpCond, Program, Reg, Src};
+use crate::dpu::symbol::{MemSpace, SymbolTable};
 use crate::dpu::{Dpu, LaunchResult};
 use crate::Result;
 
 /// MRAM offset of the y output region (tasklet-major, see module docs).
 pub const GEMV_Y: u32 = 0x2000;
-/// MRAM offset of the x vector.
+/// MRAM offset of the x vector (buffer 0, the synchronous default).
 pub const GEMV_X: u32 = 0x8_0000;
+/// MRAM offset of the second x buffer (async double-buffering).
+pub const GEMV_X_ALT: u32 = 0xC_0000;
+/// Capacity of each x buffer in bytes.
+pub const GEMV_X_BUF_BYTES: u32 = GEMV_X_ALT - GEMV_X;
 /// MRAM offset of the matrix block.
 pub const GEMV_M: u32 = 0x10_0000;
 /// WRAM offset of the per-tasklet y staging buffers.
@@ -108,12 +122,35 @@ const R_MBUF: Reg = Reg(20);
 const R_MCUR: Reg = Reg(21);
 const R_CCNT: Reg = Reg(22);
 
+/// The GEMV kernel's host-visible symbol table: argument words (32-bit
+/// WRAM scalars) and MRAM data regions. Shared by [`emit_gemv`] (which
+/// installs it on the [`Program`]) and the single-DPU staging helpers,
+/// so the layout lives in exactly one place.
+pub fn gemv_symbols() -> SymbolTable {
+    let mut t = SymbolTable::new();
+    t.define("rows", MemSpace::Wram, 0, 4);
+    t.define("row_shift", MemSpace::Wram, 4, 4);
+    t.define("chunks_per_row", MemSpace::Wram, 8, 4);
+    t.define("nr_tasklets", MemSpace::Wram, 12, 4);
+    t.define("x_addr", MemSpace::Wram, 16, 4);
+    t.define("y", MemSpace::Mram, GEMV_Y, 16 * YBUF_STRIDE);
+    t.define("x", MemSpace::Mram, GEMV_X, GEMV_X_BUF_BYTES);
+    t.define("x_alt", MemSpace::Mram, GEMV_X_ALT, GEMV_X_BUF_BYTES);
+    t.define("m", MemSpace::Mram, GEMV_M, (crate::dpu::MRAM_BYTES as u32) - GEMV_M);
+    t
+}
+
 /// Emit the GEMV kernel for `variant`.
 ///
-/// Runtime arguments (WRAM words): `[0]` = rows, `[4]` = log2(row
-/// stride bytes), `[8]` = chunks per row, `[12]` = tasklet count.
+/// Runtime arguments (WRAM words, see [`gemv_symbols`]): `rows`,
+/// `row_shift` (log2 of the row stride in bytes), `chunks_per_row`,
+/// `nr_tasklets`, and `x_addr` (MRAM base of the x vector — [`GEMV_X`]
+/// or [`GEMV_X_ALT`] under double-buffered pipelining).
 pub fn emit_gemv(variant: GemvVariant) -> Result<Program> {
     let mut pb = ProgramBuilder::new();
+    for d in gemv_symbols().iter() {
+        pb.def_symbol(&d.name, d.space, d.addr, d.bytes);
+    }
     let main = pb.new_label("main");
     pb.jump(main);
     let mulsi3 =
@@ -134,6 +171,14 @@ pub fn emit_gemv(variant: GemvVariant) -> Result<Program> {
     pb.lw(R_ROWS, Reg(3), 0);
     pb.lw(R_CSHIFT, Reg(3), 4);
     pb.lw(R_NCHUNK, Reg(3), 8);
+    // x base (`x_addr` argument): latched once per launch into r23 —
+    // free except under __mulsi3, whose calling convention uses it as
+    // the link register ([`crate::kernels::mulsi3::LINK`]); that
+    // variant reloads the argument from WRAM at each row instead.
+    let xbase = if variant == GemvVariant::I8Mulsi3 { None } else { Some(Reg(23)) };
+    if let Some(r) = xbase {
+        pb.lw(r, Reg(3), 16);
+    }
     // First row of this tasklet.
     pb.move_(R_ROW, Src::Id);
 
@@ -144,7 +189,16 @@ pub fn emit_gemv(variant: GemvVariant) -> Result<Program> {
     // Row base: GEMV_M + (row << cshift).
     pb.alu(AluOp::Lsl, R_MCUR, R_ROW, Src::Reg(R_CSHIFT));
     pb.add(R_MCUR, R_MCUR, GEMV_M as i32);
-    pb.move_(R_XCUR, GEMV_X as i32);
+    // x base comes from the `x_addr` argument (double-buffering).
+    match xbase {
+        Some(r) => pb.move_(R_XCUR, Src::Reg(r)),
+        None => {
+            // r3 is free here — the dot body clobbers it and it is
+            // re-derived below anyway.
+            pb.move_(Reg(3), 0);
+            pb.lw(R_XCUR, Reg(3), 16);
+        }
+    }
     pb.move_(R_CCNT, R_NCHUNK);
     let chunk_loop = pb.here("chunk_loop");
     pb.ldma(R_MBUF, R_MCUR, CHUNK);
@@ -199,6 +253,13 @@ impl GemvShape {
                 self.rows, nr_tasklets
             )));
         }
+        if variant.row_bytes(self.cols) > GEMV_X_BUF_BYTES {
+            return Err(crate::Error::Coordinator(format!(
+                "cols={}: x vector ({} B) exceeds the {GEMV_X_BUF_BYTES}-byte x buffer",
+                self.cols,
+                variant.row_bytes(self.cols)
+            )));
+        }
         Ok(())
     }
 }
@@ -227,6 +288,36 @@ pub fn run_gemv_dpu(
     Ok((y, launch))
 }
 
+/// Encode a row block into the variant's MRAM byte layout (bit-planes
+/// for BSDP, raw bytes otherwise). The coordinator encodes once into a
+/// contiguous staging buffer and borrows per-DPU slices from it for a
+/// zero-copy [`crate::host::XferPlan`].
+pub fn encode_matrix_block(variant: GemvVariant, cols: u32, m: &[i8]) -> Vec<u8> {
+    match variant {
+        GemvVariant::I4Bsdp => m
+            .chunks_exact(cols as usize)
+            .flat_map(|row| {
+                super::encode::bitplane_encode_i4(row)
+                    .into_iter()
+                    .flat_map(|w| w.to_le_bytes())
+                    .collect::<Vec<u8>>()
+            })
+            .collect(),
+        _ => m.iter().map(|&v| v as u8).collect(),
+    }
+}
+
+/// Encode an x vector into the variant's broadcast byte layout.
+pub fn encode_vector(variant: GemvVariant, x: &[i8]) -> Vec<u8> {
+    match variant {
+        GemvVariant::I4Bsdp => super::encode::bitplane_encode_i4(x)
+            .into_iter()
+            .flat_map(|w| w.to_le_bytes())
+            .collect(),
+        _ => x.iter().map(|&v| v as u8).collect(),
+    }
+}
+
 /// Write matrix + vector into a DPU's MRAM in the variant's layout.
 pub fn stage_gemv_inputs(
     dpu: &mut Dpu,
@@ -235,65 +326,77 @@ pub fn stage_gemv_inputs(
     m: &[i8],
     x: &[i8],
 ) -> Result<()> {
-    let mram_err = |k| crate::Error::Fault { dpu: 0, tasklet: 0, pc: 0, kind: k };
-    match variant {
-        GemvVariant::I4Bsdp => {
-            for (r, row) in m.chunks_exact(shape.cols as usize).enumerate() {
-                let planes = super::encode::bitplane_encode_i4(row);
-                let addr = GEMV_M + r as u32 * variant.row_bytes(shape.cols);
-                dpu.mram.write_u32_slice(addr, &planes).map_err(mram_err)?;
-            }
-            let xp = super::encode::bitplane_encode_i4(x);
-            dpu.mram.write_u32_slice(GEMV_X, &xp).map_err(mram_err)?;
-        }
-        _ => {
-            let bytes: Vec<u8> = m.iter().map(|&v| v as u8).collect();
-            dpu.mram.write(GEMV_M, &bytes).map_err(mram_err)?;
-            let xb: Vec<u8> = x.iter().map(|&v| v as u8).collect();
-            dpu.mram.write(GEMV_X, &xb).map_err(mram_err)?;
-        }
-    }
+    let id = dpu.id;
+    let mram_err = |addr: u32| move |k| crate::Error::HostAccess { dpu: id, addr, kind: k };
+    let mb = encode_matrix_block(variant, shape.cols, m);
+    dpu.mram.write(GEMV_M, &mb).map_err(mram_err(GEMV_M))?;
+    let xb = encode_vector(variant, x);
+    dpu.mram.write(GEMV_X, &xb).map_err(mram_err(GEMV_X))?;
     Ok(())
 }
 
-/// Write the kernel's runtime arguments.
+/// Write the kernel's runtime arguments (x vector at the default
+/// [`GEMV_X`] buffer). Addresses are resolved through [`gemv_symbols`].
 pub fn set_gemv_args(dpu: &mut Dpu, variant: GemvVariant, shape: GemvShape, nr_tasklets: usize) {
+    set_gemv_args_with_x(dpu, variant, shape, nr_tasklets, GEMV_X)
+}
+
+/// Like [`set_gemv_args`], with an explicit x-buffer base (double
+/// buffering under async pipelining).
+pub fn set_gemv_args_with_x(
+    dpu: &mut Dpu,
+    variant: GemvVariant,
+    shape: GemvShape,
+    nr_tasklets: usize,
+    x_addr: u32,
+) {
     let row_bytes = variant.row_bytes(shape.cols);
     let cshift = row_bytes.trailing_zeros();
     debug_assert!(row_bytes.is_power_of_two());
-    let mut w = |a: u32, v: u32| dpu.wram.store32(a, v).expect("args");
-    w(0, shape.rows);
-    w(4, cshift);
-    w(8, row_bytes / CHUNK);
-    w(12, nr_tasklets as u32);
+    let syms = gemv_symbols();
+    let mut w = |name: &str, v: u32| {
+        let s = syms.symbol::<u32>(name).expect("gemv symbol");
+        dpu.wram.store32(s.addr(), v).expect("args")
+    };
+    w("rows", shape.rows);
+    w("row_shift", cshift);
+    w("chunks_per_row", row_bytes / CHUNK);
+    w("nr_tasklets", nr_tasklets as u32);
+    w("x_addr", x_addr);
 }
 
-/// Read back y (de-interleaving the tasklet-major staging layout).
+/// Host-side de-interleave of a pulled y staging region (the
+/// `nr_tasklets * YBUF_STRIDE` bytes at [`GEMV_Y`]) into row order.
+/// This is the decode half of the zero-copy gather: the bytes arrive
+/// through a [`crate::host::PullPlan`] and are decoded in place, with
+/// no per-DPU re-read of simulated MRAM.
+pub fn decode_gemv_output(raw: &[u8], rows: u32, nr_tasklets: usize) -> Vec<i32> {
+    let mut y = vec![0i32; rows as usize];
+    for t in 0..nr_tasklets {
+        let n_rows_t = rows as usize / nr_tasklets + usize::from(rows as usize % nr_tasklets > t);
+        let base = t * YBUF_STRIDE as usize;
+        for j in 0..n_rows_t {
+            let off = base + j * 4;
+            y[t + j * nr_tasklets] = i32::from_le_bytes(raw[off..off + 4].try_into().unwrap());
+        }
+    }
+    y
+}
+
+/// Read back y from one DPU (de-interleaving the tasklet-major staging
+/// layout). Single-DPU harness path; the fleet path pulls the staging
+/// region via a `PullPlan` and uses [`decode_gemv_output`].
 pub fn collect_gemv_output(
     dpu: &mut Dpu,
     rows: u32,
     nr_tasklets: usize,
 ) -> Result<Vec<i32>> {
-    let mram_err = |k| crate::Error::Fault { dpu: 0, tasklet: 0, pc: 0, kind: k };
-    let mut y = vec![0i32; rows as usize];
-    for t in 0..nr_tasklets as u32 {
-        let n_rows_t = if rows % nr_tasklets as u32 > t {
-            rows / nr_tasklets as u32 + 1
-        } else {
-            rows / nr_tasklets as u32
-        };
-        if n_rows_t == 0 {
-            continue;
-        }
-        let vals = dpu
-            .mram
-            .read_i32_slice(GEMV_Y + t * YBUF_STRIDE, n_rows_t as usize)
-            .map_err(mram_err)?;
-        for (j, v) in vals.into_iter().enumerate() {
-            y[t as usize + j * nr_tasklets] = v;
-        }
-    }
-    Ok(y)
+    let id = dpu.id;
+    let mut raw = vec![0u8; nr_tasklets * YBUF_STRIDE as usize];
+    dpu.mram
+        .read(GEMV_Y, &mut raw)
+        .map_err(|k| crate::Error::HostAccess { dpu: id, addr: GEMV_Y, kind: k })?;
+    Ok(decode_gemv_output(&raw, rows, nr_tasklets))
 }
 
 /// Reference GEMV (i32 wrapping accumulate — the DPU accumulator width).

@@ -51,6 +51,17 @@ pub const MRAM_B: u32 = 0x100_0000;
 /// the paper sets `BLOCK_SIZE` to 1024.
 pub const BLOCK_BYTES: u32 = 1024;
 
+/// Declare the shared WRAM calling-convention symbols on a kernel
+/// builder: the per-tasklet `cycles` and `aux` result arrays every
+/// kernel writes. Kernel-specific argument words are declared by each
+/// emitter on top of these (SDK-v2 typed symbols,
+/// [`crate::dpu::symbol`]).
+pub fn def_convention_symbols(pb: &mut crate::dpu::builder::ProgramBuilder) {
+    use crate::dpu::symbol::MemSpace;
+    pb.def_symbol("cycles", MemSpace::Wram, CYCLES_BASE, AUX_BASE - CYCLES_BASE);
+    pb.def_symbol("aux", MemSpace::Wram, AUX_BASE, 0x40);
+}
+
 /// Read per-tasklet timed-region cycles written by a kernel.
 pub fn read_tasklet_cycles(dpu: &crate::dpu::Dpu, nr_tasklets: usize) -> Vec<u32> {
     (0..nr_tasklets)

@@ -15,8 +15,11 @@
 //! * **Layer 3 (rust, this crate)** — the host coordinator: DPU
 //!   allocation (baseline vs. the paper's NUMA/channel-aware extension,
 //!   [`alloc`]), host↔PIM transfer engine with the DDR transposition cost
-//!   model ([`transfer`]), the SDK-like host API ([`host`]), and a GEMV
-//!   serving runtime ([`coordinator`]).
+//!   model and per-rank async queues ([`transfer`]), the SDK-v2 host API
+//!   ([`host`]: typed kernel symbols via [`dpu::symbol`], zero-copy
+//!   `XferPlan`/`PullPlan` transfer views, `launch_async` with modeled
+//!   transfer/compute overlap), and a GEMV serving runtime
+//!   ([`coordinator`]) whose batcher drives the pipelined device path.
 //! * **Layer 2 (JAX, `python/compile/model.py`)** — the quantized GEMV /
 //!   MLP inference graph, AOT-lowered to HLO text and executed from rust
 //!   via PJRT ([`runtime`]); this is the "dual-socket CPU server"

@@ -72,6 +72,8 @@ commands:
               --ranks N  --policy numa|baseline  --dir h2p|p2h  --mb N
   gemv        fleet GEMV on the simulator  --rows R --cols C
               --variant i8-baseline|i8-mulsi3|i8-opt|i4-bsdp  [--config F]
+              [--batch N]   run N vectors through the async pipelined
+                            path (broadcast k+1 overlapped with compute k)
   serve       GEMV-V serving demo  [--config F]
   figures     regenerate figure data  [--fig N]
   asm FILE    assemble + disassemble a .dpu file
@@ -280,6 +282,38 @@ fn cmd_gemv(f: &Flags) -> upmem_unleashed::Result<()> {
     );
     if !ok {
         return err("GEMV output mismatch".into());
+    }
+    let batch = flag_usize(f, "batch", 1);
+    if batch > 1 {
+        // SDK-v2 async demo: the same GEMV, `batch` vectors deep, with
+        // the vector broadcast of batch k+1 hidden under compute k.
+        let xs: Vec<Vec<i8>> = (0..batch)
+            .map(|_| match job.variant {
+                GemvVariant::I4Bsdp => rng.i4_vec(job.cols as usize),
+                _ => rng.i8_vec(job.cols as usize),
+            })
+            .collect();
+        let views: Vec<&[i8]> = xs.iter().map(|v| v.as_slice()).collect();
+        let (ys, tp) = c.gemv_pipelined(&views)?;
+        for (x, y) in xs.iter().zip(&ys) {
+            let want = upmem_unleashed::kernels::gemv::gemv_ref(
+                upmem_unleashed::kernels::gemv::GemvShape { rows: job.rows, cols: job.cols },
+                &m,
+                x,
+            );
+            if y != &want {
+                return err("pipelined GEMV output mismatch".into());
+            }
+        }
+        let serial = tp.broadcast_s + tp.compute_s + tp.gather_s;
+        println!(
+            "pipelined batch of {batch}: wall {:.3}ms vs serial {:.3}ms \
+             ({:.3}ms overlapped, {:.1}% saved, results verified OK)",
+            tp.total() * 1e3,
+            serial * 1e3,
+            tp.overlap_s * 1e3,
+            100.0 * tp.overlap_s / serial
+        );
     }
     Ok(())
 }

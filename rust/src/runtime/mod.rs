@@ -19,9 +19,18 @@
 //! `HloModuleProto`s with 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids (see
 //! /opt/xla-example/README.md).
+//!
+//! # Feature gating
+//!
+//! The `xla` crate only exists in the offline image's vendored cache,
+//! so the real bridge compiles behind the `xla` cargo feature. The
+//! default build ships the same public surface as a **stub** whose
+//! constructors return [`crate::Error::Runtime`]; every caller already
+//! guards on [`artifacts_available`], so oracle tests and examples
+//! degrade to a skip instead of a build break.
 
 use crate::Result;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 /// Default artifacts directory (relative to the repo root).
 pub const ARTIFACTS_DIR: &str = "artifacts";
@@ -33,10 +42,6 @@ pub const ORACLE_COLS: usize = 1024;
 /// `[MLP_OUT, MLP_HIDDEN]`.
 pub const MLP_HIDDEN: usize = 1024;
 pub const MLP_OUT: usize = 64;
-
-fn err(e: impl std::fmt::Display) -> crate::Error {
-    crate::Error::Runtime(e.to_string())
-}
 
 /// Locate the artifacts directory: `$UPMEM_ARTIFACTS` or ./artifacts.
 pub fn artifacts_dir() -> PathBuf {
@@ -51,152 +56,252 @@ pub fn artifacts_available() -> bool {
     artifacts_dir().join("gemv_int8.hlo.txt").exists()
 }
 
-/// A loaded, compiled artifact.
-pub struct Artifact {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::{artifacts_dir, MLP_HIDDEN, MLP_OUT, ORACLE_COLS, ORACLE_ROWS};
+    use crate::Result;
+    use std::path::Path;
 
-/// The PJRT CPU runtime holding the client and loaded artifacts.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-}
-
-impl XlaRuntime {
-    /// Create the CPU client.
-    pub fn cpu() -> Result<XlaRuntime> {
-        let client = xla::PjRtClient::cpu().map_err(err)?;
-        Ok(XlaRuntime { client })
+    fn err(e: impl std::fmt::Display) -> crate::Error {
+        crate::Error::Runtime(e.to_string())
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A loaded, compiled artifact.
+    pub struct Artifact {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
     }
 
-    /// Load + compile an HLO-text artifact.
-    pub fn load(&self, path: &Path) -> Result<Artifact> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| err("non-utf8 path"))?,
-        )
-        .map_err(err)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(err)?;
-        Ok(Artifact { exe, name: path.file_name().unwrap().to_string_lossy().into_owned() })
+    /// The PJRT CPU runtime holding the client and loaded artifacts.
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
     }
 
-    /// Load an artifact by its short name from the artifacts directory.
-    pub fn load_named(&self, name: &str) -> Result<Artifact> {
-        self.load(&artifacts_dir().join(format!("{name}.hlo.txt")))
-    }
-}
-
-impl Artifact {
-    /// Execute with the given literals; expects a 1-tuple result (the
-    /// aot recipe lowers with `return_tuple=True`).
-    pub fn run1(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self.exe.execute::<xla::Literal>(inputs).map_err(err)?;
-        let lit = result[0][0].to_literal_sync().map_err(err)?;
-        lit.to_tuple1().map_err(err)
-    }
-}
-
-/// Build an `i8` literal of the given shape from raw bytes.
-pub fn literal_i8(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    assert_eq!(data.len(), n);
-    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S8, dims);
-    lit.copy_raw_from(data).map_err(err)?;
-    Ok(lit)
-}
-
-/// Build a `u32` literal of the given shape.
-pub fn literal_u32(data: &[u32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    assert_eq!(data.len(), n);
-    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::U32, dims);
-    lit.copy_raw_from(data).map_err(err)?;
-    Ok(lit)
-}
-
-/// The INT8 GEMV oracle/comparator (fixed `ORACLE_ROWS × ORACLE_COLS`).
-pub struct GemvOracle {
-    artifact: Artifact,
-}
-
-impl GemvOracle {
-    pub fn load(rt: &XlaRuntime) -> Result<GemvOracle> {
-        Ok(GemvOracle { artifact: rt.load_named("gemv_int8")? })
-    }
-
-    /// y = m · x via the AOT XLA executable.
-    pub fn gemv(&self, m: &[i8], x: &[i8]) -> Result<Vec<i32>> {
-        let ml = literal_i8(m, &[ORACLE_ROWS, ORACLE_COLS])?;
-        let xl = literal_i8(x, &[ORACLE_COLS])?;
-        let out = self.artifact.run1(&[ml, xl])?;
-        out.to_vec::<i32>().map_err(err)
-    }
-
-    /// Measure XLA-CPU GEMV throughput in GOPS (comparator line).
-    pub fn measure_gops(&self, reps: usize, seed: u64) -> Result<f64> {
-        let mut rng = crate::util::rng::Rng::new(seed);
-        let m = rng.i8_vec(ORACLE_ROWS * ORACLE_COLS);
-        let x = rng.i8_vec(ORACLE_COLS);
-        // Warm-up (compile cache, allocator).
-        let _ = self.gemv(&m, &x)?;
-        let t0 = std::time::Instant::now();
-        for _ in 0..reps {
-            std::hint::black_box(self.gemv(&m, &x)?);
+    impl XlaRuntime {
+        /// Create the CPU client.
+        pub fn cpu() -> Result<XlaRuntime> {
+            let client = xla::PjRtClient::cpu().map_err(err)?;
+            Ok(XlaRuntime { client })
         }
-        let s = t0.elapsed().as_secs_f64() / reps as f64;
-        Ok(2.0 * (ORACLE_ROWS * ORACLE_COLS) as f64 / s / 1e9)
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact.
+        pub fn load(&self, path: &Path) -> Result<Artifact> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| err("non-utf8 path"))?,
+            )
+            .map_err(err)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(err)?;
+            Ok(Artifact { exe, name: path.file_name().unwrap().to_string_lossy().into_owned() })
+        }
+
+        /// Load an artifact by its short name from the artifacts directory.
+        pub fn load_named(&self, name: &str) -> Result<Artifact> {
+            self.load(&artifacts_dir().join(format!("{name}.hlo.txt")))
+        }
+    }
+
+    impl Artifact {
+        /// Execute with the given literals; expects a 1-tuple result (the
+        /// aot recipe lowers with `return_tuple=True`).
+        pub fn run1(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+            let result = self.exe.execute::<xla::Literal>(inputs).map_err(err)?;
+            let lit = result[0][0].to_literal_sync().map_err(err)?;
+            lit.to_tuple1().map_err(err)
+        }
+    }
+
+    /// Build an `i8` literal of the given shape from raw bytes.
+    pub fn literal_i8(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        assert_eq!(data.len(), n);
+        let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S8, dims);
+        lit.copy_raw_from(data).map_err(err)?;
+        Ok(lit)
+    }
+
+    /// Build a `u32` literal of the given shape.
+    pub fn literal_u32(data: &[u32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        assert_eq!(data.len(), n);
+        let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::U32, dims);
+        lit.copy_raw_from(data).map_err(err)?;
+        Ok(lit)
+    }
+
+    /// The INT8 GEMV oracle/comparator (fixed `ORACLE_ROWS × ORACLE_COLS`).
+    pub struct GemvOracle {
+        artifact: Artifact,
+    }
+
+    impl GemvOracle {
+        pub fn load(rt: &XlaRuntime) -> Result<GemvOracle> {
+            Ok(GemvOracle { artifact: rt.load_named("gemv_int8")? })
+        }
+
+        /// y = m · x via the AOT XLA executable.
+        pub fn gemv(&self, m: &[i8], x: &[i8]) -> Result<Vec<i32>> {
+            let ml = literal_i8(m, &[ORACLE_ROWS, ORACLE_COLS])?;
+            let xl = literal_i8(x, &[ORACLE_COLS])?;
+            let out = self.artifact.run1(&[ml, xl])?;
+            out.to_vec::<i32>().map_err(err)
+        }
+
+        /// Measure XLA-CPU GEMV throughput in GOPS (comparator line).
+        pub fn measure_gops(&self, reps: usize, seed: u64) -> Result<f64> {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let m = rng.i8_vec(ORACLE_ROWS * ORACLE_COLS);
+            let x = rng.i8_vec(ORACLE_COLS);
+            // Warm-up (compile cache, allocator).
+            let _ = self.gemv(&m, &x)?;
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(self.gemv(&m, &x)?);
+            }
+            let s = t0.elapsed().as_secs_f64() / reps as f64;
+            Ok(2.0 * (ORACLE_ROWS * ORACLE_COLS) as f64 / s / 1e9)
+        }
+    }
+
+    /// The INT4 BSDP oracle over bit-plane inputs (Pallas L1 kernel AOT'd
+    /// inside the L2 graph).
+    pub struct BsdpOracle {
+        artifact: Artifact,
+    }
+
+    impl BsdpOracle {
+        pub fn load(rt: &XlaRuntime) -> Result<BsdpOracle> {
+            Ok(BsdpOracle { artifact: rt.load_named("gemv_int4_bsdp")? })
+        }
+
+        /// y = M·x where both are bit-plane encoded INT4
+        /// (`crate::kernels::encode::bitplane_encode_i4` layout):
+        /// `m_planes` is `rows × (cols/32*4)` u32, `x_planes` is
+        /// `cols/32*4` u32.
+        pub fn gemv(&self, m_planes: &[u32], x_planes: &[u32], rows: usize) -> Result<Vec<i32>> {
+            let words = x_planes.len();
+            let ml = literal_u32(m_planes, &[rows, words])?;
+            let xl = literal_u32(x_planes, &[words])?;
+            let out = self.artifact.run1(&[ml, xl])?;
+            out.to_vec::<i32>().map_err(err)
+        }
+    }
+
+    /// The quantized-MLP inference graph (L2 model): x i8[cols] → i32 logits.
+    pub struct MlpOracle {
+        artifact: Artifact,
+    }
+
+    impl MlpOracle {
+        pub fn load(rt: &XlaRuntime) -> Result<MlpOracle> {
+            Ok(MlpOracle { artifact: rt.load_named("mlp_int8")? })
+        }
+
+        /// Run the 2-layer quantized MLP with the given weights and input.
+        /// Shapes are baked in aot.py: w1 i8[1024,1024], w2 i8[64,1024],
+        /// x i8[1024] → i32[64].
+        pub fn forward(&self, w1: &[i8], w2: &[i8], x: &[i8]) -> Result<Vec<i32>> {
+            let w1l = literal_i8(w1, &[MLP_HIDDEN, ORACLE_COLS])?;
+            let w2l = literal_i8(w2, &[MLP_OUT, MLP_HIDDEN])?;
+            let xl = literal_i8(x, &[ORACLE_COLS])?;
+            let out = self.artifact.run1(&[w1l, w2l, xl])?;
+            out.to_vec::<i32>().map_err(err)
+        }
     }
 }
 
-/// The INT4 BSDP oracle over bit-plane inputs (Pallas L1 kernel AOT'd
-/// inside the L2 graph).
-pub struct BsdpOracle {
-    artifact: Artifact,
-}
+#[cfg(feature = "xla")]
+pub use pjrt::{literal_i8, literal_u32, Artifact, BsdpOracle, GemvOracle, MlpOracle, XlaRuntime};
 
-impl BsdpOracle {
-    pub fn load(rt: &XlaRuntime) -> Result<BsdpOracle> {
-        Ok(BsdpOracle { artifact: rt.load_named("gemv_int4_bsdp")? })
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use crate::Result;
+
+    const UNAVAILABLE: &str =
+        "built without the `xla` feature: PJRT runtime unavailable (rebuild with \
+         `--features xla` inside the offline image)";
+
+    fn unavailable<T>() -> Result<T> {
+        Err(crate::Error::Runtime(UNAVAILABLE.to_string()))
     }
 
-    /// y = M·x where both are bit-plane encoded INT4
-    /// (`crate::kernels::encode::bitplane_encode_i4` layout):
-    /// `m_planes` is `rows × (cols/32*4)` u32, `x_planes` is
-    /// `cols/32*4` u32.
-    pub fn gemv(&self, m_planes: &[u32], x_planes: &[u32], rows: usize) -> Result<Vec<i32>> {
-        let words = x_planes.len();
-        let ml = literal_u32(m_planes, &[rows, words])?;
-        let xl = literal_u32(x_planes, &[words])?;
-        let out = self.artifact.run1(&[ml, xl])?;
-        out.to_vec::<i32>().map_err(err)
+    /// Stub artifact (never constructed; the loaders always fail).
+    pub struct Artifact {
+        pub name: String,
+    }
+
+    /// Stub PJRT runtime: same surface, constructors fail.
+    pub struct XlaRuntime {
+        _priv: (),
+    }
+
+    impl XlaRuntime {
+        pub fn cpu() -> Result<XlaRuntime> {
+            unavailable()
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn load_named(&self, _name: &str) -> Result<Artifact> {
+            unavailable()
+        }
+    }
+
+    pub struct GemvOracle {
+        _priv: (),
+    }
+
+    impl GemvOracle {
+        pub fn load(_rt: &XlaRuntime) -> Result<GemvOracle> {
+            unavailable()
+        }
+
+        pub fn gemv(&self, _m: &[i8], _x: &[i8]) -> Result<Vec<i32>> {
+            unavailable()
+        }
+
+        pub fn measure_gops(&self, _reps: usize, _seed: u64) -> Result<f64> {
+            unavailable()
+        }
+    }
+
+    pub struct BsdpOracle {
+        _priv: (),
+    }
+
+    impl BsdpOracle {
+        pub fn load(_rt: &XlaRuntime) -> Result<BsdpOracle> {
+            unavailable()
+        }
+
+        pub fn gemv(&self, _m: &[u32], _x: &[u32], _rows: usize) -> Result<Vec<i32>> {
+            unavailable()
+        }
+    }
+
+    pub struct MlpOracle {
+        _priv: (),
+    }
+
+    impl MlpOracle {
+        pub fn load(_rt: &XlaRuntime) -> Result<MlpOracle> {
+            unavailable()
+        }
+
+        pub fn forward(&self, _w1: &[i8], _w2: &[i8], _x: &[i8]) -> Result<Vec<i32>> {
+            unavailable()
+        }
     }
 }
 
-/// The quantized-MLP inference graph (L2 model): x i8[cols] → i32 logits.
-pub struct MlpOracle {
-    artifact: Artifact,
-}
-
-impl MlpOracle {
-    pub fn load(rt: &XlaRuntime) -> Result<MlpOracle> {
-        Ok(MlpOracle { artifact: rt.load_named("mlp_int8")? })
-    }
-
-    /// Run the 2-layer quantized MLP with the given weights and input.
-    /// Shapes are baked in aot.py: w1 i8[1024,1024], w2 i8[64,1024],
-    /// x i8[1024] → i32[64].
-    pub fn forward(&self, w1: &[i8], w2: &[i8], x: &[i8]) -> Result<Vec<i32>> {
-        let w1l = literal_i8(w1, &[MLP_HIDDEN, ORACLE_COLS])?;
-        let w2l = literal_i8(w2, &[MLP_OUT, MLP_HIDDEN])?;
-        let xl = literal_i8(x, &[ORACLE_COLS])?;
-        let out = self.artifact.run1(&[w1l, w2l, xl])?;
-        out.to_vec::<i32>().map_err(err)
-    }
-}
+#[cfg(not(feature = "xla"))]
+pub use stub::{Artifact, BsdpOracle, GemvOracle, MlpOracle, XlaRuntime};
 
 #[cfg(test)]
 mod tests {
@@ -206,6 +311,7 @@ mod tests {
     // gracefully when `make artifacts` has not run; here only the
     // artifact-independent pieces are covered.
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_builders_roundtrip() {
         let l = literal_i8(&[1, -2, 3, -4, 5, -6], &[2, 3]).unwrap();
@@ -213,6 +319,13 @@ mod tests {
         assert_eq!(l.to_vec::<i8>().unwrap(), vec![1, -2, 3, -4, 5, -6]);
         let l = literal_u32(&[7, 8], &[2]).unwrap();
         assert_eq!(l.to_vec::<u32>().unwrap(), vec![7, 8]);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_fails_loudly_but_cleanly() {
+        let e = XlaRuntime::cpu().err().expect("stub must not pretend to work");
+        assert!(e.to_string().contains("xla"), "{e}");
     }
 
     #[test]

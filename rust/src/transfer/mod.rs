@@ -4,8 +4,10 @@
 
 pub mod engine;
 pub mod model;
+pub mod queue;
 pub mod topology;
 
 pub use engine::{Mode, TransferEngine, TransferReport};
 pub use model::{BufferPlacement, Direction, TransferModel, TransferParams};
+pub use queue::{RankQueues, Resource};
 pub use topology::{DpuId, RankId, RankLoc, SystemTopology};

@@ -1,0 +1,146 @@
+//! Per-rank queues on the modeled timeline: the substrate of the SDK-v2
+//! async API (`launch_async` / `broadcast_async`).
+//!
+//! The simulator executes everything eagerly (data is moved and DPUs are
+//! run at call time), but *modeled wall time* is tracked here so the
+//! host can overlap independent operations the way pipelined hardware
+//! would. Each rank exposes two resources:
+//!
+//! * **bus** — the DDR channel between the host and the rank (all
+//!   transfers: push, broadcast, gather);
+//! * **compute** — the rank's DPUs (kernel launches).
+//!
+//! An operation reserves its resource on every rank it touches; it
+//! starts when all of them are free (and not before its explicit
+//! dependency), and occupies them for its modeled duration. A transfer
+//! can therefore run *under* a kernel launch on the same ranks (the
+//! double-buffered batch pipelining of the coordinator), while two
+//! transfers to the same rank serialize, exactly like two kernel
+//! launches do.
+//!
+//! Dependencies are explicit: the caller passes the `end_s` of the
+//! operation that produces this operation's input (0.0 for none). This
+//! keeps the model honest — the queue cannot know that a gather reads
+//! what a launch wrote, or that a double-buffered broadcast does *not*
+//! conflict with the running kernel.
+
+use super::topology::RankId;
+
+/// Which per-rank resource an operation occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resource {
+    /// Host↔rank DDR bus (transfers).
+    Bus,
+    /// The rank's DPUs (kernel execution).
+    Compute,
+}
+
+/// Per-rank busy-until clocks plus the host's own clock.
+#[derive(Debug, Clone)]
+pub struct RankQueues {
+    /// The host timeline: where the *blocking* API has advanced to.
+    now: f64,
+    bus_free: Vec<f64>,
+    compute_free: Vec<f64>,
+}
+
+impl RankQueues {
+    pub fn new(nr_ranks: usize) -> RankQueues {
+        RankQueues { now: 0.0, bus_free: vec![0.0; nr_ranks], compute_free: vec![0.0; nr_ranks] }
+    }
+
+    /// The host clock (seconds since system construction).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Reserve `seconds` of `res` on all of `ranks`, starting no earlier
+    /// than the host clock, the explicit dependency `after`, or any of
+    /// the ranks' existing reservations. Returns `(start, end)`.
+    pub fn reserve(
+        &mut self,
+        ranks: &[RankId],
+        res: Resource,
+        after: f64,
+        seconds: f64,
+    ) -> (f64, f64) {
+        let free = match res {
+            Resource::Bus => &mut self.bus_free,
+            Resource::Compute => &mut self.compute_free,
+        };
+        let mut start = self.now.max(after);
+        for &r in ranks {
+            start = start.max(free[r]);
+        }
+        let end = start + seconds;
+        for &r in ranks {
+            free[r] = end;
+        }
+        (start, end)
+    }
+
+    /// Block the host until modeled time `t` (no-op if already past).
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    /// Block the host until every outstanding reservation has drained;
+    /// returns the new host clock.
+    pub fn quiesce(&mut self) -> f64 {
+        let busiest = self
+            .bus_free
+            .iter()
+            .chain(self.compute_free.iter())
+            .fold(self.now, |a, &b| a.max(b));
+        self.now = busiest;
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_resource_serializes() {
+        let mut q = RankQueues::new(4);
+        let (s1, e1) = q.reserve(&[0, 1], Resource::Bus, 0.0, 2.0);
+        assert_eq!((s1, e1), (0.0, 2.0));
+        let (s2, e2) = q.reserve(&[1, 2], Resource::Bus, 0.0, 1.0);
+        assert_eq!((s2, e2), (2.0, 3.0), "rank 1 is shared, so the second op waits");
+        // Rank 3 is untouched: an op on it alone starts immediately.
+        let (s3, _) = q.reserve(&[3], Resource::Bus, 0.0, 1.0);
+        assert_eq!(s3, 0.0);
+    }
+
+    #[test]
+    fn bus_and_compute_overlap() {
+        let mut q = RankQueues::new(2);
+        let (_, ce) = q.reserve(&[0, 1], Resource::Compute, 0.0, 5.0);
+        let (bs, be) = q.reserve(&[0, 1], Resource::Bus, 0.0, 2.0);
+        assert_eq!(bs, 0.0, "a transfer runs under the launch");
+        assert!(be < ce);
+        assert_eq!(q.quiesce(), 5.0);
+    }
+
+    #[test]
+    fn explicit_dependency_delays_start() {
+        let mut q = RankQueues::new(2);
+        let (_, bus_end) = q.reserve(&[0], Resource::Bus, 0.0, 3.0);
+        let (cs, _) = q.reserve(&[0], Resource::Compute, bus_end, 1.0);
+        assert_eq!(cs, 3.0, "launch waits for the broadcast that feeds it");
+    }
+
+    #[test]
+    fn host_clock_only_moves_forward() {
+        let mut q = RankQueues::new(1);
+        q.advance_to(4.0);
+        q.advance_to(2.0);
+        assert_eq!(q.now(), 4.0);
+        // New reservations start at the host clock, not before.
+        let (s, _) = q.reserve(&[0], Resource::Bus, 0.0, 1.0);
+        assert_eq!(s, 4.0);
+    }
+}

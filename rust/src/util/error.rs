@@ -14,6 +14,15 @@ pub enum Error {
     Asm { line: usize, msg: String },
     /// DPU fault raised during simulation (alignment, OOB, bad opcode…).
     Fault { dpu: usize, tasklet: usize, pc: u32, kind: FaultKind },
+    /// Host-side access error: the *host* (not a tasklet) touched a
+    /// DPU's WRAM/MRAM out of bounds or misaligned through the SDK
+    /// surface (`dpu_copy_to`-style staging, symbol writes, xfer
+    /// plans). Distinct from [`Error::Fault`], which always names a
+    /// faulting tasklet and program counter.
+    HostAccess { dpu: usize, addr: u32, kind: FaultKind },
+    /// A typed-symbol lookup or conversion failed (unknown name, size
+    /// not a multiple of the element width, misaligned address).
+    Symbol { name: String, msg: String },
     /// IRAM overflow: the program does not fit in 24 KB (the paper's
     /// "#pragma unroll can lead to IRAM overfill, which results in a
     /// linker error").
@@ -79,6 +88,10 @@ impl fmt::Display for Error {
             Error::Fault { dpu, tasklet, pc, kind } => {
                 write!(f, "DPU {dpu} tasklet {tasklet} faulted at pc={pc:#x}: {kind}")
             }
+            Error::HostAccess { dpu, addr, kind } => {
+                write!(f, "host access to DPU {dpu} at addr {addr:#x} failed: {kind}")
+            }
+            Error::Symbol { name, msg } => write!(f, "symbol '{name}': {msg}"),
             Error::IramOverflow { program_bytes, iram_bytes } => write!(
                 f,
                 "IRAM overflow: program is {program_bytes} B but IRAM holds {iram_bytes} B \
@@ -115,6 +128,22 @@ mod tests {
         let e = Error::Fault { dpu: 1, tasklet: 2, pc: 0x40, kind: FaultKind::DmaAlignment };
         assert!(e.to_string().contains("tasklet 2"));
         assert!(e.to_string().contains("DMA alignment"));
+    }
+
+    #[test]
+    fn host_access_names_the_host_not_a_tasklet() {
+        let e = Error::HostAccess { dpu: 7, addr: 0x4000_0000, kind: FaultKind::MramOutOfBounds };
+        let s = e.to_string();
+        assert!(s.contains("host access"), "{s}");
+        assert!(s.contains("DPU 7"), "{s}");
+        assert!(s.contains("0x40000000"), "{s}");
+        assert!(!s.contains("tasklet"), "host errors must not invent a tasklet: {s}");
+    }
+
+    #[test]
+    fn symbol_error_display() {
+        let e = Error::Symbol { name: "rows".into(), msg: "not defined".into() };
+        assert_eq!(e.to_string(), "symbol 'rows': not defined");
     }
 
     #[test]

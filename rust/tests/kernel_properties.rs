@@ -191,7 +191,10 @@ fn fleet_fault_reports_global_dpu_id() {
     )
     .unwrap();
     sys.load_program(&set, &prog).unwrap();
-    sys.set_args(&set, |i| if i == 100 { vec![(0, 77)] } else { vec![] }).unwrap();
+    // Hand-assembled program: declare the magic word as an ad-hoc
+    // typed symbol instead of a raw WRAM offset.
+    let magic = upmem_unleashed::dpu::Symbol::<u32>::wram("magic", 0, 1);
+    sys.write_symbol(&set, &magic, |i| if i == 100 { 77 } else { 0 }).unwrap();
     let err = sys.launch(&set, 4).unwrap_err();
     match err {
         upmem_unleashed::Error::Fault { dpu, .. } => {

@@ -1,0 +1,119 @@
+//! Property tests for the SDK-v2 transfer surface: `XferPlan` /
+//! `PullPlan` round-trips and timing parity with the deprecated v1
+//! closure API on identical traffic.
+
+use upmem_unleashed::host::{AllocPolicy, PimSystem, PullPlan, XferPlan};
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::proptest::{forall, Config};
+use upmem_unleashed::util::rng::Rng;
+
+fn system() -> PimSystem {
+    PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware)
+}
+
+/// Push→pull through prepared plans returns exactly the pushed bytes,
+/// for random per-DPU payload sizes and random MRAM offsets.
+#[test]
+fn xfer_plan_roundtrips_bytes_exactly() {
+    forall(
+        Config::cases(12),
+        |rng| {
+            let chunk = rng.range_u64(1, 2048) as usize;
+            let addr = (rng.range_u64(0, 1 << 20) as u32) & !7;
+            let seed = rng.next_u64();
+            (chunk, addr, seed)
+        },
+        |&(chunk, addr, seed)| {
+            let mut sys = system();
+            let set = sys.alloc_ranks(2).unwrap();
+            let n = set.nr_dpus();
+            let mut rng = Rng::new(seed);
+            let data = rng.u8_vec(n * chunk);
+            let mut plan = XferPlan::to_pim(&set, addr);
+            plan.prepare_chunks(&data, chunk).unwrap();
+            let push = sys.push_xfer(&set, &plan).unwrap();
+            let mut out = vec![0u8; n * chunk];
+            let mut pull = PullPlan::from_pim(&set, addr);
+            pull.prepare_chunks(&mut out, chunk).unwrap();
+            let pulled = sys.pull_xfer(&set, &mut pull).unwrap();
+            push.bytes == (n * chunk) as u64 && pulled.bytes == push.bytes && out == data
+        },
+        "XferPlan push→pull round-trips bytes exactly",
+    );
+}
+
+/// The deprecated closure-based API and the plan-based API must model
+/// identical traffic with identical `TransferReport` timings (the v1
+/// path is kept precisely so benches can compare them).
+#[test]
+fn plan_timing_matches_deprecated_closure_api() {
+    forall(
+        Config::cases(10),
+        |rng| {
+            let chunk = rng.range_u64(8, 4096) as usize;
+            let ranks = *rng.choose(&[2usize, 4]);
+            let seed = rng.next_u64();
+            (chunk, ranks, seed)
+        },
+        |&(chunk, ranks, seed)| {
+            let mut rng = Rng::new(seed);
+            let payload = rng.u8_vec(chunk);
+
+            let mut v1 = system();
+            let s1 = v1.alloc_ranks(ranks).unwrap();
+            #[allow(deprecated)]
+            let push1 = v1.push_parallel(&s1, 4096, |_| payload.clone()).unwrap();
+            #[allow(deprecated)]
+            let (data1, pull1) = v1.pull_parallel(&s1, 4096, chunk).unwrap();
+
+            let mut v2 = system();
+            let s2 = v2.alloc_ranks(ranks).unwrap();
+            let n = s2.nr_dpus();
+            let mut plan = XferPlan::to_pim(&s2, 4096);
+            for i in 0..n {
+                plan.prepare(i, &payload).unwrap();
+            }
+            let push2 = v2.push_xfer(&s2, &plan).unwrap();
+            let mut out = vec![0u8; n * chunk];
+            let mut pull = PullPlan::from_pim(&s2, 4096);
+            pull.prepare_chunks(&mut out, chunk).unwrap();
+            let pull2 = v2.pull_xfer(&s2, &mut pull).unwrap();
+
+            push1.bytes == push2.bytes
+                && (push1.seconds - push2.seconds).abs() < 1e-12
+                && pull1.bytes == pull2.bytes
+                && (pull1.seconds - pull2.seconds).abs() < 1e-12
+                && data1.concat() == out
+        },
+        "plan-based and closure-based APIs model identical traffic identically",
+    );
+}
+
+/// Partially prepared plans move only the prepared views and report
+/// only their bytes.
+#[test]
+fn partial_plans_move_partial_traffic() {
+    let mut sys = system();
+    let set = sys.alloc_ranks(2).unwrap();
+    let payload = [9u8; 64];
+    let mut plan = XferPlan::to_pim(&set, 0);
+    plan.prepare(3, &payload).unwrap();
+    plan.prepare(7, &payload).unwrap();
+    let r = sys.push_xfer(&set, &plan).unwrap();
+    assert_eq!(r.bytes, 128);
+    let mut buf = [0u8; 64];
+    sys.dpu_of(&set, 3).mram.read(0, &mut buf).unwrap();
+    assert_eq!(buf, payload);
+    sys.dpu_of(&set, 4).mram.read(0, &mut buf).unwrap();
+    assert_eq!(buf, [0u8; 64], "unprepared DPUs must be untouched");
+}
+
+/// A plan built for one set cannot be pushed to a differently-sized set.
+#[test]
+fn mismatched_plan_is_rejected() {
+    let mut sys = system();
+    let small = sys.alloc_ranks(2).unwrap();
+    let big = sys.alloc_ranks(4).unwrap();
+    let plan = XferPlan::to_pim(&small, 0);
+    assert!(sys.push_xfer(&big, &plan).is_err());
+}
