@@ -1,82 +1,170 @@
 //! §Perf — simulator hot-path throughput (simulated instructions per
 //! host second). The interpreter stands in for silicon, so its speed
 //! bounds every other bench; EXPERIMENTS.md §Perf tracks this number
-//! across optimization iterations.
+//! across optimization iterations, and `BENCH_perf.json` (written by
+//! this bench, workload → Minstr/s) carries the trajectory PR-to-PR.
+//!
+//! The fleet-scale case runs the same 128-DPU (2-rank) GEMV launch
+//! twice — pinned to 1 worker (the serial baseline) and on all
+//! available cores — so the parallel fleet executor's speedup is
+//! measured, not assumed. `PERF_SMOKE=1` shrinks every workload to CI
+//! size (the point is exercising the bench + JSON writer, not stable
+//! numbers).
 
 mod common;
 
 use common::{footer, timed};
-use upmem_unleashed::bench_support::table::{f1, Table};
-use upmem_unleashed::kernels::arith::{run_microbench, DType, MulImpl, Spec, Unroll};
-use upmem_unleashed::kernels::bsdp::{run_dot_microbench, DotVariant};
+use upmem_unleashed::bench_support::json::json_object;
+use upmem_unleashed::bench_support::table::{f1, ratio, Table};
+use upmem_unleashed::coordinator::GemvCoordinator;
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::kernels::arith::{run_microbench_with, DType, MulImpl, Spec, Unroll};
+use upmem_unleashed::kernels::bsdp::{run_dot_microbench_with, DotVariant};
+use upmem_unleashed::kernels::gemv::GemvVariant;
+use upmem_unleashed::kernels::KernelScratch;
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::rng::Rng;
 
-fn main() {
-    let (_, wall) = timed(|| {
-        let mut t = Table::new(
+/// Accumulates the table rows, the machine-readable entries and the
+/// aggregate throughput.
+struct Perf {
+    table: Table,
+    entries: Vec<(String, f64)>,
+    total_instrs: u64,
+    total_secs: f64,
+}
+
+fn perf_report() -> Perf {
+    Perf {
+        table: Table::new(
             "§Perf — simulator throughput (million simulated instrs / host second)",
             &["workload", "sim instrs", "host s", "Minstr/s"],
-        );
-        let mut total_i = 0u64;
-        let mut total_s = 0.0;
-        let cases: Vec<(&str, Box<dyn Fn() -> u64>)> = vec![
-            (
-                "INT8 ADD x64, 16 tasklets, 1 MB",
-                Box::new(|| {
-                    run_microbench(
-                        Spec::add(DType::I8).with_unroll(Unroll::X64),
-                        16,
-                        1024 * 1024,
-                        42,
-                    )
-                    .unwrap()
-                    .launch
-                    .instrs
-                }),
-            ),
-            (
-                "INT8 MUL __mulsi3 (call-heavy), 16 tasklets, 512 KB",
-                Box::new(|| {
-                    run_microbench(Spec::mul(DType::I8, MulImpl::Mulsi3), 16, 512 * 1024, 42)
-                        .unwrap()
-                        .launch
-                        .instrs
-                }),
-            ),
-            (
-                "BSDP dot (ALU-dense), 16 tasklets, 256K elems",
-                Box::new(|| {
-                    run_dot_microbench(DotVariant::Bsdp, 16, 256 * 1024, 42)
-                        .unwrap()
-                        .launch
-                        .instrs
-                }),
-            ),
-            (
-                "single tasklet (scheduler idle-skip path), 1 MB",
-                Box::new(|| {
-                    run_microbench(Spec::add(DType::I8), 1, 1024 * 1024, 42)
-                        .unwrap()
-                        .launch
-                        .instrs
-                }),
-            ),
-        ];
-        for (name, f) in cases {
-            let (instrs, s) = timed(&f);
-            total_i += instrs;
-            total_s += s;
-            t.row(&[
-                name.to_string(),
-                instrs.to_string(),
-                format!("{s:.3}"),
-                f1(instrs as f64 / s / 1e6),
-            ]);
+        ),
+        entries: Vec::new(),
+        total_instrs: 0,
+        total_secs: 0.0,
+    }
+}
+
+impl Perf {
+    fn record(&mut self, name: &str, instrs: u64, secs: f64) {
+        let minstr = instrs as f64 / secs / 1e6;
+        self.table.row(&[
+            name.to_string(),
+            instrs.to_string(),
+            format!("{secs:.3}"),
+            f1(minstr),
+        ]);
+        self.entries.push((name.to_string(), minstr));
+        self.total_instrs += instrs;
+        self.total_secs += secs;
+    }
+}
+
+/// One fleet GEMV measurement: preload a `rows × cols` INT8 matrix over
+/// a 128-DPU (2-rank) set, then time `reps` full-fleet launches.
+/// `workers = None` keeps the system default (available parallelism /
+/// `PIM_LAUNCH_WORKERS`). Returns (total simulated instrs, host secs).
+fn fleet_gemv(workers: Option<usize>, rows: u32, cols: u32, reps: usize) -> (u64, f64) {
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    if let Some(w) = workers {
+        sys.set_launch_workers(w);
+    }
+    let set = sys.alloc_ranks(2).expect("2 ranks");
+    let mut c = GemvCoordinator::new(sys, set, GemvVariant::I8Opt, 16);
+    let mut rng = Rng::new(4242);
+    let m = rng.i8_vec((rows * cols) as usize);
+    c.preload_matrix(rows, cols, &m).expect("preload");
+    let mut instrs = 0u64;
+    let (_, secs) = timed(|| {
+        for _ in 0..reps {
+            let fleet = c.sys.launch(&c.set, 16).expect("fleet launch");
+            instrs += fleet.per_dpu.iter().map(|r| r.instrs).sum::<u64>();
+            c.sys.recycle_launch(fleet);
         }
-        t.print();
-        println!(
-            "aggregate: {:.1} M simulated instructions / host second",
-            total_i as f64 / total_s / 1e6
+    });
+    (instrs, secs)
+}
+
+fn main() {
+    let smoke = std::env::var("PERF_SMOKE").is_ok();
+    if smoke {
+        println!("[perf_simulator] PERF_SMOKE set: CI-sized workloads, numbers not comparable");
+    }
+    let (_, wall) = timed(|| {
+        let mut p = perf_report();
+        let mut scr = KernelScratch::default();
+        let add_bytes: u32 = if smoke { 128 * 1024 } else { 1024 * 1024 };
+        let mul_bytes: u32 = if smoke { 64 * 1024 } else { 512 * 1024 };
+        let dot_elems: usize = if smoke { 32 * 1024 } else { 256 * 1024 };
+
+        let (i, s) = timed(|| {
+            run_microbench_with(
+                &mut scr,
+                Spec::add(DType::I8).with_unroll(Unroll::X64),
+                16,
+                add_bytes,
+                42,
+            )
+            .unwrap()
+            .launch
+            .instrs
+        });
+        p.record("INT8 ADD x64, 16 tasklets", i, s);
+
+        let (i, s) = timed(|| {
+            run_microbench_with(&mut scr, Spec::mul(DType::I8, MulImpl::Mulsi3), 16, mul_bytes, 42)
+                .unwrap()
+                .launch
+                .instrs
+        });
+        p.record("INT8 MUL __mulsi3 (call-heavy), 16 tasklets", i, s);
+
+        let (i, s) = timed(|| {
+            run_dot_microbench_with(&mut scr, DotVariant::Bsdp, 16, dot_elems, 42)
+                .unwrap()
+                .launch
+                .instrs
+        });
+        p.record("BSDP dot (ALU-dense), 16 tasklets", i, s);
+
+        let (i, s) = timed(|| {
+            run_microbench_with(&mut scr, Spec::add(DType::I8), 1, add_bytes, 42)
+                .unwrap()
+                .launch
+                .instrs
+        });
+        p.record("single tasklet (scheduler idle-skip path)", i, s);
+
+        // Fleet scale: serial baseline vs the parallel fleet executor.
+        let (rows, cols, reps) = if smoke { (256u32, 1024u32, 1usize) } else { (1024, 2048, 3) };
+        let default_workers =
+            PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware).launch_workers();
+        let (si, ss) = fleet_gemv(Some(1), rows, cols, reps);
+        p.record("fleet GEMV, 128 DPUs, 16 tasklets (1 worker)", si, ss);
+        let (pi, ps) = fleet_gemv(None, rows, cols, reps);
+        p.record(
+            &format!("fleet GEMV, 128 DPUs, 16 tasklets ({default_workers} workers)"),
+            pi,
+            ps,
         );
+        let speedup = (pi as f64 / ps) / (si as f64 / ss);
+        println!(
+            "fleet parallel speedup: {} with {default_workers} worker threads",
+            ratio(speedup)
+        );
+        p.entries.push(("fleet parallel speedup (x)".to_string(), speedup));
+
+        p.table.print();
+        let aggregate = p.total_instrs as f64 / p.total_secs / 1e6;
+        println!("aggregate: {aggregate:.1} M simulated instructions / host second");
+        p.entries.push(("aggregate".to_string(), aggregate));
+
+        let json = json_object(&p.entries);
+        match std::fs::write("BENCH_perf.json", &json) {
+            Ok(()) => println!("wrote BENCH_perf.json ({} entries)", p.entries.len()),
+            Err(e) => eprintln!("could not write BENCH_perf.json: {e}"),
+        }
     });
     footer("perf_simulator", wall);
 }

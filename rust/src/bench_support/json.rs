@@ -1,0 +1,74 @@
+//! Minimal JSON emission for machine-readable bench outputs (no
+//! external crates offline — the perf trackers only need an ordered
+//! string → number map, written as `BENCH_perf.json` by
+//! `rust/benches/perf_simulator.rs` and consumed across PRs to follow
+//! the simulator-throughput trajectory; see EXPERIMENTS.md §Perf).
+
+/// Escape a string for a JSON string literal body.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a number as a JSON value (JSON has no NaN/Inf — clamp to 0).
+fn number(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "0.0".to_string()
+    }
+}
+
+/// Render an ordered string → f64 map as a pretty-printed JSON object
+/// (insertion order preserved — diffs stay readable PR-to-PR).
+pub fn json_object(entries: &[(String, f64)]) -> String {
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in entries.iter().enumerate() {
+        out.push_str("  \"");
+        out.push_str(&escape(k));
+        out.push_str("\": ");
+        out.push_str(&number(*v));
+        if i + 1 < entries.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_ordered_object() {
+        let o = json_object(&[
+            ("b workload".to_string(), 12.3456),
+            ("a".to_string(), 0.5),
+        ]);
+        assert_eq!(o, "{\n  \"b workload\": 12.346,\n  \"a\": 0.500\n}\n");
+    }
+
+    #[test]
+    fn empty_map_is_valid_json() {
+        assert_eq!(json_object(&[]), "{\n}\n");
+    }
+
+    #[test]
+    fn escapes_specials_and_clamps_non_finite() {
+        let o = json_object(&[("a\"b\\c\nd".to_string(), f64::NAN)]);
+        assert_eq!(o, "{\n  \"a\\\"b\\\\c\\nd\": 0.0\n}\n");
+    }
+}

@@ -3,6 +3,7 @@
 //! fleet-level analytic GEMV model for Figs. 12–13.
 
 pub mod fleet;
+pub mod json;
 pub mod table;
 
 pub use fleet::{FleetGemvModel, FleetGemvPoint, Scenario};

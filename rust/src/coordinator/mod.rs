@@ -236,6 +236,9 @@ impl GemvCoordinator {
         let g = self.sys.pull_modeled_async(&self.set, part.live_y_bytes(), prev.end_s);
         timing.gather_s += g.report.seconds;
         timing.compute_s += prev.peek().seconds;
+        // Per-DPU stats are folded in; hand the buffer back so the
+        // serving loop stops allocating one per batch.
+        self.sys.recycle_launch(prev.into_fleet());
         Ok(g.end_s)
     }
 
@@ -267,13 +270,15 @@ impl GemvCoordinator {
         let bc = self.sys.broadcast(&self.set, GEMV_X, &xbytes)?;
         // Launch.
         let fleet = self.sys.launch(&self.set, self.nr_tasklets)?;
+        let compute_s = fleet.seconds;
+        self.sys.recycle_launch(fleet);
         // Gather y.
         let (y, gather_s) = self.gather_y(&part)?;
         self.state.record_gemv();
         let timing = GemvTiming {
             matrix_s: 0.0,
             broadcast_s: bc.seconds,
-            compute_s: fleet.seconds,
+            compute_s,
             gather_s,
             overlap_s: 0.0,
         };

@@ -4,15 +4,46 @@
 //! tasklets to completion (all tasklets `stop`ped), returning wall
 //! cycles, dynamic instruction counts and DMA traffic. Faults surface as
 //! [`Error::Fault`] with the offending tasklet and PC.
+//!
+//! # The batched hot loop (§Perf iteration 4)
+//!
+//! The executor has two interchangeable issue loops:
+//!
+//! * the **stepped path** asks [`Scheduler::next_issue`] for every
+//!   single instruction (the original loop — always correct);
+//! * the **batched path** exploits that the round-robin dispatcher is
+//!   fully deterministic in steady state: when every runnable tasklet,
+//!   taken in circular order from the scheduler's round-robin pointer,
+//!   can issue at consecutive cycles `c0, c0+1, …` (checked by
+//!   [`steady_rotation`]), whole rotations are issued back-to-back —
+//!   one instruction per runnable tasklet — without re-entering the
+//!   scheduler, and consecutive rotations advance the clock by
+//!   `max(R, ISSUE_INTERVAL)`.
+//!
+//! The batched path is *verified-entry*: it is only taken after the
+//! steady-state condition is checked against live scheduler state, and
+//! any scheduling event (DMA stall, barrier, stop) synchronizes the
+//! scheduler and falls back to the stepped path — so cycle counts,
+//! issue order, and therefore all results are bit-identical between the
+//! two (pinned by `batched_path_matches_stepped_path` below and the
+//! `parallel_determinism` integration tests). Equivalence sketch: with
+//! the condition `ready_at[ring[k]] <= c0 + k` and `c0 = max(now, min
+//! ready)`, the dispatcher's circular first-eligible scan from
+//! `rr_next` must pick exactly `ring[0], ring[1], …` at cycles `c0,
+//! c0+1, …`; after a full rotation each `ready_at` becomes
+//! `c0 + k + ISSUE_INTERVAL`, which re-satisfies the condition with
+//! `c0' = c0 + max(R, ISSUE_INTERVAL)` — so steadiness persists until
+//! an event perturbs it.
 
 use super::dma::dma_cycles;
 use super::isa::{CondJump, Instr, JumpTarget, LoadWidth, Program, StoreWidth};
 use super::memory::{Mram, Wram};
-use super::pipeline::Scheduler;
+use super::pipeline::{Scheduler, BLOCKED};
 use super::tasklet::Tasklet;
-use super::{IRAM_BYTES, NR_TASKLETS_MAX};
+use super::{IRAM_BYTES, ISSUE_INTERVAL, NR_TASKLETS_MAX};
 use crate::util::error::{Error, FaultKind};
 use crate::Result;
+use std::sync::Arc;
 
 /// Default runaway-loop guard (cycles).
 pub const DEFAULT_CYCLE_LIMIT: u64 = 50_000_000_000;
@@ -37,17 +68,34 @@ impl LaunchResult {
     }
 }
 
+/// Reusable per-launch interpreter state (§Perf iteration 5: hoisted out
+/// of [`Dpu::launch`] so a fleet/bench driver allocates tasklet state,
+/// the DMA staging buffer and the rotation ring once per worker instead
+/// of once per launch).
+#[derive(Debug, Clone, Default)]
+pub struct LaunchScratch {
+    ts: Vec<Tasklet>,
+    dma_buf: Vec<u8>,
+    ring: Vec<usize>,
+}
+
 /// One simulated DPU.
 #[derive(Debug, Clone)]
 pub struct Dpu {
     pub wram: Wram,
     pub mram: Mram,
-    program: Program,
+    /// The decoded instruction stream, shared fleet-wide: the host loads
+    /// one `Arc`'d program into 2551 DPUs instead of 2551 clones.
+    program: Arc<Program>,
     /// Identifier used in fault reports (set by the host layer to the
     /// global DPU index).
     pub id: usize,
     /// Runaway guard.
     pub cycle_limit: u64,
+    /// Use the rotation-batched hot loop (default). Pinned off only by
+    /// the differential tests that prove it bit-identical to the
+    /// stepped scheduler path.
+    pub batch_rotations: bool,
 }
 
 impl Default for Dpu {
@@ -56,27 +104,280 @@ impl Default for Dpu {
     }
 }
 
+/// What one executed instruction did to its tasklet beyond updating
+/// registers and memory — the scheduling action the issue loop applies.
+enum Step {
+    /// Ordinary instruction: pc advanced, tasklet stays runnable.
+    Next,
+    /// DMA issued: pc advanced, tasklet stalls for the engine cycles.
+    Dma(u64),
+    /// Arrived at a barrier (pc *not* advanced; release advances it).
+    Barrier,
+    /// Executed `stop`.
+    Stop,
+}
+
+/// Execute one instruction for tasklet `tk` at `pc`, applying register
+/// and memory effects. `now` carries the scheduler's post-issue clock
+/// (issue cycle + 1) for `time`. Scheduling effects are returned as a
+/// [`Step`] for the caller to apply — this is the single instruction
+/// body shared by the stepped and batched issue loops.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn exec_one(
+    wram: &mut Wram,
+    mram: &mut Mram,
+    instr: Instr,
+    tk: &mut Tasklet,
+    pc: u32,
+    now: u64,
+    dma_buf: &mut Vec<u8>,
+    res: &mut LaunchResult,
+) -> std::result::Result<Step, FaultKind> {
+    let mut next_pc = pc + 1;
+
+    #[inline]
+    fn cond_jump(cj: CondJump, result: u32, next_pc: &mut u32) {
+        if let Some((c, target)) = cj {
+            if c.eval(result) {
+                *next_pc = target;
+            }
+        }
+    }
+
+    match instr {
+        Instr::Move { rd, src, cj } => {
+            let v = tk.src(src);
+            tk.set(rd, v);
+            cond_jump(cj, v, &mut next_pc);
+        }
+        Instr::Alu { op, rd, ra, b, cj } => {
+            let v = op.eval(tk.get(ra), tk.src(b));
+            tk.set(rd, v);
+            cond_jump(cj, v, &mut next_pc);
+        }
+        Instr::Mul { variant, rd, ra, b, cj } => {
+            let v = variant.eval(tk.get(ra), tk.src(b));
+            tk.set(rd, v);
+            cond_jump(cj, v, &mut next_pc);
+        }
+        Instr::MulStep { dd, ra, shift, cj } => {
+            let (mut lo, mut hi) = tk.get_d(dd);
+            if lo & 1 != 0 {
+                hi = hi.wrapping_add(tk.get(ra) << shift);
+            }
+            lo >>= 1;
+            tk.set_d(dd, lo, hi);
+            cond_jump(cj, lo, &mut next_pc);
+        }
+        Instr::LslAdd { rd, ra, rb, shift, cj } => {
+            let v = tk.get(ra).wrapping_add(tk.get(rb) << shift);
+            tk.set(rd, v);
+            cond_jump(cj, v, &mut next_pc);
+        }
+        Instr::Cao { rd, ra, cj } => {
+            let v = tk.get(ra).count_ones();
+            tk.set(rd, v);
+            cond_jump(cj, v, &mut next_pc);
+        }
+        Instr::Load { w, rd, ra, off } => {
+            let addr = tk.get(ra).wrapping_add(off as u32);
+            let v = match w {
+                LoadWidth::B8s => wram.load8(addr).map(|b| b as i8 as i32 as u32),
+                LoadWidth::B8u => wram.load8(addr).map(|b| b as u32),
+                LoadWidth::B16s => wram.load16(addr).map(|h| h as i16 as i32 as u32),
+                LoadWidth::B16u => wram.load16(addr).map(|h| h as u32),
+                LoadWidth::B32 => wram.load32(addr),
+            }?;
+            tk.set(rd, v);
+        }
+        Instr::Ld { dd, ra, off } => {
+            let addr = tk.get(ra).wrapping_add(off as u32);
+            let v = wram.load64(addr)?;
+            tk.set_d(dd, v as u32, (v >> 32) as u32);
+        }
+        Instr::Store { w, ra, off, rs } => {
+            let addr = tk.get(ra).wrapping_add(off as u32);
+            let v = tk.get(rs);
+            match w {
+                StoreWidth::B8 => wram.store8(addr, v as u8),
+                StoreWidth::B16 => wram.store16(addr, v as u16),
+                StoreWidth::B32 => wram.store32(addr, v),
+            }?;
+        }
+        Instr::Sd { ra, off, ds } => {
+            let addr = tk.get(ra).wrapping_add(off as u32);
+            let (lo, hi) = tk.get_d(ds);
+            let v = (hi as u64) << 32 | lo as u64;
+            wram.store64(addr, v)?;
+        }
+        Instr::Jump { target } => {
+            next_pc = match target {
+                JumpTarget::Pc(p) => p,
+                JumpTarget::Reg(r) => tk.get(r),
+            };
+        }
+        Instr::JCmp { cond, ra, b, target } => {
+            if cond.eval(tk.get(ra), tk.src(b)) {
+                next_pc = target;
+            }
+        }
+        Instr::Call { link, target } => {
+            tk.set(link, pc + 1);
+            next_pc = target;
+        }
+        Instr::Ldma { wram: wreg, mram: mreg, bytes } => {
+            let waddr = tk.get(wreg);
+            let maddr = tk.get(mreg);
+            let cycles = dma_cycles(waddr, maddr, bytes)?;
+            // No zero-fill: `mram.read` overwrites the full staging
+            // slice, and the buffer is reused launch-to-launch.
+            dma_buf.resize(bytes as usize, 0);
+            mram.read(maddr, dma_buf)?;
+            wram.write_bytes(waddr, &dma_buf[..])?;
+            res.dma_read_bytes += bytes as u64;
+            tk.pc = next_pc;
+            return Ok(Step::Dma(cycles));
+        }
+        Instr::Sdma { wram: wreg, mram: mreg, bytes } => {
+            let waddr = tk.get(wreg);
+            let maddr = tk.get(mreg);
+            let cycles = dma_cycles(waddr, maddr, bytes)?;
+            dma_buf.resize(bytes as usize, 0);
+            wram.read_bytes(waddr, dma_buf)?;
+            mram.write(maddr, &dma_buf[..])?;
+            res.dma_write_bytes += bytes as u64;
+            tk.pc = next_pc;
+            return Ok(Step::Dma(cycles));
+        }
+        Instr::Barrier => {
+            tk.at_barrier = true;
+            return Ok(Step::Barrier);
+        }
+        Instr::Time { rd } => {
+            tk.set(rd, now as u32);
+        }
+        Instr::Stop => {
+            tk.stopped = true;
+            return Ok(Step::Stop);
+        }
+        Instr::Fault => {
+            return Err(FaultKind::Explicit);
+        }
+        Instr::Nop => {}
+    }
+    tk.pc = next_pc;
+    Ok(Step::Next)
+}
+
+/// Wake every tasklet parked at the barrier at the scheduler's current
+/// cycle, advancing each past the `barrier` instruction.
+fn release_barrier(ts: &mut [Tasklet], sched: &mut Scheduler) {
+    let now = sched.now;
+    for (i, tk) in ts.iter_mut().enumerate() {
+        if tk.at_barrier {
+            tk.at_barrier = false;
+            tk.pc += 1; // fall through the barrier
+            sched.wake(i, now);
+        }
+    }
+}
+
+/// Apply a [`Step`]'s scheduling action — shared by the stepped and
+/// batched issue loops so barrier/stop bookkeeping cannot diverge.
+fn apply_event(
+    ev: Step,
+    t: usize,
+    sched: &mut Scheduler,
+    ts: &mut [Tasklet],
+    at_barrier: &mut usize,
+    stopped: &mut usize,
+    nr_tasklets: usize,
+) {
+    match ev {
+        Step::Next => {}
+        Step::Dma(extra) => sched.stall(t, extra),
+        Step::Barrier => {
+            *at_barrier += 1;
+            sched.block(t);
+            // Release once every still-running tasklet arrived.
+            if *at_barrier == nr_tasklets - *stopped {
+                release_barrier(ts, sched);
+                *at_barrier = 0;
+            }
+        }
+        Step::Stop => {
+            *stopped += 1;
+            sched.block(t);
+            // A stop may release a barrier the rest is waiting on.
+            if *at_barrier > 0 && *at_barrier == nr_tasklets - *stopped {
+                release_barrier(ts, sched);
+                *at_barrier = 0;
+            }
+        }
+    }
+}
+
+/// Detect the scheduler's steady-state rotation. Fills `ring` with the
+/// runnable tasklets in circular order from the round-robin pointer and
+/// returns the first issue cycle `c0` iff the dispatcher would provably
+/// issue them at consecutive cycles `c0, c0+1, …` (see the module docs
+/// for why the condition is exact).
+fn steady_rotation(sched: &Scheduler, ring: &mut Vec<usize>) -> Option<u64> {
+    ring.clear();
+    let nr = sched.nr_tasklets();
+    let start = sched.rr_start();
+    let mut min_ready = BLOCKED;
+    for i in 0..nr {
+        let t = (start + i) % nr;
+        let r = sched.ready_at(t);
+        if r != BLOCKED {
+            ring.push(t);
+            min_ready = min_ready.min(r);
+        }
+    }
+    if ring.is_empty() {
+        return None;
+    }
+    let c0 = sched.now.max(min_ready);
+    for (k, &t) in ring.iter().enumerate() {
+        if sched.ready_at(t) > c0 + k as u64 {
+            ring.clear();
+            return None;
+        }
+    }
+    Some(c0)
+}
+
 impl Dpu {
     pub fn new() -> Dpu {
         Dpu {
             wram: Wram::new(),
             mram: Mram::new(),
-            program: Program::default(),
+            program: Arc::new(Program::default()),
             id: 0,
             cycle_limit: DEFAULT_CYCLE_LIMIT,
+            batch_rotations: true,
         }
     }
 
     /// Load a program into IRAM. Fails if it does not fit (the paper's
     /// `#pragma unroll` IRAM-overfill linker error).
     pub fn load_program(&mut self, program: &Program) -> Result<()> {
+        self.load_program_shared(Arc::new(program.clone()))
+    }
+
+    /// Share one decoded instruction stream (the host layer wraps the
+    /// program in an `Arc` once per fleet instead of cloning it into
+    /// every DPU — 2551 clones on the paper's server).
+    pub fn load_program_shared(&mut self, program: Arc<Program>) -> Result<()> {
         if !program.fits_iram() {
             return Err(Error::IramOverflow {
                 program_bytes: program.iram_bytes(),
                 iram_bytes: IRAM_BYTES,
             });
         }
-        self.program = program.clone();
+        self.program = program;
         Ok(())
     }
 
@@ -85,40 +386,102 @@ impl Dpu {
     }
 
     /// Run the loaded program on `nr_tasklets` tasklets until all stop.
+    /// Allocates fresh scratch; hot callers (the fleet executor, the
+    /// bench harnesses) reuse one via [`Dpu::launch_with`].
     pub fn launch(&mut self, nr_tasklets: usize) -> Result<LaunchResult> {
+        let mut scratch = LaunchScratch::default();
+        self.launch_with(nr_tasklets, &mut scratch)
+    }
+
+    /// [`Dpu::launch`] with caller-provided reusable scratch.
+    pub fn launch_with(
+        &mut self,
+        nr_tasklets: usize,
+        scratch: &mut LaunchScratch,
+    ) -> Result<LaunchResult> {
         assert!(
             (1..=NR_TASKLETS_MAX).contains(&nr_tasklets),
             "nr_tasklets must be in 1..=16"
         );
-        let instrs: &[Instr] = &self.program.instrs;
+        let program = Arc::clone(&self.program);
+        let instrs: &[Instr] = &program.instrs;
         if instrs.is_empty() {
             return Err(Error::Coordinator("launch with empty program".into()));
         }
+        let LaunchScratch { ts, dma_buf, ring } = scratch;
+        ts.clear();
+        ts.extend((0..nr_tasklets).map(|i| Tasklet::new(i as u32)));
         let mut sched = Scheduler::new(nr_tasklets);
-        let mut ts: Vec<Tasklet> = (0..nr_tasklets).map(|i| Tasklet::new(i as u32)).collect();
         let mut res = LaunchResult::default();
         let mut stopped = 0usize;
         let mut at_barrier = 0usize;
-        // §Perf iteration 2: reusable DMA staging buffer (no allocation
-        // per ldma/sdma on the hot path).
-        let mut dma_buf: Vec<u8> = Vec::with_capacity(super::DMA_MAX_BYTES as usize);
+        // Stepped instructions to execute before re-trying the (O(nr))
+        // steady-state check after it failed — keeps the check amortized
+        // O(1) while tasklets are staggered (e.g. draining a DMA).
+        let mut cooldown: usize = 0;
 
         let fault = |kind: FaultKind, t: usize, pc: u32, id: usize| -> Error {
             Error::Fault { dpu: id, tasklet: t, pc, kind }
         };
 
-        while stopped < nr_tasklets {
-            let t = match sched.next_issue() {
-                Some(t) => t,
-                None => {
-                    // Everyone blocked but not all stopped: a barrier
-                    // deadlock would have been resolved below, so this
-                    // indicates a kernel bug.
-                    return Err(Error::Coordinator(format!(
-                        "DPU {}: deadlock — all tasklets blocked, {stopped}/{nr_tasklets} stopped",
-                        self.id
-                    )));
+        'outer: while stopped < nr_tasklets {
+            // ---- batched path: whole rotations without the scheduler ----
+            if cooldown == 0 && self.batch_rotations {
+                if let Some(mut rot_start) = steady_rotation(&sched, ring) {
+                    let rot_step = (ring.len() as u64).max(ISSUE_INTERVAL);
+                    loop {
+                        for (k, &t) in ring.iter().enumerate() {
+                            let cycle = rot_start + k as u64;
+                            sched.commit_issue(t, cycle);
+                            if sched.now > self.cycle_limit {
+                                return Err(fault(FaultKind::CycleLimit, t, ts[t].pc, self.id));
+                            }
+                            let pc = ts[t].pc;
+                            let Some(&instr) = instrs.get(pc as usize) else {
+                                return Err(fault(FaultKind::PcOutOfBounds, t, pc, self.id));
+                            };
+                            res.instrs += 1;
+                            let step = exec_one(
+                                &mut self.wram,
+                                &mut self.mram,
+                                instr,
+                                &mut ts[t],
+                                pc,
+                                sched.now,
+                                dma_buf,
+                                &mut res,
+                            )
+                            .map_err(|k| fault(k, t, pc, self.id))?;
+                            if !matches!(step, Step::Next) {
+                                // Scheduler is synchronized (commit_issue
+                                // above); apply the event and re-detect.
+                                apply_event(
+                                    step,
+                                    t,
+                                    &mut sched,
+                                    ts,
+                                    &mut at_barrier,
+                                    &mut stopped,
+                                    nr_tasklets,
+                                );
+                                continue 'outer;
+                            }
+                        }
+                        rot_start += rot_step;
+                    }
                 }
+                cooldown = 2 * nr_tasklets;
+            }
+
+            // ---- stepped path: one instruction via the scheduler ----
+            let Some(t) = sched.next_issue() else {
+                // Everyone blocked but not all stopped: a barrier
+                // deadlock would have been resolved above, so this
+                // indicates a kernel bug.
+                return Err(Error::Coordinator(format!(
+                    "DPU {}: deadlock — all tasklets blocked, {stopped}/{nr_tasklets} stopped",
+                    self.id
+                )));
             };
             if sched.now > self.cycle_limit {
                 return Err(fault(FaultKind::CycleLimit, t, ts[t].pc, self.id));
@@ -128,177 +491,26 @@ impl Dpu {
                 return Err(fault(FaultKind::PcOutOfBounds, t, pc, self.id));
             };
             res.instrs += 1;
-            let tk = &mut ts[t];
-            let mut next_pc = pc + 1;
-
-            #[inline]
-            fn cond_jump(cj: CondJump, result: u32, next_pc: &mut u32) {
-                if let Some((c, target)) = cj {
-                    if c.eval(result) {
-                        *next_pc = target;
-                    }
+            let step = exec_one(
+                &mut self.wram,
+                &mut self.mram,
+                instr,
+                &mut ts[t],
+                pc,
+                sched.now,
+                dma_buf,
+                &mut res,
+            )
+            .map_err(|k| fault(k, t, pc, self.id))?;
+            match step {
+                Step::Next => cooldown = cooldown.saturating_sub(1),
+                ev => {
+                    apply_event(ev, t, &mut sched, ts, &mut at_barrier, &mut stopped, nr_tasklets);
+                    // Events often restore steadiness (barrier release
+                    // wakes everyone at the same cycle) — re-check.
+                    cooldown = 0;
                 }
             }
-
-            match instr {
-                Instr::Move { rd, src, cj } => {
-                    let v = tk.src(src);
-                    tk.set(rd, v);
-                    cond_jump(cj, v, &mut next_pc);
-                }
-                Instr::Alu { op, rd, ra, b, cj } => {
-                    let v = op.eval(tk.get(ra), tk.src(b));
-                    tk.set(rd, v);
-                    cond_jump(cj, v, &mut next_pc);
-                }
-                Instr::Mul { variant, rd, ra, b, cj } => {
-                    let v = variant.eval(tk.get(ra), tk.src(b));
-                    tk.set(rd, v);
-                    cond_jump(cj, v, &mut next_pc);
-                }
-                Instr::MulStep { dd, ra, shift, cj } => {
-                    let (mut lo, mut hi) = tk.get_d(dd);
-                    if lo & 1 != 0 {
-                        hi = hi.wrapping_add(tk.get(ra) << shift);
-                    }
-                    lo >>= 1;
-                    tk.set_d(dd, lo, hi);
-                    cond_jump(cj, lo, &mut next_pc);
-                }
-                Instr::LslAdd { rd, ra, rb, shift, cj } => {
-                    let v = tk.get(ra).wrapping_add(tk.get(rb) << shift);
-                    tk.set(rd, v);
-                    cond_jump(cj, v, &mut next_pc);
-                }
-                Instr::Cao { rd, ra, cj } => {
-                    let v = tk.get(ra).count_ones();
-                    tk.set(rd, v);
-                    cond_jump(cj, v, &mut next_pc);
-                }
-                Instr::Load { w, rd, ra, off } => {
-                    let addr = tk.get(ra).wrapping_add(off as u32);
-                    let v = match w {
-                        LoadWidth::B8s => self.wram.load8(addr).map(|b| b as i8 as i32 as u32),
-                        LoadWidth::B8u => self.wram.load8(addr).map(|b| b as u32),
-                        LoadWidth::B16s => self.wram.load16(addr).map(|h| h as i16 as i32 as u32),
-                        LoadWidth::B16u => self.wram.load16(addr).map(|h| h as u32),
-                        LoadWidth::B32 => self.wram.load32(addr),
-                    }
-                    .map_err(|k| fault(k, t, pc, self.id))?;
-                    tk.set(rd, v);
-                }
-                Instr::Ld { dd, ra, off } => {
-                    let addr = tk.get(ra).wrapping_add(off as u32);
-                    let v = self.wram.load64(addr).map_err(|k| fault(k, t, pc, self.id))?;
-                    tk.set_d(dd, v as u32, (v >> 32) as u32);
-                }
-                Instr::Store { w, ra, off, rs } => {
-                    let addr = tk.get(ra).wrapping_add(off as u32);
-                    let v = tk.get(rs);
-                    match w {
-                        StoreWidth::B8 => self.wram.store8(addr, v as u8),
-                        StoreWidth::B16 => self.wram.store16(addr, v as u16),
-                        StoreWidth::B32 => self.wram.store32(addr, v),
-                    }
-                    .map_err(|k| fault(k, t, pc, self.id))?;
-                }
-                Instr::Sd { ra, off, ds } => {
-                    let addr = tk.get(ra).wrapping_add(off as u32);
-                    let (lo, hi) = tk.get_d(ds);
-                    let v = (hi as u64) << 32 | lo as u64;
-                    self.wram.store64(addr, v).map_err(|k| fault(k, t, pc, self.id))?;
-                }
-                Instr::Jump { target } => {
-                    next_pc = match target {
-                        JumpTarget::Pc(p) => p,
-                        JumpTarget::Reg(r) => tk.get(r),
-                    };
-                }
-                Instr::JCmp { cond, ra, b, target } => {
-                    if cond.eval(tk.get(ra), tk.src(b)) {
-                        next_pc = target;
-                    }
-                }
-                Instr::Call { link, target } => {
-                    tk.set(link, pc + 1);
-                    next_pc = target;
-                }
-                Instr::Ldma { wram, mram, bytes } => {
-                    let waddr = tk.get(wram);
-                    let maddr = tk.get(mram);
-                    let cycles =
-                        dma_cycles(waddr, maddr, bytes).map_err(|k| fault(k, t, pc, self.id))?;
-                    dma_buf.clear();
-                    dma_buf.resize(bytes as usize, 0);
-                    self.mram.read(maddr, &mut dma_buf).map_err(|k| fault(k, t, pc, self.id))?;
-                    self.wram
-                        .write_bytes(waddr, &dma_buf)
-                        .map_err(|k| fault(k, t, pc, self.id))?;
-                    res.dma_read_bytes += bytes as u64;
-                    sched.stall(t, cycles);
-                }
-                Instr::Sdma { wram, mram, bytes } => {
-                    let waddr = tk.get(wram);
-                    let maddr = tk.get(mram);
-                    let cycles =
-                        dma_cycles(waddr, maddr, bytes).map_err(|k| fault(k, t, pc, self.id))?;
-                    dma_buf.clear();
-                    dma_buf.resize(bytes as usize, 0);
-                    self.wram
-                        .read_bytes(waddr, &mut dma_buf)
-                        .map_err(|k| fault(k, t, pc, self.id))?;
-                    self.mram.write(maddr, &dma_buf).map_err(|k| fault(k, t, pc, self.id))?;
-                    res.dma_write_bytes += bytes as u64;
-                    sched.stall(t, cycles);
-                }
-                Instr::Barrier => {
-                    tk.at_barrier = true;
-                    at_barrier += 1;
-                    sched.block(t);
-                    // Release once every still-running tasklet arrived.
-                    if at_barrier == nr_tasklets - stopped {
-                        let now = sched.now;
-                        for (i, other) in ts.iter_mut().enumerate() {
-                            if other.at_barrier {
-                                other.at_barrier = false;
-                                other.pc += 1; // fall through the barrier
-                                sched.wake(i, now);
-                            }
-                        }
-                        at_barrier = 0;
-                        continue; // pc already advanced for all waiters
-                    } else {
-                        // Parked: pc advanced on release above.
-                        continue;
-                    }
-                }
-                Instr::Time { rd } => {
-                    tk.set(rd, sched.now as u32);
-                }
-                Instr::Stop => {
-                    tk.stopped = true;
-                    stopped += 1;
-                    sched.block(t);
-                    // A stop may release a barrier the rest is waiting on.
-                    if at_barrier > 0 && at_barrier == nr_tasklets - stopped {
-                        let now = sched.now;
-                        for (i, other) in ts.iter_mut().enumerate() {
-                            if other.at_barrier {
-                                other.at_barrier = false;
-                                other.pc += 1;
-                                sched.wake(i, now);
-                            }
-                        }
-                        at_barrier = 0;
-                    }
-                    continue;
-                }
-                Instr::Fault => {
-                    return Err(fault(FaultKind::Explicit, t, pc, self.id));
-                }
-                Instr::Nop => {}
-            }
-            ts[t].pc = next_pc;
         }
         res.cycles = sched.now;
         Ok(res)
@@ -555,5 +767,108 @@ mod tests {
         let prog = Program { instrs: vec![Instr::Nop; 5000], ..Program::default() };
         let mut dpu = Dpu::new();
         assert!(matches!(dpu.load_program(&prog), Err(Error::IramOverflow { .. })));
+    }
+
+    // ---- batched vs stepped path differential coverage -------------------
+
+    /// Programs that exercise every scheduling shape: pure ALU rotations,
+    /// DMA stagger, barriers, early stops, calls, conditional jumps.
+    const DIFF_PROGRAMS: &[(&str, &[usize])] = &[
+        (
+            // ALU loop, length varies per tasklet id (staggered stops).
+            "move r0, id\n\
+             add r0, r0, 20\n\
+             loop:\n\
+             sub r0, r0, 1\n\
+             jneq r0, 0, @loop\n\
+             move r1, id4\n\
+             sw r1, 0, r0\n\
+             stop\n",
+            &[1, 2, 5, 8, 11, 16],
+        ),
+        (
+            // DMA per tasklet (distinct blocks), then a barrier, then
+            // more compute — covers stall divergence and re-steadying.
+            "move r0, id8\n\
+             lsl r0, r0, 4\n\
+             add r0, r0, 256\n\
+             move r1, id8\n\
+             lsl r1, r1, 4\n\
+             add r1, r1, 4096\n\
+             ldma r0, r1, 128\n\
+             barrier\n\
+             move r2, 0\n\
+             spin:\n\
+             add r2, r2, 1\n\
+             jltu r2, 30, @spin\n\
+             sdma r0, r1, 128\n\
+             stop\n",
+            &[1, 3, 8, 16],
+        ),
+        (
+            // Call-heavy with per-id iteration counts.
+            "move r0, id\n\
+             add r0, r0, 3\n\
+             move r2, 0\n\
+             loop:\n\
+             call r23, @bump\n\
+             sub r0, r0, 1\n\
+             jneq r0, 0, @loop\n\
+             move r3, id4\n\
+             add r3, r3, 64\n\
+             sw r3, 0, r2\n\
+             stop\n\
+             bump:\n\
+             add r2, r2, 2\n\
+             jump r23\n",
+            &[2, 7, 11, 16],
+        ),
+    ];
+
+    #[test]
+    fn batched_path_matches_stepped_path() {
+        for (src, tasklet_counts) in DIFF_PROGRAMS {
+            let prog = assemble(src).expect("assembles");
+            for &t in tasklet_counts.iter() {
+                let mut fast = Dpu::new();
+                fast.load_program(&prog).unwrap();
+                fast.mram.write(4096, &[0xA5; 4096]).unwrap();
+                let rf = fast.launch(t).expect("batched run");
+
+                let mut slow = Dpu::new();
+                slow.batch_rotations = false;
+                slow.load_program(&prog).unwrap();
+                slow.mram.write(4096, &[0xA5; 4096]).unwrap();
+                let rs = slow.launch(t).expect("stepped run");
+
+                assert_eq!(rf, rs, "LaunchResult diverged: {t} tasklets on {src:?}");
+                assert_eq!(
+                    fast.wram.as_slice(),
+                    slow.wram.as_slice(),
+                    "WRAM diverged: {t} tasklets"
+                );
+                let mut mf = vec![0u8; 4096];
+                let mut ms = vec![0u8; 4096];
+                fast.mram.read(4096, &mut mf).unwrap();
+                slow.mram.read(4096, &mut ms).unwrap();
+                assert_eq!(mf, ms, "MRAM diverged: {t} tasklets");
+            }
+        }
+    }
+
+    #[test]
+    fn launch_scratch_is_reusable_across_launches() {
+        let prog = assemble(DIFF_PROGRAMS[1].0).unwrap();
+        let mut dpu = Dpu::new();
+        dpu.load_program(&prog).unwrap();
+        let mut scratch = LaunchScratch::default();
+        let first = dpu.launch_with(8, &mut scratch).unwrap();
+        for _ in 0..3 {
+            let again = dpu.launch_with(8, &mut scratch).unwrap();
+            assert_eq!(first, again, "reused scratch must not leak state");
+        }
+        // And across tasklet counts.
+        let r16 = dpu.launch_with(16, &mut scratch).unwrap();
+        assert!(r16.instrs > first.instrs);
     }
 }

@@ -40,7 +40,7 @@ pub mod tasklet;
 
 pub use asm::assemble;
 pub use builder::ProgramBuilder;
-pub use interp::{Dpu, LaunchResult};
+pub use interp::{Dpu, LaunchResult, LaunchScratch};
 pub use isa::{Cond, Instr, Program, Reg, Src};
 pub use symbol::{MemSpace, Symbol, SymbolTable, SymbolValue};
 

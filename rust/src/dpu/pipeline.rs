@@ -111,6 +111,33 @@ impl Scheduler {
         unreachable!("min_ready ≤ now implies a ready tasklet exists");
     }
 
+    /// Record an issue performed by the interpreter's batched rotation
+    /// path ([`crate::dpu::interp`], §Perf iteration 4): identical
+    /// post-state to [`Scheduler::next_issue`] returning `t` at `cycle`,
+    /// without the dispatch scan — the batched loop has already proven
+    /// (via its steady-state check) that `t` is the tasklet the scan
+    /// would pick.
+    #[inline]
+    pub fn commit_issue(&mut self, t: usize, cycle: u64) {
+        self.ready_at[t] = cycle + ISSUE_INTERVAL;
+        self.rr_next = t + 1;
+        self.now = cycle + 1;
+    }
+
+    /// Earliest cycle at which tasklet `t` may issue ([`BLOCKED`] when
+    /// stopped or parked).
+    #[inline]
+    pub fn ready_at(&self, t: usize) -> u64 {
+        self.ready_at[t]
+    }
+
+    /// Start index of the dispatcher's circular scan (the round-robin
+    /// successor of the last issued tasklet, wrapped).
+    #[inline]
+    pub fn rr_start(&self) -> usize {
+        self.rr_next % self.nr_tasklets
+    }
+
     /// Add extra stall cycles to the issuing tasklet (DMA duration…).
     /// Must be called right after `next_issue` returned `t`.
     pub fn stall(&mut self, t: usize, extra: u64) {
@@ -238,5 +265,24 @@ mod tests {
     #[should_panic]
     fn zero_tasklets_rejected() {
         let _ = Scheduler::new(0);
+    }
+
+    #[test]
+    fn commit_issue_mirrors_next_issue() {
+        // Driving one scheduler through next_issue and mirroring each
+        // pick into a second via commit_issue must keep them in
+        // lock-step — the contract the batched interpreter relies on.
+        let mut stepped = Scheduler::new(5);
+        let mut committed = Scheduler::new(5);
+        for _ in 0..50 {
+            let t = stepped.next_issue().unwrap();
+            let cycle = stepped.now - 1; // next_issue advances past the issue
+            committed.commit_issue(t, cycle);
+            assert_eq!(stepped.now, committed.now);
+            assert_eq!(stepped.rr_start(), committed.rr_start());
+            for i in 0..5 {
+                assert_eq!(stepped.ready_at(i), committed.ready_at(i));
+            }
+        }
     }
 }

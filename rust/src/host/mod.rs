@@ -38,13 +38,14 @@ pub mod xfer;
 use crate::alloc::{BaselineAllocator, NumaAwareAllocator, RankSet};
 use crate::dpu::isa::Program;
 use crate::dpu::symbol::{MemSpace, Symbol, SymbolValue};
-use crate::dpu::{Dpu, LaunchResult};
+use crate::dpu::{Dpu, LaunchResult, LaunchScratch};
 use crate::transfer::model::BufferPlacement;
 use crate::transfer::queue::{RankQueues, Resource};
 use crate::transfer::topology::{DpuId, SystemTopology, TOTAL_DPUS, TOTAL_RANKS};
 use crate::transfer::{Direction, TransferEngine, TransferReport};
 use crate::util::error::FaultKind;
 use crate::Result;
+use std::sync::Arc;
 
 pub use xfer::{as_bytes_i8, PullPlan, XferPlan};
 
@@ -116,6 +117,13 @@ impl LaunchHandle {
     pub fn peek(&self) -> &FleetLaunch {
         &self.fleet
     }
+
+    /// Consume the handle and take its results without advancing the
+    /// host clock (the caller tracks modeled completion via `end_s`,
+    /// like the coordinator's pipelined drain does).
+    pub fn into_fleet(self) -> FleetLaunch {
+        self.fleet
+    }
 }
 
 /// The host-side system object.
@@ -124,10 +132,31 @@ pub struct PimSystem {
     allocator: AllocatorImpl,
     dpus: Vec<Option<Box<Dpu>>>,
     queues: RankQueues,
+    /// Worker threads driving fleet launches (DPUs share no mutable
+    /// state, so the fleet is embarrassingly parallel). Default:
+    /// `PIM_LAUNCH_WORKERS` env var, else the host's available
+    /// parallelism; results are bit-identical at every setting.
+    launch_workers: usize,
+    /// Per-worker interpreter scratch, reused across launches.
+    scratch: Vec<LaunchScratch>,
+    /// Recycled `FleetLaunch::per_dpu` buffers (steady-state serving
+    /// reallocates nothing per batch; see [`PimSystem::recycle_launch`]).
+    result_pool: Vec<Vec<LaunchResult>>,
 }
 
 fn host_err(id: DpuId, addr: u32) -> impl Fn(FaultKind) -> crate::Error {
     move |kind| crate::Error::HostAccess { dpu: id, addr, kind }
+}
+
+/// Worker-thread default: `PIM_LAUNCH_WORKERS` if set (≥ 1), else the
+/// host's available parallelism.
+fn default_launch_workers() -> usize {
+    if let Ok(v) = std::env::var("PIM_LAUNCH_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 impl PimSystem {
@@ -142,7 +171,29 @@ impl PimSystem {
         };
         let mut dpus = Vec::with_capacity(TOTAL_DPUS);
         dpus.resize_with(TOTAL_DPUS, || None);
-        PimSystem { engine, allocator, dpus, queues: RankQueues::new(TOTAL_RANKS) }
+        PimSystem {
+            engine,
+            allocator,
+            dpus,
+            queues: RankQueues::new(TOTAL_RANKS),
+            launch_workers: default_launch_workers(),
+            scratch: Vec::new(),
+            result_pool: Vec::new(),
+        }
+    }
+
+    /// Pin the number of worker threads used by fleet launches. `1`
+    /// runs the fleet fully serially on the calling thread — the
+    /// setting for single-stepping a simulator bug under a debugger;
+    /// any other value changes wall-clock only, never results (pinned
+    /// by `rust/tests/parallel_determinism.rs`).
+    pub fn set_launch_workers(&mut self, n: usize) {
+        self.launch_workers = n.max(1);
+    }
+
+    /// Current fleet-launch worker-thread count.
+    pub fn launch_workers(&self) -> usize {
+        self.launch_workers
     }
 
     /// The paper's server with the paper's policy choice.
@@ -213,10 +264,13 @@ impl PimSystem {
     }
 
     /// Load a kernel onto every DPU of the set (the SDK's
-    /// `dpu_load`). Fails on IRAM overflow.
+    /// `dpu_load`). The instruction stream is decoded once and shared
+    /// `Arc`'d fleet-wide — loading onto the paper's 2551 usable DPUs
+    /// no longer clones the program 2551 times. Fails on IRAM overflow.
     pub fn load_program(&mut self, set: &DpuSet, program: &Program) -> Result<()> {
+        let shared = Arc::new(program.clone());
         for &id in &set.dpus {
-            self.dpu_mut(id).load_program(program)?;
+            self.dpu_mut(id).load_program_shared(Arc::clone(&shared))?;
         }
         Ok(())
     }
@@ -433,19 +487,18 @@ impl PimSystem {
     /// after the transfer that feeds it (0.0 for none). Transfers
     /// issued while the launch is in flight overlap with it — the
     /// double-buffered pipelining the coordinator uses.
+    ///
+    /// Execution is multithreaded across the fleet (see
+    /// [`PimSystem::set_launch_workers`]); results, modeled `seconds`
+    /// and the winning fault are bit-identical to a serial run.
     pub fn launch_async(
         &mut self,
         set: &DpuSet,
         nr_tasklets: usize,
         after_s: f64,
     ) -> Result<LaunchHandle> {
-        let mut per_dpu = Vec::with_capacity(set.dpus.len());
-        let mut max_cycles = 0u64;
-        for &id in &set.dpus {
-            let r = self.dpu_mut(id).launch(nr_tasklets)?;
-            max_cycles = max_cycles.max(r.cycles);
-            per_dpu.push(r);
-        }
+        let per_dpu = self.run_fleet(set, nr_tasklets)?;
+        let max_cycles = per_dpu.iter().map(|r| r.cycles).max().unwrap_or(0);
         let seconds = max_cycles as f64 / crate::dpu::CLOCK_HZ as f64;
         let (start_s, end_s) =
             self.queues.reserve(&set.ranks.ranks, Resource::Compute, after_s, seconds);
@@ -454,6 +507,101 @@ impl PimSystem {
             start_s,
             end_s,
         })
+    }
+
+    /// Execute every DPU of the set to completion, in parallel across
+    /// the configured worker threads. The whole fleet always runs
+    /// (hardware DPUs do not stop because a sibling faulted), results
+    /// are merged in set order, and the reported error is the first
+    /// faulting DPU *in set order* — independent of thread
+    /// interleaving.
+    fn run_fleet(&mut self, set: &DpuSet, nr_tasklets: usize) -> Result<Vec<LaunchResult>> {
+        let n = set.dpus.len();
+        let mut out = self.result_pool.pop().unwrap_or_default();
+        out.clear();
+        out.reserve(n);
+        if n == 0 {
+            return Ok(out);
+        }
+        // Materialize up front: lazy slot insertion is not thread-safe,
+        // and the serial path should do identical work.
+        for &id in &set.dpus {
+            let _ = self.dpu_mut(id);
+        }
+        let workers = self.launch_workers.min(n);
+        if self.scratch.len() < workers {
+            self.scratch.resize_with(workers, LaunchScratch::default);
+        }
+        let mut first_err: Option<crate::Error> = None;
+        if workers <= 1 {
+            let scratch = &mut self.scratch[0];
+            for &id in &set.dpus {
+                let dpu = self.dpus[id].as_mut().expect("materialized above");
+                match dpu.launch_with(nr_tasklets, scratch) {
+                    Ok(r) => out.push(r),
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                        out.push(LaunchResult::default());
+                    }
+                }
+            }
+        } else {
+            // Pull each DPU out of its slot so worker threads own their
+            // chunks outright, then reinstall and merge in set order.
+            let mut units: Vec<(DpuId, Box<Dpu>)> = set
+                .dpus
+                .iter()
+                .map(|&id| (id, self.dpus[id].take().expect("materialized above")))
+                .collect();
+            let mut results: Vec<Result<LaunchResult>> = Vec::with_capacity(n);
+            results.resize_with(n, || Ok(LaunchResult::default()));
+            let per_worker = n.div_ceil(workers);
+            std::thread::scope(|s| {
+                for ((unit_chunk, result_chunk), scratch) in units
+                    .chunks_mut(per_worker)
+                    .zip(results.chunks_mut(per_worker))
+                    .zip(self.scratch.iter_mut())
+                {
+                    s.spawn(move || {
+                        for ((_, dpu), slot) in
+                            unit_chunk.iter_mut().zip(result_chunk.iter_mut())
+                        {
+                            *slot = dpu.launch_with(nr_tasklets, scratch);
+                        }
+                    });
+                }
+            });
+            for (id, dpu) in units {
+                self.dpus[id] = Some(dpu);
+            }
+            for r in results {
+                match r {
+                    Ok(l) => out.push(l),
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                        out.push(LaunchResult::default());
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            self.result_pool.push(out);
+            return Err(e);
+        }
+        Ok(out)
+    }
+
+    /// Return a finished launch's per-DPU result buffer to the pool so
+    /// steady-state callers (the serving coordinator) stop reallocating
+    /// one `Vec<LaunchResult>` per batch.
+    pub fn recycle_launch(&mut self, fleet: FleetLaunch) {
+        if self.result_pool.len() < 4 {
+            self.result_pool.push(fleet.per_dpu);
+        }
     }
 
     /// Block the modeled clock until an async launch completes
@@ -702,6 +850,51 @@ mod tests {
         // `stale` aliases ranks that are partly free and partly
         // re-allocated; freeing it again must fail loudly.
         assert!(matches!(sys.free(stale), Err(crate::Error::Alloc(_))));
+    }
+
+    #[test]
+    fn worker_count_changes_wall_clock_only() {
+        // Same fleet, 1 vs 3 workers: per-DPU results, modeled seconds
+        // and max_cycles must be bit-identical (the full matrix lives in
+        // rust/tests/parallel_determinism.rs).
+        let prog = assemble(
+            "move r0, id\n\
+             add r0, r0, 9\n\
+             loop:\n\
+             sub r0, r0, 1\n\
+             jneq r0, 0, @loop\n\
+             move r1, id4\n\
+             sw r1, 0, r1\n\
+             stop\n",
+        )
+        .unwrap();
+        let run = |workers: usize| {
+            let mut sys = numa_system();
+            sys.set_launch_workers(workers);
+            assert_eq!(sys.launch_workers(), workers);
+            let set = sys.alloc_ranks(2).unwrap();
+            sys.load_program(&set, &prog).unwrap();
+            sys.launch(&set, 8).unwrap()
+        };
+        let serial = run(1);
+        let parallel = run(3);
+        assert_eq!(serial.per_dpu, parallel.per_dpu);
+        assert_eq!(serial.max_cycles, parallel.max_cycles);
+        assert!((serial.seconds - parallel.seconds).abs() == 0.0);
+    }
+
+    #[test]
+    fn recycled_launch_buffers_are_reused() {
+        let mut sys = numa_system();
+        let set = sys.alloc_ranks(2).unwrap();
+        let prog = assemble("move r0, 1\nstop\n").unwrap();
+        sys.load_program(&set, &prog).unwrap();
+        let a = sys.launch(&set, 4).unwrap();
+        let cap = a.per_dpu.capacity();
+        sys.recycle_launch(a);
+        let b = sys.launch(&set, 4).unwrap();
+        assert_eq!(b.per_dpu.len(), set.nr_dpus());
+        assert!(b.per_dpu.capacity() >= cap, "pooled buffer should be reused");
     }
 
     #[test]

@@ -32,7 +32,7 @@ use super::mulsi3::emit_mulsi3;
 use super::{BLOCK_BYTES, BUF_BASE, CYCLES_BASE, MRAM_A};
 use crate::dpu::builder::{Label, ProgramBuilder};
 use crate::dpu::isa::{CmpCond, MulVariant, Program, Reg, Src};
-use crate::dpu::{Dpu, LaunchResult};
+use crate::dpu::LaunchResult;
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -445,8 +445,24 @@ pub struct MicrobenchOutcome {
 /// Build, load, execute and *verify* one microbenchmark configuration.
 ///
 /// `total_bytes` must be a multiple of the 1 KB block size; tasklets
-/// share blocks round-robin, so any tasklet count works.
+/// share blocks round-robin, so any tasklet count works. Allocates
+/// fresh per-run state; repetition-heavy drivers keep a
+/// [`super::KernelScratch`] and call [`run_microbench_with`].
 pub fn run_microbench(
+    spec: Spec,
+    nr_tasklets: usize,
+    total_bytes: u32,
+    seed: u64,
+) -> Result<MicrobenchOutcome> {
+    run_microbench_with(&mut super::KernelScratch::default(), spec, nr_tasklets, total_bytes, seed)
+}
+
+/// [`run_microbench`] over caller-owned reusable state: the simulated
+/// DPU, interpreter scratch and verify buffer live in `scr` across
+/// repetitions (§Perf iteration 5 — the bench loop no longer pays a
+/// 64 KB WRAM + MRAM + scratch allocation per measured point).
+pub fn run_microbench_with(
+    scr: &mut super::KernelScratch,
     spec: Spec,
     nr_tasklets: usize,
     total_bytes: u32,
@@ -454,8 +470,10 @@ pub fn run_microbench(
 ) -> Result<MicrobenchOutcome> {
     assert_eq!(total_bytes % BLOCK_BYTES, 0, "buffer must be whole blocks");
     let program = emit_microbench(spec)?;
-    let mut dpu = Dpu::new();
-    dpu.load_program(&program)?;
+    scr.dpu.load_program(&program)?;
+    let host_err =
+        |id: usize| move |k| crate::Error::HostAccess { dpu: id, addr: MRAM_A, kind: k };
+    let id = scr.dpu.id;
 
     // Stage random input in MRAM and compute the expected result.
     let mut rng = Rng::new(seed);
@@ -464,9 +482,10 @@ pub fn run_microbench(
     let expected: Vec<u8> = match spec.dtype {
         DType::I8 => {
             let input = rng.i8_vec(n_elems);
-            dpu.mram
+            scr.dpu
+                .mram
                 .write(MRAM_A, &input.iter().map(|&v| v as u8).collect::<Vec<_>>())
-                .map_err(|k| crate::Error::HostAccess { dpu: dpu.id, addr: MRAM_A, kind: k })?;
+                .map_err(host_err(id))?;
             input
                 .iter()
                 .map(|&v| match spec.op {
@@ -477,9 +496,7 @@ pub fn run_microbench(
         }
         DType::I32 => {
             let input = rng.i32_vec(n_elems);
-            dpu.mram
-                .write_i32_slice(MRAM_A, &input)
-                .map_err(|k| crate::Error::HostAccess { dpu: dpu.id, addr: MRAM_A, kind: k })?;
+            scr.dpu.mram.write_i32_slice(MRAM_A, &input).map_err(host_err(id))?;
             input
                 .iter()
                 .flat_map(|&v| {
@@ -494,29 +511,28 @@ pub fn run_microbench(
     };
 
     // Host args.
-    let mut wr = |a: u32, v: u32| dpu.wram.store32(a, v).expect("args");
+    let mut wr = |a: u32, v: u32| scr.dpu.wram.store32(a, v).expect("args");
     wr(0, total_bytes);
     wr(4, scalar as u32);
     wr(8, nr_tasklets as u32 * BLOCK_BYTES);
 
-    let launch = dpu.launch(nr_tasklets)?;
+    let launch = scr.dpu.launch_with(nr_tasklets, &mut scr.launch)?;
 
-    // Verify every element.
-    let mut got = vec![0u8; total_bytes as usize];
-    dpu.mram
-        .read(MRAM_A, &mut got)
-        .map_err(|k| crate::Error::HostAccess { dpu: dpu.id, addr: MRAM_A, kind: k })?;
-    if got != expected {
-        let first = got.iter().zip(&expected).position(|(a, b)| a != b).unwrap();
+    // Verify every element through the reused staging buffer (no
+    // zero-fill: `mram.read` overwrites the full slice).
+    scr.buf.resize(total_bytes as usize, 0);
+    scr.dpu.mram.read(MRAM_A, &mut scr.buf).map_err(host_err(id))?;
+    if scr.buf != expected {
+        let first = scr.buf.iter().zip(&expected).position(|(a, b)| a != b).unwrap();
         return Err(crate::Error::Coordinator(format!(
             "{}: output mismatch at byte {first}: got {} want {}",
             spec.name(),
-            got[first],
+            scr.buf[first],
             expected[first]
         )));
     }
 
-    let tasklet_cycles = super::read_tasklet_cycles(&dpu, nr_tasklets);
+    let tasklet_cycles = super::read_tasklet_cycles(&scr.dpu, nr_tasklets);
     let mops = super::mops(n_elems as u64, &tasklet_cycles);
     Ok(MicrobenchOutcome {
         spec,
@@ -531,6 +547,7 @@ pub fn run_microbench(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dpu::Dpu;
 
     const TEST_BYTES: u32 = 16 * 1024; // 16 blocks — fast but multi-block
 
@@ -558,6 +575,24 @@ mod tests {
                     .unwrap_or_else(|e| panic!("{}: {e}", s.with_unroll(u).name()));
             }
         }
+    }
+
+    #[test]
+    fn reused_scratch_matches_fresh_state() {
+        // A KernelScratch carried across different specs must not leak
+        // state into later runs (MRAM persistence is restaged, WRAM args
+        // rewritten, interpreter scratch cleared).
+        let mut scr = crate::kernels::KernelScratch::default();
+        let first =
+            run_microbench_with(&mut scr, Spec::add(DType::I8), 8, TEST_BYTES, 42).unwrap();
+        run_microbench_with(&mut scr, Spec::mul(DType::I8, MulImpl::NativeX8), 16, TEST_BYTES, 7)
+            .unwrap();
+        let again =
+            run_microbench_with(&mut scr, Spec::add(DType::I8), 8, TEST_BYTES, 42).unwrap();
+        assert_eq!(first.launch, again.launch);
+        assert_eq!(first.tasklet_cycles, again.tasklet_cycles);
+        let fresh = run_microbench(Spec::add(DType::I8), 8, TEST_BYTES, 42).unwrap();
+        assert_eq!(first.launch, fresh.launch);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use super::mulsi3::emit_mulsi3;
 use super::{AUX_BASE, BUF_BASE, CYCLES_BASE, MRAM_A, MRAM_B};
 use crate::dpu::builder::{Label, ProgramBuilder};
 use crate::dpu::isa::{CmpCond, MulVariant, Program, Reg, Src};
-use crate::dpu::{Dpu, LaunchResult};
+use crate::dpu::LaunchResult;
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -263,7 +263,21 @@ pub struct DotOutcome {
 
 /// Run the Fig. 9 microbenchmark for `variant` over `elems` signed INT4
 /// elements; verifies the dot product against the host reference.
+/// Allocates fresh per-run state; repetition-heavy drivers keep a
+/// [`super::KernelScratch`] and call [`run_dot_microbench_with`].
 pub fn run_dot_microbench(
+    variant: DotVariant,
+    nr_tasklets: usize,
+    elems: usize,
+    seed: u64,
+) -> Result<DotOutcome> {
+    run_dot_microbench_with(&mut super::KernelScratch::default(), variant, nr_tasklets, elems, seed)
+}
+
+/// [`run_dot_microbench`] over caller-owned reusable state (§Perf
+/// iteration 5: no per-repetition DPU/scratch allocation).
+pub fn run_dot_microbench_with(
+    scr: &mut super::KernelScratch,
     variant: DotVariant,
     nr_tasklets: usize,
     elems: usize,
@@ -271,41 +285,40 @@ pub fn run_dot_microbench(
 ) -> Result<DotOutcome> {
     assert_eq!(elems % 2048, 0, "elems must be a multiple of 2048 (1 KB A-chunks)");
     let program = emit_dot_microbench(variant)?;
-    let mut dpu = Dpu::new();
-    dpu.load_program(&program)?;
+    scr.dpu.load_program(&program)?;
 
     let mut rng = Rng::new(seed);
     let a = rng.i4_vec(elems);
     let b = rng.i4_vec(elems);
     let expected = super::encode::dot_i4_ref(&a, &b);
 
-    let id = dpu.id;
+    let id = scr.dpu.id;
     let mram_err = |addr: u32| move |k| crate::Error::HostAccess { dpu: id, addr, kind: k };
     let a_bytes = match variant {
         DotVariant::Bsdp => {
             let planes = super::encode::bitplane_encode_i4(&a);
-            dpu.mram.write_u32_slice(MRAM_A, &planes).map_err(mram_err(MRAM_A))?;
+            scr.dpu.mram.write_u32_slice(MRAM_A, &planes).map_err(mram_err(MRAM_A))?;
             let planes_b = super::encode::bitplane_encode_i4(&b);
-            dpu.mram.write_u32_slice(MRAM_B, &planes_b).map_err(mram_err(MRAM_B))?;
+            scr.dpu.mram.write_u32_slice(MRAM_B, &planes_b).map_err(mram_err(MRAM_B))?;
             (elems / 2) as u32
         }
         _ => {
             let raw_a: Vec<u8> = a.iter().map(|&v| v as u8).collect();
             let raw_b: Vec<u8> = b.iter().map(|&v| v as u8).collect();
-            dpu.mram.write(MRAM_A, &raw_a).map_err(mram_err(MRAM_A))?;
-            dpu.mram.write(MRAM_B, &raw_b).map_err(mram_err(MRAM_B))?;
+            scr.dpu.mram.write(MRAM_A, &raw_a).map_err(mram_err(MRAM_A))?;
+            scr.dpu.mram.write(MRAM_B, &raw_b).map_err(mram_err(MRAM_B))?;
             elems as u32
         }
     };
 
-    dpu.wram.store32(0, a_bytes).unwrap();
-    dpu.wram.store32(8, nr_tasklets as u32 * CHUNK).unwrap();
-    let launch = dpu.launch(nr_tasklets)?;
+    scr.dpu.wram.store32(0, a_bytes).unwrap();
+    scr.dpu.wram.store32(8, nr_tasklets as u32 * CHUNK).unwrap();
+    let launch = scr.dpu.launch_with(nr_tasklets, &mut scr.launch)?;
 
     // Sum per-tasklet partials (wrapping, like the DPU accumulators).
     let mut dot = 0i32;
     for t in 0..nr_tasklets {
-        dot = dot.wrapping_add(dpu.wram.load32(AUX_BASE + 4 * t as u32).unwrap() as i32);
+        dot = dot.wrapping_add(scr.dpu.wram.load32(AUX_BASE + 4 * t as u32).unwrap() as i32);
     }
     if dot != expected {
         return Err(crate::Error::Coordinator(format!(
@@ -313,7 +326,7 @@ pub fn run_dot_microbench(
             variant.name()
         )));
     }
-    let tasklet_cycles = super::read_tasklet_cycles(&dpu, nr_tasklets);
+    let tasklet_cycles = super::read_tasklet_cycles(&scr.dpu, nr_tasklets);
     let mmacs = super::mops(elems as u64, &tasklet_cycles);
     Ok(DotOutcome {
         variant,
@@ -329,6 +342,7 @@ pub fn run_dot_microbench(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dpu::Dpu;
 
     const ELEMS: usize = 64 * 1024;
 

@@ -51,6 +51,23 @@ pub const MRAM_B: u32 = 0x100_0000;
 /// the paper sets `BLOCK_SIZE` to 1024.
 pub const BLOCK_BYTES: u32 = 1024;
 
+/// Reusable single-DPU execution state for the microbench drivers
+/// (§Perf iteration 5): the simulated DPU (64 KB WRAM + lazily-grown
+/// MRAM), its interpreter scratch and the host-side verify buffer all
+/// survive across repetitions instead of being reallocated per run —
+/// benches iterate [`arith::run_microbench_with`] /
+/// [`bsdp::run_dot_microbench_with`] over one of these.
+#[derive(Default)]
+pub struct KernelScratch {
+    /// The reused simulated DPU. MRAM contents persist between runs
+    /// like hardware; every driver restages its inputs.
+    pub dpu: crate::dpu::Dpu,
+    /// Interpreter per-launch scratch ([`crate::dpu::LaunchScratch`]).
+    pub launch: crate::dpu::LaunchScratch,
+    /// Host staging/verify buffer.
+    pub(crate) buf: Vec<u8>,
+}
+
 /// Declare the shared WRAM calling-convention symbols on a kernel
 /// builder: the per-tasklet `cycles` and `aux` result arrays every
 /// kernel writes. Kernel-specific argument words are declared by each

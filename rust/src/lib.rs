@@ -18,8 +18,10 @@
 //!   model and per-rank async queues ([`transfer`]), the SDK-v2 host API
 //!   ([`host`]: typed kernel symbols via [`dpu::symbol`], zero-copy
 //!   `XferPlan`/`PullPlan` transfer views, `launch_async` with modeled
-//!   transfer/compute overlap), and a GEMV serving runtime
-//!   ([`coordinator`]) whose batcher drives the pipelined device path.
+//!   transfer/compute overlap and a multithreaded fleet executor that
+//!   simulates DPUs in parallel with bit-identical results), and a GEMV
+//!   serving runtime ([`coordinator`]) whose batcher drives the
+//!   pipelined device path.
 //! * **Layer 2 (JAX, `python/compile/model.py`)** — the quantized GEMV /
 //!   MLP inference graph, AOT-lowered to HLO text and executed from rust
 //!   via PJRT ([`runtime`]); this is the "dual-socket CPU server"
@@ -46,4 +48,4 @@ pub mod runtime;
 pub mod transfer;
 pub mod util;
 
-pub use util::error::{Error, Result};
+pub use util::error::{Error, FaultKind, Result};

@@ -1,0 +1,166 @@
+//! Determinism contract of the parallel fleet executor: running a fleet
+//! launch on 1, 2 or 8 worker threads must produce **bit-identical**
+//! outcomes — per-DPU `LaunchResult`s (`cycles`, `instrs`, DMA bytes),
+//! the fleet's modeled `seconds`/`max_cycles`, every DPU's WRAM and
+//! MRAM state, and, on the fault path, the *same* `Error::Fault`
+//! (first faulting DPU in set order, regardless of thread
+//! interleaving).
+
+use upmem_unleashed::dpu::assemble;
+use upmem_unleashed::host::{AllocPolicy, DpuSet, PimSystem};
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::Error;
+
+/// A kernel whose work varies per DPU (via a host-written WRAM arg) and
+/// per tasklet (via `id`), with DMA traffic and a barrier — enough
+/// texture that any merge-order or scheduling bug shows up in cycles,
+/// WRAM or MRAM.
+const VARYING_SRC: &str = "move r9, 0\n\
+                           lw r9, r9, 4\n\
+                           move r0, id\n\
+                           add r0, r0, r9\n\
+                           loop:\n\
+                           sub r0, r0, 1\n\
+                           jneq r0, 0, @loop\n\
+                           move r1, id4\n\
+                           add r1, r1, 256\n\
+                           add r2, r9, id\n\
+                           sw r1, 0, r2\n\
+                           barrier\n\
+                           move r3, 256\n\
+                           move r4, 8192\n\
+                           sdma r3, r4, 64\n\
+                           stop\n";
+
+/// Faults (explicit `fault` instruction) iff the host wrote 1 to
+/// WRAM[8]; all other DPUs run a short loop and stop.
+const FAULTING_SRC: &str = "move r0, 0\n\
+                            lw r0, r0, 8\n\
+                            jeq r0, 1, @bad\n\
+                            move r1, 5\n\
+                            spin:\n\
+                            sub r1, r1, 1\n\
+                            jneq r1, 0, @spin\n\
+                            stop\n\
+                            bad:\n\
+                            fault\n";
+
+fn fleet(workers: usize) -> (PimSystem, DpuSet) {
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    sys.set_launch_workers(workers);
+    let set = sys.alloc_ranks(2).unwrap(); // 128 DPUs across 2 ranks
+    (sys, set)
+}
+
+/// Everything a launch can influence, snapshotted for comparison.
+#[derive(PartialEq, Debug)]
+struct Snapshot {
+    per_dpu: Vec<upmem_unleashed::dpu::LaunchResult>,
+    seconds: f64,
+    max_cycles: u64,
+    /// (wram window, mram window) for a sample of DPUs across chunks.
+    state: Vec<(Vec<u8>, Vec<u8>)>,
+    modeled_now: f64,
+}
+
+fn run_varying(workers: usize, tasklets: usize) -> Snapshot {
+    let (mut sys, set) = fleet(workers);
+    let prog = assemble(VARYING_SRC).unwrap();
+    sys.load_program(&set, &prog).unwrap();
+    for i in 0..set.nr_dpus() {
+        // Loop counts differ per DPU, non-monotonically, so the slowest
+        // DPU sits mid-fleet (exercises the max_cycles merge).
+        let count = 3 + ((i as u32 * 37) % 101);
+        sys.dpu_of(&set, i).wram.store32(4, count).unwrap();
+    }
+    let fleet = sys.launch(&set, tasklets).unwrap();
+    let mut state = Vec::new();
+    for i in [0usize, 1, 17, 63, 64, 100, 127] {
+        let dpu = sys.dpu_of(&set, i);
+        let wram = dpu.wram.as_slice()[256..512].to_vec();
+        let mut mram = vec![0u8; 64];
+        dpu.mram.read(8192, &mut mram).unwrap();
+        state.push((wram, mram));
+    }
+    Snapshot {
+        per_dpu: fleet.per_dpu.clone(),
+        seconds: fleet.seconds,
+        max_cycles: fleet.max_cycles,
+        state,
+        modeled_now: sys.modeled_now(),
+    }
+}
+
+#[test]
+fn parallel_launch_is_bit_identical_to_serial() {
+    for tasklets in [1, 8] {
+        let serial = run_varying(1, tasklets);
+        assert_eq!(serial.per_dpu.len(), 128);
+        // Work differs across DPUs, so a wrong merge order cannot hide.
+        assert!(
+            serial.per_dpu.iter().any(|r| r.cycles != serial.per_dpu[0].cycles),
+            "test kernel must produce non-uniform per-DPU cycles"
+        );
+        for workers in [2, 8] {
+            let parallel = run_varying(workers, tasklets);
+            assert_eq!(
+                serial, parallel,
+                "{workers}-worker launch diverged from serial ({tasklets} tasklets)"
+            );
+        }
+    }
+}
+
+fn run_faulting(workers: usize, fault_at: &[usize]) -> Error {
+    let (mut sys, set) = fleet(workers);
+    let prog = assemble(FAULTING_SRC).unwrap();
+    sys.load_program(&set, &prog).unwrap();
+    for &i in fault_at {
+        sys.dpu_of(&set, i).wram.store32(8, 1).unwrap();
+    }
+    sys.launch(&set, 4).unwrap_err()
+}
+
+#[test]
+fn mid_fleet_fault_is_stable_across_worker_counts() {
+    // Two faulting DPUs in different worker chunks: the reported fault
+    // must always be the first one in *set order* (index 37), never a
+    // thread-race winner.
+    let (sys_probe, set_probe) = fleet(1);
+    let expected_dpu = set_probe.dpus[37];
+    drop(sys_probe);
+    let serial = run_faulting(1, &[90, 37]);
+    match &serial {
+        Error::Fault { dpu, kind, .. } => {
+            assert_eq!(*dpu, expected_dpu, "serial fault must be set-order-first");
+            assert_eq!(*kind, upmem_unleashed::FaultKind::Explicit);
+        }
+        other => panic!("expected a Fault, got {other}"),
+    }
+    for workers in [2, 8] {
+        let parallel = run_faulting(workers, &[90, 37]);
+        assert_eq!(serial, parallel, "fault diverged at {workers} workers");
+    }
+}
+
+#[test]
+fn fleet_state_after_fault_matches_serial() {
+    // The fleet keeps running past a fault (hardware semantics); the
+    // surviving DPUs' results must match the serial path bit-for-bit.
+    let run = |workers: usize| {
+        let (mut sys, set) = fleet(workers);
+        let prog = assemble(FAULTING_SRC).unwrap();
+        sys.load_program(&set, &prog).unwrap();
+        sys.dpu_of(&set, 37).wram.store32(8, 1).unwrap();
+        let err = sys.launch(&set, 4).unwrap_err();
+        let mut survivors = Vec::new();
+        for i in [0usize, 36, 38, 127] {
+            survivors.push(sys.dpu_of(&set, i).wram.as_slice()[0..64].to_vec());
+        }
+        (err, survivors)
+    };
+    let serial = run(1);
+    for workers in [2, 8] {
+        assert_eq!(serial, run(workers));
+    }
+}
