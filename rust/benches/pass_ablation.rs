@@ -1,0 +1,180 @@
+//! Pass ablation — per-pass modeled-cycle deltas for the assembly
+//! optimizer (`rust/src/opt/`), the measurable form of the paper's
+//! §III/§IV/§VI hand edits. For each workload it reports:
+//!
+//! * **naive** — the compiler-shaped stream (`PassConfig::none()`);
+//! * **all-on** — every pass (`PassConfig::all()`, DMA double-buffering
+//!   included where the kernel supports it);
+//! * one **ablation column per pass** — all passes on except that one;
+//!   the printed delta is the cycles that pass saves on top of the
+//!   others (0 means the pass has no work on that kernel, which is
+//!   expected: e.g. shift-add fusion only fires on BSDP bodies).
+//!
+//! It also prints the `PassStats` transformation counts (fused jumps,
+//! elided mul_steps, unrolled copies, removed dead code) and a
+//! markdown-pasteable table for EXPERIMENTS.md §Pass ablation.
+//! `PERF_SMOKE=1` shrinks workloads to CI size; modeled cycles stay
+//! deterministic at any size.
+
+mod common;
+
+use common::{check, footer, timed};
+use upmem_unleashed::kernels::arith::{
+    emit_microbench_with, run_microbench_cfg, DType, MulImpl, Spec,
+};
+use upmem_unleashed::kernels::bsdp::{run_dot_microbench_cfg, DotVariant};
+use upmem_unleashed::kernels::gemv::{run_gemv_dpu_with_cfg, GemvShape, GemvVariant};
+use upmem_unleashed::opt::{optimize, Pass, PassConfig, ALL_PASSES};
+use upmem_unleashed::util::rng::Rng;
+
+#[derive(Clone, Copy)]
+enum Workload {
+    Arith(Spec, usize, u32),
+    Dot(DotVariant, usize, usize),
+    Gemv(GemvVariant, usize, GemvShape),
+}
+
+impl Workload {
+    /// Modeled cycles under `cfg`. The runners verify outputs against
+    /// the host reference, so every ablation point is also a
+    /// correctness check on the pass subset.
+    fn cycles(&self, cfg: &PassConfig) -> u64 {
+        match *self {
+            Workload::Arith(spec, t, bytes) => {
+                run_microbench_cfg(spec, cfg, t, bytes, 42).expect("verifies").launch.cycles
+            }
+            Workload::Dot(v, t, elems) => {
+                run_dot_microbench_cfg(v, cfg, t, elems, 42).expect("verifies").launch.cycles
+            }
+            Workload::Gemv(v, t, shape) => {
+                let mut rng = Rng::new(42);
+                let (m, x) = match v {
+                    GemvVariant::I4Bsdp => (
+                        rng.i4_vec((shape.rows * shape.cols) as usize),
+                        rng.i4_vec(shape.cols as usize),
+                    ),
+                    _ => (
+                        rng.i8_vec((shape.rows * shape.cols) as usize),
+                        rng.i8_vec(shape.cols as usize),
+                    ),
+                };
+                run_gemv_dpu_with_cfg(v, cfg, shape, t, &m, &x).expect("verifies").1.cycles
+            }
+        }
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("PERF_SMOKE").is_ok();
+    let (_, wall) = timed(|| {
+        let arith_bytes: u32 = if smoke { 8 * 1024 } else { 64 * 1024 };
+        let dot_elems: usize = if smoke { 8 * 1024 } else { 64 * 1024 };
+        let gemv_rows: u32 = if smoke { 8 } else { 32 };
+        // GEMV runs at 8 tasklets so the DMA double-buffering column is
+        // measurable (the dbuf layout caps at 8; at ≥11 the revolver
+        // scheduler hides DMA stalls anyway).
+        let workloads: Vec<(&str, Workload)> = vec![
+            (
+                "INT8 MUL (__mulsi3 stream), 16T",
+                Workload::Arith(Spec::mul(DType::I8, MulImpl::Mulsi3), 16, arith_bytes),
+            ),
+            (
+                "INT32 MUL (__mulsi3 stream), 16T",
+                Workload::Arith(Spec::mul(DType::I32, MulImpl::Mulsi3), 16, arith_bytes),
+            ),
+            (
+                "INT32 ADD (counter latch), 16T",
+                Workload::Arith(Spec::add(DType::I32), 16, arith_bytes),
+            ),
+            ("BSDP dot, 16T", Workload::Dot(DotVariant::Bsdp, 16, dot_elems)),
+            (
+                "INT8 GEMV opt, 8T",
+                Workload::Gemv(GemvVariant::I8Opt, 8, GemvShape { rows: gemv_rows, cols: 2048 }),
+            ),
+            (
+                "INT4 GEMV BSDP, 8T",
+                Workload::Gemv(GemvVariant::I4Bsdp, 8, GemvShape { rows: gemv_rows, cols: 4096 }),
+            ),
+        ];
+
+        let mut header =
+            vec!["workload".to_string(), "naive".into(), "all-on".into(), "gain".into()];
+        for pass in ALL_PASSES {
+            header.push(format!("Δ -{}", pass.name()));
+        }
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = upmem_unleashed::bench_support::table::Table::new(
+            "Pass ablation — modeled cycles (Δ = extra cycles when that pass is disabled)",
+            &header_refs,
+        );
+        let mut md = String::from(
+            "| workload | naive | all-on | gain | ".to_string()
+                + &ALL_PASSES.map(|p| format!("Δ -{}", p.name())).join(" | ")
+                + " |\n",
+        );
+        md.push_str(&format!("|---|---|---|---|{}\n", "---|".repeat(ALL_PASSES.len())));
+
+        let mut improved = Vec::new();
+        for (name, w) in &workloads {
+            let naive = w.cycles(&PassConfig::none());
+            let all = w.cycles(&PassConfig::all());
+            improved.push((*name, naive, all));
+            let mut cells = vec![
+                name.to_string(),
+                naive.to_string(),
+                all.to_string(),
+                format!("{:.2}x", naive as f64 / all as f64),
+            ];
+            let gain = naive as f64 / all as f64;
+            let mut md_row = format!("| {name} | {naive} | {all} | {gain:.2}x |");
+            for pass in ALL_PASSES {
+                let without = w.cycles(&PassConfig::all().set(pass, false));
+                let delta = without as i64 - all as i64;
+                cells.push(delta.to_string());
+                md_row.push_str(&format!(" {delta} |"));
+            }
+            t.row(&cells);
+            md.push_str(&md_row);
+            md.push('\n');
+        }
+        t.print();
+
+        println!("\nmarkdown (paste into EXPERIMENTS.md §Pass ablation):\n{md}");
+
+        // Transformation counts behind the deltas.
+        for (name, spec) in [
+            ("INT32 MUL", Spec::mul(DType::I32, MulImpl::Mulsi3)),
+            ("INT8 MUL", Spec::mul(DType::I8, MulImpl::Mulsi3)),
+        ] {
+            let p = emit_microbench_with(spec, &PassConfig::none()).unwrap();
+            let (_, stats) = optimize(&p, &PassConfig::all());
+            println!(
+                "{name}: {} call(s) inlined, {} static mul_steps elided, \
+                 {} cond-jumps fused, {} unreachable instrs removed",
+                stats.mul_calls_inlined,
+                stats.mul_steps_elided,
+                stats.cond_jumps_fused,
+                stats.unreachable_removed
+            );
+        }
+
+        println!("acceptance (paper directions):");
+        for (name, naive, all) in &improved {
+            let required = !name.contains("ADD"); // fusion-only row may tie on pointer latches
+            let ok = if required { all < naive } else { all <= naive };
+            println!(
+                "  {} {name}: naive {naive} → all-on {all}",
+                if ok { "PASS " } else { "DRIFT" }
+            );
+        }
+        let dbuf_delta = {
+            let w = &workloads.iter().find(|(n, _)| n.contains("INT8 GEMV")).unwrap().1;
+            let without =
+                w.cycles(&PassConfig::all().set(Pass::DmaDoubleBuffer, false)) as i64;
+            let all = w.cycles(&PassConfig::all()) as i64;
+            without - all
+        };
+        check("DMA double-buffering saves cycles at 8T (Δ ≥ 0)", dbuf_delta as f64, 0.0, 1e12);
+    });
+    footer("pass_ablation", wall);
+}

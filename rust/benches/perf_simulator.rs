@@ -1,27 +1,30 @@
 //! §Perf — simulator hot-path throughput (simulated instructions per
-//! host second). The interpreter stands in for silicon, so its speed
-//! bounds every other bench; EXPERIMENTS.md §Perf tracks this number
-//! across optimization iterations, and `BENCH_perf.json` (written by
-//! this bench, workload → Minstr/s) carries the trajectory PR-to-PR.
+//! host second) plus per-workload *modeled cycles*. The interpreter
+//! stands in for silicon, so its speed bounds every other bench;
+//! EXPERIMENTS.md §Perf tracks the Minstr/s trajectory, while the
+//! modeled-cycle column is deterministic and feeds the CI
+//! perf-regression gate (`tools/check_perf_regression.py` against
+//! `ci/BENCH_perf_baseline.json`, schema v2 via `bench_support/json`).
 //!
 //! The fleet-scale case runs the same 128-DPU (2-rank) GEMV launch
 //! twice — pinned to 1 worker (the serial baseline) and on all
 //! available cores — so the parallel fleet executor's speedup is
 //! measured, not assumed. `PERF_SMOKE=1` shrinks every workload to CI
-//! size (the point is exercising the bench + JSON writer, not stable
-//! numbers).
+//! size (host throughput is then not comparable; modeled cycles remain
+//! exact for the smoke sizes, which is what the gate diffs).
 
 mod common;
 
 use common::{footer, timed};
-use upmem_unleashed::bench_support::json::json_object;
+use upmem_unleashed::bench_support::json::{json_perf_report, WorkloadEntry};
 use upmem_unleashed::bench_support::table::{f1, ratio, Table};
 use upmem_unleashed::coordinator::GemvCoordinator;
 use upmem_unleashed::host::{AllocPolicy, PimSystem};
 use upmem_unleashed::kernels::arith::{run_microbench_with, DType, MulImpl, Spec, Unroll};
 use upmem_unleashed::kernels::bsdp::{run_dot_microbench_with, DotVariant};
-use upmem_unleashed::kernels::gemv::GemvVariant;
+use upmem_unleashed::kernels::gemv::{run_gemv_dpu_with_cfg, GemvShape, GemvVariant};
 use upmem_unleashed::kernels::KernelScratch;
+use upmem_unleashed::opt::PassConfig;
 use upmem_unleashed::transfer::topology::SystemTopology;
 use upmem_unleashed::util::rng::Rng;
 
@@ -29,7 +32,7 @@ use upmem_unleashed::util::rng::Rng;
 /// aggregate throughput.
 struct Perf {
     table: Table,
-    entries: Vec<(String, f64)>,
+    entries: Vec<WorkloadEntry>,
     total_instrs: u64,
     total_secs: f64,
 }
@@ -38,7 +41,7 @@ fn perf_report() -> Perf {
     Perf {
         table: Table::new(
             "§Perf — simulator throughput (million simulated instrs / host second)",
-            &["workload", "sim instrs", "host s", "Minstr/s"],
+            &["workload", "sim instrs", "host s", "Minstr/s", "modeled cycles"],
         ),
         entries: Vec::new(),
         total_instrs: 0,
@@ -47,15 +50,16 @@ fn perf_report() -> Perf {
 }
 
 impl Perf {
-    fn record(&mut self, name: &str, instrs: u64, secs: f64) {
+    fn record(&mut self, name: &str, instrs: u64, secs: f64, cycles: Option<u64>) {
         let minstr = instrs as f64 / secs / 1e6;
         self.table.row(&[
             name.to_string(),
             instrs.to_string(),
             format!("{secs:.3}"),
             f1(minstr),
+            cycles.map(|c| c.to_string()).unwrap_or_else(|| "—".into()),
         ]);
-        self.entries.push((name.to_string(), minstr));
+        self.entries.push(WorkloadEntry::new(name, minstr, cycles));
         self.total_instrs += instrs;
         self.total_secs += secs;
     }
@@ -64,8 +68,9 @@ impl Perf {
 /// One fleet GEMV measurement: preload a `rows × cols` INT8 matrix over
 /// a 128-DPU (2-rank) set, then time `reps` full-fleet launches.
 /// `workers = None` keeps the system default (available parallelism /
-/// `PIM_LAUNCH_WORKERS`). Returns (total simulated instrs, host secs).
-fn fleet_gemv(workers: Option<usize>, rows: u32, cols: u32, reps: usize) -> (u64, f64) {
+/// `PIM_LAUNCH_WORKERS`). Returns (total simulated instrs, host secs,
+/// per-launch max modeled cycles).
+fn fleet_gemv(workers: Option<usize>, rows: u32, cols: u32, reps: usize) -> (u64, f64, u64) {
     let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
     if let Some(w) = workers {
         sys.set_launch_workers(w);
@@ -76,14 +81,16 @@ fn fleet_gemv(workers: Option<usize>, rows: u32, cols: u32, reps: usize) -> (u64
     let m = rng.i8_vec((rows * cols) as usize);
     c.preload_matrix(rows, cols, &m).expect("preload");
     let mut instrs = 0u64;
+    let mut max_cycles = 0u64;
     let (_, secs) = timed(|| {
         for _ in 0..reps {
             let fleet = c.sys.launch(&c.set, 16).expect("fleet launch");
             instrs += fleet.per_dpu.iter().map(|r| r.instrs).sum::<u64>();
+            max_cycles = max_cycles.max(fleet.per_dpu.iter().map(|r| r.cycles).max().unwrap_or(0));
             c.sys.recycle_launch(fleet);
         }
     });
-    (instrs, secs)
+    (instrs, secs, max_cycles)
 }
 
 fn main() {
@@ -98,7 +105,7 @@ fn main() {
         let mul_bytes: u32 = if smoke { 64 * 1024 } else { 512 * 1024 };
         let dot_elems: usize = if smoke { 32 * 1024 } else { 256 * 1024 };
 
-        let (i, s) = timed(|| {
+        let (o, s) = timed(|| {
             run_microbench_with(
                 &mut scr,
                 Spec::add(DType::I8).with_unroll(Unroll::X64),
@@ -108,59 +115,106 @@ fn main() {
             )
             .unwrap()
             .launch
-            .instrs
         });
-        p.record("INT8 ADD x64, 16 tasklets", i, s);
+        p.record("INT8 ADD x64, 16 tasklets", o.instrs, s, Some(o.cycles));
 
-        let (i, s) = timed(|| {
+        let (o, s) = timed(|| {
             run_microbench_with(&mut scr, Spec::mul(DType::I8, MulImpl::Mulsi3), 16, mul_bytes, 42)
                 .unwrap()
                 .launch
-                .instrs
         });
-        p.record("INT8 MUL __mulsi3 (call-heavy), 16 tasklets", i, s);
+        p.record("INT8 MUL __mulsi3 (call-heavy), 16 tasklets", o.instrs, s, Some(o.cycles));
 
-        let (i, s) = timed(|| {
-            run_dot_microbench_with(&mut scr, DotVariant::Bsdp, 16, dot_elems, 42)
-                .unwrap()
-                .launch
-                .instrs
+        let (o, s) = timed(|| {
+            run_dot_microbench_with(&mut scr, DotVariant::Bsdp, 16, dot_elems, 42).unwrap().launch
         });
-        p.record("BSDP dot (ALU-dense), 16 tasklets", i, s);
+        p.record("BSDP dot (ALU-dense), 16 tasklets", o.instrs, s, Some(o.cycles));
 
-        let (i, s) = timed(|| {
-            run_microbench_with(&mut scr, Spec::add(DType::I8), 1, add_bytes, 42)
-                .unwrap()
-                .launch
-                .instrs
+        let (o, s) = timed(|| {
+            run_microbench_with(&mut scr, Spec::add(DType::I8), 1, add_bytes, 42).unwrap().launch
         });
-        p.record("single tasklet (scheduler idle-skip path)", i, s);
+        p.record("single tasklet (scheduler idle-skip path)", o.instrs, s, Some(o.cycles));
+
+        // Single-DPU GEMV per variant (+ the all-passes ablation point):
+        // deterministic modeled cycles for the regression gate.
+        let (rows, cols) = if smoke { (16u32, 1024u32) } else { (64, 2048) };
+        let shape = GemvShape { rows, cols };
+        // BSDP packs two INT4 elements per byte, so its row stride only
+        // reaches the 1 KB chunk floor at twice the column count.
+        let cols4 = cols * 2;
+        let shape4 = GemvShape { rows, cols: cols4 };
+        let mut rng = Rng::new(7);
+        let m8 = rng.i8_vec((rows * cols) as usize);
+        let x8 = rng.i8_vec(cols as usize);
+        let m4 = rng.i4_vec((rows * cols4) as usize);
+        let x4 = rng.i4_vec(cols4 as usize);
+        let gemv_cases = [
+            (
+                "GEMV INT8 baseline, 1 DPU, 16 tasklets",
+                GemvVariant::I8Baseline,
+                GemvVariant::I8Baseline.default_passes(),
+                16usize,
+                m8.as_slice(),
+                x8.as_slice(),
+            ),
+            (
+                "GEMV INT8 opt, 1 DPU, 16 tasklets",
+                GemvVariant::I8Opt,
+                GemvVariant::I8Opt.default_passes(),
+                16,
+                m8.as_slice(),
+                x8.as_slice(),
+            ),
+            (
+                "GEMV INT8 opt all-passes + dbuf, 1 DPU, 8 tasklets",
+                GemvVariant::I8Opt,
+                PassConfig::all(),
+                8,
+                m8.as_slice(),
+                x8.as_slice(),
+            ),
+            (
+                "GEMV INT4 BSDP, 1 DPU, 16 tasklets",
+                GemvVariant::I4Bsdp,
+                GemvVariant::I4Bsdp.default_passes(),
+                16,
+                m4.as_slice(),
+                x4.as_slice(),
+            ),
+        ];
+        for (name, variant, cfg, tasklets, m, x) in gemv_cases {
+            let sh = if variant == GemvVariant::I4Bsdp { shape4 } else { shape };
+            let (r, s) = timed(|| {
+                run_gemv_dpu_with_cfg(variant, &cfg, sh, tasklets, m, x).unwrap().1
+            });
+            p.record(name, r.instrs, s, Some(r.cycles));
+        }
 
         // Fleet scale: serial baseline vs the parallel fleet executor.
         let (rows, cols, reps) = if smoke { (256u32, 1024u32, 1usize) } else { (1024, 2048, 3) };
         let default_workers =
             PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware).launch_workers();
-        let (si, ss) = fleet_gemv(Some(1), rows, cols, reps);
-        p.record("fleet GEMV, 128 DPUs, 16 tasklets (1 worker)", si, ss);
-        let (pi, ps) = fleet_gemv(None, rows, cols, reps);
-        p.record(
-            &format!("fleet GEMV, 128 DPUs, 16 tasklets ({default_workers} workers)"),
-            pi,
-            ps,
-        );
+        let (si, ss, sc) = fleet_gemv(Some(1), rows, cols, reps);
+        p.record("fleet GEMV, 128 DPUs, 16 tasklets (1 worker)", si, ss, Some(sc));
+        let (pi, ps, pc) = fleet_gemv(None, rows, cols, reps);
+        // Stable name (no worker count): the JSON key must match the
+        // committed gate baseline across runners with different core
+        // counts — modeled cycles are worker-count-invariant anyway.
+        println!("parallel fleet row uses {default_workers} worker threads");
+        p.record("fleet GEMV, 128 DPUs, 16 tasklets (all cores)", pi, ps, Some(pc));
         let speedup = (pi as f64 / ps) / (si as f64 / ss);
         println!(
             "fleet parallel speedup: {} with {default_workers} worker threads",
             ratio(speedup)
         );
-        p.entries.push(("fleet parallel speedup (x)".to_string(), speedup));
+        p.entries.push(WorkloadEntry::new("fleet parallel speedup (x)", speedup, None));
 
         p.table.print();
         let aggregate = p.total_instrs as f64 / p.total_secs / 1e6;
         println!("aggregate: {aggregate:.1} M simulated instructions / host second");
-        p.entries.push(("aggregate".to_string(), aggregate));
+        p.entries.push(WorkloadEntry::new("aggregate", aggregate, None));
 
-        let json = json_object(&p.entries);
+        let json = json_perf_report(&p.entries);
         match std::fs::write("BENCH_perf.json", &json) {
             Ok(()) => println!("wrote BENCH_perf.json ({} entries)", p.entries.len()),
             Err(e) => eprintln!("could not write BENCH_perf.json: {e}"),

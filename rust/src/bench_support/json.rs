@@ -1,8 +1,14 @@
 //! Minimal JSON emission for machine-readable bench outputs (no
-//! external crates offline — the perf trackers only need an ordered
-//! string → number map, written as `BENCH_perf.json` by
-//! `rust/benches/perf_simulator.rs` and consumed across PRs to follow
-//! the simulator-throughput trajectory; see EXPERIMENTS.md §Perf).
+//! external crates offline). Two writers:
+//!
+//! * [`json_object`] — the legacy flat string → number map
+//!   (`schema_version` 1, kept for ad-hoc dumps and the unit tests);
+//! * [`json_perf_report`] — the `schema_version: 2` report
+//!   `perf_simulator` writes as `BENCH_perf.json`: per-workload host
+//!   throughput (Minstr/s, machine-dependent) *and* modeled DPU cycles
+//!   (deterministic), which is what the CI perf-regression gate
+//!   (`tools/check_perf_regression.py`) diffs against the committed
+//!   baseline; see EXPERIMENTS.md §Perf.
 
 /// Escape a string for a JSON string literal body.
 fn escape(s: &str) -> String {
@@ -48,9 +54,67 @@ pub fn json_object(entries: &[(String, f64)]) -> String {
     out
 }
 
+/// One `BENCH_perf.json` workload row.
+#[derive(Debug, Clone)]
+pub struct WorkloadEntry {
+    pub name: String,
+    /// Host-side simulator throughput (machine-dependent).
+    pub minstr_per_s: f64,
+    /// Modeled DPU cycles for the workload — deterministic, and the
+    /// quantity the CI regression gate compares. `None` for aggregate
+    /// rows (speedups, totals) that have no single launch behind them.
+    pub modeled_cycles: Option<u64>,
+}
+
+impl WorkloadEntry {
+    pub fn new(name: impl Into<String>, minstr_per_s: f64, modeled_cycles: Option<u64>) -> Self {
+        WorkloadEntry { name: name.into(), minstr_per_s, modeled_cycles }
+    }
+}
+
+/// The `BENCH_perf.json` schema version written by [`json_perf_report`].
+pub const PERF_SCHEMA_VERSION: u32 = 2;
+
+/// Render the schema-v2 perf report (insertion order preserved).
+pub fn json_perf_report(entries: &[WorkloadEntry]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"schema_version\": {PERF_SCHEMA_VERSION},\n"));
+    out.push_str("  \"workloads\": {\n");
+    for (i, e) in entries.iter().enumerate() {
+        out.push_str("    \"");
+        out.push_str(&escape(&e.name));
+        out.push_str("\": {");
+        out.push_str(&format!("\"minstr_per_s\": {}", number(e.minstr_per_s)));
+        if let Some(c) = e.modeled_cycles {
+            out.push_str(&format!(", \"modeled_cycles\": {c}"));
+        }
+        out.push('}');
+        if i + 1 < entries.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("  }\n}\n");
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn perf_report_v2_shape() {
+        let r = json_perf_report(&[
+            WorkloadEntry::new("w1", 12.5, Some(1000)),
+            WorkloadEntry::new("agg", 3.0, None),
+        ]);
+        assert_eq!(
+            r,
+            "{\n  \"schema_version\": 2,\n  \"workloads\": {\n    \
+             \"w1\": {\"minstr_per_s\": 12.500, \"modeled_cycles\": 1000},\n    \
+             \"agg\": {\"minstr_per_s\": 3.000}\n  }\n}\n"
+        );
+    }
 
     #[test]
     fn renders_ordered_object() {

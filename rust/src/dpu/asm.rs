@@ -53,7 +53,12 @@ pub fn assemble(src: &str) -> Result<Program> {
         }
         instrs.push(parse_instr(line, lineno, &labels)?);
     }
-    Ok(Program { instrs, labels: ordered_labels, symbols: Default::default() })
+    Ok(Program {
+        instrs,
+        labels: ordered_labels,
+        symbols: Default::default(),
+        meta: Default::default(),
+    })
 }
 
 fn err(lineno: usize, msg: String) -> Error {
@@ -380,7 +385,7 @@ fn parse_instr(line: &str, lineno: usize, labels: &HashMap<String, u32>) -> Resu
                 target: parse_label(&ops[1], lineno, labels)?,
             })
         }
-        "ldma" | "sdma" => {
+        "ldma" | "sdma" | "ldma_nb" => {
             need(3)?;
             let wram = parse_reg(&ops[0], lineno)?;
             let mram = parse_reg(&ops[1], lineno)?;
@@ -389,12 +394,13 @@ fn parse_instr(line: &str, lineno: usize, labels: &HashMap<String, u32>) -> Resu
                 return Err(err(lineno, format!("{mn} size must be positive")));
             }
             let bytes = bytes as u32;
-            Ok(if mn == "ldma" {
-                Instr::Ldma { wram, mram, bytes }
-            } else {
-                Instr::Sdma { wram, mram, bytes }
+            Ok(match mn {
+                "ldma" => Instr::Ldma { wram, mram, bytes },
+                "ldma_nb" => Instr::LdmaNb { wram, mram, bytes },
+                _ => Instr::Sdma { wram, mram, bytes },
             })
         }
+        "dma_wait" => Ok(Instr::DmaWait),
         "barrier" => Ok(Instr::Barrier),
         "time" => {
             need(1)?;

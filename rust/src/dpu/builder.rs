@@ -15,6 +15,16 @@ use crate::Result;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Label(usize);
 
+/// Handle returned by [`ProgramBuilder::unrollable_loop`]; closed by
+/// [`ProgramBuilder::unrollable_latch`], which records the loop's
+/// [`LoopMeta`] for the optimizer's unroll pass.
+#[derive(Debug, Clone, Copy)]
+pub struct LoopMarker {
+    head: u32,
+    trip_count: u32,
+    factor: u32,
+}
+
 #[derive(Debug, Default)]
 pub struct ProgramBuilder {
     instrs: Vec<Instr>,
@@ -25,6 +35,8 @@ pub struct ProgramBuilder {
     patches: Vec<(usize, usize)>,
     /// Host-visible symbols declared by the emitter.
     symbols: SymbolTable,
+    /// Optimizer metadata recorded alongside emission.
+    meta: OptMeta,
 }
 
 const UNBOUND: u32 = u32::MAX;
@@ -228,12 +240,85 @@ impl ProgramBuilder {
         self.push_cj(Instr::Call { link, target: 0 }, l);
     }
 
+    /// A `call` to a `__mulsi3`-ABI routine whose multiplier operand
+    /// (`r1` at the call) the emitter guarantees to be
+    /// `< 2^multiplier_bits` unsigned, with `r2` and the link register
+    /// dead after the call. Records a [`MulCallSite`] so the optimizer's
+    /// truncation pass may inline a `multiplier_bits`-step `mul_step`
+    /// chain in place of the call.
+    pub fn call_mul_bounded(&mut self, link: Reg, l: Label, multiplier_bits: u8) {
+        assert!(
+            (1..32).contains(&multiplier_bits),
+            "multiplier bound must be 1..=31 bits, got {multiplier_bits}"
+        );
+        let pc = self.instrs.len() as u32;
+        self.meta.mul_calls.push(MulCallSite { pc, multiplier_bits });
+        self.call(link, l);
+    }
+
+    // ---- unrollable-loop markers ----------------------------------------
+
+    /// Open an unrollable loop at the current position: binds (and
+    /// returns) the head label plus a marker carrying the emitter's
+    /// guarantees — the loop runs exactly `trip_count` iterations and
+    /// the optimized build may replicate the body `factor` times
+    /// (`factor` must divide `trip_count`; 1 keeps the loop rolled).
+    pub fn unrollable_loop(
+        &mut self,
+        name: &str,
+        trip_count: u32,
+        factor: u32,
+    ) -> (Label, LoopMarker) {
+        assert!(trip_count > 0 && factor > 0, "empty loop marked unrollable");
+        assert_eq!(trip_count % factor, 0, "unroll factor {factor} must divide {trip_count}");
+        let head = self.here(name);
+        (head, LoopMarker { head: self.label_pcs[head.0], trip_count, factor })
+    }
+
+    /// Close an unrollable loop: emits the latch (`add r, r, step` per
+    /// induction pointer, then `jcmp cond, ra, b, @head`) and records
+    /// the [`LoopMeta`]. Induction pointers must appear in the body only
+    /// as load/store base registers and must not be written by it.
+    pub fn unrollable_latch(
+        &mut self,
+        lm: LoopMarker,
+        head: Label,
+        inductions: &[(Reg, i32)],
+        cond: CmpCond,
+        ra: Reg,
+        b: impl Into<Src>,
+    ) {
+        assert!(!inductions.is_empty(), "unrollable loop needs an induction pointer");
+        let body_end = self.instrs.len() as u32;
+        assert!(body_end > lm.head, "unrollable loop body is empty");
+        for &(r, step) in inductions {
+            self.add(r, r, step);
+        }
+        self.jcmp(cond, ra, b, head);
+        self.meta.loops.push(LoopMeta {
+            head: lm.head,
+            body_end,
+            latch_end: self.instrs.len() as u32,
+            inductions: inductions.to_vec(),
+            trip_count: lm.trip_count,
+            factor: lm.factor,
+        });
+    }
+
     pub fn ldma(&mut self, wram: Reg, mram: Reg, bytes: u32) {
         self.push(Instr::Ldma { wram, mram, bytes });
     }
 
     pub fn sdma(&mut self, wram: Reg, mram: Reg, bytes: u32) {
         self.push(Instr::Sdma { wram, mram, bytes });
+    }
+
+    pub fn ldma_nb(&mut self, wram: Reg, mram: Reg, bytes: u32) {
+        self.push(Instr::LdmaNb { wram, mram, bytes });
+    }
+
+    pub fn dma_wait(&mut self) {
+        self.push(Instr::DmaWait);
     }
 
     pub fn barrier(&mut self) {
@@ -286,7 +371,12 @@ impl ProgramBuilder {
             .zip(self.label_pcs)
             .filter(|(_, pc)| *pc != UNBOUND)
             .collect();
-        Ok(Program { instrs, labels, symbols: self.symbols })
+        Ok(Program { instrs, labels, symbols: self.symbols, meta: self.meta })
+    }
+
+    /// [`Self::build`], then run the [`crate::opt`] pass pipeline.
+    pub fn build_with(self, cfg: &crate::opt::PassConfig) -> Result<Program> {
+        Ok(crate::opt::optimize(&self.build()?, cfg).0)
     }
 }
 

@@ -250,6 +250,33 @@ fn exec_one(
             tk.pc = next_pc;
             return Ok(Step::Dma(cycles));
         }
+        Instr::LdmaNb { wram: wreg, mram: mreg, bytes } => {
+            let waddr = tk.get(wreg);
+            let maddr = tk.get(mreg);
+            let cycles = dma_cycles(waddr, maddr, bytes)?;
+            // Data lands at issue time (the simulator's memory effects
+            // are instantaneous); only the *latency* runs in the
+            // background. The destination buffer must not be read before
+            // the matching `dma_wait` — the double-buffering contract.
+            dma_buf.resize(bytes as usize, 0);
+            mram.read(maddr, dma_buf)?;
+            wram.write_bytes(waddr, &dma_buf[..])?;
+            res.dma_read_bytes += bytes as u64;
+            // `now` is the post-issue clock (issue cycle + 1); the
+            // engine starts at the issue cycle. Overlapping transfers
+            // complete when the slowest one does.
+            tk.dma_done_at = tk.dma_done_at.max(now - 1 + cycles);
+        }
+        Instr::DmaWait => {
+            // The tasklet's natural re-issue time is issue + 11; stall
+            // only for completion time beyond that.
+            let natural_ready = now - 1 + super::ISSUE_INTERVAL;
+            let extra = tk.dma_done_at.saturating_sub(natural_ready);
+            if extra > 0 {
+                tk.pc = next_pc;
+                return Ok(Step::Dma(extra));
+            }
+        }
         Instr::Barrier => {
             tk.at_barrier = true;
             return Ok(Step::Barrier);

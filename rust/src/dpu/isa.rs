@@ -411,6 +411,16 @@ pub enum Instr {
     Ldma { wram: Reg, mram: Reg, bytes: u32 },
     /// WRAM→MRAM DMA (`mram_write`).
     Sdma { wram: Reg, mram: Reg, bytes: u32 },
+    /// Non-blocking MRAM→WRAM DMA: issues in one dispatch slot and
+    /// completes in the background; [`Instr::DmaWait`] parks the tasklet
+    /// until every outstanding transfer is done. The destination buffer
+    /// must not be read before the wait (the double-buffering contract —
+    /// [`crate::kernels::gemv`]'s pass-enabled GEMV variant keeps the
+    /// in-flight buffer and the compute buffer disjoint).
+    LdmaNb { wram: Reg, mram: Reg, bytes: u32 },
+    /// Block until the tasklet's outstanding [`Instr::LdmaNb`] transfers
+    /// complete (no-op when none are pending).
+    DmaWait,
     /// Barrier across all running tasklets of the DPU.
     Barrier,
     /// Read the DPU cycle counter (low 32 bits) — the `perfcounter`
@@ -471,6 +481,8 @@ impl Instr {
             Instr::Call { link, target } => format!("call {link}, @{target}"),
             Instr::Ldma { wram, mram, bytes } => format!("ldma {wram}, {mram}, {bytes}"),
             Instr::Sdma { wram, mram, bytes } => format!("sdma {wram}, {mram}, {bytes}"),
+            Instr::LdmaNb { wram, mram, bytes } => format!("ldma_nb {wram}, {mram}, {bytes}"),
+            Instr::DmaWait => "dma_wait".to_string(),
             Instr::Barrier => "barrier".to_string(),
             Instr::Time { rd } => format!("time {rd}"),
             Instr::Stop => "stop".to_string(),
@@ -493,6 +505,57 @@ impl Cond {
     }
 }
 
+/// A `call __mulsi3` site whose *multiplier* operand (`r1` at the call,
+/// the `__mulsi3` ABI's second argument) is guaranteed by the emitter to
+/// be `< 2^multiplier_bits` (unsigned). The truncation pass of
+/// [`crate::opt`] may replace such a call with an inline `mul_step`
+/// chain of `multiplier_bits` steps — the paper's §III-C observation
+/// that an INT8 operand needs 8 steps, not 32. The contract also
+/// promises that `r2` and the link register are dead after the call
+/// (the routine's documented clobbers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MulCallSite {
+    /// Instruction index of the `call`.
+    pub pc: u32,
+    /// Unsigned bit bound on the multiplier operand (1..=31).
+    pub multiplier_bits: u8,
+}
+
+/// A loop the emitter marked safe for body replication by the unroll
+/// pass: `head..body_end` is a straight-line body (calls allowed),
+/// `body_end..latch_end` is the latch — one `add r, r, step` per
+/// induction pointer followed by a `jcmp` back to `head`. The emitter
+/// guarantees the trip count is exactly `trip_count` and that induction
+/// registers appear in the body only as load/store base registers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoopMeta {
+    /// First instruction of the body (also the jump-back target).
+    pub head: u32,
+    /// First instruction of the latch (one past the body).
+    pub body_end: u32,
+    /// One past the latch's `jcmp`.
+    pub latch_end: u32,
+    /// Induction pointers and their per-iteration byte steps.
+    pub inductions: Vec<(Reg, i32)>,
+    /// Exact number of iterations the loop executes.
+    pub trip_count: u32,
+    /// Replication factor the optimized build should apply (1 = keep
+    /// rolled; must divide `trip_count`).
+    pub factor: u32,
+}
+
+/// Optimizer metadata carried by a [`Program`], recorded by
+/// [`crate::dpu::builder::ProgramBuilder`] and consumed by
+/// [`crate::opt`]. All `pc`s are indices into `instrs`; every
+/// structural pass remaps them alongside branch targets.
+#[derive(Debug, Clone, Default)]
+pub struct OptMeta {
+    /// Bounded-multiplier `__mulsi3` call sites (truncation pass).
+    pub mul_calls: Vec<MulCallSite>,
+    /// Loops marked safe for body replication (unroll pass).
+    pub loops: Vec<LoopMeta>,
+}
+
 /// A fully-resolved DPU program (labels → instruction indices), plus the
 /// label table kept for disassembly and assembler round-trips, plus the
 /// typed-symbol table the host uses to address kernel arguments and
@@ -504,6 +567,9 @@ pub struct Program {
     pub labels: Vec<(String, u32)>,
     /// Host-visible WRAM/MRAM symbols declared by the emitter.
     pub symbols: super::symbol::SymbolTable,
+    /// Optimizer metadata ([`crate::opt`]); empty for hand-assembled
+    /// programs, which restricts the optimizer to its structural passes.
+    pub meta: OptMeta,
 }
 
 impl Program {
@@ -523,6 +589,15 @@ impl Program {
     /// Find a label's pc.
     pub fn label(&self, name: &str) -> Option<u32> {
         self.labels.iter().find(|(n, _)| n == name).map(|&(_, pc)| pc)
+    }
+
+    /// Run the [`crate::opt`] pass pipeline over this program, returning
+    /// the optimized stream and per-pass transformation counts. The
+    /// result is architecturally invisible: WRAM/MRAM effects and kernel
+    /// outputs are bit-identical to the naive stream (pinned by the
+    /// differential tests); only the modeled cycle count changes.
+    pub fn optimize(&self, cfg: &crate::opt::PassConfig) -> (Program, crate::opt::PassStats) {
+        crate::opt::optimize(self, cfg)
     }
 
     /// Full disassembly with label annotations.

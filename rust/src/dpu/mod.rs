@@ -16,7 +16,14 @@
 //!   (4096 × 48-bit instructions), 64 MB MRAM bank behind a DMA engine;
 //! * the ISA subset the paper's kernels exercise, including the
 //!   `mul_*` one-cycle byte-multiply family, `mul_step` (the building
-//!   block of `__mulsi3`), `lsl_add` and `cao` (population count).
+//!   block of `__mulsi3`), `lsl_add` and `cao` (population count), plus
+//!   a non-blocking DMA pair (`ldma_nb`/`dma_wait`) backing the
+//!   optimizer's double-buffered GEMV variant ([`crate::opt`]).
+//!
+//! Built [`Program`]s carry optimizer metadata ([`isa::OptMeta`]:
+//! marked loops, bounded `__mulsi3` call sites) recorded by
+//! [`builder::ProgramBuilder`] and consumed by the [`crate::opt`] pass
+//! pipeline.
 //!
 //! Sub-modules:
 //! * [`isa`] — instruction definitions + disassembly

@@ -16,11 +16,21 @@ pub struct Tasklet {
     /// This tasklet's hardware id (feeds the `id`/`id2`/`id4`/`id8`
     /// constant registers).
     pub id: u32,
+    /// Absolute cycle at which every outstanding non-blocking DMA
+    /// (`ldma_nb`) completes; `dma_wait` parks the tasklet until then.
+    pub dma_done_at: u64,
 }
 
 impl Tasklet {
     pub fn new(id: u32) -> Tasklet {
-        Tasklet { regs: [0; Reg::NUM as usize], pc: 0, stopped: false, at_barrier: false, id }
+        Tasklet {
+            regs: [0; Reg::NUM as usize],
+            pc: 0,
+            stopped: false,
+            at_barrier: false,
+            id,
+            dma_done_at: 0,
+        }
     }
 
     #[inline]

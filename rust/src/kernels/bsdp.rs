@@ -20,6 +20,7 @@ use super::{AUX_BASE, BUF_BASE, CYCLES_BASE, MRAM_A, MRAM_B};
 use crate::dpu::builder::{Label, ProgramBuilder};
 use crate::dpu::isa::{CmpCond, MulVariant, Program, Reg, Src};
 use crate::dpu::LaunchResult;
+use crate::opt::PassConfig;
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -56,6 +57,32 @@ impl DotVariant {
             _ => 2,
         }
     }
+
+    /// Unroll factor the paper's optimized variants apply ("Unrolled
+    /// 8×"); recorded as loop metadata by [`emit_dot_chunk`] and
+    /// realized by the optimizer's unroll pass.
+    pub fn unroll_factor(self) -> u32 {
+        match self {
+            DotVariant::NativeOptimized | DotVariant::Bsdp => 8,
+            _ => 1,
+        }
+    }
+
+    /// Canonical pass pipeline for this variant: baselines keep the
+    /// naive stream; the paper's optimized variants run the structural
+    /// passes, which re-derive the hand-optimized streams (8× unrolled
+    /// bodies, `lsl_add` accumulation) from the naive emitters.
+    pub fn default_passes(self) -> PassConfig {
+        let optimized = matches!(self, DotVariant::NativeOptimized | DotVariant::Bsdp);
+        PassConfig {
+            unroll: true,
+            truncate_mul: false,
+            fuse_shift_add: optimized,
+            fuse_cond_jumps: optimized,
+            eliminate_dead: optimized,
+            dma_double_buffer: false,
+        }
+    }
 }
 
 // Dot-body register convention (used by both the microbenchmark and the
@@ -69,101 +96,125 @@ pub const R_AEND: Reg = Reg(12);
 /// at `R_APTR`/`R_BPTR` (WRAM), accumulating into `R_ACC` (not cleared
 /// here). Clobbers r0..r8 and the pointer registers. `mulsi3` is
 /// required for [`DotVariant::NativeMulsi3`] only.
+///
+/// The emitted stream is *naive*: one element group per iteration and
+/// plain `lsl`+`add` accumulation. The loop carries unroll metadata
+/// (factor = [`DotVariant::unroll_factor`]); the optimizer's unroll and
+/// shift-add passes re-derive the paper's 8×-unrolled, `lsl_add`-fused
+/// streams under [`DotVariant::default_passes`].
 pub fn emit_dot_chunk(
     pb: &mut ProgramBuilder,
     variant: DotVariant,
     elems: u32,
     mulsi3: Option<Label>,
 ) {
+    let factor = variant.unroll_factor();
     match variant {
         DotVariant::NativeBaseline => {
-            assert_eq!(elems % 1 as u32, 0);
             pb.add(R_AEND, R_APTR, elems as i32);
-            let l = pb.here("dot_nb_loop");
+            let (l, lm) = pb.unrollable_loop("dot_nb_loop", elems, factor);
             pb.lbs(Reg(0), R_APTR, 0);
             pb.lbs(Reg(1), R_BPTR, 0);
             pb.mul(MulVariant::SlSl, Reg(0), Reg(0), Src::Reg(Reg(1)));
             pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
-            pb.add(R_APTR, R_APTR, 1);
-            pb.add(R_BPTR, R_BPTR, 1);
-            pb.jcmp(CmpCond::Ltu, R_APTR, Src::Reg(R_AEND), l);
+            pb.unrollable_latch(
+                lm,
+                l,
+                &[(R_APTR, 1), (R_BPTR, 1)],
+                CmpCond::Ltu,
+                R_APTR,
+                Src::Reg(R_AEND),
+            );
         }
         DotVariant::NativeMulsi3 => {
             let mulsi3 = mulsi3.expect("NativeMulsi3 needs the __mulsi3 label");
             pb.add(R_AEND, R_APTR, elems as i32);
-            let l = pb.here("dot_nm_loop");
+            let (l, lm) = pb.unrollable_loop("dot_nm_loop", elems, factor);
             pb.lbs(super::mulsi3::ARG_A, R_APTR, 0);
             pb.lbs(super::mulsi3::ARG_B, R_BPTR, 0);
+            // No precision bound exists here — both operands are data
+            // (a negative INT4 sign-extends to 32 bits), so the call
+            // stays un-annotated and the truncation pass must skip it.
             pb.call(super::mulsi3::LINK, mulsi3);
             pb.add(R_ACC, R_ACC, Src::Reg(super::mulsi3::RESULT));
-            pb.add(R_APTR, R_APTR, 1);
-            pb.add(R_BPTR, R_BPTR, 1);
-            pb.jcmp(CmpCond::Ltu, R_APTR, Src::Reg(R_AEND), l);
+            pb.unrollable_latch(
+                lm,
+                l,
+                &[(R_APTR, 1), (R_BPTR, 1)],
+                CmpCond::Ltu,
+                R_APTR,
+                Src::Reg(R_AEND),
+            );
         }
         DotVariant::NativeOptimized => {
             // 8 elements per iteration via two 64-bit loads, byte pairs
-            // multiplied with matching-lane mul variants; 8× unrolled.
-            const UNROLL: u32 = 8;
-            assert_eq!(elems % (8 * UNROLL), 0, "optimized dot needs 64-element multiples");
+            // multiplied with matching-lane mul variants.
+            assert_eq!(elems % (8 * factor), 0, "optimized dot needs 64-element multiples");
             pb.add(R_AEND, R_APTR, elems as i32);
             let da = crate::dpu::isa::DReg(1); // r2 (low), r3 (high)
             let db = crate::dpu::isa::DReg(2); // r4 (low), r5 (high)
-            let l = pb.here("dot_no_loop");
-            for g in 0..UNROLL {
-                let base = g as i32 * 8;
-                pb.ld(da, R_APTR, base);
-                pb.ld(db, R_BPTR, base);
-                for (wa, wb) in [(Reg(2), Reg(4)), (Reg(3), Reg(5))] {
-                    pb.mul(MulVariant::SlSl, Reg(0), wa, Src::Reg(wb));
-                    pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
-                    pb.mul(MulVariant::ShSh, Reg(0), wa, Src::Reg(wb));
-                    pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
-                    pb.lsr(wa, wa, 16);
-                    pb.lsr(wb, wb, 16);
-                    pb.mul(MulVariant::SlSl, Reg(0), wa, Src::Reg(wb));
-                    pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
-                    pb.mul(MulVariant::ShSh, Reg(0), wa, Src::Reg(wb));
-                    pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
-                }
+            let (l, lm) = pb.unrollable_loop("dot_no_loop", elems / 8, factor);
+            pb.ld(da, R_APTR, 0);
+            pb.ld(db, R_BPTR, 0);
+            for (wa, wb) in [(Reg(2), Reg(4)), (Reg(3), Reg(5))] {
+                pb.mul(MulVariant::SlSl, Reg(0), wa, Src::Reg(wb));
+                pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
+                pb.mul(MulVariant::ShSh, Reg(0), wa, Src::Reg(wb));
+                pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
+                pb.lsr(wa, wa, 16);
+                pb.lsr(wb, wb, 16);
+                pb.mul(MulVariant::SlSl, Reg(0), wa, Src::Reg(wb));
+                pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
+                pb.mul(MulVariant::ShSh, Reg(0), wa, Src::Reg(wb));
+                pb.add(R_ACC, R_ACC, Src::Reg(Reg(0)));
             }
-            pb.add(R_APTR, R_APTR, (8 * UNROLL) as i32);
-            pb.add(R_BPTR, R_BPTR, (8 * UNROLL) as i32);
-            pb.jcmp(CmpCond::Ltu, R_APTR, Src::Reg(R_AEND), l);
+            pb.unrollable_latch(
+                lm,
+                l,
+                &[(R_APTR, 8), (R_BPTR, 8)],
+                CmpCond::Ltu,
+                R_APTR,
+                Src::Reg(R_AEND),
+            );
         }
         DotVariant::Bsdp => {
-            // One 32-element block = 4 plane words per operand (16 B).
-            // 8 blocks per iteration (Algorithm 2's "Unrolled 8×").
-            const UNROLL: u32 = 8;
-            assert_eq!(elems % (32 * UNROLL), 0, "BSDP needs 256-element multiples");
+            // One 32-element block = 4 plane words per operand (16 B)
+            // per iteration (Algorithm 2; its "Unrolled 8×" is the
+            // unroll pass).
+            assert_eq!(elems % (32 * factor), 0, "BSDP needs 256-element multiples");
             let bytes = elems / 2; // nibble planes: 16 B per 32 elements
             pb.add(R_AEND, R_APTR, bytes as i32);
-            let l = pb.here("dot_bs_loop");
-            for blk in 0..UNROLL {
-                let base = blk as i32 * 16;
-                // x planes → r0..r3, y planes → r4..r7.
-                for (i, r) in [Reg(0), Reg(1), Reg(2), Reg(3)].into_iter().enumerate() {
-                    pb.lw(r, R_APTR, base + 4 * i as i32);
-                }
-                for (i, r) in [Reg(4), Reg(5), Reg(6), Reg(7)].into_iter().enumerate() {
-                    pb.lw(r, R_BPTR, base + 4 * i as i32);
-                }
-                for j in 0..4u8 {
-                    for k in 0..4u8 {
-                        pb.and(Reg(8), Reg(j), Src::Reg(Reg(4 + k)));
-                        pb.cao(Reg(8), Reg(8));
-                        if (j == 3) ^ (k == 3) {
-                            // Mixed plane-3 term: subtract (signed INT4).
-                            pb.lsl(Reg(8), Reg(8), (j + k) as i32);
-                            pb.sub(R_ACC, R_ACC, Src::Reg(Reg(8)));
-                        } else {
-                            pb.lsl_add(R_ACC, R_ACC, Reg(8), j + k);
-                        }
+            let (l, lm) = pb.unrollable_loop("dot_bs_loop", elems / 32, factor);
+            // x planes → r0..r3, y planes → r4..r7.
+            for (i, r) in [Reg(0), Reg(1), Reg(2), Reg(3)].into_iter().enumerate() {
+                pb.lw(r, R_APTR, 4 * i as i32);
+            }
+            for (i, r) in [Reg(4), Reg(5), Reg(6), Reg(7)].into_iter().enumerate() {
+                pb.lw(r, R_BPTR, 4 * i as i32);
+            }
+            for j in 0..4u8 {
+                for k in 0..4u8 {
+                    pb.and(Reg(8), Reg(j), Src::Reg(Reg(4 + k)));
+                    pb.cao(Reg(8), Reg(8));
+                    pb.lsl(Reg(8), Reg(8), (j + k) as i32);
+                    if (j == 3) ^ (k == 3) {
+                        // Mixed plane-3 term: subtract (signed INT4).
+                        pb.sub(R_ACC, R_ACC, Src::Reg(Reg(8)));
+                    } else {
+                        // Naive shift-accumulate; the shift-add fusion
+                        // pass folds the pair into one `lsl_add`.
+                        pb.add(R_ACC, R_ACC, Src::Reg(Reg(8)));
                     }
                 }
             }
-            pb.add(R_APTR, R_APTR, (16 * UNROLL) as i32);
-            pb.add(R_BPTR, R_BPTR, (16 * UNROLL) as i32);
-            pb.jcmp(CmpCond::Ltu, R_APTR, Src::Reg(R_AEND), l);
+            pb.unrollable_latch(
+                lm,
+                l,
+                &[(R_APTR, 16), (R_BPTR, 16)],
+                CmpCond::Ltu,
+                R_APTR,
+                Src::Reg(R_AEND),
+            );
         }
     }
 }
@@ -184,8 +235,18 @@ const CHUNK: u32 = 1024;
 
 /// Emit the Fig. 9 microbenchmark for one dot-product variant: stream
 /// paired 1 KB chunks of A and B from MRAM, accumulate the (timed) dot
-/// product, report per-tasklet cycles and partial sums.
+/// product, report per-tasklet cycles and partial sums. Canonical
+/// build: the naive stream through [`DotVariant::default_passes`].
 pub fn emit_dot_microbench(variant: DotVariant) -> Result<Program> {
+    emit_dot_microbench_with(variant, &variant.default_passes())
+}
+
+/// [`emit_dot_microbench`] with an explicit pass configuration.
+pub fn emit_dot_microbench_with(variant: DotVariant, cfg: &PassConfig) -> Result<Program> {
+    Ok(crate::opt::optimize(&emit_dot_microbench_naive(variant)?, cfg).0)
+}
+
+fn emit_dot_microbench_naive(variant: DotVariant) -> Result<Program> {
     let mut pb = ProgramBuilder::new();
     super::def_convention_symbols(&mut pb);
     let main = pb.new_label("main");
@@ -283,8 +344,40 @@ pub fn run_dot_microbench_with(
     elems: usize,
     seed: u64,
 ) -> Result<DotOutcome> {
+    run_dot_microbench_cfg_with(scr, variant, &variant.default_passes(), nr_tasklets, elems, seed)
+}
+
+/// [`run_dot_microbench`] with an explicit optimizer configuration
+/// (differential tests + pass ablation); the dot product is still
+/// verified against the host reference.
+pub fn run_dot_microbench_cfg(
+    variant: DotVariant,
+    cfg: &PassConfig,
+    nr_tasklets: usize,
+    elems: usize,
+    seed: u64,
+) -> Result<DotOutcome> {
+    run_dot_microbench_cfg_with(
+        &mut super::KernelScratch::default(),
+        variant,
+        cfg,
+        nr_tasklets,
+        elems,
+        seed,
+    )
+}
+
+/// [`run_dot_microbench_cfg`] over caller-owned reusable state.
+pub fn run_dot_microbench_cfg_with(
+    scr: &mut super::KernelScratch,
+    variant: DotVariant,
+    cfg: &PassConfig,
+    nr_tasklets: usize,
+    elems: usize,
+    seed: u64,
+) -> Result<DotOutcome> {
     assert_eq!(elems % 2048, 0, "elems must be a multiple of 2048 (1 KB A-chunks)");
-    let program = emit_dot_microbench(variant)?;
+    let program = emit_dot_microbench_with(variant, cfg)?;
     scr.dpu.load_program(&program)?;
 
     let mut rng = Rng::new(seed);

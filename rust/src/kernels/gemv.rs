@@ -36,10 +36,11 @@
 use super::bsdp::{emit_dot_chunk, DotVariant, R_ACC, R_APTR, R_BPTR};
 use super::mulsi3::emit_mulsi3;
 use super::BUF_BASE;
-use crate::dpu::builder::ProgramBuilder;
+use crate::dpu::builder::{Label, ProgramBuilder};
 use crate::dpu::isa::{AluOp, CmpCond, Program, Reg, Src};
 use crate::dpu::symbol::{MemSpace, SymbolTable};
 use crate::dpu::{Dpu, LaunchResult};
+use crate::opt::PassConfig;
 use crate::Result;
 
 /// MRAM offset of the y output region (tasklet-major, see module docs).
@@ -108,6 +109,25 @@ impl GemvVariant {
         let rb = self.row_bytes(cols);
         rb >= CHUNK && rb % CHUNK == 0 && rb.is_power_of_two()
     }
+
+    /// Canonical pass pipeline for this variant: the baseline kernels
+    /// (naive NI loop, `__mulsi3` compiler output) keep the naive
+    /// stream; the paper's optimized kernels run the structural passes
+    /// (8×-unrolled dot bodies via the unroll pass, fused loop latches,
+    /// `lsl_add` accumulation). DMA double-buffering stays off by
+    /// default — it is the pass-enabled variant measured by
+    /// `cargo bench --bench pass_ablation` (≤ 8 tasklets).
+    pub fn default_passes(self) -> PassConfig {
+        let optimized = matches!(self, GemvVariant::I8Opt | GemvVariant::I4Bsdp);
+        PassConfig {
+            unroll: true,
+            truncate_mul: false,
+            fuse_shift_add: optimized,
+            fuse_cond_jumps: optimized,
+            eliminate_dead: optimized,
+            dma_double_buffer: false,
+        }
+    }
 }
 
 // Register map (dot bodies use r0..r12; see bsdp.rs).
@@ -140,29 +160,48 @@ pub fn gemv_symbols() -> SymbolTable {
     t
 }
 
-/// Emit the GEMV kernel for `variant`.
+/// Emit the GEMV kernel for `variant` — the naive stream run through
+/// [`GemvVariant::default_passes`].
 ///
 /// Runtime arguments (WRAM words, see [`gemv_symbols`]): `rows`,
 /// `row_shift` (log2 of the row stride in bytes), `chunks_per_row`,
 /// `nr_tasklets`, and `x_addr` (MRAM base of the x vector — [`GEMV_X`]
 /// or [`GEMV_X_ALT`] under double-buffered pipelining).
 pub fn emit_gemv(variant: GemvVariant) -> Result<Program> {
-    let mut pb = ProgramBuilder::new();
+    emit_gemv_with(variant, &variant.default_passes())
+}
+
+/// [`emit_gemv`] with an explicit pass configuration. When
+/// `cfg.dma_double_buffer` is set the chunk loop is emitted
+/// double-buffered over `ldma_nb`/`dma_wait` (two WRAM buffer pairs per
+/// tasklet, so the next chunk's DMA overlaps the current chunk's MAC
+/// work under the revolver scheduler); that layout supports at most
+/// **8 tasklets** — enforced by [`run_gemv_dpu_with_cfg`].
+pub fn emit_gemv_with(variant: GemvVariant, cfg: &PassConfig) -> Result<Program> {
+    let naive = if cfg.dma_double_buffer {
+        emit_gemv_naive_dbuf(variant)?
+    } else {
+        emit_gemv_naive(variant)?
+    };
+    Ok(crate::opt::optimize(&naive, cfg).0)
+}
+
+/// Shared kernel prologue: symbols, the `__mulsi3` routine when the
+/// variant needs it, the y-staging pointer and the argument loads.
+/// Returns the `__mulsi3` label and the latched x-base register
+/// (`None` under `__mulsi3`, whose ABI owns `r23`).
+fn emit_gemv_prologue(
+    pb: &mut ProgramBuilder,
+    variant: GemvVariant,
+) -> (Option<Label>, Option<Reg>) {
     for d in gemv_symbols().iter() {
         pb.def_symbol(&d.name, d.space, d.addr, d.bytes);
     }
     let main = pb.new_label("main");
     pb.jump(main);
     let mulsi3 =
-        if variant == GemvVariant::I8Mulsi3 { Some(emit_mulsi3(&mut pb)) } else { None };
+        if variant == GemvVariant::I8Mulsi3 { Some(emit_mulsi3(pb)) } else { None };
     pb.bind(main);
-
-    // Buffers: M chunk at BUF_BASE + 2048*id, x chunk right after,
-    // y staging at YBUF_BASE + 512*id.
-    pb.move_(R_MBUF, Src::Id8);
-    pb.lsl(R_MBUF, R_MBUF, 8);
-    pb.add(R_MBUF, R_MBUF, BUF_BASE as i32);
-    pb.add(R_XBUF, R_MBUF, CHUNK as i32);
     pb.move_(R_YPTR, Src::Id8);
     pb.lsl(R_YPTR, R_YPTR, 6);
     pb.add(R_YPTR, R_YPTR, YBUF_BASE as i32);
@@ -179,17 +218,12 @@ pub fn emit_gemv(variant: GemvVariant) -> Result<Program> {
     if let Some(r) = xbase {
         pb.lw(r, Reg(3), 16);
     }
-    // First row of this tasklet.
-    pb.move_(R_ROW, Src::Id);
+    (mulsi3, xbase)
+}
 
-    let rows_done = pb.new_label("rows_done");
-    let row_loop = pb.here("row_loop");
-    pb.jcmp(CmpCond::Geu, R_ROW, Src::Reg(R_ROWS), rows_done);
-    pb.move_(R_ACC, Src::Zero);
-    // Row base: GEMV_M + (row << cshift).
-    pb.alu(AluOp::Lsl, R_MCUR, R_ROW, Src::Reg(R_CSHIFT));
-    pb.add(R_MCUR, R_MCUR, GEMV_M as i32);
-    // x base comes from the `x_addr` argument (double-buffering).
+/// Per-row x-cursor initialisation from the latched register or the
+/// `x_addr` argument word.
+fn emit_xcur_init(pb: &mut ProgramBuilder, xbase: Option<Reg>) {
     match xbase {
         Some(r) => pb.move_(R_XCUR, Src::Reg(r)),
         None => {
@@ -199,17 +233,11 @@ pub fn emit_gemv(variant: GemvVariant) -> Result<Program> {
             pb.lw(R_XCUR, Reg(3), 16);
         }
     }
-    pb.move_(R_CCNT, R_NCHUNK);
-    let chunk_loop = pb.here("chunk_loop");
-    pb.ldma(R_MBUF, R_MCUR, CHUNK);
-    pb.ldma(R_XBUF, R_XCUR, CHUNK);
-    pb.move_(R_APTR, R_MBUF);
-    pb.move_(R_BPTR, R_XBUF);
-    emit_dot_chunk(&mut pb, variant.dot(), variant.chunk_elems(), mulsi3);
-    pb.add(R_MCUR, R_MCUR, CHUNK as i32);
-    pb.add(R_XCUR, R_XCUR, CHUNK as i32);
-    pb.sub(R_CCNT, R_CCNT, 1);
-    pb.jcmp(CmpCond::Neq, R_CCNT, Src::Zero, chunk_loop);
+}
+
+/// Row epilogue + kernel epilogue: y store, row advance, barrier and
+/// the 512 B y-staging write-back.
+fn emit_gemv_epilogue(pb: &mut ProgramBuilder, row_loop: Label, rows_done: Label) {
     // Store y and advance to this tasklet's next row. r3 was clobbered
     // by the dot body, so re-derive the args base before reloading T.
     pb.sw(R_YPTR, 0, R_ACC);
@@ -227,6 +255,100 @@ pub fn emit_gemv(variant: GemvVariant) -> Result<Program> {
     pb.add(Reg(6), Reg(4), GEMV_Y as i32);
     pb.sdma(Reg(5), Reg(6), YBUF_STRIDE);
     pb.stop();
+}
+
+/// The synchronous-DMA kernel (the paper's shape): per chunk, blocking
+/// `ldma` of the M and x chunks, then the dot body.
+fn emit_gemv_naive(variant: GemvVariant) -> Result<Program> {
+    let mut pb = ProgramBuilder::new();
+    let (mulsi3, xbase) = emit_gemv_prologue(&mut pb, variant);
+    // Buffers: M chunk at BUF_BASE + 2048*id, x chunk right after,
+    // y staging at YBUF_BASE + 512*id.
+    pb.move_(R_MBUF, Src::Id8);
+    pb.lsl(R_MBUF, R_MBUF, 8);
+    pb.add(R_MBUF, R_MBUF, BUF_BASE as i32);
+    pb.add(R_XBUF, R_MBUF, CHUNK as i32);
+    // First row of this tasklet.
+    pb.move_(R_ROW, Src::Id);
+
+    let rows_done = pb.new_label("rows_done");
+    let row_loop = pb.here("row_loop");
+    pb.jcmp(CmpCond::Geu, R_ROW, Src::Reg(R_ROWS), rows_done);
+    pb.move_(R_ACC, Src::Zero);
+    // Row base: GEMV_M + (row << cshift).
+    pb.alu(AluOp::Lsl, R_MCUR, R_ROW, Src::Reg(R_CSHIFT));
+    pb.add(R_MCUR, R_MCUR, GEMV_M as i32);
+    // x base comes from the `x_addr` argument (double-buffering).
+    emit_xcur_init(&mut pb, xbase);
+    pb.move_(R_CCNT, R_NCHUNK);
+    let chunk_loop = pb.here("chunk_loop");
+    pb.ldma(R_MBUF, R_MCUR, CHUNK);
+    pb.ldma(R_XBUF, R_XCUR, CHUNK);
+    pb.move_(R_APTR, R_MBUF);
+    pb.move_(R_BPTR, R_XBUF);
+    emit_dot_chunk(&mut pb, variant.dot(), variant.chunk_elems(), mulsi3);
+    pb.add(R_MCUR, R_MCUR, CHUNK as i32);
+    pb.add(R_XCUR, R_XCUR, CHUNK as i32);
+    pb.sub(R_CCNT, R_CCNT, 1);
+    pb.jcmp(CmpCond::Neq, R_CCNT, Src::Zero, chunk_loop);
+    emit_gemv_epilogue(&mut pb, row_loop, rows_done);
+    pb.build()
+}
+
+/// The DMA double-buffered kernel: two (M, x) WRAM buffer pairs per
+/// tasklet toggled by XOR, the *next* chunk prefetched with `ldma_nb`
+/// before the current chunk's dot body runs, and a single `dma_wait`
+/// at the top of each iteration. Per-tasklet WRAM cost doubles to
+/// 4 KB, so the layout supports at most 8 tasklets
+/// (`BUF_BASE + 8 × 4096 = 0x8100 ≤ YBUF_BASE`).
+fn emit_gemv_naive_dbuf(variant: GemvVariant) -> Result<Program> {
+    let mut pb = ProgramBuilder::new();
+    let (mulsi3, xbase) = emit_gemv_prologue(&mut pb, variant);
+    // Pair 0 at BUF_BASE + 4096*id (M chunk, then x chunk); pair 1 is
+    // `XOR 2048` away. R_MBUF holds the per-tasklet pair-0 base, R_XBUF
+    // the pair currently being computed from.
+    let r_cur = R_XBUF;
+    pb.move_(R_MBUF, Src::Id8);
+    pb.lsl(R_MBUF, R_MBUF, 9);
+    pb.add(R_MBUF, R_MBUF, BUF_BASE as i32);
+    pb.move_(R_ROW, Src::Id);
+
+    let rows_done = pb.new_label("rows_done");
+    let row_loop = pb.here("row_loop");
+    pb.jcmp(CmpCond::Geu, R_ROW, Src::Reg(R_ROWS), rows_done);
+    pb.move_(R_ACC, Src::Zero);
+    pb.alu(AluOp::Lsl, R_MCUR, R_ROW, Src::Reg(R_CSHIFT));
+    pb.add(R_MCUR, R_MCUR, GEMV_M as i32);
+    emit_xcur_init(&mut pb, xbase);
+    pb.move_(R_CCNT, R_NCHUNK);
+    // Prefetch chunk 0 into pair 0, then advance the MRAM cursors so
+    // they always point at the *next* chunk.
+    pb.move_(r_cur, Src::Reg(R_MBUF));
+    pb.ldma_nb(r_cur, R_MCUR, CHUNK);
+    pb.add(Reg(6), r_cur, CHUNK as i32);
+    pb.ldma_nb(Reg(6), R_XCUR, CHUNK);
+    pb.add(R_MCUR, R_MCUR, CHUNK as i32);
+    pb.add(R_XCUR, R_XCUR, CHUNK as i32);
+    let skip_pref = pb.new_label("skip_prefetch");
+    let chunk_loop = pb.here("chunk_loop");
+    pb.dma_wait();
+    pb.sub(R_CCNT, R_CCNT, 1);
+    pb.jcmp(CmpCond::Eq, R_CCNT, Src::Zero, skip_pref);
+    // Prefetch the next chunk into the other pair while this chunk
+    // computes from the current one.
+    pb.xor(Reg(6), r_cur, 2048);
+    pb.ldma_nb(Reg(6), R_MCUR, CHUNK);
+    pb.add(Reg(7), Reg(6), CHUNK as i32);
+    pb.ldma_nb(Reg(7), R_XCUR, CHUNK);
+    pb.add(R_MCUR, R_MCUR, CHUNK as i32);
+    pb.add(R_XCUR, R_XCUR, CHUNK as i32);
+    pb.bind(skip_pref);
+    pb.move_(R_APTR, r_cur);
+    pb.add(R_BPTR, r_cur, CHUNK as i32);
+    emit_dot_chunk(&mut pb, variant.dot(), variant.chunk_elems(), mulsi3);
+    pb.xor(r_cur, r_cur, 2048); // swap buffer pairs
+    pb.jcmp(CmpCond::Neq, R_CCNT, Src::Zero, chunk_loop);
+    emit_gemv_epilogue(&mut pb, row_loop, rows_done);
     pb.build()
 }
 
@@ -275,10 +397,32 @@ pub fn run_gemv_dpu(
     m: &[i8],
     x: &[i8],
 ) -> Result<(Vec<i32>, LaunchResult)> {
+    run_gemv_dpu_with_cfg(variant, &variant.default_passes(), shape, nr_tasklets, m, x)
+}
+
+/// [`run_gemv_dpu`] with an explicit optimizer configuration
+/// (differential tests + pass ablation). The double-buffered layout
+/// doubles per-tasklet WRAM to 4 KB, so `dma_double_buffer` rejects
+/// more than 8 tasklets (the buffers would collide with the y staging
+/// region at [`YBUF_BASE`]).
+pub fn run_gemv_dpu_with_cfg(
+    variant: GemvVariant,
+    cfg: &PassConfig,
+    shape: GemvShape,
+    nr_tasklets: usize,
+    m: &[i8],
+    x: &[i8],
+) -> Result<(Vec<i32>, LaunchResult)> {
     shape.validate(variant, nr_tasklets)?;
+    if cfg.dma_double_buffer && nr_tasklets > 8 {
+        return Err(crate::Error::Coordinator(format!(
+            "DMA double-buffering supports at most 8 tasklets (got {nr_tasklets}): \
+             two 2 KB buffer pairs per tasklet exhaust WRAM below the y staging region"
+        )));
+    }
     assert_eq!(m.len(), shape.rows as usize * shape.cols as usize);
     assert_eq!(x.len(), shape.cols as usize);
-    let program = emit_gemv(variant)?;
+    let program = emit_gemv_with(variant, cfg)?;
     let mut dpu = Dpu::new();
     dpu.load_program(&program)?;
     stage_gemv_inputs(&mut dpu, variant, shape, m, x)?;

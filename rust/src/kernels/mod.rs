@@ -15,6 +15,16 @@
 //!   transposition for BSDP and INT4 packing (the AVX512 work the paper
 //!   runs on the host).
 //!
+//! Every emitter produces a *naive*, compiler-shaped stream plus
+//! optimizer metadata (loop markers, bounded `__mulsi3` call sites);
+//! the paper's assembly optimizations are applied post hoc by the
+//! [`crate::opt`] pass pipeline. Each variant's canonical build runs
+//! its `default_passes()` config — chosen so baselines keep the naive
+//! stream and the "optimized" variants reproduce the paper's
+//! hand-tuned assembly exactly — while the `*_cfg` runners take any
+//! [`crate::opt::PassConfig`] for differential testing and per-pass
+//! ablation.
+//!
 //! # WRAM layout convention
 //!
 //! All kernels share a calling convention with the host:

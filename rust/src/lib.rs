@@ -35,6 +35,12 @@
 //! bit-serial dot product, and the INT8/INT4 GEMV kernels) are emitted as
 //! DPU assembly by [`kernels`] and executed on the simulator, which is how
 //! the repository regenerates every figure of the paper's evaluation.
+//! Kernels emit *naive*, compiler-shaped streams; the paper's assembly
+//! optimizations (cond-jump fusion, shift-add fusion, `mul_step` chain
+//! truncation, unrolling, dead-code elimination) are applied post hoc by
+//! the [`opt`] pass pipeline, so every "baseline vs optimized" gap is a
+//! measurable transformation with a per-pass ablation
+//! (`cargo bench --bench pass_ablation`).
 
 pub mod alloc;
 pub mod bench_support;
@@ -44,6 +50,7 @@ pub mod cpu_ref;
 pub mod dpu;
 pub mod host;
 pub mod kernels;
+pub mod opt;
 pub mod runtime;
 pub mod transfer;
 pub mod util;

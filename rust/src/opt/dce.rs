@@ -1,0 +1,172 @@
+//! Dead-nop, jump-to-next and unreachable-code elimination.
+//!
+//! * executable `nop`s (codegen padding) are removed — branches into a
+//!   removed `nop` fall through to the next kept instruction, which is
+//!   exactly what the `nop` did;
+//! * an unconditional `jump @pc+1` is a wasted issue slot — removed the
+//!   same way (e.g. the kernel prologue's `jump main` when no routine
+//!   sits between entry and `main`);
+//! * instructions unreachable from pc 0 are removed (e.g. a `__mulsi3`
+//!   routine whose every call site was inlined by the truncation pass).
+//!
+//! Reachability treats a `call` as reaching both its target and its
+//! fall-through, and relies on the builder discipline that
+//! register-target jumps only return to call sites — their possible
+//! targets are therefore already reachable as call fall-throughs.
+
+use super::{delete_instrs, PassStats};
+use crate::dpu::isa::{Instr, JumpTarget, Program};
+
+fn reachable(instrs: &[Instr]) -> Vec<bool> {
+    let n = instrs.len();
+    let mut seen = vec![false; n];
+    let mut work = vec![0usize];
+    while let Some(pc) = work.pop() {
+        if pc >= n || seen[pc] {
+            continue;
+        }
+        seen[pc] = true;
+        let mut push = |t: usize| work.push(t);
+        match &instrs[pc] {
+            Instr::Jump { target: JumpTarget::Pc(t) } => push(*t as usize),
+            Instr::Jump { target: JumpTarget::Reg(_) } => {} // returns to a call fall-through
+            Instr::JCmp { target, .. } => {
+                push(pc + 1);
+                push(*target as usize);
+            }
+            Instr::Call { target, .. } => {
+                push(*target as usize);
+                push(pc + 1);
+            }
+            Instr::Stop | Instr::Fault => {}
+            i => {
+                push(pc + 1);
+                let cj = match i {
+                    Instr::Move { cj, .. }
+                    | Instr::Alu { cj, .. }
+                    | Instr::Mul { cj, .. }
+                    | Instr::MulStep { cj, .. }
+                    | Instr::LslAdd { cj, .. }
+                    | Instr::Cao { cj, .. } => *cj,
+                    _ => None,
+                };
+                if let Some((_, t)) = cj {
+                    push(t as usize);
+                }
+            }
+        }
+    }
+    seen
+}
+
+pub(crate) fn run(p: &mut Program, stats: &mut PassStats) {
+    let n = p.instrs.len();
+    if n == 0 {
+        return;
+    }
+    let seen = reachable(&p.instrs);
+    let mut remove = vec![false; n];
+    for pc in 0..n {
+        let jump_to_next = matches!(
+            p.instrs[pc],
+            Instr::Jump { target: JumpTarget::Pc(t) } if t as usize == pc + 1
+        );
+        if !seen[pc] {
+            remove[pc] = true;
+            stats.unreachable_removed += 1;
+        } else if matches!(p.instrs[pc], Instr::Nop) {
+            remove[pc] = true;
+            stats.nops_removed += 1;
+        } else if jump_to_next {
+            remove[pc] = true;
+            stats.jumps_to_next_removed += 1;
+        }
+    }
+    if remove.iter().any(|&r| r) {
+        delete_instrs(p, &remove);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::{assemble, Dpu};
+
+    #[test]
+    fn nops_and_jump_to_next_removed() {
+        let p = assemble(
+            "jump @main\n\
+             main:\n\
+             nop\n\
+             move r0, 1\n\
+             nop\n\
+             move r1, 0\n\
+             sw r1, 0, r0\n\
+             stop\n",
+        )
+        .unwrap();
+        let mut stats = PassStats::default();
+        let mut opt = p.clone();
+        run(&mut opt, &mut stats);
+        assert_eq!(stats.nops_removed, 2);
+        assert_eq!(stats.jumps_to_next_removed, 1);
+        assert_eq!(opt.instrs.len(), 4);
+        let mut d = Dpu::new();
+        d.load_program(&opt).unwrap();
+        d.launch(1).unwrap();
+        assert_eq!(d.wram.load32(0).unwrap(), 1);
+    }
+
+    #[test]
+    fn unreachable_routine_removed_but_called_one_kept() {
+        let with_call = assemble(
+            "move r0, 2\n\
+             call r23, @double\n\
+             stop\n\
+             double:\n\
+             add r0, r0, r0\n\
+             jump r23\n",
+        )
+        .unwrap();
+        let mut stats = PassStats::default();
+        let mut opt = with_call.clone();
+        run(&mut opt, &mut stats);
+        assert_eq!(stats.unreachable_removed, 0);
+
+        let without_call = assemble(
+            "move r0, 2\n\
+             stop\n\
+             double:\n\
+             add r0, r0, r0\n\
+             jump r23\n",
+        )
+        .unwrap();
+        let mut stats = PassStats::default();
+        let mut opt = without_call.clone();
+        run(&mut opt, &mut stats);
+        assert_eq!(stats.unreachable_removed, 2);
+        assert_eq!(opt.instrs.len(), 2);
+        assert!(opt.label("double").is_none(), "label into removed code dropped");
+    }
+
+    #[test]
+    fn branch_into_removed_nop_falls_through() {
+        let p = assemble(
+            "jeq r0, 0, @pad\n\
+             fault\n\
+             pad:\n\
+             nop\n\
+             move r1, 0\n\
+             sw r1, 0, r1\n\
+             stop\n",
+        )
+        .unwrap();
+        let mut stats = PassStats::default();
+        let mut opt = p.clone();
+        run(&mut opt, &mut stats);
+        assert_eq!(stats.nops_removed, 1);
+        let mut d = Dpu::new();
+        d.load_program(&opt).unwrap();
+        d.launch(1).expect("the branch must land on the instruction after the nop");
+    }
+}

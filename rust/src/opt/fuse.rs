@@ -1,0 +1,269 @@
+//! Peephole fusion passes.
+//!
+//! * **cond-jump fusion** — UPMEM ALU instructions carry a free
+//!   *(condition, target)* slot evaluated on the result. A separate
+//!   `jcmp rd, 0, @t` (or unconditional `jump @t`) immediately after an
+//!   instruction that produced `rd` is therefore a wasted issue slot:
+//!   the pair fuses into one instruction (the paper's zero-cost
+//!   conditional-issue trick, §III/§IV).
+//! * **shift-add fusion** — `lsl t, a, imm` + `add d, x, t` →
+//!   `lsl_add d, x, a, imm` when the shifted temporary `t` is dead
+//!   afterwards (backward liveness proof), the single-instruction
+//!   shift-accumulate of §IV-B.
+
+use super::liveness;
+use super::{delete_instrs, static_targets, PassStats};
+use crate::dpu::isa::{AluOp, CmpCond, Cond, Instr, JumpTarget, Program, Reg, Src};
+
+/// The fused condition equivalent to `jcmp cond, rd, 0` evaluated on
+/// the producing instruction's result, when one exists.
+fn zero_cmp_cond(c: CmpCond) -> Option<Cond> {
+    match c {
+        CmpCond::Eq | CmpCond::Leu => Some(Cond::Z),
+        CmpCond::Neq | CmpCond::Gtu => Some(Cond::Nz),
+        CmpCond::Lts => Some(Cond::Neg),
+        CmpCond::Ges => Some(Cond::Pos),
+        _ => None,
+    }
+}
+
+fn is_zero(s: Src) -> bool {
+    matches!(s, Src::Zero | Src::Imm(0))
+}
+
+/// The register whose value equals the instruction's condition-slot
+/// result, for cj-capable instructions with an empty slot.
+fn fusable_result_reg(i: &Instr) -> Option<Reg> {
+    match *i {
+        Instr::Move { rd, cj: None, .. }
+        | Instr::Alu { rd, cj: None, .. }
+        | Instr::Mul { rd, cj: None, .. }
+        | Instr::LslAdd { rd, cj: None, .. }
+        | Instr::Cao { rd, cj: None, .. } => Some(rd),
+        // mul_step's condition is evaluated on the new d.lo.
+        Instr::MulStep { dd, cj: None, .. } => Some(dd.lo()),
+        _ => None,
+    }
+}
+
+fn set_cj(i: &mut Instr, c: Cond, target: u32) {
+    match i {
+        Instr::Move { cj, .. }
+        | Instr::Alu { cj, .. }
+        | Instr::Mul { cj, .. }
+        | Instr::MulStep { cj, .. }
+        | Instr::LslAdd { cj, .. }
+        | Instr::Cao { cj, .. } => *cj = Some((c, target)),
+        other => panic!("set_cj on non-fusable instruction {other:?}"),
+    }
+}
+
+/// Fuse `alu`+`jcmp`/`move`+`jump` pairs into condition slots.
+pub(crate) fn cond_jumps(p: &mut Program, stats: &mut PassStats) {
+    let targets = static_targets(p);
+    let n = p.instrs.len();
+    let mut remove = vec![false; n];
+    let mut i = 0usize;
+    while i + 1 < n {
+        // The jump being absorbed must not itself be addressable.
+        if targets[i + 1] {
+            i += 1;
+            continue;
+        }
+        let fused = match (fusable_result_reg(&p.instrs[i]), &p.instrs[i + 1]) {
+            // Unconditional jump: always-taken condition slot.
+            (Some(_), Instr::Jump { target: JumpTarget::Pc(t) }) => Some((Cond::True, *t)),
+            // Zero-compare on the result register just produced.
+            (Some(rd), &Instr::JCmp { cond, ra, b, target }) if ra == rd && is_zero(b) => {
+                zero_cmp_cond(cond).map(|c| (c, target))
+            }
+            _ => None,
+        };
+        if let Some((c, t)) = fused {
+            set_cj(&mut p.instrs[i], c, t);
+            remove[i + 1] = true;
+            stats.cond_jumps_fused += 1;
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    if remove.iter().any(|&r| r) {
+        delete_instrs(p, &remove);
+    }
+}
+
+/// Fuse `lsl t, a, imm` + `add d, x, t` into `lsl_add d, x, a, imm`.
+pub(crate) fn shift_add(p: &mut Program, stats: &mut PassStats) {
+    let targets = static_targets(p);
+    let live = liveness::live_out(&p.instrs);
+    let n = p.instrs.len();
+    let mut remove = vec![false; n];
+    let mut i = 0usize;
+    while i + 1 < n {
+        if targets[i + 1] {
+            i += 1;
+            continue;
+        }
+        let (t, a, sh) = match p.instrs[i] {
+            Instr::Alu { op: AluOp::Lsl, rd, ra, b: Src::Imm(sh), cj: None }
+                if (0..32).contains(&sh) =>
+            {
+                (rd, ra, sh as u8)
+            }
+            _ => {
+                i += 1;
+                continue;
+            }
+        };
+        let (d, x, cj) = match p.instrs[i + 1] {
+            Instr::Alu { op: AluOp::Add, rd, ra, b: Src::Reg(rb), cj } => {
+                // Exactly one add operand must be the shifted temp; the
+                // other becomes `lsl_add`'s un-shifted addend.
+                if ra == t && rb != t {
+                    (rd, rb, cj)
+                } else if rb == t && ra != t {
+                    (rd, ra, cj)
+                } else {
+                    i += 1;
+                    continue;
+                }
+            }
+            _ => {
+                i += 1;
+                continue;
+            }
+        };
+        // The shifted value must be dead after the add (the fused form
+        // leaves `t` holding its pre-shift value).
+        if t != d && live[i + 1] & (1 << t.0) != 0 {
+            i += 1;
+            continue;
+        }
+        p.instrs[i] = Instr::LslAdd { rd: d, ra: x, rb: a, shift: sh, cj };
+        remove[i + 1] = true;
+        stats.shift_adds_fused += 1;
+        i += 2;
+    }
+    if remove.iter().any(|&r| r) {
+        delete_instrs(p, &remove);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::{assemble, Dpu};
+
+    fn run_both(src: &str) -> (Dpu, Dpu, PassStats) {
+        let naive = assemble(src).unwrap();
+        let mut stats = PassStats::default();
+        let mut opt = naive.clone();
+        shift_add(&mut opt, &mut stats);
+        cond_jumps(&mut opt, &mut stats);
+        let mut d1 = Dpu::new();
+        d1.load_program(&naive).unwrap();
+        d1.launch(1).unwrap();
+        let mut d2 = Dpu::new();
+        d2.load_program(&opt).unwrap();
+        d2.launch(1).unwrap();
+        (d1, d2, stats)
+    }
+
+    #[test]
+    fn counter_latch_fuses_and_matches() {
+        let src = "move r0, 10\n\
+                   move r1, 0\n\
+                   top:\n\
+                   add r1, r1, 2\n\
+                   sub r0, r0, 1\n\
+                   jneq r0, 0, @top\n\
+                   move r2, 64\n\
+                   sw r2, 0, r1\n\
+                   stop\n";
+        let (d1, d2, stats) = run_both(src);
+        assert_eq!(stats.cond_jumps_fused, 1);
+        assert_eq!(d1.wram.as_slice(), d2.wram.as_slice());
+        assert_eq!(d2.wram.load32(64).unwrap(), 20);
+    }
+
+    #[test]
+    fn move_jump_fuses() {
+        let src = "move r0, 7\n\
+                   jump @out\n\
+                   fault\n\
+                   out:\n\
+                   move r1, 0\n\
+                   sw r1, 0, r0\n\
+                   stop\n";
+        let (d1, d2, stats) = run_both(src);
+        assert_eq!(stats.cond_jumps_fused, 1);
+        assert_eq!(d1.wram.as_slice(), d2.wram.as_slice());
+    }
+
+    #[test]
+    fn targeted_jump_not_fused() {
+        // The jump at pc 2 is itself a branch target — absorbing it
+        // would break the branch from pc 0.
+        let src = "jeq r0, 0, @j\n\
+                   fault\n\
+                   j:\n\
+                   jump @out\n\
+                   fault\n\
+                   out:\n\
+                   stop\n";
+        let naive = assemble(src).unwrap();
+        let mut stats = PassStats::default();
+        let mut opt = naive.clone();
+        cond_jumps(&mut opt, &mut stats);
+        assert_eq!(stats.cond_jumps_fused, 0);
+        assert_eq!(opt.instrs, naive.instrs);
+    }
+
+    #[test]
+    fn shift_add_fuses_dead_temp() {
+        let src = "move r0, 3\n\
+                   move r1, 100\n\
+                   lsl r0, r0, 4\n\
+                   add r1, r1, r0\n\
+                   move r0, 0\n\
+                   sw r0, 0, r1\n\
+                   stop\n";
+        let naive = assemble(src).unwrap();
+        let mut stats = PassStats::default();
+        let mut opt = naive.clone();
+        shift_add(&mut opt, &mut stats);
+        assert_eq!(stats.shift_adds_fused, 1);
+        assert!(opt
+            .instrs
+            .iter()
+            .any(|i| matches!(i, Instr::LslAdd { shift: 4, .. })));
+        let mut d1 = Dpu::new();
+        d1.load_program(&naive).unwrap();
+        d1.launch(1).unwrap();
+        let mut d2 = Dpu::new();
+        d2.load_program(&opt).unwrap();
+        d2.launch(1).unwrap();
+        assert_eq!(d1.wram.load32(0).unwrap(), 148);
+        assert_eq!(d2.wram.load32(0).unwrap(), 148);
+    }
+
+    #[test]
+    fn shift_add_respects_liveness() {
+        // r0 (the shifted temp) is stored afterwards — fusing would
+        // leave it un-shifted.
+        let src = "move r0, 3\n\
+                   move r1, 100\n\
+                   lsl r0, r0, 4\n\
+                   add r1, r1, r0\n\
+                   move r2, 0\n\
+                   sw r2, 0, r0\n\
+                   stop\n";
+        let naive = assemble(src).unwrap();
+        let mut stats = PassStats::default();
+        let mut opt = naive.clone();
+        shift_add(&mut opt, &mut stats);
+        assert_eq!(stats.shift_adds_fused, 0);
+        assert_eq!(opt.instrs, naive.instrs);
+    }
+}

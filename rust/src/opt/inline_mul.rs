@@ -1,0 +1,169 @@
+//! `mul_step` chain truncation (§III-C).
+//!
+//! The compiler lowers every integer multiply to `call __mulsi3`: an
+//! unsigned-compare swap, a 32-step `mul_step` chain with `z` early
+//! exit, and a register-jump return (Fig. 4). When the emitter can
+//! bound the multiplier operand — the microbenchmark scalar is a
+//! compile-time contract: 8 bits for INT8, 24 bits for the INT32
+//! scalar — the chain only ever needs `multiplier_bits` steps, and the
+//! call/swap/return scaffolding is pure overhead. This pass replaces
+//! each annotated call site ([`MulCallSite`]) with the inline truncated
+//! chain:
+//!
+//! ```text
+//! move r2, r0                        ; multiplicand ← a
+//! move r0, r1                        ; multiplier  ← b (< 2^K)
+//! move r1, zero                      ; accumulator
+//! mul_step d0, r2, d0, 0, z, @done   ; K steps, z early exit
+//! ...
+//! mul_step d0, r2, d0, K-1, z, @done
+//! done: move r0, r1                  ; result (the __mulsi3 ABI)
+//! ```
+//!
+//! Architecturally visible state matches the routine exactly except for
+//! `r2` (left holding the multiplicand instead of the routine's swap
+//! residue) and the un-written link register — both dead after the call
+//! by the [`MulCallSite`] contract. Note the trade-off the paper's
+//! static truncation shares: the routine's swap runs `bitlen(min(a,b))`
+//! steps, the inline chain `bitlen(b)`, so data much smaller than the
+//! bound can make individual multiplies slower — on random operands the
+//! elided call overhead wins (pinned by the differential bench).
+
+use super::{remap_instr_targets, PassStats};
+use crate::dpu::isa::{Cond, DReg, Instr, Program, Reg, Src};
+
+pub(crate) fn run(p: &mut Program, stats: &mut PassStats) {
+    let n = p.instrs.len();
+    // Validated sites, by pc.
+    let mut site_bits = vec![0u8; n];
+    let mut any = false;
+    for c in &p.meta.mul_calls {
+        let pc = c.pc as usize;
+        if pc < n
+            && matches!(p.instrs[pc], Instr::Call { .. })
+            && (1..32).contains(&c.multiplier_bits)
+        {
+            site_bits[pc] = c.multiplier_bits;
+            any = true;
+        }
+    }
+    if !any {
+        return;
+    }
+
+    // old pc → new pc. A call site expands to K + 4 instructions.
+    let mut map = Vec::with_capacity(n + 1);
+    let mut new_len = 0u32;
+    for pc in 0..n {
+        map.push(new_len);
+        new_len += if site_bits[pc] > 0 { site_bits[pc] as u32 + 4 } else { 1 };
+    }
+    map.push(new_len);
+
+    let mut out = Vec::with_capacity(new_len as usize);
+    for pc in 0..n {
+        let bits = site_bits[pc];
+        if bits == 0 {
+            let mut i = p.instrs[pc];
+            remap_instr_targets(&mut i, &map);
+            out.push(i);
+            continue;
+        }
+        let done = map[pc] + 3 + bits as u32;
+        out.push(Instr::Move { rd: Reg(2), src: Src::Reg(Reg(0)), cj: None });
+        out.push(Instr::Move { rd: Reg(0), src: Src::Reg(Reg(1)), cj: None });
+        out.push(Instr::Move { rd: Reg(1), src: Src::Zero, cj: None });
+        for k in 0..bits {
+            out.push(Instr::MulStep {
+                dd: DReg(0),
+                ra: Reg(2),
+                shift: k,
+                cj: Some((Cond::Z, done)),
+            });
+        }
+        out.push(Instr::Move { rd: Reg(0), src: Src::Reg(Reg(1)), cj: None });
+        stats.mul_calls_inlined += 1;
+        stats.mul_steps_elided += 32 - bits as usize;
+    }
+    p.instrs = out;
+    for (_, pc) in p.labels.iter_mut() {
+        *pc = map[*pc as usize];
+    }
+    for l in p.meta.loops.iter_mut() {
+        l.head = map[l.head as usize];
+        l.body_end = map[l.body_end as usize];
+        l.latch_end = map[l.latch_end as usize];
+    }
+    // All annotated sites are consumed; drop the records (un-validated
+    // ones too — their pcs may now be stale).
+    p.meta.mul_calls.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::builder::ProgramBuilder;
+    use crate::dpu::Dpu;
+    use crate::kernels::mulsi3::{emit_mulsi3, ARG_A, ARG_B, LINK, RESULT};
+    use crate::util::rng::Rng;
+
+    /// a × b through an annotated call, naive vs truncated.
+    fn harness(bits: u8) -> (crate::dpu::Program, crate::dpu::Program) {
+        let mut pb = ProgramBuilder::new();
+        let main = pb.new_label("main");
+        pb.jump(main);
+        let mulsi3 = emit_mulsi3(&mut pb);
+        pb.bind(main);
+        pb.move_(Reg(10), 0x40);
+        pb.lw(ARG_A, Reg(10), 0);
+        pb.lw(ARG_B, Reg(10), 4);
+        pb.call_mul_bounded(LINK, mulsi3, bits);
+        pb.sw(Reg(10), 8, RESULT);
+        pb.stop();
+        let naive = pb.build().unwrap();
+        let mut stats = PassStats::default();
+        let mut opt = naive.clone();
+        run(&mut opt, &mut stats);
+        assert_eq!(stats.mul_calls_inlined, 1);
+        assert_eq!(stats.mul_steps_elided, 32 - bits as usize);
+        (naive, opt)
+    }
+
+    fn eval(p: &crate::dpu::Program, a: u32, b: u32) -> (u32, u64) {
+        let mut dpu = Dpu::new();
+        dpu.load_program(p).unwrap();
+        dpu.wram.store32(0x40, a).unwrap();
+        dpu.wram.store32(0x44, b).unwrap();
+        let r = dpu.launch(1).unwrap();
+        (dpu.wram.load32(0x48).unwrap(), r.instrs)
+    }
+
+    #[test]
+    fn truncated_chain_matches_routine() {
+        let (naive, opt) = harness(8);
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let a = rng.next_u32();
+            let b = rng.next_u64() as u32 & 0xFF; // honors the 8-bit bound
+            assert_eq!(eval(&naive, a, b).0, eval(&opt, a, b).0, "a={a:#x} b={b}");
+            assert_eq!(eval(&opt, a, b).0, a.wrapping_mul(b));
+        }
+    }
+
+    #[test]
+    fn inline_chain_skips_call_overhead_on_wide_multipliers() {
+        let (naive, opt) = harness(24);
+        // A full-width 24-bit multiplier: the routine pays the swap +
+        // call + return on top of the same 24 steps.
+        let (_, ni) = eval(&naive, 0x8000_0001, 0x00FF_FFFF);
+        let (_, oi) = eval(&opt, 0x8000_0001, 0x00FF_FFFF);
+        assert!(oi < ni, "inline {oi} >= routine {ni}");
+    }
+
+    #[test]
+    fn zero_multiplier_exits_first_step() {
+        let (naive, opt) = harness(8);
+        assert_eq!(eval(&naive, 1234, 0).0, 0);
+        assert_eq!(eval(&opt, 1234, 0).0, 0);
+    }
+}

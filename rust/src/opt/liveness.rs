@@ -1,0 +1,178 @@
+//! Backward register-liveness analysis over a [`Program`]'s CFG, used
+//! by the shift-add fusion pass to prove the shifted temporary dead.
+//!
+//! Conservative choices: a register-target `jump` is treated as a
+//! function return with *every* register live (the caller may read
+//! anything), and a `call`'s successors are both its target and its
+//! fall-through return site.
+
+use crate::dpu::isa::{Instr, JumpTarget, Reg, Src};
+
+/// Bitmask over the 24 general-purpose registers.
+pub(crate) const ALL_REGS: u32 = (1 << Reg::NUM) - 1;
+
+#[inline]
+fn bit(r: Reg) -> u32 {
+    1 << r.0
+}
+
+#[inline]
+fn src_bit(s: Src) -> u32 {
+    match s {
+        Src::Reg(r) => bit(r),
+        _ => 0,
+    }
+}
+
+/// Registers read by one instruction.
+pub(crate) fn reads(i: &Instr) -> u32 {
+    match *i {
+        Instr::Move { src, .. } => src_bit(src),
+        Instr::Alu { ra, b, .. } | Instr::Mul { ra, b, .. } => bit(ra) | src_bit(b),
+        Instr::MulStep { dd, ra, .. } => bit(dd.lo()) | bit(dd.hi()) | bit(ra),
+        Instr::LslAdd { ra, rb, .. } => bit(ra) | bit(rb),
+        Instr::Cao { ra, .. } => bit(ra),
+        Instr::Load { ra, .. } | Instr::Ld { ra, .. } => bit(ra),
+        Instr::Store { ra, rs, .. } => bit(ra) | bit(rs),
+        Instr::Sd { ra, ds, .. } => bit(ra) | bit(ds.lo()) | bit(ds.hi()),
+        Instr::Jump { target: JumpTarget::Reg(r) } => bit(r),
+        Instr::Jump { target: JumpTarget::Pc(_) } => 0,
+        Instr::JCmp { ra, b, .. } => bit(ra) | src_bit(b),
+        Instr::Call { .. } => 0,
+        Instr::Ldma { wram, mram, .. }
+        | Instr::Sdma { wram, mram, .. }
+        | Instr::LdmaNb { wram, mram, .. } => bit(wram) | bit(mram),
+        Instr::DmaWait
+        | Instr::Barrier
+        | Instr::Time { .. }
+        | Instr::Stop
+        | Instr::Fault
+        | Instr::Nop => 0,
+    }
+}
+
+/// Registers written by one instruction.
+pub(crate) fn writes(i: &Instr) -> u32 {
+    match *i {
+        Instr::Move { rd, .. }
+        | Instr::Alu { rd, .. }
+        | Instr::Mul { rd, .. }
+        | Instr::LslAdd { rd, .. }
+        | Instr::Cao { rd, .. }
+        | Instr::Load { rd, .. }
+        | Instr::Time { rd } => bit(rd),
+        Instr::MulStep { dd, .. } | Instr::Ld { dd, .. } => bit(dd.lo()) | bit(dd.hi()),
+        Instr::Call { link, .. } => bit(link),
+        _ => 0,
+    }
+}
+
+/// Successor pcs of the instruction at `pc` (`None` in the slot means
+/// "returns via register jump": treated as all-live by the caller).
+fn successors(i: &Instr, pc: usize, out: &mut Vec<usize>) {
+    out.clear();
+    let cj = match i {
+        Instr::Move { cj, .. }
+        | Instr::Alu { cj, .. }
+        | Instr::Mul { cj, .. }
+        | Instr::MulStep { cj, .. }
+        | Instr::LslAdd { cj, .. }
+        | Instr::Cao { cj, .. } => *cj,
+        _ => None,
+    };
+    match i {
+        Instr::Jump { target: JumpTarget::Pc(t) } => out.push(*t as usize),
+        Instr::Jump { target: JumpTarget::Reg(_) } => {} // handled as all-live
+        Instr::JCmp { target, .. } => {
+            out.push(pc + 1);
+            out.push(*target as usize);
+        }
+        Instr::Call { target, .. } => {
+            out.push(*target as usize);
+            out.push(pc + 1);
+        }
+        Instr::Stop | Instr::Fault => {}
+        _ => {
+            out.push(pc + 1);
+            if let Some((_, t)) = cj {
+                out.push(t as usize);
+            }
+        }
+    }
+}
+
+/// Per-pc live-out register masks.
+pub(crate) fn live_out(instrs: &[Instr]) -> Vec<u32> {
+    let n = instrs.len();
+    let mut live_in = vec![0u32; n];
+    let mut out = vec![0u32; n];
+    let mut succ = Vec::with_capacity(4);
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for pc in (0..n).rev() {
+            let i = &instrs[pc];
+            let o = if matches!(i, Instr::Jump { target: JumpTarget::Reg(_) }) {
+                ALL_REGS
+            } else {
+                successors(i, pc, &mut succ);
+                let mut m = 0u32;
+                for &s in &succ {
+                    if s < n {
+                        m |= live_in[s];
+                    }
+                }
+                m
+            };
+            let inn = reads(i) | (o & !writes(i));
+            if o != out[pc] || inn != live_in[pc] {
+                out[pc] = o;
+                live_in[pc] = inn;
+                changed = true;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::assemble;
+
+    #[test]
+    fn straightline_liveness() {
+        // r1 is written then read by the store; r2 written, never read.
+        let p = assemble(
+            "move r1, 5\n\
+             move r2, 6\n\
+             move r3, 0\n\
+             sw r3, 0, r1\n\
+             stop\n",
+        )
+        .unwrap();
+        let out = live_out(&p.instrs);
+        assert_ne!(out[0] & (1 << 1), 0, "r1 live after its def");
+        assert_eq!(out[1] & (1 << 2), 0, "r2 dead after its def");
+    }
+
+    #[test]
+    fn loop_keeps_counter_live() {
+        let p = assemble(
+            "move r0, 10\n\
+             top:\n\
+             sub r0, r0, 1\n\
+             jneq r0, 0, @top\n\
+             stop\n",
+        )
+        .unwrap();
+        let out = live_out(&p.instrs);
+        assert_ne!(out[1] & 1, 0, "loop counter live around the back edge");
+    }
+
+    #[test]
+    fn register_jump_is_all_live() {
+        let p = assemble("jump r23\n").unwrap();
+        assert_eq!(live_out(&p.instrs)[0], ALL_REGS);
+    }
+}

@@ -1,0 +1,365 @@
+//! Post-hoc instruction-stream optimizer over built [`Program`]s.
+//!
+//! The paper's core result (§III, §VI) is that *modifying
+//! compiler-generated assembly* — fusing ALU results into the
+//! instructions' built-in condition/jump slots, truncating `__mulsi3`'s
+//! 32-step `mul_step` chain by operand precision, and restructuring
+//! loops — buys 1.6–2× on integer add and 1.4–5.9× on multiply. This
+//! module turns those edits into ordered, individually-toggleable
+//! passes over the simulator's [`Program`] form, so every kernel keeps
+//! one *naive* emitter (the compiler-shaped stream) and the optimized
+//! variants become a measurable transformation instead of a second
+//! hand-written emitter:
+//!
+//! 1. **unroll** ([`unroll`]) — replicate marked loop bodies
+//!    ([`LoopMeta`]) with per-copy load/store offset rewriting;
+//! 2. **truncate_mul** ([`inline_mul`]) — replace bounded-multiplier
+//!    `call __mulsi3` sites ([`MulCallSite`]) with an inline
+//!    `multiplier_bits`-step `mul_step` chain (§III-C), dropping the
+//!    call/swap/return overhead;
+//! 3. **fuse_shift_add** ([`fuse`]) — `lsl` + `add` → `lsl_add`
+//!    (liveness-checked);
+//! 4. **fuse_cond_jumps** ([`fuse`]) — ALU/`move` + zero-compare-jump
+//!    (or unconditional jump) → the fused condition slot UPMEM encodes
+//!    inside ALU instructions;
+//! 5. **eliminate_dead** ([`dce`]) — `nop`s, jumps-to-next, and
+//!    unreachable code (e.g. a fully-inlined `__mulsi3` routine).
+//!
+//! Every pass is architecturally invisible: WRAM/MRAM effects and
+//! kernel outputs are bit-identical between naive and optimized
+//! streams (differential tests in `rust/tests/opt_differential.rs` and
+//! the random-program property in `rust/tests/kernel_properties.rs`);
+//! only modeled cycles change. The [`PassConfig::dma_double_buffer`]
+//! knob is consumed by the GEMV *emitter* (it allocates a second WRAM
+//! buffer pair, which a stream rewrite cannot), but rides in the same
+//! config so the ablation harness treats it as one more pass.
+//!
+//! Soundness assumptions (guaranteed by [`ProgramBuilder`] emitters,
+//! documented here because hand-built metadata could violate them):
+//! register-target jumps are only used to return from `call`s, and the
+//! metadata contracts of [`MulCallSite`] / [`LoopMeta`] hold.
+
+mod dce;
+mod fuse;
+mod inline_mul;
+mod liveness;
+mod unroll;
+
+use crate::dpu::isa::{Instr, JumpTarget, Program};
+
+/// Which passes to run (see module docs for the pass order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PassConfig {
+    /// Replicate marked loop bodies by their metadata factor.
+    pub unroll: bool,
+    /// Inline bounded-multiplier `__mulsi3` calls as truncated
+    /// `mul_step` chains (§III-C).
+    pub truncate_mul: bool,
+    /// Fuse `lsl` + `add` into `lsl_add` (§IV-B's shift-accumulate).
+    pub fuse_shift_add: bool,
+    /// Fuse ALU results into condition/jump slots (`alu`+`jcmp` →
+    /// `alu_cj`, `move`+`jump` → `move_cj`).
+    pub fuse_cond_jumps: bool,
+    /// Remove nops, jumps-to-next and unreachable code.
+    pub eliminate_dead: bool,
+    /// Emit the GEMV inner loop double-buffered over `ldma_nb` +
+    /// `dma_wait` (consumed by [`crate::kernels::gemv`]'s emitter;
+    /// requires ≤ 8 tasklets — two 2 KB buffer pairs per tasklet).
+    pub dma_double_buffer: bool,
+}
+
+/// One toggleable pass, for ablation drivers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    Unroll,
+    TruncateMul,
+    FuseShiftAdd,
+    FuseCondJumps,
+    EliminateDead,
+    DmaDoubleBuffer,
+}
+
+/// Every pass, in pipeline order.
+pub const ALL_PASSES: [Pass; 6] = [
+    Pass::Unroll,
+    Pass::TruncateMul,
+    Pass::FuseShiftAdd,
+    Pass::FuseCondJumps,
+    Pass::EliminateDead,
+    Pass::DmaDoubleBuffer,
+];
+
+impl Pass {
+    pub fn name(self) -> &'static str {
+        match self {
+            Pass::Unroll => "unroll",
+            Pass::TruncateMul => "truncate_mul",
+            Pass::FuseShiftAdd => "fuse_shift_add",
+            Pass::FuseCondJumps => "fuse_cond_jumps",
+            Pass::EliminateDead => "eliminate_dead",
+            Pass::DmaDoubleBuffer => "dma_double_buffer",
+        }
+    }
+}
+
+impl PassConfig {
+    /// Everything off — the naive, compiler-shaped stream.
+    pub fn none() -> PassConfig {
+        PassConfig {
+            unroll: false,
+            truncate_mul: false,
+            fuse_shift_add: false,
+            fuse_cond_jumps: false,
+            eliminate_dead: false,
+            dma_double_buffer: false,
+        }
+    }
+
+    /// Every pass on (the full §III/§VI treatment).
+    pub fn all() -> PassConfig {
+        PassConfig {
+            unroll: true,
+            truncate_mul: true,
+            fuse_shift_add: true,
+            fuse_cond_jumps: true,
+            eliminate_dead: true,
+            dma_double_buffer: true,
+        }
+    }
+
+    /// Toggle one pass (ablation drivers: `PassConfig::all().set(p, false)`).
+    pub fn set(mut self, pass: Pass, on: bool) -> PassConfig {
+        match pass {
+            Pass::Unroll => self.unroll = on,
+            Pass::TruncateMul => self.truncate_mul = on,
+            Pass::FuseShiftAdd => self.fuse_shift_add = on,
+            Pass::FuseCondJumps => self.fuse_cond_jumps = on,
+            Pass::EliminateDead => self.eliminate_dead = on,
+            Pass::DmaDoubleBuffer => self.dma_double_buffer = on,
+        }
+        self
+    }
+
+    pub fn enabled(&self, pass: Pass) -> bool {
+        match pass {
+            Pass::Unroll => self.unroll,
+            Pass::TruncateMul => self.truncate_mul,
+            Pass::FuseShiftAdd => self.fuse_shift_add,
+            Pass::FuseCondJumps => self.fuse_cond_jumps,
+            Pass::EliminateDead => self.eliminate_dead,
+            Pass::DmaDoubleBuffer => self.dma_double_buffer,
+        }
+    }
+}
+
+/// What each pass did — the machine-readable side of the ablation
+/// tables ("fused jumps saved, mul_steps elided, …").
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PassStats {
+    /// Loops whose body was replicated.
+    pub loops_unrolled: usize,
+    /// Extra body copies inserted (factor − 1 per unrolled loop).
+    pub loop_copies_added: usize,
+    /// Marked loops skipped because a validity check failed.
+    pub loops_skipped: usize,
+    /// Bounded `__mulsi3` calls replaced by inline chains.
+    pub mul_calls_inlined: usize,
+    /// Static `mul_step`s elided vs the routine's 32-step chain.
+    pub mul_steps_elided: usize,
+    /// `lsl`+`add` pairs fused into `lsl_add`.
+    pub shift_adds_fused: usize,
+    /// ALU/`move` + jump pairs fused into condition slots.
+    pub cond_jumps_fused: usize,
+    /// Executable `nop`s removed.
+    pub nops_removed: usize,
+    /// Jumps to the immediately following instruction removed.
+    pub jumps_to_next_removed: usize,
+    /// Unreachable instructions removed.
+    pub unreachable_removed: usize,
+}
+
+/// Run the configured passes over `p` in pipeline order.
+pub fn optimize(p: &Program, cfg: &PassConfig) -> (Program, PassStats) {
+    let mut out = p.clone();
+    let mut stats = PassStats::default();
+    if cfg.unroll {
+        unroll::run(&mut out, &mut stats);
+    }
+    if cfg.truncate_mul {
+        inline_mul::run(&mut out, &mut stats);
+    }
+    if cfg.fuse_shift_add {
+        fuse::shift_add(&mut out, &mut stats);
+    }
+    if cfg.fuse_cond_jumps {
+        fuse::cond_jumps(&mut out, &mut stats);
+    }
+    if cfg.eliminate_dead {
+        dce::run(&mut out, &mut stats);
+    }
+    (out, stats)
+}
+
+// ---- shared pc-remapping machinery --------------------------------------
+
+/// Remap one branch-target pc through `map` (old pc → new pc).
+pub(crate) fn remap_instr_targets(i: &mut Instr, map: &[u32]) {
+    match i {
+        Instr::Move { cj: Some((_, t)), .. }
+        | Instr::Alu { cj: Some((_, t)), .. }
+        | Instr::Mul { cj: Some((_, t)), .. }
+        | Instr::MulStep { cj: Some((_, t)), .. }
+        | Instr::LslAdd { cj: Some((_, t)), .. }
+        | Instr::Cao { cj: Some((_, t)), .. }
+        | Instr::JCmp { target: t, .. }
+        | Instr::Call { target: t, .. } => *t = map[*t as usize],
+        Instr::Jump { target: JumpTarget::Pc(t) } => *t = map[*t as usize],
+        _ => {}
+    }
+}
+
+/// The statically-known branch target of one instruction, if any: the
+/// fused condition slot's pc, a `jcmp`/`call` target, or a direct
+/// `jump` pc. The single source of truth the read-only analyses share
+/// (the mutating twin is [`remap_instr_targets`] above — keep the two
+/// in sync when the ISA grows a new branching instruction).
+pub(crate) fn static_target_of(i: &Instr) -> Option<u32> {
+    match i {
+        Instr::Move { cj: Some((_, t)), .. }
+        | Instr::Alu { cj: Some((_, t)), .. }
+        | Instr::Mul { cj: Some((_, t)), .. }
+        | Instr::MulStep { cj: Some((_, t)), .. }
+        | Instr::LslAdd { cj: Some((_, t)), .. }
+        | Instr::Cao { cj: Some((_, t)), .. }
+        | Instr::JCmp { target: t, .. }
+        | Instr::Call { target: t, .. } => Some(*t),
+        Instr::Jump { target: JumpTarget::Pc(t) } => Some(*t),
+        _ => None,
+    }
+}
+
+/// All statically-known branch-target pcs plus every `call`'s return pc
+/// (register jumps return there) plus label pcs — the set of positions
+/// a deletion/fusion pass must leave addressable.
+pub(crate) fn static_targets(p: &Program) -> Vec<bool> {
+    let n = p.instrs.len();
+    let mut t = vec![false; n + 1];
+    let mut mark = |pc: u32| {
+        if (pc as usize) <= n {
+            t[pc as usize] = true;
+        }
+    };
+    for (pc, i) in p.instrs.iter().enumerate() {
+        if let Some(tg) = static_target_of(i) {
+            mark(tg);
+        }
+        if matches!(i, Instr::Call { .. }) {
+            mark(pc as u32 + 1); // register-jump return site
+        }
+    }
+    for &(_, pc) in &p.labels {
+        mark(pc);
+    }
+    t
+}
+
+/// Delete the instructions marked in `remove`, remapping every branch
+/// target, label and metadata record. A deleted pc maps to the next
+/// kept instruction, which is semantics-preserving for the deletions
+/// the passes perform (`nop`s, jumps-to-next, fused-away second halves,
+/// unreachable code). Labels and metadata pointing *at* deleted
+/// instructions are dropped.
+pub(crate) fn delete_instrs(p: &mut Program, remove: &[bool]) {
+    let n = p.instrs.len();
+    debug_assert_eq!(remove.len(), n);
+    // map[i] = number of kept instructions before i — the new pc of a
+    // kept i, and the next kept position for a removed i.
+    let mut map = Vec::with_capacity(n + 1);
+    let mut kept = 0u32;
+    for &r in remove {
+        map.push(kept);
+        if !r {
+            kept += 1;
+        }
+    }
+    map.push(kept);
+
+    let mut idx = 0usize;
+    p.instrs.retain(|_| {
+        let keep = !remove[idx];
+        idx += 1;
+        keep
+    });
+    for i in p.instrs.iter_mut() {
+        remap_instr_targets(i, &map);
+    }
+    p.labels.retain_mut(|(_, pc)| {
+        if remove[*pc as usize] {
+            false
+        } else {
+            *pc = map[*pc as usize];
+            true
+        }
+    });
+    p.meta.mul_calls.retain_mut(|c| {
+        if remove[c.pc as usize] {
+            false
+        } else {
+            c.pc = map[c.pc as usize];
+            true
+        }
+    });
+    p.meta.loops.retain_mut(|l| {
+        // Drop a loop record when any instruction inside it was removed
+        // (conservative: the recorded shape no longer holds).
+        if (l.head..l.latch_end).any(|pc| remove[pc as usize]) {
+            false
+        } else {
+            l.head = map[l.head as usize];
+            l.body_end = map[l.body_end as usize];
+            l.latch_end = map[l.latch_end as usize];
+            true
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::assemble;
+
+    #[test]
+    fn none_config_is_identity() {
+        let p = assemble("move r0, 1\nadd r0, r0, 2\nstop\n").unwrap();
+        let (o, stats) = optimize(&p, &PassConfig::none());
+        assert_eq!(o.instrs, p.instrs);
+        assert_eq!(stats, PassStats::default());
+    }
+
+    #[test]
+    fn delete_remaps_targets_and_labels() {
+        let mut p = assemble(
+            "jump @end\n\
+             nop\n\
+             end:\n\
+             move r0, 1\n\
+             stop\n",
+        )
+        .unwrap();
+        let remove = vec![false, true, false, false];
+        delete_instrs(&mut p, &remove);
+        assert_eq!(p.instrs.len(), 3);
+        assert_eq!(p.label("end"), Some(1));
+        assert_eq!(p.instrs[0], Instr::Jump { target: JumpTarget::Pc(1) });
+    }
+
+    #[test]
+    fn config_set_and_enabled_agree() {
+        for pass in ALL_PASSES {
+            assert!(!PassConfig::none().enabled(pass));
+            assert!(PassConfig::all().enabled(pass));
+            assert!(!PassConfig::all().set(pass, false).enabled(pass));
+            assert!(PassConfig::none().set(pass, true).enabled(pass));
+        }
+    }
+}

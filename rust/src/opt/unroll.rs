@@ -1,0 +1,376 @@
+//! Metadata-driven loop unrolling (§III-D's `#pragma unroll` analogue).
+//!
+//! Replicates a marked loop body [`LoopMeta`] `factor` times, shifting
+//! the load/store offsets of each induction pointer by `copy × step`,
+//! then emits one scaled latch (`add ptr, ptr, factor × step` per
+//! induction + the original `jcmp`). The result is exactly the stream
+//! the paper's hand-unrolled kernels used to emit, but derived from the
+//! naive single-body loop — `Unroll` is a pass parameter now, not
+//! per-kernel emit logic.
+//!
+//! Validity is re-checked against the instructions (a marked loop that
+//! fails any check is skipped and counted in
+//! [`PassStats::loops_skipped`]): the body must be straight-line
+//! (`call`s allowed — they return to the copy that made them), must not
+//! write an induction register, and may read induction registers only
+//! as load/store bases; the latch must be the canonical
+//! adds-then-`jcmp` shape; offsets must not overflow.
+
+use super::{remap_instr_targets, PassStats};
+use crate::dpu::isa::{AluOp, Instr, LoopMeta, Program, Reg, Src};
+use crate::opt::liveness::{reads, writes};
+
+fn induction_mask(l: &LoopMeta) -> u32 {
+    l.inductions.iter().fold(0u32, |m, &(r, _)| m | (1 << r.0))
+}
+
+/// Per-instruction check: may this body instruction be replicated, and
+/// if so, which induction step shifts its offset?
+fn body_instr_ok(i: &Instr, l: &LoopMeta) -> bool {
+    let ind = induction_mask(l);
+    match i {
+        // Straight-line only; the fused condition slots are still empty
+        // in naive streams (fusion runs after unrolling).
+        Instr::Jump { .. }
+        | Instr::JCmp { .. }
+        | Instr::Barrier
+        | Instr::Stop
+        | Instr::Fault
+        | Instr::Time { .. }
+        | Instr::Ldma { .. }
+        | Instr::Sdma { .. }
+        | Instr::LdmaNb { .. }
+        | Instr::DmaWait => false,
+        Instr::Move { cj: Some(_), .. }
+        | Instr::Alu { cj: Some(_), .. }
+        | Instr::Mul { cj: Some(_), .. }
+        | Instr::MulStep { cj: Some(_), .. }
+        | Instr::LslAdd { cj: Some(_), .. }
+        | Instr::Cao { cj: Some(_), .. } => false,
+        // Memory ops may read an induction pointer, but only as the
+        // base register; other operands must not touch inductions.
+        Instr::Load { ra, .. } | Instr::Ld { ra, .. } => {
+            let others = reads(i) & !(1u32 << ra.0);
+            writes(i) & ind == 0 && others & ind == 0
+        }
+        Instr::Store { ra, .. } | Instr::Sd { ra, .. } => {
+            let others = reads(i) & !(1u32 << ra.0);
+            others & ind == 0
+        }
+        // Calls are replicated verbatim; the callee must preserve
+        // inductions (the marker contract).
+        Instr::Call { link, .. } => (1u32 << link.0) & ind == 0,
+        // Plain ALU work: must neither read nor write inductions.
+        _ => reads(i) & ind == 0 && writes(i) & ind == 0,
+    }
+}
+
+fn step_of(l: &LoopMeta, base: Reg) -> Option<i32> {
+    l.inductions.iter().find(|&&(r, _)| r == base).map(|&(_, s)| s)
+}
+
+/// Shift the memory offset of a body instruction for replica `copy`.
+fn shifted(i: &Instr, l: &LoopMeta, copy: u32) -> Option<Instr> {
+    let mut out = *i;
+    let (base, off) = match &mut out {
+        Instr::Load { ra, off, .. } => (*ra, off),
+        Instr::Ld { ra, off, .. } => (*ra, off),
+        Instr::Store { ra, off, .. } => (*ra, off),
+        Instr::Sd { ra, off, .. } => (*ra, off),
+        _ => return Some(out),
+    };
+    match step_of(l, base) {
+        None => Some(out),
+        Some(step) => {
+            let delta = step.checked_mul(copy as i32)?;
+            *off = off.checked_add(delta)?;
+            Some(out)
+        }
+    }
+}
+
+/// Full validity check for one marked loop.
+fn validate(p: &Program, l: &LoopMeta, targets: &[bool]) -> bool {
+    let n = p.instrs.len() as u32;
+    if !(l.head < l.body_end && l.body_end < l.latch_end && l.latch_end <= n) {
+        return false;
+    }
+    if l.factor < 2 || l.trip_count % l.factor != 0 || l.inductions.is_empty() {
+        return false;
+    }
+    // Latch shape: one add per induction, then a jcmp back to head.
+    let adds = &p.instrs[l.body_end as usize..(l.latch_end - 1) as usize];
+    if adds.len() != l.inductions.len() {
+        return false;
+    }
+    for (instr, &(r, step)) in adds.iter().zip(&l.inductions) {
+        match *instr {
+            Instr::Alu { op: AluOp::Add, rd, ra, b: Src::Imm(s), cj: None }
+                if rd == r && ra == r && s == step => {}
+            _ => return false,
+        }
+        // The scaled step must be representable.
+        if step.checked_mul(l.factor as i32).is_none() {
+            return false;
+        }
+    }
+    match p.instrs[(l.latch_end - 1) as usize] {
+        Instr::JCmp { target, .. } if target == l.head => {}
+        _ => return false,
+    }
+    // Body instructions replicable; offsets must not overflow at the
+    // highest replica.
+    for i in &p.instrs[l.head as usize..l.body_end as usize] {
+        if !body_instr_ok(i, l) || shifted(i, l, l.factor - 1).is_none() {
+            return false;
+        }
+    }
+    // No branch from outside may land strictly inside the loop (the
+    // head is the only legal entry).
+    for (pc, t) in targets.iter().enumerate().take(l.latch_end as usize) {
+        let pc = pc as u32;
+        if *t && pc > l.head && pc < l.latch_end && !inside_static_ok(p, l, pc) {
+            return false;
+        }
+    }
+    true
+}
+
+/// A target strictly inside the loop is acceptable only if every branch
+/// to it comes from inside the same loop — naive emitters never do
+/// this, so keep the check simple and conservative: reject any interior
+/// static target except call-return fall-throughs of the loop's own
+/// calls.
+fn inside_static_ok(p: &Program, l: &LoopMeta, pc: u32) -> bool {
+    // Call-return sites: `static_targets` marks call_pc + 1. Those are
+    // produced by the loop's own calls and are not branch targets.
+    if pc == 0 {
+        return false;
+    }
+    let prev = pc - 1;
+    if prev >= l.head && pc <= l.latch_end {
+        if let Instr::Call { .. } = p.instrs[prev as usize] {
+            // Ensure no *other* instruction statically targets pc.
+            return !statically_branched_to(p, pc);
+        }
+    }
+    false
+}
+
+fn statically_branched_to(p: &Program, pc: u32) -> bool {
+    p.instrs.iter().any(|i| super::static_target_of(i) == Some(pc))
+}
+
+pub(crate) fn run(p: &mut Program, stats: &mut PassStats) {
+    let targets = super::static_targets(p);
+    let mut cands: Vec<LoopMeta> = Vec::new();
+    for l in &p.meta.loops {
+        if l.factor >= 2 {
+            if validate(p, l, &targets) {
+                cands.push(l.clone());
+            } else {
+                stats.loops_skipped += 1;
+            }
+        }
+    }
+    if cands.is_empty() {
+        return;
+    }
+    cands.sort_by_key(|l| l.head);
+    // Marked loops are disjoint by construction; drop overlaps defensively.
+    cands.dedup_by(|b, a| {
+        if b.head < a.latch_end {
+            stats.loops_skipped += 1;
+            true
+        } else {
+            false
+        }
+    });
+
+    let n = p.instrs.len();
+    // old pc → new pc (copy 0 positions for body pcs).
+    let mut map = vec![0u32; n + 1];
+    let mut new_len = 0u32;
+    let mut i = 0usize;
+    let mut li = 0usize;
+    while i < n {
+        if li < cands.len() && cands[li].head as usize == i {
+            let l = &cands[li];
+            let body_len = (l.body_end - l.head) as usize;
+            let latch_len = (l.latch_end - l.body_end) as usize;
+            for k in 0..body_len {
+                map[i + k] = new_len + k as u32;
+            }
+            let latch_new = new_len + (l.factor as usize * body_len) as u32;
+            for k in 0..latch_len {
+                map[l.body_end as usize + k] = latch_new + k as u32;
+            }
+            new_len = latch_new + latch_len as u32;
+            i = l.latch_end as usize;
+            li += 1;
+        } else {
+            map[i] = new_len;
+            new_len += 1;
+            i += 1;
+        }
+    }
+    map[n] = new_len;
+
+    let mut out: Vec<Instr> = Vec::with_capacity(new_len as usize);
+    let mut new_mul_calls = Vec::new();
+    let mut i = 0usize;
+    let mut li = 0usize;
+    while i < n {
+        if li < cands.len() && cands[li].head as usize == i {
+            let l = &cands[li];
+            for copy in 0..l.factor {
+                for pc in l.head..l.body_end {
+                    let mut instr =
+                        shifted(&p.instrs[pc as usize], l, copy).expect("validated offsets");
+                    remap_instr_targets(&mut instr, &map);
+                    // Replicate bounded-mul annotations into each copy.
+                    if let Some(c) = p.meta.mul_calls.iter().find(|c| c.pc == pc) {
+                        new_mul_calls.push(crate::dpu::isa::MulCallSite {
+                            pc: out.len() as u32,
+                            multiplier_bits: c.multiplier_bits,
+                        });
+                    }
+                    out.push(instr);
+                }
+            }
+            // Scaled latch adds.
+            for &(r, step) in &l.inductions {
+                out.push(Instr::Alu {
+                    op: AluOp::Add,
+                    rd: r,
+                    ra: r,
+                    b: Src::Imm(step * l.factor as i32),
+                    cj: None,
+                });
+            }
+            let mut jcmp = p.instrs[(l.latch_end - 1) as usize];
+            remap_instr_targets(&mut jcmp, &map);
+            out.push(jcmp);
+            stats.loops_unrolled += 1;
+            stats.loop_copies_added += l.factor as usize - 1;
+            i = l.latch_end as usize;
+            li += 1;
+        } else {
+            if let Some(c) = p.meta.mul_calls.iter().find(|c| c.pc as usize == i) {
+                new_mul_calls.push(crate::dpu::isa::MulCallSite {
+                    pc: out.len() as u32,
+                    multiplier_bits: c.multiplier_bits,
+                });
+            }
+            let mut instr = p.instrs[i];
+            remap_instr_targets(&mut instr, &map);
+            out.push(instr);
+            i += 1;
+        }
+    }
+    p.instrs = out;
+    for (_, pc) in p.labels.iter_mut() {
+        *pc = map[*pc as usize];
+    }
+    p.meta.mul_calls = new_mul_calls;
+    // Unrolled loops are consumed; remap the (skipped) remainder.
+    let consumed: Vec<u32> = cands.iter().map(|l| l.head).collect();
+    p.meta.loops.retain_mut(|l| {
+        if consumed.contains(&l.head) {
+            false
+        } else {
+            l.head = map[l.head as usize];
+            l.body_end = map[l.body_end as usize];
+            l.latch_end = map[l.latch_end as usize];
+            true
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::builder::ProgramBuilder;
+    use crate::dpu::isa::CmpCond;
+    use crate::dpu::Dpu;
+    use crate::opt::PassConfig;
+
+    /// buf[i] += 1 over `trip` bytes starting at WRAM 0x200, marked
+    /// unrollable by `factor`.
+    fn inc_loop(trip: u32, factor: u32) -> crate::dpu::Program {
+        let mut pb = ProgramBuilder::new();
+        let ptr = Reg(10);
+        let pend = Reg(11);
+        pb.move_(ptr, 0x200);
+        pb.add(pend, ptr, trip as i32);
+        let (head, lm) = pb.unrollable_loop("l", trip, factor);
+        pb.lbu(Reg(0), ptr, 0);
+        pb.add(Reg(0), Reg(0), 1);
+        pb.sb(ptr, 0, Reg(0));
+        pb.unrollable_latch(lm, head, &[(ptr, 1)], CmpCond::Ltu, ptr, Src::Reg(pend));
+        pb.stop();
+        pb.build().unwrap()
+    }
+
+    #[test]
+    fn unrolled_loop_is_shorter_in_cycles_and_identical_in_memory() {
+        let naive = inc_loop(16, 4);
+        let mut stats = PassStats::default();
+        let mut opt = naive.clone();
+        run(&mut opt, &mut stats);
+        assert_eq!(stats.loops_unrolled, 1);
+        assert_eq!(stats.loop_copies_added, 3);
+        // 3-instr body ×4 copies + add + jcmp, vs rolled 5 per iter.
+        assert_eq!(opt.instrs.len(), naive.instrs.len() + 3 * 3);
+
+        let run_p = |p: &crate::dpu::Program| {
+            let mut d = Dpu::new();
+            d.load_program(p).unwrap();
+            let r = d.launch(1).unwrap();
+            (d, r)
+        };
+        let (d1, r1) = run_p(&naive);
+        let (d2, r2) = run_p(&opt);
+        assert_eq!(d1.wram.as_slice(), d2.wram.as_slice());
+        assert!(r2.instrs < r1.instrs, "{} >= {}", r2.instrs, r1.instrs);
+        for a in 0x200..0x210u32 {
+            assert_eq!(d2.wram.load8(a).unwrap(), 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn non_dividing_factor_is_rejected_by_the_builder() {
+        let mut pb = ProgramBuilder::new();
+        pb.unrollable_loop("l", 10, 3);
+    }
+
+    #[test]
+    fn factor_one_loop_is_untouched() {
+        let naive = inc_loop(16, 1);
+        let (opt, stats) = crate::opt::optimize(&naive, &PassConfig::all());
+        assert_eq!(stats.loops_unrolled, 0);
+        assert_eq!(stats.loops_skipped, 0);
+        // (fusion may still touch the latch; the loop itself stays rolled)
+        assert!(opt.instrs.len() <= naive.instrs.len());
+    }
+
+    #[test]
+    fn body_writing_induction_is_skipped() {
+        // Hand-build bad metadata: the body writes the induction reg.
+        let mut pb = ProgramBuilder::new();
+        let ptr = Reg(10);
+        pb.move_(ptr, 0x200);
+        let (head, lm) = pb.unrollable_loop("l", 8, 2);
+        pb.add(ptr, ptr, 0); // writes the induction inside the body
+        pb.unrollable_latch(lm, head, &[(ptr, 1)], CmpCond::Ltu, ptr, 0x208);
+        pb.stop();
+        let p = pb.build().unwrap();
+        let mut stats = PassStats::default();
+        let mut opt = p.clone();
+        run(&mut opt, &mut stats);
+        assert_eq!(stats.loops_unrolled, 0);
+        assert_eq!(stats.loops_skipped, 1);
+        assert_eq!(opt.instrs, p.instrs);
+    }
+}

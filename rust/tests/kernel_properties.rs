@@ -2,11 +2,15 @@
 //! (mini-harness in `util::proptest`; the offline cache has no
 //! proptest crate).
 
-use upmem_unleashed::dpu::{assemble, Dpu};
+use upmem_unleashed::dpu::builder::ProgramBuilder;
+use upmem_unleashed::dpu::isa::CmpCond;
+use upmem_unleashed::dpu::{assemble, Dpu, Program, Reg, Src};
 use upmem_unleashed::kernels::arith::{
     emit_microbench, run_microbench, DType, MulImpl, Spec, Unroll,
 };
 use upmem_unleashed::kernels::encode;
+use upmem_unleashed::kernels::mulsi3::{emit_mulsi3, ARG_A, ARG_B, LINK, RESULT};
+use upmem_unleashed::opt::{PassConfig, ALL_PASSES};
 use upmem_unleashed::transfer::model::BufferPlacement;
 use upmem_unleashed::transfer::topology::SystemTopology;
 use upmem_unleashed::transfer::{Direction, TransferModel};
@@ -251,6 +255,163 @@ fn straightline_program_fuzz() {
         },
         "random straight-line programs round-trip and run",
     );
+}
+
+/// The full `MulImpl` × `Unroll` matrix over both dtypes: every valid
+/// combination builds, runs and verifies (the runner checks every
+/// element against the host reference); `Unroll::Auto` may instead
+/// overflow IRAM — the paper's `#pragma unroll` linker error — which is
+/// the only acceptable failure.
+#[test]
+fn full_mulimpl_unroll_matrix() {
+    let specs: Vec<Spec> = vec![
+        Spec::add(DType::I8),
+        Spec::add(DType::I32),
+        Spec::mul(DType::I8, MulImpl::Mulsi3),
+        Spec::mul(DType::I8, MulImpl::Native),
+        Spec::mul(DType::I8, MulImpl::NativeX4),
+        Spec::mul(DType::I8, MulImpl::NativeX8),
+        Spec::mul(DType::I32, MulImpl::Mulsi3),
+        Spec::mul(DType::I32, MulImpl::Dim),
+    ];
+    for base in specs {
+        for u in [Unroll::No, Unroll::Auto, Unroll::X64, Unroll::X128] {
+            let spec = base.with_unroll(u);
+            match run_microbench(spec, 4, 8 * 1024, 99) {
+                Ok(_) => {}
+                Err(upmem_unleashed::Error::IramOverflow { .. }) if u == Unroll::Auto => {}
+                Err(e) => panic!("{}: {e}", spec.name()),
+            }
+        }
+    }
+}
+
+/// Random structured programs: `Program::optimize` output is
+/// bit-identical to the naive stream — full WRAM image equality after
+/// execution — for every subset of passes. The generator emits the
+/// shapes the passes target (fusible pairs, marked counter loops,
+/// bounded `__mulsi3` calls, nop padding, jumps-to-next) with honest
+/// metadata, interleaved with random ALU/memory soup.
+#[test]
+fn optimizer_is_architecturally_invisible_on_random_programs() {
+    forall(
+        Config::cases(60),
+        |rng| (rng.next_u64(), rng.next_u64() as u8),
+        |&(seed, cfg_mask)| {
+            let naive = random_program(seed);
+            let mut cfg = PassConfig::none();
+            for (bit, pass) in ALL_PASSES.into_iter().enumerate() {
+                if cfg_mask & (1u8 << bit) != 0 {
+                    cfg = cfg.set(pass, true);
+                }
+            }
+            let (opt, _) = naive.optimize(&cfg);
+            let run = |p: &Program| {
+                let mut d = Dpu::new();
+                d.load_program(p).expect("fits IRAM");
+                d.launch(1).expect("random programs terminate");
+                d
+            };
+            let d1 = run(&naive);
+            let d2 = run(&opt);
+            d1.wram.as_slice() == d2.wram.as_slice()
+        },
+        "optimized stream is bit-identical to naive over random programs",
+    );
+}
+
+/// Deterministic random-program generator for the differential
+/// property above. Single-tasklet, WRAM-only, always terminates.
+fn random_program(seed: u64) -> Program {
+    let mut rng = Rng::new(seed);
+    let mut pb = ProgramBuilder::new();
+    let main = pb.new_label("main");
+    pb.jump(main); // becomes a jump-to-next when no routine follows
+    let routine = if rng.f64() < 0.5 { Some(emit_mulsi3(&mut pb)) } else { None };
+    pb.bind(main);
+
+    // Working registers r0..r7; r10/r11 reserved as loop pointers.
+    fn alu_soup(rng: &mut Rng, pb: &mut ProgramBuilder, n: u64) {
+        for _ in 0..n {
+            let rd = Reg(rng.range_u64(0, 7) as u8);
+            let ra = Reg(rng.range_u64(0, 7) as u8);
+            let imm = rng.range_i64(-64, 64) as i32;
+            match rng.range_u64(0, 5) {
+                0 => pb.add(rd, ra, imm),
+                1 => pb.sub(rd, ra, imm),
+                2 => pb.xor(rd, ra, imm),
+                3 => {
+                    let sh = rng.range_i64(0, 7) as i32;
+                    pb.lsl(rd, ra, sh)
+                }
+                4 => pb.or(rd, ra, imm),
+                _ => pb.and(rd, ra, imm),
+            }
+        }
+    }
+
+    let blocks = rng.range_u64(2, 5);
+    for block in 0..blocks {
+        let n = rng.range_u64(1, 6);
+        alu_soup(&mut rng, &mut pb, n);
+        if rng.f64() < 0.5 {
+            pb.nop();
+        }
+        // A fusible pair: op + zero-compare jump over a poison write.
+        if rng.f64() < 0.7 {
+            let skip = pb.new_label(&format!("skip{block}"));
+            let r = Reg(rng.range_u64(0, 7) as u8);
+            pb.and(r, r, 1);
+            pb.jcmp(CmpCond::Eq, r, Src::Zero, skip);
+            pb.add(r, r, 100);
+            pb.bind(skip);
+        }
+        // A shift-add pair over a dead temp.
+        if rng.f64() < 0.7 {
+            let t = Reg(6);
+            let d = Reg(rng.range_u64(0, 5) as u8);
+            pb.lsl(t, Reg(rng.range_u64(0, 5) as u8), rng.range_i64(0, 8) as i32);
+            pb.add(d, d, Src::Reg(t));
+            pb.move_(t, 0); // kill the temp so fusion liveness holds either way
+        }
+        // A bounded-multiplier call.
+        if let Some(mulsi3) = routine {
+            if rng.f64() < 0.6 {
+                let bits = rng.range_u64(1, 12) as u8;
+                let mult = (rng.next_u64() as u32) & ((1u32 << bits) - 1);
+                pb.move_(ARG_A, rng.next_u64() as u32 as i32);
+                pb.move_(ARG_B, mult as i32);
+                pb.call_mul_bounded(LINK, mulsi3, bits);
+                pb.add(Reg(4), RESULT, Src::Reg(Reg(4)));
+                // The bounded-call contract leaves r2 (and the link)
+                // unspecified; equalize r2 so the final stores compare.
+                pb.move_(Reg(2), 0);
+            }
+        }
+        // A marked counter loop over a WRAM byte window.
+        if rng.f64() < 0.8 {
+            let trip = *rng.choose(&[4u32, 8, 16]);
+            let factor = *rng.choose(&[1u32, 2, 4]);
+            let ptr = Reg(10);
+            let pend = Reg(11);
+            let base = 0x200 + 0x40 * block as i32;
+            pb.move_(ptr, base);
+            pb.add(pend, ptr, trip as i32);
+            let (head, lm) =
+                pb.unrollable_loop(&format!("loop{block}"), trip, factor.min(trip));
+            pb.lbu(Reg(0), ptr, 0);
+            pb.add(Reg(0), Reg(0), rng.range_i64(1, 9) as i32);
+            pb.sb(ptr, 0, Reg(0));
+            pb.unrollable_latch(lm, head, &[(ptr, 1)], CmpCond::Ltu, ptr, Src::Reg(pend));
+        }
+    }
+    // Make every working register observable.
+    for r in 0..8u8 {
+        pb.move_(Reg(12), 0x100 + 4 * r as i32);
+        pb.sw(Reg(12), 0, Reg(r));
+    }
+    pb.stop();
+    pb.build().expect("generator emits bound labels")
 }
 
 /// Seeds differ ⇒ data differs but cycle counts of data-independent

@@ -1,6 +1,8 @@
 //! Property tests for the SDK-v2 transfer surface: `XferPlan` /
-//! `PullPlan` round-trips and timing parity with the deprecated v1
-//! closure API on identical traffic.
+//! `PullPlan` round-trips, plan reuse, and one pinned timing-parity
+//! test against the deprecated v1 closure shims (the only remaining v1
+//! usage in the test suite, `#[allow(deprecated)]`-scoped to that
+//! single function so `cargo test` stays warning-clean).
 
 use upmem_unleashed::host::{AllocPolicy, PimSystem, PullPlan, XferPlan};
 use upmem_unleashed::transfer::topology::SystemTopology;
@@ -42,10 +44,12 @@ fn xfer_plan_roundtrips_bytes_exactly() {
     );
 }
 
-/// The deprecated closure-based API and the plan-based API must model
-/// identical traffic with identical `TransferReport` timings (the v1
-/// path is kept precisely so benches can compare them).
+/// The single pinned v1-parity test: the deprecated closure-based API
+/// and the plan-based API must model identical traffic with identical
+/// `TransferReport` timings. Everything else in the suite (and the
+/// benches) runs on plans; this is the one sanctioned use of the shims.
 #[test]
+#[allow(deprecated)]
 fn plan_timing_matches_deprecated_closure_api() {
     forall(
         Config::cases(10),
@@ -61,9 +65,7 @@ fn plan_timing_matches_deprecated_closure_api() {
 
             let mut v1 = system();
             let s1 = v1.alloc_ranks(ranks).unwrap();
-            #[allow(deprecated)]
             let push1 = v1.push_parallel(&s1, 4096, |_| payload.clone()).unwrap();
-            #[allow(deprecated)]
             let (data1, pull1) = v1.pull_parallel(&s1, 4096, chunk).unwrap();
 
             let mut v2 = system();
@@ -87,6 +89,30 @@ fn plan_timing_matches_deprecated_closure_api() {
         },
         "plan-based and closure-based APIs model identical traffic identically",
     );
+}
+
+/// Plans are reusable: pushing the same prepared `XferPlan` twice moves
+/// the same bytes with the same modeled timing, and a second pull
+/// observes the final MRAM state — no hidden per-push state in the
+/// zero-copy path.
+#[test]
+fn plans_are_reusable_across_transfers() {
+    let mut sys = system();
+    let set = sys.alloc_ranks(2).unwrap();
+    let n = set.nr_dpus();
+    let mut rng = Rng::new(0xBEEF);
+    let data = rng.u8_vec(n * 256);
+    let mut plan = XferPlan::to_pim(&set, 8192);
+    plan.prepare_chunks(&data, 256).unwrap();
+    let r1 = sys.push_xfer(&set, &plan).unwrap();
+    let r2 = sys.push_xfer(&set, &plan).unwrap();
+    assert_eq!(r1.bytes, r2.bytes);
+    assert!((r1.seconds - r2.seconds).abs() < 1e-12);
+    let mut out = vec![0u8; n * 256];
+    let mut pull = PullPlan::from_pim(&set, 8192);
+    pull.prepare_chunks(&mut out, 256).unwrap();
+    sys.pull_xfer(&set, &mut pull).unwrap();
+    assert_eq!(out, data);
 }
 
 /// Partially prepared plans move only the prepared views and report

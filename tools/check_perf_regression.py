@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over BENCH_perf.json (schema v2).
+
+Compares the per-workload *modeled cycles* of a fresh bench run against
+the committed baseline and fails on regressions beyond the threshold.
+Modeled cycles are deterministic (unlike host Minstr/s), so the gate is
+stable on shared CI runners — but only when both files were produced at
+the same workload sizes (CI runs both under PERF_SMOKE=1).
+
+Usage:
+    check_perf_regression.py BASELINE.json FRESH.json [--threshold 0.10]
+
+Bootstrap: a baseline with "bootstrap": true (or no "workloads" map)
+passes with a notice printing the fresh values, so the first toolchain
+run can commit them.
+"""
+
+import argparse
+import json
+import sys
+
+
+def workloads(doc):
+    out = {}
+    for name, rec in (doc.get("workloads") or {}).items():
+        if isinstance(rec, dict) and "modeled_cycles" in rec:
+            out[name] = rec["modeled_cycles"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="allowed fractional cycle regression (default 10%%)")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh_doc = json.load(f)
+    fresh = workloads(fresh_doc)
+    if fresh_doc.get("schema_version") != 2:
+        print(f"FAIL: {args.fresh} is not schema_version 2")
+        return 1
+    if not fresh:
+        print(f"FAIL: {args.fresh} carries no modeled_cycles workloads")
+        return 1
+
+    try:
+        with open(args.baseline) as f:
+            base_doc = json.load(f)
+    except FileNotFoundError:
+        base_doc = {}
+    base = workloads(base_doc)
+    if base_doc.get("bootstrap") or not base:
+        print(f"NOTICE: baseline {args.baseline} is a bootstrap placeholder — "
+              "no gate applied. Commit the fresh values to arm it:")
+        print(json.dumps(fresh_doc, indent=2))
+        return 0
+
+    regressions, improvements, missing = [], [], []
+    for name, want in sorted(base.items()):
+        got = fresh.get(name)
+        if got is None:
+            missing.append(name)
+            continue
+        rel = (got - want) / want if want else 0.0
+        marker = "ok"
+        if rel > args.threshold:
+            regressions.append((name, want, got, rel))
+            marker = "REGRESSION"
+        elif rel < -args.threshold:
+            improvements.append((name, want, got, rel))
+            marker = "improved"
+        print(f"  {marker:>10}  {name}: {want} -> {got} ({rel:+.1%})")
+
+    for name in fresh:
+        if name not in base:
+            print(f"  {'new':>10}  {name}: {fresh[name]} (not in baseline)")
+    for name in missing:
+        print(f"  {'missing':>10}  {name}: in baseline but not in fresh run")
+
+    if improvements:
+        print(f"NOTE: {len(improvements)} workload(s) improved past the threshold — "
+              f"refresh {args.baseline} to lock in the gains.")
+    if missing:
+        print(f"FAIL: {len(missing)} gated workload(s) vanished from the fresh run — "
+              f"renamed or dropped bench cases must update {args.baseline} in the "
+              "same change, otherwise their regression protection silently disarms.")
+    if regressions:
+        print(f"FAIL: {len(regressions)} workload(s) regressed more than "
+              f"{args.threshold:.0%} in modeled cycles.")
+    if regressions or missing:
+        return 1
+    print("PASS: no modeled-cycle regression beyond "
+          f"{args.threshold:.0%} across {len(base)} gated workload(s).")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
