@@ -9,16 +9,20 @@
 //! The fleet-scale case runs the same 128-DPU (2-rank) GEMV launch
 //! twice — pinned to 1 worker (the serial baseline) and on all
 //! available cores — so the parallel fleet executor's speedup is
-//! measured, not assumed. `PERF_SMOKE=1` shrinks every workload to CI
-//! size (host throughput is then not comparable; modeled cycles remain
-//! exact for the smoke sizes, which is what the gate diffs).
+//! measured, not assumed; it then runs once per interpreter execution
+//! tier (stepped / batched / superblock, `PIM_EXEC_TIER`) and prints
+//! the tier comparison, asserting the tiers model identical cycles.
+//! `PERF_SMOKE=1` shrinks every workload to CI size (host throughput
+//! is then not comparable; modeled cycles remain exact for the smoke
+//! sizes, which is what the gate diffs).
 
 mod common;
 
-use common::{footer, timed};
-use upmem_unleashed::bench_support::json::{json_perf_report, WorkloadEntry};
+use common::{check, footer, timed};
+use upmem_unleashed::bench_support::json::{json_perf_report, PerfMeta, WorkloadEntry};
 use upmem_unleashed::bench_support::table::{f1, ratio, Table};
 use upmem_unleashed::coordinator::GemvCoordinator;
+use upmem_unleashed::dpu::{default_exec_tier, ExecTier};
 use upmem_unleashed::host::{AllocPolicy, PimSystem};
 use upmem_unleashed::kernels::arith::{run_microbench_with, DType, MulImpl, Spec, Unroll};
 use upmem_unleashed::kernels::bsdp::{run_dot_microbench_with, DotVariant};
@@ -29,28 +33,44 @@ use upmem_unleashed::transfer::topology::SystemTopology;
 use upmem_unleashed::util::rng::Rng;
 
 /// Accumulates the table rows, the machine-readable entries and the
-/// aggregate throughput.
+/// aggregate throughput. Every row is tagged with the execution tier
+/// that produced it (the ambient `PIM_EXEC_TIER` default unless the
+/// workload pinned one).
 struct Perf {
     table: Table,
     entries: Vec<WorkloadEntry>,
     total_instrs: u64,
     total_secs: f64,
+    ambient_tier: ExecTier,
 }
 
 fn perf_report() -> Perf {
     Perf {
         table: Table::new(
             "§Perf — simulator throughput (million simulated instrs / host second)",
-            &["workload", "sim instrs", "host s", "Minstr/s", "modeled cycles"],
+            &["workload", "sim instrs", "host s", "Minstr/s", "modeled cycles", "tier"],
         ),
         entries: Vec::new(),
         total_instrs: 0,
         total_secs: 0.0,
+        ambient_tier: default_exec_tier(),
     }
 }
 
 impl Perf {
     fn record(&mut self, name: &str, instrs: u64, secs: f64, cycles: Option<u64>) {
+        let tier = self.ambient_tier;
+        self.record_tier(name, instrs, secs, cycles, tier);
+    }
+
+    fn record_tier(
+        &mut self,
+        name: &str,
+        instrs: u64,
+        secs: f64,
+        cycles: Option<u64>,
+        tier: ExecTier,
+    ) {
         let minstr = instrs as f64 / secs / 1e6;
         self.table.row(&[
             name.to_string(),
@@ -58,8 +78,9 @@ impl Perf {
             format!("{secs:.3}"),
             f1(minstr),
             cycles.map(|c| c.to_string()).unwrap_or_else(|| "—".into()),
+            tier.name().to_string(),
         ]);
-        self.entries.push(WorkloadEntry::new(name, minstr, cycles));
+        self.entries.push(WorkloadEntry::new(name, minstr, cycles).with_tier(tier.name()));
         self.total_instrs += instrs;
         self.total_secs += secs;
     }
@@ -68,12 +89,22 @@ impl Perf {
 /// One fleet GEMV measurement: preload a `rows × cols` INT8 matrix over
 /// a 128-DPU (2-rank) set, then time `reps` full-fleet launches.
 /// `workers = None` keeps the system default (available parallelism /
-/// `PIM_LAUNCH_WORKERS`). Returns (total simulated instrs, host secs,
-/// per-launch max modeled cycles).
-fn fleet_gemv(workers: Option<usize>, rows: u32, cols: u32, reps: usize) -> (u64, f64, u64) {
+/// `PIM_LAUNCH_WORKERS`); `tier = None` keeps the `PIM_EXEC_TIER`
+/// default. Returns (total simulated instrs, host secs, per-launch max
+/// modeled cycles).
+fn fleet_gemv(
+    workers: Option<usize>,
+    tier: Option<ExecTier>,
+    rows: u32,
+    cols: u32,
+    reps: usize,
+) -> (u64, f64, u64) {
     let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
     if let Some(w) = workers {
         sys.set_launch_workers(w);
+    }
+    if let Some(t) = tier {
+        sys.set_exec_tier(t);
     }
     let set = sys.alloc_ranks(2).expect("2 ranks");
     let mut c = GemvCoordinator::new(sys, set, GemvVariant::I8Opt, 16);
@@ -194,9 +225,9 @@ fn main() {
         let (rows, cols, reps) = if smoke { (256u32, 1024u32, 1usize) } else { (1024, 2048, 3) };
         let default_workers =
             PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware).launch_workers();
-        let (si, ss, sc) = fleet_gemv(Some(1), rows, cols, reps);
+        let (si, ss, sc) = fleet_gemv(Some(1), None, rows, cols, reps);
         p.record("fleet GEMV, 128 DPUs, 16 tasklets (1 worker)", si, ss, Some(sc));
-        let (pi, ps, pc) = fleet_gemv(None, rows, cols, reps);
+        let (pi, ps, pc) = fleet_gemv(None, None, rows, cols, reps);
         // Stable name (no worker count): the JSON key must match the
         // committed gate baseline across runners with different core
         // counts — modeled cycles are worker-count-invariant anyway.
@@ -209,12 +240,80 @@ fn main() {
         );
         p.entries.push(WorkloadEntry::new("fleet parallel speedup (x)", speedup, None));
 
+        // Execution-tier comparison on the same fleet case (all cores):
+        // stepped vs batched vs superblock — the two-tier engine's
+        // acceptance row. Modeled cycles must agree bit-exactly across
+        // tiers (enforced here and by the differential tests); host
+        // Minstr/s is the payoff. The sweep pins each tier explicitly,
+        // so it only runs under the default ambient tier — CI's
+        // per-PIM_EXEC_TIER jobs would otherwise repeat the identical
+        // sweep three times for no extra signal.
+        if p.ambient_tier == ExecTier::Superblock {
+            let mut tier_minstr = Vec::new();
+            for tier in ExecTier::ALL {
+                let (ti, tsec, tc) = fleet_gemv(None, Some(tier), rows, cols, reps);
+                p.record_tier(
+                    &format!("fleet GEMV, 128 DPUs, 16 tasklets [tier={}]", tier.name()),
+                    ti,
+                    tsec,
+                    Some(tc),
+                    tier,
+                );
+                tier_minstr.push((tier, ti as f64 / tsec / 1e6, tc));
+            }
+            let cycles0 = tier_minstr[0].2;
+            assert!(
+                tier_minstr.iter().all(|&(_, _, c)| c == cycles0),
+                "tiers must model identical cycles: {tier_minstr:?}"
+            );
+            let stepped_m = tier_minstr[0].1;
+            let batched_m = tier_minstr[1].1;
+            let superblock_m = tier_minstr[2].1;
+            println!(
+                "fleet GEMV tier comparison: stepped {} / batched {} / superblock {} Minstr/s \
+                 — superblock is {} vs stepped, {} vs batched",
+                f1(stepped_m),
+                f1(batched_m),
+                f1(superblock_m),
+                ratio(superblock_m / stepped_m),
+                ratio(superblock_m / batched_m),
+            );
+            p.entries.push(WorkloadEntry::new(
+                "superblock speedup vs stepped, fleet GEMV (x)",
+                superblock_m / stepped_m,
+                None,
+            ));
+            p.entries.push(WorkloadEntry::new(
+                "superblock speedup vs batched, fleet GEMV (x)",
+                superblock_m / batched_m,
+                None,
+            ));
+            check(
+                "superblock is the fastest tier (speedup vs best other tier ≥ 1x)",
+                superblock_m / stepped_m.max(batched_m),
+                1.0,
+                1e9,
+            );
+        } else {
+            println!(
+                "tier comparison sweep skipped: ambient tier {} (runs under the \
+                 superblock default)",
+                p.ambient_tier.name()
+            );
+        }
+
         p.table.print();
         let aggregate = p.total_instrs as f64 / p.total_secs / 1e6;
         println!("aggregate: {aggregate:.1} M simulated instructions / host second");
         p.entries.push(WorkloadEntry::new("aggregate", aggregate, None));
 
-        let json = json_perf_report(&p.entries);
+        let meta = PerfMeta {
+            exec_tier: default_exec_tier().name().to_string(),
+            smoke,
+            launch_workers: default_workers,
+        };
+        println!("exec tier (ambient default): {}", meta.exec_tier);
+        let json = json_perf_report(&p.entries, Some(&meta));
         match std::fs::write("BENCH_perf.json", &json) {
             Ok(()) => println!("wrote BENCH_perf.json ({} entries)", p.entries.len()),
             Err(e) => eprintln!("could not write BENCH_perf.json: {e}"),

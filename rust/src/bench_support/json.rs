@@ -64,21 +64,56 @@ pub struct WorkloadEntry {
     /// quantity the CI regression gate compares. `None` for aggregate
     /// rows (speedups, totals) that have no single launch behind them.
     pub modeled_cycles: Option<u64>,
+    /// Which interpreter execution tier produced the row
+    /// ([`crate::dpu::ExecTier::name`]); `None` for aggregate rows.
+    /// Modeled cycles are tier-invariant (the tiers are bit-identical),
+    /// so the gate compares rows across tiers freely — the tag records
+    /// provenance for humans and for the CI per-tier smoke matrix.
+    pub tier: Option<String>,
 }
 
 impl WorkloadEntry {
     pub fn new(name: impl Into<String>, minstr_per_s: f64, modeled_cycles: Option<u64>) -> Self {
-        WorkloadEntry { name: name.into(), minstr_per_s, modeled_cycles }
+        WorkloadEntry { name: name.into(), minstr_per_s, modeled_cycles, tier: None }
+    }
+
+    /// Tag the row with the execution tier that produced it.
+    pub fn with_tier(mut self, tier: impl Into<String>) -> Self {
+        self.tier = Some(tier.into());
+        self
     }
 }
 
 /// The `BENCH_perf.json` schema version written by [`json_perf_report`].
+/// Still 2: the `meta` object and per-row `tier` tags are additive and
+/// ignored by older readers of the v2 schema.
 pub const PERF_SCHEMA_VERSION: u32 = 2;
 
+/// Report-level metadata recorded under the `meta` key.
+#[derive(Debug, Clone, Default)]
+pub struct PerfMeta {
+    /// The ambient execution tier rows were produced under unless
+    /// individually tagged (`PIM_EXEC_TIER` / system default).
+    pub exec_tier: String,
+    /// `PERF_SMOKE` was set: CI-sized workloads, throughput numbers not
+    /// comparable (modeled cycles remain exact for the smoke sizes).
+    pub smoke: bool,
+    /// Fleet-launch worker threads used by the parallel rows.
+    pub launch_workers: usize,
+}
+
 /// Render the schema-v2 perf report (insertion order preserved).
-pub fn json_perf_report(entries: &[WorkloadEntry]) -> String {
+pub fn json_perf_report(entries: &[WorkloadEntry], meta: Option<&PerfMeta>) -> String {
     let mut out = String::from("{\n");
     out.push_str(&format!("  \"schema_version\": {PERF_SCHEMA_VERSION},\n"));
+    if let Some(m) = meta {
+        out.push_str(&format!(
+            "  \"meta\": {{\"exec_tier\": \"{}\", \"smoke\": {}, \"launch_workers\": {}}},\n",
+            escape(&m.exec_tier),
+            m.smoke,
+            m.launch_workers
+        ));
+    }
     out.push_str("  \"workloads\": {\n");
     for (i, e) in entries.iter().enumerate() {
         out.push_str("    \"");
@@ -87,6 +122,9 @@ pub fn json_perf_report(entries: &[WorkloadEntry]) -> String {
         out.push_str(&format!("\"minstr_per_s\": {}", number(e.minstr_per_s)));
         if let Some(c) = e.modeled_cycles {
             out.push_str(&format!(", \"modeled_cycles\": {c}"));
+        }
+        if let Some(t) = &e.tier {
+            out.push_str(&format!(", \"tier\": \"{}\"", escape(t)));
         }
         out.push('}');
         if i + 1 < entries.len() {
@@ -104,15 +142,36 @@ mod tests {
 
     #[test]
     fn perf_report_v2_shape() {
-        let r = json_perf_report(&[
-            WorkloadEntry::new("w1", 12.5, Some(1000)),
-            WorkloadEntry::new("agg", 3.0, None),
-        ]);
+        let r = json_perf_report(
+            &[
+                WorkloadEntry::new("w1", 12.5, Some(1000)),
+                WorkloadEntry::new("agg", 3.0, None),
+            ],
+            None,
+        );
         assert_eq!(
             r,
             "{\n  \"schema_version\": 2,\n  \"workloads\": {\n    \
              \"w1\": {\"minstr_per_s\": 12.500, \"modeled_cycles\": 1000},\n    \
              \"agg\": {\"minstr_per_s\": 3.000}\n  }\n}\n"
+        );
+    }
+
+    #[test]
+    fn perf_report_records_meta_and_tier() {
+        let meta =
+            PerfMeta { exec_tier: "superblock".into(), smoke: true, launch_workers: 4 };
+        let r = json_perf_report(
+            &[WorkloadEntry::new("w1", 12.5, Some(1000)).with_tier("stepped")],
+            Some(&meta),
+        );
+        assert_eq!(
+            r,
+            "{\n  \"schema_version\": 2,\n  \
+             \"meta\": {\"exec_tier\": \"superblock\", \"smoke\": true, \"launch_workers\": 4},\n  \
+             \"workloads\": {\n    \
+             \"w1\": {\"minstr_per_s\": 12.500, \"modeled_cycles\": 1000, \"tier\": \"stepped\"}\n  \
+             }\n}\n"
         );
     }
 

@@ -5,48 +5,157 @@
 //! cycles, dynamic instruction counts and DMA traffic. Faults surface as
 //! [`Error::Fault`] with the offending tasklet and PC.
 //!
-//! # The batched hot loop (§Perf iteration 4)
+//! # The execution tiers (§Perf iterations 4 and 7)
 //!
-//! The executor has two interchangeable issue loops:
+//! The executor has three interchangeable issue loops, selected by
+//! [`ExecTier`] (`PIM_EXEC_TIER` env / [`Dpu::set_exec_tier`]), all
+//! bit-identical by construction and pinned so by differential tests:
 //!
-//! * the **stepped path** asks [`Scheduler::next_issue`] for every
-//!   single instruction (the original loop — always correct);
-//! * the **batched path** exploits that the round-robin dispatcher is
-//!   fully deterministic in steady state: when every runnable tasklet,
-//!   taken in circular order from the scheduler's round-robin pointer,
-//!   can issue at consecutive cycles `c0, c0+1, …` (checked by
-//!   [`steady_rotation`]), whole rotations are issued back-to-back —
-//!   one instruction per runnable tasklet — without re-entering the
-//!   scheduler, and consecutive rotations advance the clock by
-//!   `max(R, ISSUE_INTERVAL)`.
+//! * the **stepped path** ([`ExecTier::Stepped`]) asks
+//!   [`Scheduler::next_issue`] for every single instruction (the
+//!   original loop — always correct, the reference);
+//! * the **batched path** ([`ExecTier::Batched`]) exploits that the
+//!   round-robin dispatcher is fully deterministic in steady state:
+//!   when every runnable tasklet, taken in circular order from the
+//!   scheduler's round-robin pointer, can issue at consecutive cycles
+//!   `c0, c0+1, …` (checked by [`steady_rotation`]), whole rotations
+//!   are issued back-to-back — one instruction per runnable tasklet —
+//!   without re-entering the scheduler, and consecutive rotations
+//!   advance the clock by `rot_step = max(R, ISSUE_INTERVAL)`;
+//! * the **superblock path** ([`ExecTier::Superblock`], the default)
+//!   additionally proves — via the translated program's per-pc
+//!   event-distance table ([`crate::dpu::uop::UopProgram`]) — that the
+//!   next `W = min(event_dist[pc_t])` rotations cannot contain any
+//!   scheduling event, then executes `W` predecoded μops per runnable
+//!   tasklet back-to-back ([`run_superblocks`]): straight-line
+//!   superblocks with branches followed inline, per-block aggregated
+//!   stats, and **one** bulk scheduler update
+//!   ([`Scheduler::commit_rotations`]) per window instead of one per
+//!   instruction.
 //!
-//! The batched path is *verified-entry*: it is only taken after the
+//! Both fast paths are *verified-entry*: they are only taken after the
 //! steady-state condition is checked against live scheduler state, and
 //! any scheduling event (DMA stall, barrier, stop) synchronizes the
-//! scheduler and falls back to the stepped path — so cycle counts,
-//! issue order, and therefore all results are bit-identical between the
-//! two (pinned by `batched_path_matches_stepped_path` below and the
-//! `parallel_determinism` integration tests). Equivalence sketch: with
-//! the condition `ready_at[ring[k]] <= c0 + k` and `c0 = max(now, min
-//! ready)`, the dispatcher's circular first-eligible scan from
-//! `rr_next` must pick exactly `ring[0], ring[1], …` at cycles `c0,
-//! c0+1, …`; after a full rotation each `ready_at` becomes
-//! `c0 + k + ISSUE_INTERVAL`, which re-satisfies the condition with
-//! `c0' = c0 + max(R, ISSUE_INTERVAL)` — so steadiness persists until
-//! an event perturbs it.
+//! scheduler and falls back to the next tier down — so cycle counts,
+//! issue order, and therefore all results are bit-identical across the
+//! three (pinned by `tier_paths_are_bit_identical` below, the
+//! `rust/tests/tier_differential.rs` kernel matrix and the
+//! `parallel_determinism` integration tests). Equivalence sketch for
+//! the rotation condition: with `ready_at[ring[k]] <= c0 + k` and
+//! `c0 = max(now, min ready)`, the dispatcher's circular
+//! first-eligible scan from `rr_next` must pick exactly `ring[0],
+//! ring[1], …` at cycles `c0, c0+1, …`; after a full rotation each
+//! `ready_at` becomes `c0 + k + ISSUE_INTERVAL`, which re-satisfies
+//! the condition with `c0' = c0 + rot_step` — so steadiness persists
+//! until an event perturbs it.
+//!
+//! The superblock window adds one more step: during an event-free
+//! window every ring tasklet's issue cycles form the arithmetic
+//! sequence `c0 + k + j·rot_step` (`j = 0..W`), independent of what
+//! the *other* tasklets execute — branches do not touch the scheduler.
+//! Executing the window tasklet-major (all of tasklet `ring[0]`'s `W`
+//! μops, then `ring[1]`'s, …) therefore reproduces the stepped
+//! interleaving's cycle accounting exactly (`time`, non-blocking-DMA
+//! completion and fault cycles are computed from the sequence), and
+//! reproduces its memory effects exactly for programs that are
+//! data-race-free between scheduling events — which UPMEM kernels must
+//! be anyway, since real hardware gives concurrent tasklets no
+//! intra-rotation ordering either. In-window faults (WRAM/MRAM
+//! bounds, DMA alignment) are resolved to the *earliest faulting
+//! cycle* across the ring before reporting, matching the stepped
+//! path's abort order.
+//!
+//! One deliberate carve-out from the bit-identical contract: after a
+//! *failed* launch, the architectural state of the **faulting DPU
+//! itself** beyond the faulting cycle is tier-defined — tasklets
+//! earlier in the ring may already have executed window instructions
+//! past the (later-discovered) first fault cycle, and those memory
+//! effects are not rolled back (doing so would need a WRAM snapshot
+//! per window). The fault's identity `(dpu, tasklet, pc, kind)`, every
+//! successful launch's state, and every *other* DPU's state in a
+//! mid-fleet fault remain exactly tier-invariant — which is also all
+//! that real hardware promises about a crashed DPU's in-flight state.
 
 use super::dma::dma_cycles;
 use super::isa::{CondJump, Instr, JumpTarget, LoadWidth, Program, StoreWidth};
 use super::memory::{Mram, Wram};
 use super::pipeline::{Scheduler, BLOCKED};
 use super::tasklet::Tasklet;
+use super::uop::{Uop, UopProgram};
 use super::{IRAM_BYTES, ISSUE_INTERVAL, NR_TASKLETS_MAX};
 use crate::util::error::{Error, FaultKind};
 use crate::Result;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Default runaway-loop guard (cycles).
 pub const DEFAULT_CYCLE_LIMIT: u64 = 50_000_000_000;
+
+/// Upper bound on rotations per superblock window. Purely a
+/// responsiveness cap for programs whose `event_dist` is unbounded
+/// (pure compute loops): it bounds how much work one window commits
+/// before re-checking the cycle limit. Semantically invisible — the
+/// next window continues where this one stopped.
+const MAX_WINDOW_ROTATIONS: u64 = 1 << 20;
+
+/// Which issue loop [`Dpu::launch`] runs (see the module docs). All
+/// tiers produce bit-identical results; they differ only in host-side
+/// simulation speed. Fleet default: the `PIM_EXEC_TIER` environment
+/// variable (`stepped` / `batched` / `superblock`), else
+/// [`ExecTier::Superblock`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecTier {
+    /// One `Scheduler::next_issue` per instruction — the reference.
+    Stepped,
+    /// Verified-entry rotation batching over the decoded [`Instr`]
+    /// stream (§Perf iteration 4).
+    Batched,
+    /// Rotation batching + predecoded-μop superblock windows (§Perf
+    /// iteration 7, the default).
+    #[default]
+    Superblock,
+}
+
+impl ExecTier {
+    /// All tiers, slowest first — differential tests and the
+    /// `perf_simulator` tier comparison iterate this.
+    pub const ALL: [ExecTier; 3] = [ExecTier::Stepped, ExecTier::Batched, ExecTier::Superblock];
+
+    /// Stable name used by `PIM_EXEC_TIER`, bench JSON and CI.
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecTier::Stepped => "stepped",
+            ExecTier::Batched => "batched",
+            ExecTier::Superblock => "superblock",
+        }
+    }
+
+    /// Parse a `PIM_EXEC_TIER` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<ExecTier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "stepped" | "step" => Some(ExecTier::Stepped),
+            "batched" | "batch" => Some(ExecTier::Batched),
+            "superblock" | "sb" => Some(ExecTier::Superblock),
+            _ => None,
+        }
+    }
+}
+
+/// The process-wide default tier: `PIM_EXEC_TIER` if set and valid
+/// (one warning on an unparsable value), else [`ExecTier::Superblock`].
+/// Read once — launches are hot paths.
+pub fn default_exec_tier() -> ExecTier {
+    static TIER: OnceLock<ExecTier> = OnceLock::new();
+    *TIER.get_or_init(|| match std::env::var("PIM_EXEC_TIER") {
+        Ok(v) => ExecTier::parse(&v).unwrap_or_else(|| {
+            eprintln!(
+                "PIM_EXEC_TIER={v:?} not recognized (want stepped|batched|superblock); \
+                 using superblock"
+            );
+            ExecTier::Superblock
+        }),
+        Err(_) => ExecTier::Superblock,
+    })
+}
 
 /// Execution statistics for one kernel launch.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -79,6 +188,17 @@ pub struct LaunchScratch {
     ring: Vec<usize>,
 }
 
+impl LaunchScratch {
+    /// Current heap capacities `(tasklets, dma staging, rotation ring)`
+    /// — observability for the no-per-launch-allocation contract: after
+    /// a warm-up launch, repeated launches at the same or smaller shape
+    /// must leave all three unchanged (pinned by
+    /// `launch_scratch_reuses_capacity` below).
+    pub fn capacities(&self) -> (usize, usize, usize) {
+        (self.ts.capacity(), self.dma_buf.capacity(), self.ring.capacity())
+    }
+}
+
 /// One simulated DPU.
 #[derive(Debug, Clone)]
 pub struct Dpu {
@@ -87,15 +207,19 @@ pub struct Dpu {
     /// The decoded instruction stream, shared fleet-wide: the host loads
     /// one `Arc`'d program into 2551 DPUs instead of 2551 clones.
     program: Arc<Program>,
+    /// Tier-1 translation of `program` (predecoded μops + superblock
+    /// metadata), shared fleet-wide alongside it — the host translates
+    /// once per [`crate::host::PimSystem::load_program`], not per DPU.
+    uops: Arc<UopProgram>,
     /// Identifier used in fault reports (set by the host layer to the
     /// global DPU index).
     pub id: usize,
     /// Runaway guard.
     pub cycle_limit: u64,
-    /// Use the rotation-batched hot loop (default). Pinned off only by
-    /// the differential tests that prove it bit-identical to the
-    /// stepped scheduler path.
-    pub batch_rotations: bool,
+    /// Issue-loop selection (default [`default_exec_tier`]). The slower
+    /// tiers exist for debugging and for the differential tests that
+    /// prove all three bit-identical.
+    pub exec_tier: ExecTier,
 }
 
 impl Default for Dpu {
@@ -117,6 +241,17 @@ enum Step {
     Stop,
 }
 
+/// Apply an ALU instruction's fused *(condition, target)* suffix to the
+/// fall-through pc — shared by [`exec_one`] and [`exec_uop`].
+#[inline]
+fn cond_jump(cj: CondJump, result: u32, next_pc: &mut u32) {
+    if let Some((c, target)) = cj {
+        if c.eval(result) {
+            *next_pc = target;
+        }
+    }
+}
+
 /// Execute one instruction for tasklet `tk` at `pc`, applying register
 /// and memory effects. `now` carries the scheduler's post-issue clock
 /// (issue cycle + 1) for `time`. Scheduling effects are returned as a
@@ -135,15 +270,6 @@ fn exec_one(
     res: &mut LaunchResult,
 ) -> std::result::Result<Step, FaultKind> {
     let mut next_pc = pc + 1;
-
-    #[inline]
-    fn cond_jump(cj: CondJump, result: u32, next_pc: &mut u32) {
-        if let Some((c, target)) = cj {
-            if c.eval(result) {
-                *next_pc = target;
-            }
-        }
-    }
 
     match instr {
         Instr::Move { rd, src, cj } => {
@@ -376,16 +502,234 @@ fn steady_rotation(sched: &Scheduler, ring: &mut Vec<usize>) -> Option<u64> {
     Some(c0)
 }
 
+/// Execute one predecoded μop, applying register and memory effects and
+/// advancing `tk.pc`. Semantically the [`exec_one`] body minus the
+/// scheduling events, which the superblock engine proves can never
+/// reach a window ([`crate::dpu::uop::UopProgram::event_dist`]). `now`
+/// is the post-issue clock (issue cycle + 1), exactly as the stepped
+/// paths pass it.
+#[inline(always)]
+fn exec_uop(
+    wram: &mut Wram,
+    mram: &mut Mram,
+    uop: Uop,
+    tk: &mut Tasklet,
+    now: u64,
+    dma_buf: &mut Vec<u8>,
+    res: &mut LaunchResult,
+) -> std::result::Result<(), FaultKind> {
+    let pc = tk.pc;
+    let mut next_pc = pc + 1;
+
+    match uop {
+        Uop::Move { rd, src, cj } => {
+            let v = src.value(tk);
+            tk.regs[rd as usize] = v;
+            cond_jump(cj, v, &mut next_pc);
+        }
+        Uop::Alu { op, rd, ra, b, cj } => {
+            let v = op.eval(tk.regs[ra as usize], b.value(tk));
+            tk.regs[rd as usize] = v;
+            cond_jump(cj, v, &mut next_pc);
+        }
+        Uop::Mul { variant, rd, ra, b, cj } => {
+            let v = variant.eval(tk.regs[ra as usize], b.value(tk));
+            tk.regs[rd as usize] = v;
+            cond_jump(cj, v, &mut next_pc);
+        }
+        Uop::MulStep { lo, hi, ra, shift, cj } => {
+            let mut l = tk.regs[lo as usize];
+            if l & 1 != 0 {
+                tk.regs[hi as usize] =
+                    tk.regs[hi as usize].wrapping_add(tk.regs[ra as usize] << shift);
+            }
+            l >>= 1;
+            tk.regs[lo as usize] = l;
+            cond_jump(cj, l, &mut next_pc);
+        }
+        Uop::LslAdd { rd, ra, rb, shift, cj } => {
+            let v = tk.regs[ra as usize].wrapping_add(tk.regs[rb as usize] << shift);
+            tk.regs[rd as usize] = v;
+            cond_jump(cj, v, &mut next_pc);
+        }
+        Uop::Cao { rd, ra, cj } => {
+            let v = tk.regs[ra as usize].count_ones();
+            tk.regs[rd as usize] = v;
+            cond_jump(cj, v, &mut next_pc);
+        }
+        Uop::Load { w, rd, ra, off } => {
+            let addr = tk.regs[ra as usize].wrapping_add(off);
+            let v = match w {
+                LoadWidth::B8s => wram.load8(addr).map(|b| b as i8 as i32 as u32),
+                LoadWidth::B8u => wram.load8(addr).map(|b| b as u32),
+                LoadWidth::B16s => wram.load16(addr).map(|h| h as i16 as i32 as u32),
+                LoadWidth::B16u => wram.load16(addr).map(|h| h as u32),
+                LoadWidth::B32 => wram.load32(addr),
+            }?;
+            tk.regs[rd as usize] = v;
+        }
+        Uop::Ld { lo, hi, ra, off } => {
+            let addr = tk.regs[ra as usize].wrapping_add(off);
+            let v = wram.load64(addr)?;
+            tk.regs[lo as usize] = v as u32;
+            tk.regs[hi as usize] = (v >> 32) as u32;
+        }
+        Uop::Store { w, ra, off, rs } => {
+            let addr = tk.regs[ra as usize].wrapping_add(off);
+            let v = tk.regs[rs as usize];
+            match w {
+                StoreWidth::B8 => wram.store8(addr, v as u8),
+                StoreWidth::B16 => wram.store16(addr, v as u16),
+                StoreWidth::B32 => wram.store32(addr, v),
+            }?;
+        }
+        Uop::Sd { ra, off, lo, hi } => {
+            let addr = tk.regs[ra as usize].wrapping_add(off);
+            let v = (tk.regs[hi as usize] as u64) << 32 | tk.regs[lo as usize] as u64;
+            wram.store64(addr, v)?;
+        }
+        Uop::Jump { target } => next_pc = target,
+        Uop::JumpReg { ra } => next_pc = tk.regs[ra as usize],
+        Uop::JCmp { cond, ra, b, target } => {
+            if cond.eval(tk.regs[ra as usize], b.value(tk)) {
+                next_pc = target;
+            }
+        }
+        Uop::Call { link, target } => {
+            tk.regs[link as usize] = pc + 1;
+            next_pc = target;
+        }
+        Uop::LdmaNb { wram: wreg, mram: mreg, bytes } => {
+            let waddr = tk.regs[wreg as usize];
+            let maddr = tk.regs[mreg as usize];
+            let cycles = dma_cycles(waddr, maddr, bytes)?;
+            dma_buf.resize(bytes as usize, 0);
+            mram.read(maddr, dma_buf)?;
+            wram.write_bytes(waddr, &dma_buf[..])?;
+            res.dma_read_bytes += bytes as u64;
+            tk.dma_done_at = tk.dma_done_at.max(now - 1 + cycles);
+        }
+        Uop::Time { rd } => tk.regs[rd as usize] = now as u32,
+        Uop::Nop => {}
+        Uop::Event => unreachable!("event_dist == 0 pins events out of superblock windows"),
+    }
+    tk.pc = next_pc;
+    Ok(())
+}
+
+/// Tier-2 window engine: starting from a verified steady rotation at
+/// `rot_start`, repeatedly prove a window of `W` rotations event-free
+/// (`W = min(event_dist[pc_t])` over the ring, clamped by the cycle
+/// limit and [`MAX_WINDOW_ROTATIONS`]) and execute it tasklet-major —
+/// `W` μops per ring tasklet, issue cycles `rot_start + k + j·rot_step`
+/// — with a single bulk scheduler commit per window. Returns the next
+/// rotation's start cycle once `W` reaches 0 (an event instruction is
+/// imminent, or the cycle limit is near); the caller's per-instruction
+/// rotation loop takes over from exactly that cycle.
+///
+/// In-window faults abort the launch like the stepped path does: the
+/// remaining ring tasklets are still executed up to (not including)
+/// the earliest faulting cycle found so far, so the reported fault is
+/// the one the stepped interleaving would hit first (issue cycles are
+/// unique, making that minimum well-defined).
+#[allow(clippy::too_many_arguments)]
+fn run_superblocks(
+    up: &UopProgram,
+    wram: &mut Wram,
+    mram: &mut Mram,
+    ts: &mut [Tasklet],
+    sched: &mut Scheduler,
+    ring: &[usize],
+    mut rot_start: u64,
+    rot_step: u64,
+    cycle_limit: u64,
+    dpu_id: usize,
+    dma_buf: &mut Vec<u8>,
+    res: &mut LaunchResult,
+) -> Result<u64> {
+    debug_assert!(!ring.is_empty());
+    let nr_ring = ring.len() as u64;
+    loop {
+        // How many whole rotations are provably event-free from here.
+        let mut w = MAX_WINDOW_ROTATIONS;
+        for &t in ring {
+            let d = up.event_dist.get(ts[t].pc as usize).copied().unwrap_or(0);
+            w = w.min(d as u64);
+        }
+        // Clamp below the runaway guard: the per-instruction paths
+        // fault when an issue's post-clock exceeds the limit
+        // (`cycle + 1 > cycle_limit`), so every cycle in the window
+        // must satisfy `cycle + 1 <= cycle_limit`; the window's last
+        // issue is `rot_start + (w-1)·rot_step + (R-1)`.
+        let last_base = rot_start + (nr_ring - 1);
+        let w_limit = if last_base + 1 > cycle_limit {
+            0
+        } else {
+            (cycle_limit - (last_base + 1)) / rot_step + 1
+        };
+        w = w.min(w_limit);
+        if w == 0 {
+            return Ok(rot_start);
+        }
+
+        // Earliest in-window fault found so far: (cycle, tasklet, pc, kind).
+        let mut fault: Option<(u64, usize, u32, FaultKind)> = None;
+        for (k, &t) in ring.iter().enumerate() {
+            let base = rot_start + k as u64;
+            let tk = &mut ts[t];
+            for j in 0..w {
+                let cycle = base + j * rot_step;
+                if let Some((fc, ..)) = fault {
+                    // Stepped execution aborts at the first fault; only
+                    // strictly earlier cycles still run.
+                    if cycle >= fc {
+                        break;
+                    }
+                }
+                let pc = tk.pc;
+                res.instrs += 1;
+                if let Err(kind) =
+                    exec_uop(wram, mram, up.uops[pc as usize], tk, cycle + 1, dma_buf, res)
+                {
+                    let earliest = match fault {
+                        Some((fc, ..)) => cycle < fc,
+                        None => true,
+                    };
+                    if earliest {
+                        fault = Some((cycle, t, pc, kind));
+                    }
+                    break;
+                }
+            }
+        }
+        if let Some((_, tasklet, pc, kind)) = fault {
+            return Err(Error::Fault { dpu: dpu_id, tasklet, pc, kind });
+        }
+
+        // One bulk commit stands in for `w` rotations of per-instruction
+        // `commit_issue` calls (lock-step-equivalence pinned in
+        // `pipeline::tests::commit_rotations_mirrors_next_issue`).
+        sched.commit_rotations(ring, rot_start, w, rot_step);
+        rot_start += w * rot_step;
+    }
+}
+
 impl Dpu {
     pub fn new() -> Dpu {
         Dpu {
             wram: Wram::new(),
             mram: Mram::new(),
             program: Arc::new(Program::default()),
+            uops: Arc::new(UopProgram::default()),
             id: 0,
             cycle_limit: DEFAULT_CYCLE_LIMIT,
-            batch_rotations: true,
+            exec_tier: default_exec_tier(),
         }
+    }
+
+    /// Select the issue loop for subsequent launches (see [`ExecTier`]).
+    pub fn set_exec_tier(&mut self, tier: ExecTier) {
+        self.exec_tier = tier;
     }
 
     /// Load a program into IRAM. Fails if it does not fit (the paper's
@@ -396,15 +740,43 @@ impl Dpu {
 
     /// Share one decoded instruction stream (the host layer wraps the
     /// program in an `Arc` once per fleet instead of cloning it into
-    /// every DPU — 2551 clones on the paper's server).
+    /// every DPU — 2551 clones on the paper's server). Translates the
+    /// tier-1 μop form here; fleet loaders that already hold a shared
+    /// translation use [`Dpu::load_program_translated`] instead.
     pub fn load_program_shared(&mut self, program: Arc<Program>) -> Result<()> {
+        let uops = Arc::new(UopProgram::translate(&program));
+        self.load_program_translated(program, uops)
+    }
+
+    /// Share a decoded instruction stream *and* its tier-1 translation
+    /// (both produced once per fleet by
+    /// [`crate::host::PimSystem::load_program`]).
+    pub fn load_program_translated(
+        &mut self,
+        program: Arc<Program>,
+        uops: Arc<UopProgram>,
+    ) -> Result<()> {
         if !program.fits_iram() {
             return Err(Error::IramOverflow {
                 program_bytes: program.iram_bytes(),
                 iram_bytes: IRAM_BYTES,
             });
         }
+        if uops.len() != program.instrs.len() {
+            return Err(Error::Coordinator(format!(
+                "μop translation length {} does not match program length {}",
+                uops.len(),
+                program.instrs.len()
+            )));
+        }
+        // Equal length does not prove the pairing; executing another
+        // program's μops would corrupt superblock windows silently.
+        debug_assert!(
+            uops.matches(&program),
+            "μop translation was not derived from this program"
+        );
         self.program = program;
+        self.uops = uops;
         Ok(())
     }
 
@@ -435,6 +807,8 @@ impl Dpu {
         if instrs.is_empty() {
             return Err(Error::Coordinator("launch with empty program".into()));
         }
+        let uprog = Arc::clone(&self.uops);
+        debug_assert_eq!(uprog.len(), instrs.len(), "translation is pc-preserving");
         let LaunchScratch { ts, dma_buf, ring } = scratch;
         ts.clear();
         ts.extend((0..nr_tasklets).map(|i| Tasklet::new(i as u32)));
@@ -452,10 +826,30 @@ impl Dpu {
         };
 
         'outer: while stopped < nr_tasklets {
-            // ---- batched path: whole rotations without the scheduler ----
-            if cooldown == 0 && self.batch_rotations {
+            // ---- fast paths: whole rotations without the scheduler ----
+            if cooldown == 0 && self.exec_tier != ExecTier::Stepped {
                 if let Some(mut rot_start) = steady_rotation(&sched, ring) {
                     let rot_step = (ring.len() as u64).max(ISSUE_INTERVAL);
+                    if self.exec_tier == ExecTier::Superblock {
+                        // Tier 2: μop superblock windows until an event
+                        // instruction is at most one rotation away; the
+                        // per-instruction loop below then steps through
+                        // the event from exactly this cycle.
+                        rot_start = run_superblocks(
+                            &uprog,
+                            &mut self.wram,
+                            &mut self.mram,
+                            ts,
+                            &mut sched,
+                            ring,
+                            rot_start,
+                            rot_step,
+                            self.cycle_limit,
+                            self.id,
+                            dma_buf,
+                            &mut res,
+                        )?;
+                    }
                     loop {
                         for (k, &t) in ring.iter().enumerate() {
                             let cycle = rot_start + k as u64;
@@ -796,7 +1190,7 @@ mod tests {
         assert!(matches!(dpu.load_program(&prog), Err(Error::IramOverflow { .. })));
     }
 
-    // ---- batched vs stepped path differential coverage -------------------
+    // ---- execution-tier differential coverage ----------------------------
 
     /// Programs that exercise every scheduling shape: pure ALU rotations,
     /// DMA stagger, barriers, early stops, calls, conditional jumps.
@@ -850,37 +1244,145 @@ mod tests {
              jump r23\n",
             &[2, 7, 11, 16],
         ),
+        (
+            // Non-blocking DMA + `time` inside straight-line windows:
+            // both read exact issue cycles, so any window cycle-formula
+            // bug lands in WRAM.
+            "move r0, id8\n\
+             lsl r0, r0, 5\n\
+             add r0, r0, 1024\n\
+             move r1, id8\n\
+             lsl r1, r1, 5\n\
+             add r1, r1, 8192\n\
+             time r2\n\
+             ldma_nb r0, r1, 256\n\
+             add r3, r3, 1\n\
+             add r3, r3, 1\n\
+             dma_wait\n\
+             time r4\n\
+             sub r5, r4, r2\n\
+             move r6, id4\n\
+             add r6, r6, 512\n\
+             sw r6, 0, r5\n\
+             lw r7, r0, 0\n\
+             stop\n",
+            &[1, 2, 8, 12, 16],
+        ),
     ];
 
+    fn launch_on_tier(prog: &Program, tier: ExecTier, tasklets: usize) -> (Dpu, LaunchResult) {
+        let mut dpu = Dpu::new();
+        dpu.set_exec_tier(tier);
+        dpu.load_program(prog).unwrap();
+        dpu.mram.write(4096, &[0xA5; 8192]).unwrap();
+        let r = dpu.launch(tasklets).expect("tier run");
+        (dpu, r)
+    }
+
     #[test]
-    fn batched_path_matches_stepped_path() {
+    fn tier_paths_are_bit_identical() {
         for (src, tasklet_counts) in DIFF_PROGRAMS {
             let prog = assemble(src).expect("assembles");
             for &t in tasklet_counts.iter() {
-                let mut fast = Dpu::new();
-                fast.load_program(&prog).unwrap();
-                fast.mram.write(4096, &[0xA5; 4096]).unwrap();
-                let rf = fast.launch(t).expect("batched run");
-
-                let mut slow = Dpu::new();
-                slow.batch_rotations = false;
-                slow.load_program(&prog).unwrap();
-                slow.mram.write(4096, &[0xA5; 4096]).unwrap();
-                let rs = slow.launch(t).expect("stepped run");
-
-                assert_eq!(rf, rs, "LaunchResult diverged: {t} tasklets on {src:?}");
-                assert_eq!(
-                    fast.wram.as_slice(),
-                    slow.wram.as_slice(),
-                    "WRAM diverged: {t} tasklets"
-                );
-                let mut mf = vec![0u8; 4096];
-                let mut ms = vec![0u8; 4096];
-                fast.mram.read(4096, &mut mf).unwrap();
-                slow.mram.read(4096, &mut ms).unwrap();
-                assert_eq!(mf, ms, "MRAM diverged: {t} tasklets");
+                let (d0, r0) = launch_on_tier(&prog, ExecTier::Stepped, t);
+                for tier in [ExecTier::Batched, ExecTier::Superblock] {
+                    let (d1, r1) = launch_on_tier(&prog, tier, t);
+                    assert_eq!(
+                        r0, r1,
+                        "LaunchResult diverged on {}: {t} tasklets on {src:?}",
+                        tier.name()
+                    );
+                    assert_eq!(
+                        d0.wram.as_slice(),
+                        d1.wram.as_slice(),
+                        "WRAM diverged on {}: {t} tasklets",
+                        tier.name()
+                    );
+                    let mut m0 = vec![0u8; 8192];
+                    let mut m1 = vec![0u8; 8192];
+                    let mut dd0 = d0.clone();
+                    dd0.mram.read(4096, &mut m0).unwrap();
+                    let mut dd1 = d1;
+                    dd1.mram.read(4096, &mut m1).unwrap();
+                    assert_eq!(m0, m1, "MRAM diverged on {}: {t} tasklets", tier.name());
+                }
             }
         }
+    }
+
+    /// A long straight-line body in which tasklet `bad_early` hits a
+    /// WRAM-OOB load at the first `lw` and tasklet `bad_late` at the
+    /// second — deep enough inside an event-free region that the
+    /// superblock engine faults *inside* a window and must resolve the
+    /// earliest faulting cycle across the ring exactly like the stepped
+    /// interleaving would.
+    fn two_fault_src(bad_early: u32, bad_late: u32) -> String {
+        let mut s = String::new();
+        s.push_str("move r2, 256\nmove r6, 256\nmove r0, id\n");
+        s.push_str(&format!("jneq r0, {bad_early}, @a\nmove r2, 65536\na:\n"));
+        s.push_str(&format!("jneq r0, {bad_late}, @b\nmove r6, 65600\nb:\n"));
+        s.push_str(&"add r1, r1, 1\n".repeat(12));
+        s.push_str("lw r3, r2, 0\n");
+        s.push_str(&"add r1, r1, 1\n".repeat(4));
+        s.push_str("lw r4, r6, 0\n");
+        s.push_str(&"add r1, r1, 1\n".repeat(4));
+        s.push_str("stop\n");
+        s
+    }
+
+    #[test]
+    fn fault_identity_is_tier_invariant() {
+        // (bad first-lw tasklet, bad second-lw tasklet): the second
+        // pairing puts the *earlier-cycle* fault on a later ring slot,
+        // exercising the window engine's earliest-fault resolution.
+        let a = two_fault_src(3, 5);
+        let b = two_fault_src(5, 3);
+        let cases: &[(&str, usize, u64)] = &[
+            (a.as_str(), 8, DEFAULT_CYCLE_LIMIT),
+            (b.as_str(), 8, DEFAULT_CYCLE_LIMIT),
+            // Explicit fault (event instruction — per-instruction path).
+            ("move r0, id\njeq r0, 2, @bad\nstop\nbad:\nfault\n", 4, DEFAULT_CYCLE_LIMIT),
+            // The runaway guard must fire at the same cycle per tier
+            // (exercises the superblock cycle-limit window clamp).
+            ("loop:\njump @loop\n", 3, 10_000),
+        ];
+        for (src, tasklets, limit) in cases {
+            let prog = assemble(src).expect("assembles");
+            let run = |tier: ExecTier| {
+                let mut dpu = Dpu::new();
+                dpu.set_exec_tier(tier);
+                dpu.cycle_limit = *limit;
+                dpu.load_program(&prog).unwrap();
+                dpu.launch(*tasklets).expect_err("must fault")
+            };
+            let want = run(ExecTier::Stepped);
+            assert!(matches!(want, Error::Fault { .. }), "reference error: {want}");
+            for tier in [ExecTier::Batched, ExecTier::Superblock] {
+                assert_eq!(want, run(tier), "fault identity diverged on {}", tier.name());
+            }
+        }
+    }
+
+    #[test]
+    fn superblock_windows_follow_branches() {
+        // A tight eventless counter loop: the window engine must follow
+        // the backward branch inside one window rather than re-proving
+        // per iteration — results and cycles stay exact.
+        let src = "move r0, 0\n\
+                   move r1, 5000\n\
+                   loop:\n\
+                   add r0, r0, 3\n\
+                   sub r1, r1, 1\n\
+                   jneq r1, 0, @loop\n\
+                   move r2, 128\n\
+                   sw r2, 0, r0\n\
+                   stop\n";
+        let prog = assemble(src).unwrap();
+        let (d_ref, r_ref) = launch_on_tier(&prog, ExecTier::Stepped, 1);
+        let (d_sb, r_sb) = launch_on_tier(&prog, ExecTier::Superblock, 1);
+        assert_eq!(r_ref, r_sb);
+        assert_eq!(d_ref.wram.load32(128).unwrap(), 15000);
+        assert_eq!(d_sb.wram.load32(128).unwrap(), 15000);
     }
 
     #[test]
@@ -897,5 +1399,37 @@ mod tests {
         // And across tasklet counts.
         let r16 = dpu.launch_with(16, &mut scratch).unwrap();
         assert!(r16.instrs > first.instrs);
+    }
+
+    #[test]
+    fn launch_scratch_reuses_capacity() {
+        // §Perf iteration 5 contract, asserted: after a warm-up launch
+        // at the largest shape, repeated launches allocate nothing —
+        // the tasklet vector, DMA staging buffer and rotation ring all
+        // keep their heap capacity, on every tier.
+        for tier in ExecTier::ALL {
+            let prog = assemble(DIFF_PROGRAMS[1].0).unwrap();
+            let mut dpu = Dpu::new();
+            dpu.set_exec_tier(tier);
+            dpu.load_program(&prog).unwrap();
+            let mut scratch = LaunchScratch::default();
+            dpu.launch_with(16, &mut scratch).unwrap();
+            let warm = scratch.capacities();
+            // (The ring stays empty on the stepped tier, which never
+            // enters the rotation fast paths.)
+            assert!(warm.0 >= 16 && warm.1 > 0, "warm-up populated: {warm:?}");
+            if tier != ExecTier::Stepped {
+                assert!(warm.2 >= 16, "rotation ring hoisted: {warm:?}");
+            }
+            for tasklets in [16, 8, 1, 16] {
+                dpu.launch_with(tasklets, &mut scratch).unwrap();
+                assert_eq!(
+                    scratch.capacities(),
+                    warm,
+                    "launch at {tasklets} tasklets reallocated scratch ({})",
+                    tier.name()
+                );
+            }
+        }
     }
 }

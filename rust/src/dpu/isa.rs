@@ -435,6 +435,25 @@ pub enum Instr {
 }
 
 impl Instr {
+    /// Is this a *scheduling event* — an instruction that can block,
+    /// stall or retire its tasklet (blocking DMA, `dma_wait`,
+    /// `barrier`, `stop`, `fault`)? Everything else costs exactly one
+    /// issue slot and leaves the tasklet runnable, which is the
+    /// property the superblock executor's event-distance analysis
+    /// ([`crate::dpu::uop`]) is built on. `ldma_nb` is *not* an event:
+    /// it completes in the background without stalling the issuer.
+    pub fn is_sched_event(&self) -> bool {
+        matches!(
+            self,
+            Instr::Ldma { .. }
+                | Instr::Sdma { .. }
+                | Instr::DmaWait
+                | Instr::Barrier
+                | Instr::Stop
+                | Instr::Fault
+        )
+    }
+
     /// Disassembly string (labels already resolved to `@pc`).
     pub fn disasm(&self) -> String {
         fn cj_str(cj: &CondJump) -> String {

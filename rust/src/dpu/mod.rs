@@ -32,7 +32,10 @@
 //! * [`symbol`] — typed host-visible kernel symbols (SDK v2)
 //! * [`memory`] — WRAM/MRAM/IRAM with bounds & alignment checking
 //! * [`pipeline`] — the dispatch/cycle model
-//! * [`interp`] — the functional + cycle-counting executor
+//! * [`interp`] — the functional + cycle-counting executor (three
+//!   bit-identical issue tiers, [`interp::ExecTier`])
+//! * [`uop`] — tier-1 ahead-of-time translation: predecoded μops +
+//!   superblock event-distance metadata, cached fleet-wide
 //! * [`dma`] — MRAM↔WRAM DMA latency model
 
 pub mod asm;
@@ -44,12 +47,14 @@ pub mod memory;
 pub mod pipeline;
 pub mod symbol;
 pub mod tasklet;
+pub mod uop;
 
 pub use asm::assemble;
 pub use builder::ProgramBuilder;
-pub use interp::{Dpu, LaunchResult, LaunchScratch};
+pub use interp::{default_exec_tier, Dpu, ExecTier, LaunchResult, LaunchScratch};
 pub use isa::{Cond, Instr, Program, Reg, Src};
 pub use symbol::{MemSpace, Symbol, SymbolTable, SymbolValue};
+pub use uop::UopProgram;
 
 /// DPU clock frequency (Hz). UPMEM-v1B runs at 400 MHz.
 pub const CLOCK_HZ: u64 = 400_000_000;

@@ -124,6 +124,24 @@ impl Scheduler {
         self.now = cycle + 1;
     }
 
+    /// Record `rotations` whole steady rotations issued by the
+    /// superblock engine (§Perf iteration 7): ring tasklet `k` issued
+    /// at cycles `c0 + k`, `c0 + k + rot_step`, …, so the post-state
+    /// equals `rotations × ring.len()` consecutive
+    /// [`Scheduler::commit_issue`] calls ending with the last ring
+    /// tasklet at cycle `c0 + (rotations-1)·rot_step + (ring.len()-1)`
+    /// — one bulk store per window instead of three per instruction
+    /// (pinned lock-step by `commit_rotations_mirrors_next_issue`).
+    pub fn commit_rotations(&mut self, ring: &[usize], c0: u64, rotations: u64, rot_step: u64) {
+        debug_assert!(rotations > 0 && !ring.is_empty());
+        let last_rot = c0 + (rotations - 1) * rot_step;
+        for (k, &t) in ring.iter().enumerate() {
+            self.ready_at[t] = last_rot + k as u64 + ISSUE_INTERVAL;
+        }
+        self.rr_next = ring[ring.len() - 1] + 1;
+        self.now = last_rot + ring.len() as u64;
+    }
+
     /// Earliest cycle at which tasklet `t` may issue ([`BLOCKED`] when
     /// stopped or parked).
     #[inline]
@@ -265,6 +283,37 @@ mod tests {
     #[should_panic]
     fn zero_tasklets_rejected() {
         let _ = Scheduler::new(0);
+    }
+
+    #[test]
+    fn commit_rotations_mirrors_next_issue() {
+        // Driving a scheduler through whole rotations via next_issue
+        // and mirroring each window with one commit_rotations call must
+        // land both in identical states — the superblock engine's bulk
+        // update contract, across ring sizes below and above the issue
+        // interval and across window lengths.
+        for nr in [1usize, 3, 11, 16] {
+            let ring: Vec<usize> = (0..nr).collect();
+            let rot_step = (nr as u64).max(ISSUE_INTERVAL);
+            let mut stepped = Scheduler::new(nr);
+            let mut bulk = Scheduler::new(nr);
+            let mut c0 = 0u64;
+            for rotations in [1u64, 2, 7] {
+                for _ in 0..rotations {
+                    for &expect in &ring {
+                        let t = stepped.next_issue().expect("runnable");
+                        assert_eq!(t, expect, "steady rotation picks the ring in order");
+                    }
+                }
+                bulk.commit_rotations(&ring, c0, rotations, rot_step);
+                assert_eq!(stepped.now, bulk.now, "nr={nr} rotations={rotations}");
+                assert_eq!(stepped.rr_start(), bulk.rr_start());
+                for t in 0..nr {
+                    assert_eq!(stepped.ready_at(t), bulk.ready_at(t), "t={t} nr={nr}");
+                }
+                c0 += rotations * rot_step;
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,427 @@
+//! Tier-1 ahead-of-time translation: predecoded μops + superblock
+//! metadata (§Perf iteration 7).
+//!
+//! The interpreter's per-instruction cost is decode + operand
+//! resolution + dispatch, paid again on every launch of the same
+//! [`Program`] — and a fleet launch replays one shared `Arc<Program>`
+//! on thousands of DPUs. This module moves that work to load time:
+//!
+//! * **μops** — every [`Instr`] is translated once into a [`Uop`] with
+//!   operands fully resolved: constant registers (`zero`/`one`/`lneg`)
+//!   fold into immediates, the tasklet-id family becomes a shift
+//!   ([`Operand::IdShl`]), d-register pairs are pre-split into their
+//!   even/odd halves, load/store offsets are pre-wrapped to `u32`, and
+//!   branch targets are plain `u32` pcs. Every μop still costs exactly
+//!   one issue slot (the UPMEM dispatch model), so no cycle table is
+//!   needed; DMA durations remain data-dependent and are computed at
+//!   issue, exactly like the stepped path.
+//! * **superblock metadata** — [`UopProgram::event_dist`] holds, per
+//!   pc, the minimum number of instructions that can execute from that
+//!   pc before *any* path reaches a scheduling event
+//!   ([`Instr::is_sched_event`]: blocking DMA, `dma_wait`, `barrier`,
+//!   `stop`, `fault`). The tier-2 executor
+//!   ([`crate::dpu::interp`]) uses `min(event_dist[pc_t])` over the
+//!   runnable tasklets as a *proof* that a whole window of rotations is
+//!   event-free, so it can run straight-line μop superblocks (branches
+//!   included — they do not perturb scheduling) per tasklet without
+//!   consulting the scheduler per instruction.
+//!
+//! Translation is pc-preserving (`uops[pc]` ⇔ `instrs[pc]`), so branch
+//! targets, fault pcs, labels and symbols all remain valid, and a
+//! launch can switch between tiers mid-flight (the superblock engine
+//! falls back to the stepped paths on every event).
+//!
+//! The host layer ([`crate::host::PimSystem::load_program`]) translates
+//! once per program and shares the resulting `Arc<UopProgram>`
+//! fleet-wide next to the `Arc<Program>` — the paper's 2551-DPU server
+//! decodes each kernel exactly once.
+
+use super::isa::{
+    AluOp, CmpCond, CondJump, Instr, JumpTarget, LoadWidth, MulVariant, Program, Src, StoreWidth,
+};
+use super::tasklet::Tasklet;
+use std::collections::VecDeque;
+
+/// A pre-resolved readable operand: the constant-register file and
+/// immediates collapse at translation time; only true register reads
+/// and the per-tasklet id family survive to run time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    /// General register index (`0..24`).
+    Reg(u8),
+    /// Immediate (also `zero`, `one`, `lneg` and `Src::Imm`).
+    Imm(u32),
+    /// `tasklet.id << shift` (`id`/`id2`/`id4`/`id8`).
+    IdShl(u8),
+}
+
+impl Operand {
+    fn from_src(s: Src) -> Operand {
+        match s {
+            Src::Reg(r) => Operand::Reg(r.0),
+            Src::Zero => Operand::Imm(0),
+            Src::One => Operand::Imm(1),
+            Src::Lneg => Operand::Imm(u32::MAX),
+            Src::Id => Operand::IdShl(0),
+            Src::Id2 => Operand::IdShl(1),
+            Src::Id4 => Operand::IdShl(2),
+            Src::Id8 => Operand::IdShl(3),
+            Src::Imm(v) => Operand::Imm(v as u32),
+        }
+    }
+
+    /// Evaluate against a tasklet's architectural state.
+    #[inline(always)]
+    pub fn value(self, tk: &Tasklet) -> u32 {
+        match self {
+            Operand::Reg(r) => tk.regs[r as usize],
+            Operand::Imm(v) => v,
+            Operand::IdShl(s) => tk.id << s,
+        }
+    }
+}
+
+/// One predecoded micro-op. Semantically identical to the [`Instr`] at
+/// the same pc (the differential tests pin all three execution tiers
+/// bit-identical); scheduling events are collapsed into [`Uop::Event`]
+/// because the superblock engine proves they never enter a window —
+/// the per-instruction paths execute the original `Instr` stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Uop {
+    Move { rd: u8, src: Operand, cj: CondJump },
+    Alu { op: AluOp, rd: u8, ra: u8, b: Operand, cj: CondJump },
+    Mul { variant: MulVariant, rd: u8, ra: u8, b: Operand, cj: CondJump },
+    /// `mul_step` with the d-pair pre-split into `lo`/`hi` halves.
+    MulStep { lo: u8, hi: u8, ra: u8, shift: u8, cj: CondJump },
+    LslAdd { rd: u8, ra: u8, rb: u8, shift: u8, cj: CondJump },
+    Cao { rd: u8, ra: u8, cj: CondJump },
+    /// WRAM load; `off` is the signed offset pre-wrapped to `u32`.
+    Load { w: LoadWidth, rd: u8, ra: u8, off: u32 },
+    Ld { lo: u8, hi: u8, ra: u8, off: u32 },
+    Store { w: StoreWidth, ra: u8, off: u32, rs: u8 },
+    Sd { ra: u8, off: u32, lo: u8, hi: u8 },
+    Jump { target: u32 },
+    JumpReg { ra: u8 },
+    JCmp { cond: CmpCond, ra: u8, b: Operand, target: u32 },
+    Call { link: u8, target: u32 },
+    /// Non-blocking DMA: executes inside windows (it costs one issue
+    /// slot and never stalls); the transfer latency lands in
+    /// `Tasklet::dma_done_at` exactly like the stepped path.
+    LdmaNb { wram: u8, mram: u8, bytes: u32 },
+    Time { rd: u8 },
+    Nop,
+    /// A scheduling event ([`Instr::is_sched_event`]); pinned out of
+    /// superblock windows by `event_dist[pc] == 0`.
+    Event,
+}
+
+/// `event_dist` value for pcs from which no scheduling event is
+/// statically reachable (a pure compute loop): the window length is
+/// then bounded only by the executor's own cap and the cycle limit.
+pub const DIST_UNBOUNDED: u32 = u32::MAX;
+
+/// A [`Program`] translated to tier-1 form. Built once per loaded
+/// program ([`UopProgram::translate`]) and shared fleet-wide.
+#[derive(Debug, Clone, Default)]
+pub struct UopProgram {
+    /// Predecoded μops, pc-aligned with `Program::instrs`.
+    pub uops: Vec<Uop>,
+    /// Per-pc shortest instruction distance to a scheduling event over
+    /// any static path (0 = the pc *is* an event; [`DIST_UNBOUNDED`] =
+    /// none reachable). Register-indirect jumps and out-of-bounds
+    /// successors count as immediate horizons (distance contribution
+    /// 0), so the bound is always conservative.
+    pub event_dist: Vec<u32>,
+}
+
+impl UopProgram {
+    /// Translate a decoded program. Pure function of the instruction
+    /// stream; `O(instrs)` time and memory.
+    pub fn translate(p: &Program) -> UopProgram {
+        let uops = p.instrs.iter().map(translate_one).collect();
+        let event_dist = event_distances(&p.instrs);
+        UopProgram { uops, event_dist }
+    }
+
+    /// Number of μops (equals the source program's instruction count).
+    pub fn len(&self) -> usize {
+        self.uops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.uops.is_empty()
+    }
+
+    /// Was this translation derived from `p`? Same length alone does
+    /// not prove the pairing — a mismatched equal-length pair would
+    /// execute the wrong μops in superblock windows. Used by the
+    /// loader's debug assertion ([`crate::dpu::interp::Dpu`]); O(n).
+    pub fn matches(&self, p: &Program) -> bool {
+        self.uops.len() == p.instrs.len()
+            && self.uops.iter().zip(&p.instrs).all(|(u, i)| *u == translate_one(i))
+    }
+}
+
+fn translate_one(i: &Instr) -> Uop {
+    match *i {
+        Instr::Move { rd, src, cj } => Uop::Move { rd: rd.0, src: Operand::from_src(src), cj },
+        Instr::Alu { op, rd, ra, b, cj } => {
+            Uop::Alu { op, rd: rd.0, ra: ra.0, b: Operand::from_src(b), cj }
+        }
+        Instr::Mul { variant, rd, ra, b, cj } => {
+            Uop::Mul { variant, rd: rd.0, ra: ra.0, b: Operand::from_src(b), cj }
+        }
+        Instr::MulStep { dd, ra, shift, cj } => {
+            Uop::MulStep { lo: dd.lo().0, hi: dd.hi().0, ra: ra.0, shift, cj }
+        }
+        Instr::LslAdd { rd, ra, rb, shift, cj } => {
+            Uop::LslAdd { rd: rd.0, ra: ra.0, rb: rb.0, shift, cj }
+        }
+        Instr::Cao { rd, ra, cj } => Uop::Cao { rd: rd.0, ra: ra.0, cj },
+        Instr::Load { w, rd, ra, off } => Uop::Load { w, rd: rd.0, ra: ra.0, off: off as u32 },
+        Instr::Ld { dd, ra, off } => {
+            Uop::Ld { lo: dd.lo().0, hi: dd.hi().0, ra: ra.0, off: off as u32 }
+        }
+        Instr::Store { w, ra, off, rs } => Uop::Store { w, ra: ra.0, off: off as u32, rs: rs.0 },
+        Instr::Sd { ra, off, ds } => {
+            Uop::Sd { ra: ra.0, off: off as u32, lo: ds.lo().0, hi: ds.hi().0 }
+        }
+        Instr::Jump { target: JumpTarget::Pc(p) } => Uop::Jump { target: p },
+        Instr::Jump { target: JumpTarget::Reg(r) } => Uop::JumpReg { ra: r.0 },
+        Instr::JCmp { cond, ra, b, target } => {
+            Uop::JCmp { cond, ra: ra.0, b: Operand::from_src(b), target }
+        }
+        Instr::Call { link, target } => Uop::Call { link: link.0, target },
+        Instr::LdmaNb { wram, mram, bytes } => Uop::LdmaNb { wram: wram.0, mram: mram.0, bytes },
+        Instr::Time { rd } => Uop::Time { rd: rd.0 },
+        Instr::Nop => Uop::Nop,
+        Instr::Ldma { .. }
+        | Instr::Sdma { .. }
+        | Instr::DmaWait
+        | Instr::Barrier
+        | Instr::Stop
+        | Instr::Fault => Uop::Event,
+    }
+}
+
+/// Static control flow of one instruction, for the event-distance BFS.
+enum Flow {
+    /// A scheduling event — distance 0 by definition.
+    Event,
+    /// Successor unknown at translation time (register-indirect jump):
+    /// the instruction itself may execute in a window, but nothing past
+    /// it can be proven — distance 1.
+    Unknown,
+    /// Up to two static successor pcs (fall-through and/or branch
+    /// target). A superset of the executable successors is safe: extra
+    /// edges can only *shrink* the proven window.
+    Succs([Option<u32>; 2]),
+}
+
+fn flow(i: &Instr, pc: u32) -> Flow {
+    if i.is_sched_event() {
+        return Flow::Event;
+    }
+    match *i {
+        Instr::Jump { target: JumpTarget::Pc(p) } => Flow::Succs([Some(p), None]),
+        Instr::Jump { target: JumpTarget::Reg(_) } => Flow::Unknown,
+        Instr::JCmp { target, .. } => Flow::Succs([Some(pc + 1), Some(target)]),
+        Instr::Call { target, .. } => Flow::Succs([Some(target), None]),
+        Instr::Move { cj, .. }
+        | Instr::Alu { cj, .. }
+        | Instr::Mul { cj, .. }
+        | Instr::MulStep { cj, .. }
+        | Instr::LslAdd { cj, .. }
+        | Instr::Cao { cj, .. } => match cj {
+            Some((_, t)) => Flow::Succs([Some(pc + 1), Some(t)]),
+            None => Flow::Succs([Some(pc + 1), None]),
+        },
+        _ => Flow::Succs([Some(pc + 1), None]),
+    }
+}
+
+/// Multi-source BFS over the reverse CFG: distance from each pc to the
+/// nearest scheduling event along *any* static path. Sources are the
+/// events themselves (level 0) plus every pc with an unknowable or
+/// out-of-bounds successor (level 1 — the instruction may run, the
+/// horizon starts right after it). FIFO order with the level-0 sources
+/// enqueued first keeps the traversal level-monotone, so the first
+/// distance written to a pc is its minimum.
+fn event_distances(instrs: &[Instr]) -> Vec<u32> {
+    let n = instrs.len();
+    let mut dist = vec![DIST_UNBOUNDED; n];
+    let mut preds: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut level0: Vec<u32> = Vec::new();
+    let mut level1: Vec<u32> = Vec::new();
+    for (pc, i) in instrs.iter().enumerate() {
+        match flow(i, pc as u32) {
+            Flow::Event => level0.push(pc as u32),
+            Flow::Unknown => level1.push(pc as u32),
+            Flow::Succs(ss) => {
+                let mut horizon = false;
+                for s in ss.into_iter().flatten() {
+                    if (s as usize) < n {
+                        preds[s as usize].push(pc as u32);
+                    } else {
+                        horizon = true;
+                    }
+                }
+                if horizon {
+                    level1.push(pc as u32);
+                }
+            }
+        }
+    }
+    let mut queue: VecDeque<u32> = VecDeque::new();
+    for pc in level0 {
+        dist[pc as usize] = 0;
+        queue.push_back(pc);
+    }
+    for pc in level1 {
+        if dist[pc as usize] == DIST_UNBOUNDED {
+            dist[pc as usize] = 1;
+            queue.push_back(pc);
+        }
+    }
+    while let Some(pc) = queue.pop_front() {
+        let d = dist[pc as usize];
+        for &p in &preds[pc as usize] {
+            if dist[p as usize] == DIST_UNBOUNDED {
+                dist[p as usize] = d + 1;
+                queue.push_back(p);
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::asm::assemble;
+
+    fn translated(src: &str) -> UopProgram {
+        UopProgram::translate(&assemble(src).expect("assembles"))
+    }
+
+    #[test]
+    fn operands_fold_at_translation() {
+        let up = translated(
+            "move r0, zero\n\
+             move r1, one\n\
+             move r2, lneg\n\
+             move r3, id4\n\
+             move r4, -7\n\
+             add r5, r0, r1\n\
+             stop\n",
+        );
+        assert_eq!(up.uops[0], Uop::Move { rd: 0, src: Operand::Imm(0), cj: None });
+        assert_eq!(up.uops[1], Uop::Move { rd: 1, src: Operand::Imm(1), cj: None });
+        assert_eq!(up.uops[2], Uop::Move { rd: 2, src: Operand::Imm(u32::MAX), cj: None });
+        assert_eq!(up.uops[3], Uop::Move { rd: 3, src: Operand::IdShl(2), cj: None });
+        assert_eq!(up.uops[4], Uop::Move { rd: 4, src: Operand::Imm(-7i32 as u32), cj: None });
+        assert_eq!(up.uops[6], Uop::Event);
+    }
+
+    #[test]
+    fn operand_values_match_src_semantics() {
+        let mut tk = Tasklet::new(5);
+        tk.regs[3] = 42;
+        assert_eq!(Operand::Reg(3).value(&tk), 42);
+        assert_eq!(Operand::Imm(7).value(&tk), 7);
+        assert_eq!(Operand::IdShl(0).value(&tk), 5);
+        assert_eq!(Operand::IdShl(1).value(&tk), 10);
+        assert_eq!(Operand::IdShl(2).value(&tk), 20);
+        assert_eq!(Operand::IdShl(3).value(&tk), 40);
+    }
+
+    #[test]
+    fn translation_is_pc_preserving() {
+        let p = assemble(
+            "move r0, 3\n\
+             loop:\n\
+             sub r0, r0, 1\n\
+             jneq r0, 0, @loop\n\
+             barrier\n\
+             stop\n",
+        )
+        .unwrap();
+        let up = UopProgram::translate(&p);
+        assert_eq!(up.len(), p.instrs.len());
+        assert_eq!(
+            up.uops[2],
+            Uop::JCmp { cond: CmpCond::Neq, ra: 0, b: Operand::Imm(0), target: 1 }
+        );
+    }
+
+    #[test]
+    fn event_distance_counts_instructions_to_the_event() {
+        // pc0 move, pc1 add, pc2 barrier, pc3 stop.
+        let up = translated("move r0, 1\nadd r0, r0, 1\nbarrier\nstop\n");
+        assert_eq!(up.event_dist, vec![2, 1, 0, 0]);
+    }
+
+    #[test]
+    fn event_distance_takes_the_shortest_branch() {
+        // pc0 jeq → @done (pc3 stop, 1 away) or falls through two adds.
+        let up = translated(
+            "jeq r0, 0, @done\n\
+             add r1, r1, 1\n\
+             add r1, r1, 1\n\
+             done:\n\
+             stop\n",
+        );
+        assert_eq!(up.event_dist[0], 1, "branch to stop dominates the fall-through");
+        assert_eq!(up.event_dist[1], 2);
+        assert_eq!(up.event_dist[2], 1);
+    }
+
+    #[test]
+    fn register_jump_is_a_one_instruction_horizon() {
+        // call @sub runs two instrs then `jump r23` (unknown successor).
+        let up = translated(
+            "call r23, @sub\n\
+             stop\n\
+             sub:\n\
+             add r0, r0, 1\n\
+             jump r23\n",
+        );
+        assert_eq!(up.event_dist[3], 1, "register-indirect jump ends the provable window");
+        assert_eq!(up.event_dist[2], 2);
+        // The call's only successor is the routine body.
+        assert_eq!(up.event_dist[0], 3);
+    }
+
+    #[test]
+    fn eventless_loop_is_unbounded() {
+        // A jump-only loop never reaches an event: window length is
+        // bounded by the executor's cap / cycle limit instead.
+        let p = Program {
+            instrs: vec![Instr::Jump { target: JumpTarget::Pc(0) }],
+            ..Program::default()
+        };
+        let up = UopProgram::translate(&p);
+        assert_eq!(up.event_dist, vec![DIST_UNBOUNDED]);
+    }
+
+    #[test]
+    fn out_of_bounds_fallthrough_is_a_horizon() {
+        // Last instruction falls off the end: it may execute, but the
+        // next fetch faults — distance 1 stops the window before it.
+        let p = Program {
+            instrs: vec![
+                Instr::Nop,
+                Instr::Alu {
+                    op: AluOp::Add,
+                    rd: crate::dpu::Reg(0),
+                    ra: crate::dpu::Reg(0),
+                    b: Src::Imm(1),
+                    cj: None,
+                },
+            ],
+            ..Program::default()
+        };
+        let up = UopProgram::translate(&p);
+        assert_eq!(up.event_dist, vec![2, 1]);
+    }
+}

@@ -38,7 +38,7 @@ pub mod xfer;
 use crate::alloc::{BaselineAllocator, NumaAwareAllocator, RankSet};
 use crate::dpu::isa::Program;
 use crate::dpu::symbol::{MemSpace, Symbol, SymbolValue};
-use crate::dpu::{Dpu, LaunchResult, LaunchScratch};
+use crate::dpu::{default_exec_tier, Dpu, ExecTier, LaunchResult, LaunchScratch, UopProgram};
 use crate::transfer::model::BufferPlacement;
 use crate::transfer::queue::{RankQueues, Resource};
 use crate::transfer::topology::{DpuId, SystemTopology, TOTAL_DPUS, TOTAL_RANKS};
@@ -137,6 +137,10 @@ pub struct PimSystem {
     /// `PIM_LAUNCH_WORKERS` env var, else the host's available
     /// parallelism; results are bit-identical at every setting.
     launch_workers: usize,
+    /// Interpreter issue loop for every DPU of this system (default:
+    /// `PIM_EXEC_TIER` env var, else superblock). Results are
+    /// bit-identical at every setting; only host speed changes.
+    exec_tier: ExecTier,
     /// Per-worker interpreter scratch, reused across launches.
     scratch: Vec<LaunchScratch>,
     /// Recycled `FleetLaunch::per_dpu` buffers (steady-state serving
@@ -177,6 +181,7 @@ impl PimSystem {
             dpus,
             queues: RankQueues::new(TOTAL_RANKS),
             launch_workers: default_launch_workers(),
+            exec_tier: default_exec_tier(),
             scratch: Vec::new(),
             result_pool: Vec::new(),
         }
@@ -194,6 +199,24 @@ impl PimSystem {
     /// Current fleet-launch worker-thread count.
     pub fn launch_workers(&self) -> usize {
         self.launch_workers
+    }
+
+    /// Select the interpreter issue loop for the whole fleet (see
+    /// [`ExecTier`]): applies to every already-materialized DPU and to
+    /// all future ones. All tiers are bit-identical — pin `stepped`
+    /// when single-stepping the simulator itself, `batched` to isolate
+    /// a suspected μop-translation bug, `superblock` (default) for
+    /// speed.
+    pub fn set_exec_tier(&mut self, tier: ExecTier) {
+        self.exec_tier = tier;
+        for d in self.dpus.iter_mut().flatten() {
+            d.exec_tier = tier;
+        }
+    }
+
+    /// The fleet's current execution tier.
+    pub fn exec_tier(&self) -> ExecTier {
+        self.exec_tier
     }
 
     /// The paper's server with the paper's policy choice.
@@ -258,19 +281,23 @@ impl PimSystem {
         if slot.is_none() {
             let mut d = Box::new(Dpu::new());
             d.id = id;
+            d.exec_tier = self.exec_tier;
             *slot = Some(d);
         }
         slot.as_mut().unwrap().as_mut()
     }
 
     /// Load a kernel onto every DPU of the set (the SDK's
-    /// `dpu_load`). The instruction stream is decoded once and shared
-    /// `Arc`'d fleet-wide — loading onto the paper's 2551 usable DPUs
-    /// no longer clones the program 2551 times. Fails on IRAM overflow.
+    /// `dpu_load`). The instruction stream is decoded once and its
+    /// tier-1 μop translation ([`UopProgram`]) computed once, then both
+    /// are shared `Arc`'d fleet-wide — loading onto the paper's 2551
+    /// usable DPUs clones and translates the program exactly once, not
+    /// 2551 times. Fails on IRAM overflow.
     pub fn load_program(&mut self, set: &DpuSet, program: &Program) -> Result<()> {
         let shared = Arc::new(program.clone());
+        let uops = Arc::new(UopProgram::translate(program));
         for &id in &set.dpus {
-            self.dpu_mut(id).load_program_shared(Arc::clone(&shared))?;
+            self.dpu_mut(id).load_program_translated(Arc::clone(&shared), Arc::clone(&uops))?;
         }
         Ok(())
     }
@@ -881,6 +908,47 @@ mod tests {
         assert_eq!(serial.per_dpu, parallel.per_dpu);
         assert_eq!(serial.max_cycles, parallel.max_cycles);
         assert!((serial.seconds - parallel.seconds).abs() == 0.0);
+    }
+
+    #[test]
+    fn exec_tier_changes_nothing_but_is_applied_fleet_wide() {
+        let prog = assemble(
+            "move r0, id\n\
+             add r0, r0, 5\n\
+             loop:\n\
+             sub r0, r0, 1\n\
+             jneq r0, 0, @loop\n\
+             move r1, id4\n\
+             sw r1, 0, r0\n\
+             stop\n",
+        )
+        .unwrap();
+        let run = |tier: ExecTier| {
+            let mut sys = numa_system();
+            sys.set_exec_tier(tier);
+            assert_eq!(sys.exec_tier(), tier);
+            let set = sys.alloc_ranks(2).unwrap();
+            sys.load_program(&set, &prog).unwrap();
+            let fleet = sys.launch(&set, 8).unwrap();
+            // Lazily-materialized DPUs must have inherited the tier.
+            assert_eq!(sys.dpu_of(&set, 17).exec_tier, tier);
+            fleet
+        };
+        let stepped = run(ExecTier::Stepped);
+        for tier in [ExecTier::Batched, ExecTier::Superblock] {
+            let other = run(tier);
+            assert_eq!(stepped.per_dpu, other.per_dpu, "{} diverged", tier.name());
+            assert_eq!(stepped.max_cycles, other.max_cycles);
+        }
+        // Switching tier mid-life re-tags already-materialized DPUs.
+        let mut sys = numa_system();
+        let set = sys.alloc_ranks(2).unwrap();
+        sys.load_program(&set, &prog).unwrap();
+        let before = sys.launch(&set, 8).unwrap();
+        sys.set_exec_tier(ExecTier::Stepped);
+        assert_eq!(sys.dpu_of(&set, 0).exec_tier, ExecTier::Stepped);
+        let after = sys.launch(&set, 8).unwrap();
+        assert_eq!(before.per_dpu, after.per_dpu);
     }
 
     #[test]

@@ -413,6 +413,24 @@ pub fn run_gemv_dpu_with_cfg(
     m: &[i8],
     x: &[i8],
 ) -> Result<(Vec<i32>, LaunchResult)> {
+    let mut dpu = Dpu::new();
+    run_gemv_dpu_cfg_on(&mut dpu, variant, cfg, shape, nr_tasklets, m, x)
+}
+
+/// [`run_gemv_dpu_with_cfg`] against a caller-provided DPU — the
+/// execution-tier differential tests pin `Dpu::exec_tier` before the
+/// run; reuse-heavy drivers keep the 64 KB WRAM allocation alive. The
+/// caller is responsible for providing a DPU whose WRAM state does not
+/// alias the kernel's buffers (a fresh or same-kernel DPU).
+pub fn run_gemv_dpu_cfg_on(
+    dpu: &mut Dpu,
+    variant: GemvVariant,
+    cfg: &PassConfig,
+    shape: GemvShape,
+    nr_tasklets: usize,
+    m: &[i8],
+    x: &[i8],
+) -> Result<(Vec<i32>, LaunchResult)> {
     shape.validate(variant, nr_tasklets)?;
     if cfg.dma_double_buffer && nr_tasklets > 8 {
         return Err(crate::Error::Coordinator(format!(
@@ -423,12 +441,11 @@ pub fn run_gemv_dpu_with_cfg(
     assert_eq!(m.len(), shape.rows as usize * shape.cols as usize);
     assert_eq!(x.len(), shape.cols as usize);
     let program = emit_gemv_with(variant, cfg)?;
-    let mut dpu = Dpu::new();
     dpu.load_program(&program)?;
-    stage_gemv_inputs(&mut dpu, variant, shape, m, x)?;
-    set_gemv_args(&mut dpu, variant, shape, nr_tasklets);
+    stage_gemv_inputs(dpu, variant, shape, m, x)?;
+    set_gemv_args(dpu, variant, shape, nr_tasklets);
     let launch = dpu.launch(nr_tasklets)?;
-    let y = collect_gemv_output(&mut dpu, shape.rows, nr_tasklets)?;
+    let y = collect_gemv_output(dpu, shape.rows, nr_tasklets)?;
     Ok((y, launch))
 }
 

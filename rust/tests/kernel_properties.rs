@@ -4,7 +4,7 @@
 
 use upmem_unleashed::dpu::builder::ProgramBuilder;
 use upmem_unleashed::dpu::isa::CmpCond;
-use upmem_unleashed::dpu::{assemble, Dpu, Program, Reg, Src};
+use upmem_unleashed::dpu::{assemble, Dpu, ExecTier, Program, Reg, Src};
 use upmem_unleashed::kernels::arith::{
     emit_microbench, run_microbench, DType, MulImpl, Spec, Unroll,
 };
@@ -317,6 +317,49 @@ fn optimizer_is_architecturally_invisible_on_random_programs() {
             d1.wram.as_slice() == d2.wram.as_slice()
         },
         "optimized stream is bit-identical to naive over random programs",
+    );
+}
+
+/// Random structured programs on all three interpreter execution tiers
+/// (stepped / batched / superblock, `rust/src/dpu/interp.rs`): WRAM
+/// images, cycle counts, instruction counts and DMA accounting must be
+/// bit-identical — for the naive stream *and* for every random pass
+/// subset of its optimized form, so tier equivalence holds on
+/// arbitrary post-optimizer shapes (fused condition slots, truncated
+/// `mul_step` chains, unrolled bodies), not just emitter output.
+#[test]
+fn exec_tiers_are_bit_identical_on_random_programs() {
+    forall(
+        Config::cases(40),
+        |rng| (rng.next_u64(), rng.next_u64() as u8),
+        |&(seed, cfg_mask)| {
+            let naive = random_program(seed);
+            let mut cfg = PassConfig::none();
+            for (bit, pass) in ALL_PASSES.into_iter().enumerate() {
+                if cfg_mask & (1u8 << bit) != 0 {
+                    cfg = cfg.set(pass, true);
+                }
+            }
+            let (opt, _) = naive.optimize(&cfg);
+            for prog in [&naive, &opt] {
+                let run = |tier: ExecTier| {
+                    let mut d = Dpu::new();
+                    d.set_exec_tier(tier);
+                    d.load_program(prog).expect("fits IRAM");
+                    let r = d.launch(1).expect("random programs terminate");
+                    (r, d)
+                };
+                let (r0, d0) = run(ExecTier::Stepped);
+                for tier in [ExecTier::Batched, ExecTier::Superblock] {
+                    let (r1, d1) = run(tier);
+                    if r0 != r1 || d0.wram.as_slice() != d1.wram.as_slice() {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+        "all three exec tiers bit-identical (WRAM + LaunchResult) on random programs",
     );
 }
 

@@ -1,0 +1,225 @@
+//! Execution-tier differential contract: the stepped, batched and
+//! superblock issue loops (`rust/src/dpu/interp.rs`, selected by
+//! `ExecTier`) must produce **bit-identical** outcomes on the full
+//! kernel matrix — every `LaunchResult` (cycles, instrs, DMA bytes),
+//! per-tasklet timed cycles, kernel outputs (the runners verify
+//! element-by-element against the host reference on every tier), full
+//! WRAM images, and, on the fault path, the same `Error` for a
+//! mid-fleet fault with identical survivor state. (The faulting DPU's
+//! own post-fault memory is deliberately *not* compared: it is
+//! tier-defined — see the carve-out in `rust/src/dpu/interp.rs` docs.)
+//!
+//! The stepped path is the reference; `kernel_properties.rs` covers
+//! random programs, `interp.rs` unit tests cover the scheduling-shape
+//! corpus and in-window fault ordering. This file covers the paper's
+//! kernels: arith × `MulImpl` × `Unroll`, the BSDP dot variants, and
+//! all four GEMV variants (plus the DMA-double-buffered stream, whose
+//! `ldma_nb`/`dma_wait` pair exercises non-blocking DMA inside
+//! superblock windows).
+
+use upmem_unleashed::dpu::{assemble, Dpu, ExecTier};
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::kernels::arith::{
+    run_microbench_cfg_with, DType, MulImpl, Spec, Unroll,
+};
+use upmem_unleashed::kernels::bsdp::{run_dot_microbench_cfg_with, DotVariant};
+use upmem_unleashed::kernels::gemv::{run_gemv_dpu_cfg_on, GemvShape, GemvVariant};
+use upmem_unleashed::kernels::KernelScratch;
+use upmem_unleashed::opt::PassConfig;
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::rng::Rng;
+use upmem_unleashed::Error;
+
+const FAST_TIERS: [ExecTier; 2] = [ExecTier::Batched, ExecTier::Superblock];
+
+/// Everything a single-DPU kernel run can influence.
+#[derive(PartialEq, Debug)]
+struct Snapshot {
+    launch: upmem_unleashed::dpu::LaunchResult,
+    tasklet_cycles: Vec<u32>,
+    wram: Vec<u8>,
+}
+
+#[test]
+fn arith_matrix_is_tier_invariant() {
+    let specs: Vec<Spec> = vec![
+        Spec::add(DType::I8),
+        Spec::add(DType::I32),
+        Spec::mul(DType::I8, MulImpl::Mulsi3),
+        Spec::mul(DType::I8, MulImpl::Native),
+        Spec::mul(DType::I8, MulImpl::NativeX4),
+        Spec::mul(DType::I8, MulImpl::NativeX8),
+        Spec::mul(DType::I32, MulImpl::Mulsi3),
+        Spec::mul(DType::I32, MulImpl::Dim),
+    ];
+    for base in specs {
+        for u in [Unroll::No, Unroll::Auto, Unroll::X64, Unroll::X128] {
+            let spec = base.with_unroll(u);
+            for tasklets in [4usize, 16] {
+                let run = |tier: ExecTier| -> Option<Snapshot> {
+                    let mut scr = KernelScratch::default();
+                    scr.dpu.set_exec_tier(tier);
+                    match run_microbench_cfg_with(
+                        &mut scr,
+                        spec,
+                        &spec.default_passes(),
+                        tasklets,
+                        8 * 1024,
+                        99,
+                    ) {
+                        // The runner has already verified every output
+                        // element against the host reference.
+                        Ok(o) => Some(Snapshot {
+                            launch: o.launch,
+                            tasklet_cycles: o.tasklet_cycles,
+                            wram: scr.dpu.wram.as_slice().to_vec(),
+                        }),
+                        // `Unroll::Auto` may overfill IRAM — the
+                        // paper's linker error, identical per tier.
+                        Err(Error::IramOverflow { .. }) if u == Unroll::Auto => None,
+                        Err(e) => panic!("{} ({tasklets}T): {e}", spec.name()),
+                    }
+                };
+                let reference = run(ExecTier::Stepped);
+                for tier in FAST_TIERS {
+                    assert_eq!(
+                        reference,
+                        run(tier),
+                        "{} ({tasklets}T) diverged on {}",
+                        spec.name(),
+                        tier.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bsdp_dot_variants_are_tier_invariant() {
+    for variant in [
+        DotVariant::NativeBaseline,
+        DotVariant::NativeMulsi3,
+        DotVariant::NativeOptimized,
+        DotVariant::Bsdp,
+    ] {
+        for tasklets in [4usize, 16] {
+            let run = |tier: ExecTier| -> (Snapshot, i32) {
+                let mut scr = KernelScratch::default();
+                scr.dpu.set_exec_tier(tier);
+                let o = run_dot_microbench_cfg_with(
+                    &mut scr,
+                    variant,
+                    &PassConfig::all(),
+                    tasklets,
+                    8 * 2048,
+                    7,
+                )
+                .expect("verified dot run");
+                (
+                    Snapshot {
+                        launch: o.launch,
+                        tasklet_cycles: o.tasklet_cycles,
+                        wram: scr.dpu.wram.as_slice().to_vec(),
+                    },
+                    o.dot,
+                )
+            };
+            let reference = run(ExecTier::Stepped);
+            for tier in FAST_TIERS {
+                assert_eq!(
+                    reference,
+                    run(tier),
+                    "{variant:?} ({tasklets}T) diverged on {}",
+                    tier.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gemv_variants_are_tier_invariant() {
+    let rows = 16u32;
+    let mut rng = Rng::new(4242);
+    let m8 = rng.i8_vec((rows * 1024) as usize);
+    let x8 = rng.i8_vec(1024);
+    let m4 = rng.i4_vec((rows * 2048) as usize);
+    let x4 = rng.i4_vec(2048);
+    let i8_shape = GemvShape { rows, cols: 1024 };
+    let i4_shape = GemvShape { rows, cols: 2048 };
+    let cases: Vec<(GemvVariant, PassConfig, usize)> = vec![
+        (GemvVariant::I8Baseline, GemvVariant::I8Baseline.default_passes(), 16),
+        (GemvVariant::I8Mulsi3, GemvVariant::I8Mulsi3.default_passes(), 16),
+        (GemvVariant::I8Opt, GemvVariant::I8Opt.default_passes(), 16),
+        (GemvVariant::I4Bsdp, GemvVariant::I4Bsdp.default_passes(), 16),
+        // All passes incl. DMA double-buffering: `ldma_nb`/`dma_wait`
+        // inside superblock windows (≤ 8 tasklets by WRAM layout).
+        (GemvVariant::I8Opt, PassConfig::all(), 8),
+    ];
+    for (variant, cfg, tasklets) in cases {
+        let (shape, m, x) = if variant == GemvVariant::I4Bsdp {
+            (i4_shape, &m4, &x4)
+        } else {
+            (i8_shape, &m8, &x8)
+        };
+        let run = |tier: ExecTier| {
+            let mut dpu = Dpu::new();
+            dpu.set_exec_tier(tier);
+            let (y, launch) = run_gemv_dpu_cfg_on(&mut dpu, variant, &cfg, shape, tasklets, m, x)
+                .expect("gemv run");
+            (y, launch, dpu.wram.as_slice().to_vec())
+        };
+        let reference = run(ExecTier::Stepped);
+        for tier in FAST_TIERS {
+            assert_eq!(
+                reference,
+                run(tier),
+                "{} ({tasklets}T) diverged on {}",
+                variant.name(),
+                tier.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn mid_fleet_fault_is_tier_invariant() {
+    // One DPU (set index 37) faults via a host-planted flag; the fleet
+    // keeps running (hardware semantics). Fault identity and all
+    // surviving DPUs' state must match the stepped reference exactly.
+    let prog = assemble(
+        "move r0, 0\n\
+         lw r0, r0, 8\n\
+         jeq r0, 1, @bad\n\
+         move r1, 37\n\
+         spin:\n\
+         sub r1, r1, 1\n\
+         jneq r1, 0, @spin\n\
+         move r2, id4\n\
+         add r2, r2, 64\n\
+         sw r2, 0, r1\n\
+         stop\n\
+         bad:\n\
+         fault\n",
+    )
+    .unwrap();
+    let run = |tier: ExecTier| -> (Error, Vec<Vec<u8>>) {
+        let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+        sys.set_exec_tier(tier);
+        let set = sys.alloc_ranks(2).unwrap();
+        sys.load_program(&set, &prog).unwrap();
+        sys.dpu_of(&set, 37).wram.store32(8, 1).unwrap();
+        let err = sys.launch(&set, 8).unwrap_err();
+        let mut survivors = Vec::new();
+        for i in [0usize, 36, 38, 127] {
+            survivors.push(sys.dpu_of(&set, i).wram.as_slice()[0..192].to_vec());
+        }
+        (err, survivors)
+    };
+    let reference = run(ExecTier::Stepped);
+    assert!(matches!(reference.0, Error::Fault { .. }), "reference: {}", reference.0);
+    for tier in FAST_TIERS {
+        assert_eq!(reference, run(tier), "mid-fleet fault diverged on {}", tier.name());
+    }
+}

@@ -5,14 +5,38 @@ Compares the per-workload *modeled cycles* of a fresh bench run against
 the committed baseline and fails on regressions beyond the threshold.
 Modeled cycles are deterministic (unlike host Minstr/s), so the gate is
 stable on shared CI runners — but only when both files were produced at
-the same workload sizes (CI runs both under PERF_SMOKE=1).
+the same workload sizes (CI runs both under PERF_SMOKE=1). Since the
+tiered execution engine, modeled cycles are also execution-tier
+invariant, so CI gates each tier's run against one shared baseline —
+a tier whose cycle model drifts fails here even before the Rust
+differential tests run.
 
 Usage:
     check_perf_regression.py BASELINE.json FRESH.json [--threshold 0.10]
+    check_perf_regression.py BASELINE.json FRESH.json --arm-bootstrap
 
-Bootstrap: a baseline with "bootstrap": true (or no "workloads" map)
-passes with a notice printing the fresh values, so the first toolchain
-run can commit them.
+Failure modes (exit 1) — the gate *fails*, never silently skips:
+  * the fresh run is not schema v2 or carries no modeled_cycles rows;
+  * a workload present in the baseline is missing from the fresh run
+    (renamed or dropped bench cases must update the baseline in the
+    same change, otherwise their protection silently disarms);
+  * any workload regressed more than the threshold;
+  * the baseline is still a bootstrap placeholder and --arm-bootstrap
+    was not given.
+
+--arm-bootstrap: if (and only if) the baseline is a bootstrap
+placeholder (or missing/empty), write a normalized baseline — workload
+names + modeled_cycles only, host-dependent throughput dropped — to the
+baseline path from the fresh run, print it, and exit 0. CI runs this
+on a *scratch copy* of the committed placeholder, after (and
+independently of) the gate: the gate itself always compares against
+the committed file — failing loudly while it is still a placeholder —
+and the printed armed baseline is what a maintainer commits to turn
+the gate green and permanent. CI additionally cross-checks the
+stepped/batched tier runs against the same job's superblock JSON
+(tier-invariant modeled cycles, near-zero threshold), which needs no
+committed baseline at all. Once the committed baseline is armed the
+flag is a no-op.
 """
 
 import argparse
@@ -28,16 +52,63 @@ def workloads(doc):
     return out
 
 
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return {}
+
+
+def is_bootstrap(doc):
+    return bool(doc.get("bootstrap")) or not workloads(doc)
+
+
+def arm_baseline(path, fresh_doc):
+    armed = {
+        "schema_version": 2,
+        "note": ("Armed from a fresh PERF_SMOKE run (tools/check_perf_regression.py "
+                 "--arm-bootstrap). Workload names + modeled_cycles only: cycles are "
+                 "deterministic and tier/worker/machine-invariant; host Minstr/s is "
+                 "intentionally dropped. Refresh by re-running --arm-bootstrap on a "
+                 "bootstrap placeholder, or by editing alongside any bench rename."),
+        "meta": fresh_doc.get("meta", {}),
+        "workloads": {
+            name: {"modeled_cycles": cycles}
+            for name, cycles in workloads(fresh_doc).items()
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(armed, f, indent=2)
+        f.write("\n")
+    return armed
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline")
     ap.add_argument("fresh")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="allowed fractional cycle regression (default 10%%)")
+    ap.add_argument("--exact", action="store_true",
+                    help="fail on divergence in EITHER direction beyond the "
+                         "threshold (cycle *improvements* included) — the "
+                         "cross-tier consistency mode, where modeled cycles "
+                         "must be invariant, not merely non-regressing")
+    ap.add_argument("--arm-bootstrap", action="store_true",
+                    help="if the baseline is a bootstrap placeholder, replace it "
+                         "with the fresh run's modeled cycles and exit 0")
     args = ap.parse_args()
 
-    with open(args.fresh) as f:
-        fresh_doc = json.load(f)
+    # Only the baseline may legitimately be absent (bootstrap case);
+    # a missing fresh report is an operator error worth naming.
+    try:
+        with open(args.fresh) as f:
+            fresh_doc = json.load(f)
+    except FileNotFoundError:
+        print(f"FAIL: fresh report {args.fresh} does not exist — run the "
+              "perf_simulator bench first (or fix the path)")
+        return 1
     fresh = workloads(fresh_doc)
     if fresh_doc.get("schema_version") != 2:
         print(f"FAIL: {args.fresh} is not schema_version 2")
@@ -46,17 +117,27 @@ def main():
         print(f"FAIL: {args.fresh} carries no modeled_cycles workloads")
         return 1
 
-    try:
-        with open(args.baseline) as f:
-            base_doc = json.load(f)
-    except FileNotFoundError:
-        base_doc = {}
-    base = workloads(base_doc)
-    if base_doc.get("bootstrap") or not base:
-        print(f"NOTICE: baseline {args.baseline} is a bootstrap placeholder — "
-              "no gate applied. Commit the fresh values to arm it:")
-        print(json.dumps(fresh_doc, indent=2))
+    base_doc = load(args.baseline)
+    if args.arm_bootstrap:
+        if is_bootstrap(base_doc):
+            armed = arm_baseline(args.baseline, fresh_doc)
+            print(f"ARMED: {args.baseline} written from {args.fresh} "
+                  f"({len(armed['workloads'])} gated workloads). Commit it to make "
+                  "the gate permanent:")
+            print(json.dumps(armed, indent=2))
+        else:
+            print(f"OK: {args.baseline} is already armed "
+                  f"({len(workloads(base_doc))} gated workloads); nothing to do.")
         return 0
+
+    base = workloads(base_doc)
+    if is_bootstrap(base_doc):
+        print(f"FAIL: baseline {args.baseline} is a bootstrap placeholder — the gate "
+              "is disarmed. Run a full PERF_SMOKE bench and arm it:\n"
+              f"  python3 tools/check_perf_regression.py {args.baseline} {args.fresh} "
+              "--arm-bootstrap\nthen commit the baseline. Fresh values were:")
+        print(json.dumps(fresh_doc, indent=2))
+        return 1
 
     regressions, improvements, missing = [], [], []
     for name, want in sorted(base.items()):
@@ -70,8 +151,14 @@ def main():
             regressions.append((name, want, got, rel))
             marker = "REGRESSION"
         elif rel < -args.threshold:
-            improvements.append((name, want, got, rel))
-            marker = "improved"
+            if args.exact:
+                # Invariance mode: a tier modeling *fewer* cycles than
+                # the reference is just as broken as one modeling more.
+                regressions.append((name, want, got, rel))
+                marker = "DIVERGENCE"
+            else:
+                improvements.append((name, want, got, rel))
+                marker = "improved"
         print(f"  {marker:>10}  {name}: {want} -> {got} ({rel:+.1%})")
 
     for name in fresh:
@@ -88,7 +175,8 @@ def main():
               f"renamed or dropped bench cases must update {args.baseline} in the "
               "same change, otherwise their regression protection silently disarms.")
     if regressions:
-        print(f"FAIL: {len(regressions)} workload(s) regressed more than "
+        verb = "diverged" if args.exact else "regressed"
+        print(f"FAIL: {len(regressions)} workload(s) {verb} more than "
               f"{args.threshold:.0%} in modeled cycles.")
     if regressions or missing:
         return 1

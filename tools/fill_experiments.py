@@ -1,0 +1,193 @@
+#!/usr/bin/env python3
+"""Rewrite the `_pending_` cells of EXPERIMENTS.md from measured bench
+output, so numbers land mechanically instead of by hand.
+
+Two sources, both optional:
+
+  --perf BENCH_perf.json      schema-v2 report written by
+                              `cargo bench --bench perf_simulator`.
+                              Fills §Perf tables: any markdown table row
+                              whose first cell names a JSON workload
+                              (backticks ignored) gets its `Minstr/s`
+                              column filled with `minstr_per_s` and its
+                              `modeled cycles` column with
+                              `modeled_cycles` (aggregate rows without a
+                              cycle count get an em dash).
+
+  --ablation FILE             captured stdout of
+                              `cargo bench --bench pass_ablation`, which
+                              prints a markdown-pasteable table after the
+                              "markdown (paste into EXPERIMENTS.md"
+                              marker. Rows in §Pass ablation whose
+                              workload cell matches a printed row are
+                              replaced wholesale (column counts must
+                              agree).
+
+Usage:
+    cargo bench --bench perf_simulator
+    cargo bench --bench pass_ablation | tee pass_ablation.out
+    python3 tools/fill_experiments.py --perf BENCH_perf.json \
+        --ablation pass_ablation.out
+
+Idempotent: already-filled cells are overwritten with the new
+measurement (the log's contract is "regenerated, never hand-edited");
+rows with no matching measurement are left untouched and reported.
+Exits 1 if nothing at all could be filled (likely a wiring error).
+"""
+
+import argparse
+import json
+import re
+import sys
+
+PENDING = "_pending_"
+DASH = "—"  # em dash for rows with no modeled cycle count
+
+
+def norm(cell):
+    """Normalize a workload cell for matching: strip backticks/space."""
+    return cell.replace("`", "").strip()
+
+
+def split_row(line):
+    """Split a markdown table row into cells (no escaped pipes used)."""
+    return [c.strip() for c in line.strip().strip("|").split("|")]
+
+
+def is_table_row(line):
+    s = line.strip()
+    return s.startswith("|") and s.endswith("|") and not set(s) <= set("|-: ")
+
+
+def is_separator(line):
+    s = line.strip()
+    return s.startswith("|") and set(s) <= set("|-: ")
+
+
+def fmt_row(cells):
+    return "| " + " | ".join(cells) + " |"
+
+
+def fill_perf(lines, perf_doc):
+    """Fill Minstr/s + modeled-cycle columns from the schema-v2 report."""
+    rows = perf_doc.get("workloads") or {}
+    by_name = {norm(k): v for k, v in rows.items()}
+    filled = 0
+    header_cols = []
+    for i, line in enumerate(lines):
+        if not is_table_row(line):
+            continue
+        cells = split_row(line)
+        if is_separator(line):
+            continue
+        lowered = [c.lower() for c in cells]
+        if "workload" in lowered[0].lower():
+            header_cols = lowered
+            continue
+        if not header_cols or len(cells) != len(header_cols):
+            continue
+        rec = by_name.get(norm(cells[0]))
+        if rec is None:
+            continue
+        changed = False
+        for j, col in enumerate(header_cols):
+            if "minstr" in col:
+                cells[j] = f"{rec.get('minstr_per_s', 0.0):.1f}"
+                changed = True
+            elif "modeled cycles" in col:
+                c = rec.get("modeled_cycles")
+                cells[j] = str(c) if c is not None else DASH
+                changed = True
+        if changed:
+            lines[i] = fmt_row(cells)
+            filled += 1
+    return filled
+
+
+def ablation_rows(text):
+    """Workload → printed markdown row, from pass_ablation stdout."""
+    out = {}
+    seen_marker = False
+    for line in text.splitlines():
+        if "markdown (paste into EXPERIMENTS.md" in line:
+            seen_marker = True
+            continue
+        if not seen_marker or not is_table_row(line) or is_separator(line):
+            continue
+        cells = split_row(line)
+        if not cells or cells[0].lower() == "workload":
+            continue
+        out[norm(cells[0])] = cells
+    return out
+
+
+def fill_ablation(lines, rows):
+    """Replace §Pass ablation table rows with the bench's printed ones."""
+    filled = 0
+    in_section = False
+    for i, line in enumerate(lines):
+        if line.startswith("## "):
+            in_section = "Pass ablation" in line
+            continue
+        if not in_section or not is_table_row(line) or is_separator(line):
+            continue
+        cells = split_row(line)
+        new = rows.get(norm(cells[0]))
+        if new is None or cells[0].lower() == "workload":
+            continue
+        if len(new) != len(cells):
+            print(f"  skip (column mismatch {len(new)} vs {len(cells)}): {cells[0]}")
+            continue
+        # Keep the log's own workload label (it may carry backticks).
+        merged = [cells[0]] + new[1:]
+        lines[i] = fmt_row(merged)
+        filled += 1
+    return filled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--perf", help="BENCH_perf.json (schema v2)")
+    ap.add_argument("--ablation", help="captured stdout of the pass_ablation bench")
+    ap.add_argument("--experiments", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+    if not args.perf and not args.ablation:
+        ap.error("give at least one of --perf / --ablation")
+
+    with open(args.experiments) as f:
+        lines = f.read().splitlines()
+
+    total = 0
+    if args.perf:
+        with open(args.perf) as f:
+            doc = json.load(f)
+        if doc.get("schema_version") != 2:
+            print(f"FAIL: {args.perf} is not schema_version 2")
+            return 1
+        n = fill_perf(lines, doc)
+        print(f"§Perf: filled {n} row(s) from {args.perf}")
+        total += n
+    if args.ablation:
+        with open(args.ablation) as f:
+            rows = ablation_rows(f.read())
+        if not rows:
+            print(f"FAIL: no markdown table found in {args.ablation} "
+                  "(pass the bench's captured stdout)")
+            return 1
+        n = fill_ablation(lines, rows)
+        print(f"§Pass ablation: filled {n} row(s) from {args.ablation}")
+        total += n
+
+    pending = sum(1 for l in lines if PENDING in l)
+    if total == 0:
+        print("FAIL: nothing filled — workload names out of sync between "
+              f"{args.experiments} and the measurement files?")
+        return 1
+    with open(args.experiments, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {args.experiments}; {pending} line(s) still carry {PENDING}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
