@@ -1,16 +1,32 @@
 //! Fig. 11 — host↔PIM parallel transfer throughput vs allocated ranks,
 //! NUMA/channel-balanced allocator vs the SDK baseline, including the
-//! run-to-run variability the paper reports in §V-C (E9).
+//! run-to-run variability the paper reports in §V-C (E9), plus the
+//! data-plane **placement ablation** (PR 5): Linear vs
+//! ChannelInterleaved vs NumaBalanced scatter/broadcast-tree GB/s over
+//! the socket-pinned transfer workers.
 //!
 //! Paper targets: peak at 4 ranks; h2p ≫ p2h; gains up to 2.9× h2p /
 //! 2.3× p2h at 2–10 ranks (avg 2.4× / 1.8×), tapering to ~15% / ~10%
 //! at 40 ranks; variability ≤0.3 GB/s (ours) vs 2–4 GB/s (baseline).
+//!
+//! Machine-readable output: deterministic modeled rates (no jitter)
+//! are written as schema-v2 rows to `BENCH_transfer.json`
+//! (`rate` field, higher-is-better) — gated in CI by
+//! `tools/check_perf_regression.py` against
+//! `ci/BENCH_transfer_baseline.json` and filled into EXPERIMENTS.md
+//! §Placement ablation by `tools/fill_experiments.py --transfer`.
 
 mod common;
 
 use common::{check, footer, timed};
+use upmem_unleashed::alloc::NumaAwareAllocator;
+use upmem_unleashed::bench_support::json::{json_perf_report, WorkloadEntry};
 use upmem_unleashed::bench_support::table::{f2, Table};
 use upmem_unleashed::host::{AllocPolicy, DpuSet, PimSystem};
+use upmem_unleashed::plane::{
+    placement_rates, ChannelInterleaved, Linear, NumaBalanced, PlacementPolicy,
+};
+use upmem_unleashed::transfer::model::TransferModel;
 use upmem_unleashed::transfer::topology::SystemTopology;
 use upmem_unleashed::transfer::Direction;
 use upmem_unleashed::util::rng::Rng;
@@ -18,6 +34,24 @@ use upmem_unleashed::util::stats::{geomean, Summary};
 
 const BOOTS: u64 = 20;
 const BYTES_PER_RANK: u64 = 32 << 20; // the paper's 32 MB blocks
+
+/// Placement-ablation fleet shape: 4 shards × 2 ranks.
+const ABLATION_SHARDS: usize = 4;
+const ABLATION_RANKS_PER_SHARD: usize = 2;
+/// Per-shard matrix block and broadcast payload for the ablation.
+const ABLATION_SHARD_BYTES: u64 = 64 << 20;
+const ABLATION_X_BYTES: u64 = 4 << 20;
+
+/// Deterministic modeled scatter + broadcast-tree rates for one boot of
+/// `policy` on `topo`: place the ablation fleet, then rate it through
+/// the plane's shared [`placement_rates`] model (the same helper the
+/// acceptance tests pin).
+fn boot_rates(topo: &SystemTopology, policy: &dyn PlacementPolicy) -> (f64, f64, f64) {
+    let model = TransferModel::default();
+    let mut alloc = NumaAwareAllocator::new(topo.clone());
+    let p = policy.place(&mut alloc, ABLATION_SHARDS, ABLATION_RANKS_PER_SHARD).unwrap();
+    placement_rates(topo, &model, &p, ABLATION_SHARD_BYTES, ABLATION_X_BYTES)
+}
 
 /// Sample through the system's transfer engine (the SDK-v2 surface the
 /// coordinator itself uses), not a bare model instance.
@@ -116,6 +150,101 @@ fn main() {
         );
         check("ours spread (paper ~0.3 GB/s)", ours_h2p_spread, 0.0, 1.2);
         check("baseline spread (paper 2-4 GB/s)", base_h2p_spread, 1.2, 6.0);
+
+        // ---- machine-readable deterministic rows (schema v2, `rate`) ----
+        // No jitter: the modeled curves alone, so the CI gate against
+        // ci/BENCH_transfer_baseline.json is bit-stable.
+        let mut entries: Vec<WorkloadEntry> = Vec::new();
+        for n in [2usize, 4, 8, 40] {
+            let total = BYTES_PER_RANK * n as u64;
+            let mut ours = PimSystem::new(topo.clone(), AllocPolicy::NumaAware);
+            let so = ours.alloc_ranks(n).unwrap();
+            let og = total as f64 / ours.push_parallel_modeled(&so, total).seconds / 1e9;
+            entries.push(
+                WorkloadEntry::new(format!("xfer h2p {n} ranks ours (GB/s)"), 0.0, None)
+                    .with_rate(og),
+            );
+            let mut base_sum = 0.0;
+            for boot in 0..BOOTS {
+                let mut base =
+                    PimSystem::new(topo.clone(), AllocPolicy::BaselineSdk { boot_seed: boot });
+                let sb = base.alloc_ranks(n).unwrap();
+                base_sum += total as f64 / base.push_parallel_modeled(&sb, total).seconds / 1e9;
+            }
+            entries.push(
+                WorkloadEntry::new(format!("xfer h2p {n} ranks baseline (GB/s)"), 0.0, None)
+                    .with_rate(base_sum / BOOTS as f64),
+            );
+        }
+
+        // ---- data-plane placement ablation (PR 5) ------------------------
+        // Every policy is rated over the same 20 boots: Linear's
+        // placement varies with the udev order, the aware policies are
+        // boot-invariant — the spread column *measures* that instead of
+        // asserting it.
+        let mut pt = Table::new(
+            "Placement ablation — 4 shards x 2 ranks, modeled GB/s (mean over 20 boots)",
+            &["policy", "scatter", "broadcast tree", "push+broadcast", "spread"],
+        );
+        let mut combined_mean = std::collections::BTreeMap::new();
+        let mut combined_spread = std::collections::BTreeMap::new();
+        for kind in ["linear", "channel-interleaved", "numa-balanced"] {
+            let mut sc = Vec::new();
+            let mut tr = Vec::new();
+            let mut co = Vec::new();
+            for boot in 0..BOOTS {
+                let policy: Box<dyn PlacementPolicy> = match kind {
+                    "linear" => Box::new(Linear { boot_seed: boot }),
+                    "channel-interleaved" => Box::new(ChannelInterleaved),
+                    _ => Box::new(NumaBalanced),
+                };
+                let (s, t, c) = boot_rates(&topo, policy.as_ref());
+                sc.push(s);
+                tr.push(t);
+                co.push(c);
+            }
+            let (ssc, stre, sco) = (Summary::of(&sc), Summary::of(&tr), Summary::of(&co));
+            pt.row(&[
+                kind.into(),
+                f2(ssc.mean),
+                f2(stre.mean),
+                f2(sco.mean),
+                f2(sco.spread()),
+            ]);
+            combined_mean.insert(kind, sco.mean);
+            combined_spread.insert(kind, sco.spread());
+            entries.push(
+                WorkloadEntry::new(format!("plane scatter 4x2 {kind} (GB/s)"), 0.0, None)
+                    .with_rate(ssc.mean),
+            );
+            entries.push(
+                WorkloadEntry::new(format!("plane broadcast-tree 4x2 {kind} (GB/s)"), 0.0, None)
+                    .with_rate(stre.mean),
+            );
+            entries.push(
+                WorkloadEntry::new(format!("plane push+broadcast 4x2 {kind} (GB/s)"), 0.0, None)
+                    .with_rate(sco.mean),
+            );
+        }
+        pt.print();
+        let lin = combined_mean["linear"];
+        let ci_ = combined_mean["channel-interleaved"];
+        let numa = combined_mean["numa-balanced"];
+        check("NumaBalanced/Linear push+broadcast gain (paper up to 2.9x)", numa / lin, 1.8, 4.5);
+        check("ChannelInterleaved sits between the extremes", (ci_ - lin) / (numa - lin), 0.0, 1.0);
+        check("Linear boot-to-boot spread (GB/s)", combined_spread["linear"], 0.5, 12.0);
+        check(
+            "NumaBalanced boot-to-boot spread (GB/s)",
+            combined_spread["numa-balanced"],
+            0.0,
+            0.01,
+        );
+
+        let json = json_perf_report(&entries, None);
+        match std::fs::write("BENCH_transfer.json", &json) {
+            Ok(()) => println!("wrote BENCH_transfer.json ({} entries)", entries.len()),
+            Err(e) => eprintln!("could not write BENCH_transfer.json: {e}"),
+        }
     });
     footer("fig11", wall);
 }

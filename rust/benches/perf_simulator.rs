@@ -29,6 +29,9 @@ use upmem_unleashed::kernels::bsdp::{run_dot_microbench_with, DotVariant};
 use upmem_unleashed::kernels::gemv::{run_gemv_dpu_with_cfg, GemvShape, GemvVariant};
 use upmem_unleashed::kernels::KernelScratch;
 use upmem_unleashed::opt::PassConfig;
+use upmem_unleashed::plane::{
+    Linear, NumaBalanced, PlacementPolicy, ShardMap, ShardedGemvCoordinator,
+};
 use upmem_unleashed::transfer::topology::SystemTopology;
 use upmem_unleashed::util::rng::Rng;
 
@@ -301,6 +304,53 @@ fn main() {
                 p.ambient_tier.name()
             );
         }
+
+        // Sharded data-plane fleet case (rust/src/plane/): the same
+        // 128-DPU GEMV scale as the flat fleet rows, but routed through
+        // a 2-shard NumaBalanced ShardMap — modeled cycles enter the
+        // regression gate like any other workload, and the
+        // Linear-vs-NumaBalanced modeled req/s ablation rides along as
+        // deterministic `rate` rows.
+        let (srows, scols) = if smoke { (256u32, 1024u32) } else { (1024, 2048) };
+        let sharded_case = |policy: &dyn PlacementPolicy| {
+            let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+            let sets = sys.alloc_shards(policy, 2, 1).expect("2 shards x 1 rank");
+            let map = ShardMap::new(sets, policy.name()).expect("shard map");
+            let mut c = ShardedGemvCoordinator::new(sys, map, GemvVariant::I8Opt, 16);
+            let mut rng = Rng::new(4242);
+            let m = rng.i8_vec((srows * scols) as usize);
+            c.preload_matrix(srows, scols, &m).expect("sharded preload");
+            let xs: Vec<Vec<i8>> = (0..4).map(|_| rng.i8_vec(scols as usize)).collect();
+            let views: Vec<&[i8]> = xs.iter().map(|v| v.as_slice()).collect();
+            let (timing, secs) = timed(|| c.gemv_pipelined(&views).expect("sharded gemv").1);
+            let reqps = views.len() as f64 / timing.total();
+            (c.last_instrs(), secs, c.last_max_cycles(), reqps)
+        };
+        let (si, ss, sc, numa_reqps) = sharded_case(&NumaBalanced);
+        p.record("sharded fleet GEMV, 2x64 DPUs, 16 tasklets [numa-balanced]", si, ss, Some(sc));
+        let (_, _, lc, lin_reqps) = sharded_case(&Linear::default());
+        assert_eq!(sc, lc, "placement must never change modeled compute cycles");
+        println!(
+            "sharded GEMV modeled serving rate: numa-balanced {:.1} req/s vs linear {:.1} req/s \
+             ({} from placement alone)",
+            numa_reqps,
+            lin_reqps,
+            ratio(numa_reqps / lin_reqps)
+        );
+        p.entries.push(
+            WorkloadEntry::new("sharded GEMV modeled req/s [placement=numa-balanced]", 0.0, None)
+                .with_rate(numa_reqps),
+        );
+        p.entries.push(
+            WorkloadEntry::new("sharded GEMV modeled req/s [placement=linear]", 0.0, None)
+                .with_rate(lin_reqps),
+        );
+        check(
+            "NumaBalanced placement serves at least as fast as Linear (req/s ratio)",
+            numa_reqps / lin_reqps,
+            1.0,
+            1e9,
+        );
 
         p.table.print();
         let aggregate = p.total_instrs as f64 / p.total_secs / 1e6;

@@ -16,9 +16,36 @@
 //! first-fit allocation in that order.
 
 use super::{AllocState, RankSet};
-use crate::transfer::topology::{SystemTopology, RANKS_PER_DIMM, TOTAL_RANKS};
+use crate::transfer::topology::{RankId, SystemTopology, RANKS_PER_DIMM, TOTAL_RANKS};
 use crate::util::rng::Rng;
 use crate::Result;
+
+/// The boot-seeded udev-like rank enumeration order: DIMM groups kept
+/// adjacent, sockets kept mostly contiguous, everything else arbitrary
+/// with respect to the physical topology. Shared by the
+/// [`BaselineAllocator`] and the data plane's placement-blind
+/// [`Linear`](crate::plane::policy::Linear) policy — both model the
+/// same SDK behaviour.
+pub fn udev_order(boot_seed: u64) -> Vec<RankId> {
+    let mut rng = Rng::new(boot_seed);
+    // Shuffle DIMMs (groups of RANKS_PER_DIMM consecutive ranks),
+    // keeping the two ranks of a DIMM adjacent — matching how udev
+    // enumerates PIM devices per DIMM.
+    let n_dimms = TOTAL_RANKS / RANKS_PER_DIMM;
+    let mut dimms: Vec<usize> = (0..n_dimms).collect();
+    // udev tends to enumerate one socket's devices first; swap the
+    // socket order per boot, then shuffle within sockets.
+    let (mut s0, mut s1): (Vec<usize>, Vec<usize>) =
+        dimms.drain(..).partition(|d| d / (n_dimms / 2) == 0);
+    rng.shuffle(&mut s0);
+    rng.shuffle(&mut s1);
+    let order_dimms: Vec<usize> =
+        if rng.f64() < 0.5 { [s0, s1].concat() } else { [s1, s0].concat() };
+    order_dimms
+        .into_iter()
+        .flat_map(|d| (0..RANKS_PER_DIMM).map(move |i| d * RANKS_PER_DIMM + i))
+        .collect()
+}
 
 /// The baseline allocator.
 #[derive(Debug, Clone)]
@@ -32,25 +59,7 @@ impl BaselineAllocator {
     /// Create an allocator for a boot identified by `boot_seed`.
     pub fn new(topo: &SystemTopology, boot_seed: u64) -> BaselineAllocator {
         let _ = topo; // order is topology-independent, that is the bug
-        let mut rng = Rng::new(boot_seed);
-        // Shuffle DIMMs (groups of RANKS_PER_DIMM consecutive ranks),
-        // keeping the two ranks of a DIMM adjacent — matching how udev
-        // enumerates PIM devices per DIMM.
-        let n_dimms = TOTAL_RANKS / RANKS_PER_DIMM;
-        let mut dimms: Vec<usize> = (0..n_dimms).collect();
-        // udev tends to enumerate one socket's devices first; swap the
-        // socket order per boot, then shuffle within sockets.
-        let (mut s0, mut s1): (Vec<usize>, Vec<usize>) =
-            dimms.drain(..).partition(|d| d / (n_dimms / 2) == 0);
-        rng.shuffle(&mut s0);
-        rng.shuffle(&mut s1);
-        let order_dimms: Vec<usize> =
-            if rng.f64() < 0.5 { [s0, s1].concat() } else { [s1, s0].concat() };
-        let order = order_dimms
-            .into_iter()
-            .flat_map(|d| (0..RANKS_PER_DIMM).map(move |i| d * RANKS_PER_DIMM + i))
-            .collect();
-        BaselineAllocator { state: AllocState::new(), order }
+        BaselineAllocator { state: AllocState::new(), order: udev_order(boot_seed) }
     }
 
     /// `dpu_alloc_ranks(n)` — first `n` free ranks in udev order.

@@ -12,19 +12,13 @@
 //!   across all of a socket's channels.
 
 use super::{AllocState, RankSet};
-use crate::transfer::topology::{SystemTopology, PIM_CHANNELS_PER_SOCKET, SOCKETS};
+use crate::transfer::topology::{RankId, SystemTopology, PIM_CHANNELS_PER_SOCKET, SOCKETS};
 use crate::Result;
 
-/// Compute a balanced per-channel rank distribution for `n_ranks` on
-/// `socket` (the paper's `equal_channel_distribution(ranks/2, node)`):
-/// returns `counts[channel] = ranks to take from that channel`, spread
-/// as evenly as possible, low channels first for the remainder.
-pub fn equal_channel_distribution(n_ranks: usize, socket: usize) -> Vec<usize> {
-    assert!(socket < SOCKETS);
-    let per = n_ranks / PIM_CHANNELS_PER_SOCKET;
-    let extra = n_ranks % PIM_CHANNELS_PER_SOCKET;
-    (0..PIM_CHANNELS_PER_SOCKET).map(|c| per + usize::from(c < extra)).collect()
-}
+// The canonical implementation moved to the data-plane policy layer
+// (PR 5); re-exported here so `alloc::numa::equal_channel_distribution`
+// and `alloc::equal_channel_distribution` keep resolving.
+pub use crate::plane::policy::equal_channel_distribution;
 
 /// The extended allocator.
 #[derive(Debug, Clone)]
@@ -85,26 +79,72 @@ impl NumaAwareAllocator {
         self.state.claim(&picks)
     }
 
-    /// Convenience matching the paper's Fig. 10 usage: split `n` ranks
-    /// evenly between both sockets, each balanced across its channels.
-    /// Returns one `RankSet` per NUMA node.
-    pub fn alloc_balanced(&mut self, n: usize) -> Result<[RankSet; 2]> {
-        if n % 2 != 0 {
+    /// The paper's Fig. 10 usage generalized over the topology's socket
+    /// count: split `n` ranks evenly across all NUMA nodes, each node's
+    /// share balanced across its channels. Returns one `RankSet` per
+    /// node, in node order; on failure nothing stays claimed.
+    pub fn alloc_balanced(&mut self, n: usize) -> Result<Vec<RankSet>> {
+        let sockets = self.topo.n_sockets();
+        if n % sockets != 0 {
             return Err(crate::Error::Alloc(format!(
-                "balanced allocation needs an even rank count, got {n}"
+                "balanced allocation needs a multiple of {sockets} ranks, got {n}"
             )));
         }
-        let per_socket = n / 2;
-        let ch0 = equal_channel_distribution(per_socket, 0);
-        let ch1 = equal_channel_distribution(per_socket, 1);
-        let s0 = self.alloc_ranks_on(0, &ch0)?;
-        match self.alloc_ranks_on(1, &ch1) {
-            Ok(s1) => Ok([s0, s1]),
-            Err(e) => {
-                self.state.release(s0).expect("rollback of a just-claimed set"); // roll back
-                Err(e)
+        let per_socket = n / sockets;
+        let mut out = Vec::with_capacity(sockets);
+        for socket in 0..sockets {
+            let counts = equal_channel_distribution(per_socket, socket);
+            match self.alloc_ranks_on(socket, &counts) {
+                Ok(set) => out.push(set),
+                Err(e) => {
+                    for claimed in out {
+                        self.state.release(claimed).expect("rollback of a just-claimed set");
+                    }
+                    return Err(e);
+                }
             }
         }
+        Ok(out)
+    }
+
+    /// Two-socket convenience wrapper over [`Self::alloc_balanced`] for
+    /// the paper-server topology (callers that want the Fig. 10
+    /// `[node0, node1]` pair without touching `Vec`). Errors — with
+    /// everything released again — on a topology that is not
+    /// dual-socket, so a future widening cannot silently leak the
+    /// extra sockets' claims.
+    pub fn alloc_balanced_pair(&mut self, n: usize) -> Result<[RankSet; 2]> {
+        let mut sets = self.alloc_balanced(n)?;
+        if sets.len() != 2 {
+            let sockets = sets.len();
+            for s in sets {
+                self.state.release(s).expect("rollback of a just-claimed set");
+            }
+            return Err(crate::Error::Alloc(format!(
+                "alloc_balanced_pair needs a dual-socket topology, got {sockets} sockets"
+            )));
+        }
+        let s1 = sets.pop().expect("two sockets");
+        let s0 = sets.pop().expect("two sockets");
+        Ok([s0, s1])
+    }
+
+    /// Claim specific free ranks — the escape hatch the data-plane
+    /// placement policies use for order-driven (placement-blind)
+    /// allocation. Errors, claiming nothing, if any rank is taken.
+    pub fn alloc_exact(&mut self, ranks: &[RankId]) -> Result<RankSet> {
+        self.state.claim(ranks)
+    }
+
+    /// Whether `rank` is currently unallocated.
+    pub fn is_free(&self, rank: RankId) -> bool {
+        self.state.is_free(rank)
+    }
+
+    /// Keep the allocator's topology copy in sync with runtime fault
+    /// injection (`PimSystem::mark_faulty`).
+    pub fn mark_faulty(&mut self, dpu: crate::transfer::topology::DpuId) {
+        self.topo.mark_faulty(dpu);
     }
 
     pub fn free(&mut self, set: RankSet) -> crate::Result<()> {
@@ -149,7 +189,7 @@ mod tests {
     fn balanced_allocation_spans_max_channels() {
         let topo = SystemTopology::pristine();
         let mut a = NumaAwareAllocator::new(topo);
-        let [s0, s1] = a.alloc_balanced(4).unwrap();
+        let [s0, s1] = a.alloc_balanced_pair(4).unwrap();
         let topo = a.topology().clone();
         // 2 ranks per socket on 2 distinct channels each: 4 channels,
         // 4 DIMMs, 2 sockets — the paper's peak-throughput placement.
@@ -170,7 +210,7 @@ mod tests {
     fn full_machine_allocation() {
         let topo = SystemTopology::pristine();
         let mut a = NumaAwareAllocator::new(topo);
-        let [s0, s1] = a.alloc_balanced(40).unwrap();
+        let [s0, s1] = a.alloc_balanced_pair(40).unwrap();
         assert_eq!(s0.len() + s1.len(), 40);
         assert_eq!(a.free_ranks(), 0);
         assert!(a.alloc_balanced(2).is_err());
@@ -227,10 +267,11 @@ mod tests {
                 let mut count = 0usize;
                 for &n in sizes {
                     match a.alloc_balanced(n) {
-                        Ok([x, y]) => {
-                            count += x.len() + y.len();
-                            live.push(x);
-                            live.push(y);
+                        Ok(sets) => {
+                            for s in sets {
+                                count += s.len();
+                                live.push(s);
+                            }
                         }
                         Err(_) => {
                             if let Some(s) = live.pop() {

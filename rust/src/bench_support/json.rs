@@ -70,11 +70,16 @@ pub struct WorkloadEntry {
     /// so the gate compares rows across tiers freely — the tag records
     /// provenance for humans and for the CI per-tier smoke matrix.
     pub tier: Option<String>,
+    /// Deterministic modeled *rate* for transfer/serving rows — unit
+    /// named by the row (GB/s, req/s), **higher is better** (the gate
+    /// inverts its regression direction vs `modeled_cycles`). `None`
+    /// for compute rows. Additive v2 field, ignored by older readers.
+    pub rate: Option<f64>,
 }
 
 impl WorkloadEntry {
     pub fn new(name: impl Into<String>, minstr_per_s: f64, modeled_cycles: Option<u64>) -> Self {
-        WorkloadEntry { name: name.into(), minstr_per_s, modeled_cycles, tier: None }
+        WorkloadEntry { name: name.into(), minstr_per_s, modeled_cycles, tier: None, rate: None }
     }
 
     /// Tag the row with the execution tier that produced it.
@@ -82,11 +87,17 @@ impl WorkloadEntry {
         self.tier = Some(tier.into());
         self
     }
+
+    /// Attach a deterministic modeled rate (GB/s, req/s — see `rate`).
+    pub fn with_rate(mut self, rate: f64) -> Self {
+        self.rate = Some(rate);
+        self
+    }
 }
 
 /// The `BENCH_perf.json` schema version written by [`json_perf_report`].
-/// Still 2: the `meta` object and per-row `tier` tags are additive and
-/// ignored by older readers of the v2 schema.
+/// Still 2: the `meta` object and per-row `tier`/`rate` fields are
+/// additive and ignored by older readers of the v2 schema.
 pub const PERF_SCHEMA_VERSION: u32 = 2;
 
 /// Report-level metadata recorded under the `meta` key.
@@ -122,6 +133,9 @@ pub fn json_perf_report(entries: &[WorkloadEntry], meta: Option<&PerfMeta>) -> S
         out.push_str(&format!("\"minstr_per_s\": {}", number(e.minstr_per_s)));
         if let Some(c) = e.modeled_cycles {
             out.push_str(&format!(", \"modeled_cycles\": {c}"));
+        }
+        if let Some(r) = e.rate {
+            out.push_str(&format!(", \"rate\": {}", number(r)));
         }
         if let Some(t) = &e.tier {
             out.push_str(&format!(", \"tier\": \"{}\"", escape(t)));
@@ -171,6 +185,20 @@ mod tests {
              \"meta\": {\"exec_tier\": \"superblock\", \"smoke\": true, \"launch_workers\": 4},\n  \
              \"workloads\": {\n    \
              \"w1\": {\"minstr_per_s\": 12.500, \"modeled_cycles\": 1000, \"tier\": \"stepped\"}\n  \
+             }\n}\n"
+        );
+    }
+
+    #[test]
+    fn perf_report_records_rate_rows() {
+        let r = json_perf_report(
+            &[WorkloadEntry::new("plane scatter (GB/s)", 0.0, None).with_rate(21.987)],
+            None,
+        );
+        assert_eq!(
+            r,
+            "{\n  \"schema_version\": 2,\n  \"workloads\": {\n    \
+             \"plane scatter (GB/s)\": {\"minstr_per_s\": 0.000, \"rate\": 21.987}\n  \
              }\n}\n"
         );
     }

@@ -86,6 +86,65 @@ mod tests {
     }
 
     #[test]
+    fn empty_flush_returns_none_without_blocking_forever() {
+        // A closed, never-written channel: collect must return None
+        // immediately (the shutdown path), not hang on recv.
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let b = Batcher::new(4, Duration::from_millis(50));
+        let t0 = Instant::now();
+        assert!(b.collect(&rx).is_none());
+        assert!(t0.elapsed() < Duration::from_millis(40), "no window wait on empty flush");
+    }
+
+    #[test]
+    fn zero_window_flushes_the_first_item_alone() {
+        // Degenerate timeout: with a zero window, the batch is exactly
+        // the first item even when more are already queued — the
+        // "every request its own launch" configuration.
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(8, Duration::ZERO);
+        assert_eq!(b.collect(&rx).unwrap(), vec![0]);
+        assert_eq!(b.collect(&rx).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn oversize_burst_splits_into_full_batches() {
+        // A burst far beyond max_batch must split into exact max_batch
+        // chunks in FIFO order, never an oversized device pass.
+        let (tx, rx) = channel();
+        for i in 0..23 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = Batcher::new(8, Duration::from_millis(5));
+        let mut sizes = Vec::new();
+        let mut seen = Vec::new();
+        while let Some(batch) = b.collect(&rx) {
+            assert!(batch.len() <= 8, "batch overflow: {}", batch.len());
+            sizes.push(batch.len());
+            seen.extend(batch);
+        }
+        assert_eq!(sizes, vec![8, 8, 7]);
+        assert_eq!(seen, (0..23).collect::<Vec<_>>(), "FIFO order preserved");
+    }
+
+    #[test]
+    fn single_slot_batcher_never_batches() {
+        let (tx, rx) = channel();
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(1, Duration::from_millis(100));
+        let t0 = Instant::now();
+        assert_eq!(b.collect(&rx).unwrap(), vec![0]);
+        assert!(t0.elapsed() < Duration::from_millis(80), "full batch returns before the window");
+    }
+
+    #[test]
     fn late_arrivals_join_within_window() {
         let (tx, rx) = channel();
         let b = Batcher::new(4, Duration::from_millis(120));

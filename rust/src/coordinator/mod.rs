@@ -28,8 +28,32 @@ use crate::Result;
 
 pub use batcher::Batcher;
 pub use router::Router;
-pub use server::{GemvClient, GemvServer, Request, Response};
+pub use server::{GemvClient, GemvServer, ReplicaPool, Request, Response};
 pub use state::MatrixState;
+
+/// A GEMV backend the serving loop can drive: the flat
+/// [`GemvCoordinator`] or the data plane's
+/// [`ShardedGemvCoordinator`](crate::plane::ShardedGemvCoordinator).
+/// `Send + 'static` because the server moves the executor onto its
+/// worker thread.
+pub trait GemvExecutor: Send + 'static {
+    /// Expected input-vector length (0 before a matrix is resident).
+    fn cols(&self) -> u32;
+
+    /// One pipelined device pass over a batch of vectors: one result
+    /// per input, plus the aggregate timing split.
+    fn gemv_batch(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, GemvTiming)>;
+}
+
+impl GemvExecutor for GemvCoordinator {
+    fn cols(&self) -> u32 {
+        self.cols()
+    }
+
+    fn gemv_batch(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, GemvTiming)> {
+        self.gemv_pipelined(xs)
+    }
+}
 
 /// Timing breakdown of one fleet GEMV call (seconds).
 #[derive(Debug, Clone, Copy, Default)]

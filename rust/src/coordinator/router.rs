@@ -109,6 +109,77 @@ mod tests {
     }
 
     #[test]
+    fn least_outstanding_tracks_queue_depth_under_skewed_completion() {
+        // Replica 0 is "slow": it never completes. Least-outstanding
+        // must steer all further traffic to the fast replicas, while
+        // round-robin (queue-depth-blind) keeps feeding the stuck one.
+        let mut lo = Router::new(3, Policy::LeastOutstanding);
+        let stuck = lo.dispatch();
+        assert_eq!(stuck, 0);
+        for _ in 0..20 {
+            let r = lo.dispatch();
+            if r != 0 {
+                lo.complete(r); // fast replicas keep pace
+            }
+        }
+        assert_eq!(lo.outstanding(0), 1, "the stuck request is still out");
+        assert_eq!(
+            lo.dispatched(0),
+            1,
+            "no further traffic lands on the replica with queued work"
+        );
+
+        let mut rr = Router::new(3, Policy::RoundRobin);
+        rr.dispatch(); // replica 0, never completed
+        for _ in 0..20 {
+            let r = rr.dispatch();
+            if r != 0 {
+                rr.complete(r);
+            }
+        }
+        assert!(rr.dispatched(0) >= 7, "round-robin keeps hitting the stuck replica");
+    }
+
+    #[test]
+    fn outstanding_bookkeeping_is_exact() {
+        // outstanding == dispatched - completed, per replica, across a
+        // random interleaving of dispatches and completions.
+        forall(
+            Config::cases(60),
+            |rng| {
+                let n = rng.range_u64(1, 5) as usize;
+                let ops: Vec<u64> = (0..60).map(|_| rng.range_u64(0, 3)).collect();
+                let policy = if rng.range_u64(0, 1) == 0 {
+                    Policy::RoundRobin
+                } else {
+                    Policy::LeastOutstanding
+                };
+                (n, ops, policy)
+            },
+            |(n, ops, policy)| {
+                let n = *n;
+                let mut r = Router::new(n, *policy);
+                let mut completed = vec![0u64; n];
+                let mut inflight: Vec<usize> = Vec::new();
+                for op in ops {
+                    if *op == 0 && !inflight.is_empty() {
+                        let replica = inflight.remove(0);
+                        r.complete(replica);
+                        completed[replica] += 1;
+                    } else {
+                        inflight.push(r.dispatch());
+                    }
+                }
+                (0..n).all(|i| {
+                    let in_i = inflight.iter().filter(|&&x| x == i).count();
+                    r.outstanding(i) == in_i && r.dispatched(i) == completed[i] + in_i as u64
+                })
+            },
+            "outstanding = dispatched - completed",
+        );
+    }
+
+    #[test]
     fn balance_property() {
         // After N dispatches with interleaved completions, round-robin
         // dispatch counts differ by at most 1, and least-outstanding

@@ -15,7 +15,8 @@
 
 use super::batcher::Batcher;
 use super::metrics::ServerMetrics;
-use super::GemvCoordinator;
+use super::router::{Policy, Router};
+use super::{GemvCoordinator, GemvExecutor};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -69,25 +70,26 @@ impl GemvClient {
     }
 }
 
-/// A running server (one worker thread, one replica).
-pub struct GemvServer {
-    handle: Option<JoinHandle<(GemvCoordinator, ServerMetrics)>>,
+/// A running server: one worker thread driving one [`GemvExecutor`]
+/// replica — the flat coordinator or a sharded data-plane one.
+pub struct GemvServer<E: GemvExecutor = GemvCoordinator> {
+    handle: Option<JoinHandle<(E, ServerMetrics)>>,
     tx: Option<Sender<Msg>>,
 }
 
-impl GemvServer {
-    /// Start serving on `coordinator` (matrix must be preloaded).
-    pub fn start(coordinator: GemvCoordinator, batcher: Batcher) -> (GemvServer, GemvClient) {
+impl<E: GemvExecutor> GemvServer<E> {
+    /// Start serving on `executor` (matrix must be preloaded).
+    pub fn start(executor: E, batcher: Batcher) -> (GemvServer<E>, GemvClient) {
         let (tx, rx) = channel::<Msg>();
         let client = GemvClient { tx: tx.clone() };
-        let handle = std::thread::spawn(move || worker(coordinator, batcher, rx));
+        let handle = std::thread::spawn(move || worker(executor, batcher, rx));
         (GemvServer { handle: Some(handle), tx: Some(tx) }, client)
     }
 
     /// Stop accepting requests, drain everything already queued, and
-    /// return the coordinator and final metrics. Requests submitted
+    /// return the executor and final metrics. Requests submitted
     /// after `shutdown` see a closed response channel.
-    pub fn shutdown(mut self) -> (GemvCoordinator, ServerMetrics) {
+    pub fn shutdown(mut self) -> (E, ServerMetrics) {
         if let Some(tx) = self.tx.take() {
             let _ = tx.send(Msg::Stop); // FIFO: drains earlier requests first
         }
@@ -95,11 +97,54 @@ impl GemvServer {
     }
 }
 
-fn worker(
-    mut coordinator: GemvCoordinator,
+/// Replica front: routes requests across several running servers (one
+/// per replica — each its own DPU sets, possibly its own shard map)
+/// through a [`Router`] policy, tracking outstanding/complete
+/// bookkeeping. This is how a 40-rank machine serves several model
+/// replicas at once: shard within a replica, route between them.
+pub struct ReplicaPool {
+    clients: Vec<GemvClient>,
+    router: Router,
+}
+
+impl ReplicaPool {
+    pub fn new(clients: Vec<GemvClient>, policy: Policy) -> ReplicaPool {
+        assert!(!clients.is_empty(), "replica pool needs at least one replica");
+        let n = clients.len();
+        ReplicaPool { clients, router: Router::new(n, policy) }
+    }
+
+    /// Route a request to a replica; returns the chosen replica index
+    /// (pass it to [`Self::complete`] when the response arrives) and
+    /// the response receiver.
+    pub fn submit(&mut self, x: Vec<i8>) -> (usize, Receiver<Response>) {
+        let replica = self.router.dispatch();
+        (replica, self.clients[replica].submit(x))
+    }
+
+    /// Mark the request routed to `replica` complete.
+    pub fn complete(&mut self, replica: usize) {
+        self.router.complete(replica);
+    }
+
+    /// Route, wait, complete.
+    pub fn call(&mut self, x: Vec<i8>) -> Option<Response> {
+        let (replica, rx) = self.submit(x);
+        let resp = rx.recv().ok();
+        self.complete(replica);
+        resp
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+}
+
+fn worker<E: GemvExecutor>(
+    mut coordinator: E,
     batcher: Batcher,
     rx: Receiver<Msg>,
-) -> (GemvCoordinator, ServerMetrics) {
+) -> (E, ServerMetrics) {
     let mut metrics = ServerMetrics::default();
     let mut stopping = false;
     while !stopping {
@@ -157,7 +202,7 @@ fn worker(
         // overlaps compute k on the async rank queues.
         let t0 = Instant::now();
         let views: Vec<&[i8]> = good.iter().map(|r| r.x.as_slice()).collect();
-        let result = coordinator.gemv_pipelined(&views);
+        let result = coordinator.gemv_batch(&views);
         // One execution sample per device pass (a per-request sample
         // would repeat the whole-batch duration `len` times).
         metrics.exec.record(t0.elapsed());
@@ -246,6 +291,37 @@ mod tests {
         let (_, metrics) = server.shutdown();
         assert_eq!(metrics.errors, 1);
         assert_eq!(metrics.requests, 2);
+    }
+
+    #[test]
+    fn replica_pool_routes_and_balances() {
+        // Two replicas of the same model behind a least-outstanding
+        // router: every response is correct regardless of which replica
+        // served it, and the bookkeeping drains to zero.
+        let (c1, m) = serving_coordinator(128, 1024, 55);
+        let mut sys2 = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+        let set2 = sys2.alloc_ranks(2).unwrap();
+        let mut c2 = GemvCoordinator::new(sys2, set2, GemvVariant::I8Opt, 8);
+        c2.preload_matrix(128, 1024, &m).unwrap();
+
+        let (s1, cl1) = GemvServer::start(c1, default_batcher(2));
+        let (s2, cl2) = GemvServer::start(c2, default_batcher(2));
+        let mut pool = ReplicaPool::new(vec![cl1, cl2], Policy::LeastOutstanding);
+
+        let mut rng = Rng::new(56);
+        for _ in 0..6 {
+            let x = rng.i8_vec(1024);
+            let resp = pool.call(x.clone()).unwrap();
+            assert_eq!(resp.y.unwrap(), gemv_ref(GemvShape { rows: 128, cols: 1024 }, &m, &x));
+        }
+        for r in 0..2 {
+            assert_eq!(pool.router().outstanding(r), 0, "bookkeeping drains");
+        }
+        // Both replicas saw traffic (ties break round-robin).
+        assert!(pool.router().dispatched(0) > 0 && pool.router().dispatched(1) > 0);
+        let (_, m1) = s1.shutdown();
+        let (_, m2) = s2.shutdown();
+        assert_eq!(m1.requests + m2.requests, 6);
     }
 
     #[test]

@@ -249,9 +249,11 @@ impl PimSystem {
                 (a.alloc_ranks(n)?, BufferPlacement::Node(0))
             }
             AllocatorImpl::Numa(a) => {
-                let [s0, s1] = a.alloc_balanced(n)?;
-                let mut ranks = s0;
-                ranks.ranks.extend(s1.ranks);
+                let sets = a.alloc_balanced(n)?;
+                let mut ranks = RankSet { ranks: Vec::with_capacity(n) };
+                for s in sets {
+                    ranks.ranks.extend(s.ranks);
+                }
                 (ranks, BufferPlacement::PerSocket)
             }
         };
@@ -273,6 +275,132 @@ impl PimSystem {
         match &mut self.allocator {
             AllocatorImpl::Baseline(a) => a.free(set.ranks),
             AllocatorImpl::Numa(a) => a.free(set.ranks),
+        }
+    }
+
+    /// Allocate shard rank-sets through a data-plane placement policy
+    /// and wrap each as a [`DpuSet`] (usable DPUs only, the policy's
+    /// staging-buffer placement). Requires the NUMA-aware allocator
+    /// policy — the baseline allocator has no placement surface, which
+    /// is exactly the SDK limitation the plane exists to fix.
+    pub fn alloc_shards(
+        &mut self,
+        policy: &dyn crate::plane::PlacementPolicy,
+        n_shards: usize,
+        ranks_per_shard: usize,
+    ) -> Result<Vec<DpuSet>> {
+        let placement = match &mut self.allocator {
+            AllocatorImpl::Numa(a) => policy.place(a, n_shards, ranks_per_shard)?,
+            AllocatorImpl::Baseline(_) => {
+                return Err(crate::Error::Alloc(
+                    "shard placement needs AllocPolicy::NumaAware".into(),
+                ))
+            }
+        };
+        let buffer = placement.buffer;
+        let topo = &self.engine.topo;
+        Ok(placement
+            .shards
+            .into_iter()
+            .map(|ranks| {
+                let dpus: Vec<DpuId> = ranks
+                    .ranks
+                    .iter()
+                    .flat_map(|&r| topo.dpus_of_rank(r))
+                    .filter(|&d| !topo.is_faulty(d))
+                    .collect();
+                DpuSet { ranks, placement: buffer, dpus }
+            })
+            .collect())
+    }
+
+    /// Runtime fault injection: disable `dpu` fleet-wide, keeping the
+    /// transfer topology and the allocator's topology copy in sync.
+    /// Already-built [`DpuSet`]s are not rewritten — the data plane's
+    /// rebalancing ([`crate::plane::ShardedGemvCoordinator`]) owns that.
+    pub fn mark_faulty(&mut self, dpu: DpuId) {
+        self.engine.topo.mark_faulty(dpu);
+        if let AllocatorImpl::Numa(a) = &mut self.allocator {
+            a.mark_faulty(dpu);
+        }
+    }
+
+    /// Execute an eager scatter on one worker thread per socket: every
+    /// chunk is written by the thread pinned to its DPU's socket
+    /// (layered on the PR-2 fleet-worker machinery — DPU boxes are
+    /// pulled from their slots so the scoped threads own them, then
+    /// reinstalled). Pure data path: the modeled schedule comes from
+    /// [`crate::plane::plan_scatter`] + [`Self::reserve_bus`]. The
+    /// reported error, if any, is the first failing chunk in argument
+    /// order — independent of thread interleaving.
+    pub fn scatter_socket_pinned(
+        &mut self,
+        chunks: &[crate::plane::ScatterChunk<'_>],
+    ) -> Result<()> {
+        use std::collections::BTreeMap;
+        // Group chunk indices per socket, per DPU (deterministic order).
+        let mut by_socket: BTreeMap<usize, BTreeMap<DpuId, Vec<usize>>> = BTreeMap::new();
+        {
+            let topo = &self.engine.topo;
+            for (ci, c) in chunks.iter().enumerate() {
+                let socket = topo.rank_loc(topo.rank_of_dpu(c.dpu)).socket;
+                by_socket.entry(socket).or_default().entry(c.dpu).or_default().push(ci);
+            }
+        }
+        // Materialize and pull each involved DPU out of its slot.
+        let mut groups: Vec<Vec<(DpuId, Box<Dpu>, Vec<usize>)>> = Vec::new();
+        for (_socket, dpus) in by_socket {
+            let mut group = Vec::with_capacity(dpus.len());
+            for (id, idxs) in dpus {
+                let _ = self.dpu_mut(id); // materialize
+                group.push((id, self.dpus[id].take().expect("materialized above"), idxs));
+            }
+            groups.push(group);
+        }
+        // One worker per socket; each records its earliest failing
+        // chunk index so the merged error is deterministic.
+        let mut errs: Vec<Option<(usize, crate::Error)>> = Vec::new();
+        errs.resize_with(groups.len(), || None);
+        std::thread::scope(|s| {
+            for (group, err_slot) in groups.iter_mut().zip(errs.iter_mut()) {
+                s.spawn(move || {
+                    for (id, dpu, idxs) in group.iter_mut() {
+                        for &ci in idxs.iter() {
+                            let c = &chunks[ci];
+                            if let Err(kind) = dpu.mram.write(c.mram_addr, c.bytes) {
+                                let worse = err_slot
+                                    .as_ref()
+                                    .is_none_or(|&(prev, _)| ci < prev);
+                                if worse {
+                                    *err_slot = Some((
+                                        ci,
+                                        crate::Error::HostAccess {
+                                            dpu: *id,
+                                            addr: c.mram_addr,
+                                            kind,
+                                        },
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        for group in groups {
+            for (id, dpu, _) in group {
+                self.dpus[id] = Some(dpu);
+            }
+        }
+        let mut first: Option<(usize, crate::Error)> = None;
+        for e in errs.into_iter().flatten() {
+            if first.as_ref().is_none_or(|&(fi, _)| e.0 < fi) {
+                first = Some(e);
+            }
+        }
+        match first {
+            Some((_, e)) => Err(e),
+            None => Ok(()),
         }
     }
 
@@ -401,13 +529,37 @@ impl PimSystem {
         bytes: &[u8],
         after_s: f64,
     ) -> Result<XferHandle> {
-        for &id in &set.dpus {
-            self.dpu_mut(id).mram.write(mram_addr, bytes).map_err(host_err(id, mram_addr))?;
-        }
+        self.broadcast_untimed(set, mram_addr, bytes)?;
         let report = self.engine.broadcast(&set.ranks.ranks, bytes.len() as u64, set.placement);
         let (start_s, end_s) =
             self.queues.reserve(&set.ranks.ranks, Resource::Bus, after_s, report.seconds);
         Ok(XferHandle { report, start_s, end_s })
+    }
+
+    /// Data-path-only broadcast: bytes land in every DPU's MRAM with
+    /// **no** modeled time accounted. For callers that schedule their
+    /// own transfer model — the data plane's broadcast trees reserve
+    /// per-socket stage times via [`Self::reserve_bus`] instead of the
+    /// flat engine broadcast.
+    pub fn broadcast_untimed(&mut self, set: &DpuSet, mram_addr: u32, bytes: &[u8]) -> Result<()> {
+        for &id in &set.dpus {
+            self.dpu_mut(id).mram.write(mram_addr, bytes).map_err(host_err(id, mram_addr))?;
+        }
+        Ok(())
+    }
+
+    /// Reserve `seconds` of bus time on `ranks`, starting no earlier
+    /// than `after_s`; returns the modeled `(start, end)`. The data
+    /// plane uses this to account schedules (scatter windows, broadcast
+    /// tree stages) that the flat per-call transfer model cannot
+    /// express. Does not advance the host clock.
+    pub fn reserve_bus(&mut self, ranks: &[usize], after_s: f64, seconds: f64) -> (f64, f64) {
+        self.queues.reserve(ranks, Resource::Bus, after_s, seconds)
+    }
+
+    /// Block the modeled host clock until `t` (no-op if already past).
+    pub fn advance_clock(&mut self, t: f64) {
+        self.queues.advance_to(t);
     }
 
     /// Asynchronous modeled pull (timing only — fleet gathers whose

@@ -19,9 +19,11 @@
 //!   ([`host`]: typed kernel symbols via [`dpu::symbol`], zero-copy
 //!   `XferPlan`/`PullPlan` transfer views, `launch_async` with modeled
 //!   transfer/compute overlap and a multithreaded fleet executor that
-//!   simulates DPUs in parallel with bit-identical results), and a GEMV
-//!   serving runtime ([`coordinator`]) whose batcher drives the
-//!   pipelined device path.
+//!   simulates DPUs in parallel with bit-identical results), the
+//!   NUMA-aware sharded data plane ([`plane`]: placement policies,
+//!   shard maps, broadcast trees, socket-pinned transfer workers,
+//!   fault-driven rebalancing), and a GEMV serving runtime
+//!   ([`coordinator`]) whose batcher drives the pipelined device path.
 //! * **Layer 2 (JAX, `python/compile/model.py`)** — the quantized GEMV /
 //!   MLP inference graph, AOT-lowered to HLO text and executed from rust
 //!   via PJRT ([`runtime`]); this is the "dual-socket CPU server"
@@ -51,6 +53,7 @@ pub mod dpu;
 pub mod host;
 pub mod kernels;
 pub mod opt;
+pub mod plane;
 pub mod runtime;
 pub mod transfer;
 pub mod util;

@@ -1,0 +1,454 @@
+//! The sharded GEMV coordinator: serving traffic routed through the
+//! NUMA-aware data plane.
+//!
+//! Where [`crate::coordinator::GemvCoordinator`] treats its fleet as
+//! one flat DPU set, this coordinator drives a [`ShardMap`]:
+//!
+//! * **scatter** — each shard's matrix block is pushed by its home
+//!   socket's transfer worker ([`plan_scatter`] for the modeled
+//!   schedule, [`PimSystem::scatter_socket_pinned`] for the eager
+//!   bytes);
+//! * **broadcast** — the x vector fans out through a per-socket
+//!   [`BroadcastTree`] (remote sockets pay one UPI mirror, then local
+//!   channel-parallel fan-out);
+//! * **compute** — one async launch per shard, ordered after its
+//!   socket's tree stage on the rank queues;
+//! * **gather + merge** — per-shard partial y pulls (modeled after each
+//!   shard's launch) merged in row order by [`ShardMap::merge_y`].
+//!
+//! Batches pipeline exactly like the flat coordinator: batch *k+1*'s
+//! tree rides the bus queues under batch *k*'s compute, double-buffering
+//! x between `GEMV_X` and `GEMV_X_ALT`.
+//!
+//! Fault handling is delta-only: [`Self::mark_faulty_and_rebalance`]
+//! drops the DPU from its owning shard, re-partitions that shard's rows
+//! across its survivors, and re-scatters **only that shard's block**
+//! (the retained encoded matrix makes the re-push self-contained).
+
+use super::shard::ShardMap;
+use super::tree::BroadcastTree;
+use super::workers::{plan_scatter, ScatterChunk};
+use crate::coordinator::{GemvExecutor, GemvTiming, RowPartition};
+use crate::dpu::symbol::{Symbol, SymbolTable};
+use crate::host::{LaunchHandle, PimSystem};
+use crate::kernels::gemv::{
+    collect_gemv_output, emit_gemv, encode_matrix_block, encode_vector, GemvShape, GemvVariant,
+    CHUNK, GEMV_M, GEMV_X, GEMV_X_ALT,
+};
+use crate::transfer::topology::{DpuId, RankId, SOCKETS};
+use crate::Result;
+
+/// Modeled outcome of a sharded matrix scatter.
+#[derive(Debug, Clone, Copy)]
+pub struct ScatterReport {
+    /// Makespan across the socket-pinned transfer workers.
+    pub seconds: f64,
+    /// Total matrix bytes moved.
+    pub bytes: u64,
+}
+
+/// Fleet GEMV over a [`ShardMap`].
+pub struct ShardedGemvCoordinator {
+    pub sys: PimSystem,
+    map: ShardMap,
+    pub variant: GemvVariant,
+    pub nr_tasklets: usize,
+    cols: u32,
+    symbols: Option<SymbolTable>,
+    /// Encoded matrix retained for fault-driven delta re-scatter.
+    mbytes: Vec<u8>,
+    gemv_count: u64,
+    /// Stats of the most recent device pass (bench instrumentation).
+    last_instrs: u64,
+    last_max_cycles: u64,
+}
+
+/// Build the per-DPU scatter chunks of `only` (or all) shards, slicing
+/// the encoded matrix by each DPU's row range. A free function so the
+/// returned views borrow `mbytes` alone (the caller then needs `&mut`
+/// access to the `PimSystem` while they are alive).
+fn scatter_chunks<'a>(
+    map: &ShardMap,
+    mbytes: &'a [u8],
+    row_bytes: usize,
+    only: Option<usize>,
+) -> Vec<ScatterChunk<'a>> {
+    let mut chunks = Vec::new();
+    for (i, shard) in map.shards.iter().enumerate() {
+        if only.is_some_and(|o| o != i) {
+            continue;
+        }
+        let part = shard.partition();
+        for d in 0..part.nr_dpus {
+            let r0 = (shard.row_start + part.start_of(d)) as usize;
+            let nr = part.rows_of(d) as usize;
+            chunks.push(ScatterChunk {
+                dpu: shard.set.dpus[d],
+                mram_addr: GEMV_M,
+                bytes: &mbytes[r0 * row_bytes..(r0 + nr) * row_bytes],
+            });
+        }
+    }
+    chunks
+}
+
+impl ShardedGemvCoordinator {
+    pub fn new(
+        sys: PimSystem,
+        map: ShardMap,
+        variant: GemvVariant,
+        nr_tasklets: usize,
+    ) -> ShardedGemvCoordinator {
+        ShardedGemvCoordinator {
+            sys,
+            map,
+            variant,
+            nr_tasklets,
+            cols: 0,
+            symbols: None,
+            mbytes: Vec::new(),
+            gemv_count: 0,
+            last_instrs: 0,
+            last_max_cycles: 0,
+        }
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    pub fn cols(&self) -> u32 {
+        self.cols
+    }
+
+    pub fn rows(&self) -> u32 {
+        self.map.total_rows()
+    }
+
+    pub fn gemv_count(&self) -> u64 {
+        self.gemv_count
+    }
+
+    /// Simulated instructions of the most recent `gemv`/`gemv_pipelined`
+    /// call (all shards, all batches).
+    pub fn last_instrs(&self) -> u64 {
+        self.last_instrs
+    }
+
+    /// Slowest per-launch DPU cycle count of the most recent call —
+    /// deterministic, the perf-gate quantity.
+    pub fn last_max_cycles(&self) -> u64 {
+        self.last_max_cycles
+    }
+
+    /// Resolve a 32-bit argument symbol of the loaded kernel.
+    fn arg(&self, name: &str) -> Result<Symbol<u32>> {
+        self.symbols
+            .as_ref()
+            .ok_or_else(|| crate::Error::Coordinator("gemv before preload_matrix".into()))?
+            .symbol::<u32>(name)
+    }
+
+    fn check_vector(&self, x: &[i8]) -> Result<()> {
+        if self.cols == 0 {
+            return Err(crate::Error::Coordinator("gemv before preload_matrix".into()));
+        }
+        if x.len() != self.cols as usize {
+            return Err(crate::Error::Coordinator(format!(
+                "vector length {} != cols {}",
+                x.len(),
+                self.cols
+            )));
+        }
+        Ok(())
+    }
+
+    /// Write the kernel arguments of shard `idx` (per-DPU row counts
+    /// plus the shared shape words).
+    fn write_shard_args(&mut self, idx: usize) -> Result<()> {
+        let syms = self
+            .symbols
+            .clone()
+            .ok_or_else(|| crate::Error::Coordinator("args before preload_matrix".into()))?;
+        let nr_tasklets = self.nr_tasklets as u32;
+        let rb = self.variant.row_bytes(self.cols);
+        let part = self.map.shards[idx].partition();
+        let shard = &self.map.shards[idx];
+        self.sys.write_symbol(&shard.set, &syms.symbol::<u32>("rows")?, |i| part.rows_of(i))?;
+        self.sys.broadcast_symbol(&shard.set, &syms.symbol("row_shift")?, rb.trailing_zeros())?;
+        self.sys.broadcast_symbol(&shard.set, &syms.symbol("chunks_per_row")?, rb / CHUNK)?;
+        self.sys.broadcast_symbol(&shard.set, &syms.symbol("nr_tasklets")?, nr_tasklets)?;
+        self.sys.broadcast_symbol(&shard.set, &syms.symbol("x_addr")?, GEMV_X)?;
+        Ok(())
+    }
+
+    /// Preload a `rows × cols` matrix: assign row ranges to shards,
+    /// load the kernel, scatter every shard's block through the
+    /// socket-pinned transfer workers, and write the kernel arguments.
+    /// Returns the modeled scatter schedule's makespan and traffic.
+    pub fn preload_matrix(&mut self, rows: u32, cols: u32, m: &[i8]) -> Result<ScatterReport> {
+        assert_eq!(m.len(), rows as usize * cols as usize);
+        self.map.assign_rows(rows)?;
+        // Validate every shard's densest per-DPU shape.
+        for shard in &self.map.shards {
+            GemvShape { rows: shard.partition().rows_of(0), cols }
+                .validate(self.variant, self.nr_tasklets)?;
+        }
+        let program = emit_gemv(self.variant)?;
+        for shard in &self.map.shards {
+            self.sys.load_program(&shard.set, &program)?;
+        }
+        // Encode once and retain: the rebalance path re-slices this
+        // buffer for its single-shard delta re-push.
+        self.mbytes = encode_matrix_block(self.variant, cols, m);
+        self.cols = cols;
+        self.symbols = Some(program.symbols.clone());
+
+        // Eager bytes through the per-socket worker threads.
+        let rb = self.variant.row_bytes(cols) as usize;
+        let chunks = scatter_chunks(&self.map, &self.mbytes, rb, None);
+        self.sys.scatter_socket_pinned(&chunks)?;
+        drop(chunks);
+
+        // Modeled schedule: one push per shard on its home socket's
+        // worker, reserved on the shard's rank bus queues.
+        let shard_bytes: Vec<u64> =
+            self.map.shards.iter().map(|s| s.rows as u64 * rb as u64).collect();
+        let specs: Vec<(&[RankId], u64)> = self
+            .map
+            .shards
+            .iter()
+            .zip(&shard_bytes)
+            .map(|(s, &b)| (s.set.ranks.ranks.as_slice(), b))
+            .collect();
+        let sched =
+            plan_scatter(self.sys.topology(), &self.sys.engine.model, self.map.buffer, &specs);
+        drop(specs);
+        let t0 = self.sys.modeled_now();
+        let mut max_end = t0;
+        for (s, &(start, end)) in sched.per_shard.iter().enumerate() {
+            let shard = &self.map.shards[s];
+            let (_, e) =
+                self.sys.reserve_bus(&shard.set.ranks.ranks, t0 + start, end - start);
+            max_end = max_end.max(e);
+        }
+        self.sys.advance_clock(max_end);
+
+        for s in 0..self.map.shards.len() {
+            self.write_shard_args(s)?;
+        }
+        Ok(ScatterReport { seconds: max_end - t0, bytes: sched.total_bytes })
+    }
+
+    /// Read shard `s`'s partial y eagerly (modeled gather time is
+    /// accounted by the caller on the async queues).
+    fn read_shard_y(&mut self, s: usize) -> Result<Vec<i32>> {
+        let nr_tasklets = self.nr_tasklets;
+        let part = self.map.shards[s].partition();
+        let mut y = Vec::with_capacity(part.total_rows as usize);
+        for i in 0..part.nr_dpus {
+            let dpu = {
+                let set = &self.map.shards[s].set;
+                self.sys.dpu_of(set, i)
+            };
+            y.extend(collect_gemv_output(dpu, part.rows_of(i), nr_tasklets)?);
+        }
+        Ok(y)
+    }
+
+    /// Finish one batch's launches: read every shard's partial y, model
+    /// the per-shard gathers after their launches, merge, and record
+    /// per-shard y-staging availability in `y_free`.
+    fn drain_shards(
+        &mut self,
+        handles: Vec<LaunchHandle>,
+        timing: &mut GemvTiming,
+        y_free: &mut [f64],
+    ) -> Result<Vec<i32>> {
+        let mut parts = Vec::with_capacity(handles.len());
+        let mut batch_gather = 0f64;
+        for (s, h) in handles.into_iter().enumerate() {
+            parts.push(self.read_shard_y(s)?);
+            let live = self.map.shards[s].partition().live_y_bytes();
+            let g = {
+                let shard = &self.map.shards[s];
+                self.sys.pull_modeled_async(&shard.set, live, h.end_s)
+            };
+            batch_gather = batch_gather.max(g.report.seconds);
+            y_free[s] = g.end_s;
+            let fleet = h.into_fleet();
+            self.last_instrs += fleet.per_dpu.iter().map(|r| r.instrs).sum::<u64>();
+            self.last_max_cycles = self.last_max_cycles.max(fleet.max_cycles);
+            self.sys.recycle_launch(fleet);
+        }
+        timing.gather_s += batch_gather;
+        self.map.merge_y(parts)
+    }
+
+    /// Execute one GEMV against the preloaded, sharded matrix.
+    pub fn gemv(&mut self, x: &[i8]) -> Result<(Vec<i32>, GemvTiming)> {
+        let (mut ys, t) = self.gemv_pipelined(&[x])?;
+        Ok((ys.pop().expect("one batch"), t))
+    }
+
+    /// Execute a batch of GEMVs with transfer/compute overlap: batch
+    /// *k+1*'s broadcast tree rides the bus queues while batch *k*
+    /// computes, double-buffering x between [`GEMV_X`] and
+    /// [`GEMV_X_ALT`] exactly like the flat coordinator.
+    pub fn gemv_pipelined(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, GemvTiming)> {
+        for x in xs {
+            self.check_vector(x)?;
+        }
+        let x_addr = self.arg("x_addr")?;
+        let n = self.map.shards.len();
+        let nr_tasklets = self.nr_tasklets;
+        let variant = self.variant;
+        self.last_instrs = 0;
+        self.last_max_cycles = 0;
+        let t0 = self.sys.sync_all();
+        let mut timing = GemvTiming::default();
+        let mut ys: Vec<Vec<i32>> = Vec::with_capacity(xs.len());
+        let mut prev: Option<Vec<LaunchHandle>> = None;
+        let mut y_free = vec![0f64; n];
+        // The tree's shape is batch-invariant (same ranks, same encoded
+        // x length — `row_bytes(cols)` — every batch): plan it once,
+        // reserve its stages per batch.
+        let all_ranks = self.map.all_ranks();
+        let tree = BroadcastTree::plan(
+            self.sys.topology(),
+            &all_ranks,
+            self.variant.row_bytes(self.cols) as u64,
+            &self.sys.engine.model.params,
+            self.map.buffer,
+        );
+        for (k, x) in xs.iter().enumerate() {
+            let buf = if k % 2 == 0 { GEMV_X } else { GEMV_X_ALT };
+            let xbytes = encode_vector(variant, x);
+            debug_assert_eq!(xbytes.len() as u64, self.variant.row_bytes(self.cols) as u64);
+            // Retarget + stage x per shard (WRAM argument writes land
+            // before the next launch on the modeled timeline; the eager
+            // simulator matches because batch k-1 already executed).
+            for shard in &self.map.shards {
+                self.sys.broadcast_symbol(&shard.set, &x_addr, buf)?;
+                self.sys.broadcast_untimed(&shard.set, buf, &xbytes)?;
+            }
+            // Modeled fan-out through the per-socket broadcast tree.
+            let mut stage_end = [0f64; SOCKETS];
+            for st in &tree.stages {
+                let (_, e) = self.sys.reserve_bus(
+                    &st.ranks,
+                    0.0,
+                    st.end_s() + tree.fixed_overhead_s,
+                );
+                stage_end[st.socket] = e;
+            }
+            timing.broadcast_s += tree.total_seconds();
+            // Collect batch k-1 before launch k overwrites the (single-
+            // buffered) y staging region.
+            if let Some(handles) = prev.take() {
+                ys.push(self.drain_shards(handles, &mut timing, &mut y_free)?);
+            }
+            // Launch every shard after its socket's tree stage and its
+            // own y drain.
+            let mut handles = Vec::with_capacity(n);
+            let mut batch_compute = 0f64;
+            for s in 0..n {
+                // Wait for every tree stage that feeds this shard (a
+                // placement-blind shard may straddle sockets).
+                let after_bc = {
+                    let topo = self.sys.topology();
+                    let shard = &self.map.shards[s];
+                    shard
+                        .set
+                        .ranks
+                        .ranks
+                        .iter()
+                        .map(|&r| stage_end[topo.rank_loc(r).socket])
+                        .fold(0.0, f64::max)
+                };
+                let after = after_bc.max(y_free[s]);
+                let shard = &self.map.shards[s];
+                let h = self.sys.launch_async(&shard.set, nr_tasklets, after)?;
+                batch_compute = batch_compute.max(h.peek().seconds);
+                handles.push(h);
+            }
+            timing.compute_s += batch_compute;
+            prev = Some(handles);
+            self.gemv_count += 1;
+        }
+        if let Some(handles) = prev.take() {
+            ys.push(self.drain_shards(handles, &mut timing, &mut y_free)?);
+        }
+        let wall = self.sys.sync_all() - t0;
+        timing.overlap_s =
+            (timing.broadcast_s + timing.compute_s + timing.gather_s - wall).max(0.0);
+        Ok((ys, timing))
+    }
+
+    /// Mark `dpu` faulty fleet-wide and rebalance: the owning shard
+    /// re-partitions its rows across its surviving DPUs and re-scatters
+    /// **only its own block** (plus refreshed kernel arguments). All
+    /// other shards keep their data untouched. Returns the re-pushed
+    /// byte count — 0 when the DPU belongs to no shard (nothing to do).
+    pub fn mark_faulty_and_rebalance(&mut self, dpu: DpuId) -> Result<u64> {
+        let Some(idx) = self.map.shard_of_dpu(dpu) else {
+            // No shard owns the DPU: a fleet-level fault with no plane
+            // impact — record it and move on.
+            self.sys.mark_faulty(dpu);
+            return Ok(0);
+        };
+        // Validate the remap BEFORE mutating any state (topology,
+        // allocator, shard map), so a failed rebalance is a no-op: the
+        // coordinator keeps serving the old layout and the fleet
+        // bookkeeping still agrees with the shard map.
+        let survivors = self.map.shards[idx].set.nr_dpus() - 1;
+        if survivors == 0 {
+            return Err(crate::Error::Coordinator(format!(
+                "shard {idx} would lose its last usable DPU"
+            )));
+        }
+        if self.cols != 0 {
+            // The survivors absorb the shard's rows: densest DPU must
+            // still fit.
+            let part =
+                RowPartition { total_rows: self.map.shards[idx].rows, nr_dpus: survivors };
+            GemvShape { rows: part.rows_of(0), cols: self.cols }
+                .validate(self.variant, self.nr_tasklets)?;
+        }
+        self.sys.mark_faulty(dpu);
+        let removed = self.map.remove_dpu(dpu);
+        debug_assert_eq!(removed, Some(idx));
+        if self.cols == 0 {
+            return Ok(0); // no matrix resident yet — nothing to re-push
+        }
+        let rb = self.variant.row_bytes(self.cols) as usize;
+        let chunks = scatter_chunks(&self.map, &self.mbytes, rb, Some(idx));
+        self.sys.scatter_socket_pinned(&chunks)?;
+        drop(chunks);
+        let bytes = self.map.shards[idx].rows as u64 * rb as u64;
+        let seconds = {
+            let shard = &self.map.shards[idx];
+            let specs = [(shard.set.ranks.ranks.as_slice(), bytes)];
+            plan_scatter(self.sys.topology(), &self.sys.engine.model, self.map.buffer, &specs)
+                .total_s
+        };
+        let t0 = self.sys.modeled_now();
+        let (_, end) = {
+            let ranks = &self.map.shards[idx].set.ranks.ranks;
+            self.sys.reserve_bus(ranks, t0, seconds)
+        };
+        self.sys.advance_clock(end);
+        self.write_shard_args(idx)?;
+        Ok(bytes)
+    }
+}
+
+impl GemvExecutor for ShardedGemvCoordinator {
+    fn cols(&self) -> u32 {
+        self.cols
+    }
+
+    fn gemv_batch(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, GemvTiming)> {
+        self.gemv_pipelined(xs)
+    }
+}

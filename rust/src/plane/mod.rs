@@ -1,0 +1,47 @@
+//! The NUMA-aware sharded data plane (paper §V, Fig. 10/11 — the
+//! serving-scale layer).
+//!
+//! Earlier layers made transfers *fast in isolation*: the cost model
+//! ([`crate::transfer::model`]), the balanced allocator
+//! ([`crate::alloc::numa`]), and the async rank queues. This subsystem
+//! makes **placement** a first-class serving concern — it owns *where*
+//! model shards live and *how* bytes reach them:
+//!
+//! * [`policy`] — [`PlacementPolicy`] maps shards onto rank sets:
+//!   [`Linear`] (SDK baseline: boot-seeded udev order, placement-blind),
+//!   [`ChannelInterleaved`] (channel spread, single staging buffer),
+//!   [`NumaBalanced`] (the paper's socket-round-robin, channel-balanced
+//!   placement with per-socket buffers);
+//! * [`shard`] — [`ShardMap`] row-partitions a GEMV matrix across the
+//!   placed shards and merges per-shard partial results;
+//! * [`tree`] — [`BroadcastTree`]: per-socket broadcast roots with
+//!   channel-parallel fan-out and a modeled UPI mirror for remote
+//!   roots;
+//! * [`workers`] — socket-pinned transfer workers: modeled per-socket
+//!   push serialization ([`SocketWorkerPool`] / [`plan_scatter`]) and
+//!   the eager per-socket scatter threads
+//!   ([`crate::host::PimSystem::scatter_socket_pinned`]);
+//! * [`coordinator`] — [`ShardedGemvCoordinator`]: scatter → broadcast
+//!   tree → per-shard launches → gather/merge, with pipelined batches
+//!   and fault-driven single-shard rebalancing.
+//!
+//! Every policy yields bit-identical GEMV results; only the modeled
+//! transfer schedule changes — which is the paper's point: the up-to-
+//! 2.9× Fig. 11 gap is pure placement. `rust/benches/fig11_transfer.rs`
+//! reproduces the ablation and `rust/tests/plane_properties.rs` pins
+//! the contracts.
+
+pub mod coordinator;
+pub mod policy;
+pub mod shard;
+pub mod tree;
+pub mod workers;
+
+pub use coordinator::{ScatterReport, ShardedGemvCoordinator};
+pub use policy::{
+    equal_channel_distribution, ChannelInterleaved, Linear, NumaBalanced, Placement,
+    PlacementPolicy,
+};
+pub use shard::{Shard, ShardMap};
+pub use tree::{BroadcastTree, TreeStage};
+pub use workers::{placement_rates, plan_scatter, ScatterChunk, ScatterSchedule, SocketWorkerPool};

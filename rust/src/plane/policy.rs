@@ -1,0 +1,340 @@
+//! Placement policies: *where* a sharded workload's ranks live.
+//!
+//! A [`PlacementPolicy`] maps a logical shard count onto physical
+//! [`RankSet`]s through the [`NumaAwareAllocator`] and the machine's
+//! [`SystemTopology`](crate::transfer::topology::SystemTopology). Three
+//! implementations span the paper's §V ablation axis:
+//!
+//! * [`Linear`] — the SDK baseline: ranks taken in boot-seeded udev
+//!   enumeration order, blind to sockets and channels (shards pack onto
+//!   1–3 DIMMs of one socket, and *which* DIMMs varies per boot — the
+//!   low-and-variable placement of Fig. 11);
+//! * [`ChannelInterleaved`] — ranks picked round-robin across all
+//!   memory channels (good channel spread) but with a single host
+//!   staging buffer on node 0 (remote shards still pay the UPI
+//!   penalty);
+//! * [`NumaBalanced`] — the paper's placement: shards assigned to
+//!   sockets round-robin, each shard channel-balanced within its socket
+//!   via [`equal_channel_distribution`], with per-socket staging
+//!   buffers (Fig. 10's `alloc_buffer_on_cpu`).
+//!
+//! This module is also the canonical home of
+//! [`equal_channel_distribution`] (promoted from `alloc/numa.rs`, which
+//! re-exports it for compatibility).
+
+use crate::alloc::baseline::udev_order;
+use crate::alloc::{NumaAwareAllocator, RankSet};
+use crate::transfer::model::BufferPlacement;
+use crate::transfer::topology::{RankId, PIM_CHANNELS_PER_SOCKET, SOCKETS};
+use crate::Result;
+
+/// Compute a balanced per-channel rank distribution for `n_ranks` on
+/// `socket` (the paper's `equal_channel_distribution(ranks/2, node)`):
+/// returns `counts[channel] = ranks to take from that channel`, spread
+/// as evenly as possible, low channels first for the remainder.
+pub fn equal_channel_distribution(n_ranks: usize, socket: usize) -> Vec<usize> {
+    assert!(socket < SOCKETS);
+    let per = n_ranks / PIM_CHANNELS_PER_SOCKET;
+    let extra = n_ranks % PIM_CHANNELS_PER_SOCKET;
+    (0..PIM_CHANNELS_PER_SOCKET).map(|c| per + usize::from(c < extra)).collect()
+}
+
+/// The outcome of placing a sharded workload: one rank set per shard
+/// plus the host staging-buffer placement the policy implies.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// One rank set per shard, in shard order.
+    pub shards: Vec<RankSet>,
+    /// Where the host DRAM staging buffers live for these shards.
+    pub buffer: BufferPlacement,
+    /// The producing policy's name (tables, JSON rows).
+    pub policy: &'static str,
+}
+
+/// Maps shards onto physical ranks.
+pub trait PlacementPolicy {
+    /// Short stable name (bench tables, JSON workload keys).
+    fn name(&self) -> &'static str;
+
+    /// Allocate `n_shards` disjoint rank sets of `ranks_per_shard`
+    /// each. Either every shard is claimed or — on failure — nothing
+    /// is (claimed sets are rolled back before the error returns).
+    fn place(
+        &self,
+        alloc: &mut NumaAwareAllocator,
+        n_shards: usize,
+        ranks_per_shard: usize,
+    ) -> Result<Placement>;
+}
+
+/// Release already-claimed shard sets after a mid-placement failure.
+fn rollback(alloc: &mut NumaAwareAllocator, claimed: Vec<RankSet>) {
+    for s in claimed {
+        alloc.free(s).expect("rollback of a just-claimed set");
+    }
+}
+
+/// Claim shards by walking a fixed rank order first-fit — shared by the
+/// order-driven policies ([`Linear`], [`ChannelInterleaved`]).
+fn place_in_order(
+    alloc: &mut NumaAwareAllocator,
+    order: &[RankId],
+    n_shards: usize,
+    ranks_per_shard: usize,
+    buffer: BufferPlacement,
+    policy: &'static str,
+) -> Result<Placement> {
+    let mut claimed = Vec::with_capacity(n_shards);
+    for shard in 0..n_shards {
+        let picks: Vec<RankId> =
+            order.iter().copied().filter(|&r| alloc.is_free(r)).take(ranks_per_shard).collect();
+        if picks.len() < ranks_per_shard {
+            rollback(alloc, claimed);
+            return Err(crate::Error::Alloc(format!(
+                "{policy}: shard {shard} needs {ranks_per_shard} ranks, {} free",
+                picks.len()
+            )));
+        }
+        match alloc.alloc_exact(&picks) {
+            Ok(s) => claimed.push(s),
+            Err(e) => {
+                rollback(alloc, claimed);
+                return Err(e);
+            }
+        }
+    }
+    Ok(Placement { shards: claimed, buffer, policy })
+}
+
+/// The SDK baseline: first-fit in boot-seeded udev enumeration order,
+/// socket- and channel-oblivious, one staging buffer on node 0.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Linear {
+    /// Identifies the "boot" whose udev order is used (the paper: the
+    /// order is stable within a boot, arbitrary across boots). Default
+    /// boot 0.
+    pub boot_seed: u64,
+}
+
+impl PlacementPolicy for Linear {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn place(
+        &self,
+        alloc: &mut NumaAwareAllocator,
+        n_shards: usize,
+        ranks_per_shard: usize,
+    ) -> Result<Placement> {
+        let order = udev_order(self.boot_seed);
+        place_in_order(
+            alloc,
+            &order,
+            n_shards,
+            ranks_per_shard,
+            BufferPlacement::Node(0),
+            self.name(),
+        )
+    }
+}
+
+/// Round-robin over every (socket, channel) pair: maximal channel
+/// spread, but still a single node-0 staging buffer — the halfway
+/// point of the ablation (channel bandwidth fixed, NUMA crossing not).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChannelInterleaved;
+
+impl PlacementPolicy for ChannelInterleaved {
+    fn name(&self) -> &'static str {
+        "channel-interleaved"
+    }
+
+    fn place(
+        &self,
+        alloc: &mut NumaAwareAllocator,
+        n_shards: usize,
+        ranks_per_shard: usize,
+    ) -> Result<Placement> {
+        // Channel-major enumeration: one rank from every channel of
+        // every socket before doubling up anywhere.
+        let topo = alloc.topology().clone();
+        let mut order = Vec::new();
+        let per_channel = topo.ranks_of_channel(0, 0).len();
+        for round in 0..per_channel {
+            for socket in 0..topo.n_sockets() {
+                for channel in 0..PIM_CHANNELS_PER_SOCKET {
+                    order.push(topo.ranks_of_channel(socket, channel)[round]);
+                }
+            }
+        }
+        place_in_order(
+            alloc,
+            &order,
+            n_shards,
+            ranks_per_shard,
+            BufferPlacement::Node(0),
+            self.name(),
+        )
+    }
+}
+
+/// The paper's placement: shards round-robin across sockets, each shard
+/// channel-balanced within its socket, per-socket staging buffers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NumaBalanced;
+
+impl PlacementPolicy for NumaBalanced {
+    fn name(&self) -> &'static str {
+        "numa-balanced"
+    }
+
+    fn place(
+        &self,
+        alloc: &mut NumaAwareAllocator,
+        n_shards: usize,
+        ranks_per_shard: usize,
+    ) -> Result<Placement> {
+        let sockets = alloc.topology().n_sockets();
+        // Rotate each socket's channel distribution per shard so
+        // consecutive shards on one socket start on different channels
+        // (two 1-rank shards must not both land on channel 0).
+        let mut chan_offset = vec![0usize; sockets];
+        let mut claimed = Vec::with_capacity(n_shards);
+        for shard in 0..n_shards {
+            let socket = shard % sockets;
+            let mut counts = equal_channel_distribution(ranks_per_shard, socket);
+            counts.rotate_left(chan_offset[socket] % PIM_CHANNELS_PER_SOCKET);
+            chan_offset[socket] += ranks_per_shard;
+            match alloc.alloc_ranks_on(socket, &counts) {
+                Ok(s) => claimed.push(s),
+                Err(e) => {
+                    rollback(alloc, claimed);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(Placement { shards: claimed, buffer: BufferPlacement::PerSocket, policy: self.name() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfer::topology::{SystemTopology, TOTAL_RANKS};
+    use crate::util::proptest::{forall, Config};
+
+    fn policies(boot: u64) -> Vec<Box<dyn PlacementPolicy>> {
+        vec![
+            Box::new(Linear { boot_seed: boot }),
+            Box::new(ChannelInterleaved),
+            Box::new(NumaBalanced),
+        ]
+    }
+
+    /// Disjoint, topology-valid, covering: the satellite property.
+    #[test]
+    fn every_policy_places_disjoint_valid_covering_shards() {
+        forall(
+            Config::cases(60),
+            |rng| {
+                (
+                    rng.range_u64(0, 9),      // boot
+                    rng.range_u64(1, 4) as usize, // shards
+                    rng.range_u64(1, 4) as usize, // ranks per shard
+                    rng.range_u64(0, 2) as usize, // policy index
+                )
+            },
+            |&(boot, n_shards, per_shard, pidx)| {
+                let ps = policies(boot);
+                let policy = &ps[pidx];
+                let mut alloc = NumaAwareAllocator::new(SystemTopology::pristine());
+                let p = policy.place(&mut alloc, n_shards, per_shard).unwrap();
+                if p.shards.len() != n_shards {
+                    return false;
+                }
+                let mut seen = std::collections::HashSet::new();
+                for set in &p.shards {
+                    if set.len() != per_shard {
+                        return false;
+                    }
+                    for &r in &set.ranks {
+                        if r >= TOTAL_RANKS || !seen.insert(r) {
+                            return false;
+                        }
+                    }
+                }
+                // Frees compose back to a full machine.
+                for set in p.shards {
+                    alloc.free(set).unwrap();
+                }
+                alloc.free_ranks() == TOTAL_RANKS
+            },
+            "placement policies produce disjoint topology-valid covers",
+        );
+    }
+
+    #[test]
+    fn linear_packs_numa_balanced_spreads() {
+        let topo = SystemTopology::pristine();
+        let mut a = NumaAwareAllocator::new(topo.clone());
+        let lin = Linear { boot_seed: 3 }.place(&mut a, 4, 2).unwrap();
+        let lin_sockets: std::collections::HashSet<usize> = lin
+            .shards
+            .iter()
+            .flat_map(|s| s.ranks.iter().map(|&r| topo.rank_loc(r).socket))
+            .collect();
+        assert_eq!(lin_sockets.len(), 1, "udev order packs small fleets on one socket");
+        assert_eq!(lin.buffer, BufferPlacement::Node(0));
+
+        let mut b = NumaAwareAllocator::new(topo.clone());
+        let numa = NumaBalanced.place(&mut b, 4, 2).unwrap();
+        assert_eq!(numa.buffer, BufferPlacement::PerSocket);
+        // Shards alternate sockets and stay socket-pure.
+        for (i, set) in numa.shards.iter().enumerate() {
+            assert_eq!(set.sockets_spanned(&topo), 1);
+            for &r in &set.ranks {
+                assert_eq!(topo.rank_loc(r).socket, i % SOCKETS);
+            }
+        }
+        // The fleet spans both sockets and 8 distinct channels.
+        let all = RankSet {
+            ranks: numa.shards.iter().flat_map(|s| s.ranks.clone()).collect(),
+        };
+        assert_eq!(all.sockets_spanned(&topo), 2);
+        assert_eq!(all.channels_spanned(&topo), 8);
+    }
+
+    #[test]
+    fn channel_interleaved_spans_all_channels() {
+        let topo = SystemTopology::pristine();
+        let mut a = NumaAwareAllocator::new(topo.clone());
+        let p = ChannelInterleaved.place(&mut a, 2, 5).unwrap();
+        let all = RankSet {
+            ranks: p.shards.iter().flat_map(|s| s.ranks.clone()).collect(),
+        };
+        assert_eq!(all.channels_spanned(&topo), 10, "10 ranks → all 10 channels");
+    }
+
+    #[test]
+    fn linear_placement_varies_per_boot() {
+        let distinct: std::collections::HashSet<Vec<usize>> = (0..10)
+            .map(|boot| {
+                let mut a = NumaAwareAllocator::new(SystemTopology::pristine());
+                let p = Linear { boot_seed: boot }.place(&mut a, 2, 2).unwrap();
+                p.shards.iter().flat_map(|s| s.ranks.clone()).collect()
+            })
+            .collect();
+        assert!(distinct.len() >= 5, "baseline placement should vary per boot");
+    }
+
+    #[test]
+    fn failed_placement_rolls_back() {
+        let mut a = NumaAwareAllocator::new(SystemTopology::pristine());
+        // 3 shards × 16 ranks = 48 > 40: must fail without leaking.
+        assert!(NumaBalanced.place(&mut a, 3, 16).is_err());
+        assert_eq!(a.free_ranks(), TOTAL_RANKS);
+        assert!(Linear::default().place(&mut a, 3, 16).is_err());
+        assert_eq!(a.free_ranks(), TOTAL_RANKS);
+    }
+}

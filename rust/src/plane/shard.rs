@@ -1,0 +1,237 @@
+//! The shard map: which rows live on which rank set.
+//!
+//! A [`ShardMap`] row-partitions a GEMV matrix across shards — each
+//! shard a [`DpuSet`] placed by a
+//! [`PlacementPolicy`](super::policy::PlacementPolicy) — proportionally
+//! to each shard's usable DPU count, and within a shard the existing
+//! contiguous [`RowPartition`] applies per DPU. Because the kernel's
+//! integer dot products are exact, *where* a row is computed never
+//! changes its value: the sharded result is bit-identical to the
+//! unsharded coordinator's for every placement policy (pinned in
+//! `rust/tests/plane_properties.rs`).
+//!
+//! The map is also the unit of fault handling: marking a DPU faulty
+//! remaps only its owning shard (rows re-partition across the shard's
+//! survivors), so a rebalance re-transfers exactly one shard's block —
+//! the delta-transfer contract of the data plane.
+
+use crate::coordinator::RowPartition;
+use crate::host::DpuSet;
+use crate::transfer::model::BufferPlacement;
+use crate::transfer::topology::{DpuId, RankId, SystemTopology};
+use crate::Result;
+
+/// One shard: a placed DPU set owning a contiguous row range.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub set: DpuSet,
+    /// First matrix row this shard owns.
+    pub row_start: u32,
+    /// Number of rows this shard owns.
+    pub rows: u32,
+}
+
+impl Shard {
+    /// Row partition of this shard's rows across its usable DPUs.
+    pub fn partition(&self) -> RowPartition {
+        RowPartition { total_rows: self.rows, nr_dpus: self.set.nr_dpus() }
+    }
+
+    /// The socket this shard's transfers are issued from.
+    pub fn home_socket(&self, topo: &SystemTopology) -> usize {
+        super::workers::home_socket(topo, &self.set.ranks.ranks)
+    }
+}
+
+/// Row-sharded fleet layout.
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    pub shards: Vec<Shard>,
+    /// Host staging-buffer placement shared by all shards (from the
+    /// producing policy).
+    pub buffer: BufferPlacement,
+    /// Producing policy name (tables, JSON rows).
+    pub policy: &'static str,
+    total_rows: u32,
+}
+
+impl ShardMap {
+    /// Wrap placed DPU sets as an (un-row-assigned) shard map.
+    pub fn new(sets: Vec<DpuSet>, policy: &'static str) -> Result<ShardMap> {
+        if sets.is_empty() {
+            return Err(crate::Error::Coordinator("shard map needs at least one shard".into()));
+        }
+        let buffer = sets[0].placement;
+        let shards =
+            sets.into_iter().map(|set| Shard { set, row_start: 0, rows: 0 }).collect();
+        Ok(ShardMap { shards, buffer, policy, total_rows: 0 })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn total_rows(&self) -> u32 {
+        self.total_rows
+    }
+
+    /// All rank ids across shards, in shard order.
+    pub fn all_ranks(&self) -> Vec<RankId> {
+        self.shards.iter().flat_map(|s| s.set.ranks.ranks.iter().copied()).collect()
+    }
+
+    /// Total usable DPUs across shards.
+    pub fn nr_dpus(&self) -> usize {
+        self.shards.iter().map(|s| s.set.nr_dpus()).sum()
+    }
+
+    /// Row-partition `rows` across shards proportionally to usable DPU
+    /// counts (contiguous ranges, in shard order, covering exactly
+    /// `[0, rows)`). Errors if any shard would receive zero rows.
+    pub fn assign_rows(&mut self, rows: u32) -> Result<()> {
+        let total_dpus: u64 = self.shards.iter().map(|s| s.set.nr_dpus() as u64).sum();
+        if total_dpus == 0 {
+            return Err(crate::Error::Coordinator("shard map has no usable DPUs".into()));
+        }
+        let n_shards = self.shards.len();
+        let mut cum = 0u64;
+        let mut start = 0u32;
+        for (i, shard) in self.shards.iter_mut().enumerate() {
+            cum += shard.set.nr_dpus() as u64;
+            let end = (rows as u64 * cum / total_dpus) as u32;
+            if end <= start {
+                return Err(crate::Error::Coordinator(format!(
+                    "rows={rows} over {n_shards} shards leaves shard {i} with zero rows"
+                )));
+            }
+            shard.row_start = start;
+            shard.rows = end - start;
+            start = end;
+        }
+        debug_assert_eq!(start, rows);
+        self.total_rows = rows;
+        Ok(())
+    }
+
+    /// Which shard owns `dpu`, if any.
+    pub fn shard_of_dpu(&self, dpu: DpuId) -> Option<usize> {
+        self.shards.iter().position(|s| s.set.dpus.contains(&dpu))
+    }
+
+    /// Drop a (newly faulty) DPU from its owning shard; the shard's
+    /// row range is unchanged — only its intra-shard partition shifts,
+    /// which is what keeps the rebalance a single-shard delta transfer.
+    /// Returns the affected shard's index, or `None` if no shard owns
+    /// the DPU.
+    pub fn remove_dpu(&mut self, dpu: DpuId) -> Option<usize> {
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            if let Some(pos) = s.set.dpus.iter().position(|&d| d == dpu) {
+                s.set.dpus.remove(pos);
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Merge per-shard partial y vectors (shard order == row order)
+    /// into the full result.
+    pub fn merge_y(&self, parts: Vec<Vec<i32>>) -> Result<Vec<i32>> {
+        if parts.len() != self.shards.len() {
+            return Err(crate::Error::Coordinator(format!(
+                "merge of {} partials over {} shards",
+                parts.len(),
+                self.shards.len()
+            )));
+        }
+        let mut y = Vec::with_capacity(self.total_rows as usize);
+        for (shard, part) in self.shards.iter().zip(parts) {
+            if part.len() != shard.rows as usize {
+                return Err(crate::Error::Coordinator(format!(
+                    "shard partial has {} rows, owns {}",
+                    part.len(),
+                    shard.rows
+                )));
+            }
+            y.extend(part);
+        }
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::host::{AllocPolicy, PimSystem};
+    use crate::plane::policy::{NumaBalanced, PlacementPolicy};
+    use crate::transfer::topology::SystemTopology;
+    use crate::util::proptest::{forall, Config};
+
+    fn map(n_shards: usize, ranks_per_shard: usize) -> ShardMap {
+        let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+        let sets = sys.alloc_shards(&NumaBalanced, n_shards, ranks_per_shard).unwrap();
+        ShardMap::new(sets, NumaBalanced.name()).unwrap()
+    }
+
+    #[test]
+    fn rows_cover_contiguously_in_proportion() {
+        forall(
+            Config::cases(60),
+            |rng| (rng.range_u64(1, 4) as usize, rng.range_u64(200, 4000) as u32),
+            |&(n_shards, rows)| {
+                let mut m = map(n_shards, 1);
+                m.assign_rows(rows).unwrap();
+                let mut next = 0u32;
+                for s in &m.shards {
+                    if s.row_start != next || s.rows == 0 {
+                        return false;
+                    }
+                    next += s.rows;
+                }
+                // Equal-size shards (1 rank each): rows differ by ≤ 1... per
+                // 64-DPU shard the proportional split keeps them within 1.
+                let max = m.shards.iter().map(|s| s.rows).max().unwrap();
+                let min = m.shards.iter().map(|s| s.rows).min().unwrap();
+                next == rows && max - min <= 1
+            },
+            "shard row ranges cover [0, rows) proportionally",
+        );
+    }
+
+    #[test]
+    fn too_few_rows_is_an_error() {
+        let mut m = map(2, 1);
+        assert!(m.assign_rows(1).is_err(), "1 row over 2 shards leaves one empty");
+        assert!(m.assign_rows(2).is_ok());
+    }
+
+    #[test]
+    fn remove_dpu_shrinks_only_its_shard() {
+        let mut m = map(2, 1);
+        m.assign_rows(256).unwrap();
+        let victim = m.shards[1].set.dpus[7];
+        let before0 = m.shards[0].set.nr_dpus();
+        let before1 = m.shards[1].set.nr_dpus();
+        assert_eq!(m.shard_of_dpu(victim), Some(1));
+        assert_eq!(m.remove_dpu(victim), Some(1));
+        assert_eq!(m.shards[0].set.nr_dpus(), before0);
+        assert_eq!(m.shards[1].set.nr_dpus(), before1 - 1);
+        assert_eq!(m.shard_of_dpu(victim), None);
+        assert_eq!(m.remove_dpu(victim), None, "second removal finds nothing");
+        // Row ranges are untouched (delta-transfer contract).
+        assert_eq!(m.shards[1].rows + m.shards[0].rows, 256);
+    }
+
+    #[test]
+    fn merge_checks_shapes() {
+        let mut m = map(2, 1);
+        m.assign_rows(200).unwrap();
+        let r0 = m.shards[0].rows as usize;
+        let r1 = m.shards[1].rows as usize;
+        let y = m.merge_y(vec![vec![1; r0], vec![2; r1]]).unwrap();
+        assert_eq!(y.len(), 200);
+        assert_eq!(y[0], 1);
+        assert_eq!(y[199], 2);
+        assert!(m.merge_y(vec![vec![1; r0]]).is_err(), "missing partial");
+        assert!(m.merge_y(vec![vec![1; r0], vec![2; r1 + 1]]).is_err(), "wrong length");
+    }
+}

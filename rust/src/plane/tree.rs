@@ -1,0 +1,227 @@
+//! Broadcast trees: per-socket roots with channel-parallel fan-out.
+//!
+//! The flat SDK broadcast ([`crate::transfer::TransferEngine::broadcast`])
+//! pushes every replicated byte from wherever the staging buffer lives —
+//! with a node-0 buffer, every write to a socket-1 channel crosses the
+//! UPI link. The tree instead stages the payload **once per socket**
+//! (one UPI hop for the remote root) and fans out channel-parallel from
+//! the local copy:
+//!
+//! ```text
+//!            host buffer (node 0)
+//!            /                  \
+//!     socket-0 root        socket-1 root  (UPI mirror: numa_cross-scaled DRAM copy)
+//!      |  |  |  |  |         |  |  |  |  |
+//!     ch0 .. ch4 fan-out    ch0 .. ch4 fan-out   (local channel bandwidth)
+//! ```
+//!
+//! With per-socket buffers ([`BufferPlacement::PerSocket`], the paper's
+//! Fig. 10 extension) the root copies are free and the tree degenerates
+//! to the flat per-socket broadcast — the tree is never slower than the
+//! flat engine path, and strictly faster whenever a single-node buffer
+//! feeds remote channels (pinned by `tree_never_loses_to_flat`).
+
+use crate::transfer::model::{BufferPlacement, TransferParams};
+use crate::transfer::topology::{RankId, SystemTopology, PIM_CHANNELS_PER_SOCKET, SOCKETS};
+
+/// One socket's stage of the tree: root staging copy + channel fan-out.
+#[derive(Debug, Clone)]
+pub struct TreeStage {
+    /// The socket this stage feeds.
+    pub socket: usize,
+    /// Ranks reached by this stage (all on `socket`).
+    pub ranks: Vec<RankId>,
+    /// Root copy seconds (0 when the buffer is already local).
+    pub root_s: f64,
+    /// Channel-parallel fan-out seconds from the local copy.
+    pub fanout_s: f64,
+}
+
+impl TreeStage {
+    /// Stage completion relative to tree start (root then fan-out).
+    pub fn end_s(&self) -> f64 {
+        self.root_s + self.fanout_s
+    }
+}
+
+/// A planned broadcast: one stage per populated socket, stages run
+/// concurrently (different sockets use disjoint channels and cores).
+#[derive(Debug, Clone)]
+pub struct BroadcastTree {
+    pub stages: Vec<TreeStage>,
+    /// Fixed per-operation software overhead, charged once per stage
+    /// reservation by callers and once in [`BroadcastTree::total_seconds`].
+    pub fixed_overhead_s: f64,
+}
+
+impl BroadcastTree {
+    /// Plan a broadcast of `bytes` to `ranks` with the host buffer at
+    /// `buffer`, under the model constants `params`.
+    pub fn plan(
+        topo: &SystemTopology,
+        ranks: &[RankId],
+        bytes: u64,
+        params: &TransferParams,
+        buffer: BufferPlacement,
+    ) -> BroadcastTree {
+        assert!(!ranks.is_empty(), "broadcast tree with no ranks");
+        let b = bytes as f64;
+        let mut per_socket: Vec<Vec<RankId>> = vec![Vec::new(); SOCKETS];
+        for &r in ranks {
+            per_socket[topo.rank_loc(r).socket].push(r);
+        }
+        let mut stages = Vec::new();
+        for (socket, sranks) in per_socket.into_iter().enumerate() {
+            if sranks.is_empty() {
+                continue;
+            }
+            let local = match buffer {
+                BufferPlacement::PerSocket => true,
+                BufferPlacement::Node(n) => n == socket,
+            };
+            // Remote root: one DRAM→DRAM mirror over UPI.
+            let root_s = if local { 0.0 } else { b / (params.dram * params.numa_cross * 1e9) };
+            // Fan-out: ranks sharing a channel serialize on it; the
+            // socket transposes the payload once.
+            let mut chan_ranks = [0u32; PIM_CHANNELS_PER_SOCKET];
+            for &r in &sranks {
+                chan_ranks[topo.rank_loc(r).channel] += 1;
+            }
+            let mut fanout_s = b / (params.socket_h2p * 1e9);
+            for &n in &chan_ranks {
+                if n > 0 {
+                    fanout_s = fanout_s.max(n as f64 * b / (params.channel_h2p * 1e9));
+                }
+            }
+            stages.push(TreeStage { socket, ranks: sranks, root_s, fanout_s });
+        }
+        BroadcastTree { stages, fixed_overhead_s: params.fixed_overhead_s }
+    }
+
+    /// Modeled wall seconds for the whole tree (stages concurrent).
+    pub fn total_seconds(&self) -> f64 {
+        self.stages.iter().map(TreeStage::end_s).fold(0.0, f64::max) + self.fixed_overhead_s
+    }
+
+    /// Completion of one socket's stage (incl. the fixed overhead),
+    /// relative to tree start; `None` if the socket has no ranks.
+    pub fn stage_end(&self, socket: usize) -> Option<f64> {
+        self.stages
+            .iter()
+            .find(|s| s.socket == socket)
+            .map(|s| s.end_s() + self.fixed_overhead_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfer::model::TransferModel;
+
+    fn topo() -> SystemTopology {
+        SystemTopology::pristine()
+    }
+
+    /// Ranks spread over distinct channels, alternating sockets.
+    fn balanced(n: usize) -> Vec<RankId> {
+        let t = topo();
+        let mut out = Vec::new();
+        'outer: for round in 0..4 {
+            for c in 0..PIM_CHANNELS_PER_SOCKET {
+                for s in 0..SOCKETS {
+                    if out.len() >= n {
+                        break 'outer;
+                    }
+                    out.push(t.ranks_of_channel(s, c)[round]);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn per_socket_buffers_make_roots_free() {
+        let m = TransferModel::default();
+        let tree = BroadcastTree::plan(
+            &topo(),
+            &balanced(8),
+            4 << 20,
+            &m.params,
+            BufferPlacement::PerSocket,
+        );
+        assert_eq!(tree.stages.len(), 2);
+        for s in &tree.stages {
+            assert_eq!(s.root_s, 0.0);
+            assert!(s.fanout_s > 0.0);
+        }
+        assert!(tree.stage_end(0).unwrap() > 0.0);
+        assert!(tree.stage_end(1).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn remote_socket_pays_one_upi_mirror() {
+        let m = TransferModel::default();
+        let tree = BroadcastTree::plan(
+            &topo(),
+            &balanced(8),
+            4 << 20,
+            &m.params,
+            BufferPlacement::Node(0),
+        );
+        let s0 = tree.stages.iter().find(|s| s.socket == 0).unwrap();
+        let s1 = tree.stages.iter().find(|s| s.socket == 1).unwrap();
+        assert_eq!(s0.root_s, 0.0, "local root is free");
+        let b = (4u64 << 20) as f64;
+        let want = b / (m.params.dram * m.params.numa_cross * 1e9);
+        assert!((s1.root_s - want).abs() < 1e-12, "remote root = one UPI mirror");
+        // Fan-outs are identical: both sockets hold 4 ranks on 4 channels.
+        assert!((s0.fanout_s - s1.fanout_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn tree_never_loses_to_flat() {
+        // Across placements and rank spreads, the tree's modeled time is
+        // ≤ the flat engine broadcast (equal when roots are free).
+        let m = TransferModel::default();
+        let t = topo();
+        let bytes = 16u64 << 20;
+        for placement in [
+            BufferPlacement::PerSocket,
+            BufferPlacement::Node(0),
+            BufferPlacement::Node(1),
+        ] {
+            for ranks in [balanced(2), balanced(8), (0..8).collect::<Vec<_>>(), balanced(40)] {
+                let flat = m.broadcast_seconds(&t, &ranks, bytes, placement);
+                let tree =
+                    BroadcastTree::plan(&t, &ranks, bytes, &m.params, placement).total_seconds();
+                assert!(
+                    tree <= flat + 1e-12,
+                    "tree {tree} > flat {flat} for {placement:?} on {} ranks",
+                    ranks.len()
+                );
+            }
+        }
+        // Per-socket buffers: the tree degenerates to the flat broadcast.
+        let ranks = balanced(8);
+        let flat = m.broadcast_seconds(&t, &ranks, bytes, BufferPlacement::PerSocket);
+        let tree = BroadcastTree::plan(&t, &ranks, bytes, &m.params, BufferPlacement::PerSocket)
+            .total_seconds();
+        assert!((tree - flat).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_socket_set_has_one_stage() {
+        let m = TransferModel::default();
+        let tree = BroadcastTree::plan(
+            &topo(),
+            &[0, 1, 4],
+            1 << 20,
+            &m.params,
+            BufferPlacement::Node(1),
+        );
+        assert_eq!(tree.stages.len(), 1);
+        assert_eq!(tree.stages[0].socket, 0);
+        assert!(tree.stages[0].root_s > 0.0, "node-1 buffer feeding socket 0 is remote");
+        assert!(tree.stage_end(1).is_none());
+    }
+}

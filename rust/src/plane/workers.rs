@@ -1,0 +1,211 @@
+//! Socket-pinned transfer workers: push/pull cost modeled per
+//! [`RankLoc`](crate::transfer::topology::RankLoc), not flat.
+//!
+//! Two halves, mirroring the simulator's split between *modeled time*
+//! and *eager data movement*:
+//!
+//! * [`SocketWorkerPool`] / [`plan_scatter`] — the modeled side. One
+//!   transfer worker per socket issues that socket's shard pushes;
+//!   pushes bound for the **same** socket serialize (they contend for
+//!   the socket's transpose cores and DRAM channel), pushes bound for
+//!   **different** sockets run concurrently. A placement that lands
+//!   every shard on one socket therefore pays the serial sum, while the
+//!   NUMA-balanced placement overlaps sockets — exactly the Fig. 11
+//!   gap, now modeled at the data-plane layer rather than inside one
+//!   flat transfer call.
+//! * [`ScatterChunk`] — the eager side: per-DPU byte views that
+//!   [`crate::host::PimSystem::scatter_socket_pinned`] writes on one
+//!   worker thread per socket (layered on the PR-2 fleet-worker
+//!   machinery: DPU boxes are pulled from their slots so the scoped
+//!   threads own them outright).
+
+use crate::transfer::model::{BufferPlacement, Direction, TransferModel};
+use crate::transfer::topology::{DpuId, RankId, SystemTopology, SOCKETS};
+
+/// Per-DPU slice of an eager scatter (host→MRAM), executed by the
+/// socket-pinned worker threads.
+#[derive(Debug, Clone, Copy)]
+pub struct ScatterChunk<'a> {
+    pub dpu: DpuId,
+    pub mram_addr: u32,
+    pub bytes: &'a [u8],
+}
+
+/// Per-socket transfer-worker clocks: each socket's worker issues its
+/// pushes back-to-back; sockets run independently.
+#[derive(Debug, Clone)]
+pub struct SocketWorkerPool {
+    free_at: Vec<f64>,
+}
+
+impl SocketWorkerPool {
+    pub fn new(n_sockets: usize) -> SocketWorkerPool {
+        SocketWorkerPool { free_at: vec![0.0; n_sockets] }
+    }
+
+    /// Schedule `seconds` of transfer work on `socket`'s worker,
+    /// starting no earlier than `after`; returns `(start, end)`
+    /// relative to the pool's origin.
+    pub fn schedule(&mut self, socket: usize, after: f64, seconds: f64) -> (f64, f64) {
+        let start = self.free_at[socket].max(after);
+        let end = start + seconds;
+        self.free_at[socket] = end;
+        (start, end)
+    }
+
+    /// When every worker is drained (relative to the pool's origin).
+    pub fn drained(&self) -> f64 {
+        self.free_at.iter().fold(0.0, |a, &b| a.max(b))
+    }
+}
+
+/// The socket a shard's transfers are issued from: where its first rank
+/// lives (shards from socket-aware policies are socket-pure; for
+/// placement-blind shards that straddle sockets this picks the
+/// majority-by-construction first rank, which is the pessimistic choice
+/// the SDK baseline makes too).
+pub fn home_socket(topo: &SystemTopology, ranks: &[RankId]) -> usize {
+    assert!(!ranks.is_empty(), "shard with no ranks");
+    topo.rank_loc(ranks[0]).socket
+}
+
+/// A planned scatter: per-shard `(start, end)` windows relative to the
+/// schedule origin, plus the makespan.
+#[derive(Debug, Clone)]
+pub struct ScatterSchedule {
+    pub per_shard: Vec<(f64, f64)>,
+    /// Makespan: when the last worker finishes.
+    pub total_s: f64,
+    /// Total unique bytes moved.
+    pub total_bytes: u64,
+}
+
+impl ScatterSchedule {
+    /// Aggregate modeled throughput in GB/s.
+    pub fn gbps(&self) -> f64 {
+        self.total_bytes as f64 / self.total_s / 1e9
+    }
+}
+
+/// Model a scatter of `shards` (each `(ranks, bytes)`): every shard's
+/// push is a parallel-mode transfer over its own ranks under `buffer`
+/// placement, issued by its home socket's worker.
+pub fn plan_scatter(
+    topo: &SystemTopology,
+    model: &TransferModel,
+    buffer: BufferPlacement,
+    shards: &[(&[RankId], u64)],
+) -> ScatterSchedule {
+    let mut pool = SocketWorkerPool::new(SOCKETS);
+    let mut per_shard = Vec::with_capacity(shards.len());
+    let mut total_bytes = 0u64;
+    for &(ranks, bytes) in shards {
+        let seconds = model.parallel_seconds(topo, ranks, bytes, Direction::HostToPim, buffer);
+        let window = pool.schedule(home_socket(topo, ranks), 0.0, seconds);
+        per_shard.push(window);
+        total_bytes += bytes;
+    }
+    ScatterSchedule { per_shard, total_s: pool.drained(), total_bytes }
+}
+
+/// Modeled end-to-end rates of one placed fleet: per-shard matrix
+/// scatter of `shard_bytes` each, then an `x_bytes` broadcast tree.
+/// Returns `(scatter GB/s, tree GB/s, combined push+broadcast GB/s)` —
+/// the quantity the fig11 placement ablation gates and
+/// `rust/tests/plane_properties.rs` pins (one definition, both users).
+pub fn placement_rates(
+    topo: &SystemTopology,
+    model: &TransferModel,
+    placement: &super::policy::Placement,
+    shard_bytes: u64,
+    x_bytes: u64,
+) -> (f64, f64, f64) {
+    let specs: Vec<(&[RankId], u64)> =
+        placement.shards.iter().map(|s| (s.ranks.as_slice(), shard_bytes)).collect();
+    let scatter = plan_scatter(topo, model, placement.buffer, &specs);
+    let all: Vec<RankId> =
+        placement.shards.iter().flat_map(|s| s.ranks.iter().copied()).collect();
+    let tree =
+        super::tree::BroadcastTree::plan(topo, &all, x_bytes, &model.params, placement.buffer);
+    let tree_s = tree.total_seconds();
+    let tree_bytes = x_bytes * all.len() as u64;
+    let scatter_gbps = scatter.total_bytes as f64 / scatter.total_s / 1e9;
+    let tree_gbps = tree_bytes as f64 / tree_s / 1e9;
+    let combined =
+        (scatter.total_bytes + tree_bytes) as f64 / (scatter.total_s + tree_s) / 1e9;
+    (scatter_gbps, tree_gbps, combined)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfer::model::TransferModel;
+
+    #[test]
+    fn same_socket_serializes_cross_socket_overlaps() {
+        let mut pool = SocketWorkerPool::new(2);
+        let (s1, e1) = pool.schedule(0, 0.0, 2.0);
+        assert_eq!((s1, e1), (0.0, 2.0));
+        let (s2, e2) = pool.schedule(0, 0.0, 1.0);
+        assert_eq!((s2, e2), (2.0, 3.0), "same socket serializes");
+        let (s3, _) = pool.schedule(1, 0.0, 5.0);
+        assert_eq!(s3, 0.0, "other socket overlaps");
+        assert_eq!(pool.drained(), 5.0);
+        let (s4, _) = pool.schedule(1, 6.0, 1.0);
+        assert_eq!(s4, 6.0, "explicit dependency delays start");
+    }
+
+    #[test]
+    fn balanced_scatter_beats_packed() {
+        let topo = SystemTopology::pristine();
+        let m = TransferModel::default();
+        let bytes = 64u64 << 20;
+        // Packed: 4 shards × 2 ranks all on socket 0, one channel each
+        // pair, node-0 buffer — the Linear story.
+        let packed: Vec<Vec<RankId>> =
+            (0..4).map(|i| vec![2 * i as usize, 2 * i as usize + 1]).collect();
+        let packed_specs: Vec<(&[RankId], u64)> =
+            packed.iter().map(|r| (r.as_slice(), bytes)).collect();
+        let p = plan_scatter(&topo, &m, BufferPlacement::Node(0), &packed_specs);
+        // Balanced: alternate sockets, distinct channels, per-socket
+        // buffers — the NumaBalanced story.
+        let balanced: Vec<Vec<RankId>> = vec![
+            vec![0, 4],   // socket 0, channels 0,1
+            vec![20, 24], // socket 1, channels 0,1
+            vec![8, 12],  // socket 0, channels 2,3
+            vec![28, 32], // socket 1, channels 2,3
+        ];
+        let balanced_specs: Vec<(&[RankId], u64)> =
+            balanced.iter().map(|r| (r.as_slice(), bytes)).collect();
+        let b = plan_scatter(&topo, &m, BufferPlacement::PerSocket, &balanced_specs);
+        assert_eq!(p.total_bytes, b.total_bytes);
+        assert!(
+            b.gbps() > 1.8 * p.gbps(),
+            "balanced {} GB/s vs packed {} GB/s",
+            b.gbps(),
+            p.gbps()
+        );
+        // Cross-socket overlap: the balanced makespan is close to one
+        // socket's serial pair, not the 4-shard sum.
+        assert!(b.total_s < 0.6 * p.total_s);
+    }
+
+    #[test]
+    fn schedule_windows_are_consistent() {
+        let topo = SystemTopology::pristine();
+        let m = TransferModel::default();
+        let shards: Vec<Vec<RankId>> = vec![vec![0], vec![1], vec![20]];
+        let specs: Vec<(&[RankId], u64)> =
+            shards.iter().map(|r| (r.as_slice(), 1u64 << 20)).collect();
+        let s = plan_scatter(&topo, &m, BufferPlacement::Node(0), &specs);
+        assert_eq!(s.per_shard.len(), 3);
+        for &(start, end) in &s.per_shard {
+            assert!(end > start);
+            assert!(end <= s.total_s + 1e-15);
+        }
+        // Shards 0 and 1 share socket 0: second starts when first ends.
+        assert!((s.per_shard[1].0 - s.per_shard[0].1).abs() < 1e-15);
+        // Shard 2 is on socket 1: starts at 0.
+        assert_eq!(s.per_shard[2].0, 0.0);
+    }
+}

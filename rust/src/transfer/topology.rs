@@ -99,6 +99,14 @@ impl SystemTopology {
         self.faulty.contains(&dpu)
     }
 
+    /// Number of CPU sockets (NUMA nodes). The machine model is
+    /// currently the paper's dual-socket server; code that loops
+    /// `0..topo.n_sockets()` (the generalized balanced allocator, the
+    /// plane's placement policies) stays correct if that ever widens.
+    pub fn n_sockets(&self) -> usize {
+        SOCKETS
+    }
+
     /// Usable DPU count.
     pub fn usable_dpus(&self) -> usize {
         TOTAL_DPUS - self.faulty.len()

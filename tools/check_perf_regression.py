@@ -1,32 +1,38 @@
 #!/usr/bin/env python3
-"""CI perf-regression gate over BENCH_perf.json (schema v2).
+"""CI perf-regression gate over schema-v2 bench reports.
 
-Compares the per-workload *modeled cycles* of a fresh bench run against
-the committed baseline and fails on regressions beyond the threshold.
-Modeled cycles are deterministic (unlike host Minstr/s), so the gate is
-stable on shared CI runners — but only when both files were produced at
-the same workload sizes (CI runs both under PERF_SMOKE=1). Since the
-tiered execution engine, modeled cycles are also execution-tier
-invariant, so CI gates each tier's run against one shared baseline —
-a tier whose cycle model drifts fails here even before the Rust
-differential tests run.
+Compares the deterministic per-workload metrics of a fresh bench run
+against the committed baseline and fails on regressions beyond the
+threshold. Two metric kinds are gated, with opposite directions:
+
+  * ``modeled_cycles`` — modeled DPU cycles (perf_simulator rows):
+    deterministic, *higher is worse*;
+  * ``rate`` — modeled GB/s or req/s (fig11_transfer placement rows,
+    the sharded-serving rows): deterministic, *lower is worse*.
+
+Host Minstr/s is never gated (machine-dependent). Both files must be
+produced at the same workload sizes (CI runs both under PERF_SMOKE=1
+where applicable). Since the tiered execution engine, modeled cycles
+and modeled rates are also execution-tier invariant, so CI gates each
+tier's run against one shared baseline — a tier whose model drifts
+fails here even before the Rust differential tests run.
 
 Usage:
     check_perf_regression.py BASELINE.json FRESH.json [--threshold 0.10]
     check_perf_regression.py BASELINE.json FRESH.json --arm-bootstrap
 
 Failure modes (exit 1) — the gate *fails*, never silently skips:
-  * the fresh run is not schema v2 or carries no modeled_cycles rows;
-  * a workload present in the baseline is missing from the fresh run
-    (renamed or dropped bench cases must update the baseline in the
+  * the fresh run is not schema v2 or carries no gated metrics;
+  * a workload metric present in the baseline is missing from the fresh
+    run (renamed or dropped bench cases must update the baseline in the
     same change, otherwise their protection silently disarms);
-  * any workload regressed more than the threshold;
+  * any workload metric regressed more than the threshold;
   * the baseline is still a bootstrap placeholder and --arm-bootstrap
     was not given.
 
 --arm-bootstrap: if (and only if) the baseline is a bootstrap
 placeholder (or missing/empty), write a normalized baseline — workload
-names + modeled_cycles only, host-dependent throughput dropped — to the
+names + gated metrics only, host-dependent throughput dropped — to the
 baseline path from the fresh run, print it, and exit 0. CI runs this
 on a *scratch copy* of the committed placeholder, after (and
 independently of) the gate: the gate itself always compares against
@@ -34,7 +40,7 @@ the committed file — failing loudly while it is still a placeholder —
 and the printed armed baseline is what a maintainer commits to turn
 the gate green and permanent. CI additionally cross-checks the
 stepped/batched tier runs against the same job's superblock JSON
-(tier-invariant modeled cycles, near-zero threshold), which needs no
+(tier-invariant metrics, near-zero threshold), which needs no
 committed baseline at all. Once the committed baseline is armed the
 flag is a no-op.
 """
@@ -43,12 +49,23 @@ import argparse
 import json
 import sys
 
+# Gated metrics and their regression direction: +1 = higher is worse
+# (costs), -1 = lower is worse (rates).
+METRICS = {
+    "modeled_cycles": 1,
+    "rate": -1,
+}
+
 
 def workloads(doc):
+    """name -> {metric: value} for every gated metric a row carries."""
     out = {}
     for name, rec in (doc.get("workloads") or {}).items():
-        if isinstance(rec, dict) and "modeled_cycles" in rec:
-            out[name] = rec["modeled_cycles"]
+        if not isinstance(rec, dict):
+            continue
+        metrics = {k: rec[k] for k in METRICS if k in rec}
+        if metrics:
+            out[name] = metrics
     return out
 
 
@@ -67,15 +84,17 @@ def is_bootstrap(doc):
 def arm_baseline(path, fresh_doc):
     armed = {
         "schema_version": 2,
-        "note": ("Armed from a fresh PERF_SMOKE run (tools/check_perf_regression.py "
-                 "--arm-bootstrap). Workload names + modeled_cycles only: cycles are "
-                 "deterministic and tier/worker/machine-invariant; host Minstr/s is "
-                 "intentionally dropped. Refresh by re-running --arm-bootstrap on a "
-                 "bootstrap placeholder, or by editing alongside any bench rename."),
+        "note": ("Armed from a fresh run (tools/check_perf_regression.py "
+                 "--arm-bootstrap). Workload names + gated metrics only "
+                 "(modeled_cycles, rate): both are deterministic and "
+                 "tier/worker/machine-invariant; host Minstr/s is "
+                 "intentionally dropped. Refresh by re-running --arm-bootstrap "
+                 "on a bootstrap placeholder, or by editing alongside any "
+                 "bench rename."),
         "meta": fresh_doc.get("meta", {}),
         "workloads": {
-            name: {"modeled_cycles": cycles}
-            for name, cycles in workloads(fresh_doc).items()
+            name: dict(metrics)
+            for name, metrics in workloads(fresh_doc).items()
         },
     }
     with open(path, "w") as f:
@@ -84,20 +103,63 @@ def arm_baseline(path, fresh_doc):
     return armed
 
 
+def compare(base, fresh, threshold, exact):
+    """Diff two workloads() maps.
+
+    Returns (regressions, improvements, missing, lines): the first three
+    are lists of human-readable row identifiers, `lines` the full
+    per-metric report. A regression is drift in the metric's *worse*
+    direction beyond `threshold`; with `exact`, improvements beyond the
+    threshold are regressions too (invariance mode).
+    """
+    regressions, improvements, missing, lines = [], [], [], []
+    for name, base_metrics in sorted(base.items()):
+        fresh_metrics = fresh.get(name)
+        for metric, want in sorted(base_metrics.items()):
+            label = f"{name} [{metric}]"
+            got = None if fresh_metrics is None else fresh_metrics.get(metric)
+            if got is None:
+                missing.append(label)
+                lines.append(f"  {'missing':>10}  {label}: in baseline but not in fresh run")
+                continue
+            rel = (got - want) / want if want else 0.0
+            worse = METRICS[metric] * rel  # positive == worse
+            marker = "ok"
+            if worse > threshold:
+                regressions.append(label)
+                marker = "REGRESSION"
+            elif worse < -threshold:
+                if exact:
+                    # Invariance mode: drift in EITHER direction is broken.
+                    regressions.append(label)
+                    marker = "DIVERGENCE"
+                else:
+                    improvements.append(label)
+                    marker = "improved"
+            lines.append(f"  {marker:>10}  {label}: {want} -> {got} ({rel:+.1%})")
+    for name, fresh_metrics in sorted(fresh.items()):
+        for metric in sorted(fresh_metrics):
+            if name not in base or metric not in base[name]:
+                lines.append(
+                    f"  {'new':>10}  {name} [{metric}]: {fresh_metrics[metric]} "
+                    "(not in baseline)")
+    return regressions, improvements, missing, lines
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline")
     ap.add_argument("fresh")
     ap.add_argument("--threshold", type=float, default=0.10,
-                    help="allowed fractional cycle regression (default 10%%)")
+                    help="allowed fractional regression (default 10%%)")
     ap.add_argument("--exact", action="store_true",
                     help="fail on divergence in EITHER direction beyond the "
-                         "threshold (cycle *improvements* included) — the "
-                         "cross-tier consistency mode, where modeled cycles "
+                         "threshold (improvements included) — the cross-tier "
+                         "consistency mode, where the deterministic metrics "
                          "must be invariant, not merely non-regressing")
     ap.add_argument("--arm-bootstrap", action="store_true",
                     help="if the baseline is a bootstrap placeholder, replace it "
-                         "with the fresh run's modeled cycles and exit 0")
+                         "with the fresh run's gated metrics and exit 0")
     args = ap.parse_args()
 
     # Only the baseline may legitimately be absent (bootstrap case);
@@ -107,14 +169,14 @@ def main():
             fresh_doc = json.load(f)
     except FileNotFoundError:
         print(f"FAIL: fresh report {args.fresh} does not exist — run the "
-              "perf_simulator bench first (or fix the path)")
+              "producing bench first (or fix the path)")
         return 1
     fresh = workloads(fresh_doc)
     if fresh_doc.get("schema_version") != 2:
         print(f"FAIL: {args.fresh} is not schema_version 2")
         return 1
     if not fresh:
-        print(f"FAIL: {args.fresh} carries no modeled_cycles workloads")
+        print(f"FAIL: {args.fresh} carries no gated workload metrics")
         return 1
 
     base_doc = load(args.baseline)
@@ -133,55 +195,35 @@ def main():
     base = workloads(base_doc)
     if is_bootstrap(base_doc):
         print(f"FAIL: baseline {args.baseline} is a bootstrap placeholder — the gate "
-              "is disarmed. Run a full PERF_SMOKE bench and arm it:\n"
+              "is disarmed. Run the producing bench and arm it:\n"
               f"  python3 tools/check_perf_regression.py {args.baseline} {args.fresh} "
               "--arm-bootstrap\nthen commit the baseline. Fresh values were:")
         print(json.dumps(fresh_doc, indent=2))
         return 1
 
-    regressions, improvements, missing = [], [], []
-    for name, want in sorted(base.items()):
-        got = fresh.get(name)
-        if got is None:
-            missing.append(name)
-            continue
-        rel = (got - want) / want if want else 0.0
-        marker = "ok"
-        if rel > args.threshold:
-            regressions.append((name, want, got, rel))
-            marker = "REGRESSION"
-        elif rel < -args.threshold:
-            if args.exact:
-                # Invariance mode: a tier modeling *fewer* cycles than
-                # the reference is just as broken as one modeling more.
-                regressions.append((name, want, got, rel))
-                marker = "DIVERGENCE"
-            else:
-                improvements.append((name, want, got, rel))
-                marker = "improved"
-        print(f"  {marker:>10}  {name}: {want} -> {got} ({rel:+.1%})")
-
-    for name in fresh:
-        if name not in base:
-            print(f"  {'new':>10}  {name}: {fresh[name]} (not in baseline)")
-    for name in missing:
-        print(f"  {'missing':>10}  {name}: in baseline but not in fresh run")
+    regressions, improvements, missing, lines = compare(
+        base, fresh, args.threshold, args.exact)
+    for line in lines:
+        print(line)
 
     if improvements:
-        print(f"NOTE: {len(improvements)} workload(s) improved past the threshold — "
-              f"refresh {args.baseline} to lock in the gains.")
+        print(f"NOTE: {len(improvements)} workload metric(s) improved past the "
+              f"threshold — refresh {args.baseline} to lock in the gains.")
     if missing:
-        print(f"FAIL: {len(missing)} gated workload(s) vanished from the fresh run — "
-              f"renamed or dropped bench cases must update {args.baseline} in the "
-              "same change, otherwise their regression protection silently disarms.")
+        print(f"FAIL: {len(missing)} gated workload metric(s) vanished from the fresh "
+              f"run — renamed or dropped bench cases must update {args.baseline} in "
+              "the same change, otherwise their regression protection silently "
+              "disarms.")
     if regressions:
         verb = "diverged" if args.exact else "regressed"
-        print(f"FAIL: {len(regressions)} workload(s) {verb} more than "
-              f"{args.threshold:.0%} in modeled cycles.")
+        print(f"FAIL: {len(regressions)} workload metric(s) {verb} more than "
+              f"{args.threshold:.0%}.")
     if regressions or missing:
         return 1
-    print("PASS: no modeled-cycle regression beyond "
-          f"{args.threshold:.0%} across {len(base)} gated workload(s).")
+    n_metrics = sum(len(m) for m in base.values())
+    print("PASS: no regression beyond "
+          f"{args.threshold:.0%} across {n_metrics} gated metric(s) "
+          f"on {len(base)} workload(s).")
     return 0
 
 

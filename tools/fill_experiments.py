@@ -2,17 +2,26 @@
 """Rewrite the `_pending_` cells of EXPERIMENTS.md from measured bench
 output, so numbers land mechanically instead of by hand.
 
-Two sources, both optional:
+Three sources, all optional:
 
   --perf BENCH_perf.json      schema-v2 report written by
                               `cargo bench --bench perf_simulator`.
                               Fills §Perf tables: any markdown table row
                               whose first cell names a JSON workload
                               (backticks ignored) gets its `Minstr/s`
-                              column filled with `minstr_per_s` and its
+                              column filled with `minstr_per_s`, its
                               `modeled cycles` column with
                               `modeled_cycles` (aggregate rows without a
-                              cycle count get an em dash).
+                              cycle count get an em dash), and any
+                              `GB/s` / `req/s` / `rate` column with the
+                              row's `rate` field.
+
+  --transfer BENCH_transfer.json
+                              schema-v2 report written by
+                              `cargo bench --bench fig11_transfer`
+                              (deterministic modeled rates). Same table
+                              filling rules as --perf — used for the
+                              §Placement ablation tables.
 
   --ablation FILE             captured stdout of
                               `cargo bench --bench pass_ablation`, which
@@ -25,9 +34,10 @@ Two sources, both optional:
 
 Usage:
     cargo bench --bench perf_simulator
+    cargo bench --bench fig11_transfer
     cargo bench --bench pass_ablation | tee pass_ablation.out
     python3 tools/fill_experiments.py --perf BENCH_perf.json \
-        --ablation pass_ablation.out
+        --transfer BENCH_transfer.json --ablation pass_ablation.out
 
 Idempotent: already-filled cells are overwritten with the new
 measurement (the log's contract is "regenerated, never hand-edited");
@@ -98,6 +108,10 @@ def fill_perf(lines, perf_doc):
                 c = rec.get("modeled_cycles")
                 cells[j] = str(c) if c is not None else DASH
                 changed = True
+            elif "gb/s" in col or "req/s" in col or col == "rate":
+                r = rec.get("rate")
+                cells[j] = f"{r:.2f}" if r is not None else DASH
+                changed = True
         if changed:
             lines[i] = fmt_row(cells)
             filled += 1
@@ -148,24 +162,27 @@ def fill_ablation(lines, rows):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--perf", help="BENCH_perf.json (schema v2)")
+    ap.add_argument("--transfer", help="BENCH_transfer.json (schema v2, modeled rates)")
     ap.add_argument("--ablation", help="captured stdout of the pass_ablation bench")
     ap.add_argument("--experiments", default="EXPERIMENTS.md")
     args = ap.parse_args()
-    if not args.perf and not args.ablation:
-        ap.error("give at least one of --perf / --ablation")
+    if not args.perf and not args.transfer and not args.ablation:
+        ap.error("give at least one of --perf / --transfer / --ablation")
 
     with open(args.experiments) as f:
         lines = f.read().splitlines()
 
     total = 0
-    if args.perf:
-        with open(args.perf) as f:
+    for label, path in [("§Perf", args.perf), ("§Placement", args.transfer)]:
+        if not path:
+            continue
+        with open(path) as f:
             doc = json.load(f)
         if doc.get("schema_version") != 2:
-            print(f"FAIL: {args.perf} is not schema_version 2")
+            print(f"FAIL: {path} is not schema_version 2")
             return 1
         n = fill_perf(lines, doc)
-        print(f"§Perf: filled {n} row(s) from {args.perf}")
+        print(f"{label}: filled {n} row(s) from {path}")
         total += n
     if args.ablation:
         with open(args.ablation) as f:

@@ -1,0 +1,194 @@
+"""Self-checks for the CI tooling (run: python3 -m unittest discover -s tools).
+
+These pin the behaviours the Rust-side gates depend on — regression
+direction per metric, bootstrap handling, arming, and the EXPERIMENTS.md
+section filler — against synthetic fixtures, so a tooling regression
+fails CI before it can mask a perf regression.
+"""
+
+import json
+import os
+import tempfile
+import unittest
+
+import check_perf_regression as cpr
+import fill_experiments as fe
+
+
+def doc(workloads, schema=2, **extra):
+    d = {"schema_version": schema, "workloads": workloads}
+    d.update(extra)
+    return d
+
+
+class WorkloadExtraction(unittest.TestCase):
+    def test_extracts_both_metrics_and_skips_ungated_rows(self):
+        w = cpr.workloads(doc({
+            "a": {"minstr_per_s": 12.0, "modeled_cycles": 100},
+            "b": {"minstr_per_s": 3.0},                      # host-only: not gated
+            "c": {"rate": 21.5},
+            "d": {"modeled_cycles": 7, "rate": 2.0},
+        }))
+        self.assertEqual(w, {
+            "a": {"modeled_cycles": 100},
+            "c": {"rate": 21.5},
+            "d": {"modeled_cycles": 7, "rate": 2.0},
+        })
+
+    def test_bootstrap_detection(self):
+        self.assertTrue(cpr.is_bootstrap({"bootstrap": True, "workloads": {}}))
+        self.assertTrue(cpr.is_bootstrap(doc({})))
+        self.assertTrue(cpr.is_bootstrap(doc({"a": {"minstr_per_s": 1.0}})))
+        self.assertFalse(cpr.is_bootstrap(doc({"a": {"modeled_cycles": 5}})))
+        self.assertFalse(cpr.is_bootstrap(doc({"a": {"rate": 5.0}})))
+
+
+class Compare(unittest.TestCase):
+    def run_compare(self, base, fresh, threshold=0.10, exact=False):
+        return cpr.compare(cpr.workloads(doc(base)), cpr.workloads(doc(fresh)),
+                           threshold, exact)
+
+    def test_cycle_increase_is_a_regression(self):
+        reg, imp, miss, _ = self.run_compare(
+            {"w": {"modeled_cycles": 100}}, {"w": {"modeled_cycles": 120}})
+        self.assertEqual(reg, ["w [modeled_cycles]"])
+        self.assertEqual((imp, miss), ([], []))
+
+    def test_cycle_decrease_is_an_improvement(self):
+        reg, imp, _, _ = self.run_compare(
+            {"w": {"modeled_cycles": 100}}, {"w": {"modeled_cycles": 80}})
+        self.assertEqual(reg, [])
+        self.assertEqual(imp, ["w [modeled_cycles]"])
+
+    def test_rate_direction_is_inverted(self):
+        # A rate DROP is the regression; a rate gain is the improvement.
+        reg, imp, _, _ = self.run_compare(
+            {"w": {"rate": 20.0}}, {"w": {"rate": 15.0}})
+        self.assertEqual(reg, ["w [rate]"])
+        reg, imp, _, _ = self.run_compare(
+            {"w": {"rate": 20.0}}, {"w": {"rate": 25.0}})
+        self.assertEqual(reg, [])
+        self.assertEqual(imp, ["w [rate]"])
+
+    def test_within_threshold_is_ok(self):
+        reg, imp, miss, _ = self.run_compare(
+            {"w": {"modeled_cycles": 100, "rate": 10.0}},
+            {"w": {"modeled_cycles": 105, "rate": 9.6}})
+        self.assertEqual((reg, imp, miss), ([], [], []))
+
+    def test_exact_mode_fails_improvements_too(self):
+        reg, imp, _, _ = self.run_compare(
+            {"w": {"modeled_cycles": 100}}, {"w": {"modeled_cycles": 50}},
+            threshold=0.0001, exact=True)
+        self.assertEqual(reg, ["w [modeled_cycles]"])
+        self.assertEqual(imp, [])
+
+    def test_missing_metric_and_missing_workload_are_flagged(self):
+        reg, imp, miss, _ = self.run_compare(
+            {"w": {"modeled_cycles": 100, "rate": 5.0}, "gone": {"rate": 1.0}},
+            {"w": {"modeled_cycles": 100}})
+        self.assertEqual(reg, [])
+        self.assertEqual(sorted(miss), ["gone [rate]", "w [rate]"])
+
+    def test_new_rows_are_reported_not_failed(self):
+        reg, imp, miss, lines = self.run_compare(
+            {"w": {"modeled_cycles": 100}},
+            {"w": {"modeled_cycles": 100}, "extra": {"rate": 3.0}})
+        self.assertEqual((reg, imp, miss), ([], [], []))
+        self.assertTrue(any("new" in l and "extra" in l for l in lines))
+
+
+class ArmBaseline(unittest.TestCase):
+    def test_arming_keeps_both_gated_metrics_drops_minstr(self):
+        fresh = doc({
+            "cyc": {"minstr_per_s": 9.0, "modeled_cycles": 42, "tier": "stepped"},
+            "rate": {"minstr_per_s": 0.0, "rate": 21.5},
+        }, meta={"smoke": True})
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "baseline.json")
+            armed = cpr.arm_baseline(path, fresh)
+            with open(path) as f:
+                on_disk = json.load(f)
+        self.assertEqual(armed, on_disk)
+        self.assertEqual(on_disk["workloads"], {
+            "cyc": {"modeled_cycles": 42},
+            "rate": {"rate": 21.5},
+        })
+        self.assertEqual(on_disk["meta"], {"smoke": True})
+        self.assertFalse(cpr.is_bootstrap(on_disk))
+
+
+class FillExperiments(unittest.TestCase):
+    PERF = doc({
+        "INT8 ADD": {"minstr_per_s": 12.345, "modeled_cycles": 999},
+        "aggregate": {"minstr_per_s": 5.0},
+        "sharded GEMV modeled req/s [placement=linear]":
+            {"minstr_per_s": 0.0, "rate": 123.456},
+    })
+    TRANSFER = doc({
+        "plane scatter 4x2 numa-balanced (GB/s)": {"minstr_per_s": 0.0, "rate": 21.987},
+    })
+
+    def test_fills_minstr_cycles_and_req_s(self):
+        lines = [
+            "| workload | Minstr/s | modeled cycles |",
+            "|---|---|---|",
+            "| INT8 ADD | _pending_ | _pending_ |",
+            "| aggregate | _pending_ | _pending_ |",
+            "| unknown row | _pending_ | _pending_ |",
+            "",
+            "| workload | req/s |",
+            "|---|---|",
+            "| sharded GEMV modeled req/s [placement=linear] | _pending_ |",
+        ]
+        n = fe.fill_perf(lines, self.PERF)
+        self.assertEqual(n, 3)
+        self.assertEqual(lines[2], "| INT8 ADD | 12.3 | 999 |")
+        self.assertEqual(lines[3], "| aggregate | 5.0 | — |")
+        self.assertIn("_pending_", lines[4], "unknown rows stay untouched")
+        self.assertEqual(
+            lines[8],
+            "| sharded GEMV modeled req/s [placement=linear] | 123.46 |")
+
+    def test_fills_gbps_columns_from_rate(self):
+        lines = [
+            "| workload | GB/s |",
+            "|---|---|",
+            "| `plane scatter 4x2 numa-balanced (GB/s)` | _pending_ |",
+        ]
+        n = fe.fill_perf(lines, self.TRANSFER)
+        self.assertEqual(n, 1)
+        self.assertEqual(
+            lines[2], "| `plane scatter 4x2 numa-balanced (GB/s)` | 21.99 |")
+
+    def test_ablation_parser_reads_marked_table_only(self):
+        out = "\n".join([
+            "noise | not | a | table row before the marker",
+            "| workload | naive | all-on |",
+            "markdown (paste into EXPERIMENTS.md §Pass ablation):",
+            "| workload | naive | all-on |",
+            "|---|---|---|",
+            "| BSDP dot, 16T | 1000 | 800 |",
+        ])
+        rows = fe.ablation_rows(out)
+        self.assertEqual(list(rows), ["BSDP dot, 16T"])
+        self.assertEqual(rows["BSDP dot, 16T"], ["BSDP dot, 16T", "1000", "800"])
+
+    def test_fill_ablation_respects_section_and_column_count(self):
+        lines = [
+            "## §Pass ablation",
+            "| workload | naive | all-on |",
+            "|---|---|---|",
+            "| BSDP dot, 16T | _pending_ | _pending_ |",
+            "## other section",
+            "| BSDP dot, 16T | _pending_ | _pending_ |",
+        ]
+        rows = {"BSDP dot, 16T": ["BSDP dot, 16T", "1000", "800"]}
+        n = fe.fill_ablation(lines, rows)
+        self.assertEqual(n, 1)
+        self.assertEqual(lines[3], "| BSDP dot, 16T | 1000 | 800 |")
+        self.assertIn("_pending_", lines[5], "rows outside §Pass ablation untouched")
+
+
+if __name__ == "__main__":
+    unittest.main()
