@@ -24,6 +24,7 @@ use upmem_unleashed::kernels::arith::{
 };
 use upmem_unleashed::kernels::bsdp::{run_dot_microbench_cfg, DotVariant};
 use upmem_unleashed::kernels::gemv::{run_gemv_dpu_with_cfg, GemvShape, GemvVariant};
+use upmem_unleashed::kernels::reduce::run_reduce_cfg;
 use upmem_unleashed::opt::{optimize, Pass, PassConfig, ALL_PASSES};
 use upmem_unleashed::util::rng::Rng;
 
@@ -32,6 +33,10 @@ enum Workload {
     Arith(Spec, usize, u32),
     Dot(DotVariant, usize, usize),
     Gemv(GemvVariant, usize, GemvShape),
+    /// Framework-built PrIM reduction (tasklets, elements): the
+    /// framework's chunk loops carry the unroll markers and dbuf
+    /// streams, so the same pass matrix applies to generated code.
+    Reduce(usize, usize),
 }
 
 impl Workload {
@@ -60,6 +65,11 @@ impl Workload {
                 };
                 run_gemv_dpu_with_cfg(v, cfg, shape, t, &m, &x).expect("verifies").1.cycles
             }
+            Workload::Reduce(t, n) => {
+                let mut rng = Rng::new(42);
+                let data = rng.i32_vec(n);
+                run_reduce_cfg(cfg, t, &data).expect("verifies").launch.cycles
+            }
         }
     }
 }
@@ -87,6 +97,7 @@ fn main() {
                 Workload::Arith(Spec::add(DType::I32), 16, arith_bytes),
             ),
             ("BSDP dot, 16T", Workload::Dot(DotVariant::Bsdp, 16, dot_elems)),
+            ("PrIM reduce (framework), 16T", Workload::Reduce(16, dot_elems)),
             (
                 "INT8 GEMV opt, 8T",
                 Workload::Gemv(GemvVariant::I8Opt, 8, GemvShape { rows: gemv_rows, cols: 2048 }),

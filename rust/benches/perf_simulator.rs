@@ -27,7 +27,7 @@ use upmem_unleashed::host::{AllocPolicy, PimSystem};
 use upmem_unleashed::kernels::arith::{run_microbench_with, DType, MulImpl, Spec, Unroll};
 use upmem_unleashed::kernels::bsdp::{run_dot_microbench_with, DotVariant};
 use upmem_unleashed::kernels::gemv::{run_gemv_dpu_with_cfg, GemvShape, GemvVariant};
-use upmem_unleashed::kernels::KernelScratch;
+use upmem_unleashed::kernels::{histogram, reduce, scan, select, KernelScratch};
 use upmem_unleashed::opt::PassConfig;
 use upmem_unleashed::plane::{
     Linear, NumaBalanced, PlacementPolicy, ShardMap, ShardedGemvCoordinator,
@@ -168,6 +168,35 @@ fn main() {
             run_microbench_with(&mut scr, Spec::add(DType::I8), 1, add_bytes, 42).unwrap().launch
         });
         p.record("single tasklet (scheduler idle-skip path)", o.instrs, s, Some(o.cycles));
+
+        // PrIM workloads built on the kernel framework
+        // (rust/src/framework/): deterministic modeled cycles for the
+        // regression gate, Minstr/s for the throughput trajectory. The
+        // runners verify every output against cpu_ref::prim, so each
+        // row is also a correctness check at bench scale.
+        let prim_elems: usize = if smoke { 16 * 1024 } else { 128 * 1024 };
+        let mut prim_rng = Rng::new(2026);
+        let prim_i32 = prim_rng.i32_vec(prim_elems);
+        let prim_u8 = prim_rng.u8_vec(prim_elems * 4);
+        let prim_cfg = PassConfig::all();
+        let (o, s) = timed(|| {
+            reduce::run_reduce_cfg_with(&mut scr, &prim_cfg, 16, &prim_i32).unwrap().launch
+        });
+        p.record("PrIM reduce (framework), 16 tasklets", o.instrs, s, Some(o.cycles));
+        let (o, s) = timed(|| {
+            histogram::run_histogram_cfg_with(&mut scr, &prim_cfg, 16, 256, &prim_u8)
+                .unwrap()
+                .launch
+        });
+        p.record("PrIM histogram 256 bins (framework), 16 tasklets", o.instrs, s, Some(o.cycles));
+        let (o, s) = timed(|| {
+            scan::run_scan_cfg_with(&mut scr, &prim_cfg, 16, &prim_i32).unwrap().launch
+        });
+        p.record("PrIM scan (framework), 16 tasklets", o.instrs, s, Some(o.cycles));
+        let (o, s) = timed(|| {
+            select::run_select_cfg_with(&mut scr, &prim_cfg, 16, &prim_i32).unwrap().launch
+        });
+        p.record("PrIM select (framework), 16 tasklets", o.instrs, s, Some(o.cycles));
 
         // Single-DPU GEMV per variant (+ the all-passes ablation point):
         // deterministic modeled cycles for the regression gate.

@@ -15,6 +15,8 @@
 //!    comparison reproduces the paper's ratios regardless of the
 //!    machine this repository runs on.
 
+pub mod prim;
+
 use std::time::Instant;
 
 /// Peak INT8 GEMV throughput of the paper's dual-socket Kunpeng 920

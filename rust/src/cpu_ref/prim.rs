@@ -1,0 +1,71 @@
+//! Host references for the PrIM-style framework workloads (reduction,
+//! histogram, prefix scan, select). These are the golden functions the
+//! differential tests compare every exec tier against; all integer
+//! arithmetic wraps, matching the DPU's 32-bit ALU.
+
+/// Wrapping sum of an i32 array (the vector-reduction reference).
+pub fn reduce_i32(data: &[i32]) -> i32 {
+    data.iter().fold(0i32, |a, &v| a.wrapping_add(v))
+}
+
+/// Byte histogram with `bins` buckets (power of two, ≤ 256); value `v`
+/// lands in bucket `v >> (8 - log2(bins))`, the PrIM binning rule.
+pub fn histogram_u8(data: &[u8], bins: usize) -> Vec<u32> {
+    assert!(bins.is_power_of_two() && (1..=256).contains(&bins));
+    let shift = 8 - bins.trailing_zeros();
+    let mut h = vec![0u32; bins];
+    for &v in data {
+        h[(v >> shift) as usize] += 1;
+    }
+    h
+}
+
+/// Inclusive prefix scan (wrapping adds): `out[i] = Σ data[0..=i]`.
+pub fn scan_i32(data: &[i32]) -> Vec<i32> {
+    let mut acc = 0i32;
+    data.iter()
+        .map(|&v| {
+            acc = acc.wrapping_add(v);
+            acc
+        })
+        .collect()
+}
+
+/// Stream compaction: keep strictly positive values, preserving order.
+pub fn select_pos(data: &[i32]) -> Vec<i32> {
+    data.iter().copied().filter(|&v| v > 0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_wraps() {
+        assert_eq!(reduce_i32(&[]), 0);
+        assert_eq!(reduce_i32(&[i32::MAX, 1]), i32::MIN);
+        assert_eq!(reduce_i32(&[1, 2, 3, 4]), 10);
+    }
+
+    #[test]
+    fn histogram_bins_by_high_bits() {
+        let h = histogram_u8(&[0, 1, 255, 128, 64], 4);
+        assert_eq!(h, vec![2, 1, 1, 1]);
+        let h256 = histogram_u8(&[7, 7, 7], 256);
+        assert_eq!(h256[7], 3);
+        assert_eq!(h256.iter().sum::<u32>(), 3);
+    }
+
+    #[test]
+    fn scan_is_inclusive_and_wrapping() {
+        assert_eq!(scan_i32(&[]), Vec::<i32>::new());
+        assert_eq!(scan_i32(&[1, 2, 3]), vec![1, 3, 6]);
+        assert_eq!(scan_i32(&[i32::MAX, 1, 1]), vec![i32::MAX, i32::MIN, i32::MIN + 1]);
+    }
+
+    #[test]
+    fn select_keeps_order() {
+        assert_eq!(select_pos(&[3, -1, 0, 7, -9, 2]), vec![3, 7, 2]);
+        assert_eq!(select_pos(&[-5, 0]), Vec::<i32>::new());
+    }
+}

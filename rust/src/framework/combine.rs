@@ -1,0 +1,74 @@
+//! Reduction hand-off scaffolds: per-tasklet partial publication, the
+//! barrier-synchronized binary fan-in tree, and the exclusive prefix of
+//! partials used by multi-phase kernels (scan).
+//!
+//! All tasklets execute every barrier in these sequences — the
+//! per-round guards skip only the combine *work*, never the
+//! synchronization — so the emitted handshakes are deadlock-free for
+//! any launched tasklet count 1..=16, including non-powers of two.
+
+use super::iter::regs;
+use super::RESULT_ADDR;
+use crate::dpu::builder::ProgramBuilder;
+use crate::dpu::isa::{AluOp, CmpCond, Reg, Src};
+use crate::kernels::{ARG_BASE, AUX_BASE};
+
+/// `aux[id] = ACC` — publish this tasklet's partial.
+pub fn emit_partial_writeback(pb: &mut ProgramBuilder) {
+    pb.move_(Reg(0), Src::Id4);
+    pb.add(Reg(0), Reg(0), AUX_BASE as i32);
+    pb.sw(Reg(0), 0, regs::ACC);
+}
+
+/// Binary fan-in over the published aux partials: after `log2(16)`
+/// barrier rounds, tasklet 0 holds the combined value in `ACC` and
+/// writes it to [`RESULT_ADDR`]. Round `s` merges `aux[id + s]` into
+/// tasklet `id` for `id % 2s == 0`; the launched tasklet count is
+/// reloaded from `fw_nr_tasklets` (distribution-independent), so
+/// orphan slots of non-power-of-two launches fold in on later rounds.
+pub fn emit_tree_combine(pb: &mut ProgramBuilder, op: AluOp, tag: &str) {
+    pb.barrier();
+    pb.move_(Reg(4), 0);
+    pb.lw(Reg(4), Reg(4), (ARG_BASE + 12) as i32);
+    for s in [1u32, 2, 4, 8] {
+        let skip = pb.new_label(&format!("{tag}_cmb{s}"));
+        pb.and(Reg(0), regs::ID, (2 * s - 1) as i32);
+        pb.jcmp(CmpCond::Neq, Reg(0), Src::Zero, skip);
+        pb.add(Reg(1), regs::ID, s as i32);
+        pb.jcmp(CmpCond::Geu, Reg(1), Src::Reg(Reg(4)), skip);
+        pb.lsl(Reg(1), Reg(1), 2);
+        pb.add(Reg(1), Reg(1), AUX_BASE as i32);
+        pb.lw(Reg(2), Reg(1), 0);
+        pb.alu(op, regs::ACC, regs::ACC, Src::Reg(Reg(2)));
+        pb.move_(Reg(3), Src::Id4);
+        pb.add(Reg(3), Reg(3), AUX_BASE as i32);
+        pb.sw(Reg(3), 0, regs::ACC);
+        pb.bind(skip);
+        pb.barrier();
+    }
+    let end = pb.new_label(&format!("{tag}_cmb_end"));
+    pb.jcmp(CmpCond::Neq, regs::ID, Src::Zero, end);
+    pb.move_(Reg(0), RESULT_ADDR as i32);
+    pb.sw(Reg(0), 0, regs::ACC);
+    pb.bind(end);
+}
+
+/// `dest = aux[0] + aux[1] + … + aux[id-1]` (exclusive prefix of the
+/// published partials, wrapping adds). Starts with a barrier so every
+/// partial is visible; the scan kernel uses this between its block-scan
+/// and fixup phases. `r0..=r2` are clobbered.
+pub fn emit_prefix_of_partials(pb: &mut ProgramBuilder, dest: Reg, tag: &str) {
+    pb.barrier();
+    pb.move_(dest, 0);
+    pb.move_(Reg(0), 0);
+    pb.move_(Reg(1), AUX_BASE as i32);
+    let done = pb.new_label(&format!("{tag}_pfx_done"));
+    let head = pb.here(&format!("{tag}_pfx"));
+    pb.jcmp(CmpCond::Geu, Reg(0), Src::Reg(regs::ID), done);
+    pb.lw(Reg(2), Reg(1), 0);
+    pb.add(dest, dest, Src::Reg(Reg(2)));
+    pb.add(Reg(1), Reg(1), 4);
+    pb.add(Reg(0), Reg(0), 1);
+    pb.jump(head);
+    pb.bind(done);
+}

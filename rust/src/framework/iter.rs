@@ -1,0 +1,333 @@
+//! Chunk-iteration scaffold emitter: frame addressing, tasklet
+//! distribution, MRAM↔WRAM staging (plain or double-buffered) and the
+//! per-element loops (unrollable full-chunk loop + dynamic tail loop).
+//!
+//! # Register convention
+//!
+//! The framework reserves `r9..=r22` ([`regs`]); kernel bodies own
+//! `r0..=r8` (`r0`/`r1` carry loaded input elements, `r2` carries the
+//! output element). `r23` stays free for the `__mulsi3` link register
+//! so bodies may call bounded-multiply routines.
+
+use super::{ChunkSpec, Dir, ElemCtx, ElemWidth, Dist, HookCtx, Hooks};
+use crate::dpu::builder::ProgramBuilder;
+use crate::dpu::isa::{CmpCond, Reg, Src};
+use crate::kernels::ARG_BASE;
+
+/// Registers the scaffold reserves. Bodies must not write any of
+/// these (except the `PERSIST*` pair when
+/// [`super::ChunkKernel::persist_regs`] is set, which hands them to the
+/// kernel).
+pub mod regs {
+    use crate::dpu::isa::Reg;
+
+    /// Stream-0 element pointer (also the loop-bound cursor).
+    pub const P0: Reg = Reg(9);
+    /// Stream-1 element pointer.
+    pub const P1: Reg = Reg(10);
+    /// Stream-2 element pointer.
+    pub const P2: Reg = Reg(11);
+    /// Element-loop end pointer (stream 0).
+    pub const PEND: Reg = Reg(12);
+    /// Current chunk index.
+    pub const IDX: Reg = Reg(13);
+    /// One-past-last chunk index for this tasklet.
+    pub const LIMIT: Reg = Reg(14);
+    /// Number of full chunks (`fw_n_full`).
+    pub const NFULL: Reg = Reg(15);
+    /// Elements in the partial tail chunk (`fw_tail`).
+    pub const TAIL: Reg = Reg(16);
+    /// Chunk-index stride (T for cyclic, 1 for blocked).
+    pub const STEP: Reg = Reg(17);
+    /// This tasklet's WRAM frame base.
+    pub const FRAME: Reg = Reg(18);
+    /// Reduction accumulator.
+    pub const ACC: Reg = Reg(19);
+    /// Tasklet id.
+    pub const ID: Reg = Reg(20);
+    /// First chunk-persistent kernel register.
+    pub const PERSIST0: Reg = Reg(21);
+    /// Second chunk-persistent kernel register.
+    pub const PERSIST1: Reg = Reg(22);
+    /// Ping/pong toggle (double-buffered builds; aliases `PERSIST0`,
+    /// which is why persistent kernels exclude double-buffering).
+    pub const TOG: Reg = Reg(21);
+    /// Next chunk index (double-buffered builds; aliases `PERSIST1`).
+    pub const NEXT: Reg = Reg(22);
+}
+
+/// Resolved WRAM placement of one stream within the per-tasklet frame.
+#[derive(Debug, Clone)]
+pub struct StreamLay {
+    pub ptr: Reg,
+    /// Frame-relative offset of the (first) staging buffer.
+    pub off: u32,
+    /// Staged bytes per chunk.
+    pub cbs: u32,
+    /// `log2(cbs)` — chunk addresses are computed by shift.
+    pub log2_cbs: u32,
+    pub elem: ElemWidth,
+    pub elem_bytes: u32,
+    pub dir: Dir,
+    pub mram_base: u32,
+    /// Has a second (ping/pong) buffer at `off + cbs`.
+    pub doubled: bool,
+}
+
+/// Resolved frame layout of a [`ChunkSpec`] for one build flavor.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub streams: Vec<StreamLay>,
+    pub frame_bytes: u32,
+    pub scratch_off: u32,
+}
+
+impl Layout {
+    pub fn of(spec: &ChunkSpec, dbuf: bool) -> Layout {
+        let ptrs = [regs::P0, regs::P1, regs::P2];
+        let mut off = 0;
+        let mut streams = Vec::new();
+        for (i, s) in spec.streams.iter().enumerate() {
+            let cbs = spec.chunk_bytes(i);
+            let doubled = dbuf && s.dir == Dir::In;
+            streams.push(StreamLay {
+                ptr: ptrs[i],
+                off,
+                cbs,
+                log2_cbs: cbs.trailing_zeros(),
+                elem: s.elem,
+                elem_bytes: s.elem.bytes(),
+                dir: s.dir,
+                mram_base: s.mram_base,
+                doubled,
+            });
+            off += cbs * if doubled { 2 } else { 1 };
+        }
+        Layout { streams, frame_bytes: off + spec.scratch_bytes, scratch_off: off }
+    }
+
+    fn inputs(&self) -> impl Iterator<Item = &StreamLay> {
+        self.streams.iter().filter(|s| s.dir != Dir::Out)
+    }
+
+    fn outputs(&self) -> impl Iterator<Item = &StreamLay> {
+        self.streams.iter().filter(|s| s.dir != Dir::In)
+    }
+}
+
+/// `FRAME = FRAME_BASE + id * frame_bytes`, by shift-add over the set
+/// bits of `frame_bytes` (no multiplier needed at tasklet startup).
+pub(crate) fn emit_frame_base(pb: &mut ProgramBuilder, frame_bytes: u32) {
+    use regs::{FRAME, ID};
+    pb.move_(ID, Src::Id);
+    pb.move_(FRAME, super::FRAME_BASE as i32);
+    for k in 0..16 {
+        if frame_bytes & (1 << k) != 0 {
+            pb.lsl(Reg(1), ID, k);
+            pb.add(FRAME, FRAME, Src::Reg(Reg(1)));
+        }
+    }
+}
+
+/// `dst = id * src` (id < 16), by conditional shift-adds over the four
+/// id bits. `t0`/`t1` are clobbered. Public so kernel hooks can reuse
+/// it (e.g. recomputing a blocked-region base in an epilogue).
+pub fn emit_id_times_reg(
+    pb: &mut ProgramBuilder,
+    dst: Reg,
+    src: Reg,
+    t0: Reg,
+    t1: Reg,
+    tag: &str,
+) {
+    pb.move_(dst, 0);
+    for k in 0..4 {
+        let skip = pb.new_label(&format!("{tag}_idmul{k}"));
+        pb.and(t0, regs::ID, 1i32 << k);
+        pb.jcmp(CmpCond::Eq, t0, Src::Zero, skip);
+        pb.lsl(t1, src, k);
+        pb.add(dst, dst, Src::Reg(t1));
+        pb.bind(skip);
+    }
+}
+
+/// Load the `fw_*` argument words and set up this tasklet's chunk
+/// range: `IDX` (first chunk), `LIMIT` (one past last), `STEP`.
+pub(crate) fn emit_dist(pb: &mut ProgramBuilder, dist: Dist, tag: &str) {
+    use regs::{IDX, LIMIT, NFULL, STEP, TAIL};
+    pb.move_(Reg(0), 0);
+    pb.lw(NFULL, Reg(0), (ARG_BASE + 4) as i32);
+    pb.lw(TAIL, Reg(0), (ARG_BASE + 8) as i32);
+    match dist {
+        Dist::Cyclic => {
+            pb.lw(LIMIT, Reg(0), ARG_BASE as i32);
+            pb.lw(STEP, Reg(0), (ARG_BASE + 12) as i32);
+            pb.move_(IDX, Src::Id);
+        }
+        Dist::Blocked => {
+            pb.lw(Reg(1), Reg(0), (ARG_BASE + 16) as i32);
+            emit_id_times_reg(pb, IDX, Reg(1), Reg(2), Reg(3), tag);
+            pb.add(LIMIT, IDX, Src::Reg(Reg(1)));
+            pb.lw(Reg(2), Reg(0), ARG_BASE as i32);
+            let ok = pb.new_label(&format!("{tag}_clamp"));
+            pb.jcmp(CmpCond::Leu, LIMIT, Src::Reg(Reg(2)), ok);
+            pb.move_(LIMIT, Src::Reg(Reg(2)));
+            pb.bind(ok);
+            pb.move_(STEP, 1);
+        }
+    }
+}
+
+/// The chunk loop proper: stage inputs (plain `ldma`, or
+/// `ldma_nb`/`dma_wait` ping/pong prefetch when `ctx.dbuf`), run the
+/// element loops, write outputs back, run the chunk epilogue, advance.
+pub(crate) fn emit_chunk_loop(
+    pb: &mut ProgramBuilder,
+    spec: &ChunkSpec,
+    lay: &Layout,
+    hooks: &mut Hooks,
+    ctx: &HookCtx,
+    tag: &str,
+) {
+    use regs::{FRAME, IDX, LIMIT, NEXT, STEP, TOG};
+    let done = pb.new_label(&format!("{tag}_done"));
+    pb.jcmp(CmpCond::Geu, IDX, Src::Reg(LIMIT), done);
+    if ctx.dbuf {
+        // Prefetch the first chunk into the ping half.
+        pb.move_(TOG, 0);
+        for s in lay.inputs() {
+            pb.lsl(Reg(8), IDX, s.log2_cbs as i32);
+            pb.add(Reg(8), Reg(8), s.mram_base as i32);
+            pb.add(Reg(7), FRAME, s.off as i32);
+            pb.ldma_nb(Reg(7), Reg(8), s.cbs);
+        }
+    }
+    let head = pb.here(&format!("{tag}_chunks"));
+    if ctx.dbuf {
+        pb.add(NEXT, IDX, Src::Reg(STEP));
+        pb.dma_wait();
+        let nopref = pb.new_label(&format!("{tag}_nopref"));
+        pb.jcmp(CmpCond::Geu, NEXT, Src::Reg(LIMIT), nopref);
+        pb.xor(Reg(6), TOG, 1);
+        for s in lay.inputs() {
+            pb.lsl(Reg(8), NEXT, s.log2_cbs as i32);
+            pb.add(Reg(8), Reg(8), s.mram_base as i32);
+            pb.lsl(Reg(5), Reg(6), s.log2_cbs as i32);
+            pb.add(Reg(7), FRAME, s.off as i32);
+            pb.add(Reg(7), Reg(7), Src::Reg(Reg(5)));
+            pb.ldma_nb(Reg(7), Reg(8), s.cbs);
+        }
+        pb.bind(nopref);
+    } else {
+        for s in lay.inputs() {
+            pb.lsl(Reg(8), IDX, s.log2_cbs as i32);
+            pb.add(Reg(8), Reg(8), s.mram_base as i32);
+            pb.add(Reg(7), FRAME, s.off as i32);
+            pb.ldma(Reg(7), Reg(8), s.cbs);
+        }
+    }
+    emit_elem_phase(pb, spec, lay, hooks, ctx, tag);
+    for s in lay.outputs() {
+        pb.add(Reg(7), FRAME, s.off as i32);
+        pb.lsl(Reg(8), IDX, s.log2_cbs as i32);
+        pb.add(Reg(8), Reg(8), s.mram_base as i32);
+        pb.sdma(Reg(7), Reg(8), s.cbs);
+    }
+    if let Some(ce) = hooks.chunk_epilogue.as_mut() {
+        ce(pb, ctx);
+    }
+    if ctx.dbuf {
+        pb.xor(TOG, TOG, 1);
+        pb.move_(IDX, Src::Reg(NEXT));
+    } else {
+        pb.add(IDX, IDX, Src::Reg(STEP));
+    }
+    pb.jcmp(CmpCond::Ltu, IDX, Src::Reg(LIMIT), head);
+    pb.bind(done);
+}
+
+/// Per-chunk element processing: pointer setup, full/tail dispatch,
+/// the unrollable full-chunk loop and the dynamic tail loop.
+fn emit_elem_phase(
+    pb: &mut ProgramBuilder,
+    spec: &ChunkSpec,
+    lay: &Layout,
+    hooks: &mut Hooks,
+    ctx: &HookCtx,
+    tag: &str,
+) {
+    use regs::{ACC, FRAME, IDX, NFULL, PEND, PERSIST0, PERSIST1, TAIL, TOG};
+    for s in &lay.streams {
+        pb.add(s.ptr, FRAME, s.off as i32);
+        if s.doubled {
+            pb.lsl(Reg(8), TOG, s.log2_cbs as i32);
+            pb.add(s.ptr, s.ptr, Src::Reg(Reg(8)));
+        }
+    }
+    let in_streams: Vec<&StreamLay> = lay.inputs().collect();
+    let out_stream: Option<&StreamLay> = lay.outputs().next();
+    let p0 = lay.streams[0].ptr;
+    let cbs0 = lay.streams[0].cbs;
+    let eb0 = lay.streams[0].elem_bytes;
+    let scratch_off = ctx.scratch_off;
+
+    // One element: load inputs, run the body, store the output.
+    let mut emit_iter = |pb: &mut ProgramBuilder, hooks: &mut Hooks, is_tail: bool| {
+        for (vi, s) in in_streams.iter().enumerate() {
+            pb.load(s.elem.load(), Reg(vi as u8), s.ptr, 0);
+        }
+        let ectx = ElemCtx {
+            inputs: [Reg(0), Reg(1)],
+            out: Reg(2),
+            acc: ACC,
+            frame: FRAME,
+            persist: [PERSIST0, PERSIST1],
+            scratch_off,
+            is_tail,
+        };
+        (hooks.body)(pb, &ectx);
+        if let Some(o) = out_stream {
+            pb.store(o.elem.store(), o.ptr, 0, Reg(2));
+        }
+    };
+
+    let tail_lbl = pb.new_label(&format!("{tag}_tail"));
+    let elem_done = pb.new_label(&format!("{tag}_edone"));
+    // Only the last chunk can be partial, so `IDX == NFULL` (it cannot
+    // exceed it) selects the dynamic tail loop.
+    pb.jcmp(CmpCond::Geu, IDX, Src::Reg(NFULL), tail_lbl);
+
+    pb.add(PEND, p0, cbs0 as i32);
+    if spec.unroll > 1 {
+        let (fh, lm) = pb.unrollable_loop(&format!("{tag}_full"), spec.chunk_elems, spec.unroll);
+        emit_iter(pb, hooks, false);
+        let inds: Vec<(Reg, i32)> =
+            lay.streams.iter().map(|s| (s.ptr, s.elem_bytes as i32)).collect();
+        pb.unrollable_latch(lm, fh, &inds, CmpCond::Ltu, p0, Src::Reg(PEND));
+    } else {
+        let fh = pb.here(&format!("{tag}_full"));
+        emit_iter(pb, hooks, false);
+        for s in &lay.streams {
+            pb.add(s.ptr, s.ptr, s.elem_bytes as i32);
+        }
+        pb.jcmp(CmpCond::Ltu, p0, Src::Reg(PEND), fh);
+    }
+    pb.jump(elem_done);
+
+    // Tail chunk: trip count is `fw_tail` (≥ 1 whenever this path is
+    // reached), unknown at build time, so the loop stays rolled.
+    pb.bind(tail_lbl);
+    if eb0 == 1 {
+        pb.add(PEND, p0, Src::Reg(TAIL));
+    } else {
+        pb.lsl(Reg(8), TAIL, eb0.trailing_zeros() as i32);
+        pb.add(PEND, p0, Src::Reg(Reg(8)));
+    }
+    let th = pb.here(&format!("{tag}_tailloop"));
+    emit_iter(pb, hooks, true);
+    for s in &lay.streams {
+        pb.add(s.ptr, s.ptr, s.elem_bytes as i32);
+    }
+    pb.jcmp(CmpCond::Ltu, p0, Src::Reg(PEND), th);
+    pb.bind(elem_done);
+}

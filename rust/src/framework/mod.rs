@@ -1,0 +1,607 @@
+//! SimplePIM-style kernel-construction framework.
+//!
+//! Every kernel the repo grew before this module (arith, BSDP, GEMV)
+//! is a hand-emitted [`ProgramBuilder`] stream: hundreds of bespoke
+//! lines per workload for the same scaffolding — tasklet distribution,
+//! MRAM-chunk iteration, WRAM staging, DMA double-buffering and
+//! barrier/handshake plumbing. This module generates that scaffolding
+//! from a declarative spec, the productivity layer SimplePIM (Chen et
+//! al., arXiv:2310.01893) builds for real UPMEM hardware:
+//!
+//! * [`ChunkSpec`] — *what* to iterate: up to three MRAM streams
+//!   ([`Stream`], zip-style multi-input), element width
+//!   ([`ElemWidth`]: u8/i8/i32), chunk size, marked-loop unroll
+//!   factor, tasklet [`Dist`]ribution and per-tasklet WRAM scratch;
+//! * [`ChunkKernel`] — the spec plus a [`Reduce`] mode (per-tasklet
+//!   accumulate, optional barrier-synchronized [`Combine::Tree`]
+//!   fan-in) and register-persistence flag;
+//! * [`Hooks`] — *how* to compute: the per-element body plus optional
+//!   prologue / per-chunk epilogue / final epilogue emitters, each
+//!   handed a context naming the registers the framework reserves
+//!   ([`iter::regs`]) so kernels stay within the calling convention.
+//!
+//! The emitted program follows the repo's naive-emit + post-hoc
+//! optimizer contract: [`ChunkKernel::build_naive`] produces a
+//! compiler-shaped stream with loop markers, and [`ChunkKernel::build`]
+//! runs the [`crate::opt`] pipeline over it. DMA double-buffering is an
+//! emitter-level knob (like the GEMV kernel): when
+//! `PassConfig::dma_double_buffer` is set and the spec qualifies, input
+//! streams are staged through split ping/pong buffers over
+//! `ldma_nb`/`dma_wait`.
+//!
+//! # WRAM layout
+//!
+//! The framework keeps the repo-wide kernel convention
+//! ([`crate::kernels`]): args at `0x0`, per-tasklet cycles at `0x40`,
+//! per-tasklet aux results at `0x80`, combined scalar result at
+//! [`RESULT_ADDR`], per-tasklet frames from [`FRAME_BASE`], and a
+//! kernel-static area from [`STATIC_BASE`] (e.g. the histogram's merged
+//! bins). Argument words (chunk counts, tail length, tasklet count) are
+//! published as typed symbols (`fw_*`) so fleet drivers set them with
+//! [`crate::host::PimSystem::write_symbol`].
+
+pub mod combine;
+pub mod iter;
+pub mod stride;
+
+use crate::dpu::builder::ProgramBuilder;
+use crate::dpu::isa::{AluOp, LoadWidth, Program, Reg, Src, StoreWidth};
+use crate::dpu::memory::Wram;
+use crate::kernels::{ARG_BASE, BUF_BASE, CYCLES_BASE};
+use crate::opt::PassConfig;
+use crate::Result;
+
+/// WRAM address of the combined scalar result written by
+/// [`Combine::Tree`] (tasklet 0). Sits in the free window between the
+/// aux array (`0x80..0xC0`) and the frame area.
+pub const RESULT_ADDR: u32 = 0xC0;
+
+/// First byte of the per-tasklet frame area (16 frames, one per
+/// tasklet, of [`ChunkSpec::frame_bytes`] each).
+pub const FRAME_BASE: u32 = BUF_BASE;
+
+/// Frames must end below this address; `STATIC_BASE..` is reserved for
+/// kernel-static data shared across tasklets (histogram merged bins).
+pub const FRAME_LIMIT: u32 = 0xE000;
+
+/// First byte of the kernel-static WRAM area.
+pub const STATIC_BASE: u32 = 0xE000;
+
+/// Element width of a stream: storage bytes plus load/store flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElemWidth {
+    /// Unsigned byte (`lbu`).
+    U8,
+    /// Signed byte (`lbs`).
+    I8,
+    /// 32-bit word (`lw`).
+    I32,
+}
+
+impl ElemWidth {
+    pub fn bytes(self) -> u32 {
+        match self {
+            ElemWidth::U8 | ElemWidth::I8 => 1,
+            ElemWidth::I32 => 4,
+        }
+    }
+
+    pub fn load(self) -> LoadWidth {
+        match self {
+            ElemWidth::U8 => LoadWidth::B8u,
+            ElemWidth::I8 => LoadWidth::B8s,
+            ElemWidth::I32 => LoadWidth::B32,
+        }
+    }
+
+    pub fn store(self) -> StoreWidth {
+        match self {
+            ElemWidth::U8 | ElemWidth::I8 => StoreWidth::B8,
+            ElemWidth::I32 => StoreWidth::B32,
+        }
+    }
+}
+
+/// Stream direction relative to the DPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    /// MRAM → WRAM before the element loop.
+    In,
+    /// WRAM → MRAM after the element loop.
+    Out,
+    /// Staged in, updated in place, written back (never
+    /// double-buffered).
+    InOut,
+}
+
+/// One MRAM array a kernel iterates over. Chunk `c` of the stream lives
+/// at `mram_base + c * chunk_bytes`; the host lays arrays out densely
+/// from `mram_base`.
+#[derive(Debug, Clone)]
+pub struct Stream {
+    pub name: &'static str,
+    pub mram_base: u32,
+    pub elem: ElemWidth,
+    pub dir: Dir,
+}
+
+/// How chunks are distributed over tasklets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dist {
+    /// Tasklet `t` owns chunks `t, t+T, t+2T, …` — the PrIM default;
+    /// balances tail work.
+    Cyclic,
+    /// Tasklet `t` owns the contiguous range
+    /// `[t*cpt, min((t+1)*cpt, n_chunks))` with
+    /// `cpt = ceil(n_chunks/T)` — required when a kernel carries state
+    /// across consecutive chunks (scan, select).
+    Blocked,
+}
+
+/// How per-tasklet accumulators become a kernel result.
+#[derive(Debug, Clone, Copy)]
+pub enum Combine {
+    /// Each tasklet writes its accumulator to `aux[id]`; the host (or a
+    /// later phase) combines.
+    Partials,
+    /// `Partials`, then a barrier-synchronized binary fan-in over the
+    /// aux slots; tasklet 0 writes the result to [`RESULT_ADDR`].
+    Tree(AluOp),
+}
+
+/// Per-tasklet accumulation over the element loop: `ACC` starts at
+/// `init`, the body updates it, and `combine` publishes it.
+#[derive(Debug, Clone, Copy)]
+pub struct Reduce {
+    pub init: i32,
+    pub combine: Combine,
+}
+
+/// Declarative description of one chunked iteration over MRAM streams.
+#[derive(Debug, Clone)]
+pub struct ChunkSpec {
+    pub name: &'static str,
+    pub streams: Vec<Stream>,
+    /// Elements staged per chunk (power of two; per-stream chunk bytes
+    /// must satisfy the DMA contract: 8..=2048, multiple of 8).
+    pub chunk_elems: u32,
+    /// Marked-loop unroll factor recorded for the optimizer (must
+    /// divide `chunk_elems`; 1 emits a plain loop, letting the body
+    /// branch).
+    pub unroll: u32,
+    pub dist: Dist,
+    /// Extra per-tasklet WRAM after the stream buffers (multiple of 8).
+    pub scratch_bytes: u32,
+}
+
+impl ChunkSpec {
+    /// Staged bytes per chunk for stream `i`.
+    pub fn chunk_bytes(&self, i: usize) -> u32 {
+        self.chunk_elems * self.streams[i].elem.bytes()
+    }
+
+    /// Per-tasklet frame size: stream buffers (inputs doubled when
+    /// `dbuf`) then scratch.
+    pub fn frame_bytes(&self, dbuf: bool) -> u32 {
+        let mut total = 0;
+        for (i, s) in self.streams.iter().enumerate() {
+            let mult = if dbuf && s.dir == Dir::In { 2 } else { 1 };
+            total += mult * self.chunk_bytes(i);
+        }
+        total + self.scratch_bytes
+    }
+
+    /// Frame-relative offset of the scratch area.
+    pub fn scratch_off(&self, dbuf: bool) -> u32 {
+        self.frame_bytes(dbuf) - self.scratch_bytes
+    }
+
+    /// Whether the 16-tasklet frame area fits below [`FRAME_LIMIT`]
+    /// with double-buffered inputs.
+    pub fn dbuf_fits(&self) -> bool {
+        FRAME_BASE + 16 * self.frame_bytes(true) <= FRAME_LIMIT
+    }
+
+    /// Panics on spec bugs (mirrors [`ProgramBuilder`]'s emitter-bug
+    /// panics: a bad spec is a programming error, not a runtime one).
+    pub fn validate(&self) {
+        assert!(
+            !self.streams.is_empty() && self.streams.len() <= 3,
+            "{}: 1..=3 streams, got {}",
+            self.name,
+            self.streams.len()
+        );
+        let ins = self.streams.iter().filter(|s| s.dir != Dir::Out).count();
+        let outs = self.streams.iter().filter(|s| s.dir != Dir::In).count();
+        assert!(ins <= 2, "{}: at most 2 input streams (value regs r0/r1)", self.name);
+        assert!(outs <= 1, "{}: at most 1 output stream", self.name);
+        assert!(
+            self.chunk_elems.is_power_of_two(),
+            "{}: chunk_elems {} must be a power of two",
+            self.name,
+            self.chunk_elems
+        );
+        assert!(
+            self.unroll > 0 && self.chunk_elems % self.unroll == 0,
+            "{}: unroll {} must divide chunk_elems {}",
+            self.name,
+            self.unroll,
+            self.chunk_elems
+        );
+        for (i, s) in self.streams.iter().enumerate() {
+            let cb = self.chunk_bytes(i);
+            assert!(
+                (8..=crate::dpu::DMA_MAX_BYTES).contains(&cb) && cb % 8 == 0,
+                "{}: stream '{}' chunk is {cb} B (DMA needs 8..=2048, %8)",
+                self.name,
+                s.name
+            );
+            assert_eq!(s.mram_base % 8, 0, "{}: stream '{}' base unaligned", self.name, s.name);
+        }
+        assert_eq!(self.scratch_bytes % 8, 0, "{}: scratch must be 8-aligned", self.name);
+        assert!(
+            FRAME_BASE + 16 * self.frame_bytes(false) <= FRAME_LIMIT,
+            "{}: {} B frames x16 overflow the WRAM frame area",
+            self.name,
+            self.frame_bytes(false)
+        );
+    }
+}
+
+/// A complete declarative kernel: iteration spec + reduction mode.
+#[derive(Debug, Clone)]
+pub struct ChunkKernel {
+    pub spec: ChunkSpec,
+    /// Kernel keeps live state in [`iter::regs::PERSIST0`]/`PERSIST1`
+    /// across chunks; disables double-buffering (which claims those
+    /// registers for the ping/pong toggle).
+    pub persist_regs: bool,
+    pub reduce: Option<Reduce>,
+}
+
+impl ChunkKernel {
+    /// Pure elementwise kernel (map / zip).
+    pub fn map(spec: ChunkSpec) -> ChunkKernel {
+        ChunkKernel { spec, persist_regs: false, reduce: None }
+    }
+
+    /// Tree-combined reduction kernel.
+    pub fn reducer(spec: ChunkSpec, init: i32, op: AluOp) -> ChunkKernel {
+        ChunkKernel {
+            spec,
+            persist_regs: false,
+            reduce: Some(Reduce { init, combine: Combine::Tree(op) }),
+        }
+    }
+
+    /// Whether this build may stage inputs through split ping/pong
+    /// buffers: the pass asks for it, no register-persistent state, no
+    /// in-place stream, and the doubled frames still fit.
+    pub fn effective_dbuf(&self, cfg: &PassConfig) -> bool {
+        cfg.dma_double_buffer
+            && !self.persist_regs
+            && self.spec.streams.iter().all(|s| s.dir != Dir::InOut)
+            && self.spec.dbuf_fits()
+    }
+
+    /// Emit the naive (compiler-shaped) stream with loop markers.
+    pub fn build_naive(&self, hooks: &mut Hooks) -> Result<Program> {
+        self.emit(false, hooks)
+    }
+
+    /// Emit (choosing the double-buffered staging path per
+    /// [`Self::effective_dbuf`]) and run the optimizer pipeline.
+    pub fn build(&self, cfg: &PassConfig, hooks: &mut Hooks) -> Result<Program> {
+        let naive = self.emit(self.effective_dbuf(cfg), hooks)?;
+        Ok(crate::opt::optimize(&naive, cfg).0)
+    }
+
+    fn emit(&self, dbuf: bool, hooks: &mut Hooks) -> Result<Program> {
+        let mut kb = KernelBuilder::new();
+        kb.chunk_loop(&self.spec, dbuf, self.reduce, hooks);
+        kb.finish_naive()
+    }
+}
+
+/// Register context handed to scaffold-level hooks (prologue, chunk
+/// epilogue, final epilogue).
+#[derive(Debug, Clone, Copy)]
+pub struct HookCtx {
+    /// This tasklet's frame base.
+    pub frame: Reg,
+    /// Tasklet id.
+    pub id: Reg,
+    /// Accumulator register (valid when the kernel reduces; free scratch
+    /// for the hook otherwise — it survives the chunk loop).
+    pub acc: Reg,
+    /// Chunk-index register (start chunk in the prologue, current chunk
+    /// in a chunk epilogue).
+    pub idx: Reg,
+    /// Chunk-index step register.
+    pub step: Reg,
+    /// The two chunk-persistent registers (valid iff
+    /// [`ChunkKernel::persist_regs`]).
+    pub persist: [Reg; 2],
+    /// Frame-relative scratch offset.
+    pub scratch_off: u32,
+    /// Per-tasklet frame size of this build.
+    pub frame_bytes: u32,
+    /// Whether this build stages inputs double-buffered.
+    pub dbuf: bool,
+}
+
+/// Register context handed to the per-element body.
+#[derive(Debug, Clone, Copy)]
+pub struct ElemCtx {
+    /// Loaded element values of the input streams, in stream order
+    /// (`r0`, then `r1`).
+    pub inputs: [Reg; 2],
+    /// Where the body leaves the output element (`r2`); stored iff the
+    /// spec has an output stream.
+    pub out: Reg,
+    /// Accumulator register.
+    pub acc: Reg,
+    /// This tasklet's frame base.
+    pub frame: Reg,
+    /// The two chunk-persistent registers.
+    pub persist: [Reg; 2],
+    /// Frame-relative scratch offset.
+    pub scratch_off: u32,
+    /// True in the (dynamic-length) tail-chunk loop, false in the full
+    /// unrollable loop. Bodies usually ignore this; it exists so a body
+    /// can emit branchy code only where the loop is unmarked.
+    pub is_tail: bool,
+}
+
+/// The kernel-specific emitters threaded through the scaffold. `body`
+/// is mandatory and must stay straight-line (no branches/DMA/barriers)
+/// when `ChunkSpec::unroll > 1`, must not write the framework's pointer
+/// registers, and may use `r0..=r8` freely.
+pub struct Hooks<'a> {
+    /// Runs once after distribution setup, before the chunk loop.
+    pub prologue: Option<&'a mut dyn FnMut(&mut ProgramBuilder, &HookCtx)>,
+    /// The per-element computation.
+    pub body: &'a mut dyn FnMut(&mut ProgramBuilder, &ElemCtx),
+    /// Runs at the end of every chunk iteration (after output DMA).
+    pub chunk_epilogue: Option<&'a mut dyn FnMut(&mut ProgramBuilder, &HookCtx)>,
+    /// Runs once after the chunk loop and any reduce combine.
+    pub epilogue: Option<&'a mut dyn FnMut(&mut ProgramBuilder, &HookCtx)>,
+}
+
+impl<'a> Hooks<'a> {
+    /// Hooks with only a body.
+    pub fn new(body: &'a mut dyn FnMut(&mut ProgramBuilder, &ElemCtx)) -> Hooks<'a> {
+        Hooks { prologue: None, body, chunk_epilogue: None, epilogue: None }
+    }
+}
+
+/// Host-side launch geometry for one DPU: the values of the `fw_*`
+/// argument words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelArgs {
+    pub n_chunks: u32,
+    /// Number of chunks with a full `chunk_elems` elements.
+    pub n_full: u32,
+    /// Elements in the final partial chunk (0 if none).
+    pub tail: u32,
+    pub nr_tasklets: u32,
+    /// `ceil(n_chunks / nr_tasklets)` — blocked-distribution stride.
+    pub chunks_per_tasklet: u32,
+}
+
+impl KernelArgs {
+    pub fn for_elems(n_elems: usize, chunk_elems: u32, nr_tasklets: usize) -> KernelArgs {
+        assert!((1..=16).contains(&nr_tasklets), "nr_tasklets {nr_tasklets} not in 1..=16");
+        let n = u32::try_from(n_elems).expect("element count fits u32");
+        let n_chunks = n.div_ceil(chunk_elems);
+        KernelArgs {
+            n_chunks,
+            n_full: n / chunk_elems,
+            tail: n % chunk_elems,
+            nr_tasklets: nr_tasklets as u32,
+            chunks_per_tasklet: n_chunks.div_ceil(nr_tasklets as u32),
+        }
+    }
+
+    /// Store the argument words in their `fw_*` WRAM slots.
+    pub fn write(&self, wram: &mut Wram) {
+        wram.store32(ARG_BASE, self.n_chunks).unwrap();
+        wram.store32(ARG_BASE + 4, self.n_full).unwrap();
+        wram.store32(ARG_BASE + 8, self.tail).unwrap();
+        wram.store32(ARG_BASE + 12, self.nr_tasklets).unwrap();
+        wram.store32(ARG_BASE + 16, self.chunks_per_tasklet).unwrap();
+    }
+}
+
+/// Wraps a [`ProgramBuilder`] with the framework's program shell:
+/// convention + `fw_*` symbols, per-tasklet wall-clock timing, and the
+/// [`Self::chunk_loop`] scaffold generator. Multi-phase kernels (scan)
+/// call `chunk_loop` more than once, with hand-emitted handshakes
+/// ([`combine`]) between phases.
+pub struct KernelBuilder {
+    pb: ProgramBuilder,
+    phase: u32,
+}
+
+impl KernelBuilder {
+    pub fn new() -> KernelBuilder {
+        let mut pb = ProgramBuilder::new();
+        crate::kernels::def_convention_symbols(&mut pb);
+        pb.def_arg32("fw_n_chunks", ARG_BASE);
+        pb.def_arg32("fw_n_full", ARG_BASE + 4);
+        pb.def_arg32("fw_tail", ARG_BASE + 8);
+        pb.def_arg32("fw_nr_tasklets", ARG_BASE + 12);
+        pb.def_arg32("fw_cpt", ARG_BASE + 16);
+        pb.def_arg32("fw_result", RESULT_ADDR);
+        // Timing prologue: park the start timestamp in this tasklet's
+        // cycles slot; the epilogue rewrites it with the delta.
+        pb.move_(Reg(0), Src::Id4);
+        pb.add(Reg(0), Reg(0), CYCLES_BASE as i32);
+        pb.time(Reg(1));
+        pb.sw(Reg(0), 0, Reg(1));
+        KernelBuilder { pb, phase: 0 }
+    }
+
+    /// Escape hatch: the underlying builder, for hand-emitted sections
+    /// between scaffold phases.
+    pub fn pb(&mut self) -> &mut ProgramBuilder {
+        &mut self.pb
+    }
+
+    /// Emit one full chunk-iteration phase: frame addressing, argument
+    /// loads, tasklet distribution, the (optionally double-buffered)
+    /// staging loop with the element loops inside, and — when `reduce`
+    /// is set — accumulator init plus partial/tree publication.
+    pub fn chunk_loop(
+        &mut self,
+        spec: &ChunkSpec,
+        dbuf: bool,
+        reduce: Option<Reduce>,
+        hooks: &mut Hooks,
+    ) {
+        spec.validate();
+        if dbuf {
+            assert!(
+                spec.streams.iter().all(|s| s.dir != Dir::InOut) && spec.dbuf_fits(),
+                "{}: spec does not qualify for double-buffering",
+                spec.name
+            );
+        }
+        let tag = format!("{}{}", spec.name, self.phase);
+        self.phase += 1;
+        let pb = &mut self.pb;
+        let lay = iter::Layout::of(spec, dbuf);
+        iter::emit_frame_base(pb, lay.frame_bytes);
+        iter::emit_dist(pb, spec.dist, &tag);
+        if let Some(r) = reduce {
+            pb.move_(iter::regs::ACC, r.init);
+        }
+        let ctx = HookCtx {
+            frame: iter::regs::FRAME,
+            id: iter::regs::ID,
+            acc: iter::regs::ACC,
+            idx: iter::regs::IDX,
+            step: iter::regs::STEP,
+            persist: [iter::regs::PERSIST0, iter::regs::PERSIST1],
+            scratch_off: lay.scratch_off,
+            frame_bytes: lay.frame_bytes,
+            dbuf,
+        };
+        if let Some(p) = hooks.prologue.as_mut() {
+            p(pb, &ctx);
+        }
+        iter::emit_chunk_loop(pb, spec, &lay, hooks, &ctx, &tag);
+        if let Some(r) = reduce {
+            combine::emit_partial_writeback(pb);
+            if let Combine::Tree(op) = r.combine {
+                combine::emit_tree_combine(pb, op, &tag);
+            }
+        }
+        if let Some(e) = hooks.epilogue.as_mut() {
+            e(pb, &ctx);
+        }
+    }
+
+    /// Close the program (timing epilogue + `stop`) without running
+    /// optimizer passes.
+    pub fn finish_naive(mut self) -> Result<Program> {
+        let pb = &mut self.pb;
+        pb.move_(Reg(0), Src::Id4);
+        pb.add(Reg(0), Reg(0), CYCLES_BASE as i32);
+        pb.time(Reg(1));
+        pb.lw(Reg(2), Reg(0), 0);
+        pb.sub(Reg(1), Reg(1), Reg(2));
+        pb.sw(Reg(0), 0, Reg(1));
+        pb.stop();
+        self.pb.build()
+    }
+
+    /// Close the program and run the optimizer pipeline.
+    pub fn finish(self, cfg: &PassConfig) -> Result<Program> {
+        Ok(crate::opt::optimize(&self.finish_naive()?, cfg).0)
+    }
+}
+
+impl Default for KernelBuilder {
+    fn default() -> Self {
+        KernelBuilder::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{MRAM_A, MRAM_B};
+
+    fn vecadd_kernel() -> ChunkKernel {
+        ChunkKernel::map(ChunkSpec {
+            name: "vecadd",
+            streams: vec![
+                Stream { name: "a", mram_base: MRAM_A, elem: ElemWidth::I32, dir: Dir::In },
+                Stream { name: "b", mram_base: MRAM_B, elem: ElemWidth::I32, dir: Dir::In },
+                Stream { name: "c", mram_base: 0x200_0000, elem: ElemWidth::I32, dir: Dir::Out },
+            ],
+            chunk_elems: 64,
+            unroll: 4,
+            dist: Dist::Cyclic,
+            scratch_bytes: 0,
+        })
+    }
+
+    fn run_vecadd(cfg: &PassConfig, nr_tasklets: usize, n: usize) -> Vec<i32> {
+        let k = vecadd_kernel();
+        let mut body = |pb: &mut ProgramBuilder, ctx: &ElemCtx| {
+            pb.add(ctx.out, ctx.inputs[0], ctx.inputs[1]);
+        };
+        let prog = k.build(cfg, &mut Hooks::new(&mut body)).unwrap();
+        let mut dpu = crate::dpu::Dpu::new();
+        dpu.load_program(&prog).unwrap();
+        let a: Vec<i32> = (0..n as i32).collect();
+        let b: Vec<i32> = (0..n as i32).map(|v| 10 * v + 1).collect();
+        dpu.mram.write_i32_slice(MRAM_A, &a).unwrap();
+        dpu.mram.write_i32_slice(MRAM_B, &b).unwrap();
+        KernelArgs::for_elems(n, k.spec.chunk_elems, nr_tasklets).write(&mut dpu.wram);
+        dpu.launch(nr_tasklets).unwrap();
+        dpu.mram.read_i32_slice(0x200_0000, n).unwrap()
+    }
+
+    #[test]
+    fn zip_map_matches_host_loop() {
+        for n in [0usize, 1, 63, 64, 65, 300, 1024] {
+            for t in [1usize, 3, 16] {
+                for cfg in [PassConfig::none(), PassConfig::all()] {
+                    let got = run_vecadd(&cfg, t, n);
+                    let want: Vec<i32> = (0..n as i32).map(|v| v + 10 * v + 1).collect();
+                    assert_eq!(got, want, "vecadd n={n} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn args_cover_all_elements() {
+        for n in [0usize, 1, 255, 256, 257, 4096, 100_000] {
+            let a = KernelArgs::for_elems(n, 256, 16);
+            assert_eq!(a.n_full as usize * 256 + a.tail as usize, n);
+            assert_eq!(a.n_chunks, a.n_full + u32::from(a.tail > 0));
+            assert!(a.chunks_per_tasklet * 16 >= a.n_chunks);
+        }
+    }
+
+    #[test]
+    fn frame_layout_is_aligned_and_bounded() {
+        let k = vecadd_kernel();
+        assert_eq!(k.spec.frame_bytes(false), 3 * 256);
+        assert_eq!(k.spec.frame_bytes(true), 5 * 256);
+        assert!(k.spec.dbuf_fits());
+        k.spec.validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk")]
+    fn oversized_chunk_is_rejected() {
+        let mut k = vecadd_kernel();
+        k.spec.chunk_elems = 1024; // 4 KB per i32 stream > 2 KB DMA max
+        k.spec.validate();
+    }
+}

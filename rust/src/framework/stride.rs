@@ -1,0 +1,171 @@
+//! Strided-microbenchmark iterator: the framework's generator for the
+//! paper's Fig. 2/Fig. 9 measurement skeleton — every tasklet walks
+//! MRAM in `nr_tasklets * chunk_bytes` strides, stages one (or two
+//! mirrored) chunk(s) into per-tasklet WRAM buffers, and runs a
+//! kernel-supplied chunk body inside a barrier-aligned timed region,
+//! reporting per-tasklet cycles and accumulator partials through the
+//! shared WRAM convention.
+//!
+//! This is the scaffold the BSDP dot-product microbench
+//! ([`crate::kernels::bsdp`]) was originally hand-emitted as; the
+//! emitter here reproduces that stream **instruction for instruction**
+//! (pinned by `tests/framework_port.rs` against a frozen copy of the
+//! hand-written emitter), proving the framework layer can regenerate
+//! hand-tuned code, not just toy loops.
+//!
+//! Host contract (unchanged from the hand emitter): WRAM arg word 0 =
+//! total primary-stream bytes, word 8 = per-iteration stride in bytes
+//! (normally `nr_tasklets * chunk_bytes`); results land in the
+//! convention `cycles`/`aux` arrays.
+
+use crate::dpu::builder::ProgramBuilder;
+use crate::dpu::isa::{CmpCond, Program, Reg, Src};
+use crate::kernels::{AUX_BASE, BUF_BASE, CYCLES_BASE, MRAM_A, MRAM_B};
+use crate::Result;
+
+/// Chunk-body accumulator, zero-initialized by the scaffold and
+/// written to `aux[id]` at exit.
+pub const S_ACC: Reg = Reg(9);
+/// Walking pointer into the staged primary chunk, reset per chunk.
+pub const S_PTR_A: Reg = Reg(10);
+/// Walking pointer into the staged mirror chunk (two-stream specs).
+pub const S_PTR_B: Reg = Reg(11);
+
+// Skeleton-private registers — numerically identical to the
+// hand-emitted microbench this module replaces.
+const R_T0: Reg = Reg(15);
+const R_T1: Reg = Reg(16);
+const R_CYC: Reg = Reg(17);
+const R_END: Reg = Reg(19);
+const R_BUFA: Reg = Reg(20);
+const R_MPTR: Reg = Reg(21);
+const R_STRIDE: Reg = Reg(22);
+const R_BUFB: Reg = Reg(13);
+const R_MOFF_B: Reg = Reg(14);
+
+/// Registers the scaffold hands to the chunk body.
+#[derive(Debug, Clone, Copy)]
+pub struct StrideCtx {
+    pub acc: Reg,
+    pub ptr_a: Reg,
+    pub ptr_b: Reg,
+    /// Base of the staged primary chunk (do not modify).
+    pub buf_a: Reg,
+    /// Base of the staged mirror chunk (valid for two-stream specs).
+    pub buf_b: Reg,
+}
+
+/// Declarative description of a strided microbenchmark kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct StrideSpec {
+    /// WRAM bytes staged per stream per iteration (power of two,
+    /// 8..=2048).
+    pub chunk_bytes: u32,
+    /// Primary stream base address.
+    pub mram_a: u32,
+    /// Optional mirror stream: staged from `mram_b + (cursor - mram_a)`
+    /// every iteration (the dot-product's B operand).
+    pub mram_b: Option<u32>,
+    /// Wrap the chunk body in the barrier-aligned `time` pair and
+    /// accumulate per-tasklet timed cycles.
+    pub timed: bool,
+}
+
+impl StrideSpec {
+    /// The Fig. 9 dot-product microbench geometry: paired 1 KB chunks
+    /// of A (at [`MRAM_A`]) and B (mirrored at [`MRAM_B`]), timed.
+    pub fn dot_microbench() -> StrideSpec {
+        StrideSpec { chunk_bytes: 1024, mram_a: MRAM_A, mram_b: Some(MRAM_B), timed: true }
+    }
+
+    /// Emit the naive (compiler-shaped) microbench program. `routines`
+    /// runs first, between the entry jump and `main` — the slot for
+    /// callee routines like `__mulsi3` — and its return value is handed
+    /// to `body`, which emits one chunk's computation with
+    /// [`S_PTR_A`]/[`S_PTR_B`] pointing at the staged data.
+    pub fn emit_naive<T>(
+        &self,
+        routines: impl FnOnce(&mut ProgramBuilder) -> T,
+        body: impl FnOnce(&mut ProgramBuilder, &StrideCtx, &T),
+    ) -> Result<Program> {
+        assert!(
+            self.chunk_bytes.is_power_of_two()
+                && (8..=crate::dpu::DMA_MAX_BYTES).contains(&self.chunk_bytes),
+            "stride chunk of {} B violates the DMA contract",
+            self.chunk_bytes
+        );
+        let n_streams = 1 + u32::from(self.mram_b.is_some());
+        let frame = self.chunk_bytes * n_streams;
+        // `id8` pre-scales the tasklet id by 8; shift the remainder.
+        let wram_shift = (frame.trailing_zeros() - 3) as i32;
+        let mram_shift = (self.chunk_bytes.trailing_zeros() - 3) as i32;
+
+        let mut pb = ProgramBuilder::new();
+        crate::kernels::def_convention_symbols(&mut pb);
+        let main = pb.new_label("main");
+        pb.jump(main);
+        let routine = routines(&mut pb);
+        pb.bind(main);
+
+        // Per-tasklet WRAM frame: primary chunk, mirror right after.
+        pb.move_(R_BUFA, Src::Id8);
+        pb.lsl(R_BUFA, R_BUFA, wram_shift);
+        pb.add(R_BUFA, R_BUFA, BUF_BASE as i32);
+        if self.mram_b.is_some() {
+            pb.add(R_BUFB, R_BUFA, self.chunk_bytes as i32);
+        }
+        // MRAM cursor into the primary stream; the mirror tracks it at
+        // a fixed offset.
+        pb.move_(R_MPTR, Src::Id8);
+        pb.lsl(R_MPTR, R_MPTR, mram_shift);
+        pb.add(R_MPTR, R_MPTR, self.mram_a as i32);
+        if let Some(b) = self.mram_b {
+            pb.move_(R_MOFF_B, (b - self.mram_a) as i32);
+        }
+        // Args: [0] = total primary bytes, [8] = stride bytes.
+        pb.move_(Reg(3), 0);
+        pb.lw(R_END, Reg(3), 0);
+        pb.add(R_END, R_END, self.mram_a as i32);
+        pb.lw(R_STRIDE, Reg(3), 8);
+        pb.move_(R_CYC, 0);
+        pb.move_(S_ACC, Src::Zero);
+
+        let done = pb.new_label("done");
+        pb.jcmp(CmpCond::Geu, R_MPTR, Src::Reg(R_END), done);
+        let blocks = pb.here("blocks");
+        pb.ldma(R_BUFA, R_MPTR, self.chunk_bytes);
+        if self.mram_b.is_some() {
+            pb.add(Reg(3), R_MPTR, Src::Reg(R_MOFF_B));
+            pb.ldma(R_BUFB, Reg(3), self.chunk_bytes);
+        }
+        if self.timed {
+            pb.barrier();
+            pb.time(R_T0);
+        }
+        pb.move_(S_PTR_A, R_BUFA);
+        if self.mram_b.is_some() {
+            pb.move_(S_PTR_B, R_BUFB);
+        }
+        let ctx =
+            StrideCtx { acc: S_ACC, ptr_a: S_PTR_A, ptr_b: S_PTR_B, buf_a: R_BUFA, buf_b: R_BUFB };
+        body(&mut pb, &ctx, &routine);
+        if self.timed {
+            pb.time(R_T1);
+            pb.sub(R_T1, R_T1, R_T0);
+            pb.add(R_CYC, R_CYC, Src::Reg(R_T1));
+            pb.barrier();
+        }
+        pb.add(R_MPTR, R_MPTR, Src::Reg(R_STRIDE));
+        pb.jcmp(CmpCond::Ltu, R_MPTR, Src::Reg(R_END), blocks);
+        pb.bind(done);
+        // cycles → CYCLES_BASE + 4*id, accumulator → AUX_BASE + 4*id.
+        pb.move_(Reg(3), Src::Id4);
+        pb.add(Reg(3), Reg(3), CYCLES_BASE as i32);
+        pb.sw(Reg(3), 0, R_CYC);
+        pb.move_(Reg(3), Src::Id4);
+        pb.add(Reg(3), Reg(3), AUX_BASE as i32);
+        pb.sw(Reg(3), 0, S_ACC);
+        pb.stop();
+        pb.build()
+    }
+}

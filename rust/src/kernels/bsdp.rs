@@ -16,10 +16,11 @@
 //! GEMV kernels of [`super::gemv`] reuse exactly the same inner loops.
 
 use super::mulsi3::emit_mulsi3;
-use super::{AUX_BASE, BUF_BASE, CYCLES_BASE, MRAM_A, MRAM_B};
+use super::{AUX_BASE, MRAM_A, MRAM_B};
 use crate::dpu::builder::{Label, ProgramBuilder};
 use crate::dpu::isa::{CmpCond, MulVariant, Program, Reg, Src};
 use crate::dpu::LaunchResult;
+use crate::framework::stride::StrideSpec;
 use crate::opt::PassConfig;
 use crate::util::rng::Rng;
 use crate::Result;
@@ -219,17 +220,6 @@ pub fn emit_dot_chunk(
     }
 }
 
-// Microbenchmark skeleton registers (distinct from the dot body's).
-const R_T0: Reg = Reg(15);
-const R_T1: Reg = Reg(16);
-const R_CYC: Reg = Reg(17);
-const R_END: Reg = Reg(19);
-const R_BUFA: Reg = Reg(20);
-const R_MPTR: Reg = Reg(21);
-const R_STRIDE: Reg = Reg(22);
-const R_BUFB: Reg = Reg(13);
-const R_MOFF_B: Reg = Reg(14);
-
 /// WRAM bytes staged per operand per iteration.
 const CHUNK: u32 = 1024;
 
@@ -246,67 +236,30 @@ pub fn emit_dot_microbench_with(variant: DotVariant, cfg: &PassConfig) -> Result
     Ok(crate::opt::optimize(&emit_dot_microbench_naive(variant)?, cfg).0)
 }
 
-fn emit_dot_microbench_naive(variant: DotVariant) -> Result<Program> {
-    let mut pb = ProgramBuilder::new();
-    super::def_convention_symbols(&mut pb);
-    let main = pb.new_label("main");
-    pb.jump(main);
-    let mulsi3 = if variant == DotVariant::NativeMulsi3 {
-        Some(emit_mulsi3(&mut pb))
-    } else {
-        None
-    };
-    pb.bind(main);
-
-    // Per-tasklet WRAM: A chunk at BUF_BASE + id*2048, B right after.
-    pb.move_(R_BUFA, Src::Id8);
-    pb.lsl(R_BUFA, R_BUFA, 8);
-    pb.add(R_BUFA, R_BUFA, BUF_BASE as i32);
-    pb.add(R_BUFB, R_BUFA, CHUNK as i32);
-    // MRAM cursor into A; B mirrors A at MRAM_B + same offset.
-    pb.move_(R_MPTR, Src::Id8);
-    pb.lsl(R_MPTR, R_MPTR, 7);
-    pb.add(R_MPTR, R_MPTR, MRAM_A as i32);
-    pb.move_(R_MOFF_B, (MRAM_B - MRAM_A) as i32);
-    // Args: [0] = total A-buffer bytes, [8] = stride bytes.
-    pb.move_(Reg(3), 0);
-    pb.lw(R_END, Reg(3), 0);
-    pb.add(R_END, R_END, MRAM_A as i32);
-    pb.lw(R_STRIDE, Reg(3), 8);
-    pb.move_(R_CYC, 0);
-    pb.move_(R_ACC, Src::Zero);
-
-    let done = pb.new_label("done");
-    pb.jcmp(CmpCond::Geu, R_MPTR, Src::Reg(R_END), done);
-    let blocks = pb.here("blocks");
-    pb.ldma(R_BUFA, R_MPTR, CHUNK);
-    pb.add(Reg(3), R_MPTR, Src::Reg(R_MOFF_B));
-    pb.ldma(R_BUFB, Reg(3), CHUNK);
-    pb.barrier();
-    pb.time(R_T0);
-    pb.move_(R_APTR, R_BUFA);
-    pb.move_(R_BPTR, R_BUFB);
-    let elems = match variant {
-        DotVariant::Bsdp => CHUNK * 2, // planes: 1 KB covers 2048 elements
-        _ => CHUNK,
-    };
-    emit_dot_chunk(&mut pb, variant, elems, mulsi3);
-    pb.time(R_T1);
-    pb.sub(R_T1, R_T1, R_T0);
-    pb.add(R_CYC, R_CYC, R_T1);
-    pb.barrier();
-    pb.add(R_MPTR, R_MPTR, Src::Reg(R_STRIDE));
-    pb.jcmp(CmpCond::Ltu, R_MPTR, Src::Reg(R_END), blocks);
-    pb.bind(done);
-    // cycles → CYCLES_BASE + 4*id, partial dot → AUX_BASE + 4*id.
-    pb.move_(Reg(3), Src::Id4);
-    pb.add(Reg(3), Reg(3), CYCLES_BASE as i32);
-    pb.sw(Reg(3), 0, R_CYC);
-    pb.move_(Reg(3), Src::Id4);
-    pb.add(Reg(3), Reg(3), AUX_BASE as i32);
-    pb.sw(Reg(3), 0, R_ACC);
-    pb.stop();
-    pb.build()
+/// The naive microbench stream, generated by the framework's strided
+/// iterator ([`StrideSpec::dot_microbench`]). This used to be a ~60-line
+/// hand-emitted scaffold; the framework reproduces that stream
+/// instruction for instruction (pinned by `tests/framework_port.rs`
+/// against a frozen copy of the original emitter), leaving only the
+/// variant-specific pieces here: the optional `__mulsi3` routine and the
+/// dot-chunk body.
+pub fn emit_dot_microbench_naive(variant: DotVariant) -> Result<Program> {
+    StrideSpec::dot_microbench().emit_naive(
+        |pb| {
+            if variant == DotVariant::NativeMulsi3 {
+                Some(emit_mulsi3(pb))
+            } else {
+                None
+            }
+        },
+        |pb, _ctx, mulsi3| {
+            let elems = match variant {
+                DotVariant::Bsdp => CHUNK * 2, // planes: 1 KB covers 2048 elements
+                _ => CHUNK,
+            };
+            emit_dot_chunk(pb, variant, elems, *mulsi3);
+        },
+    )
 }
 
 /// Outcome of one dot-product microbenchmark run.

@@ -1,0 +1,257 @@
+//! PrIM-style byte histogram built through [`crate::framework`].
+//!
+//! Each tasklet counts into a private bin table in its frame scratch
+//! (zeroed by a prologue hook), so the hot loop is race-free — the
+//! PrIM `HST-L` strategy. After the chunk loop an epilogue hook merges:
+//! tasklets split the bin range cyclically, sum each bin across all
+//! private tables, write the merged table to the kernel-static WRAM
+//! area, and tasklet 0 DMAs it to [`MRAM_B`]. Binning follows the PrIM
+//! rule: value `v` lands in bucket `v >> (8 - log2(bins))`.
+
+use crate::dpu::builder::ProgramBuilder;
+use crate::dpu::isa::{CmpCond, Program, Reg, Src};
+use crate::dpu::LaunchResult;
+use crate::framework::{
+    ChunkKernel, ChunkSpec, Dir, Dist, ElemCtx, ElemWidth, HookCtx, Hooks, KernelArgs, Stream,
+    FRAME_BASE, STATIC_BASE,
+};
+use crate::host::{DpuSet, PimSystem, XferPlan};
+use crate::opt::PassConfig;
+use crate::Result;
+
+use super::{KernelScratch, ARG_BASE, MRAM_A, MRAM_B};
+
+/// Elements (bytes) staged per chunk.
+pub const CHUNK_ELEMS: u32 = 1024;
+
+/// Default bucket count (one per byte value).
+pub const DEFAULT_BINS: u32 = 256;
+
+/// The declarative iteration spec for a `bins`-bucket histogram.
+pub fn histogram_spec(bins: u32) -> ChunkSpec {
+    assert!(
+        bins.is_power_of_two() && (2..=256).contains(&bins),
+        "bins {bins} must be a power of two in 2..=256"
+    );
+    ChunkSpec {
+        name: "hist",
+        streams: vec![Stream { name: "in", mram_base: MRAM_A, elem: ElemWidth::U8, dir: Dir::In }],
+        chunk_elems: CHUNK_ELEMS,
+        unroll: 4,
+        dist: Dist::Cyclic,
+        scratch_bytes: bins * 4,
+    }
+}
+
+/// Build the histogram program under `cfg`.
+pub fn build_histogram(cfg: &PassConfig, bins: u32) -> Result<Program> {
+    let k = ChunkKernel::map(histogram_spec(bins));
+    let shift = 8 - bins.trailing_zeros();
+
+    // Zero this tasklet's private bin table before the chunk loop.
+    let mut prologue = |pb: &mut ProgramBuilder, ctx: &HookCtx| {
+        pb.add(ctx.acc, ctx.frame, ctx.scratch_off as i32);
+        pb.move_(Reg(0), Src::Reg(ctx.acc));
+        pb.add(Reg(1), ctx.acc, (bins * 4) as i32);
+        pb.move_(Reg(2), 0);
+        let head = pb.here("hist_zero");
+        pb.sw(Reg(0), 0, Reg(2));
+        pb.add(Reg(0), Reg(0), 4);
+        pb.jcmp(CmpCond::Ltu, Reg(0), Src::Reg(Reg(1)), head);
+    };
+
+    // Straight-line (unrollable) bump of the private bin: ACC holds the
+    // bin-table base across the whole loop.
+    let mut body = move |pb: &mut ProgramBuilder, ctx: &ElemCtx| {
+        let bin = if shift > 0 {
+            pb.lsr(Reg(3), ctx.inputs[0], shift as i32);
+            Reg(3)
+        } else {
+            ctx.inputs[0]
+        };
+        pb.lsl(Reg(4), bin, 2);
+        pb.add(Reg(4), Reg(4), Src::Reg(ctx.acc));
+        pb.lw(Reg(5), Reg(4), 0);
+        pb.add(Reg(5), Reg(5), 1);
+        pb.sw(Reg(4), 0, Reg(5));
+    };
+
+    // Merge: bins are split cyclically over the launched tasklets; each
+    // merged bin is the sum of that slot across all private tables.
+    let mut epilogue = move |pb: &mut ProgramBuilder, ctx: &HookCtx| {
+        pb.barrier();
+        pb.move_(Reg(7), 0);
+        pb.lw(Reg(7), Reg(7), (ARG_BASE + 12) as i32);
+        pb.move_(Reg(0), Src::Reg(ctx.id));
+        let done = pb.new_label("hist_mdone");
+        let outer = pb.here("hist_merge");
+        pb.jcmp(CmpCond::Geu, Reg(0), bins as i32, done);
+        pb.lsl(Reg(1), Reg(0), 2);
+        pb.add(Reg(2), Reg(1), (FRAME_BASE + ctx.scratch_off) as i32);
+        pb.move_(Reg(3), 0);
+        pb.move_(Reg(4), 0);
+        let inner = pb.here("hist_sum");
+        pb.lw(Reg(5), Reg(2), 0);
+        pb.add(Reg(4), Reg(4), Src::Reg(Reg(5)));
+        pb.add(Reg(2), Reg(2), ctx.frame_bytes as i32);
+        pb.add(Reg(3), Reg(3), 1);
+        pb.jcmp(CmpCond::Ltu, Reg(3), Src::Reg(Reg(7)), inner);
+        pb.add(Reg(1), Reg(1), STATIC_BASE as i32);
+        pb.sw(Reg(1), 0, Reg(4));
+        pb.add(Reg(0), Reg(0), Src::Reg(Reg(7)));
+        pb.jump(outer);
+        pb.bind(done);
+        pb.barrier();
+        let skip = pb.new_label("hist_nodma");
+        pb.jcmp(CmpCond::Neq, ctx.id, Src::Zero, skip);
+        pb.move_(Reg(0), STATIC_BASE as i32);
+        pb.move_(Reg(1), MRAM_B as i32);
+        pb.sdma(Reg(0), Reg(1), bins * 4);
+        pb.bind(skip);
+    };
+
+    let mut hooks = Hooks::new(&mut body);
+    hooks.prologue = Some(&mut prologue);
+    hooks.epilogue = Some(&mut epilogue);
+    k.build(cfg, &mut hooks)
+}
+
+/// One verified single-DPU histogram run.
+#[derive(Debug, Clone)]
+pub struct HistogramOutcome {
+    pub nr_tasklets: usize,
+    pub n: usize,
+    pub bins: u32,
+    /// The merged table read from [`MRAM_B`] (verified against
+    /// [`crate::cpu_ref::prim::histogram_u8`]).
+    pub hist: Vec<u32>,
+    pub launch: LaunchResult,
+    pub tasklet_cycles: Vec<u32>,
+}
+
+/// Run the histogram on one simulated DPU and verify against the host
+/// reference.
+pub fn run_histogram_cfg(
+    cfg: &PassConfig,
+    nr_tasklets: usize,
+    bins: u32,
+    data: &[u8],
+) -> Result<HistogramOutcome> {
+    let mut scr = KernelScratch::default();
+    run_histogram_cfg_with(&mut scr, cfg, nr_tasklets, bins, data)
+}
+
+/// [`run_histogram_cfg`] over reusable execution state.
+pub fn run_histogram_cfg_with(
+    scr: &mut KernelScratch,
+    cfg: &PassConfig,
+    nr_tasklets: usize,
+    bins: u32,
+    data: &[u8],
+) -> Result<HistogramOutcome> {
+    let prog = build_histogram(cfg, bins)?;
+    scr.dpu.load_program(&prog)?;
+    let id = scr.dpu.id;
+    let mram_err = |addr: u32| move |k| crate::Error::HostAccess { dpu: id, addr, kind: k };
+    let padded = super::pad_to_chunks(data, CHUNK_ELEMS);
+    if !padded.is_empty() {
+        scr.dpu.mram.write(MRAM_A, &padded).map_err(mram_err(MRAM_A))?;
+    }
+    KernelArgs::for_elems(data.len(), CHUNK_ELEMS, nr_tasklets).write(&mut scr.dpu.wram);
+    let launch = scr.dpu.launch_with(nr_tasklets, &mut scr.launch)?;
+    let hist = scr.dpu.mram.read_u32_slice(MRAM_B, bins as usize).map_err(mram_err(MRAM_B))?;
+    let expected = crate::cpu_ref::prim::histogram_u8(data, bins as usize);
+    if hist != expected {
+        return Err(crate::Error::Coordinator(format!(
+            "histogram: table mismatch for n={} bins={bins}",
+            data.len()
+        )));
+    }
+    Ok(HistogramOutcome {
+        nr_tasklets,
+        n: data.len(),
+        bins,
+        hist,
+        launch,
+        tasklet_cycles: super::read_tasklet_cycles(&scr.dpu, nr_tasklets),
+    })
+}
+
+/// Fleet entry point: contiguous chunk-multiple slices per DPU; the
+/// host sums the per-DPU tables element-wise.
+pub fn run_histogram_fleet(
+    sys: &mut PimSystem,
+    set: &DpuSet,
+    cfg: &PassConfig,
+    nr_tasklets: usize,
+    bins: u32,
+    data: &[u8],
+) -> Result<Vec<u32>> {
+    let prog = build_histogram(cfg, bins)?;
+    sys.load_program(set, &prog)?;
+    let chunk = CHUNK_ELEMS as usize;
+    let n_chunks = data.len().div_ceil(chunk);
+    let cpd = n_chunks.div_ceil(set.nr_dpus()).max(1);
+    let mut parts: Vec<&[u8]> = Vec::with_capacity(set.nr_dpus());
+    for i in 0..set.nr_dpus() {
+        let lo = (i * cpd * chunk).min(data.len());
+        let hi = ((i + 1) * cpd * chunk).min(data.len());
+        parts.push(&data[lo..hi]);
+    }
+    let staged: Vec<Vec<u8>> = parts.iter().map(|p| super::pad_to_chunks(p, CHUNK_ELEMS)).collect();
+    let mut plan = XferPlan::to_pim(set, MRAM_A);
+    for (i, b) in staged.iter().enumerate() {
+        if !b.is_empty() {
+            plan.prepare(i, b)?;
+        }
+    }
+    sys.push_xfer(set, &plan)?;
+    let args: Vec<KernelArgs> =
+        parts.iter().map(|p| KernelArgs::for_elems(p.len(), CHUNK_ELEMS, nr_tasklets)).collect();
+    super::reduce::write_fleet_args(sys, set, &prog, &args)?;
+    sys.launch(set, nr_tasklets)?;
+    let mut total = vec![0u32; bins as usize];
+    for i in 0..set.nr_dpus() {
+        let part = sys.dpu_of(set, i).mram.read_u32_slice(MRAM_B, bins as usize).map_err(|k| {
+            crate::Error::HostAccess { dpu: i, addr: MRAM_B, kind: k }
+        })?;
+        for (t, p) in total.iter_mut().zip(&part) {
+            *t += p;
+        }
+    }
+    let expected = crate::cpu_ref::prim::histogram_u8(data, bins as usize);
+    if total != expected {
+        return Err(crate::Error::Coordinator(format!(
+            "histogram fleet: table mismatch for n={} bins={bins}",
+            data.len()
+        )));
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn histogram_matches_reference_across_shapes() {
+        let mut rng = Rng::new(71);
+        for n in [0usize, 1, 1023, 1024, 1025, 5000] {
+            let data = rng.u8_vec(n);
+            for t in [1usize, 6, 16] {
+                let out = run_histogram_cfg(&PassConfig::all(), t, DEFAULT_BINS, &data).unwrap();
+                assert_eq!(out.hist.iter().map(|&c| c as usize).sum::<usize>(), n, "n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn coarse_bins_follow_prim_rule() {
+        let mut rng = Rng::new(72);
+        let data = rng.u8_vec(4096);
+        for bins in [2u32, 16, 64] {
+            run_histogram_cfg(&PassConfig::none(), 8, bins, &data).unwrap();
+        }
+    }
+}

@@ -13,7 +13,12 @@
 //! * [`gemv`] — the INT8 and INT4 GEMV kernels of §VI — Figures 12, 13;
 //! * [`encode`] — host-side data-layout transformations: bit-plane
 //!   transposition for BSDP and INT4 packing (the AVX512 work the paper
-//!   runs on the host).
+//!   runs on the host);
+//! * [`reduce`], [`histogram`], [`scan`], [`select`] — PrIM-style
+//!   workloads built declaratively through [`crate::framework`]
+//!   (SimplePIM-style map/reduce/zip specs) instead of hand-emitted
+//!   streams, each with a [`crate::cpu_ref::prim`] host reference and a
+//!   fleet entry point through [`crate::host::PimSystem`].
 //!
 //! Every emitter produces a *naive*, compiler-shaped stream plus
 //! optimizer metadata (loop markers, bounded `__mulsi3` call sites);
@@ -41,7 +46,11 @@ pub mod arith;
 pub mod bsdp;
 pub mod encode;
 pub mod gemv;
+pub mod histogram;
 pub mod mulsi3;
+pub mod reduce;
+pub mod scan;
+pub mod select;
 
 /// WRAM offset of the argument area.
 pub const ARG_BASE: u32 = 0x0;
@@ -76,6 +85,26 @@ pub struct KernelScratch {
     pub launch: crate::dpu::LaunchScratch,
     /// Host staging/verify buffer.
     pub(crate) buf: Vec<u8>,
+}
+
+/// Zero-pad a slice up to a whole number of framework chunks — DMA
+/// stages full chunks, so hosts provision MRAM in chunk multiples (the
+/// element loops never read past the logical length; padding just keeps
+/// the staging reads inside host-written memory).
+pub(crate) fn pad_to_chunks<T: Copy + Default>(data: &[T], chunk_elems: u32) -> Vec<T> {
+    let n_chunks = data.len().div_ceil(chunk_elems as usize);
+    let mut v = data.to_vec();
+    v.resize(n_chunks * chunk_elems as usize, T::default());
+    v
+}
+
+/// Little-endian byte image of an i32 slice (for `XferPlan` staging).
+pub(crate) fn i32_le_bytes(data: &[i32]) -> Vec<u8> {
+    let mut v = Vec::with_capacity(4 * data.len());
+    for x in data {
+        v.extend_from_slice(&x.to_le_bytes());
+    }
+    v
 }
 
 /// Declare the shared WRAM calling-convention symbols on a kernel

@@ -1,0 +1,221 @@
+//! PrIM-style inclusive prefix scan built through [`crate::framework`].
+//!
+//! Two chunk-loop phases in one DPU program (the PrIM `SCAN-SSA`
+//! shape), composed with [`KernelBuilder`] and a hand-emitted
+//! handshake between them:
+//!
+//! 1. **Block scan** — blocked distribution (each tasklet owns a
+//!    contiguous chunk range), per-tasklet running sum: writes the
+//!    region-local inclusive scan to [`MRAM_B`] and publishes the
+//!    region total to `aux[id]` ([`Combine::Partials`]);
+//! 2. **Handshake** — [`combine::emit_prefix_of_partials`]: after a
+//!    barrier, each tasklet computes the exclusive prefix of the aux
+//!    totals into a persistent register;
+//! 3. **Fixup** — a second chunk loop over [`MRAM_B`] in place
+//!    ([`Dir::InOut`]), adding the prefix to every element.
+//!
+//! All arithmetic wraps, matching [`crate::cpu_ref::prim::scan_i32`].
+
+use crate::dpu::builder::ProgramBuilder;
+use crate::dpu::isa::{Program, Src};
+use crate::dpu::LaunchResult;
+use crate::framework::{
+    combine, iter, ChunkKernel, ChunkSpec, Combine, Dir, Dist, ElemCtx, ElemWidth, Hooks,
+    KernelArgs, Reduce, Stream,
+};
+use crate::framework::KernelBuilder;
+use crate::host::{DpuSet, PimSystem, XferPlan};
+use crate::opt::PassConfig;
+use crate::Result;
+
+use super::{KernelScratch, MRAM_A, MRAM_B};
+
+/// Elements staged per chunk (1 KB of i32).
+pub const CHUNK_ELEMS: u32 = 256;
+
+/// Phase-1 spec: read [`MRAM_A`], write the block scan to [`MRAM_B`].
+pub fn scan_phase1_spec() -> ChunkSpec {
+    ChunkSpec {
+        name: "scan",
+        streams: vec![
+            Stream { name: "in", mram_base: MRAM_A, elem: ElemWidth::I32, dir: Dir::In },
+            Stream { name: "out", mram_base: MRAM_B, elem: ElemWidth::I32, dir: Dir::Out },
+        ],
+        chunk_elems: CHUNK_ELEMS,
+        unroll: 8,
+        dist: Dist::Blocked,
+        scratch_bytes: 0,
+    }
+}
+
+/// Phase-2 spec: fix [`MRAM_B`] up in place.
+pub fn scan_phase2_spec() -> ChunkSpec {
+    ChunkSpec {
+        name: "scanfix",
+        streams: vec![Stream {
+            name: "inout",
+            mram_base: MRAM_B,
+            elem: ElemWidth::I32,
+            dir: Dir::InOut,
+        }],
+        chunk_elems: CHUNK_ELEMS,
+        unroll: 8,
+        dist: Dist::Blocked,
+        scratch_bytes: 0,
+    }
+}
+
+/// Build the two-phase scan program under `cfg`.
+pub fn build_scan(cfg: &PassConfig) -> Result<Program> {
+    let mut kb = KernelBuilder::new();
+
+    let s1 = scan_phase1_spec();
+    let k1 = ChunkKernel {
+        spec: s1.clone(),
+        persist_regs: false,
+        reduce: Some(Reduce { init: 0, combine: Combine::Partials }),
+    };
+    let mut body1 = |pb: &mut ProgramBuilder, ctx: &ElemCtx| {
+        pb.add(ctx.acc, ctx.acc, Src::Reg(ctx.inputs[0]));
+        pb.move_(ctx.out, Src::Reg(ctx.acc));
+    };
+    kb.chunk_loop(&s1, k1.effective_dbuf(cfg), k1.reduce, &mut Hooks::new(&mut body1));
+
+    combine::emit_prefix_of_partials(kb.pb(), iter::regs::PERSIST0, "scan");
+
+    let s2 = scan_phase2_spec();
+    let mut body2 = |pb: &mut ProgramBuilder, ctx: &ElemCtx| {
+        pb.add(ctx.out, ctx.inputs[0], Src::Reg(ctx.persist[0]));
+    };
+    kb.chunk_loop(&s2, false, None, &mut Hooks::new(&mut body2));
+
+    kb.finish(cfg)
+}
+
+/// One verified single-DPU scan run.
+#[derive(Debug, Clone)]
+pub struct ScanOutcome {
+    pub nr_tasklets: usize,
+    pub n: usize,
+    /// The inclusive scan read back from [`MRAM_B`] (verified against
+    /// [`crate::cpu_ref::prim::scan_i32`]).
+    pub out: Vec<i32>,
+    pub launch: LaunchResult,
+    pub tasklet_cycles: Vec<u32>,
+}
+
+/// Run the scan on one simulated DPU and verify against the host
+/// reference.
+pub fn run_scan_cfg(cfg: &PassConfig, nr_tasklets: usize, data: &[i32]) -> Result<ScanOutcome> {
+    let mut scr = KernelScratch::default();
+    run_scan_cfg_with(&mut scr, cfg, nr_tasklets, data)
+}
+
+/// [`run_scan_cfg`] over reusable execution state.
+pub fn run_scan_cfg_with(
+    scr: &mut KernelScratch,
+    cfg: &PassConfig,
+    nr_tasklets: usize,
+    data: &[i32],
+) -> Result<ScanOutcome> {
+    let prog = build_scan(cfg)?;
+    scr.dpu.load_program(&prog)?;
+    let id = scr.dpu.id;
+    let mram_err = |addr: u32| move |k| crate::Error::HostAccess { dpu: id, addr, kind: k };
+    let padded = super::pad_to_chunks(data, CHUNK_ELEMS);
+    if !padded.is_empty() {
+        scr.dpu.mram.write_i32_slice(MRAM_A, &padded).map_err(mram_err(MRAM_A))?;
+    }
+    KernelArgs::for_elems(data.len(), CHUNK_ELEMS, nr_tasklets).write(&mut scr.dpu.wram);
+    let launch = scr.dpu.launch_with(nr_tasklets, &mut scr.launch)?;
+    let out = scr.dpu.mram.read_i32_slice(MRAM_B, data.len()).map_err(mram_err(MRAM_B))?;
+    let expected = crate::cpu_ref::prim::scan_i32(data);
+    if out != expected {
+        return Err(crate::Error::Coordinator(format!(
+            "scan: output mismatch for n={}",
+            data.len()
+        )));
+    }
+    Ok(ScanOutcome {
+        nr_tasklets,
+        n: data.len(),
+        out,
+        launch,
+        tasklet_cycles: super::read_tasklet_cycles(&scr.dpu, nr_tasklets),
+    })
+}
+
+/// Fleet entry point: per-DPU block scans plus a host-side pass that
+/// adds the cross-DPU running offset to each DPU's output (the "host
+/// fixup" flavor of the PrIM scan).
+pub fn run_scan_fleet(
+    sys: &mut PimSystem,
+    set: &DpuSet,
+    cfg: &PassConfig,
+    nr_tasklets: usize,
+    data: &[i32],
+) -> Result<Vec<i32>> {
+    let prog = build_scan(cfg)?;
+    sys.load_program(set, &prog)?;
+    let (parts, args) = super::reduce::partition_chunks(data, set.nr_dpus(), nr_tasklets);
+    let staged: Vec<Vec<u8>> =
+        parts.iter().map(|p| super::i32_le_bytes(&super::pad_to_chunks(p, CHUNK_ELEMS))).collect();
+    let mut plan = XferPlan::to_pim(set, MRAM_A);
+    for (i, b) in staged.iter().enumerate() {
+        if !b.is_empty() {
+            plan.prepare(i, b)?;
+        }
+    }
+    sys.push_xfer(set, &plan)?;
+    super::reduce::write_fleet_args(sys, set, &prog, &args)?;
+    sys.launch(set, nr_tasklets)?;
+    let mut out = Vec::with_capacity(data.len());
+    let mut offset = 0i32;
+    for (i, part) in parts.iter().enumerate() {
+        if part.is_empty() {
+            continue;
+        }
+        let local = sys
+            .dpu_of(set, i)
+            .mram
+            .read_i32_slice(MRAM_B, part.len())
+            .map_err(|k| crate::Error::HostAccess { dpu: i, addr: MRAM_B, kind: k })?;
+        out.extend(local.iter().map(|&v| v.wrapping_add(offset)));
+        offset = offset.wrapping_add(*local.last().expect("non-empty part"));
+    }
+    let expected = crate::cpu_ref::prim::scan_i32(data);
+    if out != expected {
+        return Err(crate::Error::Coordinator(format!(
+            "scan fleet: output mismatch for n={}",
+            data.len()
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scan_matches_reference_across_shapes() {
+        let mut rng = Rng::new(81);
+        for n in [0usize, 1, 255, 256, 257, 2000] {
+            let data = rng.i32_vec(n);
+            for t in [1usize, 7, 16] {
+                let out = run_scan_cfg(&PassConfig::all(), t, &data).unwrap();
+                assert_eq!(out.out.len(), n, "n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn naive_matches_optimized_output() {
+        let mut rng = Rng::new(82);
+        let data = rng.i32_vec(1500);
+        let a = run_scan_cfg(&PassConfig::none(), 16, &data).unwrap();
+        let b = run_scan_cfg(&PassConfig::all(), 16, &data).unwrap();
+        assert_eq!(a.out, b.out);
+    }
+}

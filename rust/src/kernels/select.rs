@@ -1,0 +1,273 @@
+//! PrIM-style select / stream compaction built through
+//! [`crate::framework`]: keep the strictly-positive elements of an i32
+//! array, preserving order.
+//!
+//! The branchy body (`unroll: 1`, so the framework emits plain loops)
+//! appends survivors to a staging buffer in frame scratch; a per-chunk
+//! epilogue hook flushes the staged bytes to this tasklet's private
+//! [`MRAM_B`] region in 8-byte DMA beats, carrying any 4-byte remainder
+//! into the next chunk. The kernel keeps two values live across chunks
+//! in the framework's persistent registers
+//! ([`ChunkKernel::persist_regs`], which rules out double-buffering):
+//! the staging fill level and the MRAM write cursor. Blocked
+//! distribution gives each tasklet a contiguous chunk range, so its
+//! output region `[first_chunk * chunk_bytes ..)` is disjoint from its
+//! neighbors'; the final epilogue publishes the per-tasklet kept count
+//! to `aux[id]` and the host concatenates the regions in tasklet order.
+
+use crate::dpu::builder::ProgramBuilder;
+use crate::dpu::isa::{CmpCond, Program, Reg, Src};
+use crate::dpu::{Dpu, LaunchResult};
+use crate::framework::{
+    iter, ChunkKernel, ChunkSpec, Dir, Dist, ElemCtx, ElemWidth, HookCtx, Hooks, KernelArgs,
+    Stream,
+};
+use crate::host::{DpuSet, PimSystem, XferPlan};
+use crate::opt::PassConfig;
+use crate::Result;
+
+use super::{KernelScratch, ARG_BASE, AUX_BASE, MRAM_A, MRAM_B};
+
+/// Elements staged per chunk (1 KB of i32).
+pub const CHUNK_ELEMS: u32 = 256;
+/// log2 of the per-chunk byte count (used for chunk→byte shifts).
+const CHUNK_SHIFT: i32 = 10;
+/// Staging buffer: one full chunk of survivors plus an 8-byte slot for
+/// the carried remainder word.
+const SCRATCH_BYTES: u32 = CHUNK_ELEMS * 4 + 8;
+
+/// The declarative iteration spec.
+pub fn select_spec() -> ChunkSpec {
+    ChunkSpec {
+        name: "select",
+        streams: vec![Stream { name: "in", mram_base: MRAM_A, elem: ElemWidth::I32, dir: Dir::In }],
+        chunk_elems: CHUNK_ELEMS,
+        unroll: 1,
+        dist: Dist::Blocked,
+        scratch_bytes: SCRATCH_BYTES,
+    }
+}
+
+/// Build the select program under `cfg`.
+pub fn build_select(cfg: &PassConfig) -> Result<Program> {
+    let k = ChunkKernel { spec: select_spec(), persist_regs: true, reduce: None };
+
+    // FILL = staged survivor bytes not yet flushed; OUTCUR = MRAM write
+    // cursor, starting at this tasklet's region base.
+    let mut prologue = |pb: &mut ProgramBuilder, ctx: &HookCtx| {
+        let (fill, outcur) = (ctx.persist[0], ctx.persist[1]);
+        pb.lsl(outcur, ctx.idx, CHUNK_SHIFT);
+        pb.add(outcur, outcur, MRAM_B as i32);
+        pb.move_(fill, 0);
+    };
+
+    // Append v to the staging buffer iff v > 0. The body is emitted
+    // twice (full + tail loop), so label names carry a counter.
+    let mut next_label = 0u32;
+    let mut body = move |pb: &mut ProgramBuilder, ctx: &ElemCtx| {
+        let skip = pb.new_label(&format!("sel_skip{next_label}"));
+        next_label += 1;
+        pb.jcmp(CmpCond::Les, ctx.inputs[0], Src::Zero, skip);
+        pb.add(Reg(3), ctx.frame, ctx.scratch_off as i32);
+        pb.add(Reg(3), Reg(3), Src::Reg(ctx.persist[0]));
+        pb.sw(Reg(3), 0, ctx.inputs[0]);
+        pb.add(ctx.persist[0], ctx.persist[0], 4);
+        pb.bind(skip);
+    };
+
+    // Flush whole 8-byte beats of the staging buffer to MRAM, then slide
+    // the odd remainder word (if any) back to offset 0.
+    let mut chunk_epilogue = |pb: &mut ProgramBuilder, ctx: &HookCtx| {
+        let (fill, outcur) = (ctx.persist[0], ctx.persist[1]);
+        pb.and(Reg(0), fill, -8);
+        let noflush = pb.new_label("sel_noflush");
+        pb.jcmp(CmpCond::Eq, Reg(0), Src::Zero, noflush);
+        pb.add(Reg(1), ctx.frame, ctx.scratch_off as i32);
+        pb.add(Reg(2), Reg(1), Src::Reg(Reg(0)));
+        let beat = pb.here("sel_flush");
+        pb.sdma(Reg(1), outcur, 8);
+        pb.add(Reg(1), Reg(1), 8);
+        pb.add(outcur, outcur, 8);
+        pb.jcmp(CmpCond::Ltu, Reg(1), Src::Reg(Reg(2)), beat);
+        pb.and(Reg(3), fill, 7);
+        let nomove = pb.new_label("sel_nomove");
+        pb.jcmp(CmpCond::Eq, Reg(3), Src::Zero, nomove);
+        pb.lw(Reg(4), Reg(1), 0);
+        pb.add(Reg(5), ctx.frame, ctx.scratch_off as i32);
+        pb.sw(Reg(5), 0, Reg(4));
+        pb.bind(nomove);
+        pb.move_(fill, Src::Reg(Reg(3)));
+        pb.bind(noflush);
+    };
+
+    // Publish kept count to aux[id]; zero-pad and flush the final
+    // remainder word. The region base is recomputed as
+    // `id * fw_cpt * chunk_bytes` (IDX has advanced past it).
+    let mut epilogue = |pb: &mut ProgramBuilder, ctx: &HookCtx| {
+        let (fill, outcur) = (ctx.persist[0], ctx.persist[1]);
+        pb.move_(Reg(0), 0);
+        pb.lw(Reg(0), Reg(0), (ARG_BASE + 16) as i32);
+        iter::emit_id_times_reg(pb, Reg(1), Reg(0), Reg(2), Reg(3), "sel_base");
+        pb.lsl(Reg(1), Reg(1), CHUNK_SHIFT);
+        pb.add(Reg(1), Reg(1), MRAM_B as i32);
+        pb.sub(Reg(2), outcur, Src::Reg(Reg(1)));
+        pb.add(Reg(2), Reg(2), Src::Reg(fill));
+        pb.lsr(Reg(2), Reg(2), 2);
+        pb.move_(Reg(4), Src::Id4);
+        pb.add(Reg(4), Reg(4), AUX_BASE as i32);
+        pb.sw(Reg(4), 0, Reg(2));
+        let nofin = pb.new_label("sel_nofin");
+        pb.jcmp(CmpCond::Eq, fill, Src::Zero, nofin);
+        pb.add(Reg(4), ctx.frame, ctx.scratch_off as i32);
+        pb.move_(Reg(5), 0);
+        pb.sw(Reg(4), 4, Reg(5));
+        pb.sdma(Reg(4), outcur, 8);
+        pb.bind(nofin);
+    };
+
+    let mut hooks = Hooks::new(&mut body);
+    hooks.prologue = Some(&mut prologue);
+    hooks.chunk_epilogue = Some(&mut chunk_epilogue);
+    hooks.epilogue = Some(&mut epilogue);
+    k.build(cfg, &mut hooks)
+}
+
+/// One verified single-DPU select run.
+#[derive(Debug, Clone)]
+pub struct SelectOutcome {
+    pub nr_tasklets: usize,
+    pub n: usize,
+    /// The compacted survivors (verified against
+    /// [`crate::cpu_ref::prim::select_pos`]).
+    pub out: Vec<i32>,
+    pub launch: LaunchResult,
+    pub tasklet_cycles: Vec<u32>,
+}
+
+/// Run select on one simulated DPU and verify against the host
+/// reference.
+pub fn run_select_cfg(cfg: &PassConfig, nr_tasklets: usize, data: &[i32]) -> Result<SelectOutcome> {
+    let mut scr = KernelScratch::default();
+    run_select_cfg_with(&mut scr, cfg, nr_tasklets, data)
+}
+
+/// [`run_select_cfg`] over reusable execution state.
+pub fn run_select_cfg_with(
+    scr: &mut KernelScratch,
+    cfg: &PassConfig,
+    nr_tasklets: usize,
+    data: &[i32],
+) -> Result<SelectOutcome> {
+    let prog = build_select(cfg)?;
+    scr.dpu.load_program(&prog)?;
+    let id = scr.dpu.id;
+    let mram_err = |addr: u32| move |k| crate::Error::HostAccess { dpu: id, addr, kind: k };
+    let padded = super::pad_to_chunks(data, CHUNK_ELEMS);
+    if !padded.is_empty() {
+        scr.dpu.mram.write_i32_slice(MRAM_A, &padded).map_err(mram_err(MRAM_A))?;
+    }
+    let args = KernelArgs::for_elems(data.len(), CHUNK_ELEMS, nr_tasklets);
+    args.write(&mut scr.dpu.wram);
+    let launch = scr.dpu.launch_with(nr_tasklets, &mut scr.launch)?;
+    let out = gather_regions(&mut scr.dpu, nr_tasklets, args.chunks_per_tasklet)?;
+    let expected = crate::cpu_ref::prim::select_pos(data);
+    if out != expected {
+        return Err(crate::Error::Coordinator(format!(
+            "select: output mismatch for n={}: kept {}, want {}",
+            data.len(),
+            out.len(),
+            expected.len()
+        )));
+    }
+    Ok(SelectOutcome {
+        nr_tasklets,
+        n: data.len(),
+        out,
+        launch,
+        tasklet_cycles: super::read_tasklet_cycles(&scr.dpu, nr_tasklets),
+    })
+}
+
+/// Concatenate the per-tasklet survivor regions in tasklet order using
+/// the `aux` kept counts.
+fn gather_regions(dpu: &mut Dpu, nr_tasklets: usize, cpt: u32) -> Result<Vec<i32>> {
+    let mut out = Vec::new();
+    for t in 0..nr_tasklets {
+        let kept = dpu.wram.load32(AUX_BASE + 4 * t as u32).unwrap() as usize;
+        if kept == 0 {
+            continue;
+        }
+        let base = MRAM_B + t as u32 * cpt * (CHUNK_ELEMS * 4);
+        let region = dpu
+            .mram
+            .read_i32_slice(base, kept)
+            .map_err(|k| crate::Error::HostAccess { dpu: dpu.id, addr: base, kind: k })?;
+        out.extend(region);
+    }
+    Ok(out)
+}
+
+/// Fleet entry point: contiguous chunk-multiple slices per DPU, DPU-side
+/// compaction, host-side concatenation of the per-DPU survivor streams.
+pub fn run_select_fleet(
+    sys: &mut PimSystem,
+    set: &DpuSet,
+    cfg: &PassConfig,
+    nr_tasklets: usize,
+    data: &[i32],
+) -> Result<Vec<i32>> {
+    let prog = build_select(cfg)?;
+    sys.load_program(set, &prog)?;
+    let (parts, args) = super::reduce::partition_chunks(data, set.nr_dpus(), nr_tasklets);
+    let staged: Vec<Vec<u8>> =
+        parts.iter().map(|p| super::i32_le_bytes(&super::pad_to_chunks(p, CHUNK_ELEMS))).collect();
+    let mut plan = XferPlan::to_pim(set, MRAM_A);
+    for (i, b) in staged.iter().enumerate() {
+        if !b.is_empty() {
+            plan.prepare(i, b)?;
+        }
+    }
+    sys.push_xfer(set, &plan)?;
+    super::reduce::write_fleet_args(sys, set, &prog, &args)?;
+    sys.launch(set, nr_tasklets)?;
+    let mut out = Vec::new();
+    for (i, a) in args.iter().enumerate() {
+        out.extend(gather_regions(sys.dpu_of(set, i), nr_tasklets, a.chunks_per_tasklet)?);
+    }
+    let expected = crate::cpu_ref::prim::select_pos(data);
+    if out != expected {
+        return Err(crate::Error::Coordinator(format!(
+            "select fleet: output mismatch for n={}",
+            data.len()
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn select_matches_reference_across_shapes() {
+        let mut rng = Rng::new(91);
+        for n in [0usize, 1, 255, 256, 257, 2000] {
+            let data = rng.i32_vec(n);
+            for t in [1usize, 4, 16] {
+                let out = run_select_cfg(&PassConfig::all(), t, &data).unwrap();
+                assert_eq!(out.out, crate::cpu_ref::prim::select_pos(&data), "n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_kept_and_none_kept_edges() {
+        let pos: Vec<i32> = (1..=600).collect();
+        let neg: Vec<i32> = (1..=600).map(|v| -v).collect();
+        for cfg in [PassConfig::none(), PassConfig::all()] {
+            assert_eq!(run_select_cfg(&cfg, 8, &pos).unwrap().out.len(), 600);
+            assert!(run_select_cfg(&cfg, 8, &neg).unwrap().out.is_empty());
+        }
+    }
+}

@@ -43,6 +43,13 @@
 //! the [`opt`] pass pipeline, so every "baseline vs optimized" gap is a
 //! measurable transformation with a per-pass ablation
 //! (`cargo bench --bench pass_ablation`).
+//!
+//! On top of the builder and pass pipeline sits [`framework`], a
+//! SimplePIM-style kernel-construction layer that generates tasklet
+//! distribution, MRAM chunk iteration, DMA double-buffering and
+//! barrier/handshake combines from declarative map/reduce/zip specs;
+//! the PrIM-style workloads in [`kernels`] (reduction, histogram,
+//! prefix scan, select) are built through it.
 
 pub mod alloc;
 pub mod bench_support;
@@ -50,6 +57,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cpu_ref;
 pub mod dpu;
+pub mod framework;
 pub mod host;
 pub mod kernels;
 pub mod opt;

@@ -1,0 +1,172 @@
+//! Differential contract for the PrIM workload suite built on the
+//! kernel framework (`rust/src/framework/`): reduction, histogram,
+//! inclusive scan and select/stream-compaction.
+//!
+//! Every runner verifies its output element-by-element against the
+//! matching `cpu_ref::prim` host reference before returning, so a
+//! plain `.unwrap()` here is already a differential check. This file
+//! sweeps the shape space (zero-length, singleton, non-power-of-two,
+//! chunk-boundary ±1), the tasklet counts, both pass extremes, all
+//! three interpreter execution tiers, non-default histogram bin
+//! counts, and the fleet entry points through `PimSystem`.
+//!
+//! Strict tier snapshots (LaunchResult + WRAM image equality) live in
+//! `tier_differential.rs`; random pass subsets as a property live in
+//! `kernel_properties.rs`.
+
+use upmem_unleashed::dpu::ExecTier;
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::kernels::{histogram, reduce, scan, select, KernelScratch};
+use upmem_unleashed::opt::PassConfig;
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::rng::Rng;
+
+/// Chunk boundary for the i32 kernels is 256 elements; for the u8
+/// histogram it is 1024. The sweep crosses both.
+const SHAPES: [usize; 9] = [0, 1, 7, 255, 256, 257, 1000, 1023, 1025];
+const TASKLETS: [usize; 3] = [1, 3, 16];
+
+#[test]
+fn reduce_differential_sweep() {
+    let mut rng = Rng::new(0x51);
+    let mut scr = KernelScratch::default();
+    for n in SHAPES {
+        let data = rng.i32_vec(n);
+        for t in TASKLETS {
+            for cfg in [PassConfig::none(), PassConfig::all()] {
+                let out = reduce::run_reduce_cfg_with(&mut scr, &cfg, t, &data)
+                    .unwrap_or_else(|e| panic!("reduce n={n} t={t}: {e}"));
+                assert_eq!(out.sum, upmem_unleashed::cpu_ref::prim::reduce_i32(&data));
+            }
+        }
+    }
+}
+
+#[test]
+fn histogram_differential_sweep() {
+    let mut rng = Rng::new(0x52);
+    let mut scr = KernelScratch::default();
+    for n in SHAPES {
+        let data = rng.u8_vec(n);
+        for t in TASKLETS {
+            for cfg in [PassConfig::none(), PassConfig::all()] {
+                let out = histogram::run_histogram_cfg_with(&mut scr, &cfg, t, 256, &data)
+                    .unwrap_or_else(|e| panic!("histogram n={n} t={t}: {e}"));
+                assert_eq!(out.hist, upmem_unleashed::cpu_ref::prim::histogram_u8(&data, 256));
+            }
+        }
+    }
+}
+
+#[test]
+fn histogram_non_default_bins() {
+    let mut rng = Rng::new(0x53);
+    let mut scr = KernelScratch::default();
+    let data = rng.u8_vec(3000);
+    for bins in [2u32, 8, 32, 128] {
+        for t in [1usize, 5, 16] {
+            let out =
+                histogram::run_histogram_cfg_with(&mut scr, &PassConfig::all(), t, bins, &data)
+                    .unwrap_or_else(|e| panic!("histogram bins={bins} t={t}: {e}"));
+            assert_eq!(out.hist, upmem_unleashed::cpu_ref::prim::histogram_u8(&data, bins));
+        }
+    }
+}
+
+#[test]
+fn scan_differential_sweep() {
+    let mut rng = Rng::new(0x54);
+    let mut scr = KernelScratch::default();
+    for n in SHAPES {
+        let data = rng.i32_vec(n);
+        for t in TASKLETS {
+            for cfg in [PassConfig::none(), PassConfig::all()] {
+                scan::run_scan_cfg_with(&mut scr, &cfg, t, &data)
+                    .unwrap_or_else(|e| panic!("scan n={n} t={t}: {e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn select_differential_sweep() {
+    let mut rng = Rng::new(0x55);
+    let mut scr = KernelScratch::default();
+    for n in SHAPES {
+        let data = rng.i32_vec(n);
+        for t in TASKLETS {
+            for cfg in [PassConfig::none(), PassConfig::all()] {
+                select::run_select_cfg_with(&mut scr, &cfg, t, &data)
+                    .unwrap_or_else(|e| panic!("select n={n} t={t}: {e}"));
+            }
+        }
+    }
+}
+
+/// Every PrIM kernel verifies against the host reference on all three
+/// interpreter tiers (the strict snapshot comparison is in
+/// `tier_differential.rs`; this asserts the *contract* per tier).
+#[test]
+fn all_kernels_verify_on_every_tier() {
+    let mut rng = Rng::new(0x56);
+    let i32s = rng.i32_vec(1500);
+    let bytes = rng.u8_vec(5000);
+    for tier in [ExecTier::Stepped, ExecTier::Batched, ExecTier::Superblock] {
+        let mut scr = KernelScratch::default();
+        scr.dpu.set_exec_tier(tier);
+        let cfg = PassConfig::all();
+        reduce::run_reduce_cfg_with(&mut scr, &cfg, 16, &i32s)
+            .unwrap_or_else(|e| panic!("reduce on {}: {e}", tier.name()));
+        histogram::run_histogram_cfg_with(&mut scr, &cfg, 16, 256, &bytes)
+            .unwrap_or_else(|e| panic!("histogram on {}: {e}", tier.name()));
+        scan::run_scan_cfg_with(&mut scr, &cfg, 16, &i32s)
+            .unwrap_or_else(|e| panic!("scan on {}: {e}", tier.name()));
+        select::run_select_cfg_with(&mut scr, &cfg, 16, &i32s)
+            .unwrap_or_else(|e| panic!("select on {}: {e}", tier.name()));
+    }
+}
+
+/// Fleet entry points: the same four kernels through `PimSystem` on a
+/// full rank (64 DPUs), with host-side cross-DPU combination. The
+/// fleet runners verify against `cpu_ref::prim` internally.
+#[test]
+fn fleet_entry_points_verify() {
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    let set = sys.alloc_ranks(1).unwrap();
+    let mut rng = Rng::new(0x57);
+    let cfg = PassConfig::all();
+
+    // Enough data that many (not all) DPUs own chunks — the empty-DPU
+    // path is part of the contract.
+    let i32s = rng.i32_vec(40_000);
+    let bytes = rng.u8_vec(90_000);
+
+    let sum = reduce::run_reduce_fleet(&mut sys, &set, &cfg, 12, &i32s).unwrap();
+    assert_eq!(sum, upmem_unleashed::cpu_ref::prim::reduce_i32(&i32s));
+
+    let hist = histogram::run_histogram_fleet(&mut sys, &set, &cfg, 12, 256, &bytes).unwrap();
+    assert_eq!(hist, upmem_unleashed::cpu_ref::prim::histogram_u8(&bytes, 256));
+
+    let scanned = scan::run_scan_fleet(&mut sys, &set, &cfg, 12, &i32s).unwrap();
+    assert_eq!(scanned, upmem_unleashed::cpu_ref::prim::scan_i32(&i32s));
+
+    let kept = select::run_select_fleet(&mut sys, &set, &cfg, 12, &i32s).unwrap();
+    assert_eq!(kept, upmem_unleashed::cpu_ref::prim::select_pos(&i32s));
+}
+
+/// Degenerate fleet shapes: empty input and fewer chunks than DPUs.
+#[test]
+fn fleet_handles_degenerate_shapes() {
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    let set = sys.alloc_ranks(1).unwrap();
+    let cfg = PassConfig::all();
+    assert_eq!(reduce::run_reduce_fleet(&mut sys, &set, &cfg, 4, &[]).unwrap(), 0);
+    let tiny: Vec<i32> = vec![5, -3, 9];
+    assert_eq!(reduce::run_reduce_fleet(&mut sys, &set, &cfg, 4, &tiny).unwrap(), 11);
+    assert_eq!(scan::run_scan_fleet(&mut sys, &set, &cfg, 4, &tiny).unwrap(), vec![5, 2, 11]);
+    assert_eq!(select::run_select_fleet(&mut sys, &set, &cfg, 4, &tiny).unwrap(), vec![5, 9]);
+    assert_eq!(
+        histogram::run_histogram_fleet(&mut sys, &set, &cfg, 4, 2, &[0x10, 0x90]).unwrap(),
+        vec![1, 1]
+    );
+}

@@ -363,6 +363,42 @@ fn exec_tiers_are_bit_identical_on_random_programs() {
     );
 }
 
+/// The framework-built PrIM kernels (reduce / histogram / scan /
+/// select) verify element-by-element against their `cpu_ref::prim`
+/// host references under *every* random subset of optimizer passes,
+/// random shapes (including zero-length and non-power-of-two) and
+/// random tasklet counts. The runners return `Err` on any output
+/// mismatch, so `is_ok()` is the differential assertion.
+#[test]
+fn framework_kernels_verify_under_random_pass_subsets() {
+    use upmem_unleashed::kernels::{histogram, reduce, scan, select, KernelScratch};
+    forall(
+        Config::cases(12),
+        |rng| {
+            let n = rng.range_u64(0, 1200) as usize;
+            let tasklets = rng.range_u64(1, 16) as usize;
+            (rng.next_u64(), rng.next_u64() as u8, n, tasklets)
+        },
+        |&(seed, mask, n, tasklets)| {
+            let mut cfg = PassConfig::none();
+            for (bit, pass) in ALL_PASSES.into_iter().enumerate() {
+                if mask & (1u8 << bit) != 0 {
+                    cfg = cfg.set(pass, true);
+                }
+            }
+            let mut data_rng = Rng::new(seed);
+            let i32s = data_rng.i32_vec(n);
+            let bytes = data_rng.u8_vec(n);
+            let mut scr = KernelScratch::default();
+            reduce::run_reduce_cfg_with(&mut scr, &cfg, tasklets, &i32s).is_ok()
+                && histogram::run_histogram_cfg_with(&mut scr, &cfg, tasklets, 256, &bytes).is_ok()
+                && scan::run_scan_cfg_with(&mut scr, &cfg, tasklets, &i32s).is_ok()
+                && select::run_select_cfg_with(&mut scr, &cfg, tasklets, &i32s).is_ok()
+        },
+        "PrIM framework kernels verify under random pass subsets",
+    );
+}
+
 /// Deterministic random-program generator for the differential
 /// property above. Single-tasklet, WRAM-only, always terminates.
 fn random_program(seed: u64) -> Program {

@@ -183,6 +183,107 @@ fn gemv_variants_are_tier_invariant() {
     }
 }
 
+/// The framework-built PrIM workload suite (reduce / histogram / scan /
+/// select, `rust/src/framework/` + `rust/src/kernels/`) under the full
+/// pass pipeline: strict snapshot equality across tiers — LaunchResult,
+/// per-tasklet timed cycles, full WRAM image, and the kernel payload.
+/// These programs exercise framework-generated shapes the hand kernels
+/// don't: double-buffered ping-pong chunk loops, tree combines with
+/// four barrier rounds, two chained chunk phases, and data-dependent
+/// branchy bodies.
+#[test]
+fn framework_prim_kernels_are_tier_invariant() {
+    use upmem_unleashed::kernels::{histogram, reduce, scan, select};
+    let mut rng = Rng::new(0x77);
+    let i32s = rng.i32_vec(2000);
+    let bytes = rng.u8_vec(5000);
+    for tasklets in [3usize, 16] {
+        let cfg = PassConfig::all();
+        type Payload = (Snapshot, Vec<i32>);
+        let kernels: Vec<(&str, Box<dyn Fn(ExecTier) -> Payload + '_>)> = vec![
+            (
+                "reduce",
+                Box::new(|tier| {
+                    let mut scr = KernelScratch::default();
+                    scr.dpu.set_exec_tier(tier);
+                    let o = reduce::run_reduce_cfg_with(&mut scr, &cfg, tasklets, &i32s)
+                        .expect("verified reduce run");
+                    (
+                        Snapshot {
+                            launch: o.launch,
+                            tasklet_cycles: o.tasklet_cycles,
+                            wram: scr.dpu.wram.as_slice().to_vec(),
+                        },
+                        vec![o.sum],
+                    )
+                }),
+            ),
+            (
+                "histogram",
+                Box::new(|tier| {
+                    let mut scr = KernelScratch::default();
+                    scr.dpu.set_exec_tier(tier);
+                    let o = histogram::run_histogram_cfg_with(&mut scr, &cfg, tasklets, 256, &bytes)
+                        .expect("verified histogram run");
+                    (
+                        Snapshot {
+                            launch: o.launch,
+                            tasklet_cycles: o.tasklet_cycles,
+                            wram: scr.dpu.wram.as_slice().to_vec(),
+                        },
+                        o.hist.iter().map(|&v| v as i32).collect(),
+                    )
+                }),
+            ),
+            (
+                "scan",
+                Box::new(|tier| {
+                    let mut scr = KernelScratch::default();
+                    scr.dpu.set_exec_tier(tier);
+                    let o = scan::run_scan_cfg_with(&mut scr, &cfg, tasklets, &i32s)
+                        .expect("verified scan run");
+                    (
+                        Snapshot {
+                            launch: o.launch,
+                            tasklet_cycles: o.tasklet_cycles,
+                            wram: scr.dpu.wram.as_slice().to_vec(),
+                        },
+                        o.out,
+                    )
+                }),
+            ),
+            (
+                "select",
+                Box::new(|tier| {
+                    let mut scr = KernelScratch::default();
+                    scr.dpu.set_exec_tier(tier);
+                    let o = select::run_select_cfg_with(&mut scr, &cfg, tasklets, &i32s)
+                        .expect("verified select run");
+                    (
+                        Snapshot {
+                            launch: o.launch,
+                            tasklet_cycles: o.tasklet_cycles,
+                            wram: scr.dpu.wram.as_slice().to_vec(),
+                        },
+                        o.out,
+                    )
+                }),
+            ),
+        ];
+        for (name, run) in &kernels {
+            let reference = run(ExecTier::Stepped);
+            for tier in FAST_TIERS {
+                assert_eq!(
+                    reference,
+                    run(tier),
+                    "{name} ({tasklets}T) diverged on {}",
+                    tier.name()
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn mid_fleet_fault_is_tier_invariant() {
     // One DPU (set index 37) faults via a host-planted flag; the fleet
