@@ -1,0 +1,238 @@
+//! §Chaos — self-healing serving under deterministic fault plans.
+//!
+//! Drives the sharded serving stack (rust/src/plane/ behind
+//! rust/src/chaos/) through seeded [`ChaosPlan`]s and measures what
+//! robustness costs: modeled req/s fault-free vs under faults, goodput
+//! (fraction of requests served bit-identical to the fault-free run —
+//! the keystone says 1.0 whenever every shard keeps ≥1 usable DPU),
+//! and recovery latency on the modeled clock. A replica-loss scenario
+//! rides along: two replicas behind the router, a plan-scheduled loss,
+//! traffic re-routed to the survivor with zero wrong answers.
+//!
+//! Everything here is threadless and deterministic — coordinators are
+//! driven directly (no `GemvServer` worker threads), so every rate row
+//! in `BENCH_serving.json` is a pure function of (seed, shape, tier)
+//! and CI can gate it exactly across execution tiers
+//! (`tools/check_perf_regression.py` vs `ci/BENCH_serving_baseline.json`).
+//! `PERF_SMOKE=1` shrinks the request count to CI size.
+
+mod common;
+
+use common::{check, footer, timed};
+use upmem_unleashed::bench_support::json::{json_perf_report, PerfMeta, WorkloadEntry};
+use upmem_unleashed::bench_support::table::{f1, ratio, Table};
+use upmem_unleashed::chaos::{ChaosConfig, ChaosInjector, ChaosPlan, SelfHealingCoordinator};
+use upmem_unleashed::coordinator::router::{Policy, Router};
+use upmem_unleashed::dpu::default_exec_tier;
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::kernels::gemv::GemvVariant;
+use upmem_unleashed::plane::{NumaBalanced, PlacementPolicy, ShardMap, ShardedGemvCoordinator};
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::rng::Rng;
+
+const ROWS: u32 = 256;
+const COLS: u32 = 1024;
+const BATCH: usize = 4;
+/// Committed chaos seeds — CI replays exactly these.
+const SEEDS: [u64; 3] = [11, 23, 47];
+
+fn build() -> ShardedGemvCoordinator {
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    let sets = sys.alloc_shards(&NumaBalanced, 2, 1).expect("2 shards x 1 rank");
+    let map = ShardMap::new(sets, NumaBalanced.name()).expect("shard map");
+    ShardedGemvCoordinator::new(sys, map, GemvVariant::I8Opt, 8)
+}
+
+fn main() {
+    let smoke = std::env::var("PERF_SMOKE").is_ok();
+    if smoke {
+        println!("[chaos_serving] PERF_SMOKE set: CI-sized request stream");
+    }
+    let requests: usize = if smoke { 12 } else { 48 };
+    let (_, wall) = timed(|| {
+        let mut rng = Rng::new(4242);
+        let m = rng.i8_vec((ROWS * COLS) as usize);
+        let xs: Vec<Vec<i8>> = (0..requests).map(|_| rng.i8_vec(COLS as usize)).collect();
+        let mut entries: Vec<WorkloadEntry> = Vec::new();
+        let mut table = Table::new(
+            "§Chaos — self-healing serving under deterministic fault plans",
+            &["scenario", "req/s (modeled)", "goodput", "quarantines", "retries", "recovery s"],
+        );
+
+        // Fault-free reference: the same request stream, no injector.
+        let mut c = build();
+        c.preload_matrix(ROWS, COLS, &m).expect("preload");
+        let t0 = c.sys.modeled_now();
+        let mut ys_free: Vec<Vec<i32>> = Vec::with_capacity(requests);
+        for chunk in xs.chunks(BATCH) {
+            let views: Vec<&[i8]> = chunk.iter().map(|v| v.as_slice()).collect();
+            let (ys, _) = c.gemv_pipelined(&views).expect("fault-free gemv");
+            ys_free.extend(ys);
+        }
+        let free_s = c.sys.sync_all() - t0;
+        let free_reqps = requests as f64 / free_s;
+        table.row(&[
+            "fault-free".into(),
+            f1(free_reqps),
+            "1.000".into(),
+            "0".into(),
+            "0".into(),
+            "0.0000".into(),
+        ]);
+        entries.push(
+            WorkloadEntry::new("chaos serving modeled req/s [fault-free]", 0.0, None)
+                .with_rate(free_reqps),
+        );
+
+        // Seeded fault runs: deaths + transients + a straggler window,
+        // victims drawn so every shard keeps coverage (the keystone's
+        // precondition — rust/tests/chaos_recovery.rs pins the rest).
+        for seed in SEEDS {
+            let mut c = build();
+            c.preload_matrix(ROWS, COLS, &m).expect("preload");
+            let victims: Vec<usize> =
+                (0..2).flat_map(|s| c.map().shards[s].set.dpus[32..40].to_vec()).collect();
+            let cfg = ChaosConfig { ops: 16, ..ChaosConfig::default() };
+            c.sys.install_chaos(ChaosInjector::new(ChaosPlan::generate(seed, &cfg, &victims)));
+            let mut sh = SelfHealingCoordinator::new(c);
+            let t0 = sh.inner.sys.modeled_now();
+            let mut ys: Vec<Vec<i32>> = Vec::with_capacity(requests);
+            for chunk in xs.chunks(BATCH) {
+                let views: Vec<&[i8]> = chunk.iter().map(|v| v.as_slice()).collect();
+                let (batch, _) = sh.gemv_recovered(&views).expect("self-healing serve");
+                ys.extend(batch);
+            }
+            let dur = sh.inner.sys.sync_all() - t0;
+            let reqps = requests as f64 / dur;
+            let exact = ys.iter().zip(&ys_free).filter(|(a, b)| a == b).count();
+            let goodput = exact as f64 / requests as f64;
+            let mx = sh.metrics();
+            check(
+                &format!("seed {seed}: goodput — every request bit-identical to fault-free"),
+                goodput,
+                1.0,
+                1.0,
+            );
+            check(
+                &format!("seed {seed}: faults cost throughput (fault-free / faulted req/s)"),
+                free_reqps / reqps,
+                1.0,
+                1e9,
+            );
+            table.row(&[
+                format!("seeded faults [seed={seed}]"),
+                f1(reqps),
+                format!("{goodput:.3}"),
+                mx.quarantined.len().to_string(),
+                mx.retries.to_string(),
+                format!("{:.4}", mx.recovery_s),
+            ]);
+            entries.push(
+                WorkloadEntry::new(format!("chaos serving modeled req/s [seed={seed}]"), 0.0, None)
+                    .with_rate(reqps),
+            );
+            entries.push(
+                WorkloadEntry::new(
+                    format!("chaos goodput under faults (fraction) [seed={seed}]"),
+                    0.0,
+                    None,
+                )
+                .with_rate(goodput),
+            );
+            // Informational (ungated: host-independent but a cost, not a
+            // rate): total modeled seconds spent inside recovery.
+            entries.push(WorkloadEntry::new(
+                format!("chaos recovery latency (modeled s, informational) [seed={seed}]"),
+                mx.recovery_s,
+                None,
+            ));
+        }
+
+        // Replica loss: two replicas behind the router; the plan
+        // schedules a loss (interpreted at batch granularity), the
+        // survivor absorbs the rest of the stream exactly.
+        let n_batches = xs.chunks(BATCH).count();
+        let cfg = ChaosConfig {
+            ops: n_batches as u64,
+            dpu_deaths: 0,
+            transient_launches: 0,
+            transient_transfers: 0,
+            stragglers: 0,
+            replica_losses: 1,
+            replicas: 2,
+            ..ChaosConfig::default()
+        };
+        let losses = ChaosPlan::generate(SEEDS[0], &cfg, &[]).replica_losses();
+        let mut reps: Vec<ShardedGemvCoordinator> = (0..2)
+            .map(|_| {
+                let mut c = build();
+                c.preload_matrix(ROWS, COLS, &m).expect("replica preload");
+                c
+            })
+            .collect();
+        let mut router = Router::new(2, Policy::RoundRobin);
+        let mut ys: Vec<Vec<i32>> = Vec::with_capacity(requests);
+        for (i, chunk) in xs.chunks(BATCH).enumerate() {
+            for &(at, r) in &losses {
+                if at as usize <= i + 1 && !router.is_evicted(r) {
+                    router.evict(r);
+                    println!("  replica {r} lost before batch {} (plan op {at})", i + 1);
+                }
+            }
+            let r = router.try_dispatch().expect("a survivor remains");
+            let views: Vec<&[i8]> = chunk.iter().map(|v| v.as_slice()).collect();
+            let (batch, _) = reps[r].gemv_pipelined(&views).expect("replica serve");
+            ys.extend(batch);
+            router.complete(r);
+        }
+        let exact = ys.iter().zip(&ys_free).filter(|(a, b)| a == b).count();
+        let goodput = exact as f64 / requests as f64;
+        check("replica loss: goodput through the surviving replica", goodput, 1.0, 1.0);
+        println!(
+            "  replica dispatch split: {} / {} batches (evicted replica serves nothing \
+             after its loss)",
+            router.dispatched(0),
+            router.dispatched(1)
+        );
+        table.row(&[
+            "replica loss (2 replicas, router)".into(),
+            "—".into(),
+            format!("{goodput:.3}"),
+            "0".into(),
+            "0".into(),
+            "0.0000".into(),
+        ]);
+        entries.push(
+            WorkloadEntry::new("chaos replica-loss goodput (fraction)", 0.0, None)
+                .with_rate(goodput),
+        );
+
+        table.print();
+        println!(
+            "fault-free {:.1} req/s; robustness overhead is visible in the per-seed rows \
+             ({} of throughput is the worst committed seed)",
+            free_reqps,
+            ratio(
+                entries
+                    .iter()
+                    .filter(|e| e.name.starts_with("chaos serving modeled req/s [seed"))
+                    .filter_map(|e| e.rate)
+                    .fold(f64::INFINITY, f64::min)
+                    / free_reqps
+            )
+        );
+
+        let meta = PerfMeta {
+            exec_tier: default_exec_tier().name().to_string(),
+            smoke,
+            launch_workers: PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware)
+                .launch_workers(),
+        };
+        let json = json_perf_report(&entries, Some(&meta));
+        match std::fs::write("BENCH_serving.json", &json) {
+            Ok(()) => println!("wrote BENCH_serving.json ({} entries)", entries.len()),
+            Err(e) => eprintln!("could not write BENCH_serving.json: {e}"),
+        }
+    });
+    footer("chaos_serving", wall);
+}

@@ -1,0 +1,338 @@
+//! The injector: executes a [`ChaosPlan`] against the op counter.
+//!
+//! [`crate::host::PimSystem`] consults an installed injector at every
+//! injection boundary (launch, broadcast, push, scatter). Each
+//! consultation advances the op counter by one, activates due events,
+//! and returns what the boundary must do: fail with a typed error,
+//! poison dead DPUs, and/or stretch modeled time. Everything is a pure
+//! function of the plan and the op sequence — no wall clock, no
+//! threads — so a failure run replays bit-identically from its seed.
+
+use super::plan::{ChaosPlan, FaultEvent};
+use crate::transfer::topology::{DpuId, SystemTopology};
+use crate::util::error::{Error, FaultSite};
+use std::collections::BTreeSet;
+
+/// Deterministic counters describing what the injector actually did.
+/// `PartialEq`/`Eq` so reproducibility tests compare whole runs.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    /// Total consultations (the op counter).
+    pub ops: u64,
+    /// Transient launch failures fired.
+    pub launch_errors: u64,
+    /// Transient transfer failures fired.
+    pub transfer_errors: u64,
+    /// DPUs marked dead (rank deaths expanded).
+    pub dpu_deaths: u64,
+    /// Consultations whose modeled time was straggler-stretched.
+    pub straggled_ops: u64,
+    /// Human-readable fire log, in op order.
+    pub log: Vec<String>,
+}
+
+/// What a launch boundary must do.
+#[derive(Debug, Clone)]
+pub struct LaunchOutcome {
+    /// Fail the launch before any DPU executes (transient API failure).
+    pub error: Option<Error>,
+    /// Launched DPUs that are dead: poison each so its `launch_with`
+    /// faults with `DeviceFailure` through the real fleet machinery.
+    pub poison: Vec<DpuId>,
+    /// Straggler multiplier for the launch's modeled compute seconds.
+    pub factor: f64,
+}
+
+/// What a transfer boundary must do.
+#[derive(Debug, Clone)]
+pub struct TransferOutcome {
+    /// Fail the transfer before any byte moves.
+    pub error: Option<Error>,
+    /// Straggler multiplier for the transfer's modeled bus seconds.
+    pub factor: f64,
+}
+
+/// Plan executor, installed into a `PimSystem` via
+/// [`crate::host::PimSystem::install_chaos`].
+#[derive(Debug, Clone)]
+pub struct ChaosInjector {
+    plan: ChaosPlan,
+    /// One flag per plan event: one-shot events fire exactly once.
+    fired: Vec<bool>,
+    op: u64,
+    /// Permanently dead DPUs (poisoned on every launch that includes
+    /// them, until quarantine removes them from the launched sets).
+    dead: BTreeSet<DpuId>,
+    stats: ChaosStats,
+}
+
+impl ChaosInjector {
+    pub fn new(plan: ChaosPlan) -> ChaosInjector {
+        let fired = vec![false; plan.events().len()];
+        ChaosInjector { plan, fired, op: 0, dead: BTreeSet::new(), stats: ChaosStats::default() }
+    }
+
+    /// Consultations so far.
+    pub fn op(&self) -> u64 {
+        self.op
+    }
+
+    pub fn stats(&self) -> &ChaosStats {
+        &self.stats
+    }
+
+    pub fn plan(&self) -> &ChaosPlan {
+        &self.plan
+    }
+
+    /// DPUs currently dead under the plan.
+    pub fn dead(&self) -> &BTreeSet<DpuId> {
+        &self.dead
+    }
+
+    /// Advance the op counter and activate due permanent deaths.
+    fn tick(&mut self, topo: &SystemTopology) {
+        self.op += 1;
+        self.stats.ops = self.op;
+        for (i, ev) in self.plan.events().iter().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            match ev {
+                FaultEvent::DpuDeath { at, dpu } if *at <= self.op => {
+                    self.fired[i] = true;
+                    if self.dead.insert(*dpu) {
+                        self.stats.dpu_deaths += 1;
+                    }
+                    self.stats.log.push(format!("op {}: dpu {} died", self.op, dpu));
+                }
+                FaultEvent::RankDeath { at, rank } if *at <= self.op => {
+                    self.fired[i] = true;
+                    for d in topo.dpus_of_rank(*rank) {
+                        if self.dead.insert(d) {
+                            self.stats.dpu_deaths += 1;
+                        }
+                    }
+                    self.stats.log.push(format!("op {}: rank {} died", self.op, rank));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Fire at most one due one-shot transient of the requested kind.
+    fn fire_transient(&mut self, launch: bool) -> bool {
+        for (i, ev) in self.plan.events().iter().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            let due = match ev {
+                FaultEvent::TransientLaunch { at } if launch => *at <= self.op,
+                FaultEvent::TransientTransfer { at } if !launch => *at <= self.op,
+                _ => false,
+            };
+            if due {
+                self.fired[i] = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn straggle(&self, topo: &SystemTopology, ranks: &[usize]) -> f64 {
+        let mut f = 1.0f64;
+        for ev in self.plan.events() {
+            if let FaultEvent::Straggler { from, to, socket, factor } = ev {
+                if *from <= self.op
+                    && self.op <= *to
+                    && ranks.iter().any(|&r| topo.rank_loc(r).socket == *socket)
+                {
+                    f = f.max(*factor);
+                }
+            }
+        }
+        f
+    }
+
+    /// Non-incrementing straggler query for timing-only paths (bus
+    /// reservations): evaluated at the *current* op.
+    pub fn straggler_factor(&self, topo: &SystemTopology, ranks: &[usize]) -> f64 {
+        self.straggle(topo, ranks)
+    }
+
+    /// Consult at a fleet-launch boundary (+1 op).
+    pub fn on_launch(&mut self, topo: &SystemTopology, dpus: &[DpuId]) -> LaunchOutcome {
+        self.tick(topo);
+        let mut ranks: Vec<usize> = dpus.iter().map(|&d| topo.rank_of_dpu(d)).collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        let factor = self.straggle(topo, &ranks);
+        if factor > 1.0 {
+            self.stats.straggled_ops += 1;
+        }
+        let poison: Vec<DpuId> =
+            dpus.iter().copied().filter(|d| self.dead.contains(d)).collect();
+        let error = if self.fire_transient(true) {
+            self.stats.launch_errors += 1;
+            let site = site_of(topo, dpus.first().copied());
+            self.stats
+                .log
+                .push(format!("op {}: transient launch failure ({site})", self.op));
+            Some(Error::LaunchFailed {
+                site,
+                transient: true,
+                msg: format!("injected transient launch failure at op {}", self.op),
+            })
+        } else {
+            None
+        };
+        LaunchOutcome { error, poison, factor }
+    }
+
+    /// Consult at a transfer boundary (+1 op).
+    pub fn on_transfer(&mut self, topo: &SystemTopology, ranks: &[usize]) -> TransferOutcome {
+        self.tick(topo);
+        let factor = self.straggle(topo, ranks);
+        if factor > 1.0 {
+            self.stats.straggled_ops += 1;
+        }
+        let error = if self.fire_transient(false) {
+            self.stats.transfer_errors += 1;
+            let rank = ranks.first().copied();
+            let site = FaultSite {
+                dpu: None,
+                rank,
+                socket: rank.map(|r| topo.rank_loc(r).socket),
+            };
+            self.stats
+                .log
+                .push(format!("op {}: transient transfer failure ({site})", self.op));
+            Some(Error::TransferFailed {
+                site,
+                transient: true,
+                msg: format!("injected transient transfer failure at op {}", self.op),
+            })
+        } else {
+            None
+        };
+        TransferOutcome { error, factor }
+    }
+}
+
+fn site_of(topo: &SystemTopology, dpu: Option<DpuId>) -> FaultSite {
+    match dpu {
+        Some(d) => {
+            let r = topo.rank_of_dpu(d);
+            FaultSite {
+                dpu: Some(d),
+                rank: Some(r),
+                socket: Some(topo.rank_loc(r).socket),
+            }
+        }
+        None => FaultSite::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::error::ErrorClass;
+
+    fn topo() -> SystemTopology {
+        SystemTopology::pristine()
+    }
+
+    #[test]
+    fn dpu_death_activates_at_its_op_and_poisons_every_launch() {
+        let plan = ChaosPlan::from_events(vec![FaultEvent::DpuDeath { at: 2, dpu: 5 }]);
+        let mut inj = ChaosInjector::new(plan);
+        let t = topo();
+        let out = inj.on_launch(&t, &[4, 5, 6]);
+        assert!(out.poison.is_empty(), "op 1 < at 2: nothing dead yet");
+        assert!(out.error.is_none());
+        let out = inj.on_launch(&t, &[4, 5, 6]);
+        assert_eq!(out.poison, vec![5], "death active at op 2");
+        // Permanent: still poisoned on later launches that include it.
+        let out = inj.on_launch(&t, &[5]);
+        assert_eq!(out.poison, vec![5]);
+        // …but gone once quarantine removed it from the launched set.
+        let out = inj.on_launch(&t, &[4, 6]);
+        assert!(out.poison.is_empty());
+        assert_eq!(inj.stats().dpu_deaths, 1);
+    }
+
+    #[test]
+    fn rank_death_expands_to_all_64_dpus() {
+        let plan = ChaosPlan::from_events(vec![FaultEvent::RankDeath { at: 1, rank: 2 }]);
+        let mut inj = ChaosInjector::new(plan);
+        let t = topo();
+        let dpus: Vec<DpuId> = (2 * 64..3 * 64).collect();
+        let out = inj.on_launch(&t, &dpus);
+        assert_eq!(out.poison.len(), 64);
+        assert_eq!(inj.stats().dpu_deaths, 64);
+    }
+
+    #[test]
+    fn transients_fire_once_with_typed_context() {
+        let plan = ChaosPlan::from_events(vec![
+            FaultEvent::TransientLaunch { at: 1 },
+            FaultEvent::TransientTransfer { at: 1 },
+        ]);
+        let mut inj = ChaosInjector::new(plan);
+        let t = topo();
+        let out = inj.on_launch(&t, &[130]); // rank 2, socket 0
+        let e = out.error.expect("due transient fires");
+        assert_eq!(e.class(), ErrorClass::Transient);
+        assert_eq!(e.site().dpu, Some(130));
+        assert_eq!(e.site().rank, Some(2));
+        assert_eq!(e.site().socket, Some(0));
+        // One-shot: the retry of the same launch succeeds.
+        assert!(inj.on_launch(&t, &[130]).error.is_none());
+        let out = inj.on_transfer(&t, &[3]);
+        let e = out.error.expect("transfer transient fires");
+        assert!(e.is_transient());
+        assert_eq!(e.site().rank, Some(3));
+        assert!(inj.on_transfer(&t, &[3]).error.is_none());
+        assert_eq!(inj.stats().launch_errors, 1);
+        assert_eq!(inj.stats().transfer_errors, 1);
+        assert_eq!(inj.stats().ops, 4);
+    }
+
+    #[test]
+    fn straggler_window_scales_matching_socket_only() {
+        let plan = ChaosPlan::from_events(vec![FaultEvent::Straggler {
+            from: 2,
+            to: 3,
+            socket: 1,
+            factor: 3.0,
+        }]);
+        let mut inj = ChaosInjector::new(plan);
+        let t = topo();
+        // Socket-1 ranks start at TOTAL_RANKS/2 = 20.
+        assert_eq!(inj.on_transfer(&t, &[20]).factor, 1.0, "op 1 before window");
+        assert_eq!(inj.on_transfer(&t, &[20]).factor, 3.0, "op 2 in window");
+        assert_eq!(inj.on_transfer(&t, &[1]).factor, 1.0, "socket 0 unaffected");
+        assert_eq!(inj.on_transfer(&t, &[20]).factor, 1.0, "op 4 past window");
+        assert_eq!(inj.stats().straggled_ops, 1);
+    }
+
+    #[test]
+    fn identical_consultation_sequences_yield_identical_stats() {
+        let victims: Vec<DpuId> = (0..8).collect();
+        let cfg = super::super::plan::ChaosConfig::default();
+        let run = || {
+            let plan = ChaosPlan::generate(42, &cfg, &victims);
+            let mut inj = ChaosInjector::new(plan);
+            let t = topo();
+            for i in 0..40u64 {
+                if i % 3 == 0 {
+                    let _ = inj.on_transfer(&t, &[(i % 4) as usize]);
+                } else {
+                    let _ = inj.on_launch(&t, &[(i % 8) as usize, 8 + (i % 8) as usize]);
+                }
+            }
+            inj.stats().clone()
+        };
+        assert_eq!(run(), run(), "same seed + same op sequence = same stats, exactly");
+    }
+}

@@ -1,0 +1,63 @@
+//! Deterministic fault injection + self-healing recovery.
+//!
+//! Real UPMEM deployments lose DPUs (the paper's server ships with nine
+//! disabled, §II), suffer transient launch/transfer glitches, and see
+//! straggler sockets. This module makes all of that *reproducible*: a
+//! [`ChaosPlan`] — an explicit event list or a seeded PRNG schedule —
+//! drives a [`ChaosInjector`] installed into
+//! [`crate::host::PimSystem`], and a [`SelfHealingCoordinator`] wraps
+//! the sharded GEMV coordinator with retry, quarantine and rebalance so
+//! the serving stack survives the plan without hand-holding.
+//!
+//! ## Determinism model
+//!
+//! The injector is clocked by a single **op counter**, not wall time or
+//! modeled seconds: every consultation at an injection boundary
+//! (fleet launch, broadcast, push, scatter) increments it by one, and
+//! plan events fire at fixed op thresholds. Because the simulator is
+//! eager and single-sequenced at these boundaries, the same seed (or
+//! the same explicit event list) reproduces the exact same fault
+//! sequence, retry counts and recovery metrics — bit-for-bit, across
+//! all three [`crate::dpu::ExecTier`]s.
+//!
+//! Injection boundaries (each +1 op): [`crate::host::PimSystem::launch_async`],
+//! [`crate::host::PimSystem::broadcast_untimed`] (and therefore
+//! `broadcast`/`broadcast_async`, which delegate to it),
+//! [`crate::host::PimSystem::push_xfer`] and
+//! [`crate::host::PimSystem::scatter_socket_pinned`]. Pulls and symbol
+//! writes are *not* injected — they keep op counts small and stable.
+//! Straggler windows additionally scale modeled seconds on every bus
+//! reservation via a non-incrementing query.
+//!
+//! ## Failure → recovery flow
+//!
+//! * **Permanent DPU/rank death** poisons the victim's next launch with
+//!   [`crate::util::error::FaultKind::DeviceFailure`], so the injected
+//!   death flows through the *real* fleet-launch fault machinery. The
+//!   recovery layer classifies it permanent ([`crate::Error::class`]),
+//!   quarantines the DPU through the existing delta-only
+//!   [`crate::plane::ShardedGemvCoordinator::mark_faulty_and_rebalance`],
+//!   and retries the batch.
+//! * **Transient launch/transfer errors** surface as typed
+//!   [`crate::Error::LaunchFailed`] / [`crate::Error::TransferFailed`]
+//!   with `{dpu, rank, socket}` context; the recovery layer retries
+//!   with bounded exponential backoff (modeled clock), striking repeat
+//!   offenders into quarantine.
+//! * **Stragglers** stretch modeled time only — results are unchanged.
+//! * **Replica loss** is a serving-layer event: the plan records it,
+//!   the harness kills the replica, and
+//!   [`crate::coordinator::ReplicaPool`] auto-evicts + re-routes.
+//!
+//! **Keystone property** (pinned in `rust/tests/chaos_recovery.rs`):
+//! for any plan whose permanent faults leave every shard ≥1 usable DPU
+//! (and ≥1 replica per pool), the served `y` vectors are **bit-identical**
+//! to the fault-free run. The GEMV is a pure function of the resident
+//! matrix and `x`; recovery only ever re-executes or re-places it.
+
+pub mod injector;
+pub mod plan;
+pub mod recovery;
+
+pub use injector::{ChaosInjector, ChaosStats, LaunchOutcome, TransferOutcome};
+pub use plan::{ChaosConfig, ChaosPlan, FaultEvent};
+pub use recovery::{DegradedMode, RecoveryMetrics, RetryPolicy, SelfHealingCoordinator};

@@ -1,0 +1,245 @@
+//! Fault plans: *what* goes wrong and exactly *when*, in injector ops.
+//!
+//! A [`ChaosPlan`] is either an explicit event list (tests pin op
+//! arithmetic with these) or generated from a seed through the crate's
+//! deterministic PRNG — the same seed always yields the same plan, and
+//! the plan's op thresholds make the whole failure run reproducible.
+
+use crate::transfer::topology::{DpuId, SOCKETS};
+use crate::util::rng::Rng;
+
+/// One scheduled failure. `at`/`from`/`to` are injector **op counts**
+/// (see [`crate::chaos`] module docs), starting at 1 for the first
+/// consulted operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// Permanent death of one DPU: from op `at` on, every launch that
+    /// includes it faults with `DeviceFailure` until it is quarantined.
+    DpuDeath { at: u64, dpu: DpuId },
+    /// Permanent death of a whole rank (all 64 of its DPUs).
+    RankDeath { at: u64, rank: usize },
+    /// One transient launch failure, fired at the first launch op
+    /// `>= at` (one-shot: the identical retry succeeds).
+    TransientLaunch { at: u64 },
+    /// One transient transfer failure, fired at the first transfer op
+    /// `>= at`.
+    TransientTransfer { at: u64 },
+    /// Modeled-latency multiplier on one socket over the op window
+    /// `[from, to]` (results unchanged; only modeled seconds stretch).
+    Straggler { from: u64, to: u64, socket: usize, factor: f64 },
+    /// Loss of serving replica `replica` at op `at`. Consumed by the
+    /// serving harness, not by `PimSystem` — replicas are a layer
+    /// above the device plane.
+    ReplicaLoss { at: u64, replica: usize },
+}
+
+impl FaultEvent {
+    /// The op at which the event first takes effect (the sort key).
+    pub fn at(&self) -> u64 {
+        match self {
+            FaultEvent::DpuDeath { at, .. }
+            | FaultEvent::RankDeath { at, .. }
+            | FaultEvent::TransientLaunch { at }
+            | FaultEvent::TransientTransfer { at }
+            | FaultEvent::ReplicaLoss { at, .. } => *at,
+            FaultEvent::Straggler { from, .. } => *from,
+        }
+    }
+}
+
+/// Knobs for seeded plan generation ([`ChaosPlan::generate`]).
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Horizon: every event lands at an op in `[1, ops]`.
+    pub ops: u64,
+    /// Permanent single-DPU deaths, drawn from the caller's victim list
+    /// (the caller restricts victims so every shard keeps coverage).
+    pub dpu_deaths: usize,
+    /// One-shot transient launch failures.
+    pub transient_launches: usize,
+    /// One-shot transient transfer failures.
+    pub transient_transfers: usize,
+    /// Straggler windows (random socket, window within the horizon).
+    pub stragglers: usize,
+    /// Stragglers slow their socket by an integer factor in
+    /// `[2, straggler_max_factor]`.
+    pub straggler_max_factor: u64,
+    /// Replica-loss events (0 disables).
+    pub replica_losses: usize,
+    /// Replica count the losses index into (0 disables).
+    pub replicas: usize,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            ops: 64,
+            dpu_deaths: 2,
+            transient_launches: 2,
+            transient_transfers: 1,
+            stragglers: 1,
+            straggler_max_factor: 4,
+            replica_losses: 0,
+            replicas: 0,
+        }
+    }
+}
+
+/// A schedule of [`FaultEvent`]s, sorted by activation op.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ChaosPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl ChaosPlan {
+    /// Build from an explicit event list (sorted by activation op;
+    /// ties keep the given order).
+    pub fn from_events(mut events: Vec<FaultEvent>) -> ChaosPlan {
+        events.sort_by_key(|e| e.at());
+        ChaosPlan { events }
+    }
+
+    /// Seeded generation: the same `(seed, cfg, victims)` triple always
+    /// yields the same plan. Permanent deaths are drawn from `victims`
+    /// only — pass the DPUs whose loss the topology can absorb (e.g.
+    /// every shard's tail DPUs), so a generated plan always leaves ≥1
+    /// usable DPU per shard and the keystone bit-exactness property
+    /// holds.
+    pub fn generate(seed: u64, cfg: &ChaosConfig, victims: &[DpuId]) -> ChaosPlan {
+        let mut rng = Rng::new(seed);
+        let mut events = Vec::new();
+        let mut pool: Vec<DpuId> = victims.to_vec();
+        rng.shuffle(&mut pool);
+        for &dpu in pool.iter().take(cfg.dpu_deaths) {
+            events.push(FaultEvent::DpuDeath { at: rng.range_u64(1, cfg.ops), dpu });
+        }
+        for _ in 0..cfg.transient_launches {
+            events.push(FaultEvent::TransientLaunch { at: rng.range_u64(1, cfg.ops) });
+        }
+        for _ in 0..cfg.transient_transfers {
+            events.push(FaultEvent::TransientTransfer { at: rng.range_u64(1, cfg.ops) });
+        }
+        for _ in 0..cfg.stragglers {
+            let from = rng.range_u64(1, cfg.ops);
+            events.push(FaultEvent::Straggler {
+                from,
+                to: from + rng.range_u64(1, cfg.ops),
+                socket: rng.below(SOCKETS as u64) as usize,
+                factor: rng.range_u64(2, cfg.straggler_max_factor.max(2)) as f64,
+            });
+        }
+        if cfg.replicas > 0 {
+            for _ in 0..cfg.replica_losses {
+                events.push(FaultEvent::ReplicaLoss {
+                    at: rng.range_u64(1, cfg.ops),
+                    replica: rng.below(cfg.replicas as u64) as usize,
+                });
+            }
+        }
+        ChaosPlan::from_events(events)
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// `(at, replica)` pairs in activation order — the serving harness
+    /// consumes these (the device-plane injector ignores them).
+    pub fn replica_losses(&self) -> Vec<(u64, usize)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::ReplicaLoss { at, replica } => Some((*at, *replica)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// DPUs the plan kills outright via [`FaultEvent::DpuDeath`]
+    /// (rank deaths are expanded against the topology at fire time).
+    pub fn dead_dpus(&self) -> Vec<DpuId> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::DpuDeath { dpu, .. } => Some(*dpu),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_events_sorts_by_activation_op() {
+        let plan = ChaosPlan::from_events(vec![
+            FaultEvent::TransientLaunch { at: 9 },
+            FaultEvent::Straggler { from: 2, to: 5, socket: 0, factor: 2.0 },
+            FaultEvent::DpuDeath { at: 4, dpu: 7 },
+        ]);
+        let ats: Vec<u64> = plan.events().iter().map(|e| e.at()).collect();
+        assert_eq!(ats, vec![2, 4, 9]);
+    }
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        let victims: Vec<DpuId> = (0..32).collect();
+        let cfg = ChaosConfig::default();
+        let a = ChaosPlan::generate(11, &cfg, &victims);
+        let b = ChaosPlan::generate(11, &cfg, &victims);
+        assert_eq!(a, b, "same seed, same plan");
+        let c = ChaosPlan::generate(12, &cfg, &victims);
+        assert_ne!(a, c, "different seed, different plan");
+    }
+
+    #[test]
+    fn generation_respects_config_counts_and_bounds() {
+        let victims: Vec<DpuId> = (100..140).collect();
+        let cfg = ChaosConfig {
+            ops: 32,
+            dpu_deaths: 3,
+            transient_launches: 2,
+            transient_transfers: 2,
+            stragglers: 2,
+            straggler_max_factor: 5,
+            replica_losses: 2,
+            replicas: 4,
+        };
+        let plan = ChaosPlan::generate(77, &cfg, &victims);
+        assert_eq!(plan.len(), 3 + 2 + 2 + 2 + 2);
+        assert_eq!(plan.dead_dpus().len(), 3);
+        for d in plan.dead_dpus() {
+            assert!(victims.contains(&d), "deaths drawn from the victim list only");
+        }
+        for e in plan.events() {
+            assert!(e.at() >= 1 && e.at() <= 32, "activation in [1, ops]: {e:?}");
+            match e {
+                FaultEvent::Straggler { from, to, socket, factor } => {
+                    assert!(to > from);
+                    assert!(*socket < SOCKETS);
+                    assert!(*factor >= 2.0 && *factor <= 5.0);
+                }
+                FaultEvent::ReplicaLoss { replica, .. } => assert!(*replica < 4),
+                _ => {}
+            }
+        }
+        assert_eq!(plan.replica_losses().len(), 2);
+    }
+
+    #[test]
+    fn deaths_capped_by_victim_list() {
+        let cfg = ChaosConfig { dpu_deaths: 10, ..ChaosConfig::default() };
+        let plan = ChaosPlan::generate(5, &cfg, &[3, 4]);
+        assert_eq!(plan.dead_dpus().len(), 2, "cannot kill more DPUs than offered");
+    }
+}

@@ -1,0 +1,270 @@
+//! The recovery layer: a self-healing wrapper around the sharded GEMV
+//! coordinator.
+//!
+//! [`SelfHealingCoordinator`] owns a
+//! [`crate::plane::ShardedGemvCoordinator`] and turns its typed errors
+//! into policy: transient failures retry with bounded exponential
+//! backoff (modeled clock — determinism preserved), repeat offenders
+//! and permanent device deaths are quarantined through the existing
+//! delta-only rebalance, and a shard that loses its last usable DPU
+//! either fails loudly (default, [`DegradedMode::RetryUntilExact`]) or
+//! — behind an explicit opt-in — degrades to zero-filled rows
+//! ([`DegradedMode::PartialZeroFill`]).
+//!
+//! Retrying a whole batch is *correct* because the simulator is eager
+//! and the GEMV is a pure function of the resident matrix and `x`:
+//! a re-run after quarantine + rebalance serves bit-identical `y`.
+
+use crate::coordinator::{GemvExecutor, GemvTiming};
+use crate::plane::ShardedGemvCoordinator;
+use crate::transfer::topology::DpuId;
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// Bounded retry-with-backoff knobs. Backoff advances the **modeled**
+/// clock (never the host wall clock), so recovery latency shows up in
+/// modeled seconds and stays reproducible.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Max *consecutive* transient retries per batch (progress — a
+    /// successful quarantine — resets the count).
+    pub max_retries: u32,
+    /// First backoff pause, modeled seconds.
+    pub base_backoff_s: f64,
+    /// Exponential growth per consecutive retry.
+    pub multiplier: f64,
+    /// Transient strikes attributed to the same DPU before it is
+    /// quarantined as a repeat offender.
+    pub strike_threshold: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_retries: 8, base_backoff_s: 1e-4, multiplier: 2.0, strike_threshold: 3 }
+    }
+}
+
+/// What to do when a shard loses its last usable DPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DegradedMode {
+    /// Default: surface the typed coordinator error — served results
+    /// are exact or absent, never silently partial.
+    #[default]
+    RetryUntilExact,
+    /// Explicit opt-in: retire the shard and keep serving, with the
+    /// lost shard's rows zero-filled in every `y`.
+    PartialZeroFill,
+}
+
+/// Deterministic account of everything the recovery layer did.
+/// `PartialEq` so reproducibility tests compare whole runs (the `f64`
+/// fields are products of the same deterministic arithmetic).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveryMetrics {
+    /// Batch re-executions (one per handled failure).
+    pub retries: u64,
+    /// Transient errors seen (including during re-scatter retries).
+    pub transient_errors: u64,
+    /// DPUs quarantined, in quarantine order.
+    pub quarantined: Vec<DpuId>,
+    /// Successful delta rebalances.
+    pub rebalances: u64,
+    /// Matrix bytes re-pushed by those rebalances.
+    pub rebalanced_bytes: u64,
+    /// Total modeled backoff.
+    pub backoff_s: f64,
+    /// Modeled seconds spent inside failure handling (backoff +
+    /// rebalance clock movement) — the recovery-latency metric.
+    pub recovery_s: f64,
+    /// Batches served with ≥1 retired shard (partial mode only).
+    pub degraded_batches: u64,
+    /// Human-readable recovery log, in event order.
+    pub events: Vec<String>,
+}
+
+/// Self-healing serving executor: wraps the sharded coordinator with
+/// retry, quarantine and degradation policy. Implements
+/// [`GemvExecutor`], so it drops into [`crate::coordinator::GemvServer`]
+/// and [`crate::coordinator::ReplicaPool`] unchanged.
+pub struct SelfHealingCoordinator {
+    pub inner: ShardedGemvCoordinator,
+    pub policy: RetryPolicy,
+    pub mode: DegradedMode,
+    metrics: RecoveryMetrics,
+    strikes: BTreeMap<DpuId, u32>,
+}
+
+impl SelfHealingCoordinator {
+    pub fn new(inner: ShardedGemvCoordinator) -> SelfHealingCoordinator {
+        SelfHealingCoordinator {
+            inner,
+            policy: RetryPolicy::default(),
+            mode: DegradedMode::default(),
+            metrics: RecoveryMetrics::default(),
+            strikes: BTreeMap::new(),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: RetryPolicy) -> SelfHealingCoordinator {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_mode(mut self, mode: DegradedMode) -> SelfHealingCoordinator {
+        self.mode = mode;
+        self
+    }
+
+    pub fn metrics(&self) -> &RecoveryMetrics {
+        &self.metrics
+    }
+
+    pub fn into_inner(self) -> ShardedGemvCoordinator {
+        self.inner
+    }
+
+    /// Execute a batch, healing every recoverable failure along the
+    /// way. Returns exactly what a fault-free
+    /// [`ShardedGemvCoordinator::gemv_pipelined`] would (bit-identical
+    /// `y` as long as every shard keeps ≥1 usable DPU), or the typed
+    /// error of the first unrecoverable failure.
+    pub fn gemv_recovered(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, GemvTiming)> {
+        let mut attempt: u32 = 0;
+        loop {
+            match self.inner.gemv_pipelined(xs) {
+                Ok(out) => {
+                    if self.inner.retired_shards() > 0 {
+                        self.metrics.degraded_batches += 1;
+                    }
+                    return Ok(out);
+                }
+                Err(e) => {
+                    let t0 = self.inner.sys.modeled_now();
+                    self.handle_failure(e, &mut attempt)?;
+                    self.metrics.recovery_s += self.inner.sys.modeled_now() - t0;
+                    self.metrics.retries += 1;
+                }
+            }
+        }
+    }
+
+    fn handle_failure(&mut self, e: crate::Error, attempt: &mut u32) -> Result<()> {
+        if e.is_transient() {
+            self.metrics.transient_errors += 1;
+            if *attempt >= self.policy.max_retries {
+                return Err(e);
+            }
+            // Strike the implicated device; repeat offenders are
+            // quarantined even though each individual error was
+            // "transient" — a flapping DPU is operationally dead.
+            if let Some(d) = e.site().dpu {
+                let strikes = self.strikes.entry(d).or_insert(0);
+                *strikes += 1;
+                if *strikes >= self.policy.strike_threshold {
+                    self.metrics.events.push(format!(
+                        "dpu {d}: {} transient strikes, quarantining repeat offender",
+                        self.policy.strike_threshold
+                    ));
+                    self.quarantine(d)?;
+                }
+            }
+            let pause = self.policy.base_backoff_s * self.policy.multiplier.powi(*attempt as i32);
+            let now = self.inner.sys.modeled_now();
+            self.inner.sys.advance_clock(now + pause);
+            self.metrics.backoff_s += pause;
+            self.metrics
+                .events
+                .push(format!("transient failure, retry {} after {pause:.1e} s: {e}", *attempt + 1));
+            *attempt += 1;
+            Ok(())
+        } else {
+            // Permanent failure: without device context there is
+            // nothing to quarantine — propagate.
+            let Some(d) = e.site().dpu else { return Err(e) };
+            self.quarantine(d)?;
+            *attempt = 0; // quarantine is progress; reset the budget
+            Ok(())
+        }
+    }
+
+    /// Quarantine `dpu`: mark it faulty fleet-wide and delta-rebalance
+    /// its shard. A transient failure *inside* the rebalance (the
+    /// re-push glitching) retries just the re-scatter; a shard down to
+    /// its last DPU follows the degradation mode.
+    fn quarantine(&mut self, dpu: DpuId) -> Result<()> {
+        let shard = self.inner.map().shard_of_dpu(dpu);
+        match self.inner.mark_faulty_and_rebalance(dpu) {
+            Ok(bytes) => {
+                self.strikes.remove(&dpu);
+                self.metrics.quarantined.push(dpu);
+                if shard.is_some() {
+                    self.metrics.rebalances += 1;
+                    self.metrics.rebalanced_bytes += bytes;
+                }
+                self.metrics
+                    .events
+                    .push(format!("quarantined dpu {dpu} (shard {shard:?}), re-pushed {bytes} B"));
+                Ok(())
+            }
+            Err(re) if re.is_transient() => {
+                // Topology and shard map already updated; only the
+                // delta re-push glitched. Retrying the whole rebalance
+                // would no-op (the DPU left the map), so retry the
+                // re-scatter itself until the block is resident again.
+                let idx = shard.expect("transient rebalance failure implies an owning shard");
+                let mut tries = 0u32;
+                loop {
+                    match self.inner.rescatter_shard(idx) {
+                        Ok(bytes) => {
+                            self.strikes.remove(&dpu);
+                            self.metrics.quarantined.push(dpu);
+                            self.metrics.rebalances += 1;
+                            self.metrics.rebalanced_bytes += bytes;
+                            self.metrics.events.push(format!(
+                                "quarantined dpu {dpu} (shard {idx}), re-pushed {bytes} B after \
+                                 {tries} re-scatter retries"
+                            ));
+                            return Ok(());
+                        }
+                        Err(re2) if re2.is_transient() && tries < self.policy.max_retries => {
+                            self.metrics.transient_errors += 1;
+                            let pause =
+                                self.policy.base_backoff_s * self.policy.multiplier.powi(tries as i32);
+                            let now = self.inner.sys.modeled_now();
+                            self.inner.sys.advance_clock(now + pause);
+                            self.metrics.backoff_s += pause;
+                            tries += 1;
+                        }
+                        Err(re2) => return Err(re2),
+                    }
+                }
+            }
+            Err(re) => match self.mode {
+                DegradedMode::RetryUntilExact => Err(re),
+                DegradedMode::PartialZeroFill => {
+                    // The shard cannot survive (last usable DPU).
+                    // Retire it: its rows zero-fill, everything else
+                    // keeps serving exactly.
+                    let Some(idx) = shard else { return Err(re) };
+                    self.inner.sys.mark_faulty(dpu);
+                    self.inner.retire_shard(idx)?;
+                    self.metrics.events.push(format!(
+                        "shard {idx} lost its last usable DPU (dpu {dpu}) — retired, rows \
+                         zero-filled: {re}"
+                    ));
+                    Ok(())
+                }
+            },
+        }
+    }
+}
+
+impl GemvExecutor for SelfHealingCoordinator {
+    fn cols(&self) -> u32 {
+        self.inner.cols()
+    }
+
+    fn gemv_batch(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, GemvTiming)> {
+        self.gemv_recovered(xs)
+    }
+}

@@ -21,34 +21,85 @@ pub struct Router {
     outstanding: Vec<usize>,
     next_rr: usize,
     dispatched: Vec<u64>,
+    /// Replicas taken out of rotation (fault recovery): skipped by
+    /// dispatch until re-admitted.
+    evicted: Vec<bool>,
 }
 
 impl Router {
     pub fn new(n: usize, policy: Policy) -> Router {
         assert!(n >= 1);
-        Router { policy, outstanding: vec![0; n], next_rr: 0, dispatched: vec![0; n] }
+        Router {
+            policy,
+            outstanding: vec![0; n],
+            next_rr: 0,
+            dispatched: vec![0; n],
+            evicted: vec![false; n],
+        }
     }
 
     pub fn replicas(&self) -> usize {
         self.outstanding.len()
     }
 
+    /// Take `replica` out of rotation (dead or unhealthy). In-flight
+    /// bookkeeping is untouched — callers still `complete` what was
+    /// already dispatched.
+    pub fn evict(&mut self, replica: usize) {
+        self.evicted[replica] = true;
+    }
+
+    /// Return a recovered replica to rotation.
+    pub fn readmit(&mut self, replica: usize) {
+        self.evicted[replica] = false;
+    }
+
+    pub fn is_evicted(&self, replica: usize) -> bool {
+        self.evicted[replica]
+    }
+
+    /// Replicas currently in rotation.
+    pub fn admitted(&self) -> usize {
+        self.evicted.iter().filter(|&&e| !e).count()
+    }
+
     /// Pick a replica for the next request and mark it outstanding.
+    /// Panics when every replica is evicted — use [`Self::try_dispatch`]
+    /// when that is a reachable state.
     pub fn dispatch(&mut self) -> usize {
+        self.try_dispatch().expect("dispatch with every replica evicted")
+    }
+
+    /// Like [`Self::dispatch`], but returns `None` (cleanly, no panic)
+    /// when no replica is admitted.
+    pub fn try_dispatch(&mut self) -> Option<usize> {
         let n = self.outstanding.len();
+        if self.evicted.iter().all(|&e| e) {
+            return None;
+        }
         let pick = match self.policy {
             Policy::RoundRobin => {
-                let p = self.next_rr;
-                self.next_rr = (self.next_rr + 1) % n;
+                let mut p = self.next_rr;
+                while self.evicted[p] {
+                    p = (p + 1) % n;
+                }
+                self.next_rr = (p + 1) % n;
                 p
             }
             Policy::LeastOutstanding => {
-                let min = *self.outstanding.iter().min().unwrap();
+                let min = *self
+                    .outstanding
+                    .iter()
+                    .zip(&self.evicted)
+                    .filter(|&(_, &e)| !e)
+                    .map(|(o, _)| o)
+                    .min()
+                    .expect("at least one admitted replica");
                 // Break ties round-robin so load spreads.
                 let mut pick = 0;
                 for i in 0..n {
                     let cand = (self.next_rr + i) % n;
-                    if self.outstanding[cand] == min {
+                    if !self.evicted[cand] && self.outstanding[cand] == min {
                         pick = cand;
                         break;
                     }
@@ -59,7 +110,7 @@ impl Router {
         };
         self.outstanding[pick] += 1;
         self.dispatched[pick] += 1;
-        pick
+        Some(pick)
     }
 
     /// Mark a request complete on `replica`.
@@ -106,6 +157,56 @@ mod tests {
     fn complete_underflow_panics() {
         let mut r = Router::new(1, Policy::RoundRobin);
         r.complete(0);
+    }
+
+    #[test]
+    fn eviction_skips_replica_until_readmitted() {
+        let mut r = Router::new(3, Policy::RoundRobin);
+        r.evict(1);
+        assert!(r.is_evicted(1));
+        assert_eq!(r.admitted(), 2);
+        assert_eq!(
+            (0..4).map(|_| r.dispatch()).collect::<Vec<_>>(),
+            vec![0, 2, 0, 2],
+            "round-robin must skip the evicted replica"
+        );
+        r.readmit(1);
+        assert_eq!(r.admitted(), 3);
+        // next_rr points past the last pick; replica 1 is back in line.
+        assert_eq!((0..3).map(|_| r.dispatch()).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_ignores_evicted_minimum() {
+        let mut r = Router::new(2, Policy::LeastOutstanding);
+        // Load replica 1, then evict idle replica 0: despite replica 0
+        // having the global-minimum queue depth, traffic must go to 1.
+        r.dispatch(); // 0
+        let b = r.dispatch(); // 1
+        assert_eq!(b, 1);
+        r.evict(0);
+        for _ in 0..4 {
+            assert_eq!(r.dispatch(), 1);
+        }
+    }
+
+    #[test]
+    fn try_dispatch_none_when_all_evicted() {
+        let mut r = Router::new(2, Policy::RoundRobin);
+        r.evict(0);
+        r.evict(1);
+        assert_eq!(r.admitted(), 0);
+        assert_eq!(r.try_dispatch(), None);
+        r.readmit(1);
+        assert_eq!(r.try_dispatch(), Some(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "dispatch with every replica evicted")]
+    fn dispatch_panics_when_all_evicted() {
+        let mut r = Router::new(1, Policy::LeastOutstanding);
+        r.evict(0);
+        r.dispatch();
     }
 
     #[test]

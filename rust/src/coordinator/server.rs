@@ -116,10 +116,18 @@ impl ReplicaPool {
 
     /// Route a request to a replica; returns the chosen replica index
     /// (pass it to [`Self::complete`] when the response arrives) and
-    /// the response receiver.
+    /// the response receiver. Panics if every replica has been evicted
+    /// — use [`Self::try_submit`] when replica loss is in play.
     pub fn submit(&mut self, x: Vec<i8>) -> (usize, Receiver<Response>) {
         let replica = self.router.dispatch();
         (replica, self.clients[replica].submit(x))
+    }
+
+    /// Like [`Self::submit`], but returns `None` (no panic) when no
+    /// replica is currently admitted.
+    pub fn try_submit(&mut self, x: Vec<i8>) -> Option<(usize, Receiver<Response>)> {
+        let replica = self.router.try_dispatch()?;
+        Some((replica, self.clients[replica].submit(x)))
     }
 
     /// Mark the request routed to `replica` complete.
@@ -127,12 +135,37 @@ impl ReplicaPool {
         self.router.complete(replica);
     }
 
-    /// Route, wait, complete.
+    /// Take `replica` out of rotation (its server died or is being
+    /// drained). Requests already routed to it still complete normally.
+    pub fn evict(&mut self, replica: usize) {
+        self.router.evict(replica);
+    }
+
+    /// Return a recovered replica to rotation.
+    pub fn readmit(&mut self, replica: usize) {
+        self.router.readmit(replica);
+    }
+
+    /// Route, wait, complete — self-healing: a replica whose server has
+    /// gone away (closed response channel) is evicted from rotation and
+    /// the request is transparently re-routed to a survivor. Returns
+    /// `None` only when every replica is gone.
     pub fn call(&mut self, x: Vec<i8>) -> Option<Response> {
-        let (replica, rx) = self.submit(x);
-        let resp = rx.recv().ok();
-        self.complete(replica);
-        resp
+        loop {
+            let (replica, rx) = self.try_submit(x.clone())?;
+            match rx.recv() {
+                Ok(resp) => {
+                    self.complete(replica);
+                    return Some(resp);
+                }
+                Err(_) => {
+                    // Replica's worker is gone (shut down or panicked):
+                    // evict it and retry the request elsewhere.
+                    self.complete(replica);
+                    self.router.evict(replica);
+                }
+            }
+        }
     }
 
     pub fn router(&self) -> &Router {
@@ -322,6 +355,34 @@ mod tests {
         let (_, m1) = s1.shutdown();
         let (_, m2) = s2.shutdown();
         assert_eq!(m1.requests + m2.requests, 6);
+    }
+
+    #[test]
+    fn replica_loss_is_evicted_and_rerouted() {
+        // Replica 0's server dies; the pool must evict it on the first
+        // failed response and transparently re-route to the survivor.
+        let (c1, m) = serving_coordinator(128, 1024, 57);
+        let mut sys2 = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+        let set2 = sys2.alloc_ranks(2).unwrap();
+        let mut c2 = GemvCoordinator::new(sys2, set2, GemvVariant::I8Opt, 8);
+        c2.preload_matrix(128, 1024, &m).unwrap();
+        let (s1, cl1) = GemvServer::start(c1, default_batcher(2));
+        let (s2, cl2) = GemvServer::start(c2, default_batcher(2));
+        let mut pool = ReplicaPool::new(vec![cl1, cl2], Policy::RoundRobin);
+        let _ = s1.shutdown(); // replica 0 is now gone
+        let mut rng = Rng::new(58);
+        for _ in 0..4 {
+            let x = rng.i8_vec(1024);
+            let resp = pool.call(x.clone()).expect("survivor serves");
+            assert_eq!(resp.y.unwrap(), gemv_ref(GemvShape { rows: 128, cols: 1024 }, &m, &x));
+        }
+        assert!(pool.router().is_evicted(0), "dead replica left rotation");
+        assert_eq!(pool.router().admitted(), 1);
+        let (_, m2) = s2.shutdown();
+        assert_eq!(m2.requests, 4, "all traffic landed on the survivor");
+        // Zero admitted replicas: call returns None instead of hanging.
+        pool.evict(1);
+        assert!(pool.call(vec![0i8; 1024]).is_none());
     }
 
     #[test]

@@ -214,6 +214,11 @@ pub struct Dpu {
     /// Identifier used in fault reports (set by the host layer to the
     /// global DPU index).
     pub id: usize,
+    /// One-shot injected fault: the next launch fails immediately with
+    /// this kind instead of executing (armed by the chaos plane to model
+    /// device death at the real fleet-launch fault boundary, so injected
+    /// failures flow through exactly the machinery real ones do).
+    pub poison: Option<FaultKind>,
     /// Runaway guard.
     pub cycle_limit: u64,
     /// Issue-loop selection (default [`default_exec_tier`]). The slower
@@ -722,6 +727,7 @@ impl Dpu {
             program: Arc::new(Program::default()),
             uops: Arc::new(UopProgram::default()),
             id: 0,
+            poison: None,
             cycle_limit: DEFAULT_CYCLE_LIMIT,
             exec_tier: default_exec_tier(),
         }
@@ -802,6 +808,9 @@ impl Dpu {
             (1..=NR_TASKLETS_MAX).contains(&nr_tasklets),
             "nr_tasklets must be in 1..=16"
         );
+        if let Some(kind) = self.poison.take() {
+            return Err(Error::Fault { dpu: self.id, tasklet: 0, pc: 0, kind });
+        }
         let program = Arc::clone(&self.program);
         let instrs: &[Instr] = &program.instrs;
         if instrs.is_empty() {

@@ -36,6 +36,7 @@
 pub mod xfer;
 
 use crate::alloc::{BaselineAllocator, NumaAwareAllocator, RankSet};
+use crate::chaos::ChaosInjector;
 use crate::dpu::isa::Program;
 use crate::dpu::symbol::{MemSpace, Symbol, SymbolValue};
 use crate::dpu::{default_exec_tier, Dpu, ExecTier, LaunchResult, LaunchScratch, UopProgram};
@@ -146,6 +147,10 @@ pub struct PimSystem {
     /// Recycled `FleetLaunch::per_dpu` buffers (steady-state serving
     /// reallocates nothing per batch; see [`PimSystem::recycle_launch`]).
     result_pool: Vec<Vec<LaunchResult>>,
+    /// Optional fault injector ([`crate::chaos`]): consulted at every
+    /// launch/transfer boundary when installed; `None` (the default)
+    /// costs one branch per boundary.
+    chaos: Option<ChaosInjector>,
 }
 
 fn host_err(id: DpuId, addr: u32) -> impl Fn(FaultKind) -> crate::Error {
@@ -184,7 +189,26 @@ impl PimSystem {
             exec_tier: default_exec_tier(),
             scratch: Vec::new(),
             result_pool: Vec::new(),
+            chaos: None,
         }
+    }
+
+    /// Install a fault injector: from now on every launch/transfer
+    /// boundary consults it (see [`crate::chaos`] for the op-counter
+    /// determinism model).
+    pub fn install_chaos(&mut self, injector: ChaosInjector) {
+        self.chaos = Some(injector);
+    }
+
+    /// Remove and return the installed injector (its stats carry the
+    /// full fault history).
+    pub fn take_chaos(&mut self) -> Option<ChaosInjector> {
+        self.chaos.take()
+    }
+
+    /// The installed injector, if any.
+    pub fn chaos(&self) -> Option<&ChaosInjector> {
+        self.chaos.as_ref()
     }
 
     /// Pin the number of worker threads used by fleet launches. `1`
@@ -318,11 +342,19 @@ impl PimSystem {
     /// transfer topology and the allocator's topology copy in sync.
     /// Already-built [`DpuSet`]s are not rewritten — the data plane's
     /// rebalancing ([`crate::plane::ShardedGemvCoordinator`]) owns that.
-    pub fn mark_faulty(&mut self, dpu: DpuId) {
+    ///
+    /// Idempotent: marking an already-faulty DPU is a no-op and returns
+    /// `false` (a double-mark must never trigger bookkeeping twice);
+    /// returns `true` when the DPU was newly disabled.
+    pub fn mark_faulty(&mut self, dpu: DpuId) -> bool {
+        if self.engine.topo.is_faulty(dpu) {
+            return false;
+        }
         self.engine.topo.mark_faulty(dpu);
         if let AllocatorImpl::Numa(a) = &mut self.allocator {
             a.mark_faulty(dpu);
         }
+        true
     }
 
     /// Execute an eager scatter on one worker thread per socket: every
@@ -338,6 +370,24 @@ impl PimSystem {
         chunks: &[crate::plane::ScatterChunk<'_>],
     ) -> Result<()> {
         use std::collections::BTreeMap;
+        // Chaos boundary: consult before any byte moves, so an injected
+        // transfer failure leaves every DPU's MRAM untouched.
+        if self.chaos.is_some() {
+            let mut ranks: Vec<usize> = {
+                let topo = &self.engine.topo;
+                chunks.iter().map(|c| topo.rank_of_dpu(c.dpu)).collect()
+            };
+            ranks.sort_unstable();
+            ranks.dedup();
+            let out = self
+                .chaos
+                .as_mut()
+                .expect("checked above")
+                .on_transfer(&self.engine.topo, &ranks);
+            if let Some(e) = out.error {
+                return Err(e);
+            }
+        }
         // Group chunk indices per socket, per DPU (deterministic order).
         let mut by_socket: BTreeMap<usize, BTreeMap<DpuId, Vec<usize>>> = BTreeMap::new();
         {
@@ -437,6 +487,16 @@ impl PimSystem {
     /// MRAM at the plan's address, then account one parallel transfer
     /// for the total traffic on the rank bus queues.
     pub fn push_xfer(&mut self, set: &DpuSet, plan: &XferPlan<'_>) -> Result<TransferReport> {
+        // Chaos boundary (+1 op): an injected failure aborts before any
+        // byte moves; straggler windows stretch the modeled bus time.
+        let mut chaos_factor = 1.0;
+        if let Some(chaos) = self.chaos.as_mut() {
+            let out = chaos.on_transfer(&self.engine.topo, &set.ranks.ranks);
+            if let Some(e) = out.error {
+                return Err(e);
+            }
+            chaos_factor = out.factor;
+        }
         if plan.nr_dpus() != set.nr_dpus() {
             return Err(crate::Error::Transfer(format!(
                 "xfer plan sized for {} DPUs used on a {}-DPU set",
@@ -455,7 +515,12 @@ impl PimSystem {
             Direction::HostToPim,
             set.placement,
         );
-        let (_, end) = self.queues.reserve(&set.ranks.ranks, Resource::Bus, 0.0, report.seconds);
+        let (_, end) = self.queues.reserve(
+            &set.ranks.ranks,
+            Resource::Bus,
+            0.0,
+            report.seconds * chaos_factor,
+        );
         self.queues.advance_to(end);
         Ok(report)
     }
@@ -529,10 +594,14 @@ impl PimSystem {
         bytes: &[u8],
         after_s: f64,
     ) -> Result<XferHandle> {
-        self.broadcast_untimed(set, mram_addr, bytes)?;
+        self.broadcast_untimed(set, mram_addr, bytes)?; // chaos boundary lives there
         let report = self.engine.broadcast(&set.ranks.ranks, bytes.len() as u64, set.placement);
+        let factor = self
+            .chaos
+            .as_ref()
+            .map_or(1.0, |c| c.straggler_factor(&self.engine.topo, &set.ranks.ranks));
         let (start_s, end_s) =
-            self.queues.reserve(&set.ranks.ranks, Resource::Bus, after_s, report.seconds);
+            self.queues.reserve(&set.ranks.ranks, Resource::Bus, after_s, report.seconds * factor);
         Ok(XferHandle { report, start_s, end_s })
     }
 
@@ -542,6 +611,14 @@ impl PimSystem {
     /// per-socket stage times via [`Self::reserve_bus`] instead of the
     /// flat engine broadcast.
     pub fn broadcast_untimed(&mut self, set: &DpuSet, mram_addr: u32, bytes: &[u8]) -> Result<()> {
+        // Chaos boundary (+1 op) for every broadcast flavor —
+        // `broadcast` and `broadcast_async` both delegate here, so the
+        // op is counted exactly once per user-visible broadcast.
+        if let Some(chaos) = self.chaos.as_mut() {
+            if let Some(e) = chaos.on_transfer(&self.engine.topo, &set.ranks.ranks).error {
+                return Err(e);
+            }
+        }
         for &id in &set.dpus {
             self.dpu_mut(id).mram.write(mram_addr, bytes).map_err(host_err(id, mram_addr))?;
         }
@@ -554,7 +631,14 @@ impl PimSystem {
     /// tree stages) that the flat per-call transfer model cannot
     /// express. Does not advance the host clock.
     pub fn reserve_bus(&mut self, ranks: &[usize], after_s: f64, seconds: f64) -> (f64, f64) {
-        self.queues.reserve(ranks, Resource::Bus, after_s, seconds)
+        // Timing-only chaos query (no op increment): straggler windows
+        // stretch explicitly modeled schedules (scatter windows, tree
+        // stages) exactly like engine-modeled ones.
+        let factor = self
+            .chaos
+            .as_ref()
+            .map_or(1.0, |c| c.straggler_factor(&self.engine.topo, ranks));
+        self.queues.reserve(ranks, Resource::Bus, after_s, seconds * factor)
     }
 
     /// Block the modeled host clock until `t` (no-op if already past).
@@ -676,9 +760,24 @@ impl PimSystem {
         nr_tasklets: usize,
         after_s: f64,
     ) -> Result<LaunchHandle> {
+        // Chaos boundary (+1 op): an injected transient failure aborts
+        // before any DPU executes (the retry is exact); dead DPUs are
+        // poisoned so their `DeviceFailure` flows through the real
+        // first-fault-in-set-order fleet machinery below.
+        let mut chaos_factor = 1.0;
+        if let Some(chaos) = self.chaos.as_mut() {
+            let out = chaos.on_launch(&self.engine.topo, &set.dpus);
+            if let Some(e) = out.error {
+                return Err(e);
+            }
+            chaos_factor = out.factor;
+            for id in out.poison {
+                self.dpu_mut(id).poison = Some(FaultKind::DeviceFailure);
+            }
+        }
         let per_dpu = self.run_fleet(set, nr_tasklets)?;
         let max_cycles = per_dpu.iter().map(|r| r.cycles).max().unwrap_or(0);
-        let seconds = max_cycles as f64 / crate::dpu::CLOCK_HZ as f64;
+        let seconds = chaos_factor * max_cycles as f64 / crate::dpu::CLOCK_HZ as f64;
         let (start_s, end_s) =
             self.queues.reserve(&set.ranks.ranks, Resource::Compute, after_s, seconds);
         Ok(LaunchHandle {

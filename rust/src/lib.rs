@@ -53,6 +53,7 @@
 
 pub mod alloc;
 pub mod bench_support;
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod cpu_ref;
@@ -66,4 +67,4 @@ pub mod runtime;
 pub mod transfer;
 pub mod util;
 
-pub use util::error::{Error, FaultKind, Result};
+pub use util::error::{Error, ErrorClass, FaultKind, FaultSite, Result};

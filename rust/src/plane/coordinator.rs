@@ -57,6 +57,10 @@ pub struct ShardedGemvCoordinator {
     symbols: Option<SymbolTable>,
     /// Encoded matrix retained for fault-driven delta re-scatter.
     mbytes: Vec<u8>,
+    /// Shards retired by graceful degradation ([`Self::retire_shard`]):
+    /// skipped by broadcasts/launches, their rows zero-filled in `y`.
+    /// Lazily sized; missing entries mean "live".
+    retired: Vec<bool>,
     gemv_count: u64,
     /// Stats of the most recent device pass (bench instrumentation).
     last_instrs: u64,
@@ -107,6 +111,7 @@ impl ShardedGemvCoordinator {
             cols: 0,
             symbols: None,
             mbytes: Vec::new(),
+            retired: Vec::new(),
             gemv_count: 0,
             last_instrs: 0,
             last_max_cycles: 0,
@@ -127,6 +132,35 @@ impl ShardedGemvCoordinator {
 
     pub fn gemv_count(&self) -> u64 {
         self.gemv_count
+    }
+
+    /// Retire shard `idx`: graceful degradation for a shard with no
+    /// usable DPUs left. Retired shards are skipped by every broadcast
+    /// and launch, and their rows come back zero-filled in `y` — the
+    /// explicit partial-result mode ([`crate::chaos::DegradedMode`]);
+    /// the default recovery path never calls this.
+    pub fn retire_shard(&mut self, idx: usize) -> Result<()> {
+        if idx >= self.map.shards.len() {
+            return Err(crate::Error::Coordinator(format!(
+                "retire_shard({idx}) out of range ({} shards)",
+                self.map.shards.len()
+            )));
+        }
+        if self.retired.len() < self.map.shards.len() {
+            self.retired.resize(self.map.shards.len(), false);
+        }
+        self.retired[idx] = true;
+        Ok(())
+    }
+
+    /// Whether shard `idx` has been retired.
+    pub fn is_retired(&self, idx: usize) -> bool {
+        self.retired.get(idx).copied().unwrap_or(false)
+    }
+
+    /// Number of retired shards.
+    pub fn retired_shards(&self) -> usize {
+        self.retired.iter().filter(|&&r| r).count()
     }
 
     /// Simulated instructions of the most recent `gemv`/`gemv_pipelined`
@@ -261,13 +295,18 @@ impl ShardedGemvCoordinator {
     /// per-shard y-staging availability in `y_free`.
     fn drain_shards(
         &mut self,
-        handles: Vec<LaunchHandle>,
+        handles: Vec<Option<LaunchHandle>>,
         timing: &mut GemvTiming,
         y_free: &mut [f64],
     ) -> Result<Vec<i32>> {
         let mut parts = Vec::with_capacity(handles.len());
         let mut batch_gather = 0f64;
         for (s, h) in handles.into_iter().enumerate() {
+            let Some(h) = h else {
+                // Retired shard: no launch, rows zero-filled.
+                parts.push(vec![0i32; self.map.shards[s].rows as usize]);
+                continue;
+            };
             parts.push(self.read_shard_y(s)?);
             let live = self.map.shards[s].partition().live_y_bytes();
             let g = {
@@ -308,7 +347,7 @@ impl ShardedGemvCoordinator {
         let t0 = self.sys.sync_all();
         let mut timing = GemvTiming::default();
         let mut ys: Vec<Vec<i32>> = Vec::with_capacity(xs.len());
-        let mut prev: Option<Vec<LaunchHandle>> = None;
+        let mut prev: Option<Vec<Option<LaunchHandle>>> = None;
         let mut y_free = vec![0f64; n];
         // The tree's shape is batch-invariant (same ranks, same encoded
         // x length — `row_bytes(cols)` — every batch): plan it once,
@@ -328,7 +367,10 @@ impl ShardedGemvCoordinator {
             // Retarget + stage x per shard (WRAM argument writes land
             // before the next launch on the modeled timeline; the eager
             // simulator matches because batch k-1 already executed).
-            for shard in &self.map.shards {
+            for (s, shard) in self.map.shards.iter().enumerate() {
+                if self.retired.get(s).copied().unwrap_or(false) {
+                    continue;
+                }
                 self.sys.broadcast_symbol(&shard.set, &x_addr, buf)?;
                 self.sys.broadcast_untimed(&shard.set, buf, &xbytes)?;
             }
@@ -353,6 +395,10 @@ impl ShardedGemvCoordinator {
             let mut handles = Vec::with_capacity(n);
             let mut batch_compute = 0f64;
             for s in 0..n {
+                if self.retired.get(s).copied().unwrap_or(false) {
+                    handles.push(None);
+                    continue;
+                }
                 // Wait for every tree stage that feeds this shard (a
                 // placement-blind shard may straddle sockets).
                 let after_bc = {
@@ -370,7 +416,7 @@ impl ShardedGemvCoordinator {
                 let shard = &self.map.shards[s];
                 let h = self.sys.launch_async(&shard.set, nr_tasklets, after)?;
                 batch_compute = batch_compute.max(h.peek().seconds);
-                handles.push(h);
+                handles.push(Some(h));
             }
             timing.compute_s += batch_compute;
             prev = Some(handles);
@@ -392,8 +438,12 @@ impl ShardedGemvCoordinator {
     /// byte count — 0 when the DPU belongs to no shard (nothing to do).
     pub fn mark_faulty_and_rebalance(&mut self, dpu: DpuId) -> Result<u64> {
         let Some(idx) = self.map.shard_of_dpu(dpu) else {
-            // No shard owns the DPU: a fleet-level fault with no plane
-            // impact — record it and move on.
+            // No shard owns the DPU: either a fleet-level fault with no
+            // plane impact, or a double-mark of an already-rebalanced
+            // DPU. Both are plane no-ops — in particular a double-mark
+            // must never fire a second rebalance (`PimSystem::
+            // mark_faulty` is itself idempotent, so this whole call
+            // moves neither data nor the modeled clock).
             self.sys.mark_faulty(dpu);
             return Ok(0);
         };
@@ -418,6 +468,17 @@ impl ShardedGemvCoordinator {
         self.sys.mark_faulty(dpu);
         let removed = self.map.remove_dpu(dpu);
         debug_assert_eq!(removed, Some(idx));
+        self.rescatter_shard(idx)
+    }
+
+    /// Re-push shard `idx`'s matrix block from the retained encoding
+    /// and refresh its kernel arguments (the tail of a rebalance, split
+    /// out so the recovery layer can retry just the re-push when a
+    /// transient transfer fault lands mid-rebalance — the map is
+    /// already re-partitioned at that point and re-calling
+    /// [`Self::mark_faulty_and_rebalance`] would no-op). Returns the
+    /// bytes moved (0 with no matrix resident).
+    pub fn rescatter_shard(&mut self, idx: usize) -> Result<u64> {
         if self.cols == 0 {
             return Ok(0); // no matrix resident yet — nothing to re-push
         }

@@ -1,9 +1,54 @@
-//! Crate-wide error type.
+//! Crate-wide error type, plus the transient/permanent taxonomy the
+//! recovery layer ([`crate::chaos`]) bases retry and quarantine
+//! decisions on — typed, never string-matched.
 
 use std::fmt;
 
 /// Result alias used across the crate.
 pub type Result<T> = std::result::Result<T, Error>;
+
+/// Coarse failure classification for retry policy: a *transient* error
+/// may succeed if the exact same operation is retried; a *permanent*
+/// one cannot (dead device, bad program, shape mismatch) and needs a
+/// topology change (quarantine + rebalance) or a caller fix instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    Transient,
+    Permanent,
+}
+
+/// Device context carried on launch/transfer failures: which DPU, rank
+/// and socket the failure was attributed to, as far as the reporting
+/// layer could tell. The host layer (which knows the topology) fills
+/// it; the recovery layer consumes it for quarantine decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultSite {
+    pub dpu: Option<usize>,
+    pub rank: Option<usize>,
+    pub socket: Option<usize>,
+}
+
+impl fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut any = false;
+        if let Some(d) = self.dpu {
+            write!(f, "dpu {d}")?;
+            any = true;
+        }
+        if let Some(r) = self.rank {
+            write!(f, "{}rank {r}", if any { ", " } else { "" })?;
+            any = true;
+        }
+        if let Some(s) = self.socket {
+            write!(f, "{}socket {s}", if any { ", " } else { "" })?;
+            any = true;
+        }
+        if !any {
+            f.write_str("unknown site")?;
+        }
+        Ok(())
+    }
+}
 
 /// Error kinds produced by the simulator, the host runtime and the
 /// coordinator. A single enum keeps the public API small; variants carry a
@@ -41,6 +86,55 @@ pub enum Error {
     Runtime(String),
     /// Catch-all for I/O.
     Io(String),
+    /// A fleet launch failed before any DPU executed, with device
+    /// context (e.g. an injected or detected controller-level glitch).
+    /// `transient: true` means the identical launch may succeed if
+    /// retried.
+    LaunchFailed { site: FaultSite, transient: bool, msg: String },
+    /// A host↔PIM transfer failed with device context (broadcast,
+    /// scatter or push path). `transient: true` means the identical
+    /// transfer may succeed if retried.
+    TransferFailed { site: FaultSite, transient: bool, msg: String },
+}
+
+impl Error {
+    /// Transient vs permanent, for retry policy. Everything is
+    /// permanent unless it positively claims otherwise: faults,
+    /// allocation, shape and precondition errors cannot succeed on a
+    /// bare retry. `Io` is transient (the OS may transiently fail) and
+    /// the launch/transfer-failure variants carry their class
+    /// explicitly.
+    pub fn class(&self) -> ErrorClass {
+        match self {
+            Error::LaunchFailed { transient, .. } | Error::TransferFailed { transient, .. } => {
+                if *transient {
+                    ErrorClass::Transient
+                } else {
+                    ErrorClass::Permanent
+                }
+            }
+            Error::Io(_) => ErrorClass::Transient,
+            _ => ErrorClass::Permanent,
+        }
+    }
+
+    /// `class() == ErrorClass::Transient`.
+    pub fn is_transient(&self) -> bool {
+        self.class() == ErrorClass::Transient
+    }
+
+    /// Device context of the failure, if the error carries any. Plain
+    /// simulator faults name only the DPU; callers that hold the
+    /// topology can derive rank/socket from it.
+    pub fn site(&self) -> FaultSite {
+        match self {
+            Error::Fault { dpu, .. } | Error::HostAccess { dpu, .. } => {
+                FaultSite { dpu: Some(*dpu), rank: None, socket: None }
+            }
+            Error::LaunchFailed { site, .. } | Error::TransferFailed { site, .. } => *site,
+            _ => FaultSite::default(),
+        }
+    }
 }
 
 /// Faults a simulated DPU can raise. Mirrors the failure modes the UPMEM
@@ -63,6 +157,11 @@ pub enum FaultKind {
     Explicit,
     /// Cycle budget exhausted (runaway-loop guard).
     CycleLimit,
+    /// The device itself is gone (permanent hardware failure — the §II
+    /// "nine disabled DPUs" class, injected at runtime by the chaos
+    /// plane). Always [`ErrorClass::Permanent`]: quarantine, never
+    /// retry.
+    DeviceFailure,
 }
 
 impl fmt::Display for FaultKind {
@@ -76,6 +175,7 @@ impl fmt::Display for FaultKind {
             FaultKind::IllegalInstruction => "illegal instruction",
             FaultKind::Explicit => "explicit fault",
             FaultKind::CycleLimit => "cycle limit exceeded",
+            FaultKind::DeviceFailure => "device failure (DPU disabled)",
         };
         f.write_str(s)
     }
@@ -103,6 +203,14 @@ impl fmt::Display for Error {
             Error::Config { line, msg } => write!(f, "config error at line {line}: {msg}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Io(m) => write!(f, "io error: {m}"),
+            Error::LaunchFailed { site, transient, msg } => {
+                let class = if *transient { "transient" } else { "permanent" };
+                write!(f, "launch failed ({class}, {site}): {msg}")
+            }
+            Error::TransferFailed { site, transient, msg } => {
+                let class = if *transient { "transient" } else { "permanent" };
+                write!(f, "transfer failed ({class}, {site}): {msg}")
+            }
         }
     }
 }
@@ -151,5 +259,55 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    fn site(dpu: usize, rank: usize, socket: usize) -> FaultSite {
+        FaultSite { dpu: Some(dpu), rank: Some(rank), socket: Some(socket) }
+    }
+
+    #[test]
+    fn taxonomy_launch_transfer_carry_their_class() {
+        let e = Error::LaunchFailed { site: site(5, 0, 0), transient: true, msg: "glitch".into() };
+        assert_eq!(e.class(), ErrorClass::Transient);
+        assert!(e.is_transient());
+        let e = Error::TransferFailed { site: site(5, 0, 0), transient: false, msg: "dead".into() };
+        assert_eq!(e.class(), ErrorClass::Permanent);
+        assert!(!e.is_transient());
+    }
+
+    #[test]
+    fn taxonomy_defaults_are_permanent_except_io() {
+        assert!(Error::Io("flaky fs".into()).is_transient());
+        for e in [
+            Error::Alloc("full".into()),
+            Error::Transfer("misaligned".into()),
+            Error::Coordinator("shape".into()),
+            Error::Fault { dpu: 3, tasklet: 0, pc: 0, kind: FaultKind::DeviceFailure },
+        ] {
+            assert_eq!(e.class(), ErrorClass::Permanent, "{e}");
+        }
+    }
+
+    #[test]
+    fn site_extraction() {
+        let e = Error::LaunchFailed { site: site(130, 2, 1), transient: true, msg: "x".into() };
+        assert_eq!(e.site(), site(130, 2, 1));
+        let e = Error::Fault { dpu: 9, tasklet: 1, pc: 4, kind: FaultKind::Explicit };
+        assert_eq!(e.site().dpu, Some(9));
+        assert_eq!(e.site().rank, None);
+        assert_eq!(Error::Alloc("nope".into()).site(), FaultSite::default());
+    }
+
+    #[test]
+    fn fault_site_display() {
+        assert_eq!(site(7, 0, 1).to_string(), "dpu 7, rank 0, socket 1");
+        assert_eq!(FaultSite { rank: Some(3), ..FaultSite::default() }.to_string(), "rank 3");
+        assert_eq!(FaultSite::default().to_string(), "unknown site");
+        let e = Error::TransferFailed {
+            site: FaultSite { rank: Some(4), socket: Some(0), ..FaultSite::default() },
+            transient: true,
+            msg: "bus glitch".into(),
+        };
+        assert_eq!(e.to_string(), "transfer failed (transient, rank 4, socket 0): bus glitch");
     }
 }

@@ -1,0 +1,323 @@
+//! Chaos-plane contracts (ISSUE 7 acceptance pins):
+//!
+//! 1. **Keystone**: for any seeded [`ChaosPlan`] whose permanent faults
+//!    leave ≥1 usable DPU per shard, the self-healing coordinator
+//!    serves `y` **bit-identical** to a fault-free run — and replaying
+//!    the same seed reproduces the fault sequence, retry counts and
+//!    recovery metrics *exactly*, on every [`ExecTier`].
+//! 2. Satellite regressions: idempotent double-mark, degenerate
+//!    topologies (a shard losing its last DPU, a zero-admitted replica
+//!    pool), and a transient fault landing mid-`gemv_pipelined`
+//!    between broadcast and launch.
+
+use upmem_unleashed::chaos::{
+    ChaosConfig, ChaosInjector, ChaosPlan, ChaosStats, DegradedMode, FaultEvent, RecoveryMetrics,
+    SelfHealingCoordinator,
+};
+use upmem_unleashed::coordinator::router::Policy;
+use upmem_unleashed::coordinator::server::default_batcher;
+use upmem_unleashed::coordinator::{GemvServer, ReplicaPool};
+use upmem_unleashed::dpu::ExecTier;
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::kernels::gemv::{gemv_ref, GemvShape, GemvVariant};
+use upmem_unleashed::plane::{NumaBalanced, PlacementPolicy, ShardMap, ShardedGemvCoordinator};
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::rng::Rng;
+use upmem_unleashed::{Error, ErrorClass};
+
+const ROWS: u32 = 256;
+const COLS: u32 = 1024;
+
+fn sharded(tier: ExecTier) -> ShardedGemvCoordinator {
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    sys.set_exec_tier(tier);
+    let sets = sys.alloc_shards(&NumaBalanced, 2, 1).unwrap();
+    let map = ShardMap::new(sets, NumaBalanced.name()).unwrap();
+    ShardedGemvCoordinator::new(sys, map, GemvVariant::I8Opt, 8)
+}
+
+fn test_data() -> (Vec<i8>, Vec<Vec<i8>>) {
+    let mut rng = Rng::new(7);
+    let m = rng.i8_vec((ROWS * COLS) as usize);
+    let xs = (0..3).map(|_| rng.i8_vec(COLS as usize)).collect();
+    (m, xs)
+}
+
+/// Serve `xs` as two pipelined batches ([x0, x1] then [x2]) — the
+/// same call pattern every run in this file uses, so modeled clocks
+/// and op sequences line up exactly.
+fn serve(c: &mut SelfHealingCoordinator, xs: &[Vec<i8>]) -> Vec<Vec<i32>> {
+    let (mut ys, _) = c.gemv_recovered(&[&xs[0], &xs[1]]).unwrap();
+    let (tail, _) = c.gemv_recovered(&[&xs[2]]).unwrap();
+    ys.extend(tail);
+    ys
+}
+
+fn fault_free_reference(xs: &[Vec<i8>], m: &[i8]) -> Vec<Vec<i32>> {
+    let mut c = sharded(ExecTier::Superblock);
+    c.preload_matrix(ROWS, COLS, m).unwrap();
+    let (mut ys, _) = c.gemv_pipelined(&[&xs[0], &xs[1]]).unwrap();
+    let (tail, _) = c.gemv_pipelined(&[&xs[2]]).unwrap();
+    ys.extend(tail);
+    for (y, x) in ys.iter().zip(xs) {
+        assert_eq!(y, &gemv_ref(GemvShape { rows: ROWS, cols: COLS }, m, x));
+    }
+    ys
+}
+
+/// Everything a seeded chaos run produces; `PartialEq` fields compare
+/// exactly (the f64s are products of identical deterministic
+/// arithmetic when runs really replay).
+struct ChaosRun {
+    ys: Vec<Vec<i32>>,
+    stats: ChaosStats,
+    metrics: RecoveryMetrics,
+    modeled_end: f64,
+}
+
+/// One self-healing serving run under the plan generated from `seed`:
+/// victims are drawn from the middle of each shard so any generated
+/// death set leaves ≥1 usable DPU per shard (the keystone's
+/// precondition).
+fn chaos_run(seed: u64, tier: ExecTier, m: &[i8], xs: &[Vec<i8>]) -> ChaosRun {
+    let mut c = sharded(tier);
+    c.preload_matrix(ROWS, COLS, m).unwrap();
+    let victims: Vec<usize> = (0..2).flat_map(|s| c.map().shards[s].set.dpus[32..40].to_vec()).collect();
+    let cfg = ChaosConfig { ops: 8, ..ChaosConfig::default() };
+    let plan = ChaosPlan::generate(seed, &cfg, &victims);
+    assert_eq!(plan.dead_dpus().len(), 2, "default config kills two victims");
+    c.sys.install_chaos(ChaosInjector::new(plan));
+    let mut sh = SelfHealingCoordinator::new(c);
+    let ys = serve(&mut sh, xs);
+    let metrics = sh.metrics().clone();
+    let mut c = sh.into_inner();
+    let stats = c.sys.take_chaos().unwrap().stats().clone();
+    let modeled_end = c.sys.modeled_now();
+    ChaosRun { ys, stats, metrics, modeled_end }
+}
+
+#[test]
+fn keystone_seeded_faults_serve_bit_identical_results() {
+    let (m, xs) = test_data();
+    let reference = fault_free_reference(&xs, &m);
+    for seed in [11u64, 23, 47] {
+        let a = chaos_run(seed, ExecTier::Superblock, &m, &xs);
+        assert_eq!(a.ys, reference, "seed {seed}: faults changed served results");
+        // Every planned death activated (all land at op ≤ 8, the run
+        // spans ≥ 12 ops) and was quarantined through the rebalance.
+        assert_eq!(a.stats.dpu_deaths, 2, "seed {seed}");
+        assert_eq!(a.metrics.quarantined.len(), 2, "seed {seed}");
+        assert_eq!(a.metrics.rebalances, 2, "seed {seed}");
+        assert!(a.metrics.retries >= 2, "seed {seed}: each death costs ≥1 retry");
+        assert!(a.metrics.recovery_s > 0.0, "seed {seed}: recovery latency is modeled");
+
+        // Same seed → the fault sequence, retry counts and recovery
+        // metrics replay *exactly*.
+        let b = chaos_run(seed, ExecTier::Superblock, &m, &xs);
+        assert_eq!(a.ys, b.ys, "seed {seed}");
+        assert_eq!(a.stats, b.stats, "seed {seed}: injector stats must replay exactly");
+        assert_eq!(a.metrics, b.metrics, "seed {seed}: recovery metrics must replay exactly");
+        assert_eq!(a.modeled_end, b.modeled_end, "seed {seed}: modeled clock must replay exactly");
+    }
+    // Different seeds draw different plans.
+    let victims: Vec<usize> = (0..16).collect();
+    let cfg = ChaosConfig { ops: 8, ..ChaosConfig::default() };
+    assert_ne!(
+        ChaosPlan::generate(11, &cfg, &victims),
+        ChaosPlan::generate(23, &cfg, &victims)
+    );
+}
+
+#[test]
+fn keystone_holds_across_all_exec_tiers() {
+    let (m, xs) = test_data();
+    let reference = chaos_run(11, ExecTier::Stepped, &m, &xs);
+    assert_eq!(reference.ys, fault_free_reference(&xs, &m));
+    for tier in [ExecTier::Batched, ExecTier::Superblock] {
+        let run = chaos_run(11, tier, &m, &xs);
+        assert_eq!(run.ys, reference.ys, "{} diverged on results", tier.name());
+        assert_eq!(run.stats, reference.stats, "{} diverged on fault sequence", tier.name());
+        assert_eq!(run.metrics, reference.metrics, "{} diverged on recovery", tier.name());
+        assert_eq!(
+            run.modeled_end,
+            reference.modeled_end,
+            "{} diverged on the modeled clock",
+            tier.name()
+        );
+    }
+}
+
+#[test]
+fn transient_faults_only_recover_to_exact_results_with_retries() {
+    let (m, xs) = test_data();
+    let reference = fault_free_reference(&xs, &m);
+    let mut c = sharded(ExecTier::Superblock);
+    c.preload_matrix(ROWS, COLS, &m).unwrap();
+    c.sys.install_chaos(ChaosInjector::new(ChaosPlan::from_events(vec![
+        FaultEvent::TransientTransfer { at: 1 },
+        FaultEvent::TransientLaunch { at: 5 },
+        FaultEvent::TransientLaunch { at: 9 },
+    ])));
+    let mut sh = SelfHealingCoordinator::new(c);
+    let ys = serve(&mut sh, &xs);
+    assert_eq!(ys, reference);
+    let metrics = sh.metrics();
+    assert_eq!(metrics.transient_errors, 3);
+    assert_eq!(metrics.retries, 3, "each one-shot transient costs exactly one retry");
+    assert!(metrics.quarantined.is_empty(), "below the strike threshold nothing quarantines");
+    assert!(metrics.backoff_s > 0.0, "retries back off on the modeled clock");
+    assert_eq!(sh.inner.sys.chaos().unwrap().stats().launch_errors, 2);
+    assert_eq!(sh.inner.sys.chaos().unwrap().stats().transfer_errors, 1);
+}
+
+#[test]
+fn straggler_window_stretches_modeled_time_but_not_results() {
+    let (m, xs) = test_data();
+    let mut free = sharded(ExecTier::Superblock);
+    free.preload_matrix(ROWS, COLS, &m).unwrap();
+    let (ys_free, t_free) = free.gemv_pipelined(&[&xs[0], &xs[1]]).unwrap();
+
+    let mut c = sharded(ExecTier::Superblock);
+    c.preload_matrix(ROWS, COLS, &m).unwrap();
+    c.sys.install_chaos(ChaosInjector::new(ChaosPlan::from_events(vec![
+        FaultEvent::Straggler { from: 1, to: 100, socket: 0, factor: 4.0 },
+    ])));
+    let (ys, t) = c.gemv_pipelined(&[&xs[0], &xs[1]]).unwrap();
+    assert_eq!(ys, ys_free, "stragglers stretch time, never bits");
+    assert!(
+        t.compute_s > t_free.compute_s,
+        "socket-0 shard compute must stretch: {} vs {}",
+        t.compute_s,
+        t_free.compute_s
+    );
+    assert!(c.sys.chaos().unwrap().stats().straggled_ops > 0);
+}
+
+#[test]
+fn transient_fault_mid_pipeline_is_typed_and_recoverable() {
+    // Op arithmetic: one batch over two shards consults broadcasts at
+    // ops 1–2 and launches at ops 3–4, so `at: 3` lands exactly
+    // *between* the broadcast stage and the first launch.
+    let (m, xs) = test_data();
+    let mut c = sharded(ExecTier::Superblock);
+    c.preload_matrix(ROWS, COLS, &m).unwrap();
+    c.sys.install_chaos(ChaosInjector::new(ChaosPlan::from_events(vec![
+        FaultEvent::TransientLaunch { at: 3 },
+    ])));
+    let err = c.gemv_pipelined(&[&xs[0]]).unwrap_err();
+    match &err {
+        Error::LaunchFailed { site, transient, .. } => {
+            assert!(*transient);
+            assert!(site.dpu.is_some() && site.rank.is_some() && site.socket.is_some());
+        }
+        other => panic!("expected a typed LaunchFailed, got {other:?}"),
+    }
+    assert_eq!(err.class(), ErrorClass::Transient);
+
+    // The self-healing wrapper turns the same plan into an exact serve.
+    let mut c = sharded(ExecTier::Superblock);
+    c.preload_matrix(ROWS, COLS, &m).unwrap();
+    c.sys.install_chaos(ChaosInjector::new(ChaosPlan::from_events(vec![
+        FaultEvent::TransientLaunch { at: 3 },
+    ])));
+    let mut sh = SelfHealingCoordinator::new(c);
+    let (ys, _) = sh.gemv_recovered(&[&xs[0]]).unwrap();
+    assert_eq!(ys[0], gemv_ref(GemvShape { rows: ROWS, cols: COLS }, &m, &xs[0]));
+    assert_eq!(sh.metrics().retries, 1);
+}
+
+#[test]
+fn double_mark_and_rebalance_is_a_noop() {
+    let (m, _) = test_data();
+    let mut c = sharded(ExecTier::Superblock);
+    c.preload_matrix(ROWS, COLS, &m).unwrap();
+    let victim = c.map().shards[1].set.dpus[17];
+    let moved = c.mark_faulty_and_rebalance(victim).unwrap();
+    assert!(moved > 0);
+    let dpus_after: Vec<usize> = c.map().shards[1].set.dpus.clone();
+    let clock_after = c.sys.modeled_now();
+    // Second mark of the same DPU: no second rebalance, no transfer,
+    // no clock movement, no map change.
+    assert_eq!(c.mark_faulty_and_rebalance(victim).unwrap(), 0);
+    assert_eq!(c.map().shards[1].set.dpus, dpus_after);
+    assert_eq!(c.sys.modeled_now(), clock_after);
+    assert!(c.sys.topology().is_faulty(victim));
+    // And the fleet-level mark alone is idempotent too.
+    assert!(!c.sys.mark_faulty(victim), "second fleet-level mark reports no-op");
+}
+
+/// Kill every DPU of shard 1. Under the default `RetryUntilExact` the
+/// run must end in the typed "last usable DPU" error — never a silent
+/// partial result.
+#[test]
+fn shard_losing_every_dpu_fails_loudly_by_default() {
+    let (m, xs) = test_data();
+    let mut c = sharded(ExecTier::Superblock);
+    c.preload_matrix(ROWS, COLS, &m).unwrap();
+    let doomed: Vec<FaultEvent> = c.map().shards[1]
+        .set
+        .dpus
+        .iter()
+        .map(|&dpu| FaultEvent::DpuDeath { at: 1, dpu })
+        .collect();
+    c.sys.install_chaos(ChaosInjector::new(ChaosPlan::from_events(doomed)));
+    let mut sh = SelfHealingCoordinator::new(c);
+    let err = sh.gemv_recovered(&[&xs[0]]).unwrap_err();
+    assert_eq!(err.class(), ErrorClass::Permanent);
+    assert!(
+        err.to_string().contains("last usable DPU"),
+        "want the typed coverage error, got: {err}"
+    );
+    // 63 quarantines succeeded before the coverage ran out.
+    assert_eq!(sh.metrics().quarantined.len(), 63);
+}
+
+/// Same doomed shard under the explicit partial opt-in: the shard is
+/// retired, its rows zero-fill, and the surviving shard keeps serving
+/// bit-exactly.
+#[test]
+fn shard_losing_every_dpu_degrades_only_on_explicit_optin() {
+    let (m, xs) = test_data();
+    let mut c = sharded(ExecTier::Superblock);
+    c.preload_matrix(ROWS, COLS, &m).unwrap();
+    let shard0_rows = c.map().shards[0].rows as usize;
+    let doomed: Vec<FaultEvent> = c.map().shards[1]
+        .set
+        .dpus
+        .iter()
+        .map(|&dpu| FaultEvent::DpuDeath { at: 1, dpu })
+        .collect();
+    c.sys.install_chaos(ChaosInjector::new(ChaosPlan::from_events(doomed)));
+    let mut sh = SelfHealingCoordinator::new(c).with_mode(DegradedMode::PartialZeroFill);
+    let (ys, _) = sh.gemv_recovered(&[&xs[0]]).unwrap();
+    let full = gemv_ref(GemvShape { rows: ROWS, cols: COLS }, &m, &xs[0]);
+    assert_eq!(&ys[0][..shard0_rows], &full[..shard0_rows], "surviving shard stays exact");
+    assert!(ys[0][shard0_rows..].iter().all(|&v| v == 0), "lost shard's rows zero-fill");
+    assert_eq!(sh.inner.retired_shards(), 1);
+    assert!(sh.inner.is_retired(1));
+    assert_eq!(sh.metrics().degraded_batches, 1);
+    // The next batch serves degraded without further recovery work.
+    let retries = sh.metrics().retries;
+    let (ys2, _) = sh.gemv_recovered(&[&xs[1]]).unwrap();
+    assert!(ys2[0][shard0_rows..].iter().all(|&v| v == 0));
+    assert_eq!(sh.metrics().retries, retries, "a retired shard costs no more retries");
+}
+
+#[test]
+fn replica_pool_with_no_admitted_replicas_degrades_cleanly() {
+    let (m, _) = test_data();
+    let mut c = sharded(ExecTier::Superblock);
+    c.preload_matrix(ROWS, COLS, &m).unwrap();
+    let (server, client) = GemvServer::start(c, default_batcher(2));
+    let mut pool = ReplicaPool::new(vec![client], Policy::LeastOutstanding);
+    pool.evict(0);
+    assert!(pool.try_submit(vec![0i8; COLS as usize]).is_none());
+    assert!(pool.call(vec![0i8; COLS as usize]).is_none(), "no panic, no hang: just None");
+    // Re-admission restores service.
+    pool.readmit(0);
+    let mut rng = Rng::new(9);
+    let x = rng.i8_vec(COLS as usize);
+    let resp = pool.call(x.clone()).unwrap();
+    assert_eq!(resp.y.unwrap(), gemv_ref(GemvShape { rows: ROWS, cols: COLS }, &m, &x));
+    server.shutdown();
+}

@@ -23,6 +23,14 @@ Three sources, all optional:
                               filling rules as --perf — used for the
                               §Placement ablation tables.
 
+  --serving BENCH_serving.json
+                              schema-v2 report written by
+                              `cargo bench --bench chaos_serving`
+                              (deterministic modeled req/s, goodput
+                              fractions, recovery latencies). Same
+                              table filling rules — used for the
+                              §Chaos tables.
+
   --ablation FILE             captured stdout of
                               `cargo bench --bench pass_ablation`, which
                               prints a markdown-pasteable table after the
@@ -35,9 +43,11 @@ Three sources, all optional:
 Usage:
     cargo bench --bench perf_simulator
     cargo bench --bench fig11_transfer
+    cargo bench --bench chaos_serving
     cargo bench --bench pass_ablation | tee pass_ablation.out
     python3 tools/fill_experiments.py --perf BENCH_perf.json \
-        --transfer BENCH_transfer.json --ablation pass_ablation.out
+        --transfer BENCH_transfer.json --serving BENCH_serving.json \
+        --ablation pass_ablation.out
 
 Idempotent: already-filled cells are overwritten with the new
 measurement (the log's contract is "regenerated, never hand-edited");
@@ -112,6 +122,16 @@ def fill_perf(lines, perf_doc):
                 r = rec.get("rate")
                 cells[j] = f"{r:.2f}" if r is not None else DASH
                 changed = True
+            elif "goodput" in col or "fraction" in col:
+                r = rec.get("rate")
+                cells[j] = f"{r:.3f}" if r is not None else DASH
+                changed = True
+            elif "modeled s" in col:
+                # Recovery-latency rows park their modeled seconds in the
+                # (ungated) minstr field; 4 decimals, it is a small cost.
+                v = rec.get("minstr_per_s")
+                cells[j] = f"{v:.4f}" if v is not None else DASH
+                changed = True
         if changed:
             lines[i] = fmt_row(cells)
             filled += 1
@@ -163,17 +183,22 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--perf", help="BENCH_perf.json (schema v2)")
     ap.add_argument("--transfer", help="BENCH_transfer.json (schema v2, modeled rates)")
+    ap.add_argument("--serving", help="BENCH_serving.json (schema v2, chaos serving rates)")
     ap.add_argument("--ablation", help="captured stdout of the pass_ablation bench")
     ap.add_argument("--experiments", default="EXPERIMENTS.md")
     args = ap.parse_args()
-    if not args.perf and not args.transfer and not args.ablation:
-        ap.error("give at least one of --perf / --transfer / --ablation")
+    if not (args.perf or args.transfer or args.serving or args.ablation):
+        ap.error("give at least one of --perf / --transfer / --serving / --ablation")
 
     with open(args.experiments) as f:
         lines = f.read().splitlines()
 
     total = 0
-    for label, path in [("§Perf", args.perf), ("§Placement", args.transfer)]:
+    for label, path in [
+        ("§Perf", args.perf),
+        ("§Placement", args.transfer),
+        ("§Chaos", args.serving),
+    ]:
         if not path:
             continue
         with open(path) as f:

@@ -161,6 +161,39 @@ class FillExperiments(unittest.TestCase):
         self.assertEqual(
             lines[2], "| `plane scatter 4x2 numa-balanced (GB/s)` | 21.99 |")
 
+    SERVING = doc({
+        "chaos serving modeled req/s [seed=11]":
+            {"minstr_per_s": 0.0, "rate": 87.654},
+        "chaos goodput under faults (fraction) [seed=11]":
+            {"minstr_per_s": 0.0, "rate": 1.0},
+        "chaos recovery latency (modeled s, informational) [seed=11]":
+            {"minstr_per_s": 0.0123},
+    })
+
+    def test_fills_serving_goodput_and_recovery_columns(self):
+        lines = [
+            "| workload | req/s (modeled) |",
+            "|---|---|",
+            "| chaos serving modeled req/s [seed=11] | _pending_ |",
+            "",
+            "| workload | goodput (fraction) |",
+            "|---|---|",
+            "| chaos goodput under faults (fraction) [seed=11] | _pending_ |",
+            "",
+            "| workload | recovery latency (modeled s) |",
+            "|---|---|",
+            "| chaos recovery latency (modeled s, informational) [seed=11] | _pending_ |",
+        ]
+        n = fe.fill_perf(lines, self.SERVING)
+        self.assertEqual(n, 3)
+        self.assertEqual(
+            lines[2], "| chaos serving modeled req/s [seed=11] | 87.65 |")
+        self.assertEqual(
+            lines[6], "| chaos goodput under faults (fraction) [seed=11] | 1.000 |")
+        self.assertEqual(
+            lines[10],
+            "| chaos recovery latency (modeled s, informational) [seed=11] | 0.0123 |")
+
     def test_ablation_parser_reads_marked_table_only(self):
         out = "\n".join([
             "noise | not | a | table row before the marker",
