@@ -1,0 +1,256 @@
+//! §Open-loop serving — the traffic plane under committed seeds × load
+//! levels.
+//!
+//! Replays seeded Poisson arrival plans through the deterministic
+//! open-loop harness (`rust/src/traffic/`): two sharded replicas
+//! behind an SLO-aware router, bounded admission queues, deadline
+//! batching. Load levels are expressed against the pool's *calibrated*
+//! saturation rate (one pipelined batch on the modeled clock), so
+//! "0.5× / 1.0× / 2.0×" mean the same thing on every machine. A chaos
+//! scenario rides along: device-fault plans on both replicas plus a
+//! plan-scheduled replica loss mid-burst, mirroring the keystone test.
+//!
+//! Everything is threadless and modeled, so every gated row (modeled
+//! req/s, goodput) is a pure function of (seed, load, tier) and CI can
+//! compare it exactly across execution tiers. Shed rates and latency
+//! percentiles are written as informational rows (a shed rate is
+//! lower-is-better — the opposite gating direction from a rate — so it
+//! is parked in the ungated field). `PERF_SMOKE=1` shrinks the request
+//! stream to CI size.
+
+mod common;
+
+use common::{check, footer, timed};
+use upmem_unleashed::bench_support::json::{json_perf_report, PerfMeta, WorkloadEntry};
+use upmem_unleashed::bench_support::table::{f1, Table};
+use upmem_unleashed::chaos::{ChaosConfig, ChaosInjector, ChaosPlan, SelfHealingCoordinator};
+use upmem_unleashed::coordinator::router::Policy;
+use upmem_unleashed::dpu::default_exec_tier;
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::kernels::gemv::GemvVariant;
+use upmem_unleashed::plane::{NumaBalanced, PlacementPolicy, ShardMap, ShardedGemvCoordinator};
+use upmem_unleashed::traffic::{
+    AdmissionConfig, AdmissionPolicy, ArrivalProcess, DeadlineBatcher, OpenLoopSim, SimConfig,
+    TrafficConfig, TrafficPlan, TrafficReport, WorkloadMix,
+};
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::rng::Rng;
+
+const ROWS: u32 = 128;
+const COLS: u32 = 512;
+const BATCH: usize = 4;
+const REPLICAS: usize = 2;
+/// Committed traffic seeds — CI replays exactly these.
+const SEEDS: [u64; 2] = [11, 23];
+/// Seed for the chaos-mid-burst scenario.
+const CHAOS_SEED: u64 = 47;
+/// Load levels as multiples of the pool's calibrated saturation rate.
+const LOADS: [f64; 3] = [0.5, 1.0, 2.0];
+
+fn build() -> ShardedGemvCoordinator {
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    let sets = sys.alloc_shards(&NumaBalanced, 2, 1).expect("2 shards x 1 rank");
+    let map = ShardMap::new(sets, NumaBalanced.name()).expect("shard map");
+    ShardedGemvCoordinator::new(sys, map, GemvVariant::I8Opt, 8)
+}
+
+fn preloaded(m: &[i8]) -> ShardedGemvCoordinator {
+    let mut c = build();
+    c.preload_matrix(ROWS, COLS, m).expect("preload");
+    c
+}
+
+/// Modeled seconds per full pipelined batch — the saturation unit.
+fn batch_seconds(m: &[i8]) -> f64 {
+    let mut c = preloaded(m);
+    let xs: Vec<Vec<i8>> = (0..BATCH).map(|i| vec![i as i8 + 1; COLS as usize]).collect();
+    let views: Vec<&[i8]> = xs.iter().map(|v| v.as_slice()).collect();
+    let t0 = c.sys.sync_all();
+    c.gemv_pipelined(&views).expect("calibration batch");
+    c.sys.sync_all() - t0
+}
+
+fn plan(seed: u64, rate_rps: f64, requests: usize, deadline_s: Option<f64>) -> TrafficPlan {
+    TrafficPlan::generate(
+        seed,
+        &TrafficConfig {
+            process: ArrivalProcess::Poisson { rate_rps },
+            requests,
+            deadline_s,
+            mix: WorkloadMix::single(ROWS, COLS, GemvVariant::I8Opt),
+        },
+    )
+}
+
+fn sim_cfg(dt: f64) -> SimConfig {
+    SimConfig {
+        batcher: DeadlineBatcher::new(BATCH, 0.5 * dt),
+        admission: AdmissionConfig { policy: AdmissionPolicy::RejectNew, queue_cap: 2 * BATCH },
+        policy: Policy::SloAware,
+    }
+}
+
+fn push_rows(
+    entries: &mut Vec<WorkloadEntry>,
+    table: &mut Table,
+    scenario: &str,
+    tag: &str,
+    rep: &TrafficReport,
+) {
+    let s = rep.latency_summary();
+    let (p50, p95, p99) = s.map_or((0.0, 0.0, 0.0), |s| (s.p50, s.p95, s.p99));
+    table.row(&[
+        scenario.into(),
+        f1(rep.throughput_rps()),
+        format!("{:.3}", rep.goodput()),
+        format!("{:.3}", rep.metrics.shed_rate()),
+        format!("{:.3}", p50 / 1e3),
+        format!("{:.3}", p95 / 1e3),
+        format!("{:.3}", p99 / 1e3),
+    ]);
+    entries.push(
+        WorkloadEntry::new(format!("open-loop serving modeled req/s {tag}"), 0.0, None)
+            .with_rate(rep.throughput_rps()),
+    );
+    entries.push(
+        WorkloadEntry::new(format!("open-loop goodput (fraction) {tag}"), 0.0, None)
+            .with_rate(rep.goodput()),
+    );
+    // Informational (ungated): shed rate is lower-is-better and the
+    // percentiles are costs, not rates.
+    entries.push(WorkloadEntry::new(
+        format!("open-loop shed rate (fraction, informational) {tag}"),
+        rep.metrics.shed_rate(),
+        None,
+    ));
+    for (q, v) in [("p50", p50), ("p95", p95), ("p99", p99)] {
+        entries.push(WorkloadEntry::new(
+            format!("open-loop {q} latency (modeled ms, informational) {tag}"),
+            v / 1e3,
+            None,
+        ));
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("PERF_SMOKE").is_ok();
+    if smoke {
+        println!("[open_loop_serving] PERF_SMOKE set: CI-sized request stream");
+    }
+    let requests: usize = if smoke { 12 } else { 48 };
+    let (_, wall) = timed(|| {
+        let m = Rng::new(4242).i8_vec((ROWS * COLS) as usize);
+        let dt = batch_seconds(&m);
+        let sat_pool = REPLICAS as f64 * BATCH as f64 / dt;
+        println!(
+            "calibration: {dt:.6} modeled s per {BATCH}-batch → pool saturation {:.1} req/s",
+            sat_pool
+        );
+        let mut entries: Vec<WorkloadEntry> = Vec::new();
+        let mut table = Table::new(
+            "§Open-loop serving — seeded arrival plans × load levels",
+            &[
+                "scenario",
+                "req/s (modeled)",
+                "goodput",
+                "shed rate",
+                "p50 ms",
+                "p95 ms",
+                "p99 ms",
+            ],
+        );
+
+        // Load sweep: seeded Poisson plans at fractions of saturation.
+        for seed in SEEDS {
+            for load in LOADS {
+                let p = plan(seed, load * sat_pool, requests, None);
+                let pool: Vec<Vec<ShardedGemvCoordinator>> =
+                    vec![(0..REPLICAS).map(|_| preloaded(&m)).collect()];
+                let mut sim = OpenLoopSim::new(sim_cfg(dt), pool);
+                let rep = sim.run(&p, &[]);
+                let tag = format!("[seed={seed} load={load:.1}x]");
+                if load < 1.0 {
+                    check(
+                        &format!("seed {seed} load {load:.1}x: below saturation nothing sheds"),
+                        rep.metrics.shed_rate(),
+                        0.0,
+                        0.0,
+                    );
+                    check(
+                        &format!("seed {seed} load {load:.1}x: goodput is total"),
+                        rep.goodput(),
+                        1.0,
+                        1.0,
+                    );
+                }
+                push_rows(&mut entries, &mut table, &format!("seed={seed} {load:.1}x"), &tag, &rep);
+            }
+        }
+
+        // Chaos mid-burst: device-fault plans on both replicas plus a
+        // plan-scheduled replica loss, at 1.5× saturation with tight
+        // deadlines — the keystone scenario, measured.
+        let loss_cfg = ChaosConfig {
+            ops: requests as u64,
+            dpu_deaths: 0,
+            transient_launches: 0,
+            transient_transfers: 0,
+            stragglers: 0,
+            replica_losses: 1,
+            replicas: REPLICAS as u64,
+            ..ChaosConfig::default()
+        };
+        let losses = ChaosPlan::generate(CHAOS_SEED, &loss_cfg, &[]).replica_losses();
+        let replicas: Vec<SelfHealingCoordinator> = (0..REPLICAS as u64)
+            .map(|r| {
+                let mut c = preloaded(&m);
+                let victims: Vec<usize> =
+                    (0..2).flat_map(|s| c.map().shards[s].set.dpus[32..40].to_vec()).collect();
+                let ccfg = ChaosConfig { ops: 6, ..ChaosConfig::default() };
+                c.sys.install_chaos(ChaosInjector::new(ChaosPlan::generate(
+                    CHAOS_SEED + r,
+                    &ccfg,
+                    &victims,
+                )));
+                SelfHealingCoordinator::new(c)
+            })
+            .collect();
+        let p = plan(CHAOS_SEED, 1.5 * sat_pool, requests, Some(8.0 * dt));
+        let mut sim = OpenLoopSim::new(sim_cfg(dt), vec![replicas]);
+        let rep = sim.run(&p, &losses);
+        check(
+            "chaos mid-burst: admitted traffic still serves",
+            if rep.served.is_empty() { 0.0 } else { 1.0 },
+            1.0,
+            1.0,
+        );
+        check(
+            "chaos mid-burst: every request served or typed-shed",
+            (rep.served.len() + rep.rejections.len() + rep.failed.len()) as f64,
+            requests as f64,
+            requests as f64,
+        );
+        push_rows(
+            &mut entries,
+            &mut table,
+            "chaos mid-burst 1.5x",
+            &format!("[seed={CHAOS_SEED} chaos]"),
+            &rep,
+        );
+
+        table.print();
+
+        let meta = PerfMeta {
+            exec_tier: default_exec_tier().name().to_string(),
+            smoke,
+            launch_workers: PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware)
+                .launch_workers(),
+        };
+        let json = json_perf_report(&entries, Some(&meta));
+        match std::fs::write("BENCH_serving_openloop.json", &json) {
+            Ok(()) => println!("wrote BENCH_serving_openloop.json ({} entries)", entries.len()),
+            Err(e) => eprintln!("could not write BENCH_serving_openloop.json: {e}"),
+        }
+    });
+    footer("open_loop_serving", wall);
+}

@@ -65,14 +65,32 @@ mod tests {
     }
 
     #[test]
-    fn window_bounds_waiting() {
+    fn prefilled_full_batch_closes_by_count_not_window() {
+        // max_batch items already queued and the channel still open: the
+        // batch closes on count alone. The 60 s window makes the failure
+        // mode (consulting the window anyway) a visible hang rather than
+        // a wall-clock-threshold coin flip.
+        let (tx, rx) = channel();
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(4, Duration::from_secs(60));
+        assert_eq!(b.collect(&rx).unwrap(), vec![0, 1, 2, 3]);
+        drop(tx);
+    }
+
+    #[test]
+    fn closed_channel_flushes_partial_without_window_wait() {
+        // Fewer than max_batch queued and the sender dropped: collect
+        // flushes on Disconnected — channel *state*, not elapsed time,
+        // ends the batch, so nothing here depends on scheduler timing.
         let (tx, rx) = channel();
         tx.send(1).unwrap();
-        let b = Batcher::new(8, Duration::from_millis(20));
-        let t0 = Instant::now();
-        let batch = b.collect(&rx).unwrap();
-        assert_eq!(batch, vec![1]);
-        assert!(t0.elapsed() < Duration::from_millis(200));
+        tx.send(2).unwrap();
+        drop(tx);
+        let b = Batcher::new(8, Duration::from_secs(60));
+        assert_eq!(b.collect(&rx).unwrap(), vec![1, 2]);
+        assert!(b.collect(&rx).is_none(), "drained and closed");
     }
 
     #[test]

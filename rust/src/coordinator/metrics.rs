@@ -1,12 +1,27 @@
 //! Serving metrics: counters and a latency recorder.
 
-use crate::util::stats::Summary;
+use crate::util::stats::percentile_nearest_rank;
 use std::time::Duration;
 
 /// Records request latencies and aggregates.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct LatencyRecorder {
     samples_us: Vec<f64>,
+}
+
+/// Latency aggregate in microseconds. Percentiles are deterministic
+/// **nearest-rank** (always an element of the sample, never
+/// interpolated), so replay tests can compare summaries bit-exactly —
+/// see [`crate::util::stats::percentile_nearest_rank`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
 }
 
 impl LatencyRecorder {
@@ -26,13 +41,24 @@ impl LatencyRecorder {
         self.samples_us.len()
     }
 
-    /// Summary in microseconds.
-    pub fn summary(&self) -> Option<Summary> {
+    /// Summary in microseconds (`None` on an empty recorder).
+    pub fn summary(&self) -> Option<LatencySummary> {
         if self.samples_us.is_empty() {
-            None
-        } else {
-            Some(Summary::of(&self.samples_us))
+            return None;
         }
+        let n = self.samples_us.len();
+        let mean = self.samples_us.iter().sum::<f64>() / n as f64;
+        let mut sorted = self.samples_us.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(LatencySummary {
+            n,
+            mean,
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_nearest_rank(&sorted, 0.50),
+            p95: percentile_nearest_rank(&sorted, 0.95),
+            p99: percentile_nearest_rank(&sorted, 0.99),
+        })
     }
 
     pub fn merge(&mut self, other: &LatencyRecorder) {
@@ -41,11 +67,17 @@ impl LatencyRecorder {
 }
 
 /// Aggregate serving metrics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServerMetrics {
+    /// Requests presented to the serving layer (served + shed + errors).
     pub requests: u64,
     pub batches: u64,
     pub errors: u64,
+    /// Requests shed by admission control ([`crate::Error::Overloaded`]).
+    pub shed_overload: u64,
+    /// Requests shed before launch because their deadline passed
+    /// ([`crate::Error::DeadlineExceeded`]).
+    pub shed_deadline: u64,
     /// End-to-end (queue + execute) latency.
     pub e2e: LatencyRecorder,
     /// Execution-only latency.
@@ -55,11 +87,30 @@ pub struct ServerMetrics {
 }
 
 impl ServerMetrics {
+    /// Requests that actually rode a device batch.
+    pub fn served(&self) -> u64 {
+        self.requests - self.errors - self.shed()
+    }
+
+    /// Total requests shed without touching the device.
+    pub fn shed(&self) -> u64 {
+        self.shed_overload + self.shed_deadline
+    }
+
+    /// Shed requests as a fraction of everything presented.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / self.requests as f64
+        }
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
         } else {
-            self.requests as f64 / self.batches as f64
+            self.served() as f64 / self.batches as f64
         }
     }
 
@@ -68,14 +119,16 @@ impl ServerMetrics {
         let e2e = self.e2e.summary();
         match e2e {
             Some(s) => format!(
-                "requests={} batches={} mean_batch={:.2} errors={} \
-                 e2e p50={:.0}us p95={:.0}us max={:.0}us device_s={:.4}",
+                "requests={} batches={} mean_batch={:.2} errors={} shed={} \
+                 e2e p50={:.0}us p95={:.0}us p99={:.0}us max={:.0}us device_s={:.4}",
                 self.requests,
                 self.batches,
                 self.mean_batch_size(),
                 self.errors,
+                self.shed(),
                 s.p50,
                 s.p95,
+                s.p99,
                 s.max,
                 self.device_seconds,
             ),
@@ -89,15 +142,62 @@ mod tests {
     use super::*;
 
     #[test]
-    fn latency_summary() {
-        let mut r = LatencyRecorder::new();
+    fn empty_recorder_has_no_summary() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.count(), 0);
         assert!(r.summary().is_none());
-        for ms in [1u64, 2, 3] {
+    }
+
+    #[test]
+    fn single_sample_summary_is_that_sample_everywhere() {
+        let mut r = LatencyRecorder::new();
+        r.record_seconds(0.004);
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 1);
+        for v in [s.mean, s.min, s.max, s.p50, s.p95, s.p99] {
+            assert_eq!(v, 4000.0);
+        }
+    }
+
+    #[test]
+    fn odd_sample_count_percentiles_are_nearest_rank() {
+        let mut r = LatencyRecorder::new();
+        for ms in [3u64, 1, 2] {
             r.record(Duration::from_millis(ms));
         }
         let s = r.summary().unwrap();
         assert_eq!(s.n, 3);
-        assert!((s.mean - 2000.0).abs() < 1.0);
+        assert!((s.mean - 2000.0).abs() < 1e-9);
+        // n=3: p50 rank ⌈1.5⌉=2 → 2000; p95/p99 rank 3 → 3000.
+        assert_eq!(s.p50, 2000.0);
+        assert_eq!(s.p95, 3000.0);
+        assert_eq!(s.p99, 3000.0);
+        assert_eq!((s.min, s.max), (1000.0, 3000.0));
+    }
+
+    #[test]
+    fn even_sample_count_percentiles_never_interpolate() {
+        let mut r = LatencyRecorder::new();
+        for ms in [40u64, 10, 30, 20] {
+            r.record(Duration::from_millis(ms));
+        }
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 4);
+        // n=4: p50 rank ⌈2.0⌉=2 → 20000 (interpolation would say 25000).
+        assert_eq!(s.p50, 20_000.0);
+        assert_eq!(s.p95, 40_000.0);
+        assert_eq!(s.p99, 40_000.0);
+    }
+
+    #[test]
+    fn summary_is_replay_comparable() {
+        let mut a = LatencyRecorder::new();
+        let mut b = LatencyRecorder::new();
+        for v in [0.0031, 0.0017, 0.0093] {
+            a.record_seconds(v);
+            b.record_seconds(v);
+        }
+        assert_eq!(a.summary(), b.summary(), "identical runs compare bit-exact");
     }
 
     #[test]
@@ -115,5 +215,23 @@ mod tests {
         let m = ServerMetrics { requests: 10, batches: 4, ..Default::default() };
         assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
         assert!(m.report().contains("requests=10"));
+    }
+
+    #[test]
+    fn shed_accounting() {
+        let m = ServerMetrics {
+            requests: 20,
+            batches: 4,
+            errors: 1,
+            shed_overload: 3,
+            shed_deadline: 2,
+            ..Default::default()
+        };
+        assert_eq!(m.shed(), 5);
+        assert_eq!(m.served(), 14);
+        assert!((m.shed_rate() - 0.25).abs() < 1e-12);
+        // Batch-size means count only requests that rode a batch.
+        assert!((m.mean_batch_size() - 3.5).abs() < 1e-12);
+        assert_eq!(ServerMetrics::default().shed_rate(), 0.0);
     }
 }

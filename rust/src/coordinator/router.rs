@@ -3,14 +3,22 @@
 //!
 //! On a 40-rank machine one model rarely needs every rank; serving
 //! multiple replicas of a (smaller) model and routing between them is
-//! how the fleet is kept busy. Two policies: round-robin and
-//! least-outstanding.
+//! how the fleet is kept busy. Three policies: round-robin,
+//! least-outstanding, and SLO-aware (queue depth × observed batch
+//! latency).
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
     RoundRobin,
     LeastOutstanding,
+    /// Steer by expected queueing delay: `(outstanding + 1) ×`
+    /// latest-observed batch latency ([`Router::observe_latency`]).
+    /// A straggler-slowed replica keeps its depth-1 queue "longer" than
+    /// a healthy replica's depth-3 queue, so deadline-sensitive traffic
+    /// drains around it. With no observations yet every replica scores
+    /// equally and the tie-break degenerates to round-robin.
+    SloAware,
 }
 
 /// Router over `n` replicas. Thread-safe use is external (the server
@@ -24,6 +32,9 @@ pub struct Router {
     /// Replicas taken out of rotation (fault recovery): skipped by
     /// dispatch until re-admitted.
     evicted: Vec<bool>,
+    /// Latest observed batch latency per replica, integer microseconds
+    /// ([`Policy::SloAware`] scoring stays exactly replay-comparable).
+    est_latency_us: Vec<u64>,
 }
 
 impl Router {
@@ -35,6 +46,7 @@ impl Router {
             next_rr: 0,
             dispatched: vec![0; n],
             evicted: vec![false; n],
+            est_latency_us: vec![0; n],
         }
     }
 
@@ -107,6 +119,29 @@ impl Router {
                 self.next_rr = (pick + 1) % n;
                 pick
             }
+            Policy::SloAware => {
+                // Expected queueing delay: depth (incl. this request) ×
+                // last observed batch latency. u128 product of integer
+                // microseconds — no float compare, bit-stable ordering.
+                let score = |r: usize| {
+                    (self.outstanding[r] as u128 + 1) * (self.est_latency_us[r].max(1) as u128)
+                };
+                let min = (0..n)
+                    .filter(|&r| !self.evicted[r])
+                    .map(score)
+                    .min()
+                    .expect("at least one admitted replica");
+                let mut pick = 0;
+                for i in 0..n {
+                    let cand = (self.next_rr + i) % n;
+                    if !self.evicted[cand] && score(cand) == min {
+                        pick = cand;
+                        break;
+                    }
+                }
+                self.next_rr = (pick + 1) % n;
+                pick
+            }
         };
         self.outstanding[pick] += 1;
         self.dispatched[pick] += 1;
@@ -117,6 +152,19 @@ impl Router {
     pub fn complete(&mut self, replica: usize) {
         assert!(self.outstanding[replica] > 0, "complete without dispatch");
         self.outstanding[replica] -= 1;
+    }
+
+    /// Feed an observed batch latency (seconds) into the
+    /// [`Policy::SloAware`] estimate for `replica`. Harmless under the
+    /// other policies — they ignore the estimate.
+    pub fn observe_latency(&mut self, replica: usize, batch_s: f64) {
+        self.est_latency_us[replica] = (batch_s * 1e6) as u64;
+    }
+
+    /// Current latency estimate for `replica`, microseconds (0 = never
+    /// observed).
+    pub fn est_latency_us(&self, replica: usize) -> u64 {
+        self.est_latency_us[replica]
     }
 
     pub fn outstanding(&self, replica: usize) -> usize {
@@ -239,6 +287,104 @@ mod tests {
             }
         }
         assert!(rr.dispatched(0) >= 7, "round-robin keeps hitting the stuck replica");
+    }
+
+    #[test]
+    fn evict_while_outstanding_keeps_bookkeeping_exact() {
+        // Eviction must not disturb in-flight accounting: requests
+        // dispatched before the eviction still complete against the
+        // evicted replica, and its counters stay exact throughout.
+        let mut r = Router::new(3, Policy::LeastOutstanding);
+        let a = r.dispatch();
+        let b = r.dispatch();
+        assert_eq!((a, b), (0, 1));
+        r.evict(0);
+        assert_eq!(r.outstanding(0), 1, "eviction leaves in-flight counts alone");
+        // New traffic routes around the evicted replica...
+        for _ in 0..4 {
+            assert_ne!(r.dispatch(), 0);
+        }
+        // ...while the straggling in-flight request drains normally.
+        r.complete(0);
+        assert_eq!(r.outstanding(0), 0);
+        assert_eq!(r.dispatched(0), 1);
+        r.complete(1);
+        assert_eq!(r.outstanding(1), r.dispatched(1) as usize - 1);
+    }
+
+    #[test]
+    fn least_outstanding_tie_break_is_deterministic() {
+        // Equal states must dispatch identically, and the tie-break
+        // rotates from next_rr — a fresh all-zeros router walks
+        // replicas in index order, twice over.
+        let mut a = Router::new(4, Policy::LeastOutstanding);
+        let mut b = Router::new(4, Policy::LeastOutstanding);
+        let seq_a: Vec<usize> = (0..8).map(|_| a.dispatch()).collect();
+        let seq_b: Vec<usize> = (0..8).map(|_| b.dispatch()).collect();
+        assert_eq!(seq_a, seq_b, "same state, same picks");
+        assert_eq!(seq_a, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn readmit_under_load_reenters_rotation_fairly() {
+        // A replica readmitted while the others are loaded is the
+        // least-outstanding choice and must soak up new traffic first —
+        // but only until it catches up, not forever.
+        let mut r = Router::new(3, Policy::LeastOutstanding);
+        r.evict(2);
+        for _ in 0..6 {
+            assert_ne!(r.dispatch(), 2);
+        }
+        assert_eq!((r.outstanding(0), r.outstanding(1)), (3, 3));
+        r.readmit(2);
+        assert_eq!(r.dispatch(), 2);
+        assert_eq!(r.dispatch(), 2);
+        assert_eq!(r.dispatch(), 2);
+        // Caught up at 3-3-3: the tie-break resumes round-robin, so the
+        // readmitted replica is not unfairly pinned either.
+        let next = r.dispatch();
+        assert_ne!(next, 2, "no pinning after catch-up");
+    }
+
+    #[test]
+    fn slo_aware_prefers_lower_expected_delay() {
+        let mut r = Router::new(2, Policy::SloAware);
+        // Replica 0 is 4× slower per batch than replica 1.
+        r.observe_latency(0, 0.004);
+        r.observe_latency(1, 0.001);
+        // Depth 0 everywhere: picks the fast replica. Score stays lower
+        // for replica 1 until it queues 4 deep per slot on replica 0.
+        assert_eq!(r.dispatch(), 1); // scores 4000 vs 1000
+        assert_eq!(r.dispatch(), 1); // scores 4000 vs 2000
+        assert_eq!(r.dispatch(), 1); // scores 4000 vs 3000
+        // 4000 vs 4000: tie-break rotates from next_rr (= 0 after pick 1).
+        assert_eq!(r.dispatch(), 0);
+        assert_eq!(r.outstanding(1), 3);
+    }
+
+    #[test]
+    fn slo_aware_without_observations_degenerates_to_rotation() {
+        let mut r = Router::new(3, Policy::SloAware);
+        assert_eq!(
+            (0..6).map(|_| r.dispatch()).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0, 1, 2],
+            "all-equal scores fall back to round-robin spreading"
+        );
+    }
+
+    #[test]
+    fn slo_aware_routes_around_evicted_and_straggling_replicas() {
+        let mut r = Router::new(3, Policy::SloAware);
+        r.observe_latency(0, 0.001);
+        r.observe_latency(1, 0.001);
+        r.observe_latency(2, 0.016); // straggler socket: 16× slower
+        r.evict(0);
+        for _ in 0..8 {
+            assert_eq!(r.dispatch(), 1, "evicted and straggler replicas both avoided");
+        }
+        // Re-observing a recovered straggler lets it back in.
+        r.observe_latency(2, 0.001);
+        assert_eq!(r.dispatch(), 2, "depth 8 on replica 1 now dominates");
     }
 
     #[test]

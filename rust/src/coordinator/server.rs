@@ -56,12 +56,24 @@ pub struct GemvClient {
 impl GemvClient {
     /// Submit a vector; returns the receiver for the response.
     pub fn submit(&self, x: Vec<i8>) -> Receiver<Response> {
+        match self.submit_owned(x) {
+            Ok(rx) => rx,
+            // Server stopped: the caller sees a closed response channel.
+            Err(_) => channel().1,
+        }
+    }
+
+    /// Like [`Self::submit`], but when the server is already gone the
+    /// request vector is handed *back* instead of dropped — so a
+    /// multi-replica caller can re-route it without having cloned it.
+    pub fn submit_owned(&self, x: Vec<i8>) -> std::result::Result<Receiver<Response>, Vec<i8>> {
         let (tx, rx) = channel();
         let req = Request { x, submitted: Instant::now(), respond: tx };
-        // A send failure means the server stopped; the caller sees the
-        // closed response channel.
-        let _ = self.tx.send(Msg::Req(req));
-        rx
+        match self.tx.send(Msg::Req(req)) {
+            Ok(()) => Ok(rx),
+            Err(std::sync::mpsc::SendError(Msg::Req(req))) => Err(req.x),
+            Err(_) => unreachable!("sent a Msg::Req"),
+        }
     }
 
     /// Submit and wait.
@@ -146,24 +158,42 @@ impl ReplicaPool {
         self.router.readmit(replica);
     }
 
-    /// Route, wait, complete — self-healing: a replica whose server has
-    /// gone away (closed response channel) is evicted from rotation and
-    /// the request is transparently re-routed to a survivor. Returns
-    /// `None` only when every replica is gone.
-    pub fn call(&mut self, x: Vec<i8>) -> Option<Response> {
+    /// Route, wait, complete — self-healing: a replica whose server is
+    /// already gone at submit time hands the vector back, so it is
+    /// evicted and the request re-routed to a survivor without ever
+    /// cloning `x` (the common path *moves* the vector straight into
+    /// the request). Returns `None` only when every replica is gone.
+    pub fn call(&mut self, mut x: Vec<i8>) -> Option<Response> {
         loop {
-            let (replica, rx) = self.try_submit(x.clone())?;
-            match rx.recv() {
-                Ok(resp) => {
-                    self.complete(replica);
-                    return Some(resp);
-                }
-                Err(_) => {
-                    // Replica's worker is gone (shut down or panicked):
-                    // evict it and retry the request elsewhere.
+            let replica = self.router.try_dispatch()?;
+            let t0 = Instant::now();
+            match self.clients[replica].submit_owned(x) {
+                Err(returned) => {
+                    // Dead server, vector recovered: evict and retry
+                    // the same allocation elsewhere.
                     self.complete(replica);
                     self.router.evict(replica);
+                    x = returned;
                 }
+                Ok(rx) => match rx.recv() {
+                    Ok(resp) => {
+                        self.complete(replica);
+                        return Some(resp);
+                    }
+                    Err(_) => {
+                        // Worker died *after* accepting the request;
+                        // the vector went down with it, so there is
+                        // nothing left to re-route. Evict and surface
+                        // the loss as an error response.
+                        self.complete(replica);
+                        self.router.evict(replica);
+                        return Some(Response {
+                            y: Err("replica lost with request in flight".to_string()),
+                            device_seconds: 0.0,
+                            e2e: t0.elapsed(),
+                        });
+                    }
+                },
             }
         }
     }
@@ -383,6 +413,16 @@ mod tests {
         // Zero admitted replicas: call returns None instead of hanging.
         pool.evict(1);
         assert!(pool.call(vec![0i8; 1024]).is_none());
+    }
+
+    #[test]
+    fn submit_owned_recovers_the_vector_from_a_dead_server() {
+        let (c, _) = serving_coordinator(128, 1024, 59);
+        let (server, client) = GemvServer::start(c, default_batcher(2));
+        let _ = server.shutdown();
+        let x = vec![42i8; 1024];
+        let returned = client.submit_owned(x.clone()).expect_err("server is gone");
+        assert_eq!(returned, x, "request vector comes back for re-routing");
     }
 
     #[test]

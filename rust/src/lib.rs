@@ -50,6 +50,14 @@
 //! barrier/handshake combines from declarative map/reduce/zip specs;
 //! the PrIM-style workloads in [`kernels`] (reduction, histogram,
 //! prefix scan, select) are built through it.
+//!
+//! Reliability is exercised by two deterministic planes: [`chaos`]
+//! injects seeded fault plans (DPU death, transient launch/transfer
+//! failures, straggler sockets, replica loss) under a self-healing
+//! retry/quarantine/rebalance layer, and [`traffic`] replays seeded
+//! open-loop arrival plans (Poisson / bursty / ramp) through bounded
+//! admission queues, deadline-aware batching and SLO-aware routing —
+//! so overload behavior is as replayable as fault behavior.
 
 pub mod alloc;
 pub mod bench_support;
@@ -64,6 +72,7 @@ pub mod kernels;
 pub mod opt;
 pub mod plane;
 pub mod runtime;
+pub mod traffic;
 pub mod transfer;
 pub mod util;
 

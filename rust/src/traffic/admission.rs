@@ -1,0 +1,170 @@
+//! Admission control: bounded per-replica queues with a configurable
+//! overflow policy.
+//!
+//! Overload robustness starts here — an unbounded queue turns a burst
+//! into unbounded latency for *everyone*, while a bounded queue turns
+//! it into typed, accountable [`crate::Error::Overloaded`] rejections
+//! for the overflow and bounded latency for the admitted. The queue is
+//! policy-free storage; [`BoundedQueue::push`] reports what the caller
+//! must do ([`Admit`]) instead of doing it, so routing, router
+//! bookkeeping, and shed accounting stay in the serving harness where
+//! they belong.
+
+use std::collections::VecDeque;
+
+/// What to do when a replica's queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Reject the arriving request (classic bounded-queue backpressure;
+    /// newest request pays).
+    RejectNew,
+    /// Drop the oldest queued request to admit the new one (freshest
+    /// traffic wins — the oldest is the most likely to miss its
+    /// deadline anyway).
+    DropOldest,
+    /// Ask the caller to force-launch whatever is queued as a smaller
+    /// batch, then retry the push — trades batching efficiency for
+    /// admission.
+    DegradeBatch,
+}
+
+/// Admission knobs for one replica queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionConfig {
+    pub policy: AdmissionPolicy,
+    /// Maximum queued (not yet launched) requests per replica.
+    pub queue_cap: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig { policy: AdmissionPolicy::RejectNew, queue_cap: 32 }
+    }
+}
+
+/// Outcome of a [`BoundedQueue::push`]. Variants carry the displaced
+/// request back to the caller — the queue never silently drops work.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Admit<T> {
+    /// Request admitted; nothing displaced.
+    Admitted,
+    /// Queue full under [`AdmissionPolicy::RejectNew`]: the new request
+    /// comes back to be shed.
+    RejectedNew(T),
+    /// Queue full under [`AdmissionPolicy::DropOldest`]: the new
+    /// request is in; the displaced head comes back to be shed.
+    DroppedOldest { dropped: T },
+    /// Queue full under [`AdmissionPolicy::DegradeBatch`]: nothing
+    /// changed — the caller should force-launch a (smaller) batch to
+    /// make room and retry, or shed if the replica is busy.
+    NeedsDrain(T),
+}
+
+/// A FIFO with a hard capacity. Generic so the policy logic is unit
+/// tested without dragging in request payloads.
+#[derive(Debug, Clone)]
+pub struct BoundedQueue<T> {
+    cap: usize,
+    items: VecDeque<T>,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        assert!(cap >= 1, "zero-capacity queue admits nothing");
+        BoundedQueue { cap, items: VecDeque::with_capacity(cap) }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.cap
+    }
+
+    /// Push under `policy`. The queue length never exceeds `cap`.
+    pub fn push(&mut self, item: T, policy: AdmissionPolicy) -> Admit<T> {
+        if self.items.len() < self.cap {
+            self.items.push_back(item);
+            return Admit::Admitted;
+        }
+        match policy {
+            AdmissionPolicy::RejectNew => Admit::RejectedNew(item),
+            AdmissionPolicy::DropOldest => {
+                let dropped = self.items.pop_front().expect("full queue has a head");
+                self.items.push_back(item);
+                Admit::DroppedOldest { dropped }
+            }
+            AdmissionPolicy::DegradeBatch => Admit::NeedsDrain(item),
+        }
+    }
+
+    /// The queued items, oldest first (batch formation reads these).
+    pub fn inner(&self) -> &VecDeque<T> {
+        &self.items
+    }
+
+    /// Mutable access for batch extraction
+    /// ([`crate::traffic::DeadlineBatcher::take_batch`]).
+    pub fn inner_mut(&mut self) -> &mut VecDeque<T> {
+        &mut self.items
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_until_cap() {
+        let mut q = BoundedQueue::new(2);
+        assert_eq!(q.push(1, AdmissionPolicy::RejectNew), Admit::Admitted);
+        assert_eq!(q.push(2, AdmissionPolicy::RejectNew), Admit::Admitted);
+        assert!(q.is_full());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn reject_new_bounces_the_arrival() {
+        let mut q = BoundedQueue::new(2);
+        q.push(1, AdmissionPolicy::RejectNew);
+        q.push(2, AdmissionPolicy::RejectNew);
+        assert_eq!(q.push(3, AdmissionPolicy::RejectNew), Admit::RejectedNew(3));
+        assert_eq!(q.inner().iter().copied().collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn drop_oldest_displaces_the_head() {
+        let mut q = BoundedQueue::new(2);
+        q.push(1, AdmissionPolicy::DropOldest);
+        q.push(2, AdmissionPolicy::DropOldest);
+        assert_eq!(q.push(3, AdmissionPolicy::DropOldest), Admit::DroppedOldest { dropped: 1 });
+        assert_eq!(q.inner().iter().copied().collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(q.len(), 2, "cap still holds");
+    }
+
+    #[test]
+    fn degrade_batch_asks_for_a_drain_without_mutating() {
+        let mut q = BoundedQueue::new(1);
+        q.push(1, AdmissionPolicy::DegradeBatch);
+        assert_eq!(q.push(2, AdmissionPolicy::DegradeBatch), Admit::NeedsDrain(2));
+        assert_eq!(q.inner().iter().copied().collect::<Vec<_>>(), vec![1]);
+        // Caller drains (force-launch), then the retry admits.
+        q.inner_mut().pop_front();
+        assert_eq!(q.push(2, AdmissionPolicy::DegradeBatch), Admit::Admitted);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-capacity")]
+    fn zero_cap_is_rejected() {
+        let _ = BoundedQueue::<u32>::new(0);
+    }
+}

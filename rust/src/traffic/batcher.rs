@@ -1,0 +1,196 @@
+//! Deadline-aware batch formation on the **modeled** clock.
+//!
+//! The thread-path [`crate::coordinator::Batcher`] waits on wall-clock
+//! `recv_timeout`, which is the right tool for a real server and the
+//! wrong one for a simulation — wall time is nondeterministic, so
+//! overload behavior built on it can't be replayed. [`DeadlineBatcher`]
+//! is pure arithmetic over queue state and modeled timestamps instead:
+//! given when the replica frees up and what is queued, it *computes*
+//! when the batch should close, and sheds requests whose deadline has
+//! already passed before they ever touch the device.
+//!
+//! Close rule: the batch closes at the earliest of
+//! * `start + window` (the batching window),
+//! * `min(deadline) - est_batch_s` (launch late enough and the
+//!   tightest queued request misses its SLO *inside* the device),
+//! and immediately (`start`) once `max_batch` requests are queued —
+//! where `start = max(free_at, head arrival)` is the earliest the
+//! replica could launch at all.
+
+use std::collections::VecDeque;
+
+/// One admitted request waiting in a replica queue. `x` is the decoded
+/// input vector (generated from the plan's `xseed` at admission).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueuedRequest {
+    pub id: u64,
+    /// Arrival on the modeled clock (latency measurements start here).
+    pub arrival_s: f64,
+    /// When admission routed it to this queue.
+    pub admitted_s: f64,
+    /// Absolute deadline (`f64::INFINITY` = none).
+    pub deadline_s: f64,
+    pub x: Vec<i8>,
+}
+
+/// Size + window + deadline batch-close policy (modeled clock).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeadlineBatcher {
+    max_batch: usize,
+    window_s: f64,
+}
+
+impl DeadlineBatcher {
+    pub fn new(max_batch: usize, window_s: f64) -> DeadlineBatcher {
+        assert!(max_batch >= 1, "max_batch must be at least 1");
+        assert!(window_s >= 0.0, "negative batching window");
+        DeadlineBatcher { max_batch, window_s }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// When the batch at the head of `queue` should launch, given the
+    /// replica frees up at `free_at` and a batch is estimated to take
+    /// `est_batch_s` on the device. Meaningless (and unasked) for an
+    /// empty queue.
+    pub fn close_time(&self, free_at: f64, est_batch_s: f64, queue: &VecDeque<QueuedRequest>) -> f64 {
+        let head = queue.front().expect("close_time on an empty queue");
+        let start = free_at.max(head.admitted_s);
+        if queue.len() >= self.max_batch {
+            return start;
+        }
+        let mut close = start + self.window_s;
+        let min_deadline =
+            queue.iter().map(|q| q.deadline_s).fold(f64::INFINITY, f64::min);
+        if min_deadline.is_finite() {
+            // Launch no later than the point where the tightest request
+            // would miss its deadline inside the device.
+            close = close.min(min_deadline - est_batch_s);
+        }
+        close.max(start)
+    }
+
+    /// Form the batch at modeled time `now`: first shed every request
+    /// whose deadline already passed (anywhere in the queue — a live
+    /// request behind an expired one must not wait for it), then take
+    /// up to `max_batch` from the front. Returns `(batch, expired)`,
+    /// both in queue order.
+    pub fn take_batch(
+        &self,
+        queue: &mut VecDeque<QueuedRequest>,
+        now: f64,
+    ) -> (Vec<QueuedRequest>, Vec<QueuedRequest>) {
+        let mut expired = Vec::new();
+        let mut live = VecDeque::with_capacity(queue.len());
+        for q in queue.drain(..) {
+            if q.deadline_s <= now {
+                expired.push(q);
+            } else {
+                live.push_back(q);
+            }
+        }
+        *queue = live;
+        let take = queue.len().min(self.max_batch);
+        let batch = queue.drain(..take).collect();
+        (batch, expired)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, admitted_s: f64, deadline_s: f64) -> QueuedRequest {
+        QueuedRequest { id, arrival_s: admitted_s, admitted_s, deadline_s, x: vec![] }
+    }
+
+    fn queue(reqs: Vec<QueuedRequest>) -> VecDeque<QueuedRequest> {
+        reqs.into_iter().collect()
+    }
+
+    #[test]
+    fn window_bounds_the_close() {
+        let b = DeadlineBatcher::new(4, 0.010);
+        let q = queue(vec![req(0, 1.0, f64::INFINITY)]);
+        // Replica free immediately: close = head admission + window.
+        assert_eq!(b.close_time(0.0, 0.001, &q), 1.010);
+        // Replica busy past the window: close = when it frees up.
+        assert_eq!(b.close_time(2.0, 0.001, &q), 2.010);
+    }
+
+    #[test]
+    fn full_batch_closes_immediately() {
+        let b = DeadlineBatcher::new(2, 10.0);
+        let q = queue(vec![req(0, 1.0, f64::INFINITY), req(1, 1.5, f64::INFINITY)]);
+        assert_eq!(b.close_time(0.0, 0.001, &q), 1.0, "no window wait at max_batch");
+        assert_eq!(b.close_time(3.0, 0.001, &q), 3.0, "but never before the replica frees");
+    }
+
+    #[test]
+    fn zero_window_launches_at_start() {
+        let b = DeadlineBatcher::new(8, 0.0);
+        let q = queue(vec![req(0, 0.5, f64::INFINITY)]);
+        assert_eq!(b.close_time(0.2, 0.001, &q), 0.5);
+    }
+
+    #[test]
+    fn tightest_deadline_pulls_the_close_earlier() {
+        let b = DeadlineBatcher::new(8, 1.0);
+        // Deadline at 1.3, batch takes 0.1 → must launch by 1.2,
+        // well before the 2.0 window close.
+        let q = queue(vec![req(0, 1.0, 5.0), req(1, 1.1, 1.3)]);
+        assert!((b.close_time(0.0, 0.1, &q) - 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hopeless_deadline_never_moves_close_before_start() {
+        let b = DeadlineBatcher::new(8, 1.0);
+        // Even launching immediately misses this deadline; close must
+        // clamp to start (the shed happens in take_batch, not here).
+        let q = queue(vec![req(0, 1.0, 1.05)]);
+        assert_eq!(b.close_time(1.0, 0.5, &q), 1.0);
+    }
+
+    #[test]
+    fn take_batch_sheds_expired_anywhere_and_keeps_order() {
+        let b = DeadlineBatcher::new(2, 0.0);
+        let mut q = queue(vec![
+            req(0, 0.0, 0.5), // expired at now=1.0
+            req(1, 0.1, 2.0),
+            req(2, 0.2, 0.9), // expired, *behind* a live request
+            req(3, 0.3, 2.0),
+            req(4, 0.4, 2.0),
+        ]);
+        let (batch, expired) = b.take_batch(&mut q, 1.0);
+        assert_eq!(expired.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(q.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4], "overflow stays queued");
+    }
+
+    #[test]
+    fn take_batch_on_all_expired_queue_is_empty_batch() {
+        let b = DeadlineBatcher::new(4, 0.0);
+        let mut q = queue(vec![req(0, 0.0, 0.5), req(1, 0.0, 0.6)]);
+        let (batch, expired) = b.take_batch(&mut q, 1.0);
+        assert!(batch.is_empty());
+        assert_eq!(expired.len(), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn deadline_exactly_now_is_expired() {
+        // `<=` not `<`: a request due *at* the launch instant cannot be
+        // served in zero time, so it sheds.
+        let b = DeadlineBatcher::new(4, 0.0);
+        let mut q = queue(vec![req(0, 0.0, 1.0)]);
+        let (batch, expired) = b.take_batch(&mut q, 1.0);
+        assert!(batch.is_empty());
+        assert_eq!(expired.len(), 1);
+    }
+}

@@ -1,0 +1,39 @@
+//! The open-loop traffic plane: seeded arrivals, admission control,
+//! deadline batching, and the deterministic serving event loop.
+//!
+//! PR 7's chaos plane made *faults* reproducible; this module does the
+//! same for *load*. The pieces, bottom-up:
+//!
+//! * [`arrivals`] — [`TrafficPlan`]: seeded Poisson / bursty / ramp
+//!   arrival schedules over a weighted [`WorkloadMix`] of request
+//!   shapes (mixed INT8/INT4, mixed matrix sizes), bit-identically
+//!   replayable from a seed like [`crate::chaos::ChaosPlan`];
+//! * [`admission`] — [`BoundedQueue`] + [`AdmissionPolicy`]: bounded
+//!   per-replica queues that turn overload into typed
+//!   [`crate::Error::Overloaded`] rejections instead of unbounded
+//!   latency;
+//! * [`batcher`] — [`DeadlineBatcher`]: modeled-clock batch formation
+//!   (`close = min(window, earliest deadline slack)`, immediate at
+//!   `max_batch`), shedding expired requests with
+//!   [`crate::Error::DeadlineExceeded`] before they cost device time;
+//! * [`sim`] — [`OpenLoopSim`]: the event loop that replays a plan
+//!   against replica groups through a [`Router`](crate::coordinator::Router)
+//!   (round-robin / least-outstanding / SLO-aware), composes with
+//!   chaos replica losses, and returns a [`TrafficReport`] whose
+//!   `PartialEq` is the replay-exactness keystone.
+//!
+//! The thread-based serving path ([`crate::coordinator::server`])
+//! keeps its wall-clock batcher — real threads need real timeouts; the
+//! simulated path gets determinism.
+
+pub mod admission;
+pub mod arrivals;
+pub mod batcher;
+pub mod sim;
+
+pub use admission::{Admit, AdmissionConfig, AdmissionPolicy, BoundedQueue};
+pub use arrivals::{
+    ArrivalProcess, MixEntry, TrafficConfig, TrafficPlan, TrafficRequest, WorkloadMix,
+};
+pub use batcher::{DeadlineBatcher, QueuedRequest};
+pub use sim::{gen_x, FixedLatency, OpenLoopSim, SimConfig, TrafficBackend, TrafficReport};

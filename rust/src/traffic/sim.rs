@@ -1,0 +1,819 @@
+//! The open-loop serving harness: replays a [`TrafficPlan`] against a
+//! replica pool on the modeled clock.
+//!
+//! This is the simulation twin of [`crate::coordinator::server`]'s
+//! thread-based serving loop. Where the real path has worker threads,
+//! channels and wall-clock batching windows, this one is a single
+//! deterministic event loop: the next event is always the earlier of
+//! "the next planned arrival" and "the earliest batch close across all
+//! replica queues" ([`DeadlineBatcher::close_time`]), so a run is a
+//! pure function of `(plan, chaos losses, pool state)` and replays
+//! bit-identically — which is the only way overload behavior (sheds,
+//! deadline misses, tail percentiles) can be pinned by tests.
+//!
+//! One [`OpenLoopSim`] holds one *group* of replicas per
+//! [`WorkloadMix`](crate::traffic::WorkloadMix) entry (a group = one
+//! model's replica set + its [`Router`]); replica-loss chaos events
+//! address replicas by flat index across groups, in group order.
+
+use crate::coordinator::metrics::{LatencySummary, ServerMetrics};
+use crate::coordinator::router::{Policy, Router};
+use crate::coordinator::GemvCoordinator;
+use crate::kernels::gemv::GemvVariant;
+use crate::plane::ShardedGemvCoordinator;
+use crate::traffic::admission::{Admit, AdmissionConfig, BoundedQueue};
+use crate::traffic::arrivals::TrafficPlan;
+use crate::traffic::batcher::{DeadlineBatcher, QueuedRequest};
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// A GEMV backend the open-loop harness can drive. Unlike
+/// [`crate::coordinator::GemvExecutor`] (which feeds the thread path
+/// and needs `Send + 'static`), this reports modeled seconds per batch and knows
+/// its own precision variant so the harness can derive request
+/// payloads from plan seeds.
+pub trait TrafficBackend {
+    fn cols(&self) -> u32;
+    fn variant(&self) -> GemvVariant;
+    /// Serve one batch; returns the results and the **modeled** batch
+    /// latency in seconds (including any recovery/backoff the backend
+    /// performed internally).
+    fn serve_batch(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, f64)>;
+}
+
+impl TrafficBackend for ShardedGemvCoordinator {
+    fn cols(&self) -> u32 {
+        ShardedGemvCoordinator::cols(self)
+    }
+
+    fn variant(&self) -> GemvVariant {
+        self.variant
+    }
+
+    fn serve_batch(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, f64)> {
+        // Modeled wall time from the device clock (captures straggler
+        // windows and queue contention, not just the timing split).
+        let t0 = self.sys.sync_all();
+        let (ys, _t) = self.gemv_pipelined(xs)?;
+        let dt = self.sys.sync_all() - t0;
+        Ok((ys, dt))
+    }
+}
+
+impl TrafficBackend for crate::chaos::SelfHealingCoordinator {
+    fn cols(&self) -> u32 {
+        self.inner.cols()
+    }
+
+    fn variant(&self) -> GemvVariant {
+        self.inner.variant
+    }
+
+    fn serve_batch(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, f64)> {
+        // The clock delta spans every retry, backoff and rebalance the
+        // healing layer performed — overload sees recovery latency.
+        let t0 = self.inner.sys.sync_all();
+        let (ys, _t) = self.gemv_recovered(xs)?;
+        let dt = self.inner.sys.sync_all() - t0;
+        Ok((ys, dt))
+    }
+}
+
+impl TrafficBackend for GemvCoordinator {
+    fn cols(&self) -> u32 {
+        GemvCoordinator::cols(self)
+    }
+
+    fn variant(&self) -> GemvVariant {
+        self.variant
+    }
+
+    fn serve_batch(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, f64)> {
+        let t0 = self.sys.sync_all();
+        let (ys, _t) = self.gemv_pipelined(xs)?;
+        let dt = self.sys.sync_all() - t0;
+        Ok((ys, dt))
+    }
+}
+
+/// Deterministic device-free backend: fixed batch latency, `y[0]` =
+/// element sum. Lets admission/deadline/routing policy be unit tested
+/// in microseconds instead of simulated-device minutes.
+#[derive(Debug, Clone)]
+pub struct FixedLatency {
+    pub cols: u32,
+    pub variant: GemvVariant,
+    pub batch_s: f64,
+    /// Batches served (test observability).
+    pub batches: u64,
+}
+
+impl FixedLatency {
+    pub fn new(cols: u32, batch_s: f64) -> FixedLatency {
+        FixedLatency { cols, variant: GemvVariant::I8Opt, batch_s, batches: 0 }
+    }
+}
+
+impl TrafficBackend for FixedLatency {
+    fn cols(&self) -> u32 {
+        self.cols
+    }
+
+    fn variant(&self) -> GemvVariant {
+        self.variant
+    }
+
+    fn serve_batch(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, f64)> {
+        self.batches += 1;
+        let ys = xs.iter().map(|x| vec![x.iter().map(|&v| v as i32).sum()]).collect();
+        Ok((ys, self.batch_s))
+    }
+}
+
+/// Re-derive a request's input vector from its plan seed — admission
+/// does this on entry, and checkers do it again to verify served `y`s
+/// against an unbatched reference.
+pub fn gen_x(variant: GemvVariant, cols: u32, xseed: u64) -> Vec<i8> {
+    let mut rng = Rng::new(xseed);
+    match variant {
+        GemvVariant::I4Bsdp => rng.i4_vec(cols as usize),
+        _ => rng.i8_vec(cols as usize),
+    }
+}
+
+/// Serving-policy knobs for one run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub batcher: DeadlineBatcher,
+    pub admission: AdmissionConfig,
+    pub policy: Policy,
+}
+
+struct Replica<B> {
+    backend: B,
+    queue: BoundedQueue<QueuedRequest>,
+    /// Modeled time the replica finishes its current batch.
+    free_at: f64,
+    /// Request ids of the executing batch (router `complete` runs when
+    /// the modeled clock passes `free_at`, so outstanding counts stay
+    /// queued + truly-in-flight).
+    inflight: Vec<u64>,
+    /// Last observed batch latency — the batcher's slack estimate and
+    /// the `retry_after` hint for sheds.
+    last_batch_s: f64,
+}
+
+struct Group<B> {
+    replicas: Vec<Replica<B>>,
+    router: Router,
+}
+
+/// Everything a run did, in deterministic order. `PartialEq` is the
+/// keystone property: double runs and cross-tier runs compare whole
+/// reports bit-identically.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TrafficReport {
+    /// Ids that rode a device batch, in launch order.
+    pub served: Vec<u64>,
+    /// Typed sheds: `(id, Overloaded | DeadlineExceeded)` in shed order.
+    pub rejections: Vec<(u64, Error)>,
+    /// Ids whose batch failed unrecoverably (replica then evicted).
+    pub failed: Vec<(u64, Error)>,
+    /// Served ids that completed *after* their deadline (served late —
+    /// distinct from shed before launch).
+    pub deadline_violations: Vec<u64>,
+    /// `(id, y)` for every served request, in launch order.
+    pub ys: Vec<(u64, Vec<i32>)>,
+    pub metrics: ServerMetrics,
+    /// Modeled end of the run (last batch completion or last arrival).
+    pub end_s: f64,
+    pub launches: u64,
+    /// High-water queue depth across every replica (bounded-queue
+    /// invariant: never exceeds the admission cap).
+    pub max_queue_depth: usize,
+}
+
+impl TrafficReport {
+    pub fn shed_overload_ids(&self) -> Vec<u64> {
+        self.rejections
+            .iter()
+            .filter(|(_, e)| matches!(e, Error::Overloaded { .. }))
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    pub fn shed_deadline_ids(&self) -> Vec<u64> {
+        self.rejections
+            .iter()
+            .filter(|(_, e)| matches!(e, Error::DeadlineExceeded { .. }))
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    /// Requests served *within* their deadline, as a fraction of
+    /// everything presented.
+    pub fn goodput(&self) -> f64 {
+        if self.metrics.requests == 0 {
+            return 0.0;
+        }
+        (self.served.len() - self.deadline_violations.len()) as f64
+            / self.metrics.requests as f64
+    }
+
+    /// Served requests per modeled second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.end_s <= 0.0 {
+            return 0.0;
+        }
+        self.served.len() as f64 / self.end_s
+    }
+
+    pub fn latency_summary(&self) -> Option<LatencySummary> {
+        self.metrics.e2e.summary()
+    }
+}
+
+/// The open-loop event loop over a replica pool.
+pub struct OpenLoopSim<B> {
+    cfg: SimConfig,
+    groups: Vec<Group<B>>,
+}
+
+impl<B: TrafficBackend> OpenLoopSim<B> {
+    /// `groups[model]` = that mix entry's replica backends.
+    pub fn new(cfg: SimConfig, groups: Vec<Vec<B>>) -> OpenLoopSim<B> {
+        assert!(!groups.is_empty(), "no replica groups");
+        let groups = groups
+            .into_iter()
+            .map(|backends| {
+                assert!(!backends.is_empty(), "empty replica group");
+                let n = backends.len();
+                Group {
+                    replicas: backends
+                        .into_iter()
+                        .map(|backend| Replica {
+                            backend,
+                            queue: BoundedQueue::new(cfg.admission.queue_cap),
+                            free_at: 0.0,
+                            inflight: Vec::new(),
+                            last_batch_s: 0.0,
+                        })
+                        .collect(),
+                    router: Router::new(n, cfg.policy),
+                }
+            })
+            .collect();
+        OpenLoopSim { cfg, groups }
+    }
+
+    pub fn backend(&self, group: usize, replica: usize) -> &B {
+        &self.groups[group].replicas[replica].backend
+    }
+
+    pub fn router(&self, group: usize) -> &Router {
+        &self.groups[group].router
+    }
+
+    fn flat_to_group(&self, flat: usize) -> Option<(usize, usize)> {
+        let mut base = 0;
+        for (gi, g) in self.groups.iter().enumerate() {
+            if flat < base + g.replicas.len() {
+                return Some((gi, flat - base));
+            }
+            base += g.replicas.len();
+        }
+        None
+    }
+
+    /// Drive the whole plan. `losses` are `(at, flat_replica)` pairs on
+    /// **arrival op counts** (1-based, like chaos injector ops): loss
+    /// `k` fires just before arrival `at ≥ k` is admitted — i.e. mid
+    /// burst. Device-plane chaos (DPU death, stragglers) is installed
+    /// on the backends directly and needs nothing here.
+    pub fn run(&mut self, plan: &TrafficPlan, losses: &[(u64, usize)]) -> TrafficReport {
+        let mut rep = TrafficReport::default();
+        let reqs = plan.requests();
+        let mut next_loss = 0usize;
+        let mut now = 0.0f64;
+        let mut i = 0usize;
+        loop {
+            let next_arrival = reqs.get(i).map(|r| r.arrival_s);
+            let next_launch = self.next_launch();
+            let take_arrival = match (next_arrival, next_launch) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(a), Some((l, _, _))) => a <= l,
+            };
+            if take_arrival {
+                let req = &reqs[i];
+                i += 1;
+                now = now.max(req.arrival_s);
+                while next_loss < losses.len() && losses[next_loss].0 <= i as u64 {
+                    let flat = losses[next_loss].1;
+                    next_loss += 1;
+                    self.lose_replica(flat, now, &mut rep);
+                }
+                self.settle(now);
+                self.admit(req.id, req.model, req.arrival_s, req.deadline_s, req.xseed, now, &mut rep);
+            } else {
+                let (l, gi, ri) = next_launch.expect("launch branch without candidate");
+                // Clamp: a batch that filled up at `now` closes at
+                // `now`, never acausally before the arrival that
+                // filled it.
+                now = now.max(l);
+                self.settle(now);
+                self.launch(gi, ri, now, &mut rep);
+            }
+        }
+        let end = self
+            .groups
+            .iter()
+            .flat_map(|g| g.replicas.iter().map(|r| r.free_at))
+            .fold(now, f64::max);
+        self.settle(end);
+        rep.end_s = end;
+        rep
+    }
+
+    /// Earliest batch close over all admitted, non-empty replica
+    /// queues: `(close_time, group, replica)`, lowest index on ties.
+    fn next_launch(&self) -> Option<(f64, usize, usize)> {
+        let mut best: Option<(f64, usize, usize)> = None;
+        for (gi, g) in self.groups.iter().enumerate() {
+            for (ri, r) in g.replicas.iter().enumerate() {
+                if g.router.is_evicted(ri) || r.queue.is_empty() {
+                    continue;
+                }
+                let close =
+                    self.cfg.batcher.close_time(r.free_at, r.last_batch_s, r.queue.inner());
+                if best.is_none_or(|(b, _, _)| close < b) {
+                    best = Some((close, gi, ri));
+                }
+            }
+        }
+        best
+    }
+
+    /// Router completion when the modeled clock passes a batch end.
+    fn settle(&mut self, now: f64) {
+        for g in &mut self.groups {
+            for (ri, r) in g.replicas.iter_mut().enumerate() {
+                if r.free_at <= now && !r.inflight.is_empty() {
+                    for _ in 0..r.inflight.len() {
+                        g.router.complete(ri);
+                    }
+                    r.inflight.clear();
+                }
+            }
+        }
+    }
+
+    fn shed_overloaded(rep: &mut TrafficReport, id: u64, depth: usize, retry_after_s: f64) {
+        rep.metrics.shed_overload += 1;
+        rep.rejections.push((
+            id,
+            Error::Overloaded { queue_depth: depth, retry_after_us: (retry_after_s * 1e6) as u64 },
+        ));
+    }
+
+    /// Admit one arrival: route, generate the payload, push under the
+    /// admission policy.
+    #[allow(clippy::too_many_arguments)]
+    fn admit(
+        &mut self,
+        id: u64,
+        model: usize,
+        arrival_s: f64,
+        deadline_s: f64,
+        xseed: u64,
+        now: f64,
+        rep: &mut TrafficReport,
+    ) {
+        assert!(model < self.groups.len(), "plan model index out of range");
+        rep.metrics.requests += 1;
+        let Some(ri) = self.groups[model].router.try_dispatch() else {
+            // No replica admitted at all: total outage for this model.
+            Self::shed_overloaded(rep, id, 0, 0.0);
+            return;
+        };
+        let (variant, cols) = {
+            let b = &self.groups[model].replicas[ri].backend;
+            (b.variant(), b.cols())
+        };
+        let q = QueuedRequest {
+            id,
+            arrival_s,
+            admitted_s: now,
+            deadline_s,
+            x: gen_x(variant, cols, xseed),
+        };
+        self.push_routed(model, ri, q, now, /* may_degrade = */ true, rep);
+    }
+
+    /// Push an already-dispatched request into replica `ri`'s bounded
+    /// queue, handling the admission-policy outcome. The router has
+    /// already counted the request against `ri`.
+    fn push_routed(
+        &mut self,
+        gi: usize,
+        ri: usize,
+        q: QueuedRequest,
+        now: f64,
+        may_degrade: bool,
+        rep: &mut TrafficReport,
+    ) {
+        let policy = self.cfg.admission.policy;
+        let id = q.id;
+        let outcome = self.groups[gi].replicas[ri].queue.push(q, policy);
+        match outcome {
+            Admit::Admitted => {
+                rep.max_queue_depth =
+                    rep.max_queue_depth.max(self.groups[gi].replicas[ri].queue.len());
+            }
+            Admit::RejectedNew(r) => {
+                self.groups[gi].router.complete(ri);
+                let (depth, retry) = self.queue_state(gi, ri);
+                Self::shed_overloaded(rep, r.id, depth, retry);
+            }
+            Admit::DroppedOldest { dropped } => {
+                // The new request took the dropped one's queue slot and
+                // its router slot: one dispatched, one completed.
+                self.groups[gi].router.complete(ri);
+                let (depth, retry) = self.queue_state(gi, ri);
+                Self::shed_overloaded(rep, dropped.id, depth, retry);
+            }
+            Admit::NeedsDrain(r) => {
+                let free_at = self.groups[gi].replicas[ri].free_at;
+                if may_degrade && free_at <= now {
+                    // Force-launch a smaller-than-max batch right now
+                    // to make room, then admit.
+                    self.launch(gi, ri, now, rep);
+                    match self.groups[gi].replicas[ri].queue.push(r, policy) {
+                        Admit::Admitted => {
+                            rep.max_queue_depth = rep
+                                .max_queue_depth
+                                .max(self.groups[gi].replicas[ri].queue.len());
+                        }
+                        _ => {
+                            // Launch shed the whole queue as expired
+                            // and the cap is still hit — give up.
+                            self.groups[gi].router.complete(ri);
+                            let (depth, retry) = self.queue_state(gi, ri);
+                            Self::shed_overloaded(rep, id, depth, retry);
+                        }
+                    }
+                } else {
+                    // Replica mid-batch: nothing to drain into — shed.
+                    self.groups[gi].router.complete(ri);
+                    let (depth, retry) = self.queue_state(gi, ri);
+                    Self::shed_overloaded(rep, r.id, depth, retry);
+                }
+            }
+        }
+    }
+
+    /// `(queue depth, retry-after estimate)` for a shed response.
+    fn queue_state(&self, gi: usize, ri: usize) -> (usize, f64) {
+        let r = &self.groups[gi].replicas[ri];
+        (r.queue.len(), r.last_batch_s)
+    }
+
+    /// Close the batch at the head of `(gi, ri)`'s queue at modeled
+    /// time `t`: shed expired requests, serve the rest, advance the
+    /// replica's clock.
+    fn launch(&mut self, gi: usize, ri: usize, t: f64, rep: &mut TrafficReport) {
+        let (batch, expired) = {
+            let r = &mut self.groups[gi].replicas[ri];
+            self.cfg.batcher.take_batch(r.queue.inner_mut(), t)
+        };
+        for q in &expired {
+            self.groups[gi].router.complete(ri);
+            rep.metrics.shed_deadline += 1;
+            rep.rejections.push((
+                q.id,
+                Error::DeadlineExceeded {
+                    deadline_us: (q.deadline_s * 1e6) as u64,
+                    now_us: (t * 1e6) as u64,
+                },
+            ));
+        }
+        if batch.is_empty() {
+            return;
+        }
+        let xs: Vec<&[i8]> = batch.iter().map(|q| q.x.as_slice()).collect();
+        match self.groups[gi].replicas[ri].backend.serve_batch(&xs) {
+            Ok((ys, dt)) => {
+                let tc = t + dt;
+                {
+                    let r = &mut self.groups[gi].replicas[ri];
+                    r.free_at = tc;
+                    r.last_batch_s = dt;
+                    r.inflight.extend(batch.iter().map(|q| q.id));
+                }
+                self.groups[gi].router.observe_latency(ri, dt);
+                rep.launches += 1;
+                rep.metrics.batches += 1;
+                rep.metrics.device_seconds += dt;
+                for (q, y) in batch.iter().zip(ys) {
+                    rep.metrics.e2e.record_seconds(tc - q.arrival_s);
+                    rep.metrics.exec.record_seconds(dt);
+                    if q.deadline_s < tc {
+                        rep.deadline_violations.push(q.id);
+                    }
+                    rep.served.push(q.id);
+                    rep.ys.push((q.id, y));
+                }
+            }
+            Err(e) => {
+                // Unrecoverable batch failure: fail its requests with
+                // the typed error and take the replica out of rotation,
+                // re-routing whatever else it had queued.
+                for q in &batch {
+                    self.groups[gi].router.complete(ri);
+                    rep.metrics.errors += 1;
+                    rep.failed.push((q.id, e.clone()));
+                }
+                self.evict_and_requeue(gi, ri, t, rep);
+            }
+        }
+    }
+
+    /// Fire a chaos replica-loss: the executing batch drains (its
+    /// results were already committed at launch), queued work re-routes
+    /// to the surviving replicas, new work skips the replica.
+    fn lose_replica(&mut self, flat: usize, now: f64, rep: &mut TrafficReport) {
+        let Some((gi, ri)) = self.flat_to_group(flat) else { return };
+        if self.groups[gi].router.is_evicted(ri) {
+            return;
+        }
+        self.evict_and_requeue(gi, ri, now, rep);
+    }
+
+    fn evict_and_requeue(&mut self, gi: usize, ri: usize, now: f64, rep: &mut TrafficReport) {
+        let drained: Vec<QueuedRequest> = {
+            let g = &mut self.groups[gi];
+            g.router.evict(ri);
+            let r = &mut g.replicas[ri];
+            for _ in 0..r.inflight.len() {
+                g.router.complete(ri);
+            }
+            r.inflight.clear();
+            r.queue.inner_mut().drain(..).collect()
+        };
+        for mut q in drained {
+            // The dead replica's router slot frees up...
+            self.groups[gi].router.complete(ri);
+            // ...and the request re-enters admission (already counted
+            // in `metrics.requests` — no double count).
+            let Some(new_ri) = self.groups[gi].router.try_dispatch() else {
+                Self::shed_overloaded(rep, q.id, 0, 0.0);
+                continue;
+            };
+            q.admitted_s = now;
+            // No degrade-launch during requeue: one forced launch per
+            // *arrival* keeps the event loop's causality simple.
+            self.push_routed(gi, new_ri, q, now, /* may_degrade = */ false, rep);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::admission::AdmissionPolicy;
+    use crate::traffic::arrivals::{ArrivalProcess, TrafficConfig, WorkloadMix};
+
+    // FixedLatency: batch_s = 10 ms, max_batch = 4 → one replica
+    // saturates at 400 req/s.
+    const BATCH_S: f64 = 0.010;
+
+    fn cfg(policy: AdmissionPolicy, cap: usize) -> SimConfig {
+        SimConfig {
+            batcher: DeadlineBatcher::new(4, 0.005),
+            admission: AdmissionConfig { policy, queue_cap: cap },
+            policy: Policy::LeastOutstanding,
+        }
+    }
+
+    fn plan(rate: f64, n: usize, deadline: Option<f64>, seed: u64) -> TrafficPlan {
+        TrafficPlan::generate(
+            seed,
+            &TrafficConfig {
+                process: ArrivalProcess::Poisson { rate_rps: rate },
+                requests: n,
+                deadline_s: deadline,
+                mix: WorkloadMix::single(8, 16, GemvVariant::I8Opt),
+            },
+        )
+    }
+
+    fn pool(replicas: usize) -> Vec<Vec<FixedLatency>> {
+        vec![(0..replicas).map(|_| FixedLatency::new(16, BATCH_S)).collect()]
+    }
+
+    #[test]
+    fn below_saturation_serves_everything() {
+        let p = plan(100.0, 200, Some(0.5), 21);
+        let mut sim = OpenLoopSim::new(cfg(AdmissionPolicy::RejectNew, 16), pool(2));
+        let rep = sim.run(&p, &[]);
+        assert_eq!(rep.served.len(), 200);
+        assert!(rep.rejections.is_empty(), "no sheds below saturation");
+        assert!(rep.deadline_violations.is_empty());
+        assert!(rep.failed.is_empty());
+        assert_eq!(rep.metrics.requests, 200);
+        assert_eq!(rep.goodput(), 1.0);
+        assert!(rep.max_queue_depth <= 16);
+        // Each served id's y is the payload's element sum (FixedLatency
+        // semantics) — re-derivable from the plan alone.
+        for (id, y) in &rep.ys {
+            let req = &p.requests()[*id as usize];
+            let x = gen_x(GemvVariant::I8Opt, 16, req.xseed);
+            assert_eq!(y[0], x.iter().map(|&v| v as i32).sum::<i32>());
+        }
+    }
+
+    #[test]
+    fn double_run_replays_bit_identically() {
+        let p = plan(600.0, 300, Some(0.05), 33);
+        let losses = vec![(40u64, 0usize)];
+        let run = || {
+            let mut sim = OpenLoopSim::new(cfg(AdmissionPolicy::DropOldest, 8), pool(3));
+            sim.run(&p, &losses)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "identical (plan, losses, pool) must replay exactly");
+        assert!(!a.served.is_empty());
+    }
+
+    #[test]
+    fn overload_sheds_typed_and_bounded() {
+        // 2x saturation into one replica with a tiny queue: the pool
+        // must shed with typed Overloaded, never queue past the cap.
+        let p = plan(800.0, 400, None, 5);
+        let mut sim = OpenLoopSim::new(cfg(AdmissionPolicy::RejectNew, 4), pool(1));
+        let rep = sim.run(&p, &[]);
+        assert!(rep.metrics.shed_overload > 0, "2x load must shed");
+        assert!(rep.max_queue_depth <= 4, "bounded queue invariant");
+        assert!(!rep.served.is_empty(), "admitted traffic still serves");
+        assert_eq!(
+            rep.served.len() + rep.rejections.len(),
+            400,
+            "every request is served or typed-shed"
+        );
+        for (_, e) in &rep.rejections {
+            match e {
+                Error::Overloaded { queue_depth, .. } => assert!(*queue_depth <= 4),
+                other => panic!("unexpected shed type: {other:?}"),
+            }
+        }
+        // Overload rejections are transient: callers may retry later.
+        assert!(rep.rejections.iter().all(|(_, e)| e.is_transient()));
+    }
+
+    #[test]
+    fn drop_oldest_shed_ids_precede_served_ids_locally() {
+        let p = plan(800.0, 200, None, 9);
+        let mut sim = OpenLoopSim::new(cfg(AdmissionPolicy::DropOldest, 4), pool(1));
+        let rep = sim.run(&p, &[]);
+        assert!(rep.metrics.shed_overload > 0);
+        // DropOldest keeps the freshest traffic: the last request is
+        // never the one shed.
+        assert!(rep.shed_overload_ids().iter().all(|&id| id != 199));
+        assert_eq!(rep.served.len() + rep.rejections.len(), 200);
+    }
+
+    #[test]
+    fn degrade_batch_trades_batch_size_for_admission() {
+        let p = plan(800.0, 200, None, 13);
+        let mut rej = OpenLoopSim::new(cfg(AdmissionPolicy::RejectNew, 4), pool(1));
+        let rep_rej = rej.run(&p, &[]);
+        let mut deg = OpenLoopSim::new(cfg(AdmissionPolicy::DegradeBatch, 4), pool(1));
+        let rep_deg = deg.run(&p, &[]);
+        // Degrading launches early to make room, so it serves at least
+        // as much as rejecting outright (at worst equal).
+        assert!(rep_deg.served.len() >= rep_rej.served.len());
+        assert_eq!(rep_deg.served.len() + rep_deg.rejections.len(), 200);
+    }
+
+    #[test]
+    fn tight_deadlines_shed_before_launch() {
+        // Deadline shorter than one batch service time: everything the
+        // queue delays past 2 ms sheds as DeadlineExceeded, pre-launch.
+        let p = plan(800.0, 200, Some(0.002), 17);
+        let mut sim = OpenLoopSim::new(cfg(AdmissionPolicy::RejectNew, 32), pool(1));
+        let rep = sim.run(&p, &[]);
+        assert!(rep.metrics.shed_deadline > 0, "tight SLO must shed expired requests");
+        for (_, e) in &rep.rejections {
+            if let Error::DeadlineExceeded { deadline_us, now_us } = e {
+                assert!(now_us >= deadline_us, "shed only after the deadline passed");
+            }
+        }
+        // Deadline sheds are permanent — retrying a late request is futile.
+        assert!(rep
+            .rejections
+            .iter()
+            .filter(|(_, e)| matches!(e, Error::DeadlineExceeded { .. }))
+            .all(|(_, e)| !e.is_transient()));
+    }
+
+    #[test]
+    fn replica_loss_mid_burst_reroutes() {
+        let p = plan(300.0, 200, Some(0.5), 25);
+        let mut sim = OpenLoopSim::new(cfg(AdmissionPolicy::RejectNew, 16), pool(2));
+        // Replica 0 dies at arrival 50.
+        let rep = sim.run(&p, &[(50, 0)]);
+        assert!(sim.router(0).is_evicted(0));
+        assert_eq!(sim.router(0).admitted(), 1);
+        // The survivor has capacity (400 req/s > 300): everything the
+        // dead replica had queued re-routes and still serves.
+        assert_eq!(rep.served.len() as u64 + rep.metrics.shed(), 200);
+        assert!(rep.served.len() >= 190, "served only {}", rep.served.len());
+        // All post-loss batches ran on the survivor.
+        assert_eq!(sim.backend(0, 0).batches + sim.backend(0, 1).batches, rep.launches);
+    }
+
+    #[test]
+    fn total_outage_sheds_everything_typed() {
+        let p = plan(100.0, 20, None, 29);
+        let mut sim = OpenLoopSim::new(cfg(AdmissionPolicy::RejectNew, 8), pool(1));
+        let rep = sim.run(&p, &[(1, 0)]);
+        assert!(rep.served.is_empty());
+        assert_eq!(rep.rejections.len(), 20, "every request typed-shed, none lost silently");
+        assert_eq!(rep.metrics.shed_overload, 20);
+    }
+
+    #[test]
+    fn slo_aware_routing_beats_depth_blind_on_stragglers() {
+        // One replica is 8× slower. SLO-aware routing should send it
+        // less traffic than least-outstanding does.
+        let slow_pool = || {
+            vec![vec![
+                FixedLatency::new(16, BATCH_S),
+                FixedLatency { cols: 16, variant: GemvVariant::I8Opt, batch_s: 8.0 * BATCH_S, batches: 0 },
+            ]]
+        };
+        let p = plan(300.0, 300, None, 41);
+        let mut slo_cfg = cfg(AdmissionPolicy::RejectNew, 16);
+        slo_cfg.policy = Policy::SloAware;
+        let mut slo = OpenLoopSim::new(slo_cfg, slow_pool());
+        let rep_slo = slo.run(&p, &[]);
+        let mut lo = OpenLoopSim::new(cfg(AdmissionPolicy::RejectNew, 16), slow_pool());
+        let rep_lo = lo.run(&p, &[]);
+        assert_eq!(rep_slo.served.len() + rep_slo.rejections.len(), 300);
+        let slow_share_slo = slo.backend(0, 1).batches;
+        let slow_share_lo = lo.backend(0, 1).batches;
+        assert!(
+            slow_share_slo < slow_share_lo,
+            "SLO-aware sent {slow_share_slo} batches to the straggler, \
+             least-outstanding sent {slow_share_lo}"
+        );
+        // And the tail is better for it.
+        let (s_slo, s_lo) =
+            (rep_slo.latency_summary().unwrap(), rep_lo.latency_summary().unwrap());
+        assert!(s_slo.p95 <= s_lo.p95, "p95 {} vs {}", s_slo.p95, s_lo.p95);
+    }
+
+    #[test]
+    fn mixed_model_groups_route_independently() {
+        let mix = WorkloadMix::new(vec![
+            crate::traffic::arrivals::MixEntry {
+                weight: 1,
+                rows: 8,
+                cols: 16,
+                variant: GemvVariant::I8Opt,
+            },
+            crate::traffic::arrivals::MixEntry {
+                weight: 1,
+                rows: 8,
+                cols: 32,
+                variant: GemvVariant::I8Opt,
+            },
+        ]);
+        let p = TrafficPlan::generate(
+            49,
+            &TrafficConfig {
+                process: ArrivalProcess::Poisson { rate_rps: 200.0 },
+                requests: 100,
+                deadline_s: None,
+                mix,
+            },
+        );
+        let groups =
+            vec![vec![FixedLatency::new(16, BATCH_S)], vec![FixedLatency::new(32, BATCH_S)]];
+        let mut sim = OpenLoopSim::new(cfg(AdmissionPolicy::RejectNew, 16), groups);
+        let rep = sim.run(&p, &[]);
+        assert_eq!(rep.served.len(), 100);
+        // Both models saw traffic and each request hit its own group's
+        // payload width (served ys match per-model sums).
+        assert!(sim.backend(0, 0).batches > 0);
+        assert!(sim.backend(1, 0).batches > 0);
+        for (id, y) in &rep.ys {
+            let req = &p.requests()[*id as usize];
+            let cols = if req.model == 0 { 16 } else { 32 };
+            let x = gen_x(GemvVariant::I8Opt, cols, req.xseed);
+            assert_eq!(y[0], x.iter().map(|&v| v as i32).sum::<i32>());
+        }
+    }
+}

@@ -95,6 +95,18 @@ pub enum Error {
     /// scatter or push path). `transient: true` means the identical
     /// transfer may succeed if retried.
     TransferFailed { site: FaultSite, transient: bool, msg: String },
+    /// Admission control rejected the request: the chosen replica's
+    /// bounded queue was full (or no replica was admitted at all).
+    /// Carries the observed queue depth and a retry-after hint in
+    /// **modeled** microseconds — integer so the error stays `Eq` and
+    /// replay-comparable. Transient by definition: the identical
+    /// request may succeed once the queue drains.
+    Overloaded { queue_depth: usize, retry_after_us: u64 },
+    /// The request's deadline passed before its batch launched; it was
+    /// shed without touching the device. Both clocks are **modeled**
+    /// microseconds. Permanent: retrying the identical (already-late)
+    /// request cannot help — the caller must issue a new one.
+    DeadlineExceeded { deadline_us: u64, now_us: u64 },
 }
 
 impl Error {
@@ -113,7 +125,7 @@ impl Error {
                     ErrorClass::Permanent
                 }
             }
-            Error::Io(_) => ErrorClass::Transient,
+            Error::Io(_) | Error::Overloaded { .. } => ErrorClass::Transient,
             _ => ErrorClass::Permanent,
         }
     }
@@ -211,6 +223,14 @@ impl fmt::Display for Error {
                 let class = if *transient { "transient" } else { "permanent" };
                 write!(f, "transfer failed ({class}, {site}): {msg}")
             }
+            Error::Overloaded { queue_depth, retry_after_us } => write!(
+                f,
+                "overloaded: queue depth {queue_depth}, retry after {retry_after_us} us (modeled)"
+            ),
+            Error::DeadlineExceeded { deadline_us, now_us } => write!(
+                f,
+                "deadline exceeded: due at {deadline_us} us, shed at {now_us} us (modeled)"
+            ),
         }
     }
 }
@@ -286,6 +306,33 @@ mod tests {
         ] {
             assert_eq!(e.class(), ErrorClass::Permanent, "{e}");
         }
+    }
+
+    #[test]
+    fn taxonomy_overload_is_transient_deadline_is_permanent() {
+        // Backpressure invites a retry once the queue drains; a missed
+        // deadline cannot be retried into being on time.
+        let over = Error::Overloaded { queue_depth: 8, retry_after_us: 1500 };
+        assert_eq!(over.class(), ErrorClass::Transient);
+        assert!(over.is_transient());
+        assert_eq!(over.site(), FaultSite::default(), "overload carries no device context");
+        let late = Error::DeadlineExceeded { deadline_us: 2000, now_us: 2600 };
+        assert_eq!(late.class(), ErrorClass::Permanent);
+        assert!(!late.is_transient());
+    }
+
+    #[test]
+    fn overload_and_deadline_display() {
+        let over = Error::Overloaded { queue_depth: 8, retry_after_us: 1500 };
+        assert_eq!(
+            over.to_string(),
+            "overloaded: queue depth 8, retry after 1500 us (modeled)"
+        );
+        let late = Error::DeadlineExceeded { deadline_us: 2000, now_us: 2600 };
+        assert_eq!(
+            late.to_string(),
+            "deadline exceeded: due at 2000 us, shed at 2600 us (modeled)"
+        );
     }
 
     #[test]

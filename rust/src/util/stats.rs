@@ -58,6 +58,18 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Nearest-rank percentile over an already-sorted slice: the value at
+/// rank `⌈q·n⌉` (1-based), never interpolated. Always returns an
+/// element of the sample, so percentile comparisons in replay tests are
+/// bit-exact — the serving layer's latency summaries use this.
+pub fn percentile_nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let n = sorted.len();
+    let rank = (q * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
 /// Geometric mean (used for speedup aggregation, e.g. "2.4× on average").
 pub fn geomean(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
@@ -98,6 +110,21 @@ mod tests {
         assert_eq!(percentile(&v, 1.0), 30.0);
         assert!((percentile(&v, 0.5) - 20.0).abs() < 1e-12);
         assert!((percentile(&v, 0.25) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nearest_rank_returns_sample_elements_only() {
+        let v = [10.0, 20.0, 30.0, 40.0];
+        // ⌈0.5·4⌉ = rank 2 → 20.0 (the interpolated answer would be 25).
+        assert_eq!(percentile_nearest_rank(&v, 0.50), 20.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.95), 40.0);
+        assert_eq!(percentile_nearest_rank(&v, 1.0), 40.0);
+        // q = 0 clamps to the first rank rather than rank 0.
+        assert_eq!(percentile_nearest_rank(&v, 0.0), 10.0);
+        assert_eq!(percentile_nearest_rank(&[7.0], 0.5), 7.0);
+        let odd = [1.0, 2.0, 3.0];
+        assert_eq!(percentile_nearest_rank(&odd, 0.50), 2.0);
+        assert_eq!(percentile_nearest_rank(&odd, 0.99), 3.0);
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Traffic-plane contracts (ISSUE 8 acceptance pins):
+//!
+//! 1. **Keystone**: a seeded (traffic plan × chaos plan) open-loop run
+//!    reproduces the served / shed / deadline-violated id sets, the
+//!    latency percentiles and every replica's [`RecoveryMetrics`]
+//!    bit-identically on a double run and across all three
+//!    [`ExecTier`]s.
+//! 2. Below saturation with no chaos the pool sheds nothing and every
+//!    served `y` is bit-identical to the unbatched [`gemv_ref`]
+//!    reference.
+//! 3. At 2× saturation the pool sheds with typed
+//!    [`Error::Overloaded`], never queues past the admission cap, and
+//!    keeps goodput at or above what a single saturated replica could
+//!    deliver while at least one replica stays admitted.
+//!
+//! All rates are derived from a one-batch calibration on the modeled
+//! clock (which is tier-invariant — chaos_recovery.rs pins that), so
+//! the same plan drives every tier.
+
+use upmem_unleashed::chaos::{
+    ChaosConfig, ChaosInjector, ChaosPlan, RecoveryMetrics, SelfHealingCoordinator,
+};
+use upmem_unleashed::coordinator::router::Policy;
+use upmem_unleashed::dpu::ExecTier;
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::kernels::gemv::{gemv_ref, GemvShape, GemvVariant};
+use upmem_unleashed::plane::{NumaBalanced, PlacementPolicy, ShardMap, ShardedGemvCoordinator};
+use upmem_unleashed::traffic::{
+    gen_x, AdmissionConfig, AdmissionPolicy, ArrivalProcess, DeadlineBatcher, OpenLoopSim,
+    SimConfig, TrafficConfig, TrafficPlan, TrafficReport, WorkloadMix,
+};
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::rng::Rng;
+use upmem_unleashed::Error;
+
+const ROWS: u32 = 128;
+const COLS: u32 = 512;
+const BATCH: usize = 4;
+
+fn sharded(tier: ExecTier) -> ShardedGemvCoordinator {
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    sys.set_exec_tier(tier);
+    let sets = sys.alloc_shards(&NumaBalanced, 2, 1).unwrap();
+    let map = ShardMap::new(sets, NumaBalanced.name()).unwrap();
+    ShardedGemvCoordinator::new(sys, map, GemvVariant::I8Opt, 8)
+}
+
+fn matrix() -> Vec<i8> {
+    Rng::new(7).i8_vec((ROWS * COLS) as usize)
+}
+
+/// Modeled seconds one full pipelined batch takes on a pristine
+/// replica — the unit every arrival rate in this file is expressed in.
+/// Tier-invariant (the modeled clock is), so one calibration serves
+/// all tiers.
+fn batch_seconds(m: &[i8]) -> f64 {
+    let mut c = sharded(ExecTier::Stepped);
+    c.preload_matrix(ROWS, COLS, m).unwrap();
+    let xs: Vec<Vec<i8>> = (0..BATCH).map(|i| vec![i as i8 + 1; COLS as usize]).collect();
+    let views: Vec<&[i8]> = xs.iter().map(|v| v.as_slice()).collect();
+    let t0 = c.sys.sync_all();
+    c.gemv_pipelined(&views).unwrap();
+    let dt = c.sys.sync_all() - t0;
+    assert!(dt > 0.0, "calibration batch must cost modeled time");
+    dt
+}
+
+fn poisson_plan(seed: u64, rate_rps: f64, requests: usize, deadline_s: Option<f64>) -> TrafficPlan {
+    TrafficPlan::generate(
+        seed,
+        &TrafficConfig {
+            process: ArrivalProcess::Poisson { rate_rps },
+            requests,
+            deadline_s,
+            mix: WorkloadMix::single(ROWS, COLS, GemvVariant::I8Opt),
+        },
+    )
+}
+
+fn sim_cfg(policy: AdmissionPolicy, cap: usize, window_s: f64, routing: Policy) -> SimConfig {
+    SimConfig {
+        batcher: DeadlineBatcher::new(BATCH, window_s),
+        admission: AdmissionConfig { policy, queue_cap: cap },
+        policy: routing,
+    }
+}
+
+/// One keystone run: two self-healing replicas (each under its own
+/// seeded device-chaos plan, victims drawn mid-shard so coverage
+/// survives), driven by `plan` with a chaos-scheduled replica loss.
+fn traffic_chaos_run(
+    tier: ExecTier,
+    m: &[i8],
+    plan: &TrafficPlan,
+    losses: &[(u64, usize)],
+    cfg: &SimConfig,
+) -> (TrafficReport, Vec<RecoveryMetrics>) {
+    let replicas: Vec<SelfHealingCoordinator> = (0..2u64)
+        .map(|r| {
+            let mut c = sharded(tier);
+            c.preload_matrix(ROWS, COLS, m).unwrap();
+            let victims: Vec<usize> =
+                (0..2).flat_map(|s| c.map().shards[s].set.dpus[32..40].to_vec()).collect();
+            let ccfg = ChaosConfig { ops: 6, ..ChaosConfig::default() };
+            let plan = ChaosPlan::generate(31 + r, &ccfg, &victims);
+            c.sys.install_chaos(ChaosInjector::new(plan));
+            SelfHealingCoordinator::new(c)
+        })
+        .collect();
+    let mut sim = OpenLoopSim::new(cfg.clone(), vec![replicas]);
+    let rep = sim.run(plan, losses);
+    let metrics = (0..2).map(|r| sim.backend(0, r).metrics().clone()).collect();
+    (rep, metrics)
+}
+
+#[test]
+fn keystone_traffic_times_chaos_replays_bit_identically_across_tiers() {
+    let m = matrix();
+    let dt = batch_seconds(&m);
+    let sat = BATCH as f64 / dt; // one replica's saturation req/s
+
+    // 1.5× the two-replica pool capacity, tight-ish deadlines, and a
+    // chaos-plan-scheduled replica loss mid-stream: overload, deadline
+    // pressure, device faults and replica failover all in one run.
+    let requests = 24usize;
+    let plan = poisson_plan(101, 3.0 * sat, requests, Some(6.0 * dt));
+    let loss_cfg = ChaosConfig {
+        ops: requests as u64,
+        dpu_deaths: 0,
+        transient_launches: 0,
+        transient_transfers: 0,
+        stragglers: 0,
+        replica_losses: 1,
+        replicas: 2,
+        ..ChaosConfig::default()
+    };
+    let losses = ChaosPlan::generate(101, &loss_cfg, &[]).replica_losses();
+    assert_eq!(losses.len(), 1, "the committed seed schedules one replica loss");
+    let cfg = sim_cfg(AdmissionPolicy::RejectNew, 6, 0.5 * dt, Policy::SloAware);
+
+    let (rep_a, rm_a) = traffic_chaos_run(ExecTier::Stepped, &m, &plan, &losses, &cfg);
+    assert!(!rep_a.served.is_empty(), "overloaded ≠ dead: admitted traffic serves");
+    assert_eq!(rep_a.metrics.requests, requests as u64);
+    assert_eq!(
+        rep_a.served.len() + rep_a.rejections.len(),
+        requests,
+        "every request is served or typed-shed, none lost silently"
+    );
+    assert!(rep_a.max_queue_depth <= 6, "bounded queues under chaos + overload");
+    // Device chaos fired and healed on at least one replica.
+    assert!(rm_a.iter().any(|mx| mx.retries > 0), "chaos plans cost retries");
+
+    // Double run: the full report (id sets, ys, percentiles, modeled
+    // end) and every replica's recovery metrics replay bit-exactly.
+    let (rep_b, rm_b) = traffic_chaos_run(ExecTier::Stepped, &m, &plan, &losses, &cfg);
+    assert_eq!(rep_a, rep_b, "double run must replay the whole report exactly");
+    assert_eq!(rep_a.latency_summary(), rep_b.latency_summary());
+    assert_eq!(rm_a, rm_b, "recovery metrics must replay exactly");
+
+    // And across every execution tier.
+    for tier in [ExecTier::Batched, ExecTier::Superblock] {
+        let (rep_t, rm_t) = traffic_chaos_run(tier, &m, &plan, &losses, &cfg);
+        assert_eq!(rep_a, rep_t, "{} diverged on the traffic report", tier.name());
+        assert_eq!(rm_a, rm_t, "{} diverged on recovery metrics", tier.name());
+    }
+}
+
+#[test]
+fn below_saturation_no_chaos_serves_exact_and_sheds_nothing() {
+    let m = matrix();
+    let dt = batch_seconds(&m);
+    let sat = BATCH as f64 / dt;
+
+    // One replica's saturation rate split across two replicas (50%
+    // pool utilization), 12 requests against a 16-deep cap: overload
+    // is impossible by construction and deadlines are generous.
+    let requests = 12usize;
+    let plan = poisson_plan(103, sat, requests, Some(50.0 * dt));
+    let cfg = sim_cfg(AdmissionPolicy::RejectNew, 16, 0.5 * dt, Policy::LeastOutstanding);
+    let replicas: Vec<ShardedGemvCoordinator> = (0..2)
+        .map(|_| {
+            let mut c = sharded(ExecTier::Superblock);
+            c.preload_matrix(ROWS, COLS, &m).unwrap();
+            c
+        })
+        .collect();
+    let mut sim = OpenLoopSim::new(cfg, vec![replicas]);
+    let rep = sim.run(&plan, &[]);
+
+    assert_eq!(rep.served.len(), requests);
+    assert!(rep.rejections.is_empty(), "no sheds below saturation");
+    assert!(rep.deadline_violations.is_empty());
+    assert!(rep.failed.is_empty());
+    assert_eq!(rep.metrics.shed_rate(), 0.0);
+    assert_eq!(rep.goodput(), 1.0);
+    // Every served y is bit-identical to the unbatched reference on
+    // the payload re-derived from the plan seed alone.
+    let shape = GemvShape { rows: ROWS, cols: COLS };
+    for (id, y) in &rep.ys {
+        let x = gen_x(GemvVariant::I8Opt, COLS, plan.requests()[*id as usize].xseed);
+        assert_eq!(y, &gemv_ref(shape, &m, &x), "request {id} diverged from gemv_ref");
+    }
+}
+
+#[test]
+fn two_x_saturation_sheds_typed_and_keeps_single_replica_goodput() {
+    let m = matrix();
+    let dt = batch_seconds(&m);
+    let sat = BATCH as f64 / dt;
+
+    // 2× the two-replica pool capacity: sheds are inevitable (excess
+    // arrivals overflow the 2×4 queue slots), but both replicas stay
+    // admitted and the pool must keep at least one saturated replica's
+    // worth of throughput.
+    let requests = 40usize;
+    let plan = poisson_plan(107, 4.0 * sat, requests, None);
+    let cfg = sim_cfg(AdmissionPolicy::RejectNew, BATCH, 0.25 * dt, Policy::LeastOutstanding);
+    let replicas: Vec<ShardedGemvCoordinator> = (0..2)
+        .map(|_| {
+            let mut c = sharded(ExecTier::Superblock);
+            c.preload_matrix(ROWS, COLS, &m).unwrap();
+            c
+        })
+        .collect();
+    let mut sim = OpenLoopSim::new(cfg, vec![replicas]);
+    let rep = sim.run(&plan, &[]);
+
+    assert!(rep.metrics.shed_overload > 0, "2× saturation must shed");
+    assert!(rep.max_queue_depth <= BATCH, "bounded queue invariant holds under overload");
+    for (_, e) in &rep.rejections {
+        match e {
+            Error::Overloaded { queue_depth, .. } => {
+                assert!(*queue_depth <= BATCH, "shed response reports a bounded depth")
+            }
+            other => panic!("only typed overload sheds expected, got {other:?}"),
+        }
+    }
+    assert!(rep.rejections.iter().all(|(_, e)| e.is_transient()), "overload sheds are retryable");
+    assert_eq!(sim.router(0).admitted(), 2, "no replica was lost to overload");
+    // Goodput floor: with ≥1 replica admitted, the overloaded pool
+    // still moves at least ~a single saturated replica's rate (0.75
+    // slack covers the startup window and the final drain tail).
+    assert!(
+        rep.throughput_rps() >= 0.75 * sat,
+        "throughput {:.1} req/s under 2× load fell below a single replica's {:.1} req/s",
+        rep.throughput_rps(),
+        sat
+    );
+    assert_eq!(rep.served.len() + rep.rejections.len(), requests);
+}

@@ -24,12 +24,16 @@ Three sources, all optional:
                               §Placement ablation tables.
 
   --serving BENCH_serving.json
-                              schema-v2 report written by
-                              `cargo bench --bench chaos_serving`
-                              (deterministic modeled req/s, goodput
-                              fractions, recovery latencies). Same
-                              table filling rules — used for the
-                              §Chaos tables.
+                              schema-v2 serving report: the output of
+                              `cargo bench --bench chaos_serving`, of
+                              `cargo bench --bench open_loop_serving`
+                              (BENCH_serving_openloop.json), or the two
+                              merged via tools/merge_bench_json.py
+                              (deterministic modeled req/s, goodput /
+                              shed-rate fractions, recovery latencies,
+                              latency percentiles in modeled ms). Same
+                              table filling rules — used for the §Chaos
+                              and §Open-loop serving tables.
 
   --ablation FILE             captured stdout of
                               `cargo bench --bench pass_ablation`, which
@@ -131,6 +135,18 @@ def fill_perf(lines, perf_doc):
                 # (ungated) minstr field; 4 decimals, it is a small cost.
                 v = rec.get("minstr_per_s")
                 cells[j] = f"{v:.4f}" if v is not None else DASH
+                changed = True
+            elif "modeled ms" in col:
+                # Open-loop latency percentiles: modeled milliseconds in
+                # the (ungated) minstr field — a cost, not a rate.
+                v = rec.get("minstr_per_s")
+                cells[j] = f"{v:.3f}" if v is not None else DASH
+                changed = True
+            elif "shed" in col:
+                # Shed rates are lower-is-better (the inverse gating
+                # direction of `rate`), so they ride ungated in minstr.
+                v = rec.get("minstr_per_s")
+                cells[j] = f"{v:.3f}" if v is not None else DASH
                 changed = True
         if changed:
             lines[i] = fmt_row(cells)

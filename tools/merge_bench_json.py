@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Merge schema-v2 bench reports into one report.
+
+CI runs several serving benches per execution tier (chaos_serving,
+open_loop_serving), each writing its own schema-v2 JSON; the cross-tier
+consistency check and the committed-baseline gate want ONE file per
+tier. This merges them:
+
+    python3 tools/merge_bench_json.py OUT IN1 IN2 [IN3 ...]
+
+Rules (pinned by tools/test_tools.py):
+  * every input must be schema_version 2; the output is too;
+  * workload rows concatenate in input order (insertion order is what
+    check_perf_regression.py reports in);
+  * the first input that carries a `meta` object donates it (all inputs
+    come from the same tier run, so any copy is representative);
+  * a workload name appearing in two inputs is an error unless the
+    records are identical — silently keeping one would hide a bench
+    accidentally measuring the same row twice with different numbers.
+"""
+
+import json
+import sys
+
+
+def merge(docs):
+    """Merge parsed schema-v2 docs; raises ValueError on bad input."""
+    merged = {"schema_version": 2}
+    workloads = {}
+    for d in docs:
+        if d.get("schema_version") != 2:
+            raise ValueError("input is not schema_version 2")
+        if "meta" in d and "meta" not in merged:
+            merged["meta"] = d["meta"]
+        for name, rec in (d.get("workloads") or {}).items():
+            if name in workloads and workloads[name] != rec:
+                raise ValueError(f"conflicting duplicate workload: {name}")
+            workloads[name] = rec
+    merged["workloads"] = workloads
+    return merged
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    out, inputs = argv[1], argv[2:]
+    docs = []
+    for path in inputs:
+        with open(path) as f:
+            docs.append(json.load(f))
+    try:
+        merged = merge(docs)
+    except ValueError as e:
+        print(f"FAIL: {e}")
+        return 1
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out}: {len(merged['workloads'])} workload(s) "
+          f"from {len(inputs)} report(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

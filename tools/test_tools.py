@@ -13,6 +13,7 @@ import unittest
 
 import check_perf_regression as cpr
 import fill_experiments as fe
+import merge_bench_json as mbj
 
 
 def doc(workloads, schema=2, **extra):
@@ -194,6 +195,41 @@ class FillExperiments(unittest.TestCase):
             lines[10],
             "| chaos recovery latency (modeled s, informational) [seed=11] | 0.0123 |")
 
+    OPENLOOP = doc({
+        "open-loop serving modeled req/s [seed=11 load=2.0x]":
+            {"minstr_per_s": 0.0, "rate": 402.1},
+        "open-loop shed rate (fraction, informational) [seed=11 load=2.0x]":
+            {"minstr_per_s": 0.4167},
+        "open-loop p95 latency (modeled ms, informational) [seed=11 load=2.0x]":
+            {"minstr_per_s": 31.25},
+    })
+
+    def test_fills_open_loop_shed_and_latency_columns(self):
+        lines = [
+            "| workload | req/s (modeled) |",
+            "|---|---|",
+            "| open-loop serving modeled req/s [seed=11 load=2.0x] | _pending_ |",
+            "",
+            "| workload | shed rate |",
+            "|---|---|",
+            "| open-loop shed rate (fraction, informational) [seed=11 load=2.0x] | _pending_ |",
+            "",
+            "| workload | latency (modeled ms) |",
+            "|---|---|",
+            "| open-loop p95 latency (modeled ms, informational) [seed=11 load=2.0x] | _pending_ |",
+        ]
+        n = fe.fill_perf(lines, self.OPENLOOP)
+        self.assertEqual(n, 3)
+        self.assertEqual(
+            lines[2],
+            "| open-loop serving modeled req/s [seed=11 load=2.0x] | 402.10 |")
+        self.assertEqual(
+            lines[6],
+            "| open-loop shed rate (fraction, informational) [seed=11 load=2.0x] | 0.417 |")
+        self.assertEqual(
+            lines[10],
+            "| open-loop p95 latency (modeled ms, informational) [seed=11 load=2.0x] | 31.250 |")
+
     def test_ablation_parser_reads_marked_table_only(self):
         out = "\n".join([
             "noise | not | a | table row before the marker",
@@ -221,6 +257,47 @@ class FillExperiments(unittest.TestCase):
         self.assertEqual(n, 1)
         self.assertEqual(lines[3], "| BSDP dot, 16T | 1000 | 800 |")
         self.assertIn("_pending_", lines[5], "rows outside §Pass ablation untouched")
+
+
+class MergeBenchJson(unittest.TestCase):
+    def test_concatenates_in_order_with_meta_from_first(self):
+        a = doc({"w1": {"minstr_per_s": 0.0, "rate": 1.0}},
+                meta={"exec_tier": "stepped", "smoke": True})
+        b = doc({"w2": {"minstr_per_s": 0.0, "rate": 2.0},
+                 "w3": {"minstr_per_s": 0.5}},
+                meta={"exec_tier": "ignored"})
+        merged = mbj.merge([a, b])
+        self.assertEqual(merged["schema_version"], 2)
+        self.assertEqual(list(merged["workloads"]), ["w1", "w2", "w3"])
+        self.assertEqual(merged["meta"], {"exec_tier": "stepped", "smoke": True})
+
+    def test_identical_duplicates_collapse_conflicting_fail(self):
+        a = doc({"w": {"rate": 1.0}})
+        same = doc({"w": {"rate": 1.0}})
+        self.assertEqual(list(mbj.merge([a, same])["workloads"]), ["w"])
+        conflict = doc({"w": {"rate": 2.0}})
+        with self.assertRaises(ValueError):
+            mbj.merge([a, conflict])
+
+    def test_rejects_wrong_schema(self):
+        with self.assertRaises(ValueError):
+            mbj.merge([doc({}, schema=1)])
+
+    def test_cli_roundtrip(self):
+        a = doc({"w1": {"rate": 1.0}}, meta={"exec_tier": "superblock"})
+        b = doc({"w2": {"modeled_cycles": 7}})
+        with tempfile.TemporaryDirectory() as d:
+            pa, pb = os.path.join(d, "a.json"), os.path.join(d, "b.json")
+            out = os.path.join(d, "merged.json")
+            for p, v in [(pa, a), (pb, b)]:
+                with open(p, "w") as f:
+                    json.dump(v, f)
+            self.assertEqual(mbj.main(["merge_bench_json.py", out, pa, pb]), 0)
+            with open(out) as f:
+                merged = json.load(f)
+        self.assertEqual(list(merged["workloads"]), ["w1", "w2"])
+        # The merged file is gate-ready: not a bootstrap placeholder.
+        self.assertFalse(cpr.is_bootstrap(merged))
 
 
 if __name__ == "__main__":
