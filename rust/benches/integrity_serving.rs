@@ -1,0 +1,230 @@
+//! §Integrity — scrubbed serving under seeded corruption plans.
+//!
+//! Replays seeded open-loop traffic against two self-healing replicas
+//! whose chaos plans inject silent corruption (MRAM bit flips and
+//! in-flight transfer corruptions into the resident matrix blocks),
+//! while the sim schedules periodic in-PIM scrub cycles on the modeled
+//! clock. Detection happens by checksum diff against the host golden
+//! table, repair is a delta re-push of exactly the corrupted block —
+//! so the measured rows quantify the integrity plane's serving cost:
+//!
+//! * gated: modeled req/s with scrubbing on, and the detection rate
+//!   (corruptions caught / corruptions injected);
+//! * informational: scrub overhead (fraction of the run's modeled time
+//!   spent scrubbing + repairing) and mean time-to-repair.
+//!
+//! Everything is threadless and modeled, so every row is a pure
+//! function of (seed, tier) and CI compares the gated rows exactly
+//! across execution tiers. `PERF_SMOKE=1` shrinks the request stream.
+
+mod common;
+
+use common::{check, footer, timed};
+use upmem_unleashed::bench_support::json::{json_perf_report, PerfMeta, WorkloadEntry};
+use upmem_unleashed::bench_support::table::{f1, Table};
+use upmem_unleashed::chaos::{ChaosConfig, ChaosInjector, ChaosPlan, SelfHealingCoordinator};
+use upmem_unleashed::coordinator::router::Policy;
+use upmem_unleashed::dpu::default_exec_tier;
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::kernels::gemv::GemvVariant;
+use upmem_unleashed::plane::{NumaBalanced, PlacementPolicy, ShardMap, ShardedGemvCoordinator};
+use upmem_unleashed::traffic::{
+    AdmissionConfig, AdmissionPolicy, ArrivalProcess, DeadlineBatcher, OpenLoopSim, SimConfig,
+    TrafficConfig, TrafficPlan, WorkloadMix,
+};
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::rng::Rng;
+
+const ROWS: u32 = 128;
+const COLS: u32 = 512;
+const BATCH: usize = 4;
+const REPLICAS: usize = 2;
+/// One row per DPU at this shape — every per-DPU block is 512 B.
+const BLOCK_BYTES: u64 = 512;
+/// Committed seeds — CI replays exactly these.
+const SEEDS: [u64; 2] = [11, 23];
+
+fn preloaded(m: &[i8]) -> ShardedGemvCoordinator {
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    let sets = sys.alloc_shards(&NumaBalanced, 2, 1).expect("2 shards x 1 rank");
+    let map = ShardMap::new(sets, NumaBalanced.name()).expect("shard map");
+    let mut c = ShardedGemvCoordinator::new(sys, map, GemvVariant::I8Opt, 8);
+    c.preload_matrix(ROWS, COLS, m).expect("preload");
+    c
+}
+
+/// Modeled seconds per full pipelined batch — the saturation unit.
+fn batch_seconds(m: &[i8]) -> f64 {
+    let mut c = preloaded(m);
+    let xs: Vec<Vec<i8>> = (0..BATCH).map(|i| vec![i as i8 + 1; COLS as usize]).collect();
+    let views: Vec<&[i8]> = xs.iter().map(|v| v.as_slice()).collect();
+    let t0 = c.sys.sync_all();
+    c.gemv_pipelined(&views).expect("calibration batch");
+    c.sys.sync_all() - t0
+}
+
+fn main() {
+    let smoke = std::env::var("PERF_SMOKE").is_ok();
+    if smoke {
+        println!("[integrity_serving] PERF_SMOKE set: CI-sized request stream");
+    }
+    let requests: usize = if smoke { 12 } else { 36 };
+    let (_, wall) = timed(|| {
+        let m = Rng::new(4242).i8_vec((ROWS * COLS) as usize);
+        let dt = batch_seconds(&m);
+        let sat_pool = REPLICAS as f64 * BATCH as f64 / dt;
+        println!(
+            "calibration: {dt:.6} modeled s per {BATCH}-batch → pool saturation {sat_pool:.1} req/s"
+        );
+        let mut entries: Vec<WorkloadEntry> = Vec::new();
+        let mut table = Table::new(
+            "§Integrity — scrubbed serving under seeded corruption",
+            &[
+                "scenario",
+                "req/s (modeled)",
+                "injected",
+                "detected",
+                "repaired",
+                "detection rate",
+                "scrub overhead",
+                "mttr (modeled s)",
+            ],
+        );
+
+        for seed in SEEDS {
+            let plan = TrafficPlan::generate(
+                seed,
+                &TrafficConfig {
+                    process: ArrivalProcess::Poisson { rate_rps: 0.8 * sat_pool },
+                    requests,
+                    deadline_s: Some(50.0 * dt),
+                    mix: WorkloadMix::single(ROWS, COLS, GemvVariant::I8Opt),
+                },
+            );
+            let replicas: Vec<SelfHealingCoordinator> = (0..REPLICAS as u64)
+                .map(|r| {
+                    let mut c = preloaded(&m);
+                    let victims: Vec<usize> = (0..2)
+                        .flat_map(|s| c.map().shards[s].set.dpus[32..40].to_vec())
+                        .collect();
+                    let ccfg = ChaosConfig {
+                        ops: 6,
+                        dpu_deaths: 0,
+                        transient_launches: 0,
+                        transient_transfers: 0,
+                        stragglers: 0,
+                        mram_bit_flips: 2,
+                        transfer_corruptions: 1,
+                        corrupt_mram_len: BLOCK_BYTES as u32,
+                        ..ChaosConfig::default()
+                    };
+                    c.sys.install_chaos(ChaosInjector::new(ChaosPlan::generate(
+                        seed + 100 * (r + 1),
+                        &ccfg,
+                        &victims,
+                    )));
+                    SelfHealingCoordinator::new(c)
+                })
+                .collect();
+            let mut sim = OpenLoopSim::new(
+                SimConfig {
+                    batcher: DeadlineBatcher::new(BATCH, 0.5 * dt),
+                    admission: AdmissionConfig {
+                        policy: AdmissionPolicy::RejectNew,
+                        queue_cap: 2 * BATCH,
+                    },
+                    policy: Policy::SloAware,
+                },
+                vec![replicas],
+            );
+            sim.set_scrub_every(0.5 * dt);
+            let rep = sim.run(&plan, &[]);
+            let im = &rep.integrity;
+
+            check(
+                &format!("seed {seed}: every request served or typed-shed"),
+                (rep.served.len() + rep.rejections.len() + rep.failed.len()) as f64,
+                requests as f64,
+                requests as f64,
+            );
+            check(
+                &format!("seed {seed}: the committed plans inject corruption"),
+                if im.injected > 0 { 1.0 } else { 0.0 },
+                1.0,
+                1.0,
+            );
+            check(
+                &format!("seed {seed}: repairs are delta-only (one block each)"),
+                im.repaired_bytes as f64,
+                BLOCK_BYTES as f64 * im.repaired as f64,
+                BLOCK_BYTES as f64 * im.repaired as f64,
+            );
+            // Two draws landing in one block within a scrub interval
+            // collapse into a single detection, so the rate may dip
+            // below 1.0 — but never below half on the committed seeds.
+            let detection = if im.injected == 0 {
+                0.0
+            } else {
+                im.detected as f64 / im.injected as f64
+            };
+            check(&format!("seed {seed}: detection rate"), detection, 0.5, 1.0);
+
+            // Fraction of the run's modeled span spent in integrity
+            // work (scrub passes + repairs), the plane's serving cost.
+            let span = if rep.throughput_rps() > 0.0 {
+                rep.served.len() as f64 / rep.throughput_rps()
+            } else {
+                0.0
+            };
+            let overhead = if span > 0.0 { (im.scrub_s + im.repair_s) / span } else { 0.0 };
+
+            table.row(&[
+                format!("seed={seed} 0.8x scrubbed"),
+                f1(rep.throughput_rps()),
+                im.injected.to_string(),
+                im.detected.to_string(),
+                im.repaired.to_string(),
+                format!("{detection:.3}"),
+                format!("{overhead:.3}"),
+                format!("{:.6}", im.mean_time_to_repair_s()),
+            ]);
+
+            let tag = format!("[seed={seed}]");
+            entries.push(
+                WorkloadEntry::new(format!("integrity serving modeled req/s {tag}"), 0.0, None)
+                    .with_rate(rep.throughput_rps()),
+            );
+            entries.push(
+                WorkloadEntry::new(format!("integrity detection rate (fraction) {tag}"), 0.0, None)
+                    .with_rate(detection),
+            );
+            // Informational (ungated): overhead and repair latency are
+            // costs — lower is better, the opposite gating direction.
+            entries.push(WorkloadEntry::new(
+                format!("integrity scrub overhead (fraction, informational) {tag}"),
+                overhead,
+                None,
+            ));
+            entries.push(WorkloadEntry::new(
+                format!("integrity mean time-to-repair (modeled s, informational) {tag}"),
+                im.mean_time_to_repair_s(),
+                None,
+            ));
+        }
+
+        table.print();
+
+        let meta = PerfMeta {
+            exec_tier: default_exec_tier().name().to_string(),
+            smoke,
+            launch_workers: PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware)
+                .launch_workers(),
+        };
+        let json = json_perf_report(&entries, Some(&meta));
+        match std::fs::write("BENCH_serving_integrity.json", &json) {
+            Ok(()) => println!("wrote BENCH_serving_integrity.json ({} entries)", entries.len()),
+            Err(e) => eprintln!("could not write BENCH_serving_integrity.json: {e}"),
+        }
+    });
+    footer("integrity_serving", wall);
+}

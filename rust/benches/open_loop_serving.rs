@@ -197,7 +197,7 @@ fn main() {
             transient_transfers: 0,
             stragglers: 0,
             replica_losses: 1,
-            replicas: REPLICAS as u64,
+            replicas: REPLICAS,
             ..ChaosConfig::default()
         };
         let losses = ChaosPlan::generate(CHAOS_SEED, &loss_cfg, &[]).replica_losses();

@@ -27,8 +27,32 @@ pub struct ChaosStats {
     pub dpu_deaths: u64,
     /// Consultations whose modeled time was straggler-stretched.
     pub straggled_ops: u64,
+    /// Silent MRAM bit flips applied (launch boundaries).
+    pub mram_flips: u64,
+    /// Silent WRAM bit flips applied (launch boundaries).
+    pub wram_flips: u64,
+    /// In-flight transfer corruptions applied (transfer boundaries).
+    pub transfer_corruptions: u64,
     /// Human-readable fire log, in op order.
     pub log: Vec<String>,
+}
+
+impl ChaosStats {
+    /// Corruption events applied, all classes together — the integrity
+    /// layer's `injected` count.
+    pub fn corruptions_applied(&self) -> u64 {
+        self.mram_flips + self.wram_flips + self.transfer_corruptions
+    }
+}
+
+/// One bit flip the host must apply: XOR bit `bit` of the byte at
+/// `addr` in the victim DPU's WRAM (`wram: true`) or MRAM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitFlip {
+    pub dpu: DpuId,
+    pub wram: bool,
+    pub addr: u32,
+    pub bit: u8,
 }
 
 /// What a launch boundary must do.
@@ -41,6 +65,10 @@ pub struct LaunchOutcome {
     pub poison: Vec<DpuId>,
     /// Straggler multiplier for the launch's modeled compute seconds.
     pub factor: f64,
+    /// Due silent bit flips (MRAM/WRAM): the host applies each to the
+    /// victim DPU *before* the launch runs. Resident data rots between
+    /// uses; the launch boundary is just the clock it rots on.
+    pub flips: Vec<BitFlip>,
 }
 
 /// What a transfer boundary must do.
@@ -50,6 +78,10 @@ pub struct TransferOutcome {
     pub error: Option<Error>,
     /// Straggler multiplier for the transfer's modeled bus seconds.
     pub factor: f64,
+    /// Due in-flight corruptions: the host applies each to the victim
+    /// DPU's MRAM *after* the transfer's bytes land, so a
+    /// verify-after-push readback of the same transfer observes them.
+    pub flips: Vec<BitFlip>,
 }
 
 /// Plan executor, installed into a `PimSystem` via
@@ -139,6 +171,65 @@ impl ChaosInjector {
         false
     }
 
+    /// Fire every due, un-fired corruption of the requested boundary
+    /// kind (each one-shot), in plan order.
+    fn fire_flips(&mut self, launch: bool) -> Vec<BitFlip> {
+        let mut flips = Vec::new();
+        for (i, ev) in self.plan.events().iter().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            let hit = match ev {
+                FaultEvent::MramBitFlip { at, dpu, addr, bit } if launch && *at <= self.op => {
+                    Some((BitFlip { dpu: *dpu, wram: false, addr: *addr, bit: *bit }, "mram"))
+                }
+                FaultEvent::WramBitFlip { at, dpu, addr, bit } if launch && *at <= self.op => {
+                    Some((BitFlip { dpu: *dpu, wram: true, addr: *addr, bit: *bit }, "wram"))
+                }
+                FaultEvent::TransferCorruption { at, dpu, addr, bit }
+                    if !launch && *at <= self.op =>
+                {
+                    Some((BitFlip { dpu: *dpu, wram: false, addr: *addr, bit: *bit }, "transfer"))
+                }
+                _ => None,
+            };
+            if let Some((f, kind)) = hit {
+                self.fired[i] = true;
+                match kind {
+                    "mram" => self.stats.mram_flips += 1,
+                    "wram" => self.stats.wram_flips += 1,
+                    _ => self.stats.transfer_corruptions += 1,
+                }
+                self.stats.log.push(format!(
+                    "op {}: {} corruption (dpu {} addr {:#x} bit {})",
+                    self.op, kind, f.dpu, f.addr, f.bit
+                ));
+                flips.push(f);
+            }
+        }
+        flips
+    }
+
+    /// Plan events that have not fired yet, excluding stragglers and
+    /// replica losses (the injector never marks those: stragglers are
+    /// windows, replica losses belong to the serving harness). The
+    /// accounting tests assert this drains empty — a planned event the
+    /// run never applied is a test failure, not a silent no-op.
+    pub fn unfired(&self) -> Vec<FaultEvent> {
+        self.plan
+            .events()
+            .iter()
+            .zip(&self.fired)
+            .filter(|(e, &f)| {
+                !f && !matches!(
+                    e,
+                    FaultEvent::Straggler { .. } | FaultEvent::ReplicaLoss { .. }
+                )
+            })
+            .map(|(e, _)| e.clone())
+            .collect()
+    }
+
     fn straggle(&self, topo: &SystemTopology, ranks: &[usize]) -> f64 {
         let mut f = 1.0f64;
         for ev in self.plan.events() {
@@ -186,7 +277,8 @@ impl ChaosInjector {
         } else {
             None
         };
-        LaunchOutcome { error, poison, factor }
+        let flips = self.fire_flips(true);
+        LaunchOutcome { error, poison, factor, flips }
     }
 
     /// Consult at a transfer boundary (+1 op).
@@ -215,7 +307,10 @@ impl ChaosInjector {
         } else {
             None
         };
-        TransferOutcome { error, factor }
+        // A transfer that failed moved no bytes — nothing to corrupt.
+        // The flip stays pending and fires on the retry that lands.
+        let flips = if error.is_none() { self.fire_flips(false) } else { Vec::new() };
+        TransferOutcome { error, factor, flips }
     }
 }
 
@@ -314,6 +409,57 @@ mod tests {
         assert_eq!(inj.on_transfer(&t, &[1]).factor, 1.0, "socket 0 unaffected");
         assert_eq!(inj.on_transfer(&t, &[20]).factor, 1.0, "op 4 past window");
         assert_eq!(inj.stats().straggled_ops, 1);
+    }
+
+    #[test]
+    fn bit_flips_fire_once_at_their_boundary_kind() {
+        let plan = ChaosPlan::from_events(vec![
+            FaultEvent::MramBitFlip { at: 1, dpu: 3, addr: 0x10_0040, bit: 5 },
+            FaultEvent::WramBitFlip { at: 2, dpu: 4, addr: 0xE010, bit: 0 },
+            FaultEvent::TransferCorruption { at: 1, dpu: 3, addr: 0x10_0008, bit: 7 },
+        ]);
+        let mut inj = ChaosInjector::new(plan);
+        let t = topo();
+        // Op 1 (launch): the MRAM flip is due; the WRAM flip is not;
+        // the transfer corruption waits for a transfer boundary.
+        let out = inj.on_launch(&t, &[3, 4]);
+        assert_eq!(
+            out.flips,
+            vec![BitFlip { dpu: 3, wram: false, addr: 0x10_0040, bit: 5 }]
+        );
+        // Op 2 (transfer): corruption fires after the bytes land.
+        let out = inj.on_transfer(&t, &[0]);
+        assert_eq!(
+            out.flips,
+            vec![BitFlip { dpu: 3, wram: false, addr: 0x10_0008, bit: 7 }]
+        );
+        // Op 3 (launch): the WRAM flip is now due; nothing refires.
+        let out = inj.on_launch(&t, &[3, 4]);
+        assert_eq!(out.flips, vec![BitFlip { dpu: 4, wram: true, addr: 0xE010, bit: 0 }]);
+        assert!(inj.on_launch(&t, &[3, 4]).flips.is_empty(), "one-shot");
+        assert_eq!(inj.stats().mram_flips, 1);
+        assert_eq!(inj.stats().wram_flips, 1);
+        assert_eq!(inj.stats().transfer_corruptions, 1);
+        assert_eq!(inj.stats().corruptions_applied(), 3);
+        assert!(inj.unfired().is_empty(), "every planned event was applied");
+    }
+
+    #[test]
+    fn transfer_corruption_defers_past_a_failed_transfer() {
+        let plan = ChaosPlan::from_events(vec![
+            FaultEvent::TransientTransfer { at: 1 },
+            FaultEvent::TransferCorruption { at: 1, dpu: 0, addr: 0x10_0000, bit: 0 },
+        ]);
+        let mut inj = ChaosInjector::new(plan);
+        let t = topo();
+        let out = inj.on_transfer(&t, &[0]);
+        assert!(out.error.is_some(), "transient fires first");
+        assert!(out.flips.is_empty(), "no bytes moved, nothing corrupted");
+        assert_eq!(inj.unfired().len(), 1, "corruption still pending");
+        let out = inj.on_transfer(&t, &[0]);
+        assert!(out.error.is_none());
+        assert_eq!(out.flips.len(), 1, "fires on the retry that lands");
+        assert!(inj.unfired().is_empty());
     }
 
     #[test]

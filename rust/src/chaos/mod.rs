@@ -47,6 +47,15 @@
 //! * **Replica loss** is a serving-layer event: the plan records it,
 //!   the harness kills the replica, and
 //!   [`crate::coordinator::ReplicaPool`] auto-evicts + re-routes.
+//! * **Silent data corruption** (`MramBitFlip`/`WramBitFlip` at launch
+//!   boundaries, `TransferCorruption` after a push's bytes land) flips
+//!   one bit in the victim DPU with *no* error raised — real DPU DRAM
+//!   has no ECC. Detection is the integrity layer's job: golden
+//!   block checksums diffed against an in-PIM scrub kernel, plus an
+//!   optional verify-after-push readback; mismatches surface as
+//!   [`crate::Error::DataCorruption`] and the
+//!   [`SelfHealingCoordinator`] re-pushes exactly the corrupted block
+//!   ([`IntegrityMetrics`] counts injected/detected/repaired).
 //!
 //! **Keystone property** (pinned in `rust/tests/chaos_recovery.rs`):
 //! for any plan whose permanent faults leave every shard ≥1 usable DPU
@@ -58,6 +67,8 @@ pub mod injector;
 pub mod plan;
 pub mod recovery;
 
-pub use injector::{ChaosInjector, ChaosStats, LaunchOutcome, TransferOutcome};
+pub use injector::{BitFlip, ChaosInjector, ChaosStats, LaunchOutcome, TransferOutcome};
 pub use plan::{ChaosConfig, ChaosPlan, FaultEvent};
-pub use recovery::{DegradedMode, RecoveryMetrics, RetryPolicy, SelfHealingCoordinator};
+pub use recovery::{
+    DegradedMode, IntegrityMetrics, RecoveryMetrics, RetryPolicy, SelfHealingCoordinator,
+};

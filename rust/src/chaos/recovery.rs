@@ -82,6 +82,65 @@ pub struct RecoveryMetrics {
     pub events: Vec<String>,
 }
 
+/// Deterministic account of the data-integrity plane: corruption in,
+/// detection, delta repair. `PartialEq` so the keystone replay tests
+/// compare whole runs; every field is a product of the same
+/// deterministic arithmetic as [`RecoveryMetrics`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct IntegrityMetrics {
+    /// Corruption events the chaos plane applied
+    /// ([`crate::chaos::ChaosStats::corruptions_applied`]).
+    pub injected: u64,
+    /// Corruptions caught — by a scrub diff against the golden table or
+    /// by a verify-after-push readback.
+    pub detected: u64,
+    /// Successful delta repairs (single-block re-pushes).
+    pub repaired: u64,
+    /// Matrix bytes those repairs moved — with one corruption per
+    /// block, exactly `block_bytes * repaired`: the delta-only proof.
+    pub repaired_bytes: u64,
+    /// Completed scrub passes over the fleet.
+    pub scrub_cycles: u64,
+    /// Modeled seconds spent scrubbing.
+    pub scrub_s: f64,
+    /// Modeled seconds spent repairing (re-push + backoff + confirm).
+    pub repair_s: f64,
+    /// Human-readable integrity log, in event order.
+    pub events: Vec<String>,
+}
+
+impl IntegrityMetrics {
+    /// Corruptions applied but never caught — nonzero only for plans
+    /// that corrupt regions no scrub or readback ever reads. The
+    /// keystone exercises such a plan *explicitly*; a detectable plan
+    /// must drive this to zero.
+    pub fn undetected(&self) -> u64 {
+        self.injected.saturating_sub(self.detected)
+    }
+
+    /// Mean modeled time from detection to confirmed repair.
+    pub fn mean_time_to_repair_s(&self) -> f64 {
+        if self.repaired == 0 {
+            0.0
+        } else {
+            self.repair_s / self.repaired as f64
+        }
+    }
+
+    /// Fold `other` into `self` — the serving layer sums per-replica
+    /// integrity ledgers into one [`crate::traffic::TrafficReport`].
+    pub fn absorb(&mut self, other: &IntegrityMetrics) {
+        self.injected += other.injected;
+        self.detected += other.detected;
+        self.repaired += other.repaired;
+        self.repaired_bytes += other.repaired_bytes;
+        self.scrub_cycles += other.scrub_cycles;
+        self.scrub_s += other.scrub_s;
+        self.repair_s += other.repair_s;
+        self.events.extend(other.events.iter().cloned());
+    }
+}
+
 /// Self-healing serving executor: wraps the sharded coordinator with
 /// retry, quarantine and degradation policy. Implements
 /// [`GemvExecutor`], so it drops into [`crate::coordinator::GemvServer`]
@@ -91,6 +150,7 @@ pub struct SelfHealingCoordinator {
     pub policy: RetryPolicy,
     pub mode: DegradedMode,
     metrics: RecoveryMetrics,
+    integrity: IntegrityMetrics,
     strikes: BTreeMap<DpuId, u32>,
 }
 
@@ -101,6 +161,7 @@ impl SelfHealingCoordinator {
             policy: RetryPolicy::default(),
             mode: DegradedMode::default(),
             metrics: RecoveryMetrics::default(),
+            integrity: IntegrityMetrics::default(),
             strikes: BTreeMap::new(),
         }
     }
@@ -117,6 +178,17 @@ impl SelfHealingCoordinator {
 
     pub fn metrics(&self) -> &RecoveryMetrics {
         &self.metrics
+    }
+
+    /// The integrity ledger, with `injected` refreshed from the live
+    /// chaos stats so corruption applied *after* the last scrub still
+    /// counts (and shows up in [`IntegrityMetrics::undetected`]).
+    pub fn integrity(&self) -> IntegrityMetrics {
+        let mut m = self.integrity.clone();
+        if let Some(c) = self.inner.sys.chaos() {
+            m.injected = c.stats().corruptions_applied();
+        }
+        m
     }
 
     pub fn into_inner(self) -> ShardedGemvCoordinator {
@@ -149,6 +221,17 @@ impl SelfHealingCoordinator {
     }
 
     fn handle_failure(&mut self, e: crate::Error, attempt: &mut u32) -> Result<()> {
+        if let crate::Error::DataCorruption { shard, block, .. } = e {
+            // Corruption is permanent for *retry* purposes but the DPU
+            // itself is healthy — quarantining it would throw away a
+            // good device over one flipped bit. Repair in place instead:
+            // delta re-push of exactly the corrupted block.
+            self.integrity.detected += 1;
+            self.integrity.events.push(format!("detected: {e}"));
+            self.repair_block(shard, block)?;
+            *attempt = 0; // repair is progress; reset the budget
+            return Ok(());
+        }
         if e.is_transient() {
             self.metrics.transient_errors += 1;
             if *attempt >= self.policy.max_retries {
@@ -184,6 +267,85 @@ impl SelfHealingCoordinator {
             self.quarantine(d)?;
             *attempt = 0; // quarantine is progress; reset the budget
             Ok(())
+        }
+    }
+
+    /// One integrity cycle: scrub every live shard, delta-repair every
+    /// detected corruption, and re-scrub until the fleet is clean.
+    /// Transient scrub failures back off and retry exactly like batch
+    /// failures; a dead DPU discovered mid-scrub is quarantined through
+    /// the ordinary path. Returns the cycle's total modeled seconds
+    /// (scrubs + repairs + backoff), which the serving layer charges to
+    /// the replica's timeline.
+    pub fn scrub_and_repair(&mut self) -> Result<f64> {
+        let t0 = self.inner.sys.modeled_now();
+        let mut attempt = 0u32;
+        loop {
+            match self.inner.scrub_check() {
+                Ok(rep) => {
+                    self.integrity.scrub_cycles += 1;
+                    self.integrity.scrub_s += rep.seconds;
+                    if rep.mismatches.is_empty() {
+                        return Ok(self.inner.sys.modeled_now() - t0);
+                    }
+                    for &(s, b) in &rep.mismatches {
+                        self.integrity.detected += 1;
+                        self.integrity
+                            .events
+                            .push(format!("scrub: checksum mismatch at shard {s} block {b}"));
+                        self.repair_block(s, b)?;
+                    }
+                    // Loop: the next pass confirms the repairs took.
+                }
+                Err(e) => self.handle_failure(e, &mut attempt)?,
+            }
+        }
+    }
+
+    /// Delta-repair one block: re-push it from the retained encoding
+    /// (verify-after-push), retrying transient glitches — and fresh
+    /// corruption of the repair itself, which the readback catches —
+    /// with the usual bounded backoff.
+    fn repair_block(&mut self, shard: usize, block: usize) -> Result<()> {
+        let t0 = self.inner.sys.modeled_now();
+        let mut tries = 0u32;
+        loop {
+            match self.inner.repush_block(shard, block) {
+                Ok(bytes) => {
+                    self.integrity.repaired += 1;
+                    self.integrity.repaired_bytes += bytes;
+                    self.integrity.repair_s += self.inner.sys.modeled_now() - t0;
+                    self.integrity
+                        .events
+                        .push(format!("repair: re-pushed shard {shard} block {block} ({bytes} B)"));
+                    return Ok(());
+                }
+                Err(e) if tries >= self.policy.max_retries => {
+                    self.integrity.repair_s += self.inner.sys.modeled_now() - t0;
+                    return Err(e);
+                }
+                Err(e) => {
+                    match &e {
+                        crate::Error::DataCorruption { .. } => {
+                            // The repair push itself got corrupted in
+                            // flight and the readback caught it.
+                            self.integrity.detected += 1;
+                            self.integrity.events.push(format!("repair readback: {e}"));
+                        }
+                        _ if e.is_transient() => self.metrics.transient_errors += 1,
+                        _ => {
+                            self.integrity.repair_s += self.inner.sys.modeled_now() - t0;
+                            return Err(e);
+                        }
+                    }
+                    let pause =
+                        self.policy.base_backoff_s * self.policy.multiplier.powi(tries as i32);
+                    let now = self.inner.sys.modeled_now();
+                    self.inner.sys.advance_clock(now + pause);
+                    self.metrics.backoff_s += pause;
+                    tries += 1;
+                }
+            }
         }
     }
 

@@ -36,7 +36,7 @@
 pub mod xfer;
 
 use crate::alloc::{BaselineAllocator, NumaAwareAllocator, RankSet};
-use crate::chaos::ChaosInjector;
+use crate::chaos::{BitFlip, ChaosInjector};
 use crate::dpu::isa::Program;
 use crate::dpu::symbol::{MemSpace, Symbol, SymbolValue};
 use crate::dpu::{default_exec_tier, Dpu, ExecTier, LaunchResult, LaunchScratch, UopProgram};
@@ -44,7 +44,7 @@ use crate::transfer::model::BufferPlacement;
 use crate::transfer::queue::{RankQueues, Resource};
 use crate::transfer::topology::{DpuId, SystemTopology, TOTAL_DPUS, TOTAL_RANKS};
 use crate::transfer::{Direction, TransferEngine, TransferReport};
-use crate::util::error::FaultKind;
+use crate::util::error::{FaultKind, FaultSite};
 use crate::Result;
 use std::sync::Arc;
 
@@ -372,6 +372,7 @@ impl PimSystem {
         use std::collections::BTreeMap;
         // Chaos boundary: consult before any byte moves, so an injected
         // transfer failure leaves every DPU's MRAM untouched.
+        let mut flips = Vec::new();
         if self.chaos.is_some() {
             let mut ranks: Vec<usize> = {
                 let topo = &self.engine.topo;
@@ -387,6 +388,7 @@ impl PimSystem {
             if let Some(e) = out.error {
                 return Err(e);
             }
+            flips = out.flips;
         }
         // Group chunk indices per socket, per DPU (deterministic order).
         let mut by_socket: BTreeMap<usize, BTreeMap<DpuId, Vec<usize>>> = BTreeMap::new();
@@ -442,6 +444,9 @@ impl PimSystem {
                 self.dpus[id] = Some(dpu);
             }
         }
+        // Corruption lands after the scattered bytes, once every DPU
+        // box is back in its slot.
+        self.apply_flips(&flips)?;
         let mut first: Option<(usize, crate::Error)> = None;
         for e in errs.into_iter().flatten() {
             if first.as_ref().is_none_or(|&(fi, _)| e.0 < fi) {
@@ -452,6 +457,39 @@ impl PimSystem {
             Some((_, e)) => Err(e),
             None => Ok(()),
         }
+    }
+
+    /// Full `{dpu, rank, socket}` fault context for one DPU.
+    pub(crate) fn site_of(&self, id: DpuId) -> FaultSite {
+        let rank = self.engine.topo.rank_of_dpu(id);
+        FaultSite {
+            dpu: Some(id),
+            rank: Some(rank),
+            socket: Some(self.engine.topo.rank_loc(rank).socket),
+        }
+    }
+
+    /// Apply injected silent bit flips (chaos corruption events): XOR
+    /// one bit of the victim byte in the target memory, raising no
+    /// fault — exactly what a DRAM upset without ECC looks like.
+    /// Corruption windows are drawn inside the valid address spaces, so
+    /// a miss is a plan-construction bug surfaced as `HostAccess`, not
+    /// a silently dropped event.
+    fn apply_flips(&mut self, flips: &[BitFlip]) -> Result<()> {
+        for f in flips {
+            let dpu = self.dpu_mut(f.dpu);
+            if f.wram {
+                let b = dpu.wram.load8(f.addr).map_err(host_err(f.dpu, f.addr))?;
+                dpu.wram.store8(f.addr, b ^ (1 << f.bit)).map_err(host_err(f.dpu, f.addr))?;
+            } else {
+                let mut b = [0u8; 1];
+                dpu.mram.read(f.addr, &mut b).map_err(host_err(f.dpu, f.addr))?;
+                dpu.mram
+                    .write(f.addr, &[b[0] ^ (1 << f.bit)])
+                    .map_err(host_err(f.dpu, f.addr))?;
+            }
+        }
+        Ok(())
     }
 
     fn dpu_mut(&mut self, id: DpuId) -> &mut Dpu {
@@ -490,12 +528,14 @@ impl PimSystem {
         // Chaos boundary (+1 op): an injected failure aborts before any
         // byte moves; straggler windows stretch the modeled bus time.
         let mut chaos_factor = 1.0;
+        let mut flips = Vec::new();
         if let Some(chaos) = self.chaos.as_mut() {
             let out = chaos.on_transfer(&self.engine.topo, &set.ranks.ranks);
             if let Some(e) = out.error {
                 return Err(e);
             }
             chaos_factor = out.factor;
+            flips = out.flips;
         }
         if plan.nr_dpus() != set.nr_dpus() {
             return Err(crate::Error::Transfer(format!(
@@ -509,6 +549,9 @@ impl PimSystem {
             let id = set.dpus[i];
             self.dpu_mut(id).mram.write(addr, bytes).map_err(host_err(id, addr))?;
         }
+        // In-flight corruption lands *after* the bytes, so a
+        // verify-after-push readback of this same transfer observes it.
+        self.apply_flips(&flips)?;
         let report = self.engine.parallel(
             &set.ranks.ranks,
             plan.total_bytes(),
@@ -522,6 +565,39 @@ impl PimSystem {
             report.seconds * chaos_factor,
         );
         self.queues.advance_to(end);
+        Ok(report)
+    }
+
+    /// [`Self::push_xfer`] with verify-after-push readback: after the
+    /// plan executes, every prepared view is read back from MRAM and
+    /// compared against its source bytes. A mismatch — e.g. an injected
+    /// in-flight [`crate::chaos::FaultEvent::TransferCorruption`]
+    /// landed on this transfer — surfaces as
+    /// [`crate::Error::DataCorruption`] with `shard = 0` and `block` =
+    /// the DPU's index in the set (the host layer has no shard
+    /// identity; callers that have one remap it). The readback is a
+    /// pure integrity probe and accounts no modeled bus time.
+    pub fn push_xfer_verified(
+        &mut self,
+        set: &DpuSet,
+        plan: &XferPlan<'_>,
+    ) -> Result<TransferReport> {
+        let report = self.push_xfer(set, plan)?;
+        let addr = plan.mram_addr();
+        let mut buf = Vec::new();
+        for (i, bytes) in plan.iter_prepared() {
+            let id = set.dpus[i];
+            buf.clear();
+            buf.resize(bytes.len(), 0);
+            self.dpu_mut(id).mram.read(addr, &mut buf).map_err(host_err(id, addr))?;
+            if buf != bytes {
+                return Err(crate::Error::DataCorruption {
+                    site: self.site_of(id),
+                    shard: 0,
+                    block: i,
+                });
+            }
+        }
         Ok(report)
     }
 
@@ -614,14 +690,18 @@ impl PimSystem {
         // Chaos boundary (+1 op) for every broadcast flavor —
         // `broadcast` and `broadcast_async` both delegate here, so the
         // op is counted exactly once per user-visible broadcast.
+        let mut flips = Vec::new();
         if let Some(chaos) = self.chaos.as_mut() {
-            if let Some(e) = chaos.on_transfer(&self.engine.topo, &set.ranks.ranks).error {
+            let out = chaos.on_transfer(&self.engine.topo, &set.ranks.ranks);
+            if let Some(e) = out.error {
                 return Err(e);
             }
+            flips = out.flips;
         }
         for &id in &set.dpus {
             self.dpu_mut(id).mram.write(mram_addr, bytes).map_err(host_err(id, mram_addr))?;
         }
+        self.apply_flips(&flips)?;
         Ok(())
     }
 
@@ -767,6 +847,10 @@ impl PimSystem {
         let mut chaos_factor = 1.0;
         if let Some(chaos) = self.chaos.as_mut() {
             let out = chaos.on_launch(&self.engine.topo, &set.dpus);
+            // Silent rot is independent of the API outcome: due bit
+            // flips land even when the launch itself aborts with a
+            // transient error (the injector already counted them).
+            self.apply_flips(&out.flips)?;
             if let Some(e) = out.error {
                 return Err(e);
             }

@@ -18,7 +18,11 @@
 //!   workloads built declaratively through [`crate::framework`]
 //!   (SimplePIM-style map/reduce/zip specs) instead of hand-emitted
 //!   streams, each with a [`crate::cpu_ref::prim`] host reference and a
-//!   fleet entry point through [`crate::host::PimSystem`].
+//!   fleet entry point through [`crate::host::PimSystem`];
+//! * [`scrub`] — the integrity plane's in-PIM block-checksum kernel,
+//!   another framework-derived reducer: each DPU recomputes its
+//!   resident matrix block's checksum for the coordinator to diff
+//!   against the host-side golden table.
 //!
 //! Every emitter produces a *naive*, compiler-shaped stream plus
 //! optimizer metadata (loop markers, bounded `__mulsi3` call sites);
@@ -50,6 +54,7 @@ pub mod histogram;
 pub mod mulsi3;
 pub mod reduce;
 pub mod scan;
+pub mod scrub;
 pub mod select;
 
 /// WRAM offset of the argument area.

@@ -1,0 +1,164 @@
+//! In-PIM integrity scrub built through [`crate::framework`].
+//!
+//! The integrity plane's detection leg: each DPU recomputes the
+//! checksum of its resident matrix block (a wrapping i32 sum over the
+//! block's little-endian words) with the same declarative machinery as
+//! [`super::reduce`] — one input stream, per-tasklet accumulation over
+//! cyclically-distributed chunks, tree combine, tasklet 0 publishes at
+//! `fw_result`. The coordinator diffs the published values against the
+//! golden table it computed host-side at encode time; any difference is
+//! a [`crate::Error::DataCorruption`].
+//!
+//! A wrapping word sum is not a CRC, but it is exact for the injected
+//! fault model: flipping any single bit of any word changes the sum by
+//! ±2^k (mod 2^32), which is never zero — so every single-bit upset in
+//! a scrubbed block is detected. What it cannot see is data the kernel
+//! never reads: bytes past the block's declared word count (staged
+//! chunk padding) or WRAM outside the framework frame. The keystone
+//! test exercises exactly such an undetectable-by-construction plan.
+
+use crate::dpu::builder::ProgramBuilder;
+use crate::dpu::isa::{AluOp, Program, Src};
+use crate::framework::{
+    ChunkKernel, ChunkSpec, Dir, Dist, ElemCtx, ElemWidth, Hooks, KernelArgs, Stream, RESULT_ADDR,
+};
+use crate::host::{DpuSet, PimSystem};
+use crate::opt::PassConfig;
+use crate::Result;
+
+use super::{KernelScratch, MRAM_A};
+
+/// Elements staged per chunk (1 KB of i32, like [`super::reduce`]).
+pub const CHUNK_ELEMS: u32 = 256;
+
+/// The declarative iteration spec. The stream base is [`MRAM_A`] —
+/// the same address the sharded GEMV keeps its matrix block at, so the
+/// scrub program reads the resident weights in place.
+pub fn scrub_spec() -> ChunkSpec {
+    ChunkSpec {
+        name: "scrub",
+        streams: vec![Stream {
+            name: "blk",
+            mram_base: MRAM_A,
+            elem: ElemWidth::I32,
+            dir: Dir::In,
+        }],
+        chunk_elems: CHUNK_ELEMS,
+        unroll: 8,
+        dist: Dist::Cyclic,
+        scratch_bytes: 0,
+    }
+}
+
+/// Build the scrub program under `cfg` (naive emit + optimizer).
+pub fn build_scrub(cfg: &PassConfig) -> Result<Program> {
+    let k = ChunkKernel::reducer(scrub_spec(), 0, AluOp::Add);
+    let mut body = |pb: &mut ProgramBuilder, ctx: &ElemCtx| {
+        pb.add(ctx.acc, ctx.acc, Src::Reg(ctx.inputs[0]));
+    };
+    k.build(cfg, &mut Hooks::new(&mut body))
+}
+
+/// Host-side golden checksum of one block: the wrapping i32 sum of its
+/// little-endian words. A trailing partial word (block length not a
+/// multiple of 4) is zero-extended — matching what the DPU reads, since
+/// staged blocks are zero-padded to chunk multiples.
+pub fn golden_block_checksum(bytes: &[u8]) -> i32 {
+    let mut sum = 0i32;
+    let mut it = bytes.chunks_exact(4);
+    for w in &mut it {
+        sum = sum.wrapping_add(i32::from_le_bytes([w[0], w[1], w[2], w[3]]));
+    }
+    let rem = it.remainder();
+    if !rem.is_empty() {
+        let mut w = [0u8; 4];
+        w[..rem.len()].copy_from_slice(rem);
+        sum = sum.wrapping_add(i32::from_le_bytes(w));
+    }
+    sum
+}
+
+/// Words the scrub kernel must process to cover `bytes` block bytes.
+pub fn block_words(bytes: usize) -> usize {
+    bytes.div_ceil(4)
+}
+
+/// Run the scrub kernel on one simulated DPU over `data` staged at
+/// [`MRAM_A`] and return the published checksum. The property tests
+/// pin this against [`golden_block_checksum`] across shapes, tiers and
+/// pass subsets.
+pub fn run_scrub_dpu(
+    scr: &mut KernelScratch,
+    cfg: &PassConfig,
+    nr_tasklets: usize,
+    data: &[u8],
+) -> Result<i32> {
+    let prog = build_scrub(cfg)?;
+    scr.dpu.load_program(&prog)?;
+    let id = scr.dpu.id;
+    let mram_err = |addr: u32| move |k| crate::Error::HostAccess { dpu: id, addr, kind: k };
+    let words: Vec<i32> = data
+        .chunks(4)
+        .map(|w| {
+            let mut b = [0u8; 4];
+            b[..w.len()].copy_from_slice(w);
+            i32::from_le_bytes(b)
+        })
+        .collect();
+    let padded = super::pad_to_chunks(&words, CHUNK_ELEMS);
+    if !padded.is_empty() {
+        scr.dpu.mram.write_i32_slice(MRAM_A, &padded).map_err(mram_err(MRAM_A))?;
+    }
+    KernelArgs::for_elems(words.len(), CHUNK_ELEMS, nr_tasklets).write(&mut scr.dpu.wram);
+    scr.dpu.launch_with(nr_tasklets, &mut scr.launch)?;
+    Ok(scr.dpu.wram.load32(RESULT_ADDR).unwrap() as i32)
+}
+
+/// Publish per-DPU scrub geometry through the `fw_*` typed symbols.
+/// Unlike the reduce fleet (uniform partition), scrub blocks differ per
+/// DPU — each entry covers exactly that DPU's resident block words.
+pub fn write_scrub_args(
+    sys: &mut PimSystem,
+    set: &DpuSet,
+    prog: &Program,
+    args: &[KernelArgs],
+) -> Result<()> {
+    super::reduce::write_fleet_args(sys, set, prog, args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scrub_matches_golden_across_shapes() {
+        let mut rng = Rng::new(83);
+        let mut scr = KernelScratch::default();
+        for n in [0usize, 1, 3, 4, 1020, 1024, 1028, 4096] {
+            let data = rng.u8_vec(n);
+            for t in [1usize, 5, 16] {
+                let got = run_scrub_dpu(&mut scr, &PassConfig::all(), t, &data).unwrap();
+                assert_eq!(got, golden_block_checksum(&data), "n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn golden_checksum_sees_every_single_bit_flip() {
+        let mut rng = Rng::new(84);
+        let data = rng.u8_vec(512);
+        let clean = golden_block_checksum(&data);
+        for byte in [0usize, 255, 511] {
+            for bit in 0..8u8 {
+                let mut rotten = data.clone();
+                rotten[byte] ^= 1 << bit;
+                assert_ne!(
+                    golden_block_checksum(&rotten),
+                    clean,
+                    "flip at byte {byte} bit {bit} must change the checksum"
+                );
+            }
+        }
+    }
+}

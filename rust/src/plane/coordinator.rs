@@ -30,11 +30,16 @@ use super::tree::BroadcastTree;
 use super::workers::{plan_scatter, ScatterChunk};
 use crate::coordinator::{GemvExecutor, GemvTiming, RowPartition};
 use crate::dpu::symbol::{Symbol, SymbolTable};
-use crate::host::{LaunchHandle, PimSystem};
+use crate::framework::KernelArgs;
+use crate::host::{LaunchHandle, PimSystem, XferPlan};
 use crate::kernels::gemv::{
     collect_gemv_output, emit_gemv, encode_matrix_block, encode_vector, GemvShape, GemvVariant,
     CHUNK, GEMV_M, GEMV_X, GEMV_X_ALT,
 };
+use crate::kernels::scrub::{
+    block_words, build_scrub, golden_block_checksum, write_scrub_args, CHUNK_ELEMS,
+};
+use crate::opt::PassConfig;
 use crate::transfer::topology::{DpuId, RankId, SOCKETS};
 use crate::Result;
 
@@ -47,6 +52,16 @@ pub struct ScatterReport {
     pub bytes: u64,
 }
 
+/// Outcome of one integrity scrub pass over every live shard.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScrubReport {
+    /// Modeled seconds the pass took (scrub launches + restore).
+    pub seconds: f64,
+    /// `(shard, block)` of every DPU whose in-PIM checksum disagreed
+    /// with the host-side golden table, in shard/block order.
+    pub mismatches: Vec<(usize, usize)>,
+}
+
 /// Fleet GEMV over a [`ShardMap`].
 pub struct ShardedGemvCoordinator {
     pub sys: PimSystem,
@@ -57,6 +72,10 @@ pub struct ShardedGemvCoordinator {
     symbols: Option<SymbolTable>,
     /// Encoded matrix retained for fault-driven delta re-scatter.
     mbytes: Vec<u8>,
+    /// Golden per-block checksums, `golden[shard][block]`, computed
+    /// host-side from the retained encoding; the scrub kernel's in-PIM
+    /// values are diffed against this table.
+    golden: Vec<Vec<i32>>,
     /// Shards retired by graceful degradation ([`Self::retire_shard`]):
     /// skipped by broadcasts/launches, their rows zero-filled in `y`.
     /// Lazily sized; missing entries mean "live".
@@ -111,6 +130,7 @@ impl ShardedGemvCoordinator {
             cols: 0,
             symbols: None,
             mbytes: Vec::new(),
+            golden: Vec::new(),
             retired: Vec::new(),
             gemv_count: 0,
             last_instrs: 0,
@@ -237,6 +257,7 @@ impl ShardedGemvCoordinator {
         self.mbytes = encode_matrix_block(self.variant, cols, m);
         self.cols = cols;
         self.symbols = Some(program.symbols.clone());
+        self.golden = (0..self.map.shards.len()).map(|s| self.golden_of_shard(s)).collect();
 
         // Eager bytes through the per-socket worker threads.
         let rb = self.variant.row_bytes(cols) as usize;
@@ -500,7 +521,132 @@ impl ShardedGemvCoordinator {
         };
         self.sys.advance_clock(end);
         self.write_shard_args(idx)?;
+        // The shard's per-DPU block boundaries moved: refresh its slice
+        // of the golden table so the next scrub diffs the new layout.
+        if idx < self.golden.len() {
+            self.golden[idx] = self.golden_of_shard(idx);
+        }
         Ok(bytes)
+    }
+
+    // ---- data integrity: golden table, scrub, delta repair ---------------
+
+    /// Host-side golden checksums of shard `idx`'s per-DPU blocks,
+    /// sliced from the retained encoding exactly like the scatter path.
+    fn golden_of_shard(&self, idx: usize) -> Vec<i32> {
+        let rb = self.variant.row_bytes(self.cols) as usize;
+        let shard = &self.map.shards[idx];
+        let part = shard.partition();
+        (0..part.nr_dpus)
+            .map(|d| {
+                let r0 = (shard.row_start + part.start_of(d)) as usize;
+                let nr = part.rows_of(d) as usize;
+                golden_block_checksum(&self.mbytes[r0 * rb..(r0 + nr) * rb])
+            })
+            .collect()
+    }
+
+    /// The typed corruption error for shard `idx`, block `block`.
+    pub fn corruption_error(&self, shard: usize, block: usize) -> crate::Error {
+        let dpu = self.map.shards[shard].set.dpus[block];
+        crate::Error::DataCorruption { site: self.sys.site_of(dpu), shard, block }
+    }
+
+    /// One integrity scrub pass: load the framework scrub kernel on
+    /// every live shard, recompute each DPU's resident-block checksum
+    /// *on the DPU*, diff against the golden table, then restore the
+    /// serving kernel and its arguments. Scrub launches are real
+    /// injection boundaries — they tick the chaos op counter and their
+    /// modeled compute shows up on the rank queues (the serving layer
+    /// folds the returned seconds into its latency percentiles).
+    pub fn scrub_check(&mut self) -> Result<ScrubReport> {
+        if self.cols == 0 {
+            return Ok(ScrubReport::default());
+        }
+        let scrub_prog = build_scrub(&PassConfig::all())?;
+        let rsym = scrub_prog.symbols.symbol::<u32>("fw_result")?;
+        let rb = self.variant.row_bytes(self.cols) as usize;
+        let nr_tasklets = self.nr_tasklets;
+        let t0 = self.sys.sync_all();
+        let mut mismatches = Vec::new();
+        for s in 0..self.map.shards.len() {
+            if self.is_retired(s) {
+                continue;
+            }
+            self.sys.load_program(&self.map.shards[s].set, &scrub_prog)?;
+            let part = self.map.shards[s].partition();
+            let args: Vec<KernelArgs> = (0..part.nr_dpus)
+                .map(|d| {
+                    let words = block_words(part.rows_of(d) as usize * rb);
+                    KernelArgs::for_elems(words, CHUNK_ELEMS, nr_tasklets)
+                })
+                .collect();
+            write_scrub_args(&mut self.sys, &self.map.shards[s].set, &scrub_prog, &args)?;
+            let fleet = self.sys.launch(&self.map.shards[s].set, nr_tasklets)?;
+            self.sys.recycle_launch(fleet);
+            for d in 0..part.nr_dpus {
+                let got = self.sys.read_symbol(&self.map.shards[s].set, d, &rsym, 0)? as i32;
+                if got != self.golden[s][d] {
+                    mismatches.push((s, d));
+                }
+            }
+        }
+        // Restore the serving kernel + arguments on every live shard.
+        let program = emit_gemv(self.variant)?;
+        for s in 0..self.map.shards.len() {
+            if self.is_retired(s) {
+                continue;
+            }
+            self.sys.load_program(&self.map.shards[s].set, &program)?;
+            self.write_shard_args(s)?;
+        }
+        let seconds = self.sys.sync_all() - t0;
+        Ok(ScrubReport { seconds, mismatches })
+    }
+
+    /// Strict scrub: like [`Self::scrub_check`] but the first mismatch
+    /// surfaces as [`crate::Error::DataCorruption`]. Returns the pass's
+    /// modeled seconds when every block is clean.
+    pub fn scrub(&mut self) -> Result<f64> {
+        let rep = self.scrub_check()?;
+        if let Some(&(s, d)) = rep.mismatches.first() {
+            return Err(self.corruption_error(s, d));
+        }
+        Ok(rep.seconds)
+    }
+
+    /// Re-push exactly one block (shard `idx`, DPU position `block`)
+    /// from the retained encoding — the integrity plane's delta repair,
+    /// strictly smaller than even the single-shard
+    /// [`Self::rescatter_shard`]. The push runs in verify-after-push
+    /// mode so in-flight corruption of the repair itself is caught
+    /// immediately (remapped to the real shard/block coordinates).
+    /// Returns the bytes moved.
+    pub fn repush_block(&mut self, idx: usize, block: usize) -> Result<u64> {
+        if self.cols == 0 {
+            return Err(crate::Error::Coordinator("repush_block before preload_matrix".into()));
+        }
+        let rb = self.variant.row_bytes(self.cols) as usize;
+        let part = self.map.shards[idx].partition();
+        if block >= part.nr_dpus {
+            return Err(crate::Error::Coordinator(format!(
+                "repush_block: block {block} >= {} DPUs in shard {idx}",
+                part.nr_dpus
+            )));
+        }
+        let shard = &self.map.shards[idx];
+        let r0 = (shard.row_start + part.start_of(block)) as usize;
+        let nr = part.rows_of(block) as usize;
+        let bytes = &self.mbytes[r0 * rb..(r0 + nr) * rb];
+        let mut plan = XferPlan::to_pim(&shard.set, GEMV_M);
+        plan.prepare(block, bytes)?;
+        match self.sys.push_xfer_verified(&shard.set, &plan) {
+            Ok(_) => Ok((nr * rb) as u64),
+            Err(crate::Error::DataCorruption { site, block: b, .. }) => {
+                Err(crate::Error::DataCorruption { site, shard: idx, block: b })
+            }
+            Err(e) => Err(e),
+        }
     }
 }
 

@@ -37,7 +37,7 @@ pub mod shard;
 pub mod tree;
 pub mod workers;
 
-pub use coordinator::{ScatterReport, ShardedGemvCoordinator};
+pub use coordinator::{ScatterReport, ScrubReport, ShardedGemvCoordinator};
 pub use policy::{
     equal_channel_distribution, ChannelInterleaved, Linear, NumaBalanced, Placement,
     PlacementPolicy,

@@ -19,8 +19,12 @@
 //! * [`sim`] — [`OpenLoopSim`]: the event loop that replays a plan
 //!   against replica groups through a [`Router`](crate::coordinator::Router)
 //!   (round-robin / least-outstanding / SLO-aware), composes with
-//!   chaos replica losses, and returns a [`TrafficReport`] whose
-//!   `PartialEq` is the replay-exactness keystone.
+//!   chaos replica losses, schedules periodic integrity scrubs on the
+//!   modeled clock ([`OpenLoopSim::set_scrub_every`] — scrub cost
+//!   lands in the tail percentiles, the summed
+//!   [`crate::chaos::IntegrityMetrics`] in the report), and returns a
+//!   [`TrafficReport`] whose `PartialEq` is the replay-exactness
+//!   keystone.
 //!
 //! The thread-based serving path ([`crate::coordinator::server`])
 //! keeps its wall-clock batcher — real threads need real timeouts; the

@@ -39,6 +39,16 @@ pub trait TrafficBackend {
     /// latency in seconds (including any recovery/backoff the backend
     /// performed internally).
     fn serve_batch(&mut self, xs: &[&[i8]]) -> Result<(Vec<Vec<i32>>, f64)>;
+    /// Run one integrity scrub cycle (detect, repair, confirm) and
+    /// return its modeled seconds. Backends without an integrity plane
+    /// are a free no-op.
+    fn scrub(&mut self) -> Result<f64> {
+        Ok(0.0)
+    }
+    /// The backend's integrity ledger (empty without one).
+    fn integrity(&self) -> crate::chaos::IntegrityMetrics {
+        crate::chaos::IntegrityMetrics::default()
+    }
 }
 
 impl TrafficBackend for ShardedGemvCoordinator {
@@ -58,6 +68,13 @@ impl TrafficBackend for ShardedGemvCoordinator {
         let dt = self.sys.sync_all() - t0;
         Ok((ys, dt))
     }
+
+    fn scrub(&mut self) -> Result<f64> {
+        // Strict: a bare sharded coordinator detects but cannot repair,
+        // so a mismatch surfaces as `DataCorruption` and the serving
+        // loop evicts the replica.
+        ShardedGemvCoordinator::scrub(self)
+    }
 }
 
 impl TrafficBackend for crate::chaos::SelfHealingCoordinator {
@@ -76,6 +93,14 @@ impl TrafficBackend for crate::chaos::SelfHealingCoordinator {
         let (ys, _t) = self.gemv_recovered(xs)?;
         let dt = self.inner.sys.sync_all() - t0;
         Ok((ys, dt))
+    }
+
+    fn scrub(&mut self) -> Result<f64> {
+        self.scrub_and_repair()
+    }
+
+    fn integrity(&self) -> crate::chaos::IntegrityMetrics {
+        crate::chaos::SelfHealingCoordinator::integrity(self)
     }
 }
 
@@ -191,6 +216,10 @@ pub struct TrafficReport {
     /// High-water queue depth across every replica (bounded-queue
     /// invariant: never exceeds the admission cap).
     pub max_queue_depth: usize,
+    /// Pool-wide integrity ledger: every replica backend's
+    /// [`crate::chaos::IntegrityMetrics`] summed at end of run (all
+    /// zeros when no backend has an integrity plane).
+    pub integrity: crate::chaos::IntegrityMetrics,
 }
 
 impl TrafficReport {
@@ -237,6 +266,9 @@ impl TrafficReport {
 pub struct OpenLoopSim<B> {
     cfg: SimConfig,
     groups: Vec<Group<B>>,
+    /// Periodic integrity-scrub cadence on the modeled clock
+    /// ([`Self::set_scrub_every`]; `None` = scrubbing disabled).
+    scrub_every_s: Option<f64>,
 }
 
 impl<B: TrafficBackend> OpenLoopSim<B> {
@@ -263,7 +295,16 @@ impl<B: TrafficBackend> OpenLoopSim<B> {
                 }
             })
             .collect();
-        OpenLoopSim { cfg, groups }
+        OpenLoopSim { cfg, groups, scrub_every_s: None }
+    }
+
+    /// Schedule a fleet-wide integrity scrub every `every_s` modeled
+    /// seconds: each live replica runs one scrub cycle between batches
+    /// (after its current batch drains), so scrub cost lands in the
+    /// latency percentiles and goodput exactly like serving work.
+    pub fn set_scrub_every(&mut self, every_s: f64) {
+        assert!(every_s > 0.0, "scrub cadence must be positive");
+        self.scrub_every_s = Some(every_s);
     }
 
     pub fn backend(&self, group: usize, replica: usize) -> &B {
@@ -296,9 +337,27 @@ impl<B: TrafficBackend> OpenLoopSim<B> {
         let mut next_loss = 0usize;
         let mut now = 0.0f64;
         let mut i = 0usize;
+        let mut next_scrub = self.scrub_every_s;
         loop {
             let next_arrival = reqs.get(i).map(|r| r.arrival_s);
             let next_launch = self.next_launch();
+            // Periodic scrub: fires when due before the next arrival or
+            // batch close. Once the plan is drained and every queue is
+            // empty there is nothing left to protect — the run ends
+            // rather than scrubbing forever.
+            if let (Some(every), Some(ns)) = (self.scrub_every_s, next_scrub) {
+                let earliest = [next_arrival, next_launch.map(|(l, _, _)| l)]
+                    .into_iter()
+                    .flatten()
+                    .fold(f64::INFINITY, f64::min);
+                if earliest.is_finite() && ns <= earliest {
+                    now = now.max(ns);
+                    self.settle(now);
+                    self.run_scrubs(now, &mut rep);
+                    next_scrub = Some(ns + every);
+                    continue;
+                }
+            }
             let take_arrival = match (next_arrival, next_launch) {
                 (None, None) => break,
                 (Some(_), None) => true,
@@ -333,7 +392,32 @@ impl<B: TrafficBackend> OpenLoopSim<B> {
             .fold(now, f64::max);
         self.settle(end);
         rep.end_s = end;
+        for g in &self.groups {
+            for r in &g.replicas {
+                rep.integrity.absorb(&r.backend.integrity());
+            }
+        }
         rep
+    }
+
+    /// Run one scrub cycle on every live replica, charging the cycle's
+    /// modeled seconds to the replica's timeline (a replica mid-batch
+    /// scrubs when its batch drains). A backend whose scrub fails
+    /// unrecoverably — e.g. a bare coordinator detecting corruption it
+    /// cannot repair — is evicted exactly like a failed batch.
+    fn run_scrubs(&mut self, now: f64, rep: &mut TrafficReport) {
+        for gi in 0..self.groups.len() {
+            for ri in 0..self.groups[gi].replicas.len() {
+                if self.groups[gi].router.is_evicted(ri) {
+                    continue;
+                }
+                let start = self.groups[gi].replicas[ri].free_at.max(now);
+                match self.groups[gi].replicas[ri].backend.scrub() {
+                    Ok(dt) => self.groups[gi].replicas[ri].free_at = start + dt,
+                    Err(_) => self.evict_and_requeue(gi, ri, now, rep),
+                }
+            }
+        }
     }
 
     /// Earliest batch close over all admitted, non-empty replica
@@ -645,6 +729,26 @@ mod tests {
         let b = run();
         assert_eq!(a, b, "identical (plan, losses, pool) must replay exactly");
         assert!(!a.served.is_empty());
+    }
+
+    #[test]
+    fn scrub_cadence_replays_and_defaults_to_noop() {
+        let p = plan(300.0, 100, Some(0.5), 37);
+        let base = {
+            let mut sim = OpenLoopSim::new(cfg(AdmissionPolicy::RejectNew, 16), pool(2));
+            sim.run(&p, &[])
+        };
+        let run = || {
+            let mut sim = OpenLoopSim::new(cfg(AdmissionPolicy::RejectNew, 16), pool(2));
+            sim.set_scrub_every(0.05);
+            sim.run(&p, &[])
+        };
+        let a = run();
+        assert_eq!(a, run(), "scrub cadence must replay exactly");
+        // FixedLatency has no integrity plane: its scrubs are free
+        // no-ops and the report matches the scrub-less run entirely.
+        assert_eq!(a, base);
+        assert_eq!(a.integrity, Default::default());
     }
 
     #[test]

@@ -107,6 +107,15 @@ pub enum Error {
     /// microseconds. Permanent: retrying the identical (already-late)
     /// request cannot help — the caller must issue a new one.
     DeadlineExceeded { deadline_us: u64, now_us: u64 },
+    /// A resident data block failed its checksum: the scrub kernel (or
+    /// verify-after-push readback) recomputed a block checksum that
+    /// disagrees with the golden table. `shard`/`block` name the
+    /// corrupted block (block = DPU index within the shard's row
+    /// partition). Permanent for *retry* purposes — re-running the same
+    /// launch over rotted data cannot help — but repairable: the
+    /// integrity layer re-pushes exactly this block from the retained
+    /// encoded matrix and re-scrubs.
+    DataCorruption { site: FaultSite, shard: usize, block: usize },
 }
 
 impl Error {
@@ -143,7 +152,9 @@ impl Error {
             Error::Fault { dpu, .. } | Error::HostAccess { dpu, .. } => {
                 FaultSite { dpu: Some(*dpu), rank: None, socket: None }
             }
-            Error::LaunchFailed { site, .. } | Error::TransferFailed { site, .. } => *site,
+            Error::LaunchFailed { site, .. }
+            | Error::TransferFailed { site, .. }
+            | Error::DataCorruption { site, .. } => *site,
             _ => FaultSite::default(),
         }
     }
@@ -230,6 +241,11 @@ impl fmt::Display for Error {
             Error::DeadlineExceeded { deadline_us, now_us } => write!(
                 f,
                 "deadline exceeded: due at {deadline_us} us, shed at {now_us} us (modeled)"
+            ),
+            Error::DataCorruption { site, shard, block } => write!(
+                f,
+                "data corruption detected ({site}): shard {shard} block {block} failed its \
+                 checksum"
             ),
         }
     }
@@ -332,6 +348,21 @@ mod tests {
         assert_eq!(
             late.to_string(),
             "deadline exceeded: due at 2000 us, shed at 2600 us (modeled)"
+        );
+    }
+
+    #[test]
+    fn taxonomy_data_corruption_is_permanent_with_site() {
+        // Retrying the same launch over rotted data cannot help — the
+        // integrity layer must repair (delta re-push) instead.
+        let e = Error::DataCorruption { site: site(42, 0, 1), shard: 1, block: 10 };
+        assert_eq!(e.class(), ErrorClass::Permanent);
+        assert!(!e.is_transient());
+        assert_eq!(e.site(), site(42, 0, 1));
+        assert_eq!(
+            e.to_string(),
+            "data corruption detected (dpu 42, rank 0, socket 1): shard 1 block 10 failed its \
+             checksum"
         );
     }
 

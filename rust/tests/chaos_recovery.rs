@@ -91,7 +91,15 @@ fn chaos_run(seed: u64, tier: ExecTier, m: &[i8], xs: &[Vec<i8>]) -> ChaosRun {
     let ys = serve(&mut sh, xs);
     let metrics = sh.metrics().clone();
     let mut c = sh.into_inner();
-    let stats = c.sys.take_chaos().unwrap().stats().clone();
+    let inj = c.sys.take_chaos().unwrap();
+    // Accounting contract: every planned one-shot event actually fired
+    // during the run — injected == fired, nothing silently dropped.
+    assert!(
+        inj.unfired().is_empty(),
+        "seed {seed}: planned events never applied: {:?}",
+        inj.unfired()
+    );
+    let stats = inj.stats().clone();
     let modeled_end = c.sys.modeled_now();
     ChaosRun { ys, stats, metrics, modeled_end }
 }
@@ -106,6 +114,11 @@ fn keystone_seeded_faults_serve_bit_identical_results() {
         // Every planned death activated (all land at op ≤ 8, the run
         // spans ≥ 12 ops) and was quarantined through the rebalance.
         assert_eq!(a.stats.dpu_deaths, 2, "seed {seed}");
+        assert_eq!(
+            a.stats.corruptions_applied(),
+            0,
+            "seed {seed}: the default config plans zero corruption"
+        );
         assert_eq!(a.metrics.quarantined.len(), 2, "seed {seed}");
         assert_eq!(a.metrics.rebalances, 2, "seed {seed}");
         assert!(a.metrics.retries >= 2, "seed {seed}: each death costs ≥1 retry");

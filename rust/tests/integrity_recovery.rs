@@ -1,0 +1,460 @@
+//! Data-integrity plane contracts (ISSUE 9 acceptance pins):
+//!
+//! 1. **Keystone**: every corruption a seeded plan lands in a
+//!    matrix-resident block is detected — by an in-PIM scrub diff
+//!    against the host golden table or by a verify-after-push readback
+//!    — repaired delta-only (exactly the corrupted block re-pushed),
+//!    and the served `y` is **bit-identical** to a corruption-free
+//!    run. Double runs replay the ys, [`ChaosStats`],
+//!    [`IntegrityMetrics`] and the modeled end time *exactly*, on
+//!    every [`ExecTier`].
+//! 2. An **undetectable-by-construction** plan (WRAM flips in the
+//!    window no kernel ever reads) is exercised explicitly: the run
+//!    must *report* `undetected() == injected`, never silently pass
+//!    it off as clean.
+//! 3. Serving integration: [`OpenLoopSim`] schedules scrubs on the
+//!    modeled clock, their cost and ledger land in the
+//!    [`TrafficReport`], and a strict-scrubbing plain replica is
+//!    evicted on its first detection.
+
+use upmem_unleashed::chaos::{
+    ChaosConfig, ChaosInjector, ChaosPlan, ChaosStats, FaultEvent, IntegrityMetrics,
+    RecoveryMetrics, SelfHealingCoordinator,
+};
+use upmem_unleashed::coordinator::router::Policy;
+use upmem_unleashed::dpu::ExecTier;
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::kernels::gemv::{gemv_ref, GemvShape, GemvVariant, GEMV_M};
+use upmem_unleashed::plane::{NumaBalanced, PlacementPolicy, ShardMap, ShardedGemvCoordinator};
+use upmem_unleashed::traffic::{
+    AdmissionConfig, AdmissionPolicy, ArrivalProcess, DeadlineBatcher, OpenLoopSim, SimConfig,
+    TrafficConfig, TrafficPlan, WorkloadMix,
+};
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::rng::Rng;
+use upmem_unleashed::{Error, ErrorClass};
+
+const ROWS: u32 = 128;
+const COLS: u32 = 512;
+/// One row per DPU at this shape (128 rows over 2×64 DPUs), so every
+/// per-DPU block is exactly one row: `row_bytes(COLS)` bytes.
+const BLOCK_BYTES: u64 = 512;
+const BATCH: usize = 4;
+
+fn sharded(tier: ExecTier) -> ShardedGemvCoordinator {
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    sys.set_exec_tier(tier);
+    let sets = sys.alloc_shards(&NumaBalanced, 2, 1).unwrap();
+    let map = ShardMap::new(sets, NumaBalanced.name()).unwrap();
+    ShardedGemvCoordinator::new(sys, map, GemvVariant::I8Opt, 8)
+}
+
+fn test_data() -> (Vec<i8>, Vec<Vec<i8>>) {
+    let mut rng = Rng::new(7);
+    let m = rng.i8_vec((ROWS * COLS) as usize);
+    let xs = (0..3).map(|_| rng.i8_vec(COLS as usize)).collect();
+    (m, xs)
+}
+
+/// The serving pattern every run in this file uses — two pipelined
+/// batches with an integrity cycle between them, so scrub cost is
+/// interleaved with real traffic and modeled clocks line up exactly
+/// across runs.
+fn serve(sh: &mut SelfHealingCoordinator, xs: &[Vec<i8>]) -> Vec<Vec<i32>> {
+    let (mut ys, _) = sh.gemv_recovered(&[&xs[0], &xs[1]]).unwrap();
+    sh.scrub_and_repair().unwrap();
+    let (tail, _) = sh.gemv_recovered(&[&xs[2]]).unwrap();
+    ys.extend(tail);
+    ys
+}
+
+fn reference_ys(xs: &[Vec<i8>], m: &[i8]) -> Vec<Vec<i32>> {
+    let shape = GemvShape { rows: ROWS, cols: COLS };
+    xs.iter().map(|x| gemv_ref(shape, m, x)).collect()
+}
+
+/// Everything a seeded integrity run produces; `PartialEq` fields
+/// compare exactly (the f64s are products of identical deterministic
+/// arithmetic when runs really replay).
+struct IntegrityRun {
+    ys: Vec<Vec<i32>>,
+    stats: ChaosStats,
+    metrics: RecoveryMetrics,
+    integrity: IntegrityMetrics,
+    modeled_end: f64,
+}
+
+/// One self-healing run under the corruption plan generated from
+/// `seed`: scrub-and-repair cycles drive every planned event through a
+/// detection boundary *before* serving, so corruption never reaches a
+/// served `y` — which is exactly the operational contract (scrub
+/// cadence ahead of traffic).
+fn integrity_run(seed: u64, tier: ExecTier, m: &[i8], xs: &[Vec<i8>]) -> IntegrityRun {
+    let mut c = sharded(tier);
+    c.preload_matrix(ROWS, COLS, m).unwrap();
+    let victims: Vec<usize> =
+        (0..2).flat_map(|s| c.map().shards[s].set.dpus[32..40].to_vec()).collect();
+    let cfg = ChaosConfig {
+        ops: 6,
+        dpu_deaths: 0,
+        transient_launches: 1,
+        transient_transfers: 1,
+        stragglers: 0,
+        mram_bit_flips: 2,
+        transfer_corruptions: 1,
+        // Clamp the corruption window to one resident block so every
+        // draw lands in data a scrub actually covers (the default 1 KB
+        // window overhangs this shape's 512 B blocks).
+        corrupt_mram_len: BLOCK_BYTES as u32,
+        ..ChaosConfig::default()
+    };
+    let plan = ChaosPlan::generate(seed, &cfg, &victims);
+    assert_eq!(plan.corruptions().len(), 3, "seed {seed}: 2 MRAM flips + 1 transfer corruption");
+    c.sys.install_chaos(ChaosInjector::new(plan));
+    let mut sh = SelfHealingCoordinator::new(c);
+
+    // Integrity cycles until the whole plan has fired (scrub launches
+    // and repair pushes tick the op counter, so this terminates), then
+    // one confirming cycle: an event that fired during the *last* pass
+    // of the loop, against a block already diffed that pass, is caught
+    // here. After this, nothing is pending and the fleet is clean.
+    while !sh.inner.sys.chaos().unwrap().unfired().is_empty() {
+        sh.scrub_and_repair().unwrap();
+    }
+    sh.scrub_and_repair().unwrap();
+
+    let ys = serve(&mut sh, xs);
+    let metrics = sh.metrics().clone();
+    let integrity = sh.integrity();
+    let mut c = sh.into_inner();
+    let inj = c.sys.take_chaos().unwrap();
+    assert!(inj.unfired().is_empty(), "seed {seed}: planned events never applied");
+    let stats = inj.stats().clone();
+    let modeled_end = c.sys.modeled_now();
+    IntegrityRun { ys, stats, metrics, integrity, modeled_end }
+}
+
+/// Handpicked plan with strict accounting: two MRAM flips on distinct
+/// victim blocks, both due by the first integrity cycle. Every count
+/// is exact because no draws can collide.
+#[test]
+fn keystone_mram_corruption_is_detected_repaired_delta_only_and_served_exact() {
+    let (m, xs) = test_data();
+    let reference = reference_ys(&xs, &m);
+    let mut c = sharded(ExecTier::Superblock);
+    c.preload_matrix(ROWS, COLS, &m).unwrap();
+    let d0 = c.map().shards[0].set.dpus[5];
+    let d1 = c.map().shards[1].set.dpus[60];
+    c.sys.install_chaos(ChaosInjector::new(ChaosPlan::from_events(vec![
+        FaultEvent::MramBitFlip { at: 1, dpu: d0, addr: GEMV_M + 17, bit: 3 },
+        FaultEvent::MramBitFlip { at: 2, dpu: d1, addr: GEMV_M + 511, bit: 7 },
+    ])));
+    let mut sh = SelfHealingCoordinator::new(c);
+
+    let cycle_s = sh.scrub_and_repair().unwrap();
+    assert!(cycle_s > 0.0, "scrub + repair cost modeled time");
+
+    let im = sh.integrity();
+    assert_eq!(im.injected, 2);
+    assert_eq!(im.detected, 2, "both flips land in scrubbed blocks: both must be caught");
+    assert_eq!(im.undetected(), 0);
+    assert_eq!(im.repaired, 2);
+    assert_eq!(im.repaired_bytes, 2 * BLOCK_BYTES, "delta-only: exactly the two blocks moved");
+    assert!(im.scrub_cycles >= 2, "a confirming re-scrub follows the repairs");
+    assert!(im.scrub_s > 0.0 && im.repair_s > 0.0);
+    assert!(im.mean_time_to_repair_s() > 0.0);
+
+    // Served results are bit-identical to the corruption-free
+    // reference — the repairs restored the exact resident bytes.
+    let ys = serve(&mut sh, &xs);
+    assert_eq!(ys, reference, "corruption must never reach a served y");
+
+    let mut c = sh.into_inner();
+    let inj = c.sys.take_chaos().unwrap();
+    assert!(inj.unfired().is_empty());
+    assert_eq!(inj.stats().mram_flips, 2);
+    assert_eq!(inj.stats().corruptions_applied(), 2);
+}
+
+#[test]
+fn keystone_seeded_corruption_replays_bit_identically() {
+    let (m, xs) = test_data();
+    let reference = reference_ys(&xs, &m);
+    for seed in [11u64, 23, 47] {
+        let a = integrity_run(seed, ExecTier::Superblock, &m, &xs);
+        assert_eq!(a.ys, reference, "seed {seed}: corruption changed served results");
+        assert_eq!(a.stats.corruptions_applied(), 3, "seed {seed}: all three draws applied");
+        assert_eq!(a.integrity.injected, 3, "seed {seed}");
+        // Two draws hitting the same block within one scrub interval
+        // collapse into one mismatch, so `detected` may undershoot
+        // `injected` — but never exceed it, and never reach zero (an
+        // odd event count cannot fully cancel).
+        assert!(
+            (1..=3).contains(&a.integrity.detected),
+            "seed {seed}: detected {} out of 3",
+            a.integrity.detected
+        );
+        assert!(a.integrity.repaired >= 1, "seed {seed}");
+        assert_eq!(
+            a.integrity.repaired_bytes,
+            BLOCK_BYTES * a.integrity.repaired,
+            "seed {seed}: every repair is delta-only (one block)"
+        );
+        assert!(a.integrity.scrub_s > 0.0, "seed {seed}: scrub cost is modeled");
+        assert_eq!(a.metrics.quarantined, vec![], "seed {seed}: corruption never quarantines");
+
+        // Same seed → the whole run replays exactly.
+        let b = integrity_run(seed, ExecTier::Superblock, &m, &xs);
+        assert_eq!(a.ys, b.ys, "seed {seed}");
+        assert_eq!(a.stats, b.stats, "seed {seed}: injector stats must replay exactly");
+        assert_eq!(a.integrity, b.integrity, "seed {seed}: integrity ledger must replay exactly");
+        assert_eq!(a.metrics, b.metrics, "seed {seed}: recovery metrics must replay exactly");
+        assert_eq!(a.modeled_end, b.modeled_end, "seed {seed}: modeled clock must replay exactly");
+    }
+}
+
+#[test]
+fn keystone_holds_across_all_exec_tiers() {
+    let (m, xs) = test_data();
+    let reference = integrity_run(11, ExecTier::Stepped, &m, &xs);
+    assert_eq!(reference.ys, reference_ys(&xs, &m));
+    for tier in [ExecTier::Batched, ExecTier::Superblock] {
+        let run = integrity_run(11, tier, &m, &xs);
+        assert_eq!(run.ys, reference.ys, "{} diverged on results", tier.name());
+        assert_eq!(run.stats, reference.stats, "{} diverged on the fault sequence", tier.name());
+        assert_eq!(
+            run.integrity,
+            reference.integrity,
+            "{} diverged on the integrity ledger",
+            tier.name()
+        );
+        assert_eq!(
+            run.modeled_end,
+            reference.modeled_end,
+            "{} diverged on the modeled clock",
+            tier.name()
+        );
+    }
+}
+
+/// WRAM flips in the default window land in scratchpad bytes no kernel
+/// ever reads: *undetectable by construction*. The contract is honest
+/// accounting — the ledger must report them as injected-but-undetected,
+/// and the run must not pretend the fleet was verified clean.
+#[test]
+fn undetectable_wram_corruption_is_reported_not_silently_passed() {
+    let (m, xs) = test_data();
+    let reference = reference_ys(&xs, &m);
+    let run = |tier: ExecTier| {
+        let mut c = sharded(tier);
+        c.preload_matrix(ROWS, COLS, &m).unwrap();
+        let victims: Vec<usize> =
+            (0..2).flat_map(|s| c.map().shards[s].set.dpus[32..40].to_vec()).collect();
+        let cfg = ChaosConfig {
+            ops: 4,
+            dpu_deaths: 0,
+            transient_launches: 0,
+            transient_transfers: 0,
+            stragglers: 0,
+            wram_bit_flips: 2,
+            ..ChaosConfig::default()
+        };
+        let plan = ChaosPlan::generate(11, &cfg, &victims);
+        assert_eq!(plan.corruptions().len(), 2);
+        for ev in plan.corruptions() {
+            match ev {
+                FaultEvent::WramBitFlip { addr, .. } => {
+                    assert!((0xE000..0x1_0000).contains(&addr), "default window: dead WRAM")
+                }
+                other => panic!("expected only WRAM flips, got {other:?}"),
+            }
+        }
+        c.sys.install_chaos(ChaosInjector::new(plan));
+        let mut sh = SelfHealingCoordinator::new(c);
+        let ys = serve(&mut sh, &xs);
+        // Tick boundaries until both flips have fired, then account.
+        while !sh.inner.sys.chaos().unwrap().unfired().is_empty() {
+            sh.scrub_and_repair().unwrap();
+        }
+        (ys, sh.integrity(), sh.inner.sys.modeled_now())
+    };
+
+    let (ys, im, end) = run(ExecTier::Superblock);
+    assert_eq!(ys, reference, "dead-WRAM flips cannot perturb results");
+    assert_eq!(im.injected, 2, "both flips applied");
+    assert_eq!(im.detected, 0, "no scrub or readback covers dead WRAM");
+    assert_eq!(im.undetected(), 2, "the ledger must confess what it cannot see");
+    assert_eq!(im.repaired, 0);
+    assert!(im.scrub_cycles >= 1, "scrubs ran and (correctly) found nothing");
+    let (ys2, im2, end2) = run(ExecTier::Superblock);
+    assert_eq!((ys, im, end), (ys2, im2, end2), "the undetectable run replays exactly too");
+}
+
+/// Host-level detection layer in isolation: a transfer corruption
+/// fired into a verified push is caught by the readback *of that same
+/// push*, typed with full shard/block/site context, and the next
+/// (clean) repush + strict scrub confirm the repair.
+#[test]
+fn verify_after_push_catches_in_flight_corruption() {
+    let (m, _) = test_data();
+    let mut c = sharded(ExecTier::Superblock);
+    c.preload_matrix(ROWS, COLS, &m).unwrap();
+    let victim = c.map().shards[0].set.dpus[5];
+    c.sys.install_chaos(ChaosInjector::new(ChaosPlan::from_events(vec![
+        FaultEvent::TransferCorruption { at: 1, dpu: victim, addr: GEMV_M + 100, bit: 2 },
+    ])));
+
+    let err = c.repush_block(0, 5).unwrap_err();
+    match &err {
+        Error::DataCorruption { site, shard, block } => {
+            assert_eq!(*shard, 0);
+            assert_eq!(*block, 5);
+            assert_eq!(site.dpu, Some(victim));
+            assert!(site.rank.is_some() && site.socket.is_some());
+        }
+        other => panic!("expected a typed DataCorruption, got {other:?}"),
+    }
+    assert_eq!(err.class(), ErrorClass::Permanent);
+    assert!(err.to_string().contains("data corruption detected"));
+
+    // The corrupted bytes are resident: a strict scrub agrees with the
+    // readback and points at the same block.
+    let scrub_err = c.scrub().unwrap_err();
+    assert!(matches!(scrub_err, Error::DataCorruption { shard: 0, block: 5, .. }));
+
+    // The plan is spent — the clean repush lands and verifies, and the
+    // fleet scrubs clean.
+    assert_eq!(c.repush_block(0, 5).unwrap(), BLOCK_BYTES);
+    assert!(c.scrub().unwrap() > 0.0, "a clean scrub still costs modeled time");
+}
+
+fn matrix() -> Vec<i8> {
+    Rng::new(7).i8_vec((ROWS * COLS) as usize)
+}
+
+/// Modeled seconds one pipelined batch costs — tier-invariant, the
+/// unit arrival rates and scrub cadences below are expressed in.
+fn batch_seconds(m: &[i8]) -> f64 {
+    let mut c = sharded(ExecTier::Stepped);
+    c.preload_matrix(ROWS, COLS, m).unwrap();
+    let xs: Vec<Vec<i8>> = (0..BATCH).map(|i| vec![i as i8 + 1; COLS as usize]).collect();
+    let views: Vec<&[i8]> = xs.iter().map(|v| v.as_slice()).collect();
+    let t0 = c.sys.sync_all();
+    c.gemv_pipelined(&views).unwrap();
+    c.sys.sync_all() - t0
+}
+
+fn poisson_plan(seed: u64, rate_rps: f64, requests: usize, deadline_s: f64) -> TrafficPlan {
+    TrafficPlan::generate(
+        seed,
+        &TrafficConfig {
+            process: ArrivalProcess::Poisson { rate_rps },
+            requests,
+            deadline_s: Some(deadline_s),
+            mix: WorkloadMix::single(ROWS, COLS, GemvVariant::I8Opt),
+        },
+    )
+}
+
+fn sim_cfg(dt: f64) -> SimConfig {
+    SimConfig {
+        batcher: DeadlineBatcher::new(BATCH, 0.5 * dt),
+        admission: AdmissionConfig { policy: AdmissionPolicy::RejectNew, queue_cap: 16 },
+        policy: Policy::LeastOutstanding,
+    }
+}
+
+/// Serving integration: the open-loop sim schedules scrub cycles on
+/// the modeled clock between batches; their cost and the summed
+/// integrity ledger land in the report, and the whole thing replays.
+#[test]
+fn open_loop_scrub_cadence_accounts_integrity_and_replays() {
+    let m = matrix();
+    let dt = batch_seconds(&m);
+    let sat = BATCH as f64 / dt;
+    let plan = poisson_plan(211, 0.8 * sat, 12, 50.0 * dt);
+
+    let run = || {
+        let replicas: Vec<SelfHealingCoordinator> = (0..2u64)
+            .map(|r| {
+                let mut c = sharded(ExecTier::Superblock);
+                c.preload_matrix(ROWS, COLS, &m).unwrap();
+                let victims: Vec<usize> = (0..2)
+                    .flat_map(|s| c.map().shards[s].set.dpus[32..40].to_vec())
+                    .collect();
+                let cfg = ChaosConfig {
+                    ops: 4,
+                    dpu_deaths: 0,
+                    transient_launches: 0,
+                    transient_transfers: 0,
+                    stragglers: 0,
+                    mram_bit_flips: 1,
+                    corrupt_mram_len: BLOCK_BYTES as u32,
+                    ..ChaosConfig::default()
+                };
+                c.sys.install_chaos(ChaosInjector::new(ChaosPlan::generate(31 + r, &cfg, &victims)));
+                SelfHealingCoordinator::new(c)
+            })
+            .collect();
+        let mut sim = OpenLoopSim::new(sim_cfg(dt), vec![replicas]);
+        sim.set_scrub_every(0.5 * dt);
+        sim.run(&plan, &[])
+    };
+
+    let rep = run();
+    assert_eq!(rep.served.len(), 12, "below saturation everything serves");
+    assert!(rep.rejections.is_empty() && rep.failed.is_empty());
+    // Each replica's one flip fired (scrub launches tick the op
+    // counter even on unrouted replicas) and was caught and repaired.
+    assert_eq!(rep.integrity.injected, 2);
+    assert_eq!(rep.integrity.detected, 2);
+    assert_eq!(rep.integrity.undetected(), 0);
+    assert_eq!(rep.integrity.repaired_bytes, BLOCK_BYTES * rep.integrity.repaired);
+    assert!(rep.integrity.scrub_cycles >= 2, "the cadence scrubbed both replicas repeatedly");
+    assert!(rep.integrity.scrub_s > 0.0, "scrub cost is charged to the modeled timeline");
+
+    let rep2 = run();
+    assert_eq!(rep, rep2, "the scrubbed serving run must replay the whole report exactly");
+}
+
+/// A plain (non-healing) replica scrubs *strictly*: its first detected
+/// mismatch surfaces as `DataCorruption`, and the sim treats that like
+/// any replica failure — evict, requeue, keep serving on the survivor.
+#[test]
+fn strict_scrub_evicts_plain_replica_on_detection() {
+    let m = matrix();
+    let dt = batch_seconds(&m);
+    let sat = BATCH as f64 / dt;
+    let plan = poisson_plan(223, 0.8 * sat, 12, 50.0 * dt);
+
+    let replicas: Vec<ShardedGemvCoordinator> = (0..2)
+        .map(|r| {
+            let mut c = sharded(ExecTier::Superblock);
+            c.preload_matrix(ROWS, COLS, &m).unwrap();
+            if r == 0 {
+                let victims: Vec<usize> = (0..2)
+                    .flat_map(|s| c.map().shards[s].set.dpus[32..40].to_vec())
+                    .collect();
+                let cfg = ChaosConfig {
+                    ops: 2,
+                    dpu_deaths: 0,
+                    transient_launches: 0,
+                    transient_transfers: 0,
+                    stragglers: 0,
+                    mram_bit_flips: 2,
+                    corrupt_mram_len: BLOCK_BYTES as u32,
+                    ..ChaosConfig::default()
+                };
+                c.sys.install_chaos(ChaosInjector::new(ChaosPlan::generate(41, &cfg, &victims)));
+            }
+            c
+        })
+        .collect();
+    let mut sim = OpenLoopSim::new(sim_cfg(dt), vec![replicas]);
+    sim.set_scrub_every(0.25 * dt);
+    let rep = sim.run(&plan, &[]);
+
+    assert_eq!(sim.router(0).admitted(), 1, "the corrupted replica is evicted on detection");
+    assert_eq!(rep.served.len(), 12, "the survivor absorbs the requeued work");
+    assert!(rep.rejections.is_empty());
+}

@@ -1,0 +1,91 @@
+//! Property contract for the in-PIM scrub kernel
+//! (`rust/src/kernels/scrub.rs`): the checksum a simulated DPU
+//! publishes equals the host-side golden checksum — over random block
+//! shapes (zero-length, singleton, non-power-of-two, chunk-boundary
+//! ±1), every interpreter execution tier, the pass extremes *and*
+//! random optimizer pass subsets — and every injected single-bit flip
+//! changes it.
+//!
+//! Fleet-level scrubbing (golden table, coordinator diff, repair) is
+//! pinned by `integrity_recovery.rs`; this file isolates the kernel.
+
+use upmem_unleashed::dpu::ExecTier;
+use upmem_unleashed::kernels::scrub::{golden_block_checksum, run_scrub_dpu};
+use upmem_unleashed::kernels::KernelScratch;
+use upmem_unleashed::opt::{PassConfig, ALL_PASSES};
+use upmem_unleashed::util::rng::Rng;
+
+/// Block sizes in bytes. The scrub chunk is 256 i32 words = 1024 B, so
+/// the sweep crosses the chunk boundary, the word boundary and the
+/// 512 B block size the integrity keystone serves at.
+const SHAPES: [usize; 12] = [0, 1, 3, 4, 511, 512, 1020, 1023, 1024, 1025, 2048, 4096];
+const TASKLETS: [usize; 3] = [1, 5, 16];
+
+fn subset(mask: u8) -> PassConfig {
+    let mut cfg = PassConfig::none();
+    for (bit, pass) in ALL_PASSES.into_iter().enumerate() {
+        if mask & (1u8 << bit) != 0 {
+            cfg = cfg.set(pass, true);
+        }
+    }
+    cfg
+}
+
+#[test]
+fn scrub_matches_host_golden_across_shapes_tiers_and_pass_subsets() {
+    let mut rng = Rng::new(0x91);
+    let tiers = [ExecTier::Stepped, ExecTier::Batched, ExecTier::Superblock];
+    let mut scrs: Vec<KernelScratch> = tiers
+        .iter()
+        .map(|&tier| {
+            let mut scr = KernelScratch::default();
+            scr.dpu.set_exec_tier(tier);
+            scr
+        })
+        .collect();
+    for n in SHAPES {
+        let data = rng.u8_vec(n);
+        let want = golden_block_checksum(&data);
+        for t in TASKLETS {
+            // The extremes plus a seeded random pass subset: the scrub
+            // checksum is an architectural value, so no optimizer
+            // configuration may perturb it.
+            let random_cfg = subset(rng.next_u64() as u8);
+            for cfg in [PassConfig::none(), PassConfig::all(), random_cfg] {
+                for (scr, tier) in scrs.iter_mut().zip(tiers) {
+                    let got = run_scrub_dpu(scr, &cfg, t, &data)
+                        .unwrap_or_else(|e| panic!("scrub n={n} t={t} {}: {e}", tier.name()));
+                    assert_eq!(got, want, "n={n} t={t} tier {}", tier.name());
+                }
+            }
+        }
+    }
+}
+
+/// The detection guarantee, exercised end-to-end on the DPU: flip one
+/// random bit of a random block and the published checksum must move
+/// (a wrapping word sum changes by ±2^k mod 2^32, never zero) — and
+/// must equal the host golden of the rotten block, so the coordinator
+/// diff localizes it.
+#[test]
+fn scrub_detects_every_injected_single_bit_flip() {
+    let mut rng = Rng::new(0x92);
+    let mut scr = KernelScratch::default();
+    for round in 0..32 {
+        let n = 1 + rng.below(2048) as usize;
+        let data = rng.u8_vec(n);
+        let clean = golden_block_checksum(&data);
+        assert_eq!(
+            run_scrub_dpu(&mut scr, &PassConfig::all(), 8, &data).unwrap(),
+            clean,
+            "round {round}: clean block n={n}"
+        );
+        let mut rotten = data.clone();
+        let byte = rng.below(n as u64) as usize;
+        let bit = rng.below(8) as u8;
+        rotten[byte] ^= 1 << bit;
+        let got = run_scrub_dpu(&mut scr, &PassConfig::all(), 8, &rotten).unwrap();
+        assert_ne!(got, clean, "round {round}: flip at byte {byte} bit {bit} went unseen");
+        assert_eq!(got, golden_block_checksum(&rotten), "round {round}: host/DPU disagree");
+    }
+}

@@ -27,13 +27,17 @@ Three sources, all optional:
                               schema-v2 serving report: the output of
                               `cargo bench --bench chaos_serving`, of
                               `cargo bench --bench open_loop_serving`
-                              (BENCH_serving_openloop.json), or the two
-                              merged via tools/merge_bench_json.py
+                              (BENCH_serving_openloop.json), of
+                              `cargo bench --bench integrity_serving`
+                              (BENCH_serving_integrity.json), or any of
+                              them merged via tools/merge_bench_json.py
                               (deterministic modeled req/s, goodput /
-                              shed-rate fractions, recovery latencies,
-                              latency percentiles in modeled ms). Same
-                              table filling rules — used for the §Chaos
-                              and §Open-loop serving tables.
+                              shed-rate / detection-rate fractions,
+                              recovery and time-to-repair latencies,
+                              scrub-overhead fractions, latency
+                              percentiles in modeled ms). Same table
+                              filling rules — used for the §Chaos,
+                              §Open-loop serving and §Integrity tables.
 
   --ablation FILE             captured stdout of
                               `cargo bench --bench pass_ablation`, which
@@ -125,6 +129,14 @@ def fill_perf(lines, perf_doc):
             elif "gb/s" in col or "req/s" in col or col == "rate":
                 r = rec.get("rate")
                 cells[j] = f"{r:.2f}" if r is not None else DASH
+                changed = True
+            elif "overhead" in col:
+                # Scrub overhead is a cost fraction (lower is better, the
+                # inverse gating direction of `rate`), so it rides
+                # ungated in the minstr field. Must match before the
+                # generic fraction rule: its column also says "fraction".
+                v = rec.get("minstr_per_s")
+                cells[j] = f"{v:.3f}" if v is not None else DASH
                 changed = True
             elif "goodput" in col or "fraction" in col:
                 r = rec.get("rate")

@@ -230,6 +230,52 @@ class FillExperiments(unittest.TestCase):
             lines[10],
             "| open-loop p95 latency (modeled ms, informational) [seed=11 load=2.0x] | 31.250 |")
 
+    INTEGRITY = doc({
+        "integrity serving modeled req/s [seed=11]":
+            {"minstr_per_s": 0.0, "rate": 301.5},
+        "integrity detection rate (fraction) [seed=11]":
+            {"minstr_per_s": 0.0, "rate": 1.0},
+        "integrity scrub overhead (fraction, informational) [seed=11]":
+            {"minstr_per_s": 0.042},
+        "integrity mean time-to-repair (modeled s, informational) [seed=11]":
+            {"minstr_per_s": 0.0031},
+    })
+
+    def test_fills_integrity_detection_overhead_and_mttr_columns(self):
+        lines = [
+            "| workload | req/s (modeled) |",
+            "|---|---|",
+            "| integrity serving modeled req/s [seed=11] | _pending_ |",
+            "",
+            "| workload | detection rate (fraction) |",
+            "|---|---|",
+            "| integrity detection rate (fraction) [seed=11] | _pending_ |",
+            "",
+            "| workload | scrub overhead (fraction) |",
+            "|---|---|",
+            "| integrity scrub overhead (fraction, informational) [seed=11] | _pending_ |",
+            "",
+            "| workload | time-to-repair (modeled s) |",
+            "|---|---|",
+            "| integrity mean time-to-repair (modeled s, informational) [seed=11] | _pending_ |",
+        ]
+        n = fe.fill_perf(lines, self.INTEGRITY)
+        self.assertEqual(n, 4)
+        self.assertEqual(
+            lines[2], "| integrity serving modeled req/s [seed=11] | 301.50 |")
+        # Detection rate is gated: it fills from `rate`, not minstr.
+        self.assertEqual(
+            lines[6], "| integrity detection rate (fraction) [seed=11] | 1.000 |")
+        # Overhead is a cost fraction riding in minstr — the "overhead"
+        # rule must win over the generic fraction rule (which would read
+        # the absent `rate` and print a dash).
+        self.assertEqual(
+            lines[10],
+            "| integrity scrub overhead (fraction, informational) [seed=11] | 0.042 |")
+        self.assertEqual(
+            lines[14],
+            "| integrity mean time-to-repair (modeled s, informational) [seed=11] | 0.0031 |")
+
     def test_ablation_parser_reads_marked_table_only(self):
         out = "\n".join([
             "noise | not | a | table row before the marker",
