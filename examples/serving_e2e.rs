@@ -1,4 +1,5 @@
-//! End-to-end serving driver (deliverable (b) + EXPERIMENTS.md E10).
+//! End-to-end serving driver (deliverable (b); EXPERIMENTS.md E8
+//! decomposes the GEMV speedup this demo's serving path is built on).
 //!
 //! A quantized 2-layer MLP (w1: 1024×1024 INT8, w2: 64×1024 INT8) is
 //! deployed GEMV-V style: **both weight matrices preloaded into

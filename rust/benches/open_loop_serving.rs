@@ -29,6 +29,7 @@ use upmem_unleashed::dpu::default_exec_tier;
 use upmem_unleashed::host::{AllocPolicy, PimSystem};
 use upmem_unleashed::kernels::gemv::GemvVariant;
 use upmem_unleashed::plane::{NumaBalanced, PlacementPolicy, ShardMap, ShardedGemvCoordinator};
+use upmem_unleashed::telemetry::{chrome_trace_json, trace_sink, MetricsRegistry, TraceRecorder};
 use upmem_unleashed::traffic::{
     AdmissionConfig, AdmissionPolicy, ArrivalProcess, DeadlineBatcher, OpenLoopSim, SimConfig,
     TrafficConfig, TrafficPlan, TrafficReport, WorkloadMix,
@@ -217,7 +218,38 @@ fn main() {
             .collect();
         let p = plan(CHAOS_SEED, 1.5 * sat_pool, requests, Some(8.0 * dt));
         let mut sim = OpenLoopSim::new(sim_cfg(dt), vec![replicas]);
+        // `PIM_TRACE`: record the chaos scenario's serving-level spans
+        // (batch closes, sheds, evictions) on the modeled clock.
+        // Recording never perturbs the run, so the gated rows below are
+        // identical with or without it.
+        let trace_path = trace_sink("BENCH_serving_trace.json");
+        if trace_path.is_some() {
+            sim.install_trace(TraceRecorder::new());
+        }
         let rep = sim.run(&p, &losses);
+        if let Some(path) = &trace_path {
+            let tr = sim.take_trace().expect("recorder installed");
+            match std::fs::write(path, chrome_trace_json(tr.events())) {
+                Ok(()) => println!("wrote {path} ({} trace events)", tr.len()),
+                Err(e) => eprintln!("could not write {path}: {e}"),
+            }
+            // The unified registry rides along: traffic + per-replica
+            // recovery + chaos counters under stable dotted names.
+            let mut reg = MetricsRegistry::new();
+            reg.absorb_traffic(&rep);
+            for r in 0..REPLICAS {
+                let b = sim.backend(0, r);
+                reg.absorb_recovery(b.metrics());
+                if let Some(cj) = b.inner.sys.chaos() {
+                    reg.absorb_chaos(cj.stats());
+                }
+            }
+            let mpath = "BENCH_serving_metrics.json";
+            match std::fs::write(mpath, reg.to_json()) {
+                Ok(()) => println!("wrote {mpath} ({} metrics)", reg.len()),
+                Err(e) => eprintln!("could not write {mpath}: {e}"),
+            }
+        }
         check(
             "chaos mid-burst: admitted traffic still serves",
             if rep.served.is_empty() { 0.0 } else { 1.0 },

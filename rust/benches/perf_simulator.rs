@@ -32,6 +32,9 @@ use upmem_unleashed::opt::PassConfig;
 use upmem_unleashed::plane::{
     Linear, NumaBalanced, PlacementPolicy, ShardMap, ShardedGemvCoordinator,
 };
+use upmem_unleashed::telemetry::{
+    chrome_trace_json, hotspot_markdown, profile_sink, trace_sink, TraceRecorder,
+};
 use upmem_unleashed::transfer::topology::SystemTopology;
 use upmem_unleashed::util::rng::Rng;
 
@@ -125,6 +128,60 @@ fn fleet_gemv(
         }
     });
     (instrs, secs, max_cycles)
+}
+
+/// `PIM_TRACE` artifact: re-run the sharded fleet case with a span
+/// recorder installed and write the Chrome trace-event JSON. The trace
+/// is a pure function of the modeled clock — byte-identical across
+/// runs and execution tiers, which is what CI diffs.
+fn export_trace(path: &str, smoke: bool) {
+    let (rows, cols) = if smoke { (256u32, 1024u32) } else { (1024, 2048) };
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    let sets = sys.alloc_shards(&NumaBalanced, 2, 1).expect("2 shards x 1 rank");
+    let map = ShardMap::new(sets, NumaBalanced.name()).expect("shard map");
+    let mut c = ShardedGemvCoordinator::new(sys, map, GemvVariant::I8Opt, 16);
+    c.sys.install_trace(TraceRecorder::new());
+    let mut rng = Rng::new(4242);
+    let m = rng.i8_vec((rows * cols) as usize);
+    c.preload_matrix(rows, cols, &m).expect("traced preload");
+    let xs: Vec<Vec<i8>> = (0..4).map(|_| rng.i8_vec(cols as usize)).collect();
+    let views: Vec<&[i8]> = xs.iter().map(|v| v.as_slice()).collect();
+    c.gemv_pipelined(&views).expect("traced gemv");
+    let tr = c.sys.take_trace().expect("recorder installed");
+    match std::fs::write(path, chrome_trace_json(tr.events())) {
+        Ok(()) => println!("wrote {path} ({} trace events)", tr.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// `PIM_PROFILE` artifact: run the fleet GEMV once with the per-PC
+/// profiler enabled and write the markdown hotspot table. The profile
+/// observes post-issue clocks, so it is identical across execution
+/// tiers — CI `cmp`s the per-tier outputs byte-for-byte.
+fn export_profile(path: &str, smoke: bool) {
+    use upmem_unleashed::kernels::gemv::emit_gemv;
+    let (rows, cols) = if smoke { (256u32, 1024u32) } else { (1024, 2048) };
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    let set = sys.alloc_ranks(2).expect("2 ranks");
+    let mut c = GemvCoordinator::new(sys, set, GemvVariant::I8Opt, 16);
+    let mut rng = Rng::new(4242);
+    let m = rng.i8_vec((rows * cols) as usize);
+    c.preload_matrix(rows, cols, &m).expect("profiled preload");
+    c.sys.set_profile_enabled(&c.set, true);
+    let fleet = c.sys.launch(&c.set, 16).expect("profiled launch");
+    c.sys.recycle_launch(fleet);
+    let profile = c.sys.collect_profile(&c.set);
+    let program = emit_gemv(GemvVariant::I8Opt).expect("gemv program");
+    let md = hotspot_markdown(
+        "Fleet GEMV INT8 opt, 128 DPUs, 16 tasklets — per-PC issue profile",
+        &profile,
+        &program,
+        12,
+    );
+    match std::fs::write(path, md) {
+        Ok(()) => println!("wrote {path} ({} instrs profiled)", profile.total_instrs()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 fn main() {
@@ -396,6 +453,15 @@ fn main() {
         match std::fs::write("BENCH_perf.json", &json) {
             Ok(()) => println!("wrote BENCH_perf.json ({} entries)", p.entries.len()),
             Err(e) => eprintln!("could not write BENCH_perf.json: {e}"),
+        }
+
+        // Observability artifacts, both off by default and zero-cost
+        // when off (the span/profile hooks are one `None` branch).
+        if let Some(path) = trace_sink("BENCH_trace.json") {
+            export_trace(&path, smoke);
+        }
+        if let Some(path) = profile_sink("BENCH_hotspots.md") {
+            export_profile(&path, smoke);
         }
     });
     footer("perf_simulator", wall);

@@ -10,8 +10,9 @@
 //!   (`tools/check_perf_regression.py`) diffs against the committed
 //!   baseline; see EXPERIMENTS.md §Perf.
 
-/// Escape a string for a JSON string literal body.
-fn escape(s: &str) -> String {
+/// Escape a string for a JSON string literal body (shared with the
+/// telemetry exporters — one escaping rule for every JSON artifact).
+pub fn escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {

@@ -17,6 +17,7 @@
 
 use crate::coordinator::{GemvExecutor, GemvTiming};
 use crate::plane::ShardedGemvCoordinator;
+use crate::telemetry::SpanKind;
 use crate::transfer::topology::DpuId;
 use crate::Result;
 use std::collections::BTreeMap;
@@ -213,8 +214,13 @@ impl SelfHealingCoordinator {
                 Err(e) => {
                     let t0 = self.inner.sys.modeled_now();
                     self.handle_failure(e, &mut attempt)?;
-                    self.metrics.recovery_s += self.inner.sys.modeled_now() - t0;
+                    let now = self.inner.sys.modeled_now();
+                    self.metrics.recovery_s += now - t0;
                     self.metrics.retries += 1;
+                    let retries = self.metrics.retries;
+                    if let Some(tr) = self.inner.sys.trace_mut() {
+                        tr.event(SpanKind::Retry, 0, now, vec![("retries", retries.into())]);
+                    }
                 }
             }
         }
@@ -255,6 +261,16 @@ impl SelfHealingCoordinator {
             let now = self.inner.sys.modeled_now();
             self.inner.sys.advance_clock(now + pause);
             self.metrics.backoff_s += pause;
+            let attempt_no = *attempt;
+            if let Some(tr) = self.inner.sys.trace_mut() {
+                tr.span(
+                    SpanKind::Backoff,
+                    0,
+                    now,
+                    now + pause,
+                    vec![("attempt", attempt_no.into())],
+                );
+            }
             self.metrics
                 .events
                 .push(format!("transient failure, retry {} after {pause:.1e} s: {e}", *attempt + 1));
@@ -314,7 +330,21 @@ impl SelfHealingCoordinator {
                 Ok(bytes) => {
                     self.integrity.repaired += 1;
                     self.integrity.repaired_bytes += bytes;
-                    self.integrity.repair_s += self.inner.sys.modeled_now() - t0;
+                    let now = self.inner.sys.modeled_now();
+                    self.integrity.repair_s += now - t0;
+                    if let Some(tr) = self.inner.sys.trace_mut() {
+                        tr.span(
+                            SpanKind::Repair,
+                            0,
+                            t0,
+                            now,
+                            vec![
+                                ("shard", shard.into()),
+                                ("block", block.into()),
+                                ("bytes", bytes.into()),
+                            ],
+                        );
+                    }
                     self.integrity
                         .events
                         .push(format!("repair: re-pushed shard {shard} block {block} ({bytes} B)"));
@@ -363,6 +393,15 @@ impl SelfHealingCoordinator {
                     self.metrics.rebalances += 1;
                     self.metrics.rebalanced_bytes += bytes;
                 }
+                let now = self.inner.sys.modeled_now();
+                if let Some(tr) = self.inner.sys.trace_mut() {
+                    tr.event(
+                        SpanKind::Quarantine,
+                        0,
+                        now,
+                        vec![("dpu", dpu.into()), ("bytes", bytes.into())],
+                    );
+                }
                 self.metrics
                     .events
                     .push(format!("quarantined dpu {dpu} (shard {shard:?}), re-pushed {bytes} B"));
@@ -382,6 +421,15 @@ impl SelfHealingCoordinator {
                             self.metrics.quarantined.push(dpu);
                             self.metrics.rebalances += 1;
                             self.metrics.rebalanced_bytes += bytes;
+                            let now = self.inner.sys.modeled_now();
+                            if let Some(tr) = self.inner.sys.trace_mut() {
+                                tr.event(
+                                    SpanKind::Quarantine,
+                                    0,
+                                    now,
+                                    vec![("dpu", dpu.into()), ("bytes", bytes.into())],
+                                );
+                            }
                             self.metrics.events.push(format!(
                                 "quarantined dpu {dpu} (shard {idx}), re-pushed {bytes} B after \
                                  {tries} re-scatter retries"

@@ -1,6 +1,6 @@
 //! Serving metrics: counters and a latency recorder.
 
-use crate::util::stats::percentile_nearest_rank;
+use crate::util::stats::sample_summary;
 use std::time::Duration;
 
 /// Records request latencies and aggregates.
@@ -42,22 +42,18 @@ impl LatencyRecorder {
     }
 
     /// Summary in microseconds (`None` on an empty recorder).
+    /// Delegates to the shared [`crate::util::stats::sample_summary`] —
+    /// one nearest-rank implementation for every latency consumer.
     pub fn summary(&self) -> Option<LatencySummary> {
-        if self.samples_us.is_empty() {
-            return None;
-        }
-        let n = self.samples_us.len();
-        let mean = self.samples_us.iter().sum::<f64>() / n as f64;
-        let mut sorted = self.samples_us.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = sample_summary(&self.samples_us)?;
         Some(LatencySummary {
-            n,
-            mean,
-            min: sorted[0],
-            max: sorted[n - 1],
-            p50: percentile_nearest_rank(&sorted, 0.50),
-            p95: percentile_nearest_rank(&sorted, 0.95),
-            p99: percentile_nearest_rank(&sorted, 0.99),
+            n: s.n,
+            mean: s.mean,
+            min: s.min,
+            max: s.max,
+            p50: s.p50,
+            p95: s.p95,
+            p99: s.p99,
         })
     }
 
@@ -187,6 +183,32 @@ mod tests {
         assert_eq!(s.p50, 20_000.0);
         assert_eq!(s.p95, 40_000.0);
         assert_eq!(s.p99, 40_000.0);
+    }
+
+    #[test]
+    fn summary_matches_the_pre_refactor_inline_computation() {
+        // summary() used to compute mean/sort/nearest-rank percentiles
+        // inline; it now delegates to util::stats::sample_summary. Pin
+        // exact equality against the old inline formula on an awkward
+        // sample (duplicates, unsorted, uneven spacing).
+        use crate::util::stats::percentile_nearest_rank;
+        let samples = [0.0093, 0.0017, 0.0031, 0.0031, 0.0120, 0.0005];
+        let mut r = LatencyRecorder::new();
+        for &s in &samples {
+            r.record_seconds(s);
+        }
+        let got = r.summary().unwrap();
+        let us: Vec<f64> = samples.iter().map(|s| s * 1e6).collect();
+        let mut sorted = us.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = us.len();
+        assert_eq!(got.n, n);
+        assert_eq!(got.mean, us.iter().sum::<f64>() / n as f64);
+        assert_eq!(got.min, sorted[0]);
+        assert_eq!(got.max, sorted[n - 1]);
+        assert_eq!(got.p50, percentile_nearest_rank(&sorted, 0.50));
+        assert_eq!(got.p95, percentile_nearest_rank(&sorted, 0.95));
+        assert_eq!(got.p99, percentile_nearest_rank(&sorted, 0.99));
     }
 
     #[test]

@@ -83,6 +83,7 @@ use super::pipeline::{Scheduler, BLOCKED};
 use super::tasklet::Tasklet;
 use super::uop::{Uop, UopProgram};
 use super::{IRAM_BYTES, ISSUE_INTERVAL, NR_TASKLETS_MAX};
+use crate::telemetry::PcProfile;
 use crate::util::error::{Error, FaultKind};
 use crate::Result;
 use std::sync::{Arc, OnceLock};
@@ -225,6 +226,11 @@ pub struct Dpu {
     /// tiers exist for debugging and for the differential tests that
     /// prove all three bit-identical.
     pub exec_tier: ExecTier,
+    /// Opt-in per-PC profiler ([`Dpu::set_profile_enabled`]). `None`
+    /// (the default) costs nothing on the issue paths beyond one
+    /// branch; when enabled, every tier records the identical
+    /// (pc, post-issue clock) stream for successful launches.
+    profile: Option<Box<PcProfile>>,
 }
 
 impl Default for Dpu {
@@ -651,6 +657,7 @@ fn run_superblocks(
     dpu_id: usize,
     dma_buf: &mut Vec<u8>,
     res: &mut LaunchResult,
+    mut profile: Option<&mut PcProfile>,
 ) -> Result<u64> {
     debug_assert!(!ring.is_empty());
     let nr_ring = ring.len() as u64;
@@ -693,6 +700,11 @@ fn run_superblocks(
                 }
                 let pc = tk.pc;
                 res.instrs += 1;
+                if let Some(p) = profile.as_deref_mut() {
+                    // `cycle + 1` is the post-issue clock the stepped
+                    // path's `sched.now` would read at this issue.
+                    p.hit(pc, cycle + 1);
+                }
                 if let Err(kind) =
                     exec_uop(wram, mram, up.uops[pc as usize], tk, cycle + 1, dma_buf, res)
                 {
@@ -730,7 +742,26 @@ impl Dpu {
             poison: None,
             cycle_limit: DEFAULT_CYCLE_LIMIT,
             exec_tier: default_exec_tier(),
+            profile: None,
         }
+    }
+
+    /// Toggle the per-PC profiler. Enabling installs a fresh
+    /// accumulator; disabling drops it (launches go back to paying
+    /// nothing).
+    pub fn set_profile_enabled(&mut self, on: bool) {
+        self.profile = if on { Some(Box::new(PcProfile::new())) } else { None };
+    }
+
+    /// The accumulated profile, if profiling is enabled.
+    pub fn profile(&self) -> Option<&PcProfile> {
+        self.profile.as_deref()
+    }
+
+    /// Drain the accumulated profile, leaving profiling enabled with a
+    /// zeroed accumulator (`None` if profiling is off).
+    pub fn take_profile(&mut self) -> Option<PcProfile> {
+        self.profile.as_mut().map(|p| std::mem::take(p.as_mut()))
     }
 
     /// Select the issue loop for subsequent launches (see [`ExecTier`]).
@@ -857,6 +888,7 @@ impl Dpu {
                             self.id,
                             dma_buf,
                             &mut res,
+                            self.profile.as_deref_mut(),
                         )?;
                     }
                     loop {
@@ -871,6 +903,9 @@ impl Dpu {
                                 return Err(fault(FaultKind::PcOutOfBounds, t, pc, self.id));
                             };
                             res.instrs += 1;
+                            if let Some(p) = self.profile.as_deref_mut() {
+                                p.hit(pc, sched.now);
+                            }
                             let step = exec_one(
                                 &mut self.wram,
                                 &mut self.mram,
@@ -921,6 +956,9 @@ impl Dpu {
                 return Err(fault(FaultKind::PcOutOfBounds, t, pc, self.id));
             };
             res.instrs += 1;
+            if let Some(p) = self.profile.as_deref_mut() {
+                p.hit(pc, sched.now);
+            }
             let step = exec_one(
                 &mut self.wram,
                 &mut self.mram,

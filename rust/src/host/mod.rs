@@ -40,6 +40,7 @@ use crate::chaos::{BitFlip, ChaosInjector};
 use crate::dpu::isa::Program;
 use crate::dpu::symbol::{MemSpace, Symbol, SymbolValue};
 use crate::dpu::{default_exec_tier, Dpu, ExecTier, LaunchResult, LaunchScratch, UopProgram};
+use crate::telemetry::{PcProfile, SpanKind, TraceRecorder};
 use crate::transfer::model::BufferPlacement;
 use crate::transfer::queue::{RankQueues, Resource};
 use crate::transfer::topology::{DpuId, SystemTopology, TOTAL_DPUS, TOTAL_RANKS};
@@ -151,6 +152,12 @@ pub struct PimSystem {
     /// launch/transfer boundary when installed; `None` (the default)
     /// costs one branch per boundary.
     chaos: Option<ChaosInjector>,
+    /// Optional span recorder ([`crate::telemetry`]): launch/transfer
+    /// boundaries record modeled-clock spans when installed. Recording
+    /// only *reads* the queues' modeled times — it never advances the
+    /// clock — so traced and untraced runs model identical time;
+    /// `None` (the default) costs one branch per boundary.
+    trace: Option<TraceRecorder>,
 }
 
 fn host_err(id: DpuId, addr: u32) -> impl Fn(FaultKind) -> crate::Error {
@@ -190,6 +197,7 @@ impl PimSystem {
             scratch: Vec::new(),
             result_pool: Vec::new(),
             chaos: None,
+            trace: None,
         }
     }
 
@@ -209,6 +217,54 @@ impl PimSystem {
     /// The installed injector, if any.
     pub fn chaos(&self) -> Option<&ChaosInjector> {
         self.chaos.as_ref()
+    }
+
+    /// Install a span recorder: from now on every launch/transfer
+    /// boundary records a modeled-clock span (see [`crate::telemetry`]).
+    /// Recording never advances the modeled clock, so traced and
+    /// untraced runs stay bit-identical in every modeled quantity.
+    pub fn install_trace(&mut self, rec: TraceRecorder) {
+        self.trace = Some(rec);
+    }
+
+    /// Remove and return the installed recorder with the full span
+    /// history.
+    pub fn take_trace(&mut self) -> Option<TraceRecorder> {
+        self.trace.take()
+    }
+
+    /// Mutable access to the installed recorder, if any — the hook the
+    /// coordinator/recovery layers use to record their own spans onto
+    /// the same timeline.
+    pub fn trace_mut(&mut self) -> Option<&mut TraceRecorder> {
+        self.trace.as_mut()
+    }
+
+    /// Toggle the per-PC cycle profiler on every DPU of the set
+    /// (materializing lazy ones). Enable before launching; drain with
+    /// [`Self::collect_profile`]. Profiling observes the issue stream
+    /// without perturbing it, so profiled runs model identical cycles.
+    pub fn set_profile_enabled(&mut self, set: &DpuSet, on: bool) {
+        for i in 0..set.dpus.len() {
+            let id = set.dpus[i];
+            self.dpu_mut(id).set_profile_enabled(on);
+        }
+    }
+
+    /// Drain and merge every set DPU's profile accumulator, in set
+    /// order. Fleet workers only ever touch their own DPU's
+    /// accumulator, so the merged profile is independent of
+    /// [`Self::set_launch_workers`] and identical across
+    /// [`ExecTier`]s for successful launches.
+    pub fn collect_profile(&mut self, set: &DpuSet) -> PcProfile {
+        let mut total = PcProfile::new();
+        for i in 0..set.dpus.len() {
+            let id = set.dpus[i];
+            if let Some(p) = self.dpu_mut(id).take_profile() {
+                total.merge(&p);
+            }
+        }
+        total
     }
 
     /// Pin the number of worker threads used by fleet launches. `1`
@@ -558,12 +614,25 @@ impl PimSystem {
             Direction::HostToPim,
             set.placement,
         );
-        let (_, end) = self.queues.reserve(
+        let (start, end) = self.queues.reserve(
             &set.ranks.ranks,
             Resource::Bus,
             0.0,
             report.seconds * chaos_factor,
         );
+        if let Some(tr) = self.trace.as_mut() {
+            let track = set.ranks.ranks.first().copied().unwrap_or(0) as u32;
+            tr.span(
+                SpanKind::Push,
+                track,
+                start,
+                end,
+                vec![
+                    ("bytes", plan.total_bytes().into()),
+                    ("dpus", set.nr_dpus().into()),
+                ],
+            );
+        }
         self.queues.advance_to(end);
         Ok(report)
     }
@@ -608,7 +677,18 @@ impl PimSystem {
         let total = self.pull_xfer_untimed(set, plan)?;
         let report =
             self.engine.parallel(&set.ranks.ranks, total, Direction::PimToHost, set.placement);
-        let (_, end) = self.queues.reserve(&set.ranks.ranks, Resource::Bus, 0.0, report.seconds);
+        let (start, end) =
+            self.queues.reserve(&set.ranks.ranks, Resource::Bus, 0.0, report.seconds);
+        if let Some(tr) = self.trace.as_mut() {
+            let track = set.ranks.ranks.first().copied().unwrap_or(0) as u32;
+            tr.span(
+                SpanKind::Pull,
+                track,
+                start,
+                end,
+                vec![("bytes", total.into()), ("dpus", set.nr_dpus().into())],
+            );
+        }
         self.queues.advance_to(end);
         Ok(report)
     }
@@ -678,6 +758,19 @@ impl PimSystem {
             .map_or(1.0, |c| c.straggler_factor(&self.engine.topo, &set.ranks.ranks));
         let (start_s, end_s) =
             self.queues.reserve(&set.ranks.ranks, Resource::Bus, after_s, report.seconds * factor);
+        if let Some(tr) = self.trace.as_mut() {
+            let track = set.ranks.ranks.first().copied().unwrap_or(0) as u32;
+            tr.span(
+                SpanKind::Broadcast,
+                track,
+                start_s,
+                end_s,
+                vec![
+                    ("bytes", (bytes.len() as u64).into()),
+                    ("dpus", set.nr_dpus().into()),
+                ],
+            );
+        }
         Ok(XferHandle { report, start_s, end_s })
     }
 
@@ -737,6 +830,16 @@ impl PimSystem {
         );
         let (start_s, end_s) =
             self.queues.reserve(&set.ranks.ranks, Resource::Bus, after_s, report.seconds);
+        if let Some(tr) = self.trace.as_mut() {
+            let track = set.ranks.ranks.first().copied().unwrap_or(0) as u32;
+            tr.span(
+                SpanKind::Pull,
+                track,
+                start_s,
+                end_s,
+                vec![("bytes", total_bytes.into()), ("dpus", set.nr_dpus().into())],
+            );
+        }
         XferHandle { report, start_s, end_s }
     }
 
@@ -864,6 +967,20 @@ impl PimSystem {
         let seconds = chaos_factor * max_cycles as f64 / crate::dpu::CLOCK_HZ as f64;
         let (start_s, end_s) =
             self.queues.reserve(&set.ranks.ranks, Resource::Compute, after_s, seconds);
+        if let Some(tr) = self.trace.as_mut() {
+            let track = set.ranks.ranks.first().copied().unwrap_or(0) as u32;
+            tr.span(
+                SpanKind::Launch,
+                track,
+                start_s,
+                end_s,
+                vec![
+                    ("dpus", set.nr_dpus().into()),
+                    ("tasklets", nr_tasklets.into()),
+                    ("max_cycles", max_cycles.into()),
+                ],
+            );
+        }
         Ok(LaunchHandle {
             fleet: FleetLaunch { seconds, max_cycles, per_dpu },
             start_s,

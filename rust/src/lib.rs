@@ -72,6 +72,7 @@ pub mod kernels;
 pub mod opt;
 pub mod plane;
 pub mod runtime;
+pub mod telemetry;
 pub mod traffic;
 pub mod transfer;
 pub mod util;

@@ -40,6 +40,7 @@ use crate::kernels::scrub::{
     block_words, build_scrub, golden_block_checksum, write_scrub_args, CHUNK_ELEMS,
 };
 use crate::opt::PassConfig;
+use crate::telemetry::SpanKind;
 use crate::transfer::topology::{DpuId, RankId, SOCKETS};
 use crate::Result;
 
@@ -288,6 +289,16 @@ impl ShardedGemvCoordinator {
             max_end = max_end.max(e);
         }
         self.sys.advance_clock(max_end);
+        let shards = self.map.shards.len();
+        if let Some(tr) = self.sys.trace_mut() {
+            tr.span(
+                SpanKind::Scatter,
+                0,
+                t0,
+                max_end,
+                vec![("bytes", sched.total_bytes.into()), ("shards", shards.into())],
+            );
+        }
 
         for s in 0..self.map.shards.len() {
             self.write_shard_args(s)?;
@@ -520,6 +531,15 @@ impl ShardedGemvCoordinator {
             self.sys.reserve_bus(ranks, t0, seconds)
         };
         self.sys.advance_clock(end);
+        if let Some(tr) = self.sys.trace_mut() {
+            tr.span(
+                SpanKind::Rebalance,
+                0,
+                t0,
+                end,
+                vec![("shard", idx.into()), ("bytes", bytes.into())],
+            );
+        }
         self.write_shard_args(idx)?;
         // The shard's per-DPU block boundaries moved: refresh its slice
         // of the golden table so the next scrub diffs the new layout.
@@ -601,6 +621,16 @@ impl ShardedGemvCoordinator {
             self.write_shard_args(s)?;
         }
         let seconds = self.sys.sync_all() - t0;
+        let found = mismatches.len();
+        if let Some(tr) = self.sys.trace_mut() {
+            tr.span(
+                SpanKind::Scrub,
+                0,
+                t0,
+                t0 + seconds,
+                vec![("mismatches", found.into())],
+            );
+        }
         Ok(ScrubReport { seconds, mismatches })
     }
 

@@ -1,0 +1,187 @@
+//! Exporters: Chrome trace-event JSON for spans, markdown hotspot
+//! tables for per-PC profiles. Both are deterministic renderings of
+//! deterministic inputs — byte-identical across runs and tiers — so CI
+//! can `diff`/`cmp` them directly.
+
+use crate::bench_support::json::escape;
+use crate::dpu::Program;
+
+use super::profile::PcProfile;
+use super::span::{AttrValue, TraceEvent};
+
+/// Format a microsecond quantity for the trace JSON: fixed 6 decimals
+/// (sub-picosecond on the modeled clock), non-finite clamped to 0.
+fn us(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "0.000000".to_string()
+    }
+}
+
+fn attr_json(v: &AttrValue) -> String {
+    match v {
+        AttrValue::U64(u) => u.to_string(),
+        AttrValue::F64(f) => us(*f),
+        AttrValue::Str(s) => format!("\"{}\"", escape(s)),
+    }
+}
+
+/// Render spans as Chrome trace-event JSON (the `traceEvents` array
+/// format Perfetto and `chrome://tracing` load). Every span becomes a
+/// `ph: "X"` complete event; modeled seconds map to the format's
+/// microsecond timebase; `pid` is 0 (one modeled system), `tid` is the
+/// span's track. One line per event, insertion order — byte-stable.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    for (i, e) in events.iter().enumerate() {
+        out.push_str(&format!(
+            "{{\"name\":\"{n}\",\"cat\":\"{n}\",\"ph\":\"X\",\"ts\":{ts},\"dur\":{dur},\
+             \"pid\":0,\"tid\":{tid},\"args\":{{",
+            n = e.kind.name(),
+            ts = us(e.begin_s * 1e6),
+            dur = us(e.duration_s() * 1e6),
+            tid = e.track,
+        ));
+        for (j, (k, v)) in e.attrs.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{}", escape(k), attr_json(v)));
+        }
+        out.push_str("}}");
+        if i + 1 < events.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\",\"metadata\":{\"clock\":\"modeled\"}}\n");
+    out
+}
+
+/// Name of the label region containing `pc`: the nearest label at or
+/// before it (`—` before the first label).
+fn region_of(labels: &[(String, u32)], pc: u32) -> &str {
+    labels
+        .iter()
+        .filter(|(_, addr)| *addr <= pc)
+        .max_by_key(|(_, addr)| *addr)
+        .map(|(name, _)| name.as_str())
+        .unwrap_or("—")
+}
+
+/// Render the top-`top_n` hottest PCs as a markdown table: pc, source
+/// region (nearest preceding label), disassembly, issue count, share of
+/// all issues, and the post-issue-clock checksum that pins the exact
+/// schedule. Rows sort by count descending, pc ascending on ties —
+/// fully deterministic, so per-tier outputs can be `cmp`'d.
+pub fn hotspot_markdown(title: &str, profile: &PcProfile, program: &Program, top_n: usize) -> String {
+    let total = profile.total_instrs();
+    let mut hot: Vec<(usize, u64, u64)> = profile
+        .counts()
+        .iter()
+        .zip(profile.cycle_sums())
+        .enumerate()
+        .filter(|(_, (&c, _))| c > 0)
+        .map(|(pc, (&c, &s))| (pc, c, s))
+        .collect();
+    hot.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let shown = hot.len().min(top_n);
+
+    let mut out = format!(
+        "### {title}\n\n{total} instructions issued over {} distinct PCs; top {shown}:\n\n\
+         | rank | pc | region | instr | count | share % | cycle sum |\n\
+         |---:|---:|:--|:--|---:|---:|---:|\n",
+        hot.len()
+    );
+    for (rank, &(pc, count, cycle_sum)) in hot.iter().take(top_n).enumerate() {
+        let instr = program
+            .instrs
+            .get(pc)
+            .map(|i| format!("`{}`", i.disasm()))
+            .unwrap_or_else(|| "—".to_string());
+        let share = if total > 0 { 100.0 * count as f64 / total as f64 } else { 0.0 };
+        out.push_str(&format!(
+            "| {} | {} | `{}` | {} | {} | {:.1} | {} |\n",
+            rank + 1,
+            pc,
+            region_of(&program.labels, pc as u32),
+            instr,
+            count,
+            share,
+            cycle_sum,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::span::{SpanKind, TraceRecorder};
+
+    #[test]
+    fn chrome_trace_shape_is_stable() {
+        let mut r = TraceRecorder::new();
+        r.span(SpanKind::Launch, 2, 0.001, 0.0035, vec![("dpus", 64u64.into())]);
+        r.event(SpanKind::Shed, 0, 0.002, vec![("why", "overload".into())]);
+        let j = chrome_trace_json(r.events());
+        assert_eq!(
+            j,
+            "{\"traceEvents\":[\n\
+             {\"name\":\"launch\",\"cat\":\"launch\",\"ph\":\"X\",\"ts\":1000.000000,\
+             \"dur\":2500.000000,\"pid\":0,\"tid\":2,\"args\":{\"dpus\":64}},\n\
+             {\"name\":\"shed\",\"cat\":\"shed\",\"ph\":\"X\",\"ts\":2000.000000,\
+             \"dur\":0.000000,\"pid\":0,\"tid\":0,\"args\":{\"why\":\"overload\"}}\n\
+             ],\"displayTimeUnit\":\"ms\",\"metadata\":{\"clock\":\"modeled\"}}\n"
+        );
+    }
+
+    #[test]
+    fn empty_trace_is_valid_json() {
+        let j = chrome_trace_json(&[]);
+        assert!(j.starts_with("{\"traceEvents\":[\n]"));
+        assert!(j.contains("\"clock\":\"modeled\""));
+    }
+
+    #[test]
+    fn hotspot_table_ranks_by_count_with_regions() {
+        use crate::dpu::asm::assemble;
+        let prog = assemble(
+            "    move r0, 3\n\
+             loop:\n\
+                 add r0, r0, -1, nz loop\n\
+                 stop\n",
+        )
+        .expect("assembles");
+        let mut p = PcProfile::new();
+        p.hit(0, 1); // move — 1 issue
+        for c in [12u64, 23, 34] {
+            p.hit(1, c); // the loop body — 3 issues
+        }
+        p.hit(2, 45);
+        let md = hotspot_markdown("test kernel", &p, &prog, 2);
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines[0], "### test kernel");
+        assert_eq!(lines[2], "5 instructions issued over 3 distinct PCs; top 2:");
+        // Hottest row first: pc 1, inside the `loop` region, 3/5 issues.
+        assert!(lines[6].starts_with("| 1 | 1 | `loop` |"), "got {}", lines[6]);
+        assert!(lines[6].ends_with("| 3 | 60.0 | 69 |"), "got {}", lines[6]);
+        // Rank 2 is a count tie (1 vs 1) broken by pc: pc 0, before any
+        // label → em-dash region.
+        assert!(lines[7].starts_with("| 2 | 0 | `—` |"), "got {}", lines[7]);
+        assert_eq!(lines.len(), 8, "top_n truncates");
+    }
+
+    #[test]
+    fn hotspot_table_is_deterministic() {
+        use crate::dpu::asm::assemble;
+        let prog = assemble("    stop\n").unwrap();
+        let mut p = PcProfile::new();
+        p.hit(0, 2);
+        assert_eq!(
+            hotspot_markdown("t", &p, &prog, 8),
+            hotspot_markdown("t", &p, &prog, 8)
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Deterministic observability plane.
+//!
+//! Three instruments, all on *modeled* time, so every artifact is a
+//! pure function of (seed, topology, tier) and replays bit-identically:
+//!
+//! * [`span::TraceRecorder`] — structured spans/events (launch,
+//!   broadcast, scatter, batch close, retry, backoff, quarantine,
+//!   rebalance, scrub, repair, shed, …) with modeled-clock begin/end
+//!   and typed attributes. [`crate::host::PimSystem`] owns an optional
+//!   recorder (mirroring the chaos injector); the coordinator, recovery
+//!   and traffic layers emit through it. Recording only *reads* the
+//!   modeled clock — it never advances it — so a traced run models the
+//!   same cycles/seconds as an untraced one, bit for bit.
+//! * [`profile::PcProfile`] — an opt-in per-PC profiler in the
+//!   interpreter ([`crate::dpu::Dpu`]): instruction counts plus a
+//!   post-issue-clock checksum per pc, identical across all three
+//!   execution tiers because superblock windows attribute the exact
+//!   per-instruction cycle sequence the stepped path would.
+//! * [`registry::MetricsRegistry`] — absorbs the planes' counter
+//!   structs (`ChaosStats`, `RecoveryMetrics`, `IntegrityMetrics`,
+//!   `TrafficReport`) under stable dotted names for uniform export.
+//!
+//! Exporters ([`export`]) write Chrome trace-event JSON
+//! (Perfetto-loadable) for spans and a markdown hotspot table for
+//! profiles. The benches wire them behind the `PIM_TRACE` /
+//! `PIM_PROFILE` knobs ([`trace_sink`] / [`profile_sink`]); with both
+//! unset nothing records, nothing allocates, and every modeled number
+//! is bit-identical to a build without this module.
+
+pub mod export;
+pub mod profile;
+pub mod registry;
+pub mod span;
+
+pub use export::{chrome_trace_json, hotspot_markdown};
+pub use profile::PcProfile;
+pub use registry::MetricsRegistry;
+pub use span::{AttrValue, SpanKind, TraceEvent, TraceRecorder};
+
+/// Resolve an output-sink knob: unset / empty / `0` → `None` (off);
+/// `1` → `Some(default)` (on, default filename); anything else is the
+/// output path itself.
+fn sink(var: &str, default: &str) -> Option<String> {
+    match std::env::var(var) {
+        Ok(v) if v.is_empty() || v == "0" => None,
+        Ok(v) if v == "1" => Some(default.to_string()),
+        Ok(v) => Some(v),
+        Err(_) => None,
+    }
+}
+
+/// Where `PIM_TRACE` wants the Chrome-trace JSON written (`None` =
+/// tracing off — the zero-cost default).
+pub fn trace_sink(default: &str) -> Option<String> {
+    sink("PIM_TRACE", default)
+}
+
+/// Where `PIM_PROFILE` wants the hotspot markdown written (`None` =
+/// profiling off — the zero-cost default).
+pub fn profile_sink(default: &str) -> Option<String> {
+    sink("PIM_PROFILE", default)
+}

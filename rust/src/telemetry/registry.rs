@@ -1,0 +1,184 @@
+//! Unified metrics registry: one flat, sorted `dotted.name → f64` view
+//! over every plane's counter struct, so exports and cross-run diffs
+//! need one code path instead of four bespoke ones.
+//!
+//! The dotted names are stable API (tests pin them): `chaos.*` from
+//! [`ChaosStats`], `recovery.*` from [`RecoveryMetrics`], `integrity.*`
+//! from [`IntegrityMetrics`], `traffic.*` (+ nested `integrity.*`) from
+//! a [`TrafficReport`]. `absorb_chaos`/`absorb_recovery` are additive
+//! (every value is a counter or a duration), so a replica pool folds
+//! each replica's ledger in; `absorb_integrity`/`absorb_traffic` carry
+//! derived ratios (goodput, MTTR, percentiles) and are one-shot — feed
+//! them the already-pooled report.
+
+use std::collections::BTreeMap;
+
+use crate::bench_support::json::json_object;
+use crate::chaos::{ChaosStats, IntegrityMetrics, RecoveryMetrics};
+use crate::traffic::TrafficReport;
+
+/// Flat sorted registry of named metric values.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    vals: BTreeMap<String, f64>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Set (or overwrite) one metric.
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.vals.insert(name.to_string(), v);
+    }
+
+    /// Add into a metric (missing names start at 0).
+    pub fn add(&mut self, name: &str, v: f64) {
+        *self.vals.entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.vals.get(name).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    /// Name-sorted iteration (BTreeMap order — deterministic).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.vals.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Chaos-injector counters under `chaos.*`. Additive: absorbing a
+    /// second injector's stats sums per-replica ledgers.
+    pub fn absorb_chaos(&mut self, s: &ChaosStats) {
+        self.add("chaos.ops", s.ops as f64);
+        self.add("chaos.launch_errors", s.launch_errors as f64);
+        self.add("chaos.transfer_errors", s.transfer_errors as f64);
+        self.add("chaos.dpu_deaths", s.dpu_deaths as f64);
+        self.add("chaos.straggled_ops", s.straggled_ops as f64);
+        self.add("chaos.mram_flips", s.mram_flips as f64);
+        self.add("chaos.wram_flips", s.wram_flips as f64);
+        self.add("chaos.transfer_corruptions", s.transfer_corruptions as f64);
+        self.add("chaos.corruptions_applied", s.corruptions_applied() as f64);
+    }
+
+    /// Self-healing counters under `recovery.*`. Additive, like
+    /// [`Self::absorb_chaos`].
+    pub fn absorb_recovery(&mut self, m: &RecoveryMetrics) {
+        self.add("recovery.retries", m.retries as f64);
+        self.add("recovery.transient_errors", m.transient_errors as f64);
+        self.add("recovery.quarantined", m.quarantined.len() as f64);
+        self.add("recovery.rebalances", m.rebalances as f64);
+        self.add("recovery.rebalanced_bytes", m.rebalanced_bytes as f64);
+        self.add("recovery.backoff_s", m.backoff_s);
+        self.add("recovery.recovery_s", m.recovery_s);
+        self.add("recovery.degraded_batches", m.degraded_batches as f64);
+    }
+
+    /// Integrity-plane counters under `integrity.*`.
+    pub fn absorb_integrity(&mut self, m: &IntegrityMetrics) {
+        self.set("integrity.injected", m.injected as f64);
+        self.set("integrity.detected", m.detected as f64);
+        self.set("integrity.undetected", m.undetected() as f64);
+        self.set("integrity.repaired", m.repaired as f64);
+        self.set("integrity.repaired_bytes", m.repaired_bytes as f64);
+        self.set("integrity.scrub_cycles", m.scrub_cycles as f64);
+        self.set("integrity.scrub_s", m.scrub_s);
+        self.set("integrity.repair_s", m.repair_s);
+        self.set("integrity.mttr_s", m.mean_time_to_repair_s());
+    }
+
+    /// Open-loop serving counters under `traffic.*`, including the
+    /// report's pooled integrity ledger (nested `integrity.*`) and the
+    /// end-to-end latency summary when any request completed.
+    pub fn absorb_traffic(&mut self, r: &TrafficReport) {
+        self.set("traffic.requests", r.metrics.requests as f64);
+        self.set("traffic.served", r.served.len() as f64);
+        self.set("traffic.batches", r.metrics.batches as f64);
+        self.set("traffic.errors", r.metrics.errors as f64);
+        self.set("traffic.shed_overload", r.metrics.shed_overload as f64);
+        self.set("traffic.shed_deadline", r.metrics.shed_deadline as f64);
+        self.set("traffic.shed_rate", r.metrics.shed_rate());
+        self.set("traffic.deadline_violations", r.deadline_violations.len() as f64);
+        self.set("traffic.launches", r.launches as f64);
+        self.set("traffic.max_queue_depth", r.max_queue_depth as f64);
+        self.set("traffic.end_s", r.end_s);
+        self.set("traffic.goodput", r.goodput());
+        self.set("traffic.throughput_rps", r.throughput_rps());
+        self.set("traffic.device_seconds", r.metrics.device_seconds);
+        if let Some(s) = r.latency_summary() {
+            self.set("traffic.e2e_p50_us", s.p50);
+            self.set("traffic.e2e_p95_us", s.p95);
+            self.set("traffic.e2e_p99_us", s.p99);
+            self.set("traffic.e2e_mean_us", s.mean);
+        }
+        self.absorb_integrity(&r.integrity);
+    }
+
+    /// Name-sorted JSON object (the `bench_support::json` writer, so
+    /// formatting matches every other bench artifact).
+    pub fn to_json(&self) -> String {
+        let entries: Vec<(String, f64)> =
+            self.vals.iter().map(|(k, &v)| (k.clone(), v)).collect();
+        json_object(&entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_names_are_stable_and_sorted() {
+        let s = ChaosStats { ops: 16, mram_flips: 2, transfer_corruptions: 1, ..Default::default() };
+        let mut reg = MetricsRegistry::new();
+        reg.absorb_chaos(&s);
+        assert_eq!(reg.get("chaos.ops"), Some(16.0));
+        assert_eq!(reg.get("chaos.corruptions_applied"), Some(3.0));
+        // Additive: a second replica's ledger folds in.
+        reg.absorb_chaos(&s);
+        assert_eq!(reg.get("chaos.ops"), Some(32.0));
+        let names: Vec<&str> = reg.iter().map(|(k, _)| k).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "iteration is name-sorted");
+    }
+
+    #[test]
+    fn recovery_and_integrity_absorb_their_counters() {
+        let mut reg = MetricsRegistry::new();
+        let rm = RecoveryMetrics { retries: 3, backoff_s: 0.25, ..Default::default() };
+        reg.absorb_recovery(&rm);
+        let im = IntegrityMetrics {
+            injected: 4,
+            detected: 3,
+            repaired: 3,
+            repaired_bytes: 1536,
+            ..Default::default()
+        };
+        reg.absorb_integrity(&im);
+        assert_eq!(reg.get("recovery.retries"), Some(3.0));
+        assert_eq!(reg.get("recovery.backoff_s"), Some(0.25));
+        assert_eq!(reg.get("integrity.undetected"), Some(1.0));
+        assert_eq!(reg.get("integrity.repaired_bytes"), Some(1536.0));
+    }
+
+    #[test]
+    fn add_accumulates_and_json_is_deterministic() {
+        let mut reg = MetricsRegistry::new();
+        reg.add("x.count", 1.0);
+        reg.add("x.count", 2.0);
+        reg.set("a.first", 0.5);
+        assert_eq!(reg.get("x.count"), Some(3.0));
+        let j = reg.to_json();
+        assert_eq!(j, "{\n  \"a.first\": 0.500,\n  \"x.count\": 3.000\n}\n");
+        assert_eq!(j, reg.clone().to_json());
+    }
+}

@@ -1,0 +1,270 @@
+//! Structured spans on the modeled clock.
+//!
+//! A [`TraceEvent`] is a closed interval `[begin_s, end_s]` of modeled
+//! time plus typed attributes; a [`TraceRecorder`] is an append-only,
+//! insertion-ordered list of them. Because every timestamp comes from
+//! the modeled clock (never the host clock) and recording never
+//! *advances* that clock, a trace is a deterministic artifact: two runs
+//! of the same (seed, topology, tier) produce byte-identical exports,
+//! and the per-kind modeled-time totals are tier-invariant.
+
+/// What a span measures. The [`SpanKind::name`] strings are stable API:
+/// they become the Chrome-trace `name`/`cat` fields and the keys
+/// `tools/trace_tools.py summarize` aggregates by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    /// A fleet/DPU kernel launch occupying modeled compute time.
+    Launch,
+    /// A broadcast (same bytes to every DPU) occupying modeled bus time.
+    Broadcast,
+    /// A scatter (per-DPU slices) across the shard sets.
+    Scatter,
+    /// A host→DPU transfer (push / delta re-push).
+    Push,
+    /// A DPU→host transfer (gather / readback).
+    Pull,
+    /// A deadline batch closing and riding the device.
+    BatchClose,
+    /// A failed batch re-executed by the self-healing layer.
+    Retry,
+    /// Modeled backoff inserted before a retry.
+    Backoff,
+    /// A DPU struck out and removed from serving.
+    Quarantine,
+    /// A delta rebalance re-pushing a quarantined DPU's rows.
+    Rebalance,
+    /// An integrity scrub pass (in-PIM checksum + host diff).
+    Scrub,
+    /// A delta repair of a corrupted block.
+    Repair,
+    /// A request shed (admission overload or deadline) — instant event.
+    Shed,
+    /// A replica evicted from the serving pool — instant event.
+    Evict,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 14] = [
+        SpanKind::Launch,
+        SpanKind::Broadcast,
+        SpanKind::Scatter,
+        SpanKind::Push,
+        SpanKind::Pull,
+        SpanKind::BatchClose,
+        SpanKind::Retry,
+        SpanKind::Backoff,
+        SpanKind::Quarantine,
+        SpanKind::Rebalance,
+        SpanKind::Scrub,
+        SpanKind::Repair,
+        SpanKind::Shed,
+        SpanKind::Evict,
+    ];
+
+    /// Stable lowercase name (Chrome-trace `name`/`cat`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Launch => "launch",
+            SpanKind::Broadcast => "broadcast",
+            SpanKind::Scatter => "scatter",
+            SpanKind::Push => "push",
+            SpanKind::Pull => "pull",
+            SpanKind::BatchClose => "batch_close",
+            SpanKind::Retry => "retry",
+            SpanKind::Backoff => "backoff",
+            SpanKind::Quarantine => "quarantine",
+            SpanKind::Rebalance => "rebalance",
+            SpanKind::Scrub => "scrub",
+            SpanKind::Repair => "repair",
+            SpanKind::Shed => "shed",
+            SpanKind::Evict => "evict",
+        }
+    }
+}
+
+/// A typed span attribute value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+impl From<u64> for AttrValue {
+    fn from(v: u64) -> Self {
+        AttrValue::U64(v)
+    }
+}
+
+impl From<usize> for AttrValue {
+    fn from(v: usize) -> Self {
+        AttrValue::U64(v as u64)
+    }
+}
+
+impl From<u32> for AttrValue {
+    fn from(v: u32) -> Self {
+        AttrValue::U64(v as u64)
+    }
+}
+
+impl From<f64> for AttrValue {
+    fn from(v: f64) -> Self {
+        AttrValue::F64(v)
+    }
+}
+
+impl From<&str> for AttrValue {
+    fn from(v: &str) -> Self {
+        AttrValue::Str(v.to_string())
+    }
+}
+
+impl From<String> for AttrValue {
+    fn from(v: String) -> Self {
+        AttrValue::Str(v)
+    }
+}
+
+/// One completed span (or instant event, when `begin_s == end_s`) on
+/// the modeled clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub kind: SpanKind,
+    /// Display track (Chrome `tid`): shard / replica / queue index, 0
+    /// when the span has no natural lane.
+    pub track: u32,
+    pub begin_s: f64,
+    pub end_s: f64,
+    /// Typed attributes, in emission order (exported as Chrome `args`).
+    pub attrs: Vec<(&'static str, AttrValue)>,
+}
+
+impl TraceEvent {
+    pub fn duration_s(&self) -> f64 {
+        self.end_s - self.begin_s
+    }
+}
+
+/// Append-only span recorder; insertion order is the record order, so
+/// determinism needs no sorting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceRecorder {
+    events: Vec<TraceEvent>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> TraceRecorder {
+        TraceRecorder::default()
+    }
+
+    /// Record a closed span `[begin_s, end_s]`.
+    pub fn span(
+        &mut self,
+        kind: SpanKind,
+        track: u32,
+        begin_s: f64,
+        end_s: f64,
+        attrs: Vec<(&'static str, AttrValue)>,
+    ) {
+        self.events.push(TraceEvent { kind, track, begin_s, end_s, attrs });
+    }
+
+    /// Record an instant event (zero-duration span) at `at_s`.
+    pub fn event(
+        &mut self,
+        kind: SpanKind,
+        track: u32,
+        at_s: f64,
+        attrs: Vec<(&'static str, AttrValue)>,
+    ) {
+        self.span(kind, track, at_s, at_s, attrs);
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Append another recorder's events (merge order = argument order,
+    /// deterministic by construction).
+    pub fn append(&mut self, mut other: TraceRecorder) {
+        self.events.append(&mut other.events);
+    }
+
+    /// Per-kind `(count, total modeled seconds)` in [`SpanKind::ALL`]
+    /// order, kinds with no events skipped — the tier-invariant summary
+    /// the CI cross-tier check compares.
+    pub fn totals(&self) -> Vec<(SpanKind, u64, f64)> {
+        SpanKind::ALL
+            .iter()
+            .filter_map(|&kind| {
+                let mut n = 0u64;
+                let mut s = 0.0f64;
+                for e in self.events.iter().filter(|e| e.kind == kind) {
+                    n += 1;
+                    s += e.duration_s();
+                }
+                (n > 0).then_some((kind, n, s))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_are_unique_and_lowercase() {
+        let mut names: Vec<&str> = SpanKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), before, "span kind names must be unique");
+        for n in names {
+            assert_eq!(n, n.to_lowercase());
+        }
+    }
+
+    #[test]
+    fn totals_aggregate_per_kind_in_stable_order() {
+        let mut r = TraceRecorder::new();
+        r.span(SpanKind::Scrub, 0, 1.0, 3.0, vec![]);
+        r.span(SpanKind::Launch, 0, 0.0, 2.0, vec![("dpus", 64u64.into())]);
+        r.span(SpanKind::Launch, 1, 2.0, 5.0, vec![]);
+        r.event(SpanKind::Shed, 0, 4.0, vec![("id", 7u64.into())]);
+        let t = r.totals();
+        assert_eq!(
+            t,
+            vec![
+                (SpanKind::Launch, 2, 5.0),
+                (SpanKind::Scrub, 1, 2.0),
+                (SpanKind::Shed, 1, 0.0),
+            ]
+        );
+    }
+
+    #[test]
+    fn append_preserves_order_and_double_run_is_identical() {
+        let build = || {
+            let mut a = TraceRecorder::new();
+            a.span(SpanKind::Push, 0, 0.0, 1.0, vec![("bytes", 512u64.into())]);
+            let mut b = TraceRecorder::new();
+            b.event(SpanKind::Evict, 1, 0.5, vec![]);
+            a.append(b);
+            a
+        };
+        let x = build();
+        assert_eq!(x.len(), 2);
+        assert_eq!(x.events()[0].kind, SpanKind::Push);
+        assert_eq!(x, build(), "identical construction compares bit-exact");
+    }
+}

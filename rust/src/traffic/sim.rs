@@ -21,6 +21,7 @@ use crate::coordinator::router::{Policy, Router};
 use crate::coordinator::GemvCoordinator;
 use crate::kernels::gemv::GemvVariant;
 use crate::plane::ShardedGemvCoordinator;
+use crate::telemetry::{SpanKind, TraceRecorder};
 use crate::traffic::admission::{Admit, AdmissionConfig, BoundedQueue};
 use crate::traffic::arrivals::TrafficPlan;
 use crate::traffic::batcher::{DeadlineBatcher, QueuedRequest};
@@ -269,6 +270,11 @@ pub struct OpenLoopSim<B> {
     /// Periodic integrity-scrub cadence on the modeled clock
     /// ([`Self::set_scrub_every`]; `None` = scrubbing disabled).
     scrub_every_s: Option<f64>,
+    /// Optional span recorder ([`crate::telemetry`]): batch closes,
+    /// sheds, scrubs and evictions record modeled-clock events when
+    /// installed. Lives here — NOT in [`TrafficReport`] — so the
+    /// report's `PartialEq` keystone semantics are untouched.
+    trace: Option<TraceRecorder>,
 }
 
 impl<B: TrafficBackend> OpenLoopSim<B> {
@@ -295,7 +301,20 @@ impl<B: TrafficBackend> OpenLoopSim<B> {
                 }
             })
             .collect();
-        OpenLoopSim { cfg, groups, scrub_every_s: None }
+        OpenLoopSim { cfg, groups, scrub_every_s: None, trace: None }
+    }
+
+    /// Install a span recorder: from now on batch closes, sheds,
+    /// scrubs and evictions record events on the modeled clock.
+    /// Recording never moves the clock or the event order, so traced
+    /// and untraced runs produce identical [`TrafficReport`]s.
+    pub fn install_trace(&mut self, rec: TraceRecorder) {
+        self.trace = Some(rec);
+    }
+
+    /// Remove and return the installed recorder with the run's spans.
+    pub fn take_trace(&mut self) -> Option<TraceRecorder> {
+        self.trace.take()
     }
 
     /// Schedule a fleet-wide integrity scrub every `every_s` modeled
@@ -413,7 +432,18 @@ impl<B: TrafficBackend> OpenLoopSim<B> {
                 }
                 let start = self.groups[gi].replicas[ri].free_at.max(now);
                 match self.groups[gi].replicas[ri].backend.scrub() {
-                    Ok(dt) => self.groups[gi].replicas[ri].free_at = start + dt,
+                    Ok(dt) => {
+                        self.groups[gi].replicas[ri].free_at = start + dt;
+                        if let Some(tr) = self.trace.as_mut() {
+                            tr.span(
+                                SpanKind::Scrub,
+                                ri as u32,
+                                start,
+                                start + dt,
+                                vec![("group", gi.into()), ("replica", ri.into())],
+                            );
+                        }
+                    }
                     Err(_) => self.evict_and_requeue(gi, ri, now, rep),
                 }
             }
@@ -453,8 +483,23 @@ impl<B: TrafficBackend> OpenLoopSim<B> {
         }
     }
 
-    fn shed_overloaded(rep: &mut TrafficReport, id: u64, depth: usize, retry_after_s: f64) {
+    fn shed_overloaded(
+        &mut self,
+        rep: &mut TrafficReport,
+        id: u64,
+        depth: usize,
+        retry_after_s: f64,
+        now: f64,
+    ) {
         rep.metrics.shed_overload += 1;
+        if let Some(tr) = self.trace.as_mut() {
+            tr.event(
+                SpanKind::Shed,
+                0,
+                now,
+                vec![("id", id.into()), ("depth", depth.into()), ("why", "overload".into())],
+            );
+        }
         rep.rejections.push((
             id,
             Error::Overloaded { queue_depth: depth, retry_after_us: (retry_after_s * 1e6) as u64 },
@@ -478,7 +523,7 @@ impl<B: TrafficBackend> OpenLoopSim<B> {
         rep.metrics.requests += 1;
         let Some(ri) = self.groups[model].router.try_dispatch() else {
             // No replica admitted at all: total outage for this model.
-            Self::shed_overloaded(rep, id, 0, 0.0);
+            self.shed_overloaded(rep, id, 0, 0.0, now);
             return;
         };
         let (variant, cols) = {
@@ -518,14 +563,14 @@ impl<B: TrafficBackend> OpenLoopSim<B> {
             Admit::RejectedNew(r) => {
                 self.groups[gi].router.complete(ri);
                 let (depth, retry) = self.queue_state(gi, ri);
-                Self::shed_overloaded(rep, r.id, depth, retry);
+                self.shed_overloaded(rep, r.id, depth, retry, now);
             }
             Admit::DroppedOldest { dropped } => {
                 // The new request took the dropped one's queue slot and
                 // its router slot: one dispatched, one completed.
                 self.groups[gi].router.complete(ri);
                 let (depth, retry) = self.queue_state(gi, ri);
-                Self::shed_overloaded(rep, dropped.id, depth, retry);
+                self.shed_overloaded(rep, dropped.id, depth, retry, now);
             }
             Admit::NeedsDrain(r) => {
                 let free_at = self.groups[gi].replicas[ri].free_at;
@@ -544,14 +589,14 @@ impl<B: TrafficBackend> OpenLoopSim<B> {
                             // and the cap is still hit — give up.
                             self.groups[gi].router.complete(ri);
                             let (depth, retry) = self.queue_state(gi, ri);
-                            Self::shed_overloaded(rep, id, depth, retry);
+                            self.shed_overloaded(rep, id, depth, retry, now);
                         }
                     }
                 } else {
                     // Replica mid-batch: nothing to drain into — shed.
                     self.groups[gi].router.complete(ri);
                     let (depth, retry) = self.queue_state(gi, ri);
-                    Self::shed_overloaded(rep, r.id, depth, retry);
+                    self.shed_overloaded(rep, r.id, depth, retry, now);
                 }
             }
         }
@@ -574,6 +619,14 @@ impl<B: TrafficBackend> OpenLoopSim<B> {
         for q in &expired {
             self.groups[gi].router.complete(ri);
             rep.metrics.shed_deadline += 1;
+            if let Some(tr) = self.trace.as_mut() {
+                tr.event(
+                    SpanKind::Shed,
+                    ri as u32,
+                    t,
+                    vec![("id", q.id.into()), ("why", "deadline".into())],
+                );
+            }
             rep.rejections.push((
                 q.id,
                 Error::DeadlineExceeded {
@@ -596,6 +649,19 @@ impl<B: TrafficBackend> OpenLoopSim<B> {
                     r.inflight.extend(batch.iter().map(|q| q.id));
                 }
                 self.groups[gi].router.observe_latency(ri, dt);
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.span(
+                        SpanKind::BatchClose,
+                        ri as u32,
+                        t,
+                        tc,
+                        vec![
+                            ("group", gi.into()),
+                            ("replica", ri.into()),
+                            ("batch", batch.len().into()),
+                        ],
+                    );
+                }
                 rep.launches += 1;
                 rep.metrics.batches += 1;
                 rep.metrics.device_seconds += dt;
@@ -645,13 +711,25 @@ impl<B: TrafficBackend> OpenLoopSim<B> {
             r.inflight.clear();
             r.queue.inner_mut().drain(..).collect()
         };
+        if let Some(tr) = self.trace.as_mut() {
+            tr.event(
+                SpanKind::Evict,
+                ri as u32,
+                now,
+                vec![
+                    ("group", gi.into()),
+                    ("replica", ri.into()),
+                    ("requeued", drained.len().into()),
+                ],
+            );
+        }
         for mut q in drained {
             // The dead replica's router slot frees up...
             self.groups[gi].router.complete(ri);
             // ...and the request re-enters admission (already counted
             // in `metrics.requests` — no double count).
             let Some(new_ri) = self.groups[gi].router.try_dispatch() else {
-                Self::shed_overloaded(rep, q.id, 0, 0.0);
+                self.shed_overloaded(rep, q.id, 0, 0.0, now);
                 continue;
             };
             q.admitted_s = now;
@@ -729,6 +807,23 @@ mod tests {
         let b = run();
         assert_eq!(a, b, "identical (plan, losses, pool) must replay exactly");
         assert!(!a.served.is_empty());
+    }
+
+    #[test]
+    fn tracing_never_perturbs_the_report() {
+        let p = plan(600.0, 200, Some(0.05), 33);
+        let losses = vec![(40u64, 0usize)];
+        let base = {
+            let mut sim = OpenLoopSim::new(cfg(AdmissionPolicy::DropOldest, 8), pool(2));
+            sim.run(&p, &losses)
+        };
+        let mut sim = OpenLoopSim::new(cfg(AdmissionPolicy::DropOldest, 8), pool(2));
+        sim.install_trace(TraceRecorder::new());
+        let rep = sim.run(&p, &losses);
+        let tr = sim.take_trace().expect("recorder installed");
+        assert_eq!(rep, base, "tracing must not perturb the run");
+        assert!(tr.events().iter().any(|e| e.kind == SpanKind::BatchClose));
+        assert!(tr.events().iter().any(|e| e.kind == SpanKind::Evict));
     }
 
     #[test]

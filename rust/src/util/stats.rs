@@ -70,6 +70,43 @@ pub fn percentile_nearest_rank(sorted: &[f64], q: f64) -> f64 {
     sorted[rank.clamp(1, n) - 1]
 }
 
+/// Deterministic nearest-rank summary of an *unsorted* sample: count,
+/// mean, min/max and nearest-rank p50/p95/p99 — every percentile is an
+/// element of the sample (see [`percentile_nearest_rank`]), so replay
+/// tests compare summaries bit-exactly. The one percentile convention
+/// shared by every latency consumer
+/// ([`crate::coordinator::metrics::LatencyRecorder`] delegates here).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleSummary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Summarize a sample with nearest-rank percentiles; `None` when empty.
+pub fn sample_summary(samples: &[f64]) -> Option<SampleSummary> {
+    if samples.is_empty() {
+        return None;
+    }
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(SampleSummary {
+        n,
+        mean,
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: percentile_nearest_rank(&sorted, 0.50),
+        p95: percentile_nearest_rank(&sorted, 0.95),
+        p99: percentile_nearest_rank(&sorted, 0.99),
+    })
+}
+
 /// Geometric mean (used for speedup aggregation, e.g. "2.4× on average").
 pub fn geomean(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
@@ -125,6 +162,19 @@ mod tests {
         let odd = [1.0, 2.0, 3.0];
         assert_eq!(percentile_nearest_rank(&odd, 0.50), 2.0);
         assert_eq!(percentile_nearest_rank(&odd, 0.99), 3.0);
+    }
+
+    #[test]
+    fn sample_summary_is_nearest_rank_on_unsorted_input() {
+        assert_eq!(sample_summary(&[]), None);
+        let s = sample_summary(&[40.0, 10.0, 30.0, 20.0]).unwrap();
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 25.0).abs() < 1e-12);
+        assert_eq!((s.min, s.max), (10.0, 40.0));
+        // n=4: p50 rank ⌈2.0⌉=2 → 20 (interpolation would say 25).
+        assert_eq!(s.p50, 20.0);
+        assert_eq!(s.p95, 40.0);
+        assert_eq!(s.p99, 40.0);
     }
 
     #[test]

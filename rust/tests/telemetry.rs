@@ -1,0 +1,281 @@
+//! Telemetry-plane keystones: the observability artifacts are
+//! *deterministic* — pure functions of (seed, topology, tier).
+//!
+//! Three contracts, matching `rust/src/telemetry/` docs:
+//!
+//! * a traced seeded traffic×chaos serving run exports **byte-identical**
+//!   Chrome trace JSON on every run, and tracing never perturbs the
+//!   modeled run itself (the report matches an untraced twin);
+//! * the opt-in per-PC profiler is **execution-tier invariant** on the
+//!   kernel matrix (arith × unroll, BSDP dot, all GEMV variants incl.
+//!   the non-blocking-DMA pipeline): counts *and* post-issue-clock
+//!   checksums, so the tiers agree on the exact schedule;
+//! * host-level span streams (push / broadcast / launch / pull emitted
+//!   by `PimSystem` + the sharded coordinator) are tier-invariant too —
+//!   full event-stream equality, not just per-kind totals.
+
+use upmem_unleashed::chaos::{ChaosConfig, ChaosInjector, ChaosPlan, SelfHealingCoordinator};
+use upmem_unleashed::coordinator::router::Policy;
+use upmem_unleashed::dpu::{Dpu, ExecTier};
+use upmem_unleashed::host::{AllocPolicy, PimSystem};
+use upmem_unleashed::kernels::arith::{run_microbench_cfg_with, DType, MulImpl, Spec, Unroll};
+use upmem_unleashed::kernels::bsdp::{run_dot_microbench_cfg_with, DotVariant};
+use upmem_unleashed::kernels::gemv::{run_gemv_dpu_cfg_on, GemvShape, GemvVariant};
+use upmem_unleashed::kernels::KernelScratch;
+use upmem_unleashed::opt::PassConfig;
+use upmem_unleashed::plane::{NumaBalanced, PlacementPolicy, ShardMap, ShardedGemvCoordinator};
+use upmem_unleashed::telemetry::{chrome_trace_json, PcProfile, SpanKind, TraceRecorder};
+use upmem_unleashed::traffic::{
+    AdmissionConfig, AdmissionPolicy, ArrivalProcess, DeadlineBatcher, OpenLoopSim, SimConfig,
+    TrafficConfig, TrafficPlan, TrafficReport, WorkloadMix,
+};
+use upmem_unleashed::transfer::topology::SystemTopology;
+use upmem_unleashed::util::rng::Rng;
+
+const FAST_TIERS: [ExecTier; 2] = [ExecTier::Batched, ExecTier::Superblock];
+
+const ROWS: u32 = 128;
+const COLS: u32 = 512;
+const BATCH: usize = 4;
+const REPLICAS: usize = 2;
+const CHAOS_SEED: u64 = 47;
+
+fn sharded(tier: ExecTier, m: &[i8]) -> ShardedGemvCoordinator {
+    let mut sys = PimSystem::new(SystemTopology::pristine(), AllocPolicy::NumaAware);
+    sys.set_exec_tier(tier);
+    let sets = sys.alloc_shards(&NumaBalanced, 2, 1).expect("2 shards x 1 rank");
+    let map = ShardMap::new(sets, NumaBalanced.name()).expect("shard map");
+    let mut c = ShardedGemvCoordinator::new(sys, map, GemvVariant::I8Opt, 8);
+    c.preload_matrix(ROWS, COLS, m).expect("preload");
+    c
+}
+
+/// The open-loop bench's chaos-mid-burst scenario at test size: two
+/// self-healing replicas with seeded device-fault plans plus one
+/// plan-scheduled replica loss, tight deadlines, 1.5× a nominal rate.
+fn chaos_serving_run(tier: ExecTier, traced: bool) -> (Option<TraceRecorder>, TrafficReport) {
+    let m = Rng::new(4242).i8_vec((ROWS * COLS) as usize);
+    let requests = 12usize;
+    let loss_cfg = ChaosConfig {
+        ops: requests as u64,
+        dpu_deaths: 0,
+        transient_launches: 0,
+        transient_transfers: 0,
+        stragglers: 0,
+        replica_losses: 1,
+        replicas: REPLICAS,
+        ..ChaosConfig::default()
+    };
+    let losses = ChaosPlan::generate(CHAOS_SEED, &loss_cfg, &[]).replica_losses();
+    let replicas: Vec<SelfHealingCoordinator> = (0..REPLICAS as u64)
+        .map(|r| {
+            let mut c = sharded(tier, &m);
+            let victims: Vec<usize> =
+                (0..2).flat_map(|s| c.map().shards[s].set.dpus[32..40].to_vec()).collect();
+            let ccfg = ChaosConfig { ops: 6, ..ChaosConfig::default() };
+            c.sys.install_chaos(ChaosInjector::new(ChaosPlan::generate(
+                CHAOS_SEED + r,
+                &ccfg,
+                &victims,
+            )));
+            SelfHealingCoordinator::new(c)
+        })
+        .collect();
+    // A fixed nominal batch time keeps the plan identical per tier and
+    // per run without a calibration pass.
+    let dt = 0.002f64;
+    let p = TrafficPlan::generate(
+        CHAOS_SEED,
+        &TrafficConfig {
+            process: ArrivalProcess::Poisson { rate_rps: 1.5 * REPLICAS as f64 * BATCH as f64 / dt },
+            requests,
+            deadline_s: Some(8.0 * dt),
+            mix: WorkloadMix::single(ROWS, COLS, GemvVariant::I8Opt),
+        },
+    );
+    let cfg = SimConfig {
+        batcher: DeadlineBatcher::new(BATCH, 0.5 * dt),
+        admission: AdmissionConfig { policy: AdmissionPolicy::RejectNew, queue_cap: 2 * BATCH },
+        policy: Policy::SloAware,
+    };
+    let mut sim = OpenLoopSim::new(cfg, vec![replicas]);
+    if traced {
+        sim.install_trace(TraceRecorder::new());
+    }
+    let rep = sim.run(&p, &losses);
+    (sim.take_trace(), rep)
+}
+
+#[test]
+fn traced_chaos_serving_exports_byte_identically_and_never_perturbs() {
+    let (tr1, rep1) = chaos_serving_run(ExecTier::Superblock, true);
+    let (tr2, rep2) = chaos_serving_run(ExecTier::Superblock, true);
+    let (none, untraced) = chaos_serving_run(ExecTier::Superblock, false);
+    assert!(none.is_none(), "no recorder installed, none to take");
+    assert_eq!(rep1, untraced, "tracing must never perturb the modeled run");
+    assert_eq!(rep1, rep2, "seeded run replays exactly");
+    let tr1 = tr1.expect("trace recorded");
+    let tr2 = tr2.expect("trace recorded");
+    assert!(!tr1.is_empty(), "the chaos scenario emits serving spans");
+    let json1 = chrome_trace_json(tr1.events());
+    let json2 = chrome_trace_json(tr2.events());
+    assert_eq!(json1, json2, "double-run Chrome trace JSON is byte-identical");
+    // The scenario exercises the serving-level kinds end to end.
+    let kinds: Vec<SpanKind> = tr1.totals().iter().map(|&(k, _, _)| k).collect();
+    assert!(kinds.contains(&SpanKind::BatchClose), "kinds seen: {kinds:?}");
+}
+
+#[test]
+fn serving_span_totals_are_tier_invariant() {
+    let (tr_ref, rep_ref) = chaos_serving_run(ExecTier::Stepped, true);
+    let tr_ref = tr_ref.expect("trace recorded");
+    for tier in FAST_TIERS {
+        let (tr, rep) = chaos_serving_run(tier, true);
+        let tr = tr.expect("trace recorded");
+        assert_eq!(rep_ref, rep, "report diverged on {}", tier.name());
+        assert_eq!(tr_ref.totals(), tr.totals(), "span totals diverged on {}", tier.name());
+        assert_eq!(tr_ref, tr, "event stream diverged on {}", tier.name());
+    }
+}
+
+/// Run one single-DPU kernel with the profiler on; return its profile.
+fn profiled<F>(tier: ExecTier, run: F) -> PcProfile
+where
+    F: FnOnce(&mut KernelScratch),
+{
+    let mut scr = KernelScratch::default();
+    scr.dpu.set_exec_tier(tier);
+    scr.dpu.set_profile_enabled(true);
+    run(&mut scr);
+    scr.dpu.take_profile().expect("profiler was enabled")
+}
+
+#[test]
+fn per_pc_profiles_are_tier_invariant_on_the_kernel_matrix() {
+    type Case = (&'static str, Box<dyn Fn(&mut KernelScratch)>);
+    let cases: Vec<Case> = vec![
+        (
+            "arith add i8 x64",
+            Box::new(|scr| {
+                let spec = Spec::add(DType::I8).with_unroll(Unroll::X64);
+                run_microbench_cfg_with(scr, spec, &spec.default_passes(), 16, 8 * 1024, 99)
+                    .map(|_| ())
+                    .expect("verified arith run");
+            }),
+        ),
+        (
+            "arith mul i8 native-x4",
+            Box::new(|scr| {
+                let spec = Spec::mul(DType::I8, MulImpl::NativeX4);
+                run_microbench_cfg_with(scr, spec, &spec.default_passes(), 16, 8 * 1024, 99)
+                    .map(|_| ())
+                    .expect("verified arith run");
+            }),
+        ),
+        (
+            "bsdp dot",
+            Box::new(|scr| {
+                run_dot_microbench_cfg_with(scr, DotVariant::Bsdp, &PassConfig::all(), 16, 8 * 2048, 7)
+                    .map(|_| ())
+                    .expect("verified dot run");
+            }),
+        ),
+    ];
+    for (name, run) in &cases {
+        let reference = profiled(ExecTier::Stepped, run);
+        assert!(!reference.is_empty(), "{name}: profiler saw issues");
+        for tier in FAST_TIERS {
+            let got = profiled(tier, run);
+            assert_eq!(
+                reference,
+                got,
+                "{name}: per-PC profile (counts + cycle sums) diverged on {}",
+                tier.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn gemv_profiles_are_tier_invariant_including_nonblocking_dma() {
+    let rows = 16u32;
+    let mut rng = Rng::new(4242);
+    let m8 = rng.i8_vec((rows * 1024) as usize);
+    let x8 = rng.i8_vec(1024);
+    let m4 = rng.i4_vec((rows * 2048) as usize);
+    let x4 = rng.i4_vec(2048);
+    let cases: Vec<(GemvVariant, PassConfig, usize)> = vec![
+        (GemvVariant::I8Baseline, GemvVariant::I8Baseline.default_passes(), 16),
+        (GemvVariant::I8Opt, GemvVariant::I8Opt.default_passes(), 16),
+        (GemvVariant::I4Bsdp, GemvVariant::I4Bsdp.default_passes(), 16),
+        // `ldma_nb`/`dma_wait` inside superblock windows: the profiler's
+        // arithmetic cycle attribution must still match stepped exactly.
+        (GemvVariant::I8Opt, PassConfig::all(), 8),
+    ];
+    for (variant, cfg, tasklets) in &cases {
+        let (shape, m, x) = if *variant == GemvVariant::I4Bsdp {
+            (GemvShape { rows, cols: 2048 }, &m4, &x4)
+        } else {
+            (GemvShape { rows, cols: 1024 }, &m8, &x8)
+        };
+        let run = |tier: ExecTier| -> PcProfile {
+            let mut dpu = Dpu::new();
+            dpu.set_exec_tier(tier);
+            dpu.set_profile_enabled(true);
+            run_gemv_dpu_cfg_on(&mut dpu, *variant, cfg, shape, *tasklets, m, x)
+                .expect("gemv run");
+            dpu.take_profile().expect("profiler was enabled")
+        };
+        let reference = run(ExecTier::Stepped);
+        assert!(!reference.is_empty());
+        for tier in FAST_TIERS {
+            assert_eq!(
+                reference,
+                run(tier),
+                "{} ({tasklets}T) profile diverged on {}",
+                variant.name(),
+                tier.name()
+            );
+        }
+    }
+}
+
+/// Host-level span streams (scatter + push + broadcast + launch + pull
+/// emitted under the sharded coordinator) and the fleet-merged per-PC
+/// profile, per tier, on one pipelined batch.
+#[test]
+fn host_span_stream_and_fleet_profile_are_tier_invariant() {
+    let m = Rng::new(4242).i8_vec((ROWS * COLS) as usize);
+    let run = |tier: ExecTier| -> (TraceRecorder, PcProfile, Vec<Vec<i32>>) {
+        let mut c = sharded(tier, &m);
+        c.sys.install_trace(TraceRecorder::new());
+        let nshards = c.map().shards.len();
+        for s in 0..nshards {
+            let set = c.map().shards[s].set.clone();
+            c.sys.set_profile_enabled(&set, true);
+        }
+        let xs: Vec<Vec<i8>> = (0..BATCH).map(|i| vec![i as i8 + 1; COLS as usize]).collect();
+        let views: Vec<&[i8]> = xs.iter().map(|v| v.as_slice()).collect();
+        let (ys, _) = c.gemv_pipelined(&views).expect("pipelined batch");
+        let tr = c.sys.take_trace().expect("recorder installed");
+        let mut profile = PcProfile::new();
+        for s in 0..nshards {
+            let set = c.map().shards[s].set.clone();
+            profile.merge(&c.sys.collect_profile(&set));
+        }
+        (tr, profile, ys)
+    };
+    let (tr_ref, prof_ref, y_ref) = run(ExecTier::Stepped);
+    assert!(!tr_ref.is_empty(), "the traced batch emits host spans");
+    let kinds: Vec<SpanKind> = tr_ref.totals().iter().map(|&(k, _, _)| k).collect();
+    for want in [SpanKind::Launch, SpanKind::Pull] {
+        assert!(kinds.contains(&want), "missing {want:?} in {kinds:?}");
+    }
+    assert!(!prof_ref.is_empty(), "fleet profile saw issues");
+    for tier in FAST_TIERS {
+        let (tr, prof, ys) = run(tier);
+        assert_eq!(y_ref, ys, "gemv outputs diverged on {}", tier.name());
+        assert_eq!(tr_ref, tr, "host span stream diverged on {}", tier.name());
+        assert_eq!(prof_ref, prof, "fleet profile diverged on {}", tier.name());
+    }
+}

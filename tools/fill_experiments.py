@@ -48,6 +48,14 @@ Three sources, all optional:
                               replaced wholesale (column counts must
                               agree).
 
+  --hotspots BENCH_hotspots.md
+                              per-PC hotspot table written by
+                              `PIM_PROFILE=1 cargo bench --bench
+                              perf_simulator`. Replaces the §Hotspots
+                              block between the `<!-- hotspots:begin -->`
+                              and `<!-- hotspots:end -->` markers with
+                              the file's contents verbatim.
+
 Usage:
     cargo bench --bench perf_simulator
     cargo bench --bench fig11_transfer
@@ -70,6 +78,8 @@ import sys
 
 PENDING = "_pending_"
 DASH = "—"  # em dash for rows with no modeled cycle count
+HOTSPOTS_BEGIN = "<!-- hotspots:begin -->"
+HOTSPOTS_END = "<!-- hotspots:end -->"
 
 
 def norm(cell):
@@ -207,16 +217,38 @@ def fill_ablation(lines, rows):
     return filled
 
 
+def fill_hotspots(lines, md_text):
+    """Replace the §Hotspots marker block with the profiler's markdown.
+
+    Returns the number of blocks replaced (0 when the markers are
+    missing or inverted — reported, not fatal, like unmatched rows).
+    """
+    try:
+        begin = lines.index(HOTSPOTS_BEGIN)
+        end = lines.index(HOTSPOTS_END)
+    except ValueError:
+        print(f"  skip: {HOTSPOTS_BEGIN} / {HOTSPOTS_END} markers not found")
+        return 0
+    if end <= begin:
+        print("  skip: hotspots markers are inverted")
+        return 0
+    lines[begin + 1:end] = md_text.strip("\n").splitlines()
+    return 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--perf", help="BENCH_perf.json (schema v2)")
     ap.add_argument("--transfer", help="BENCH_transfer.json (schema v2, modeled rates)")
     ap.add_argument("--serving", help="BENCH_serving.json (schema v2, chaos serving rates)")
     ap.add_argument("--ablation", help="captured stdout of the pass_ablation bench")
+    ap.add_argument("--hotspots", help="BENCH_hotspots.md (per-PC profiler table)")
     ap.add_argument("--experiments", default="EXPERIMENTS.md")
     args = ap.parse_args()
-    if not (args.perf or args.transfer or args.serving or args.ablation):
-        ap.error("give at least one of --perf / --transfer / --serving / --ablation")
+    if not (args.perf or args.transfer or args.serving or args.ablation
+            or args.hotspots):
+        ap.error("give at least one of --perf / --transfer / --serving / "
+                 "--ablation / --hotspots")
 
     with open(args.experiments) as f:
         lines = f.read().splitlines()
@@ -246,6 +278,15 @@ def main():
             return 1
         n = fill_ablation(lines, rows)
         print(f"§Pass ablation: filled {n} row(s) from {args.ablation}")
+        total += n
+    if args.hotspots:
+        with open(args.hotspots) as f:
+            md = f.read()
+        if not md.strip():
+            print(f"FAIL: {args.hotspots} is empty (run the profiling bench first)")
+            return 1
+        n = fill_hotspots(lines, md)
+        print(f"§Hotspots: replaced {n} block(s) from {args.hotspots}")
         total += n
 
     pending = sum(1 for l in lines if PENDING in l)

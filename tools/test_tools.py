@@ -14,6 +14,7 @@ import unittest
 import check_perf_regression as cpr
 import fill_experiments as fe
 import merge_bench_json as mbj
+import trace_tools as tt
 
 
 def doc(workloads, schema=2, **extra):
@@ -289,6 +290,38 @@ class FillExperiments(unittest.TestCase):
         self.assertEqual(list(rows), ["BSDP dot, 16T"])
         self.assertEqual(rows["BSDP dot, 16T"], ["BSDP dot, 16T", "1000", "800"])
 
+    HOTSPOT_MD = ("### Fleet GEMV — per-PC issue profile\n"
+                  "1234 instrs across 42 distinct PCs\n"
+                  "| rank | pc | instr | count |\n"
+                  "|---|---|---|---|\n"
+                  "| 1 | 12 | add | 999 |\n")
+
+    def test_fill_hotspots_replaces_marker_block_idempotently(self):
+        lines = [
+            "## §Hotspots",
+            "prose stays",
+            fe.HOTSPOTS_BEGIN,
+            "_pending_ — run the commands above.",
+            fe.HOTSPOTS_END,
+            "trailing prose stays",
+        ]
+        n = fe.fill_hotspots(lines, self.HOTSPOT_MD)
+        self.assertEqual(n, 1)
+        self.assertEqual(lines[2], fe.HOTSPOTS_BEGIN)
+        self.assertEqual(lines[3], "### Fleet GEMV — per-PC issue profile")
+        self.assertEqual(lines[-2], fe.HOTSPOTS_END)
+        self.assertEqual(lines[-1], "trailing prose stays")
+        self.assertNotIn("_pending_", "\n".join(lines))
+        # Second fill overwrites the previous block, never accumulates.
+        n = fe.fill_hotspots(lines, self.HOTSPOT_MD)
+        self.assertEqual(n, 1)
+        self.assertEqual(lines.count("### Fleet GEMV — per-PC issue profile"), 1)
+
+    def test_fill_hotspots_without_markers_is_reported_not_fatal(self):
+        lines = ["no markers here"]
+        self.assertEqual(fe.fill_hotspots(lines, self.HOTSPOT_MD), 0)
+        self.assertEqual(lines, ["no markers here"])
+
     def test_fill_ablation_respects_section_and_column_count(self):
         lines = [
             "## §Pass ablation",
@@ -344,6 +377,89 @@ class MergeBenchJson(unittest.TestCase):
         self.assertEqual(list(merged["workloads"]), ["w1", "w2"])
         # The merged file is gate-ready: not a bootstrap placeholder.
         self.assertFalse(cpr.is_bootstrap(merged))
+
+
+def ev(name, ts, dur, tid=0, **extra):
+    e = {"name": name, "ph": "X", "ts": ts, "dur": dur, "pid": 0, "tid": tid}
+    e.update(extra)
+    return e
+
+
+class TraceTools(unittest.TestCase):
+    EVENTS = [
+        ev("launch", 0.0, 12.5),
+        ev("push", 12.5, 3.0, tid=1),
+        ev("launch", 20.0, 12.5),
+    ]
+
+    def write(self, d, name, payload):
+        path = os.path.join(d, name)
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        return path
+
+    def test_load_accepts_bare_array_and_wrapper_object(self):
+        with tempfile.TemporaryDirectory() as d:
+            bare = self.write(d, "bare.json", self.EVENTS)
+            wrapped = self.write(d, "wrapped.json", {"traceEvents": self.EVENTS})
+            self.assertEqual(tt.load_events(bare), self.EVENTS)
+            self.assertEqual(tt.load_events(wrapped), self.EVENTS)
+            scalar = self.write(d, "bad.json", {"not": "a trace"})
+            with self.assertRaises(ValueError):
+                tt.load_events(scalar)
+
+    def test_validate_passes_complete_events_and_names_each_problem(self):
+        self.assertEqual(tt.validate_events(self.EVENTS), [])
+        bad = [
+            {"ph": "X", "ts": 0, "dur": 1, "pid": 0, "tid": 0},   # no name
+            ev("b", -1.0, 2.0),                                    # negative ts
+            ev("c", 0.0, "fast"),                                  # non-numeric dur
+            {"name": "d", "ph": "B", "ts": 0, "dur": 0, "pid": 0, "tid": 0},
+            ev("e", 0.0, 1.0),                                     # fine
+        ]
+        problems = tt.validate_events(bad)
+        self.assertEqual(len(problems), 4)
+        self.assertIn("[0]: missing or empty 'name'", problems[0])
+        self.assertIn("'ts' is negative", problems[1])
+        self.assertIn("'dur' is not numeric", problems[2])
+        self.assertIn("ph='B'", problems[3])
+
+    def test_summarize_groups_by_kind_sorted(self):
+        s = tt.summarize_events(self.EVENTS)
+        self.assertEqual(list(s), ["launch", "push"])
+        self.assertEqual(s["launch"], (2, 25.0))
+        self.assertEqual(s["push"], (1, 3.0))
+
+    def test_diff_flags_count_and_duration_drift(self):
+        a = tt.summarize_events(self.EVENTS)
+        self.assertEqual(tt.diff_summaries(a, dict(a)), [])
+        b = tt.summarize_events(self.EVENTS[:2])     # one launch fewer
+        problems = tt.diff_summaries(a, b)
+        self.assertEqual(problems, ["kind launch: count 2 != 1"])
+        c = tt.summarize_events([ev("launch", 0.0, 12.5), ev("push", 12.5, 3.0),
+                                 ev("launch", 20.0, 13.0)])
+        self.assertIn("total dur", tt.diff_summaries(a, c)[0])
+
+    def test_cli_diff_exact_catches_reordered_streams(self):
+        # Same per-kind totals, different order: plain diff passes, the
+        # cross-tier --exact mode must fail.
+        reordered = [self.EVENTS[1], self.EVENTS[0], self.EVENTS[2]]
+        with tempfile.TemporaryDirectory() as d:
+            a = self.write(d, "a.json", self.EVENTS)
+            b = self.write(d, "b.json", reordered)
+            self.assertEqual(tt.main(["diff", a, b]), 0)
+            self.assertEqual(tt.main(["diff", a, b, "--exact"]), 1)
+            self.assertEqual(tt.main(["diff", a, a, "--exact"]), 0)
+
+    def test_cli_validate_exit_codes(self):
+        with tempfile.TemporaryDirectory() as d:
+            good = self.write(d, "good.json", self.EVENTS)
+            bad = self.write(d, "bad.json", [{"name": "", "ph": "X"}])
+            self.assertEqual(tt.main(["validate", good]), 0)
+            self.assertEqual(tt.main(["validate", bad]), 1)
+            self.assertEqual(tt.main(["summarize", good]), 0)
+            self.assertEqual(
+                tt.main(["validate", os.path.join(d, "absent.json")]), 1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,177 @@
+#!/usr/bin/env python3
+"""CI tooling for Chrome trace-event JSON emitted by the telemetry plane.
+
+The Rust side (``telemetry::chrome_trace_json``) writes complete
+("ph":"X") events on the modeled clock — one JSON object per line inside
+a plain array, timestamps in microseconds. Because the traces are pure
+functions of (seed, topology, tier), CI can do three things with them:
+
+  validate TRACE.json            — schema check: every event is a complete
+                                   event with a name, numeric non-negative
+                                   ts/dur, and pid/tid fields;
+  summarize TRACE.json           — per-span-kind count + total modeled
+                                   duration (µs), name-sorted;
+  diff A.json B.json [--exact]   — compare two traces' per-kind summaries;
+                                   with --exact, also require the event
+                                   streams to be identical event-by-event
+                                   (the cross-tier invariance gate).
+
+Exit codes: 0 = pass, 1 = validation failure / diff mismatch / bad input.
+Accepts either a bare event array or a ``{"traceEvents": [...]}`` wrapper
+(both are valid chrome://tracing / Perfetto inputs).
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_events(path):
+    """Read a trace file and return its event list.
+
+    Raises ValueError on anything that is not a bare array or a
+    ``{"traceEvents": [...]}`` object.
+    """
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, dict):
+        doc = doc.get("traceEvents")
+    if not isinstance(doc, list):
+        raise ValueError(f"{path}: not a trace-event array "
+                         "(expected a JSON array or {'traceEvents': [...]})")
+    return doc
+
+
+def validate_events(events, path="trace"):
+    """Return a list of human-readable schema problems (empty = valid)."""
+    problems = []
+    for i, ev in enumerate(events):
+        where = f"{path}[{i}]"
+        if not isinstance(ev, dict):
+            problems.append(f"{where}: event is not an object")
+            continue
+        name = ev.get("name")
+        if not isinstance(name, str) or not name:
+            problems.append(f"{where}: missing or empty 'name'")
+        if ev.get("ph") != "X":
+            problems.append(f"{where}: ph={ev.get('ph')!r} (only complete "
+                            "'X' events are emitted)")
+        for field in ("ts", "dur"):
+            v = ev.get(field)
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                problems.append(f"{where}: '{field}' is not numeric")
+            elif v < 0:
+                problems.append(f"{where}: '{field}' is negative ({v})")
+        for field in ("pid", "tid"):
+            if field not in ev:
+                problems.append(f"{where}: missing '{field}'")
+    return problems
+
+
+def summarize_events(events):
+    """name -> (count, total_dur_us), insertion-independent (sorted)."""
+    out = {}
+    for ev in events:
+        name = ev.get("name", "?")
+        count, total = out.get(name, (0, 0.0))
+        out[name] = (count + 1, total + float(ev.get("dur", 0.0)))
+    return dict(sorted(out.items()))
+
+
+def summary_lines(summary):
+    lines = [f"  {'kind':<12} {'count':>7} {'total µs':>14}"]
+    for name, (count, total) in summary.items():
+        lines.append(f"  {name:<12} {count:>7} {total:>14.6f}")
+    return lines
+
+
+def diff_summaries(a, b, tol=1e-9):
+    """Human-readable mismatches between two summarize_events() maps."""
+    problems = []
+    for name in sorted(set(a) | set(b)):
+        ca, ta = a.get(name, (0, 0.0))
+        cb, tb = b.get(name, (0, 0.0))
+        if ca != cb:
+            problems.append(f"kind {name}: count {ca} != {cb}")
+        elif abs(ta - tb) > tol:
+            problems.append(f"kind {name}: total dur {ta:.6f} != {tb:.6f} µs")
+    return problems
+
+
+def cmd_validate(args):
+    events = load_events(args.trace)
+    problems = validate_events(events, args.trace)
+    for p in problems:
+        print(f"  INVALID  {p}")
+    if problems:
+        print(f"FAIL: {args.trace}: {len(problems)} schema problem(s) "
+              f"across {len(events)} event(s).")
+        return 1
+    print(f"PASS: {args.trace}: {len(events)} valid complete event(s).")
+    return 0
+
+
+def cmd_summarize(args):
+    events = load_events(args.trace)
+    summary = summarize_events(events)
+    print(f"{args.trace}: {len(events)} event(s), {len(summary)} kind(s)")
+    for line in summary_lines(summary):
+        print(line)
+    return 0
+
+
+def cmd_diff(args):
+    a = load_events(args.a)
+    b = load_events(args.b)
+    problems = diff_summaries(summarize_events(a), summarize_events(b))
+    if args.exact and not problems and a != b:
+        # Same per-kind totals but different streams — locate the first
+        # diverging event so the CI log points at it.
+        n = min(len(a), len(b))
+        idx = next((i for i in range(n) if a[i] != b[i]), n)
+        problems.append(f"event streams differ at index {idx} "
+                        f"({len(a)} vs {len(b)} events)")
+    for p in problems:
+        print(f"  MISMATCH  {p}")
+    if problems:
+        mode = "exactly " if args.exact else ""
+        print(f"FAIL: {args.a} and {args.b} do not {mode}match "
+              f"({len(problems)} mismatch(es)).")
+        return 1
+    mode = "identical event streams" if args.exact else "matching per-kind summaries"
+    print(f"PASS: {args.a} vs {args.b}: {mode} "
+          f"({len(a)} event(s)).")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("validate", help="schema-check one trace file")
+    p.add_argument("trace")
+    p.set_defaults(fn=cmd_validate)
+
+    p = sub.add_parser("summarize", help="per-kind count + total duration")
+    p.add_argument("trace")
+    p.set_defaults(fn=cmd_summarize)
+
+    p = sub.add_parser("diff", help="compare two traces' per-kind summaries")
+    p.add_argument("a")
+    p.add_argument("b")
+    p.add_argument("--exact", action="store_true",
+                   help="also require byte-level event-stream identity — the "
+                        "cross-tier invariance mode (modeled traces must be "
+                        "identical across execution tiers, not merely similar)")
+    p.set_defaults(fn=cmd_diff)
+
+    args = ap.parse_args(argv)
+    try:
+        return args.fn(args)
+    except (ValueError, FileNotFoundError, json.JSONDecodeError) as e:
+        print(f"FAIL: {e}")
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
